@@ -1,0 +1,87 @@
+//! Operator fuzzing for new-issue discovery (paper §6.3): sweep random
+//! convolution workloads across the mini-PyTorch/TF/JAX frameworks and
+//! layouts, and report every configuration where some framework wastes
+//! energy against a peer computing the same values — this is how the
+//! layout-dependent conv trade-off (pytorch-157334 / tf-96396) was
+//! found.
+//!
+//! ```sh
+//! cargo run --release --example conv_layout_hunt
+//! ```
+
+use magneton::coordinator::{Magneton, SysRun};
+use magneton::dispatch::Env;
+use magneton::energy::DeviceSpec;
+use magneton::systems::frameworks as fw;
+use magneton::util::table::Table;
+use magneton::util::Prng;
+
+fn main() {
+    let mag = Magneton::new(DeviceSpec::h200_sim());
+    let mut rng = Prng::new(99);
+    let mut t = Table::new(vec!["workload", "wasteful", "efficient", "diff", "diagnosis"]);
+    let mut discoveries = 0;
+
+    for trial in 0..12 {
+        // fuzz a conv workload
+        let spec = fw::ConvSpec {
+            batch: *rng.choose(&[2, 4, 8]),
+            channels: *rng.choose(&[16, 32, 64]),
+            hw: *rng.choose(&[8, 16]),
+            out_channels: *rng.choose(&[16, 32]),
+            kernel: 3,
+            groups: *rng.choose(&[1, 4]),
+        };
+        if spec.channels % spec.groups != 0 || spec.out_channels % spec.groups != 0 {
+            continue;
+        }
+        let (x, w) = fw::conv_params(&mut rng, spec);
+        let candidates = vec![
+            ("torch-nchw", fw::build_conv("torch", spec, fw::ConvLayout::Nchw, &x, &w, "torch.conv2d"), fw::torch_dispatcher(), Env::new()),
+            ("torch-nhwc", fw::build_conv("torch", spec, fw::ConvLayout::Nhwc, &x, &w, "torch.conv2d"), fw::torch_dispatcher(), Env::new()),
+            ("tf-nchw", fw::build_conv("tf", spec, fw::ConvLayout::Nchw, &x, &w, "tf.conv2d"), fw::tf_dispatcher(), Env::new()),
+            ("jax", fw::build_conv("jax", spec, fw::ConvLayout::Nchw, &x, &w, "jax.conv2d"), fw::jax_dispatcher(), Env::new().with("groups", spec.groups.to_string().as_str())),
+        ];
+        let runs: Vec<SysRun> = candidates
+            .into_iter()
+            .map(|(n, p, d, e)| SysRun::new(n, d, e, p))
+            .collect();
+        // compare every pair; report the worst finding of the trial
+        let mut worst: Option<(String, String, f64, String)> = None;
+        for i in 0..runs.len() {
+            for j in (i + 1)..runs.len() {
+                let out = mag.audit(&runs[i], &runs[j]);
+                if let Some((f, d)) = out.diagnoses.first() {
+                    let (wl, el) = match f.wasteful {
+                        magneton::detect::Side::A => (&runs[i].label, &runs[j].label),
+                        magneton::detect::Side::B => (&runs[j].label, &runs[i].label),
+                    };
+                    let rec = (
+                        wl.clone(),
+                        el.clone(),
+                        out.e2e_diff_frac,
+                        format!("[{}] {}", d.category.name(), d.subject),
+                    );
+                    if worst.as_ref().map(|w| rec.2 > w.2).unwrap_or(true) {
+                        worst = Some(rec);
+                    }
+                }
+            }
+        }
+        if let Some((wl, el, diff, diag)) = worst {
+            discoveries += 1;
+            t.row(vec![
+                format!(
+                    "t{trial}: b{} c{} {}x{} g{}",
+                    spec.batch, spec.channels, spec.hw, spec.hw, spec.groups
+                ),
+                wl,
+                el,
+                format!("{:.0}%", diff * 100.0),
+                diag.chars().take(60).collect(),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    println!("{discoveries} trials exposed cross-framework conv inefficiencies (layout-dependent kernels)");
+}

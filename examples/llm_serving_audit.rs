@@ -1,0 +1,50 @@
+//! LLM-serving audit: the paper's flagship scenario. Serve the same
+//! GPT-2-style model through mini-HF-Transformers and mini-vLLM, then
+//! let Magneton explain where HF burns extra energy (unfused GELU,
+//! addmm epilogue kernels, HND layout copies, full-sequence LM head).
+//!
+//! ```sh
+//! cargo run --release --example llm_serving_audit
+//! ```
+
+use magneton::coordinator::{Magneton, SysRun};
+use magneton::energy::DeviceSpec;
+use magneton::report::{label_breakdown, render_audit};
+use magneton::systems::llm;
+use magneton::systems::SystemId;
+use magneton::util::Prng;
+
+fn main() {
+    let mut rng = Prng::new(2026);
+    let params = llm::TransformerParams::new(&mut rng, llm::LlmSpec::gpt2_sim());
+
+    let hf = SysRun::new(
+        "mini-hf-transformers",
+        llm::hf_dispatcher(),
+        llm::default_env(SystemId::MiniHf),
+        llm::build_llm(&params, &llm::LlmBuildOpts::hf()),
+    );
+    let vllm = SysRun::new(
+        "mini-vllm",
+        llm::vllm_dispatcher(),
+        llm::default_env(SystemId::MiniVllm),
+        llm::build_llm(&params, &llm::LlmBuildOpts::vllm()),
+    );
+
+    let mag = Magneton::new(DeviceSpec::h200_sim());
+    let out = mag.audit(&hf, &vllm);
+    println!("{}", render_audit("mini-hf-transformers", "mini-vllm", &out));
+
+    println!("\nTop call sites by energy (mini-hf):");
+    println!("{}", label_breakdown(&out.a, 8).render());
+    println!("Top call sites by energy (mini-vllm):");
+    println!("{}", label_breakdown(&out.b, 8).render());
+
+    let tokens = (params.spec.batch * params.spec.seq) as f64;
+    println!(
+        "J/token: hf {:.3e}  vllm {:.3e}  (ratio {:.2}x)",
+        out.a.total_energy_j / tokens,
+        out.b.total_energy_j / tokens,
+        out.a.total_energy_j / out.b.total_energy_j
+    );
+}

@@ -1,0 +1,56 @@
+//! Quickstart: differential energy debugging in ~40 lines.
+//!
+//! Two "systems" compute the same `gelu(x @ w)` — one through a fused
+//! efficient kernel, one through an inefficient legacy kernel. Magneton
+//! runs both, matches their graphs, detects the waste, and diagnoses
+//! the root cause.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use magneton::coordinator::{Magneton, SysRun};
+use magneton::dispatch::{Env, KernelChoice, Routine};
+use magneton::energy::{ComputeUnit, DeviceSpec};
+use magneton::exec::{Dispatcher, Program};
+use magneton::graph::{Graph, OpKind};
+use magneton::report::render_audit;
+use magneton::tensor::Tensor;
+use magneton::util::Prng;
+
+fn build_system(label: &str, kernel: &str, efficiency: f64, x: &Tensor, w: &Tensor) -> SysRun {
+    let mut g = Graph::new(label);
+    let xi = g.add(OpKind::Input, &[], "x");
+    let wi = g.add(OpKind::Weight, &[], "w");
+    let m = g.add(OpKind::MatMul, &[xi, wi], "linear");
+    let a = g.add_attr1(OpKind::Gelu, &[m], "activation", "approx", "tanh");
+    g.add(OpKind::Output, &[a], "out");
+    let mut prog = Program::new(g);
+    prog.feed(0, x.clone());
+    prog.feed(1, w.clone());
+
+    let mut disp = Dispatcher::new();
+    disp.register(
+        "matmul",
+        Routine::direct(
+            "torch.matmul",
+            vec![],
+            KernelChoice::new(kernel, ComputeUnit::TensorCore).quality(efficiency, 1.0, 1.0),
+        ),
+    );
+    SysRun::new(label, disp, Env::new(), prog)
+}
+
+fn main() {
+    // identical workload for both systems
+    let mut rng = Prng::new(7);
+    let x = Tensor::randn(&mut rng, &[256, 512]);
+    let w = Tensor::randn(&mut rng, &[512, 512]);
+
+    let wasteful = build_system("framework-a", "legacy_sgemm_v1", 0.62, &x, &w);
+    let efficient = build_system("framework-b", "cutlass_tf32_gemm", 1.0, &x, &w);
+
+    let magneton = Magneton::new(DeviceSpec::h200_sim());
+    let outcome = magneton.audit(&wasteful, &efficient);
+    println!("{}", render_audit("framework-a", "framework-b", &outcome));
+}

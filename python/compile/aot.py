@@ -1,0 +1,105 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts for the Rust runtime.
+
+Emits into ``artifacts/``:
+
+* ``fingerprint_{m}x{n}.hlo.txt`` — the L1 spectral-moment kernel at
+  each canonical shape (keep ``FP_SHAPES`` in sync with
+  ``rust/src/runtime/mod.rs::FP_SHAPES``),
+* ``gpt2_block_a.hlo.txt`` / ``gpt2_block_b.hlo.txt`` — the two L2
+  transformer-block variants,
+* ``gelu_{m}x{n}.hlo.txt`` — the fused GELU kernel,
+* ``manifest.txt`` — human-readable inventory.
+
+HLO *text* is the interchange format, not ``.serialize()``: jax >= 0.5
+emits protos with 64-bit instruction ids that the image's xla_extension
+0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md). Python runs only at build time — the Rust
+binary is self-contained once these artifacts exist.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import fingerprint, gelu
+
+# Canonical fingerprint shapes (rows x cols). Matches the Rust runtime.
+FP_SHAPES = [(32, 256), (64, 1024), (128, 4096)]
+
+# GELU artifact shape (the L2 block's FF activation tile).
+GELU_SHAPES = [(model.TEST_B * model.TEST_S, model.TEST_F)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe round trip)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to(path: str, fn, *example_args) -> int:
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output directory")
+    args = parser.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+    manifest = []
+
+    # L1 fingerprint kernel at each canonical shape
+    for m, n in FP_SHAPES:
+        name = f"fingerprint_{m}x{n}"
+        size = lower_to(
+            os.path.join(out, f"{name}.hlo.txt"),
+            fingerprint.fingerprint_fn,
+            f32((m, n)),
+        )
+        manifest.append(f"{name}: input f32[{m},{n}] -> (f32[4],)  [{size} chars]")
+        print(f"lowered {name} ({size} chars)")
+
+    # L1 fused GELU kernel
+    for m, n in GELU_SHAPES:
+        name = f"gelu_{m}x{n}"
+        size = lower_to(
+            os.path.join(out, f"{name}.hlo.txt"),
+            lambda x: (gelu.gelu_tanh(x),),
+            f32((m, n)),
+        )
+        manifest.append(f"{name}: input f32[{m},{n}] -> (f32[{m},{n}],)  [{size} chars]")
+        print(f"lowered {name} ({size} chars)")
+
+    # L2 transformer-block variants (shared parameter layout)
+    bs = model.TEST_B * model.TEST_S
+    x = f32((bs, model.TEST_D))
+    params = [f32(s) for s in model.block_param_shapes()]
+    for name, fn in [("gpt2_block_a", model.gpt2_block_a), ("gpt2_block_b", model.gpt2_block_b)]:
+        size = lower_to(os.path.join(out, f"{name}.hlo.txt"), fn, x, *params)
+        manifest.append(
+            f"{name}: input f32[{bs},{model.TEST_D}] + 12 params -> (f32[{bs},{model.TEST_D}],)  [{size} chars]"
+        )
+        print(f"lowered {name} ({size} chars)")
+
+    with open(os.path.join(out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {len(manifest)} artifacts to {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""L1 Pallas kernel: spectral-moment tensor fingerprints.
+
+The Magneton coordinator identifies semantically equivalent tensors by
+comparing layout-invariant spectra of their matricizations (paper
+S4.2). The hot-path invariant is the vector of spectral moments
+
+    m_k = tr((M M^T)^k),  k = 1..4
+
+i.e. the power sums of squared singular values. This module computes
+them as two blocked Pallas matmuls (G = M M^T and G2 = G G) plus
+in-register reductions:
+
+    m1 = tr(G)        m2 = ||G||_F^2 = tr(G^2)
+    m3 = <G2, G>      m4 = ||G2||_F^2 = tr(G^4)
+
+TPU mapping (DESIGN.md "Hardware-Adaptation"): the matricized tensor is
+tiled into VMEM blocks via BlockSpec, the Gram product targets the MXU
+with f32 accumulation (`preferred_element_type`), and each input element
+is read from HBM exactly once per unfolding — the TPU analogue of the
+fused-kernel HBM->SRAM argument the paper makes for GELU (S6.3).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret-mode lowers to plain HLO which the Rust runtime
+loads. Real-TPU perf is estimated in DESIGN.md/EXPERIMENTS.md SPerf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Moments per unfolding. Keep in sync with rust fingerprint::MOMENT_ORDER.
+MOMENT_ORDER = 4
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, nsteps: int):
+    """Blocked matmul with output-block accumulation over the k grid dim.
+
+    The output BlockSpec ignores the k index, so the same VMEM tile is
+    revisited across k steps and acts as the accumulator (f32 on the
+    MXU via preferred_element_type).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _block(dim: int, target: int) -> int:
+    """Largest power-of-two block <= target that divides dim."""
+    b = min(target, dim)
+    while dim % b != 0:
+        b //= 2
+    return max(b, 1)
+
+
+def matmul(a, b, bm: int = 32, bn: int = 32, bk: int = 128):
+    """Blocked Pallas matmul `a @ b` (f32, interpret mode)."""
+    m, ka = a.shape
+    kb, n = b.shape
+    assert ka == kb, f"inner dims {ka} vs {kb}"
+    bm = _block(m, bm)
+    bn = _block(n, bn)
+    bk = _block(ka, bk)
+    grid = (m // bm, n // bn, ka // bk)
+    kernel = functools.partial(_matmul_kernel, nsteps=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def gram(mat):
+    """G = M M^T via the blocked Pallas matmul."""
+    return matmul(mat, mat.T)
+
+
+def spectral_moments(mat):
+    """The 4-vector [tr(G), tr(G^2), tr(G^3), tr(G^4)], G = M M^T."""
+    g = gram(mat)
+    g2 = matmul(g, g)
+    m1 = jnp.trace(g)
+    m2 = jnp.sum(g * g)  # tr(G^2): G symmetric
+    m3 = jnp.sum(g2 * g)  # tr(G^3) = <G^2, G^T> = <G^2, G>
+    m4 = jnp.sum(g2 * g2)  # tr(G^4) = ||G^2||_F^2
+    return jnp.stack([m1, m2, m3, m4])
+
+
+def fingerprint_fn(mat):
+    """AOT entrypoint: returns a 1-tuple (the Rust loader unpacks it)."""
+    return (spectral_moments(mat),)

@@ -1,0 +1,43 @@
+"""L1 Pallas kernel: fused tanh-GELU.
+
+The fused activation the efficient systems use (vLLM's
+`gelu_tanh_and_mul`-style single kernel): one HBM read and one write
+per element, versus the 5-kernel decomposition HuggingFace ships
+(paper S6.3: 77.4% operator-level energy difference). Rows are tiled
+into VMEM blocks; the elementwise math runs out of registers.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SQRT_2_OVER_PI = 0.7978845608028654
+GELU_COEF = 0.044715
+
+
+def _gelu_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    inner = SQRT_2_OVER_PI * (x + GELU_COEF * x * x * x)
+    o_ref[...] = 0.5 * x * (1.0 + jnp.tanh(inner))
+
+
+def _block(dim: int, target: int) -> int:
+    b = min(target, dim)
+    while dim % b != 0:
+        b //= 2
+    return max(b, 1)
+
+
+def gelu_tanh(x):
+    """Fused tanh-GELU over a 2-D activation tile (interpret mode)."""
+    m, n = x.shape
+    bm = _block(m, 64)
+    bn = _block(n, 256)
+    return pl.pallas_call(
+        _gelu_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x)

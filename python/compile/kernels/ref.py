@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness signal).
+
+Every Pallas kernel in this package must match its `ref.py` counterpart
+under `numpy.testing.assert_allclose` — enforced by
+`python/tests/test_kernel.py` (including hypothesis shape sweeps).
+"""
+
+import jax.numpy as jnp
+
+SQRT_2_OVER_PI = 0.7978845608028654
+GELU_COEF = 0.044715
+
+
+def matmul_ref(a, b):
+    return jnp.matmul(a, b)
+
+
+def gram_ref(mat):
+    return jnp.matmul(mat, mat.T)
+
+
+def spectral_moments_ref(mat):
+    """Reference moments via explicit Gram powers."""
+    g = gram_ref(mat)
+    g2 = jnp.matmul(g, g)
+    g3 = jnp.matmul(g2, g)
+    g4 = jnp.matmul(g2, g2)
+    return jnp.stack([jnp.trace(g), jnp.trace(g2), jnp.trace(g3), jnp.trace(g4)])
+
+
+def spectral_moments_svd_ref(mat):
+    """Ground-truth moments from the singular values themselves."""
+    s = jnp.linalg.svd(mat, compute_uv=False)
+    return jnp.stack([jnp.sum(s ** (2 * k)) for k in range(1, 5)])
+
+
+def gelu_tanh_ref(x):
+    inner = SQRT_2_OVER_PI * (x + GELU_COEF * x * x * x)
+    return 0.5 * x * (1.0 + jnp.tanh(inner))

@@ -1,0 +1,100 @@
+"""L2: GPT-2 transformer-block compute graphs in JAX.
+
+Two semantically equivalent but differently implemented variants — the
+same diversity Magneton exploits across real systems:
+
+* ``gpt2_block_a`` (HF-flavoured): separate Q/K/V projections sliced
+  from the fused weight, bias fused via addmm-style ``x @ w + b``, and
+  the 5-step unfused tanh-GELU decomposition.
+* ``gpt2_block_b`` (vLLM-flavoured): one fused QKV projection, split,
+  and the fused Pallas GELU kernel (L1).
+
+Both are lowered by ``aot.py`` to HLO text; the Rust integration tests
+execute them through PJRT and check them against each other *and*
+against the Rust tensor-substrate executor (the numerics cross-check of
+DESIGN.md). The weight layout matches
+``rust/src/systems/llm.rs::TransformerParams`` exactly.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import gelu as gelu_kernel
+
+# Shapes used for the lowered test block. Keep in sync with
+# rust/tests/pjrt_reference.rs.
+TEST_B, TEST_S, TEST_D, TEST_H, TEST_F = 2, 8, 32, 4, 64
+
+
+def layernorm(x, g, b, eps=1e-5):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * g + b
+
+
+def gelu_tanh_unfused(x):
+    """The HF 5-kernel decomposition (same math as the fused kernel)."""
+    x3 = x * x * x
+    inner = x + 0.044715 * x3
+    scaled = 0.7978845608028654 * inner
+    t = jnp.tanh(scaled)
+    return x * (0.5 * t) + 0.5 * x
+
+
+def attention_nhd(q, k, v):
+    """Scaled dot-product attention over [B, S, H, Dh] (NHD layout)."""
+    dh = q.shape[-1]
+    scores = jnp.einsum("bshd,bthd->bhst", q, k) / jnp.sqrt(float(dh))
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum("bhst,bthd->bshd", probs, v)
+
+
+def _block_core(x2d, params, *, fused_qkv: bool, fused_gelu: bool,
+                b: int, s: int, d: int, h: int):
+    (ln1_g, ln1_b, qkv_w, qkv_b, out_w, out_b,
+     ln2_g, ln2_b, ff1_w, ff1_b, ff2_w, ff2_b) = params
+    dh = d // h
+
+    ln1 = layernorm(x2d, ln1_g, ln1_b)
+    if fused_qkv:
+        qkv = ln1 @ qkv_w + qkv_b
+        q2, k2, v2 = jnp.split(qkv, 3, axis=1)
+    else:
+        q2 = ln1 @ qkv_w[:, :d] + qkv_b[:d]
+        k2 = ln1 @ qkv_w[:, d:2 * d] + qkv_b[d:2 * d]
+        v2 = ln1 @ qkv_w[:, 2 * d:] + qkv_b[2 * d:]
+    q = q2.reshape(b, s, h, dh)
+    k = k2.reshape(b, s, h, dh)
+    v = v2.reshape(b, s, h, dh)
+    attn = attention_nhd(q, k, v).reshape(b * s, d)
+    res1 = x2d + (attn @ out_w + out_b)
+
+    ln2 = layernorm(res1, ln2_g, ln2_b)
+    h1 = ln2 @ ff1_w + ff1_b
+    act = gelu_kernel.gelu_tanh(h1) if fused_gelu else gelu_tanh_unfused(h1)
+    h2 = act @ ff2_w + ff2_b
+    return res1 + h2
+
+
+def gpt2_block_a(x2d, *params):
+    """HF-flavoured block: split projections + unfused GELU."""
+    return (_block_core(x2d, params, fused_qkv=False, fused_gelu=False,
+                        b=TEST_B, s=TEST_S, d=TEST_D, h=TEST_H),)
+
+
+def gpt2_block_b(x2d, *params):
+    """vLLM-flavoured block: fused QKV + fused Pallas GELU."""
+    return (_block_core(x2d, params, fused_qkv=True, fused_gelu=True,
+                        b=TEST_B, s=TEST_S, d=TEST_D, h=TEST_H),)
+
+
+def block_param_shapes(d: int = TEST_D, f: int = TEST_F):
+    """Parameter shapes in calling order (mirrors the Rust weight bank)."""
+    return [
+        (d,), (d,),          # ln1 gamma/beta
+        (d, 3 * d), (3 * d,),  # qkv w/b
+        (d, d), (d,),        # out proj w/b
+        (d,), (d,),          # ln2 gamma/beta
+        (d, f), (f,),        # ff1 w/b
+        (f, d), (d,),        # ff2 w/b
+    ]

@@ -1,0 +1,97 @@
+"""L2 model checks: the two block variants are semantically equivalent,
+shapes line up with the Rust weight bank, and AOT lowering produces
+loadable HLO text.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_params(seed=0, scale=None):
+    rng = np.random.default_rng(seed)
+    d = model.TEST_D
+    if scale is None:
+        scale = 1.0 / np.sqrt(d)
+    params = []
+    for shape in model.block_param_shapes():
+        params.append(jnp.asarray(rng.standard_normal(shape, dtype=np.float32) * scale))
+    # LN gains near 1
+    params[0] = jnp.abs(params[0]) * 0.1 + 1.0
+    params[6] = jnp.abs(params[6]) * 0.1 + 1.0
+    return params
+
+
+def make_x(seed=1):
+    rng = np.random.default_rng(seed)
+    bs = model.TEST_B * model.TEST_S
+    return jnp.asarray(rng.standard_normal((bs, model.TEST_D), dtype=np.float32))
+
+
+class TestBlockVariants:
+    def test_variants_agree(self):
+        x = make_x()
+        params = make_params()
+        (a,) = model.gpt2_block_a(x, *params)
+        (b,) = model.gpt2_block_b(x, *params)
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+    def test_output_shape(self):
+        x = make_x()
+        (a,) = model.gpt2_block_a(x, *make_params())
+        assert a.shape == (model.TEST_B * model.TEST_S, model.TEST_D)
+
+    def test_attention_rows_mix_sequence(self):
+        # the block must not be position-independent: shuffling the
+        # sequence changes outputs (attention mixes positions)
+        x = make_x()
+        params = make_params()
+        (a,) = model.gpt2_block_b(x, *params)
+        xs = jnp.concatenate([x[model.TEST_S // 2:], x[: model.TEST_S // 2]])
+        (b,) = model.gpt2_block_b(xs, *params)
+        assert not np.allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+    def test_layernorm_normalises(self):
+        x = make_x() * 100.0
+        g = jnp.ones((model.TEST_D,))
+        b = jnp.zeros((model.TEST_D,))
+        ln = model.layernorm(x, g, b)
+        np.testing.assert_allclose(np.asarray(jnp.mean(ln, axis=-1)), 0.0, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(jnp.var(ln, axis=-1)), 1.0, atol=1e-2)
+
+    def test_unfused_gelu_matches_kernel_ref(self):
+        from compile.kernels import ref
+        x = make_x()
+        np.testing.assert_allclose(
+            model.gelu_tanh_unfused(x), ref.gelu_tanh_ref(x), rtol=1e-5, atol=1e-6
+        )
+
+
+class TestAotLowering:
+    def test_hlo_text_emitted(self, tmp_path):
+        x = jax.ShapeDtypeStruct((model.TEST_B * model.TEST_S, model.TEST_D), jnp.float32)
+        params = [jax.ShapeDtypeStruct(s, jnp.float32) for s in model.block_param_shapes()]
+        n = aot.lower_to(str(tmp_path / "blk.hlo.txt"), model.gpt2_block_b, x, *params)
+        assert n > 1000
+        text = (tmp_path / "blk.hlo.txt").read_text()
+        assert text.startswith("HloModule")
+        assert "f32[" in text
+
+    def test_fingerprint_artifact_shapes_match_rust(self):
+        # FP_SHAPES must mirror rust/src/runtime/mod.rs
+        assert aot.FP_SHAPES == [(32, 256), (64, 1024), (128, 4096)]
+
+    @pytest.mark.parametrize("m,n", [(32, 256)])
+    def test_fingerprint_lowering(self, tmp_path, m, n):
+        from compile.kernels import fingerprint
+        size = aot.lower_to(
+            str(tmp_path / "fp.hlo.txt"),
+            fingerprint.fingerprint_fn,
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+        )
+        assert size > 500

@@ -1,0 +1,48 @@
+//! Fig 10 replica: runtime overhead of Magneton's tracing modules on
+//! HF-Transformers and vLLM serving a mixed workload.
+//!
+//! Paper shape: 4.4 % (HF) and 5.9 % (vLLM) end-to-end overhead with
+//! tracing enabled.
+
+use magneton::coordinator::Magneton;
+use magneton::energy::DeviceSpec;
+use magneton::systems::llm;
+use magneton::systems::SystemId;
+use magneton::util::bench::{banner, persist};
+use magneton::util::table::Table;
+use magneton::util::Prng;
+
+fn main() {
+    banner("Fig 10", "Tracing overhead on HF & vLLM (paper: 4.4% / 5.9%)");
+    let mut rng = Prng::new(2026);
+    // mixed workload: 1 prefill (128 tokens) + many decode-ish tokens —
+    // approximated by the gpt2_sim prefill graph
+    let params = llm::TransformerParams::new(&mut rng, llm::LlmSpec::gpt2_sim());
+
+    let mut t = Table::new(vec!["system", "untraced wall", "traced wall", "overhead"]);
+    let mut csv = String::from("system,overhead_pct\n");
+    for (name, opts, disp, env) in [
+        ("mini-hf-transformers", llm::LlmBuildOpts::hf(), llm::hf_dispatcher(), llm::default_env(SystemId::MiniHf)),
+        ("mini-vllm", llm::LlmBuildOpts::vllm(), llm::vllm_dispatcher(), llm::default_env(SystemId::MiniVllm)),
+    ] {
+        let run = magneton::coordinator::SysRun::new(name, disp, env, llm::build_llm(&params, &opts));
+        let mut mag = Magneton::new(DeviceSpec::h200_sim());
+        mag.exec_opts.tracing = false;
+        let off = mag.run_side(&run);
+        mag.exec_opts.tracing = true;
+        let on = mag.run_side(&run);
+        let overhead = (on.wall_time_us - off.wall_time_us) / off.wall_time_us * 100.0;
+        t.row(vec![
+            name.to_string(),
+            format!("{:.1} us", off.wall_time_us),
+            format!("{:.1} us", on.wall_time_us),
+            format!("{overhead:.1}%"),
+        ]);
+        csv.push_str(&format!("{name},{overhead:.2}\n"));
+        assert!(overhead > 0.5 && overhead < 12.0, "{name} overhead out of band: {overhead:.1}%");
+    }
+    let rendered = t.render();
+    println!("{rendered}");
+    println!("(paper: 4.4% HF, 5.9% vLLM; offline diagnosis completes within minutes)");
+    persist("fig10_overhead", &rendered, Some(&csv));
+}

@@ -1,0 +1,46 @@
+//! Fig 2 replica: HuggingFace total energy + top-5 operator breakdown,
+//! addmm vs the add+matmul fix (case c10's workload: single-layer
+//! GPT-2, large batch·seq).
+//!
+//! Paper shape: ~10 % less inference energy with the fix, at ~1 %
+//! performance difference — invisible to a latency profiler.
+
+use magneton::cases::by_id;
+use magneton::coordinator::Magneton;
+use magneton::energy::DeviceSpec;
+use magneton::report::energy_breakdown;
+use magneton::util::bench::{banner, persist};
+use magneton::util::table::fmt_joules;
+use magneton::util::Prng;
+
+fn main() {
+    banner("Fig 2", "HF energy breakdown: torch.addmm vs add+matmul (case c10 workload)");
+    let mag = Magneton::new(DeviceSpec::h200_sim());
+    let mut rng = Prng::new(2026);
+    let s = by_id("c10").expect("c10 registered");
+    let (a, b) = (s.build)(&mut rng);
+    let ra = mag.run_side(&a);
+    let rb = mag.run_side(&b);
+
+    let mut out = String::new();
+    for (label, arts) in [(&a.label, &ra), (&b.label, &rb)] {
+        out.push_str(&format!(
+            "\n--- {label}: total {} / wall {:.1} us ---\n",
+            fmt_joules(arts.total_energy_j),
+            arts.gpu_time_us
+        ));
+        out.push_str(&energy_breakdown(arts, 5).render());
+    }
+    let ediff = (ra.total_energy_j - rb.total_energy_j) / rb.total_energy_j * 100.0;
+    let tdiff = (ra.gpu_time_us - rb.gpu_time_us) / rb.gpu_time_us * 100.0;
+    out.push_str(&format!(
+        "\naddmm consumes {ediff:+.1}% energy vs add+mm (paper: +10.0%) at {tdiff:+.1}% time (paper: ~1%)\n"
+    ));
+    println!("{out}");
+    persist("fig2_breakdown", &out, Some(&energy_breakdown(&ra, 5).to_csv()));
+    assert!(ediff > 3.0, "addmm waste not visible: {ediff:.1}%");
+    // our simulated kernels are launch-light, so the extra `add` launch
+    // shows up more than on the paper's H200; the shape (energy diff >>
+    // time diff is NOT required for detection) still holds
+    assert!(tdiff.abs() < 20.0, "fix should be roughly performance-neutral: {tdiff:.1}%");
+}

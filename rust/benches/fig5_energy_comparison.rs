@@ -1,0 +1,97 @@
+//! Fig 5 replica: cross-system energy comparison.
+//!
+//! (b) J/token for LLM serving (vLLM vs SGLang vs HF) on two request
+//!     mixes — paper: HF up to 2.97× SGLang;
+//! (c) convolution energy (PyTorch vs TF vs JAX) — paper: up to 3.35×;
+//! (d) image-generation energy per patch (SD vs Diffusers).
+
+use magneton::dispatch::Env;
+use magneton::energy::DeviceSpec;
+use magneton::exec::Executor;
+use magneton::systems::frameworks as fw;
+use magneton::systems::imagegen as ig;
+use magneton::systems::llm;
+use magneton::systems::SystemId;
+use magneton::util::bench::{banner, persist};
+use magneton::util::table::Table;
+use magneton::util::Prng;
+use magneton::workload::{fig5b_mixes, serve_mix};
+
+fn main() {
+    banner("Fig 5", "Energy comparison across functionally-equivalent systems");
+    let dev = DeviceSpec::h200_sim();
+    let mut rng = Prng::new(2026);
+    let mut csv = String::from("panel,system,workload,value\n");
+
+    // ---- (b) LLM serving J/token ---------------------------------
+    let params = llm::TransformerParams::new(&mut rng, llm::LlmSpec::gpt2_sim());
+    let mut tb = Table::new(vec!["system", "mix (in,out)", "J/token (sim)"]);
+    let mut jt: Vec<(String, f64)> = Vec::new();
+    for mix in fig5b_mixes() {
+        for (name, opts, disp, env) in [
+            ("mini-vllm", llm::LlmBuildOpts::vllm(), llm::vllm_dispatcher(), llm::default_env(SystemId::MiniVllm)),
+            ("mini-sglang", llm::LlmBuildOpts::sglang(), llm::sglang_dispatcher(), llm::default_env(SystemId::MiniSglang)),
+            ("mini-hf", llm::LlmBuildOpts::hf(), llm::hf_dispatcher(), llm::default_env(SystemId::MiniHf)),
+        ] {
+            let exec = Executor::new(dev.clone(), disp, env);
+            let (e, _t) = serve_mix(&exec, &params, &opts, &mix);
+            let per_tok = e / mix.total_tokens() as f64;
+            tb.row(vec![
+                name.to_string(),
+                format!("({},{})", mix.input_tokens, mix.output_tokens),
+                format!("{:.3e}", per_tok),
+            ]);
+            csv.push_str(&format!("5b,{name},({},{}),{per_tok:.6e}\n", mix.input_tokens, mix.output_tokens));
+            jt.push((name.to_string(), per_tok));
+        }
+    }
+    println!("(b) LLM serving energy per token\n{}", tb.render());
+    let hf = jt.iter().filter(|(n, _)| n == "mini-hf").map(|(_, v)| *v).fold(0.0, f64::max);
+    let sg = jt.iter().filter(|(n, _)| n == "mini-sglang").map(|(_, v)| *v).fold(f64::MAX, f64::min);
+    let ratio_b = hf / sg;
+    println!("max HF / min SGLang ratio: {ratio_b:.2}x (paper: up to 2.97x)\n");
+
+    // ---- (c) convolution energy -----------------------------------
+    let spec = fw::ConvSpec::fig5c();
+    let (x, w) = fw::conv_params(&mut rng, spec);
+    let mut tc = Table::new(vec!["framework", "conv energy (J)"]);
+    let mut conv_e = Vec::new();
+    for (name, prog, disp, env) in [
+        ("mini-pytorch", fw::build_conv("torch", spec, fw::ConvLayout::Nchw, &x, &w, "torch.conv2d"), fw::torch_dispatcher(), Env::new()),
+        ("mini-tensorflow", fw::build_conv("tf", spec, fw::ConvLayout::Nchw, &x, &w, "tf.conv2d"), fw::tf_dispatcher(), Env::new()),
+        ("mini-jax", fw::build_conv("jax", spec, fw::ConvLayout::Nchw, &x, &w, "jax.conv2d"), fw::jax_dispatcher(), Env::new().with("groups", "1")),
+    ] {
+        let arts = Executor::new(dev.clone(), disp, env).run(&prog);
+        tc.row(vec![name.to_string(), format!("{:.3e}", arts.total_energy_j)]);
+        csv.push_str(&format!("5c,{name},conv,{:.6e}\n", arts.total_energy_j));
+        conv_e.push(arts.total_energy_j);
+    }
+    println!("(c) convolution operator energy\n{}", tc.render());
+    let ratio_c = conv_e.iter().cloned().fold(0.0, f64::max) / conv_e.iter().cloned().fold(f64::MAX, f64::min);
+    println!("max/min conv ratio: {ratio_c:.2}x (paper: up to 3.35x)\n");
+
+    // ---- (d) image generation energy per patch ---------------------
+    let uparams = ig::UnetParams::new(&mut rng, ig::UnetSpec::sd3_sim());
+    let patches = (uparams.spec.batch * uparams.spec.hw * uparams.spec.hw) as f64;
+    let mut td = Table::new(vec!["system", "energy/patch (J)"]);
+    let mut img_e = Vec::new();
+    for (name, opts, disp, env) in [
+        ("mini-stable-diffusion", ig::UnetBuildOpts::sd(), ig::sd_dispatcher(), ig::sd_env(false)),
+        ("mini-diffusers", ig::UnetBuildOpts::diffusers(), ig::diffusers_dispatcher(), ig::sd_env(true)),
+    ] {
+        let arts = Executor::new(dev.clone(), disp, env).run(&ig::build_unet_block(&uparams, &opts));
+        td.row(vec![name.to_string(), format!("{:.3e}", arts.total_energy_j / patches)]);
+        csv.push_str(&format!("5d,{name},unet,{:.6e}\n", arts.total_energy_j / patches));
+        img_e.push(arts.total_energy_j);
+    }
+    println!("(d) image-generation energy per patch\n{}", td.render());
+
+    let summary = format!(
+        "5b HF/SGLang ratio {ratio_b:.2}x (paper <=2.97x) | 5c conv spread {ratio_c:.2}x (paper <=3.35x) | 5d spread {:.2}x",
+        img_e.iter().cloned().fold(0.0, f64::max) / img_e.iter().cloned().fold(f64::MAX, f64::min)
+    );
+    println!("{summary}");
+    persist("fig5_energy_comparison", &format!("{summary}\n"), Some(&csv));
+    assert!(ratio_b > 1.3, "HF must be markedly less efficient than SGLang");
+    assert!(ratio_c > 1.5, "conv energy spread must be large");
+}

@@ -1,0 +1,84 @@
+//! Table 4 replica: per-operator power via (1) physical power meter
+//! (ground truth), (2) Zeus/NVML windowed reads, (3) Magneton's
+//! replay-based software mode.
+//!
+//! Paper shape: Zeus errs by up to −80 % on microsecond kernels (stale,
+//! undersampled counter); Magneton replay lands within a few percent of
+//! the physical meter.
+
+use magneton::dispatch::Env;
+use magneton::energy::sampler::{NvmlSampler, PhysicalMeter};
+use magneton::energy::DeviceSpec;
+use magneton::exec::{Dispatcher, Executor, Program};
+use magneton::graph::{Attrs, Graph, OpKind};
+use magneton::profiler::{replay_energy, replay_energy_ex};
+use magneton::tensor::Tensor;
+use magneton::util::bench::{banner, persist};
+use magneton::util::table::Table;
+use magneton::util::Prng;
+
+fn main() {
+    banner(
+        "Table 4",
+        "Per-op power: physical meter vs Zeus(NVML) vs Magneton replay (GPT-2-ish ops, testbed-A sim)",
+    );
+    // Testbed-A: RTX 4090-like device (as in the paper's accuracy study)
+    let dev = DeviceSpec::rtx4090_sim();
+    let mut rng = Prng::new(42);
+
+    // a small graph exercising the paper's three ops: arange,
+    // contiguous, linear (batch 256, len 128-ish)
+    let mut g = Graph::new("table4");
+    let x = g.add(OpKind::Input, &[], "x");
+    let w = g.add(OpKind::Weight, &[], "w");
+    let mut at = Attrs::new();
+    at.insert("n".into(), "32768".into());
+    g.add_attrs(OpKind::Arange, &[], "aten::arange", at);
+    let p = g.add_attr1(OpKind::Permute, &[x], "transpose", "perm", "1,0");
+    g.add(OpKind::Contiguous, &[p], "aten::contiguous");
+    g.add(OpKind::MatMul, &[x, w], "aten::linear");
+    let mut prog = Program::new(g);
+    prog.feed(0, Tensor::randn(&mut rng, &[256, 512]));
+    prog.feed(1, Tensor::randn(&mut rng, &[512, 512]));
+    let exec = Executor::new(dev.clone(), Dispatcher::new(), Env::new());
+    let arts = exec.run(&prog);
+
+    let physical = PhysicalMeter;
+    let nvml = NvmlSampler::default();
+    let mut t = Table::new(vec![
+        "Op", "Physical (W)", "Zeus (W)", "Zeus err%", "Magneton (W)", "Magneton err%",
+    ]);
+    let mut max_magneton_err: f64 = 0.0;
+    let mut t_cursor = 0.0;
+    for r in &arts.records {
+        let (t0, t1) = (t_cursor, t_cursor + r.time_us);
+        t_cursor = t1;
+        let truth_w = physical.avg_power_w(&arts.power, t0, t1);
+        // Zeus: windowed NVML read over the op's real (microsecond) window
+        let zeus_w = nvml.avg_power_w(&arts.power, t0, t1);
+        // Magneton replay: adaptively stretch the op to a stable window
+        let replay_e = replay_energy_ex(r.time_us, r.avg_power_w, dev.idle_w, 1000, &nvml, true);
+        let magneton_w = replay_e / (r.time_us * 1e-6);
+        let zerr = (zeus_w - truth_w) / truth_w * 100.0;
+        let merr = (magneton_w - truth_w) / truth_w * 100.0;
+        max_magneton_err = max_magneton_err.max(merr.abs());
+        t.row(vec![
+            r.label.clone(),
+            format!("{truth_w:.0}"),
+            format!("{zeus_w:.0}"),
+            format!("{zerr:+.1}%"),
+            format!("{magneton_w:.0}"),
+            format!("{merr:+.1}%"),
+        ]);
+        // the paper's shape: Zeus far below truth on short kernels
+        assert!(zerr < -30.0, "Zeus unexpectedly accurate on {}: {zerr:.1}%", r.label);
+    }
+    let rendered = t.render();
+    println!("{rendered}");
+    let summary = format!(
+        "max |Magneton replay error| = {max_magneton_err:.1}% (paper: <=4.1%); Zeus errs -30..-85% on microsecond kernels (paper: ~-72..-81%)"
+    );
+    println!("{summary}");
+    persist("table4_accuracy", &format!("{rendered}\n{summary}\n"), Some(&t.to_csv()));
+    assert!(max_magneton_err < 8.0, "Magneton replay error too large");
+}

@@ -1,0 +1,326 @@
+//! The 16 known energy-waste cases (paper Table 1), reconstructed from
+//! their published issue descriptions against the mini-system fleet.
+
+use crate::coordinator::SysRun;
+use crate::diagnose::Category;
+use crate::dispatch::Env;
+use crate::exec::Dispatcher;
+use crate::graph::{Attrs, Graph, OpKind};
+use crate::systems::frameworks as fw;
+use crate::systems::imagegen as ig;
+use crate::systems::llm;
+use crate::systems::SystemId;
+use crate::tensor::Tensor;
+use crate::util::Prng;
+
+use super::Scenario;
+
+fn attrs(kvs: &[(&str, &str)]) -> Attrs {
+    kvs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+}
+
+fn llm_run(label: &str, params: &llm::TransformerParams, opts: &llm::LlmBuildOpts, disp: Dispatcher, env: Env) -> SysRun {
+    SysRun::new(label, disp, env, llm::build_llm(params, opts))
+}
+
+/// c1 vllm-9471 — prefill attention with tensor cores disabled.
+fn c1(rng: &mut Prng) -> (SysRun, SysRun) {
+    // prefill-heavy workload: long sequences make attention (the
+    // affected operator) a dominant energy consumer, as in the issue
+    let spec = llm::LlmSpec { batch: 2, seq: 256, d_model: 128, n_heads: 8, d_ff: 256, vocab: 512, layers: 1 };
+    let params = llm::TransformerParams::new(rng, spec);
+    let base = llm::default_env(SystemId::MiniVllm);
+    let a = llm_run("vllm(tc off)", &params, &llm::LlmBuildOpts::vllm(), llm::vllm_dispatcher(), base.clone().with("use_tensor_cores", "false"));
+    let b = llm_run("vllm(tc on)", &params, &llm::LlmBuildOpts::vllm(), llm::vllm_dispatcher(), base);
+    (a, b)
+}
+
+/// c2 vllm-10811 — decode attention incurs a redundant KV copy.
+fn c2(rng: &mut Prng) -> (SysRun, SysRun) {
+    // decode-shaped attention micro-graph: q over a cached KV block.
+    // Both sides see the SAME tensors (identical workload).
+    let q = Tensor::randn(rng, &[1, 8, 16, 32]);
+    let k = Tensor::randn(rng, &[1, 8, 256, 32]);
+    let v = Tensor::randn(rng, &[1, 8, 256, 32]);
+    let build = |with_copy: bool, q: Tensor, k: Tensor, v: Tensor| {
+        let mut g = Graph::new(if with_copy { "vllm-decode-copy" } else { "vllm-decode" });
+        let qi = g.add(OpKind::Input, &[], "q");
+        let ki = g.add(OpKind::Input, &[], "kv_cache_k");
+        let vi = g.add(OpKind::Input, &[], "kv_cache_v");
+        let (ku, vu) = if with_copy {
+            (
+                g.add(OpKind::Copy, &[ki], "decode.kv_k_copy"),
+                g.add(OpKind::Copy, &[vi], "decode.kv_v_copy"),
+            )
+        } else {
+            (ki, vi)
+        };
+        let at = attrs(&[("dispatch", "vllm.decode_attention")]);
+        let o = g.add_attrs(OpKind::Attention, &[qi, ku, vu], "decode.attn", at);
+        g.add(OpKind::Output, &[o], "out");
+        let mut p = crate::exec::Program::new(g);
+        p.feed(0, q);
+        p.feed(1, k);
+        p.feed(2, v);
+        p
+    };
+    let env = llm::default_env(SystemId::MiniVllm);
+    let a = SysRun::new("vllm-10811", llm::vllm_dispatcher(), env.clone(), build(true, q.clone(), k.clone(), v.clone()));
+    let b = SysRun::new("vllm-fixed", llm::vllm_dispatcher(), env, build(false, q, k, v));
+    (a, b)
+}
+
+/// c3 sglang-5128 — top-k via full sort + slice.
+fn c3(rng: &mut Prng) -> (SysRun, SysRun) {
+    let params = llm::TransformerParams::new(rng, llm::LlmSpec::gpt2_sim());
+    let env = llm::default_env(SystemId::MiniSglang);
+    let bad = llm::LlmBuildOpts { topk: Some(llm::TopkImpl::SortSlice), ..llm::LlmBuildOpts::sglang() };
+    let good = llm::LlmBuildOpts { topk: Some(llm::TopkImpl::Fused), ..llm::LlmBuildOpts::sglang() };
+    let a = llm_run("sglang(sort-topk)", &params, &bad, llm::sglang_dispatcher(), env.clone());
+    let b = llm_run("sglang(fused-topk)", &params, &good, llm::sglang_dispatcher(), env);
+    (a, b)
+}
+
+/// c4 megatron-543 — redundant repeat_interleave in GQA.
+fn c4(rng: &mut Prng) -> (SysRun, SysRun) {
+    let params = llm::TransformerParams::new(rng, llm::LlmSpec::gpt2_sim());
+    let env = llm::default_env(SystemId::MiniMegatron);
+    let bad = llm::LlmBuildOpts::megatron(); // materialised repeat
+    let good = llm::LlmBuildOpts { gqa_fused: true, ..llm::LlmBuildOpts::megatron() };
+    let a = llm_run("megatron(repeat)", &params, &bad, llm::megatron_dispatcher(), env.clone());
+    let b = llm_run("megatron(fused-gqa)", &params, &good, llm::megatron_dispatcher(), env);
+    (a, b)
+}
+
+/// c5 hf-14450 — default tensor format causes layout transformations.
+fn c5(rng: &mut Prng) -> (SysRun, SysRun) {
+    let params = llm::TransformerParams::new(rng, llm::LlmSpec::gpt2_sim());
+    let env = llm::default_env(SystemId::MiniHf);
+    let bad = llm::LlmBuildOpts::hf(); // layout_roundtrip = true
+    let good = llm::LlmBuildOpts { layout_roundtrip: false, ..llm::LlmBuildOpts::hf() };
+    let a = llm_run("hf(default fmt)", &params, &bad, llm::hf_dispatcher(), env.clone());
+    let b = llm_run("hf(channels-last)", &params, &good, llm::hf_dispatcher(), env);
+    (a, b)
+}
+
+/// c6 hf-34570 — torch.linalg.eigvals picks the general solver for
+/// symmetric inputs.
+fn c6(rng: &mut Prng) -> (SysRun, SysRun) {
+    let m = Tensor::randn(rng, &[96, 96]);
+    // symmetrise so both paths see a symmetric input
+    let sym = crate::tensor::ops::scale(&crate::tensor::ops::add(&m, &m.t().contiguous()), 0.5);
+    let a_prog = fw::build_unary_op("torch", OpKind::Eigvals, "spectrum.eigvals", attrs(&[("dispatch", "torch.linalg.eigvals")]), &sym, &[]);
+    let b_prog = fw::build_unary_op("torch", OpKind::Eigvals, "spectrum.eigvalsh", attrs(&[("dispatch", "torch.linalg.eigvalsh")]), &sym, &[]);
+    let mut disp_b = fw::torch_dispatcher();
+    disp_b.register(
+        "torch.linalg.eigvalsh",
+        crate::dispatch::Routine::direct(
+            "torch.linalg.eigvalsh",
+            vec![crate::trace::Frame::cpp("at::native::linalg_eigh")],
+            crate::dispatch::KernelChoice::new("cusolver_syevd", crate::energy::ComputeUnit::CudaCore),
+        ),
+    );
+    let a = SysRun::new("hf-34570", fw::torch_dispatcher(), Env::new(), a_prog);
+    let b = SysRun::new("eigvalsh", disp_b, Env::new(), b_prog);
+    (a, b)
+}
+
+/// c7 diffusers-12131 — unnecessary concat/split around the skip add.
+fn c7(rng: &mut Prng) -> (SysRun, SysRun) {
+    let params = ig::UnetParams::new(rng, ig::UnetSpec::sd3_sim());
+    let a = SysRun::new(
+        "diffusers(concat-split)",
+        ig::diffusers_dispatcher(),
+        ig::sd_env(true),
+        ig::build_unet_block(&params, &ig::UnetBuildOpts::diffusers()),
+    );
+    let b = SysRun::new(
+        "sd(direct add)",
+        ig::sd_dispatcher(),
+        ig::sd_env(true),
+        ig::build_unet_block(&params, &ig::UnetBuildOpts::sd()),
+    );
+    (a, b)
+}
+
+/// c8 sd-279 — allow_tf32 left disabled.
+fn c8(rng: &mut Prng) -> (SysRun, SysRun) {
+    let params = ig::UnetParams::new(rng, ig::UnetSpec::sd3_sim());
+    let a = SysRun::new(
+        "sd(tf32 off)",
+        ig::sd_dispatcher(),
+        ig::sd_env(false),
+        ig::build_unet_block(&params, &ig::UnetBuildOpts::sd()),
+    );
+    let b = SysRun::new(
+        "sd(tf32 on)",
+        ig::sd_dispatcher(),
+        ig::sd_env(true),
+        ig::build_unet_block(&params, &ig::UnetBuildOpts::sd()),
+    );
+    (a, b)
+}
+
+/// c9 pytorch-181115 — dist.Join keeps the finished GPU spinning.
+fn c9(rng: &mut Prng) -> (SysRun, SysRun) {
+    // the light rank's iteration: compute + (join barrier | nothing)
+    let h = 512;
+    let batch = 160;
+    let x = Tensor::randn(rng, &[batch, h]);
+    let w1 = Tensor::randn(rng, &[h, h]);
+    let build = |with_join: bool, xt: Tensor, wt: Tensor| {
+        let mut g = Graph::new(if with_join { "ddp-join" } else { "ddp-early-exit" });
+        let x = g.add(OpKind::Input, &[], "batch");
+        let w1 = g.add(OpKind::Weight, &[], "w1");
+        let m = g.add(OpKind::MatMul, &[x, w1], "mlp.fc1");
+        let ar = g.add(OpKind::AllReduce, &[m], "ddp.all_reduce");
+        let out = if with_join {
+            let at = attrs(&[("wait_us", "400"), ("power_frac", "0.45")]);
+            g.add_attrs(OpKind::Barrier, &[ar], "dist.Join.barrier", at)
+        } else {
+            ar
+        };
+        g.add(OpKind::Output, &[out], "out");
+        let mut p = crate::exec::Program::new(g);
+        p.feed(0, xt);
+        p.feed(1, wt);
+        p
+    };
+    let a = SysRun::new("pytorch(dist.Join)", Dispatcher::new(), Env::new(), build(true, x.clone(), w1.clone()));
+    let b = SysRun::new("pytorch(early-exit)", Dispatcher::new(), Env::new(), build(false, x, w1));
+    (a, b)
+}
+
+/// c10 pytorch-141210 — torch.addmm selects higher-energy kernels.
+fn c10(rng: &mut Prng) -> (SysRun, SysRun) {
+    // single-layer GPT-2, batch 8, len 1024 scaled: the Fig 2 workload
+    let spec = llm::LlmSpec { batch: 2, seq: 128, d_model: 256, n_heads: 8, d_ff: 1024, vocab: 1024, layers: 1 };
+    let params = llm::TransformerParams::new(rng, spec);
+    let env = llm::default_env(SystemId::MiniHf);
+    let bad = llm::LlmBuildOpts { layout_roundtrip: false, unfused_gelu: false, ..llm::LlmBuildOpts::hf() };
+    let good = llm::LlmBuildOpts { use_addmm: false, ..bad.clone() };
+    let a = llm_run("hf(addmm)", &params, &bad, llm::hf_dispatcher(), env.clone());
+    let b = llm_run("hf(add+mm)", &params, &good, llm::hf_dispatcher(), env);
+    (a, b)
+}
+
+/// c11 pytorch-28224 — CPU busy-wait flags; GPU energy unaffected, so
+/// Magneton (a GPU energy profiler) is expected to miss it.
+fn c11(rng: &mut Prng) -> (SysRun, SysRun) {
+    let xt = Tensor::randn(rng, &[64, 128]);
+    let wt = Tensor::randn(rng, &[128, 128]);
+    let build = |xt: Tensor, wt: Tensor| {
+        let mut g = Graph::new("cpu-busywait");
+        let x = g.add(OpKind::Input, &[], "x");
+        let w = g.add(OpKind::Weight, &[], "w");
+        let m = g.add(OpKind::MatMul, &[x, w], "proj");
+        g.add(OpKind::Output, &[m], "out");
+        let mut p = crate::exec::Program::new(g);
+        p.feed(0, xt);
+        p.feed(1, wt);
+        p
+    };
+    // the CUDA_LAUNCH_BLOCKING-style flag changes only CPU behaviour
+    let a = SysRun::new("pytorch(spin-wait)", Dispatcher::new(), Env::new().with("cudaDeviceScheduleSpin", "true"), build(xt.clone(), wt.clone()));
+    let b = SysRun::new("pytorch(yield-wait)", Dispatcher::new(), Env::new(), build(xt, wt));
+    (a, b)
+}
+
+/// c12 pytorch-76012 — non-contiguous LayerNorm input.
+fn c12(rng: &mut Prng) -> (SysRun, SysRun) {
+    let x = Tensor::randn(rng, &[128, 64, 32]);
+    let gamma = Tensor::full(&[32], 1.0);
+    let beta = Tensor::zeros(&[32]);
+    let build = |contig: bool| {
+        let mut g = Graph::new(if contig { "ln-contig" } else { "ln-strided" });
+        let xi = g.add(OpKind::Input, &[], "x");
+        let gi = g.add(OpKind::Weight, &[], "gamma");
+        let bi = g.add(OpKind::Weight, &[], "beta");
+        // upstream transpose makes the input non-contiguous
+        let p = g.add_attr1(OpKind::Permute, &[xi], "upstream.transpose", "perm", "1,0,2");
+        let ln_in = if contig {
+            g.add(OpKind::Contiguous, &[p], "fix.contiguous")
+        } else {
+            p
+        };
+        let at = attrs(&[
+            ("dispatch", "torch.nn.functional.layer_norm"),
+            ("input_contiguous", if contig { "true" } else { "false" }),
+        ]);
+        let o = g.add_attrs(OpKind::LayerNorm, &[ln_in, gi, bi], "model.layer_norm", at);
+        g.add(OpKind::Output, &[o], "out");
+        let mut prog = crate::exec::Program::new(g);
+        prog.feed(0, x.clone());
+        prog.feed(1, gamma.clone());
+        prog.feed(2, beta.clone());
+        prog
+    };
+    let a = SysRun::new("pytorch-76012", fw::torch_dispatcher(), Env::new(), build(false));
+    let b = SysRun::new("contig-first", fw::torch_dispatcher(), Env::new(), build(true));
+    (a, b)
+}
+
+/// c13 pytorch-141822 — F.cross_entropy launches pricier kernels.
+fn c13(rng: &mut Prng) -> (SysRun, SysRun) {
+    let logits = Tensor::randn(rng, &[512, 512]);
+    let targets: Vec<String> = (0..512).map(|i| (i % 512).to_string()).collect();
+    let at = attrs(&[("dispatch", "torch.nn.functional.cross_entropy")]);
+    let mut at = at;
+    at.insert("targets".into(), targets.join(","));
+    let prog = |a: Attrs| fw::build_unary_op("torch", OpKind::CrossEntropy, "loss.cross_entropy", a, &logits, &[]);
+    let a = SysRun::new("pytorch-141822", fw::torch_dispatcher(), Env::new(), prog(at.clone()));
+    let b = SysRun::new("fused-logsoftmax", fw::torch_dispatcher(), Env::new().with("fused_log_softmax", "true"), prog(at));
+    (a, b)
+}
+
+/// c14 jax-28614 — jax.scipy.signal.stft lowers to inefficient FFTs.
+fn c14(rng: &mut Prng) -> (SysRun, SysRun) {
+    let signal = Tensor::randn(rng, &[32768]);
+    let at = attrs(&[("dispatch", "jax.stft"), ("frame", "256"), ("hop", "64")]);
+    let prog = |a: Attrs| fw::build_unary_op("jax", OpKind::Stft, "signal.stft", a, &signal, &[]);
+    let a = SysRun::new("jax-28614", fw::jax_dispatcher(), Env::new(), prog(at.clone()));
+    let b = SysRun::new("rfft-path", fw::jax_dispatcher(), Env::new().with("use_rfft", "true"), prog(at));
+    (a, b)
+}
+
+/// c15 jax-9239 — redundant computations in jax.scipy.linalg.expm.
+fn c15(rng: &mut Prng) -> (SysRun, SysRun) {
+    let m = crate::tensor::ops::scale(&Tensor::randn(rng, &[160, 160]), 0.05);
+    let at = attrs(&[("dispatch", "jax.expm")]);
+    let prog = |a: Attrs| fw::build_unary_op("jax", OpKind::Expm, "linalg.expm", a, &m, &[]);
+    let a = SysRun::new("jax-9239", fw::jax_dispatcher(), Env::new(), prog(at.clone()));
+    let b = SysRun::new("hoisted-powers", fw::jax_dispatcher(), Env::new().with("reuse_powers", "true"), prog(at));
+    (a, b)
+}
+
+/// c16 tf-60772 — count_nonzero makes implicit cast copies.
+fn c16(rng: &mut Prng) -> (SysRun, SysRun) {
+    let x = Tensor::randn(rng, &[1024, 512]);
+    let at = attrs(&[("dispatch", "tf.count_nonzero")]);
+    let prog = |a: Attrs| fw::build_unary_op("tf", OpKind::CountNonzero, "metrics.count_nonzero", a, &x, &[]);
+    let a = SysRun::new("tf-60772", fw::tf_dispatcher(), Env::new(), prog(at.clone()));
+    let b = SysRun::new("direct-reduce", fw::tf_dispatcher(), Env::new().with("direct_reduce", "true"), prog(at));
+    (a, b)
+}
+
+/// All 16 known cases with metadata mirroring Table 1/2.
+pub fn all() -> Vec<Scenario> {
+    vec![
+        Scenario { id: "c1", issue: "vllm-9471", category: Category::Misconfiguration, description: "Prefill attention consumes more energy with tensor cores disabled", expect: "use_tensor_cores", paper_diff_pct: Some(12.6), expect_undetected: false, build: c1 },
+        Scenario { id: "c2", issue: "vllm-10811", category: Category::Redundant, description: "Decode attention incurs energy waste via redundant data copy", expect: "copy", paper_diff_pct: Some(1.4), expect_undetected: false, build: c2 },
+        Scenario { id: "c3", issue: "sglang-5128", category: Category::ApiMisuse, description: "Top-k implementation launches energy-inefficient APIs", expect: "sort", paper_diff_pct: Some(2.5), expect_undetected: false, build: c3 },
+        Scenario { id: "c4", issue: "megatron-543", category: Category::Redundant, description: "Redundant repeat_interleave results in energy waste", expect: "repeat_interleave", paper_diff_pct: Some(6.7), expect_undetected: false, build: c4 },
+        Scenario { id: "c5", issue: "hf-14450", category: Category::Misconfiguration, description: "Default tensor format causes energy-intensive layout transformations", expect: "fmt_copy", paper_diff_pct: Some(58.8), expect_undetected: false, build: c5 },
+        Scenario { id: "c6", issue: "hf-34570", category: Category::ApiMisuse, description: "torch.linalg.eigvals selects energy-inefficient kernels", expect: "eigvals", paper_diff_pct: Some(29.1), expect_undetected: false, build: c6 },
+        Scenario { id: "c7", issue: "diffusers-12131", category: Category::ApiMisuse, description: "Unnecessary concat/split ops consume extra memory access energy", expect: "concat", paper_diff_pct: Some(6.1), expect_undetected: false, build: c7 },
+        Scenario { id: "c8", issue: "sd-279", category: Category::Misconfiguration, description: "Linear layers fail to utilize energy-efficient tensor core instructions", expect: "allow_tf32", paper_diff_pct: Some(12.5), expect_undetected: false, build: c8 },
+        Scenario { id: "c9", issue: "pytorch-181115", category: Category::Redundant, description: "dist.Join prevents a finished GPU from going to idle mode", expect: "Join", paper_diff_pct: Some(7.0), expect_undetected: false, build: c9 },
+        Scenario { id: "c10", issue: "pytorch-141210", category: Category::ApiMisuse, description: "torch.addmm selects kernels with higher energy consumption", expect: "addmm", paper_diff_pct: Some(9.1), expect_undetected: false, build: c10 },
+        Scenario { id: "c11", issue: "pytorch-28224", category: Category::Misconfiguration, description: "Suboptimal flags cause CPU busy-waiting, preventing low-power states", expect: "", paper_diff_pct: None, expect_undetected: true, build: c11 },
+        Scenario { id: "c12", issue: "pytorch-76012", category: Category::ApiMisuse, description: "Non-contiguous inputs in LayerNorm trigger inefficient access patterns", expect: "layer_norm", paper_diff_pct: Some(16.3), expect_undetected: false, build: c12 },
+        Scenario { id: "c13", issue: "pytorch-141822", category: Category::ApiMisuse, description: "F.cross_entropy launches kernels with higher energy consumption", expect: "cross_entropy", paper_diff_pct: Some(2.6), expect_undetected: false, build: c13 },
+        Scenario { id: "c14", issue: "jax-28614", category: Category::ApiMisuse, description: "jax.scipy.signal.stft calls inefficient low-level APIs", expect: "stft", paper_diff_pct: Some(7.7), expect_undetected: false, build: c14 },
+        Scenario { id: "c15", issue: "jax-9239", category: Category::Redundant, description: "Redundant computations in jax.scipy.linalg.expm", expect: "expm", paper_diff_pct: Some(2.1), expect_undetected: false, build: c15 },
+        Scenario { id: "c16", issue: "tf-60772", category: Category::ApiMisuse, description: "count_nonzero triggers implicit energy-inefficient data copies", expect: "count_nonzero", paper_diff_pct: Some(27.8), expect_undetected: false, build: c16 },
+    ]
+}

@@ -1,0 +1,97 @@
+//! The paper's evaluation case library.
+//!
+//! [`known_cases`] reconstructs the 16 real-world energy-waste issues of
+//! Table 1 (c1–c16); [`new_cases`] the 8 previously-unknown issues of
+//! Table 3. Each scenario builds two runnable system configurations —
+//! the wasteful variant and its efficient peer — following the published
+//! issue's description, plus ground truth for scoring detection and
+//! diagnosis (Table 2).
+
+pub mod known;
+pub mod new_issues;
+
+use crate::coordinator::SysRun;
+use crate::diagnose::Category;
+use crate::util::Prng;
+
+/// A reconstructed energy-waste scenario.
+pub struct Scenario {
+    /// Paper id, e.g. `c10` or `pytorch-157334`.
+    pub id: &'static str,
+    /// Upstream issue reference, e.g. `pytorch-141210`.
+    pub issue: &'static str,
+    /// Paper's category for the case.
+    pub category: Category,
+    pub description: &'static str,
+    /// Substring that must appear in the diagnosis subject/suggestion
+    /// for the case to count as *diagnosed* (the root-cause check).
+    pub expect: &'static str,
+    /// Paper-reported end-to-end energy diff (Table 2 "Diff."), when
+    /// available; used in EXPERIMENTS.md paper-vs-measured rows.
+    pub paper_diff_pct: Option<f64>,
+    /// True for c11: the issue is CPU-side and Magneton is expected to
+    /// miss it (GPU energy unaffected).
+    pub expect_undetected: bool,
+    /// Build (wasteful, efficient) runs.
+    pub build: fn(&mut Prng) -> (SysRun, SysRun),
+}
+
+/// All 16 known cases (Table 1/2).
+pub fn known_cases() -> Vec<Scenario> {
+    known::all()
+}
+
+/// All 8 new issues (Table 3).
+pub fn new_cases() -> Vec<Scenario> {
+    new_issues::all()
+}
+
+/// Find a case by id across both libraries.
+pub fn by_id(id: &str) -> Option<Scenario> {
+    known_cases()
+        .into_iter()
+        .chain(new_cases())
+        .find(|s| s.id == id || s.issue == id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sixteen_known_eight_new() {
+        assert_eq!(known_cases().len(), 16);
+        assert_eq!(new_cases().len(), 8);
+    }
+
+    #[test]
+    fn ids_unique() {
+        let mut ids: Vec<&str> = known_cases().iter().map(|s| s.id).collect();
+        ids.extend(new_cases().iter().map(|s| s.id));
+        let n = ids.len();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), n);
+    }
+
+    #[test]
+    fn lookup_by_id() {
+        assert!(by_id("c10").is_some());
+        assert!(by_id("pytorch-157334").is_some());
+        assert!(by_id("nonexistent").is_none());
+    }
+
+    #[test]
+    fn all_cases_build_and_run() {
+        // smoke: every scenario's two sides execute and produce energy
+        let mag = crate::coordinator::Magneton::new(crate::energy::DeviceSpec::h200_sim());
+        let mut rng = Prng::new(99);
+        for s in known_cases().into_iter().chain(new_cases()) {
+            let (a, b) = (s.build)(&mut rng);
+            let ra = mag.run_side(&a);
+            let rb = mag.run_side(&b);
+            assert!(ra.total_energy_j > 0.0, "{}: A no energy", s.id);
+            assert!(rb.total_energy_j > 0.0, "{}: B no energy", s.id);
+        }
+    }
+}

@@ -1,0 +1,159 @@
+//! The 8 previously-unknown issues Magneton exposed (paper Table 3),
+//! reconstructed as differential scenarios. In the paper these were
+//! found by cross-system comparison and operator fuzzing; here the same
+//! comparisons are wired as scenarios and the fuzzing harness in
+//! `examples/conv_layout_hunt.rs` re-discovers the layout trade-off.
+
+use crate::coordinator::SysRun;
+use crate::diagnose::Category;
+use crate::dispatch::Env;
+use crate::systems::frameworks as fw;
+use crate::systems::llm;
+use crate::systems::SystemId;
+use crate::util::Prng;
+
+use super::Scenario;
+
+/// pytorch-157334 (M) — Conv2D inefficient under NCHW layout.
+fn conv_nchw(rng: &mut Prng) -> (SysRun, SysRun) {
+    let spec = fw::ConvSpec::fig5c();
+    let (x, w) = fw::conv_params(rng, spec);
+    let a = SysRun::new(
+        "pytorch(nchw)",
+        fw::torch_dispatcher(),
+        Env::new(),
+        fw::build_conv("torch", spec, fw::ConvLayout::Nchw, &x, &w, "torch.conv2d"),
+    );
+    let b = SysRun::new(
+        "pytorch(channels-last)",
+        fw::torch_dispatcher(),
+        Env::new(),
+        fw::build_conv("torch", spec, fw::ConvLayout::Nhwc, &x, &w, "torch.conv2d"),
+    );
+    (a, b)
+}
+
+/// hf-39072 (A) — inefficient memory resharding in the attention layer.
+fn hf_resharding(rng: &mut Prng) -> (SysRun, SysRun) {
+    let params = llm::TransformerParams::new(rng, llm::LlmSpec::gpt2_sim());
+    let bad = llm::LlmBuildOpts { layout_roundtrip: false, ..llm::LlmBuildOpts::hf() }; // HND + contiguous copies
+    let good = llm::LlmBuildOpts { hnd_layout: false, ..bad.clone() };
+    let env = llm::default_env(SystemId::MiniHf);
+    let a = SysRun::new("hf(HND reshard)", llm::hf_dispatcher(), env.clone(), llm::build_llm(&params, &bad));
+    let b = SysRun::new("hf(NHD direct)", llm::hf_dispatcher(), env, llm::build_llm(&params, &good));
+    (a, b)
+}
+
+/// jax-29875 (A) — cuDNN grouped-conv kernels are inefficient.
+fn jax_grouped_conv(rng: &mut Prng) -> (SysRun, SysRun) {
+    let spec = fw::ConvSpec::grouped();
+    let (x, w) = fw::conv_params(rng, spec);
+    let a = SysRun::new(
+        "jax(grouped)",
+        fw::jax_dispatcher(),
+        Env::new().with("groups", "4"),
+        fw::build_conv("jax", spec, fw::ConvLayout::Nchw, &x, &w, "jax.conv2d"),
+    );
+    let b = SysRun::new(
+        "pytorch(grouped, channels-last)",
+        fw::torch_dispatcher(),
+        Env::new(),
+        fw::build_conv("torch", spec, fw::ConvLayout::Nhwc, &x, &w, "torch.conv2d"),
+    );
+    (a, b)
+}
+
+/// pytorch-153195 (M) — default math mode (TF32 off) is inefficient.
+fn default_math_mode(rng: &mut Prng) -> (SysRun, SysRun) {
+    let spec = llm::LlmSpec { batch: 2, seq: 64, d_model: 256, n_heads: 8, d_ff: 1024, vocab: 512, layers: 1 };
+    let params = llm::TransformerParams::new(rng, spec);
+    let opts = llm::LlmBuildOpts { layout_roundtrip: false, unfused_gelu: false, use_addmm: false, ..llm::LlmBuildOpts::hf() };
+    let a = SysRun::new("pytorch(default math)", llm::hf_dispatcher(), Env::new(), llm::build_llm(&params, &opts));
+    let b = SysRun::new("pytorch(tf32)", llm::hf_dispatcher(), Env::new().with("allow_tf32", "true"), llm::build_llm(&params, &opts));
+    (a, b)
+}
+
+/// hf-38977 (R) — LM head processes redundant tokens.
+fn lm_head_redundant(rng: &mut Prng) -> (SysRun, SysRun) {
+    let params = llm::TransformerParams::new(rng, llm::LlmSpec::gpt2_sim());
+    let env = llm::default_env(SystemId::MiniHf);
+    let bad = llm::LlmBuildOpts { layout_roundtrip: false, lm_head_all_positions: true, ..llm::LlmBuildOpts::hf() };
+    let good = llm::LlmBuildOpts { lm_head_all_positions: false, ..bad.clone() };
+    let a = SysRun::new("hf(lm-head all)", llm::hf_dispatcher(), env.clone(), llm::build_llm(&params, &bad));
+    let b = SysRun::new("hf(lm-head last)", llm::hf_dispatcher(), env, llm::build_llm(&params, &good));
+    (a, b)
+}
+
+/// vllm-20174 (A) — default vLLM prefill attention can be inefficient
+/// (discovered by comparing against HF on the same GPT-2 workload).
+fn vllm_prefill(rng: &mut Prng) -> (SysRun, SysRun) {
+    let params = llm::TransformerParams::new(rng, llm::LlmSpec::gpt2_sim());
+    let a = SysRun::new(
+        "vllm(default prefill)",
+        llm::vllm_dispatcher(),
+        llm::default_env(SystemId::MiniVllm).with("use_tensor_cores", "false"),
+        llm::build_llm(&params, &llm::LlmBuildOpts::vllm()),
+    );
+    let b = SysRun::new(
+        "hf(sdpa prefill)",
+        llm::hf_dispatcher(),
+        llm::default_env(SystemId::MiniHf),
+        llm::build_llm(&params, &llm::LlmBuildOpts { layout_roundtrip: false, unfused_gelu: false, use_addmm: false, ..llm::LlmBuildOpts::hf() }),
+    );
+    (a, b)
+}
+
+/// tf-96396 (A) — TensorFlow's custom convolution kernels are
+/// inefficient (under NHWC, vs PyTorch's cuDNN).
+fn tf_custom_conv(rng: &mut Prng) -> (SysRun, SysRun) {
+    let spec = fw::ConvSpec::fig5c();
+    let (x, w) = fw::conv_params(rng, spec);
+    let a = SysRun::new(
+        "tf(custom nhwc)",
+        fw::tf_dispatcher(),
+        Env::new(),
+        fw::build_conv("tf", spec, fw::ConvLayout::Nhwc, &x, &w, "tf.conv2d"),
+    );
+    let b = SysRun::new(
+        "pytorch(cudnn nhwc)",
+        fw::torch_dispatcher(),
+        Env::new(),
+        fw::build_conv("torch", spec, fw::ConvLayout::Nhwc, &x, &w, "torch.conv2d"),
+    );
+    (a, b)
+}
+
+/// hf-39073 (M) — default GELU backend is inefficient (5 kernels vs
+/// vLLM's fused kernel; §6.3 reports 77.4 % on the operator, 12 % e2e).
+fn gelu_backend(rng: &mut Prng) -> (SysRun, SysRun) {
+    let params = llm::TransformerParams::new(rng, llm::LlmSpec::gpt2_sim());
+    let env = llm::default_env(SystemId::MiniHf);
+    let bad = llm::LlmBuildOpts { layout_roundtrip: false, ..llm::LlmBuildOpts::hf() };
+    let good = llm::LlmBuildOpts { unfused_gelu: false, ..bad.clone() };
+    let mut disp = llm::hf_dispatcher();
+    disp.register(
+        "hf.gelu",
+        crate::dispatch::Routine::direct(
+            "hf.gelu_new_fused",
+            vec![crate::trace::Frame::cpp("transformers::activations")],
+            crate::dispatch::KernelChoice::new("gelu_tanh_fused", crate::energy::ComputeUnit::Sfu),
+        ),
+    );
+    let a = SysRun::new("hf(gelu default)", llm::hf_dispatcher(), env.clone(), llm::build_llm(&params, &bad));
+    let b = SysRun::new("hf(gelu fused)", disp, env, llm::build_llm(&params, &good));
+    (a, b)
+}
+
+/// All 8 new issues with Table 3 metadata.
+pub fn all() -> Vec<Scenario> {
+    vec![
+        Scenario { id: "pytorch-157334", issue: "pytorch-157334", category: Category::Misconfiguration, description: "Conv2D is inefficient under NCHW layout", expect: "conv", paper_diff_pct: None, expect_undetected: false, build: conv_nchw },
+        Scenario { id: "hf-39072", issue: "hf-39072", category: Category::ApiMisuse, description: "Inefficient memory resharding in the attention layer", expect: "contig", paper_diff_pct: None, expect_undetected: false, build: hf_resharding },
+        Scenario { id: "jax-29875", issue: "jax-29875", category: Category::ApiMisuse, description: "cuDNN grouped-conv kernels are inefficient", expect: "conv", paper_diff_pct: None, expect_undetected: false, build: jax_grouped_conv },
+        Scenario { id: "pytorch-153195", issue: "pytorch-153195", category: Category::Misconfiguration, description: "Default math mode is inefficient", expect: "allow_tf32", paper_diff_pct: None, expect_undetected: false, build: default_math_mode },
+        Scenario { id: "hf-38977", issue: "hf-38977", category: Category::Redundant, description: "LMHead processes redundant tokens", expect: "lm_head", paper_diff_pct: None, expect_undetected: false, build: lm_head_redundant },
+        Scenario { id: "vllm-20174", issue: "vllm-20174", category: Category::ApiMisuse, description: "Default vLLM prefill attention can be inefficient", expect: "attn", paper_diff_pct: None, expect_undetected: false, build: vllm_prefill },
+        Scenario { id: "tf-96396", issue: "tf-96396", category: Category::ApiMisuse, description: "TensorFlow's custom convolution kernels are inefficient", expect: "conv", paper_diff_pct: None, expect_undetected: false, build: tf_custom_conv },
+        Scenario { id: "hf-39073", issue: "hf-39073", category: Category::Misconfiguration, description: "Default GELU backend is inefficient", expect: "gelu", paper_diff_pct: None, expect_undetected: false, build: gelu_backend },
+    ]
+}

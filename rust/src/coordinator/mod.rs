@@ -1,0 +1,178 @@
+//! End-to-end Magneton pipeline (Fig 6): run two systems on the same
+//! workload → profile energy per operator → match semantically
+//! equivalent subgraphs → detect waste → diagnose root causes.
+
+use std::time::Instant;
+
+use crate::detect::{detect, DetectConfig, Finding};
+use crate::diagnose::{diagnose, Diagnosis};
+use crate::dispatch::Env;
+use crate::energy::DeviceSpec;
+use crate::exec::{Dispatcher, ExecOptions, Executor, Program, RunArtifacts};
+use crate::fingerprint::{MomentEngine, RustMomentEngine};
+use crate::matching::{find_equivalent_tensors, recursive_match, Region};
+
+/// One system's side of a differential audit: how to run it.
+pub struct SysRun {
+    pub label: String,
+    pub dispatcher: Dispatcher,
+    pub env: Env,
+    pub prog: Program,
+}
+
+impl SysRun {
+    pub fn new(label: &str, dispatcher: Dispatcher, env: Env, prog: Program) -> SysRun {
+        SysRun { label: label.to_string(), dispatcher, env, prog }
+    }
+}
+
+/// Everything an audit produces.
+pub struct AuditOutcome {
+    pub a: RunArtifacts,
+    pub b: RunArtifacts,
+    pub eq_pairs: usize,
+    pub regions: Vec<Region>,
+    pub findings: Vec<Finding>,
+    /// Diagnoses of findings that are genuine waste (not trade-offs).
+    pub diagnoses: Vec<(Finding, Diagnosis)>,
+    /// Wall time of the matching stage, µs (Fig 9).
+    pub match_time_us: f64,
+    /// Relative end-to-end energy difference |A−B| / max.
+    pub e2e_diff_frac: f64,
+}
+
+impl AuditOutcome {
+    /// Did Magneton flag any waste?
+    pub fn detected(&self) -> bool {
+        !self.findings.is_empty()
+    }
+}
+
+/// The Magneton profiler-coordinator.
+pub struct Magneton {
+    /// Tensor-equivalence tolerance ε (paper sweeps 1e-7..0.2; optimal
+    /// band 1e-4..1.8e-2).
+    pub eps: f64,
+    pub cfg: DetectConfig,
+    pub device: DeviceSpec,
+    /// Moment engine for fingerprints (Rust fallback or PJRT kernel).
+    pub engine: Box<dyn MomentEngine + Send>,
+    /// Tracing options applied to both runs.
+    pub exec_opts: ExecOptions,
+}
+
+impl Magneton {
+    pub fn new(device: DeviceSpec) -> Magneton {
+        Magneton {
+            eps: 5e-3,
+            cfg: DetectConfig::default(),
+            device,
+            engine: Box::new(RustMomentEngine),
+            exec_opts: ExecOptions::default(),
+        }
+    }
+
+    /// Execute one side under this coordinator's device/options.
+    pub fn run_side(&self, side: &SysRun) -> RunArtifacts {
+        let mut exec = Executor::new(self.device.clone(), side.dispatcher.clone(), side.env.clone());
+        exec.opts = self.exec_opts.clone();
+        exec.run(&side.prog)
+    }
+
+    /// Full differential audit of two systems on the same workload.
+    pub fn audit(&self, a: &SysRun, b: &SysRun) -> AuditOutcome {
+        let ra = self.run_side(a);
+        let rb = self.run_side(b);
+        self.audit_runs(a, b, ra, rb)
+    }
+
+    /// Audit pre-executed runs (used by benches that time stages).
+    pub fn audit_runs(
+        &self,
+        a: &SysRun,
+        b: &SysRun,
+        ra: RunArtifacts,
+        rb: RunArtifacts,
+    ) -> AuditOutcome {
+        let t0 = Instant::now();
+        let eq = find_equivalent_tensors(&ra, &rb, self.eps, self.engine.as_ref());
+        let regions = recursive_match(&ra.graph, &rb.graph, &eq);
+        let match_time_us = t0.elapsed().as_secs_f64() * 1e6;
+
+        let findings = detect(&ra, &rb, &regions, &self.cfg);
+        let diagnoses = findings
+            .iter()
+            .filter(|f| !f.is_tradeoff)
+            .map(|f| {
+                let disp = match f.wasteful {
+                    crate::detect::Side::A => &a.dispatcher,
+                    crate::detect::Side::B => &b.dispatcher,
+                };
+                (f.clone(), diagnose(f, &ra, &rb, disp))
+            })
+            .collect();
+        let e2e_diff_frac = (ra.total_energy_j - rb.total_energy_j).abs()
+            / ra.total_energy_j.max(rb.total_energy_j).max(1e-30);
+        AuditOutcome {
+            a: ra,
+            b: rb,
+            eq_pairs: eq.len(),
+            regions,
+            findings,
+            diagnoses,
+            match_time_us,
+            e2e_diff_frac,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Graph, OpKind};
+    use crate::tensor::Tensor;
+    use crate::util::Prng;
+
+    fn mk_run(label: &str, eff: f64) -> SysRun {
+        let mut rng = Prng::new(5);
+        let x = Tensor::randn(&mut rng, &[128, 256]);
+        let w = Tensor::randn(&mut rng, &[256, 256]);
+        let mut g = Graph::new(label);
+        let xi = g.add(OpKind::Input, &[], "x");
+        let wi = g.add(OpKind::Weight, &[], "w");
+        let m = g.add(OpKind::MatMul, &[xi, wi], "proj");
+        g.add(OpKind::Output, &[m], "out");
+        let mut prog = Program::new(g);
+        prog.feed(0, x);
+        prog.feed(1, w);
+        let mut disp = Dispatcher::new();
+        disp.register(
+            "matmul",
+            crate::dispatch::Routine::direct(
+                "torch.matmul",
+                vec![],
+                crate::dispatch::KernelChoice::new("gemm", crate::energy::ComputeUnit::TensorCore)
+                    .quality(eff, 1.0, 1.0),
+            ),
+        );
+        SysRun::new(label, disp, Env::new(), prog)
+    }
+
+    #[test]
+    fn audit_detects_and_diagnoses() {
+        let mag = Magneton::new(DeviceSpec::h200_sim());
+        let out = mag.audit(&mk_run("bad", 0.6), &mk_run("good", 1.0));
+        assert!(out.eq_pairs > 0);
+        assert!(out.detected());
+        assert!(!out.diagnoses.is_empty());
+        assert!(out.match_time_us > 0.0);
+    }
+
+    #[test]
+    fn audit_of_identical_systems_is_clean() {
+        let mag = Magneton::new(DeviceSpec::h200_sim());
+        let out = mag.audit(&mk_run("x", 1.0), &mk_run("y", 1.0));
+        assert!(!out.detected());
+        assert!(out.e2e_diff_frac < 0.01);
+    }
+}

@@ -1,0 +1,258 @@
+//! Energy-waste detection over matched regions (paper §4.2 + §6.1).
+//!
+//! A matched region pair is flagged as *software energy waste* when the
+//! energy of the two semantically equivalent implementations differs by
+//! more than the detection threshold (paper default 10 %, reducible to
+//! 5 % without false positives) **and** the efficient variant is not a
+//! performance/accuracy trade-off: it must not be more than 1 % slower,
+//! and the two runs' final outputs must agree within 1 % element-wise
+//! relative difference.
+
+use crate::exec::RunArtifacts;
+use crate::matching::Region;
+
+/// Which run wastes energy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Side {
+    A,
+    B,
+}
+
+/// Detection thresholds (paper §6.1 defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct DetectConfig {
+    /// Minimum relative energy difference to flag (default 10 %).
+    pub energy_threshold: f64,
+    /// Max slowdown allowed for the efficient variant (default 1 %).
+    pub perf_tolerance: f64,
+    /// Max element-wise relative output difference (default 1 %).
+    pub output_tolerance: f64,
+}
+
+impl Default for DetectConfig {
+    fn default() -> DetectConfig {
+        DetectConfig { energy_threshold: 0.10, perf_tolerance: 0.01, output_tolerance: 0.01 }
+    }
+}
+
+/// A detected energy-waste finding.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub region: Region,
+    pub energy_a_j: f64,
+    pub energy_b_j: f64,
+    pub time_a_us: f64,
+    pub time_b_us: f64,
+    /// Relative energy difference |eA − eB| / max(eA, eB).
+    pub diff_frac: f64,
+    /// The wasteful side.
+    pub wasteful: Side,
+    /// True when the "efficient" side pays > perf_tolerance in time —
+    /// i.e. this is a performance-energy trade-off, not waste (Fig 1).
+    pub is_tradeoff: bool,
+    /// Operator labels of the wasteful region (diagnosis entry points).
+    pub labels: Vec<String>,
+}
+
+impl Finding {
+    /// Human summary line.
+    pub fn summary(&self) -> String {
+        let side = match self.wasteful {
+            Side::A => "A",
+            Side::B => "B",
+        };
+        format!(
+            "side {side} wastes {:.1}% energy over ops [{}] ({} vs {})",
+            self.diff_frac * 100.0,
+            self.labels.join(", "),
+            crate::util::table::fmt_joules(self.energy_a_j),
+            crate::util::table::fmt_joules(self.energy_b_j),
+        )
+    }
+}
+
+fn region_cost(arts: &RunArtifacts, nodes: &[usize]) -> (f64, f64) {
+    let mut e = 0.0;
+    let mut t = 0.0;
+    for r in &arts.records {
+        if nodes.contains(&r.node) {
+            e += r.energy_j;
+            t += r.time_us;
+        }
+    }
+    (e, t)
+}
+
+/// Verify the two runs compute the same thing (the paper's ≤1 %
+/// element-wise guard). Falls back to fingerprint distance when the
+/// final layouts differ in shape.
+pub fn outputs_agree(a: &RunArtifacts, b: &RunArtifacts, tol: f64) -> bool {
+    let oa = a.output();
+    let ob = b.output();
+    if oa.shape() == ob.shape() {
+        (oa.global_rel_diff(ob) as f64) <= tol
+    } else if oa.numel() == ob.numel() {
+        crate::fingerprint::fingerprint(oa).distance(&crate::fingerprint::fingerprint(ob)) <= tol
+    } else {
+        false
+    }
+}
+
+/// Detect energy waste across matched regions. Returns findings above
+/// the threshold, most wasteful first. Regions whose efficient variant
+/// trades performance for energy are annotated, not dropped — callers
+/// (and Table 2) distinguish waste from trade-offs.
+pub fn detect(
+    a: &RunArtifacts,
+    b: &RunArtifacts,
+    regions: &[Region],
+    cfg: &DetectConfig,
+) -> Vec<Finding> {
+    let output_ok = outputs_agree(a, b, cfg.output_tolerance);
+    let mut findings = Vec::new();
+    for region in regions {
+        let (ea, ta) = region_cost(a, &region.a_nodes);
+        let (eb, tb) = region_cost(b, &region.b_nodes);
+        if ea <= 0.0 && eb <= 0.0 {
+            continue;
+        }
+        let diff = (ea - eb).abs() / ea.max(eb);
+        if diff < cfg.energy_threshold || !output_ok {
+            continue;
+        }
+        let wasteful = if ea > eb { Side::A } else { Side::B };
+        // trade-off check: does the efficient side lose wall time?
+        let (t_waste, t_eff) = match wasteful {
+            Side::A => (ta, tb),
+            Side::B => (tb, ta),
+        };
+        let is_tradeoff = t_eff > t_waste * (1.0 + cfg.perf_tolerance);
+        let labels = match wasteful {
+            Side::A => region
+                .a_nodes
+                .iter()
+                .map(|&n| a.graph.nodes[n].label.clone())
+                .collect(),
+            Side::B => region
+                .b_nodes
+                .iter()
+                .map(|&n| b.graph.nodes[n].label.clone())
+                .collect(),
+        };
+        findings.push(Finding {
+            region: region.clone(),
+            energy_a_j: ea,
+            energy_b_j: eb,
+            time_a_us: ta,
+            time_b_us: tb,
+            diff_frac: diff,
+            wasteful,
+            is_tradeoff,
+            labels,
+        });
+    }
+    findings.sort_by(|x, y| {
+        let ka = x.energy_a_j.max(x.energy_b_j) * x.diff_frac;
+        let kb = y.energy_a_j.max(y.energy_b_j) * y.diff_frac;
+        kb.partial_cmp(&ka).unwrap()
+    });
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dispatch::{Env, KernelChoice, Routine, VarSource};
+    use crate::energy::{ComputeUnit, DeviceSpec};
+    use crate::exec::{Dispatcher, Executor, Program};
+    use crate::graph::{Graph, OpKind};
+    use crate::matching::match_runs;
+    use crate::tensor::Tensor;
+    use crate::trace::Frame;
+    use crate::util::Prng;
+
+    /// Two identical-math programs where system A's matmul dispatches to
+    /// an inefficient kernel (extra power at equal time).
+    fn build(eff_a: f64) -> (RunArtifacts, RunArtifacts) {
+        let mut rng = Prng::new(11);
+        // big enough that dynamic energy dominates launch/static power
+        let x = Tensor::randn(&mut rng, &[256, 256]);
+        let w = Tensor::randn(&mut rng, &[256, 256]);
+
+        let make_prog = |name: &str| {
+            let mut g = Graph::new(name);
+            let xi = g.add(OpKind::Input, &[], "x");
+            let wi = g.add(OpKind::Weight, &[], "w");
+            let m = g.add(OpKind::MatMul, &[xi, wi], "proj");
+            let gl = g.add_attr1(OpKind::Gelu, &[m], "act", "approx", "tanh");
+            g.add(OpKind::Output, &[gl], "out");
+            let mut p = Program::new(g);
+            p.feed(0, x.clone());
+            p.feed(1, w.clone());
+            p
+        };
+
+        let mut disp_a = Dispatcher::new();
+        disp_a.register(
+            "matmul",
+            Routine::branch_on(
+                "torch.matmul",
+                vec![Frame::cpp("at::cuda::blas::gemm")],
+                "at::cuda::blas::gemm",
+                "allow_tf32",
+                "true",
+                VarSource::ConfigFlag("allow_tf32".into()),
+                KernelChoice::new("tf32_gemm", ComputeUnit::TensorCore),
+                KernelChoice::new("legacy_sgemm", ComputeUnit::TensorCore).quality(eff_a, 1.0, 1.0),
+            ),
+        );
+        let a = Executor::new(DeviceSpec::h200_sim(), disp_a, Env::new()).run(&make_prog("A"));
+        let mut disp_b = Dispatcher::new();
+        disp_b.register(
+            "matmul",
+            Routine::direct(
+                "torch.matmul",
+                vec![Frame::cpp("at::cuda::blas::gemm")],
+                KernelChoice::new("tf32_gemm", ComputeUnit::TensorCore),
+            ),
+        );
+        let b = Executor::new(DeviceSpec::h200_sim(), disp_b, Env::new()).run(&make_prog("B"));
+        (a, b)
+    }
+
+    #[test]
+    fn detects_inefficient_kernel_region() {
+        let (a, b) = build(0.55);
+        let (_eq, regions) = match_runs(&a, &b, 1e-3);
+        let findings = detect(&a, &b, &regions, &DetectConfig::default());
+        assert!(!findings.is_empty(), "no findings");
+        let top = &findings[0];
+        assert_eq!(top.wasteful, Side::A);
+        assert!(top.diff_frac > 0.10);
+        assert!(!top.is_tradeoff);
+        assert!(top.labels.iter().any(|l| l == "proj"), "{:?}", top.labels);
+    }
+
+    #[test]
+    fn no_findings_when_systems_equal() {
+        let (a, b) = build(1.0);
+        let (_eq, regions) = match_runs(&a, &b, 1e-3);
+        let findings = detect(&a, &b, &regions, &DetectConfig::default());
+        assert!(findings.is_empty(), "{:?}", findings.iter().map(|f| f.summary()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn threshold_controls_sensitivity() {
+        let (a, b) = build(0.93); // ~7% extra energy on the matmul
+        let (_eq, regions) = match_runs(&a, &b, 1e-3);
+        let strict = detect(&a, &b, &regions, &DetectConfig { energy_threshold: 0.10, ..Default::default() });
+        let loose = detect(&a, &b, &regions, &DetectConfig { energy_threshold: 0.03, ..Default::default() });
+        assert!(strict.len() < loose.len());
+    }
+
+    #[test]
+    fn outputs_agree_guard() {
+        let (a, b) = build(0.55);
+        assert!(outputs_agree(&a, &b, 0.01));
+    }
+}

@@ -1,0 +1,327 @@
+//! Root-cause diagnosis (paper §4.3, Algorithm 2).
+//!
+//! Given a detected finding (a matched region pair with divergent
+//! energy), diagnosis explains *why* the wasteful implementation burns
+//! more energy. Three mutually exclusive outcomes, mirroring the
+//! paper's taxonomy:
+//!
+//! * **Redundant operation** — the wasteful region launches kernels the
+//!   efficient region has no counterpart for (extra copies, barriers,
+//!   repeat_interleave). Reported with the offending op labels.
+//! * **API misuse** — the two regions call different framework APIs to
+//!   compute the same tensors; the efficient side's API combination is
+//!   the suggested fix.
+//! * **Misconfiguration** — both sides call the *same* API but launch
+//!   different kernels. FINDDEVIATIONPOINT walks the two kernel call
+//!   paths to the last common frame, FINDKEYVAR re-runs the dispatch
+//!   routine with basic-block tracing and diffs the traces to extract
+//!   the branch variable, and backward data-flow maps the variable to
+//!   its ultimate source (a config flag or API argument).
+
+use std::collections::BTreeSet;
+
+use crate::detect::{Finding, Side};
+use crate::dispatch::VarSource;
+use crate::exec::{Dispatcher, KernelRecord, RunArtifacts};
+use crate::trace::Frame;
+
+/// Diagnosis category (paper Table 1: Misconfiguration / API misuse /
+/// Redundant).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Category {
+    Misconfiguration,
+    ApiMisuse,
+    Redundant,
+}
+
+impl Category {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Category::Misconfiguration => "Misconfiguration",
+            Category::ApiMisuse => "API misuse",
+            Category::Redundant => "Redundant",
+        }
+    }
+}
+
+/// A completed diagnosis.
+#[derive(Clone, Debug)]
+pub struct Diagnosis {
+    pub category: Category,
+    /// The code/config entity the developer should change.
+    pub subject: String,
+    /// Last common function before the call paths diverge.
+    pub deviation_func: Option<String>,
+    /// Branch variable extracted from the BB-trace diff.
+    pub key_var: Option<String>,
+    /// Ultimate source of the key variable (backward data-flow).
+    pub source: Option<VarSource>,
+    /// Actionable suggestion derived from the efficient implementation.
+    pub suggestion: String,
+}
+
+impl Diagnosis {
+    pub fn render(&self) -> String {
+        let mut s = format!("[{}] {}", self.category.name(), self.subject);
+        if let Some(f) = &self.deviation_func {
+            s.push_str(&format!("\n  deviation point: {f}"));
+        }
+        if let Some(v) = &self.key_var {
+            s.push_str(&format!("\n  key variable:    {v}"));
+        }
+        if let Some(src) = &self.source {
+            s.push_str(&format!("\n  root cause:      {}", src.describe()));
+        }
+        s.push_str(&format!("\n  suggestion:      {}", self.suggestion));
+        s
+    }
+}
+
+/// FINDDEVIATIONPOINT (Algorithm 2): first index where two call paths
+/// diverge; returns the last common frame.
+pub fn find_deviation_point(path1: &[Frame], path2: &[Frame]) -> Option<Frame> {
+    let n = path1.len().min(path2.len());
+    for i in 0..n {
+        if path1[i] != path2[i] {
+            return if i == 0 { None } else { Some(path1[i - 1].clone()) };
+        }
+    }
+    // one path is a prefix of the other: deviation after the shared part
+    if path1.len() != path2.len() && n > 0 {
+        Some(path1[n - 1].clone())
+    } else {
+        None
+    }
+}
+
+/// FINDKEYVAR (Algorithm 2): diff the two basic-block traces, locate the
+/// last common block, and extract the control variable of its
+/// terminator from the owning routine.
+pub fn find_key_var(
+    routine: &crate::dispatch::Routine,
+    trace1: &[(String, usize)],
+    trace2: &[(String, usize)],
+) -> Option<String> {
+    let n = trace1.len().min(trace2.len());
+    let mut last_common: Option<usize> = None;
+    for i in 0..n {
+        if trace1[i] != trace2[i] {
+            break;
+        }
+        last_common = Some(trace1[i].1);
+    }
+    let bb = last_common?;
+    routine.control_var(bb).map(str::to_string)
+}
+
+fn kernels_of<'a>(arts: &'a RunArtifacts, nodes: &[usize]) -> Vec<&'a KernelRecord> {
+    arts.records.iter().filter(|r| nodes.contains(&r.node)).collect()
+}
+
+/// Diagnose one finding. `disp_waste` is the dispatcher of the wasteful
+/// system (needed to re-run routines with instrumentation — we replay
+/// the dispatch to recover the routine the kernel came from).
+pub fn diagnose(
+    finding: &Finding,
+    a: &RunArtifacts,
+    b: &RunArtifacts,
+    disp_waste: &Dispatcher,
+) -> Diagnosis {
+    let (waste_arts, eff_arts, waste_nodes, eff_nodes) = match finding.wasteful {
+        Side::A => (a, b, &finding.region.a_nodes, &finding.region.b_nodes),
+        Side::B => (b, a, &finding.region.b_nodes, &finding.region.a_nodes),
+    };
+    let waste_kernels = kernels_of(waste_arts, waste_nodes);
+    let eff_kernels = kernels_of(eff_arts, eff_nodes);
+
+    // ---- Case 1: redundant operations -------------------------------
+    // The wasteful side launches ops whose API has no counterpart in
+    // the efficient side.
+    let eff_apis: BTreeSet<&str> = eff_kernels.iter().map(|k| k.api.as_str()).collect();
+    let extra: Vec<&KernelRecord> = waste_kernels
+        .iter()
+        .filter(|k| !eff_apis.contains(k.api.as_str()))
+        .copied()
+        .collect();
+    if !extra.is_empty() && waste_kernels.len() > eff_kernels.len() {
+        let subjects: Vec<String> = extra
+            .iter()
+            .map(|k| format!("{} at `{}`", k.api, k.label))
+            .collect();
+        return Diagnosis {
+            category: Category::Redundant,
+            subject: subjects.join(", "),
+            deviation_func: None,
+            key_var: None,
+            source: None,
+            suggestion: format!(
+                "remove the redundant operation(s); the peer system computes the same \
+                 tensors with [{}]",
+                eff_kernels
+                    .iter()
+                    .map(|k| k.api.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ),
+        };
+    }
+
+    // Pair kernels positionally and find the first divergent pair.
+    let divergent = waste_kernels
+        .iter()
+        .zip(eff_kernels.iter())
+        .find(|(w, e)| w.kernel != e.kernel);
+
+    if let Some((w, e)) = divergent {
+        if w.api == e.api {
+            // ---- Case 2: misconfiguration — same API, different kernel
+            let dev = find_deviation_point(&w.call_path, &e.call_path);
+            let routine = disp_waste.routine_for(w.op, &w.dispatch_key);
+            // Re-run with instrumentation is implicit: bb traces are
+            // recorded; diff them to find the key variable.
+            let key = find_key_var(&routine, &w.bb_trace, &e.bb_trace);
+            let source = key.as_deref().and_then(|k| routine.source_of(k).cloned());
+            let suggestion = match &source {
+                Some(s) => format!(
+                    "set {} so `{}` dispatches to `{}` (as the efficient system does)",
+                    s.describe(),
+                    w.api,
+                    e.kernel
+                ),
+                None => format!("make `{}` dispatch to `{}`", w.api, e.kernel),
+            };
+            return Diagnosis {
+                category: Category::Misconfiguration,
+                subject: format!("`{}` selects kernel `{}` instead of `{}`", w.api, w.kernel, e.kernel),
+                deviation_func: dev.map(|f| f.func),
+                key_var: key,
+                source,
+                suggestion,
+            };
+        }
+        // ---- Case 3: API misuse — different APIs for the same task
+        let dev = find_deviation_point(&w.call_path, &e.call_path);
+        return Diagnosis {
+            category: Category::ApiMisuse,
+            subject: format!(
+                "`{}` (kernel `{}`) is energy-inefficient for this task",
+                w.api, w.kernel
+            ),
+            deviation_func: dev.map(|f| f.func),
+            key_var: None,
+            source: None,
+            suggestion: format!(
+                "replace with the peer implementation: [{}]",
+                eff_kernels.iter().map(|k| k.api.as_str()).collect::<Vec<_>>().join(", ")
+            ),
+        };
+    }
+
+    // Same kernels on both sides but different energy: count mismatch
+    // (one side launches the same API more times) is redundancy.
+    if waste_kernels.len() != eff_kernels.len() {
+        return Diagnosis {
+            category: Category::Redundant,
+            subject: format!(
+                "{} launches {} kernels where the peer launches {}",
+                waste_arts.graph.name,
+                waste_kernels.len(),
+                eff_kernels.len()
+            ),
+            deviation_func: None,
+            key_var: None,
+            source: None,
+            suggestion: "eliminate the extra kernel launches".into(),
+        };
+    }
+
+    // Fallback: identical structure — attribute to the biggest gap.
+    let worst = waste_kernels
+        .iter()
+        .zip(eff_kernels.iter())
+        .max_by(|(w1, e1), (w2, e2)| {
+            (w1.energy_j - e1.energy_j)
+                .partial_cmp(&(w2.energy_j - e2.energy_j))
+                .unwrap()
+        });
+    let subject = match worst {
+        Some((w, e)) => format!(
+            "`{}` consumes {} vs peer {}",
+            w.api,
+            crate::util::table::fmt_joules(w.energy_j),
+            crate::util::table::fmt_joules(e.energy_j)
+        ),
+        None => "no kernels in region".into(),
+    };
+    Diagnosis {
+        category: Category::ApiMisuse,
+        subject,
+        deviation_func: None,
+        key_var: None,
+        source: None,
+        suggestion: "profile the kernel parameters; same kernels draw different energy".into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::Frame;
+
+    #[test]
+    fn deviation_point_basic() {
+        let p1 = vec![Frame::py("api"), Frame::cpp("dispatch"), Frame::cuda("k1")];
+        let p2 = vec![Frame::py("api"), Frame::cpp("dispatch"), Frame::cuda("k2")];
+        let dev = find_deviation_point(&p1, &p2).unwrap();
+        assert_eq!(dev, Frame::cpp("dispatch"));
+    }
+
+    #[test]
+    fn deviation_point_at_root() {
+        let p1 = vec![Frame::py("api_a")];
+        let p2 = vec![Frame::py("api_b")];
+        assert!(find_deviation_point(&p1, &p2).is_none());
+    }
+
+    #[test]
+    fn deviation_point_prefix_paths() {
+        let p1 = vec![Frame::py("a"), Frame::cpp("b")];
+        let p2 = vec![Frame::py("a"), Frame::cpp("b"), Frame::cuda("k")];
+        let dev = find_deviation_point(&p1, &p2).unwrap();
+        assert_eq!(dev, Frame::cpp("b"));
+    }
+
+    #[test]
+    fn key_var_from_bb_divergence() {
+        use crate::dispatch::{KernelChoice, Routine, VarSource};
+        use crate::energy::ComputeUnit;
+        let r = Routine::branch_on(
+            "torch.matmul",
+            vec![],
+            "gemm",
+            "allow_tf32",
+            "true",
+            VarSource::ConfigFlag("torch.backends.cuda.matmul.allow_tf32".into()),
+            KernelChoice::new("tf32", ComputeUnit::TensorCore),
+            KernelChoice::new("fp32", ComputeUnit::CudaCore),
+        );
+        let t1 = r.run(&crate::dispatch::Env::new().with("allow_tf32", "true")).bb_trace;
+        let t2 = r.run(&crate::dispatch::Env::new()).bb_trace;
+        let key = find_key_var(&r, &t1, &t2).unwrap();
+        assert_eq!(key, "allow_tf32");
+        assert_eq!(
+            r.source_of(&key).unwrap().describe(),
+            "configuration flag `torch.backends.cuda.matmul.allow_tf32`"
+        );
+    }
+
+    #[test]
+    fn identical_traces_yield_no_key_var() {
+        use crate::dispatch::{KernelChoice, Routine};
+        use crate::energy::ComputeUnit;
+        let r = Routine::direct("api", vec![], KernelChoice::new("k", ComputeUnit::CudaCore));
+        let t = r.run(&crate::dispatch::Env::new()).bb_trace;
+        // last common block is the Launch block, which has no control var
+        assert!(find_key_var(&r, &t, &t).is_none());
+    }
+}

@@ -1,0 +1,363 @@
+//! Miniature framework-dispatch VM.
+//!
+//! Real ML frameworks choose CUDA kernels deep inside C++ dispatch code
+//! that branches on configuration flags (`allow_tf32`), API arguments
+//! (`use_tensor_cores`), and input properties (contiguity, layout). The
+//! paper's Algorithm 2 diagnoses energy waste by instrumenting exactly
+//! those functions with basic-block tracing, re-running both
+//! applications, and extracting the control variable at the first
+//! basic-block divergence.
+//!
+//! This module is the substrate that makes that algorithm executable
+//! here: each framework API has a [`Routine`] — a tiny CFG of basic
+//! blocks whose terminators branch on an environment (config flags ∪
+//! operator attributes) and finally launch a [`KernelChoice`]. Running a
+//! routine yields both the chosen kernel and the exact BB trace, and a
+//! provenance table maps every branch variable back to its ultimate
+//! source (the configuration parameter or API argument a developer can
+//! change) — the paper's backward data-flow step.
+
+use std::collections::BTreeMap;
+
+use crate::energy::ComputeUnit;
+use crate::trace::Frame;
+
+/// Runtime environment a routine branches on: config flags merged with
+/// per-op attributes (attributes win).
+#[derive(Clone, Debug, Default)]
+pub struct Env {
+    pub values: BTreeMap<String, String>,
+}
+
+impl Env {
+    pub fn new() -> Env {
+        Env::default()
+    }
+
+    pub fn set(&mut self, k: &str, v: &str) -> &mut Self {
+        self.values.insert(k.to_string(), v.to_string());
+        self
+    }
+
+    pub fn with(mut self, k: &str, v: &str) -> Env {
+        self.set(k, v);
+        self
+    }
+
+    /// Read a variable; absent variables read as "" (false-y).
+    pub fn get(&self, k: &str) -> &str {
+        self.values.get(k).map(String::as_str).unwrap_or("")
+    }
+
+    /// Merge `other` on top of `self`.
+    pub fn merged(&self, other: &BTreeMap<String, String>) -> Env {
+        let mut v = self.values.clone();
+        for (k, val) in other {
+            v.insert(k.clone(), val.clone());
+        }
+        Env { values: v }
+    }
+}
+
+/// The kernel a routine ultimately launches, with its cost-relevant
+/// variant parameters (consumed by the executor's cost model).
+#[derive(Clone, Debug)]
+pub struct KernelChoice {
+    /// CUDA-kernel-style name, e.g. `ampere_sgemm_tf32_128x64`.
+    pub kernel: String,
+    pub unit: ComputeUnit,
+    /// Implementation quality in (0,1]: <1 draws extra power.
+    pub efficiency: f64,
+    /// Wall-time multiplier (strided access, low occupancy).
+    pub time_mult: f64,
+    /// Extra HBM traffic multiplier (implicit copies, bad layouts).
+    pub bytes_mult: f64,
+}
+
+impl KernelChoice {
+    pub fn new(kernel: &str, unit: ComputeUnit) -> KernelChoice {
+        KernelChoice {
+            kernel: kernel.to_string(),
+            unit,
+            efficiency: 1.0,
+            time_mult: 1.0,
+            bytes_mult: 1.0,
+        }
+    }
+
+    pub fn quality(mut self, efficiency: f64, time_mult: f64, bytes_mult: f64) -> KernelChoice {
+        self.efficiency = efficiency;
+        self.time_mult = time_mult;
+        self.bytes_mult = bytes_mult;
+        self
+    }
+}
+
+/// Basic-block terminator.
+#[derive(Clone, Debug)]
+pub enum Term {
+    /// Branch on `env[var] == eq`.
+    CondBranch { var: String, eq: String, then_bb: usize, else_bb: usize },
+    /// Multi-way branch on `env[var]`.
+    Switch { var: String, arms: Vec<(String, usize)>, default_bb: usize },
+    /// Unconditional jump.
+    Jump { bb: usize },
+    /// Launch `choices[idx]` and return.
+    Launch { idx: usize },
+}
+
+/// One basic block inside a routine.
+#[derive(Clone, Debug)]
+pub struct Block {
+    /// Function the block belongs to (gives Algorithm 2 its frames).
+    pub func: String,
+    pub term: Term,
+}
+
+/// Where a branch variable ultimately comes from.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum VarSource {
+    /// Global configuration flag, e.g. `torch.backends.cuda.matmul.allow_tf32`.
+    ConfigFlag(String),
+    /// Argument of the calling API, e.g. `use_tensor_cores=` of FlashInfer.
+    ApiArgument(String),
+    /// Property of the input tensor, e.g. `contiguous layout`.
+    InputProperty(String),
+}
+
+impl VarSource {
+    pub fn describe(&self) -> String {
+        match self {
+            VarSource::ConfigFlag(s) => format!("configuration flag `{s}`"),
+            VarSource::ApiArgument(s) => format!("API argument `{s}`"),
+            VarSource::InputProperty(s) => format!("input property `{s}`"),
+        }
+    }
+}
+
+/// A dispatch routine: the CFG a framework runs between the public API
+/// and the kernel launch.
+#[derive(Clone, Debug)]
+pub struct Routine {
+    /// Public API name, e.g. `torch.matmul`.
+    pub api: String,
+    /// C++-side frames between the API and the launch (inflection-point
+    /// context for Algorithm 2).
+    pub frames: Vec<Frame>,
+    pub blocks: Vec<Block>,
+    pub choices: Vec<KernelChoice>,
+    /// Backward-dataflow table: branch var → ultimate source.
+    pub provenance: BTreeMap<String, VarSource>,
+}
+
+/// Result of running a routine under an environment.
+#[derive(Clone, Debug)]
+pub struct Outcome {
+    pub choice: KernelChoice,
+    /// `(func, block_index)` sequence — the basic-block trace Algorithm 2
+    /// diffs after instrumentation.
+    pub bb_trace: Vec<(String, usize)>,
+    /// Full call path: API frame + routine frames + launching function.
+    pub call_path: Vec<Frame>,
+}
+
+impl Routine {
+    /// Single-block routine that always launches `choice`.
+    pub fn direct(api: &str, frames: Vec<Frame>, choice: KernelChoice) -> Routine {
+        Routine {
+            api: api.to_string(),
+            frames,
+            blocks: vec![Block { func: api.to_string(), term: Term::Launch { idx: 0 } }],
+            choices: vec![choice],
+            provenance: BTreeMap::new(),
+        }
+    }
+
+    /// Two-way routine: branch once on `var == eq` in function `func`.
+    pub fn branch_on(
+        api: &str,
+        frames: Vec<Frame>,
+        func: &str,
+        var: &str,
+        eq: &str,
+        source: VarSource,
+        if_true: KernelChoice,
+        if_false: KernelChoice,
+    ) -> Routine {
+        let mut provenance = BTreeMap::new();
+        provenance.insert(var.to_string(), source);
+        Routine {
+            api: api.to_string(),
+            frames,
+            blocks: vec![
+                Block {
+                    func: func.to_string(),
+                    term: Term::CondBranch {
+                        var: var.to_string(),
+                        eq: eq.to_string(),
+                        then_bb: 1,
+                        else_bb: 2,
+                    },
+                },
+                Block { func: func.to_string(), term: Term::Launch { idx: 0 } },
+                Block { func: func.to_string(), term: Term::Launch { idx: 1 } },
+            ],
+            choices: vec![if_true, if_false],
+            provenance,
+        }
+    }
+
+    /// Execute under `env`, producing the kernel choice and BB trace.
+    pub fn run(&self, env: &Env) -> Outcome {
+        let mut bb = 0usize;
+        let mut bb_trace = Vec::new();
+        let mut guard = 0usize;
+        loop {
+            guard += 1;
+            assert!(guard <= 10_000, "dispatch routine `{}` does not terminate", self.api);
+            let block = &self.blocks[bb];
+            bb_trace.push((block.func.clone(), bb));
+            match &block.term {
+                Term::CondBranch { var, eq, then_bb, else_bb } => {
+                    bb = if env.get(var) == eq { *then_bb } else { *else_bb };
+                }
+                Term::Switch { var, arms, default_bb } => {
+                    let v = env.get(var);
+                    bb = arms
+                        .iter()
+                        .find(|(val, _)| val == v)
+                        .map(|(_, b)| *b)
+                        .unwrap_or(*default_bb);
+                }
+                Term::Jump { bb: nxt } => bb = *nxt,
+                Term::Launch { idx } => {
+                    let choice = self.choices[*idx].clone();
+                    let mut call_path = vec![Frame::py(&self.api)];
+                    call_path.extend(self.frames.clone());
+                    call_path.push(Frame::cpp(&block.func));
+                    return Outcome { choice, bb_trace, call_path };
+                }
+            }
+        }
+    }
+
+    /// Variable read by the terminator of a given block (the paper's
+    /// `ExtractControlVariable`).
+    pub fn control_var(&self, bb: usize) -> Option<&str> {
+        match &self.blocks[bb].term {
+            Term::CondBranch { var, .. } | Term::Switch { var, .. } => Some(var),
+            _ => None,
+        }
+    }
+
+    /// Backward data-flow: the ultimate source of a branch variable.
+    pub fn source_of(&self, var: &str) -> Option<&VarSource> {
+        self.provenance.get(var)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tf32_routine() -> Routine {
+        Routine::branch_on(
+            "torch.matmul",
+            vec![Frame::cpp("at::native::matmul"), Frame::cpp("at::cuda::blas::gemm")],
+            "at::cuda::blas::gemm",
+            "allow_tf32",
+            "true",
+            VarSource::ConfigFlag("torch.backends.cuda.matmul.allow_tf32".into()),
+            KernelChoice::new("ampere_tf32_s1688gemm", ComputeUnit::TensorCore),
+            KernelChoice::new("ampere_sgemm_f32", ComputeUnit::CudaCore),
+        )
+    }
+
+    #[test]
+    fn branch_selects_kernel_by_config() {
+        let r = tf32_routine();
+        let on = r.run(&Env::new().with("allow_tf32", "true"));
+        assert_eq!(on.choice.kernel, "ampere_tf32_s1688gemm");
+        let off = r.run(&Env::new());
+        assert_eq!(off.choice.kernel, "ampere_sgemm_f32");
+    }
+
+    #[test]
+    fn bb_traces_diverge_at_branch() {
+        let r = tf32_routine();
+        let a = r.run(&Env::new().with("allow_tf32", "true")).bb_trace;
+        let b = r.run(&Env::new()).bb_trace;
+        assert_eq!(a[0], b[0]); // shared entry block
+        assert_ne!(a[1], b[1]); // divergence right after the branch
+    }
+
+    #[test]
+    fn control_var_and_provenance() {
+        let r = tf32_routine();
+        assert_eq!(r.control_var(0), Some("allow_tf32"));
+        let src = r.source_of("allow_tf32").unwrap();
+        assert_eq!(
+            src.describe(),
+            "configuration flag `torch.backends.cuda.matmul.allow_tf32`"
+        );
+    }
+
+    #[test]
+    fn call_path_layers() {
+        let r = tf32_routine();
+        let o = r.run(&Env::new());
+        assert_eq!(o.call_path[0], Frame::py("torch.matmul"));
+        assert!(o.call_path.len() >= 3);
+    }
+
+    #[test]
+    fn switch_routine() {
+        let mut prov = BTreeMap::new();
+        prov.insert("layout".to_string(), VarSource::InputProperty("memory_format".into()));
+        let r = Routine {
+            api: "conv2d".into(),
+            frames: vec![],
+            blocks: vec![
+                Block {
+                    func: "cudnn_dispatch".into(),
+                    term: Term::Switch {
+                        var: "layout".into(),
+                        arms: vec![("nchw".into(), 1), ("nhwc".into(), 2)],
+                        default_bb: 1,
+                    },
+                },
+                Block { func: "cudnn_dispatch".into(), term: Term::Launch { idx: 0 } },
+                Block { func: "cudnn_dispatch".into(), term: Term::Launch { idx: 1 } },
+            ],
+            choices: vec![
+                KernelChoice::new("implicit_gemm_nchw", ComputeUnit::TensorCore),
+                KernelChoice::new("implicit_gemm_nhwc", ComputeUnit::TensorCore),
+            ],
+            provenance: prov,
+        };
+        assert_eq!(r.run(&Env::new().with("layout", "nhwc")).choice.kernel, "implicit_gemm_nhwc");
+        assert_eq!(r.run(&Env::new().with("layout", "weird")).choice.kernel, "implicit_gemm_nchw");
+    }
+
+    #[test]
+    fn env_merge_attrs_override() {
+        let base = Env::new().with("a", "1").with("b", "2");
+        let mut attrs = BTreeMap::new();
+        attrs.insert("b".to_string(), "9".to_string());
+        let m = base.merged(&attrs);
+        assert_eq!(m.get("a"), "1");
+        assert_eq!(m.get("b"), "9");
+    }
+
+    #[test]
+    fn direct_routine_trivial_trace() {
+        let r = Routine::direct(
+            "jax.lax.add",
+            vec![],
+            KernelChoice::new("fusion_add", ComputeUnit::CudaCore),
+        );
+        let o = r.run(&Env::new());
+        assert_eq!(o.bb_trace.len(), 1);
+        assert_eq!(o.choice.kernel, "fusion_add");
+    }
+}

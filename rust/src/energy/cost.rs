@@ -1,0 +1,235 @@
+//! Kernel cost model: descriptor → (time, energy, average power).
+
+use super::device::DeviceSpec;
+
+/// Which execution unit a kernel's math runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ComputeUnit {
+    /// Tensor cores (TF32/BF16 matmul).
+    TensorCore,
+    /// CUDA cores (FP32 FMA).
+    CudaCore,
+    /// Special-function units (exp, tanh, rsqrt-heavy kernels).
+    Sfu,
+    /// Pure data movement (copies, layout changes).
+    Mem,
+    /// Interconnect collective (all-reduce).
+    Link,
+    /// No work: occupies time at a fixed power (barrier spin / idle).
+    Fixed,
+}
+
+/// A launched kernel, described in hardware-neutral terms. Produced by
+/// the executor (shapes → flops/bytes) plus the dispatcher (variant
+/// multipliers); consumed by [`KernelDesc::cost`].
+#[derive(Clone, Debug)]
+pub struct KernelDesc {
+    /// CUDA-kernel-style name, e.g. `ampere_sgemm_128x64_tn`.
+    pub name: String,
+    pub unit: ComputeUnit,
+    /// Floating-point operations.
+    pub flops: f64,
+    /// Bytes moved to/from HBM (or over the link for collectives).
+    pub bytes: f64,
+    /// Implementation quality in (0, 1]: fraction of the energy-optimal
+    /// implementation; the dispatcher lowers this for kernels the paper
+    /// calls out as energy-inefficient (extra power at equal speed).
+    pub efficiency: f64,
+    /// Wall-time multiplier (strided access, low occupancy).
+    pub time_mult: f64,
+    /// Fixed duration for `ComputeUnit::Fixed` kernels, microseconds.
+    pub fixed_time_us: f64,
+    /// Power for `ComputeUnit::Fixed` kernels, Watts (e.g. busy-wait spin
+    /// near base power vs idle at the P-state floor).
+    pub fixed_power_w: f64,
+}
+
+impl KernelDesc {
+    /// Compute kernel with default quality.
+    pub fn compute(name: &str, unit: ComputeUnit, flops: f64, bytes: f64) -> KernelDesc {
+        KernelDesc {
+            name: name.to_string(),
+            unit,
+            flops,
+            bytes,
+            efficiency: 1.0,
+            time_mult: 1.0,
+            fixed_time_us: 0.0,
+            fixed_power_w: 0.0,
+        }
+    }
+
+    /// Fixed-time kernel (barrier spin, idle wait).
+    pub fn fixed(name: &str, time_us: f64, power_w: f64) -> KernelDesc {
+        KernelDesc {
+            name: name.to_string(),
+            unit: ComputeUnit::Fixed,
+            flops: 0.0,
+            bytes: 0.0,
+            efficiency: 1.0,
+            time_mult: 1.0,
+            fixed_time_us: time_us,
+            fixed_power_w: power_w,
+        }
+    }
+
+    /// Apply a dispatch-variant adjustment (builder style).
+    pub fn with_quality(mut self, efficiency: f64, time_mult: f64) -> KernelDesc {
+        assert!(efficiency > 0.0 && efficiency <= 1.0);
+        assert!(time_mult >= 1.0);
+        self.efficiency = efficiency;
+        self.time_mult = time_mult;
+        self
+    }
+
+    /// Evaluate against a device: roofline time + energy accounting.
+    pub fn cost(&self, dev: &DeviceSpec) -> KernelCost {
+        if self.unit == ComputeUnit::Fixed {
+            let e = self.fixed_power_w * self.fixed_time_us * 1e-6;
+            return KernelCost {
+                time_us: self.fixed_time_us,
+                energy_j: e,
+                avg_power_w: self.fixed_power_w,
+            };
+        }
+        let (tflops, pj_flop) = match self.unit {
+            ComputeUnit::TensorCore => (dev.tc_tflops, dev.tc_pj_per_flop),
+            ComputeUnit::CudaCore => (dev.cc_tflops, dev.cc_pj_per_flop),
+            ComputeUnit::Sfu => (dev.sfu_tflops, dev.sfu_pj_per_flop),
+            ComputeUnit::Mem => (f64::INFINITY, 0.0),
+            ComputeUnit::Link => (f64::INFINITY, 0.0),
+            ComputeUnit::Fixed => unreachable!(),
+        };
+        let (gbps, pj_byte) = match self.unit {
+            ComputeUnit::Link => (dev.nvlink_gbps, dev.nvlink_pj_per_byte),
+            _ => (dev.hbm_gbps, dev.hbm_pj_per_byte),
+        };
+        let t_compute_us = self.flops / (tflops * 1e12) * 1e6;
+        let t_mem_us = self.bytes / (gbps * 1e9) * 1e6;
+        let time_us = (t_compute_us.max(t_mem_us) + dev.launch_overhead_us) * self.time_mult;
+        // dynamic energy, inflated by implementation inefficiency
+        let e_dyn = (self.flops * pj_flop + self.bytes * pj_byte) * 1e-12 / self.efficiency;
+        let e_static = dev.base_w * time_us * 1e-6;
+        let energy_j = e_dyn + e_static;
+        let avg_power_w = (energy_j / (time_us * 1e-6)).min(dev.max_w);
+        // clamp energy to the power cap (thermally limited kernels)
+        let energy_j = energy_j.min(avg_power_w * time_us * 1e-6);
+        KernelCost { time_us, energy_j, avg_power_w }
+    }
+}
+
+/// Evaluated cost of one kernel launch.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct KernelCost {
+    pub time_us: f64,
+    pub energy_j: f64,
+    pub avg_power_w: f64,
+}
+
+/// FLOP/byte helpers used by the executor.
+pub mod counts {
+    /// Matmul `[b, m, k] x [k, n]`: FLOPs and HBM bytes (f32).
+    pub fn matmul(b: usize, m: usize, k: usize, n: usize) -> (f64, f64) {
+        let flops = 2.0 * b as f64 * m as f64 * k as f64 * n as f64;
+        let bytes = 4.0 * b as f64 * (m as f64 * k as f64 + k as f64 * n as f64 + m as f64 * n as f64);
+        (flops, bytes)
+    }
+
+    /// Elementwise kernel over n elements with `reads` input streams.
+    pub fn elementwise(n: usize, reads: usize, flops_per_elem: f64) -> (f64, f64) {
+        (flops_per_elem * n as f64, 4.0 * n as f64 * (reads as f64 + 1.0))
+    }
+
+    /// Direct conv NCHW: flops and bytes.
+    pub fn conv2d(n: usize, c: usize, h: usize, w: usize, oc: usize, kh: usize, kw: usize, groups: usize) -> (f64, f64) {
+        let oh = h as f64;
+        let ow = w as f64; // same-padding assumption for counting
+        let flops = 2.0 * n as f64 * oc as f64 * oh * ow * (c / groups) as f64 * kh as f64 * kw as f64;
+        let bytes = 4.0
+            * (n as f64 * c as f64 * h as f64 * w as f64
+                + oc as f64 * (c / groups) as f64 * kh as f64 * kw as f64
+                + n as f64 * oc as f64 * oh * ow);
+        (flops, bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::device::DeviceSpec;
+
+    fn dev() -> DeviceSpec {
+        DeviceSpec::h200_sim()
+    }
+
+    #[test]
+    fn bigger_kernels_cost_more() {
+        let (f1, b1) = counts::matmul(1, 128, 128, 128);
+        let (f2, b2) = counts::matmul(1, 256, 256, 256);
+        let c1 = KernelDesc::compute("mm1", ComputeUnit::TensorCore, f1, b1).cost(&dev());
+        let c2 = KernelDesc::compute("mm2", ComputeUnit::TensorCore, f2, b2).cost(&dev());
+        assert!(c2.time_us > c1.time_us);
+        assert!(c2.energy_j > c1.energy_j);
+    }
+
+    #[test]
+    fn tensor_core_beats_cuda_core_on_energy_and_time() {
+        // the c1/c8 allow_tf32 cases: same matmul, different unit
+        let (f, b) = counts::matmul(8, 1024, 768, 768);
+        let tc = KernelDesc::compute("tc", ComputeUnit::TensorCore, f, b).cost(&dev());
+        let cc = KernelDesc::compute("cc", ComputeUnit::CudaCore, f, b).cost(&dev());
+        assert!(tc.energy_j < cc.energy_j);
+        assert!(tc.time_us < cc.time_us);
+    }
+
+    #[test]
+    fn inefficiency_raises_energy_not_time() {
+        let (f, b) = counts::matmul(1, 512, 512, 512);
+        let good = KernelDesc::compute("g", ComputeUnit::TensorCore, f, b).cost(&dev());
+        let bad = KernelDesc::compute("b", ComputeUnit::TensorCore, f, b)
+            .with_quality(0.8, 1.0)
+            .cost(&dev());
+        assert!(bad.energy_j > good.energy_j * 1.05);
+        assert!((bad.time_us - good.time_us).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fused_fewer_bytes_less_energy() {
+        // fused elementwise chain vs 5 separate kernels over same data
+        let n = 1 << 20;
+        let (f, b) = counts::elementwise(n, 1, 8.0);
+        let fused = KernelDesc::compute("fused", ComputeUnit::Sfu, f, b).cost(&dev());
+        let mut unfused_e = 0.0;
+        for _ in 0..5 {
+            let (f5, b5) = counts::elementwise(n, 1, 1.6);
+            unfused_e += KernelDesc::compute("k", ComputeUnit::Sfu, f5, b5).cost(&dev()).energy_j;
+        }
+        assert!(unfused_e > fused.energy_j * 1.5, "{unfused_e} vs {}", fused.energy_j);
+    }
+
+    #[test]
+    fn fixed_kernels_integrate_power() {
+        let spin = KernelDesc::fixed("spin", 1000.0, 300.0).cost(&dev());
+        assert!((spin.energy_j - 0.3).abs() < 1e-9);
+        let idle = KernelDesc::fixed("idle", 1000.0, 90.0).cost(&dev());
+        assert!(idle.energy_j < spin.energy_j);
+    }
+
+    #[test]
+    fn power_capped_at_max() {
+        let (f, b) = counts::matmul(64, 4096, 4096, 4096);
+        let c = KernelDesc::compute("huge", ComputeUnit::TensorCore, f, b).cost(&dev());
+        assert!(c.avg_power_w <= dev().max_w + 1e-9);
+    }
+
+    #[test]
+    fn monotone_in_flops_property() {
+        use crate::prop;
+        let gen = prop::usizes(1, 4096);
+        prop::forall("energy monotone in flops", &gen, 64, |&m| {
+            let a = KernelDesc::compute("a", ComputeUnit::CudaCore, (m * 1000) as f64, 1e6).cost(&dev());
+            let b = KernelDesc::compute("b", ComputeUnit::CudaCore, ((m + 1) * 1000) as f64, 1e6).cost(&dev());
+            b.energy_j >= a.energy_j
+        });
+    }
+}

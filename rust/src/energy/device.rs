@@ -1,0 +1,109 @@
+//! Parametric GPU device models.
+
+/// A simulated GPU. Parameters are loosely calibrated to public H200 /
+/// RTX 4090 figures; what matters for Magneton is the *ratios* (tensor
+/// core vs CUDA core pJ/FLOP, HBM energy per byte vs on-chip, idle vs
+/// busy-wait power), not absolute Joules.
+#[derive(Clone, Debug)]
+pub struct DeviceSpec {
+    pub name: String,
+    /// Power drawn when fully idle (P-state floor), Watts.
+    pub idle_w: f64,
+    /// Static power while any kernel is resident, Watts.
+    pub base_w: f64,
+    /// Peak sustained power cap, Watts.
+    pub max_w: f64,
+    /// Tensor-core throughput (TF32/BF16), TFLOP/s.
+    pub tc_tflops: f64,
+    /// CUDA-core FP32 throughput, TFLOP/s.
+    pub cc_tflops: f64,
+    /// Special-function (exp/tanh) throughput, TFLOP/s.
+    pub sfu_tflops: f64,
+    /// Tensor-core energy, pJ per FLOP.
+    pub tc_pj_per_flop: f64,
+    /// CUDA-core energy, pJ per FLOP.
+    pub cc_pj_per_flop: f64,
+    /// SFU energy, pJ per FLOP.
+    pub sfu_pj_per_flop: f64,
+    /// HBM bandwidth, GB/s.
+    pub hbm_gbps: f64,
+    /// HBM access energy, pJ per byte.
+    pub hbm_pj_per_byte: f64,
+    /// Interconnect (NVLink) bandwidth for collectives, GB/s.
+    pub nvlink_gbps: f64,
+    /// Interconnect energy, pJ per byte.
+    pub nvlink_pj_per_byte: f64,
+    /// Per-kernel launch overhead, microseconds.
+    pub launch_overhead_us: f64,
+}
+
+impl DeviceSpec {
+    /// H200-like simulated device (Testbed-B stand-in).
+    pub fn h200_sim() -> DeviceSpec {
+        DeviceSpec {
+            name: "sim-h200".into(),
+            idle_w: 90.0,
+            base_w: 140.0,
+            max_w: 700.0,
+            tc_tflops: 165.0, // TF32 dense
+            cc_tflops: 67.0,
+            sfu_tflops: 17.0,
+            tc_pj_per_flop: 2.8,
+            cc_pj_per_flop: 4.5,
+            sfu_pj_per_flop: 12.0,
+            hbm_gbps: 4800.0,
+            hbm_pj_per_byte: 20.0,
+            nvlink_gbps: 900.0,
+            nvlink_pj_per_byte: 25.0,
+            launch_overhead_us: 0.1,
+        }
+    }
+
+    /// RTX 4090-like simulated device (Testbed-A stand-in).
+    pub fn rtx4090_sim() -> DeviceSpec {
+        DeviceSpec {
+            name: "sim-rtx4090".into(),
+            idle_w: 25.0,
+            base_w: 60.0,
+            max_w: 450.0,
+            tc_tflops: 82.0,
+            cc_tflops: 82.0, // Ada FP32 == TF32 rate without sparsity
+            sfu_tflops: 10.0,
+            tc_pj_per_flop: 3.4,
+            cc_pj_per_flop: 4.1,
+            sfu_pj_per_flop: 13.0,
+            hbm_gbps: 1008.0,
+            hbm_pj_per_byte: 24.0,
+            nvlink_gbps: 32.0, // PCIe fallback
+            nvlink_pj_per_byte: 40.0,
+            launch_overhead_us: 0.15,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_sane() {
+        for d in [DeviceSpec::h200_sim(), DeviceSpec::rtx4090_sim()] {
+            assert!(d.idle_w < d.base_w && d.base_w < d.max_w, "{}", d.name);
+            assert!(d.tc_pj_per_flop <= d.cc_pj_per_flop, "{}", d.name);
+            assert!(d.tc_tflops >= d.cc_tflops, "{}", d.name);
+            assert!(d.hbm_gbps > 0.0 && d.launch_overhead_us > 0.0);
+        }
+    }
+
+    #[test]
+    fn tensor_core_energy_advantage_holds() {
+        // The c1/c8 misconfiguration cases rely on TC being strictly
+        // cheaper per FLOP than CC on the H200 model.
+        let d = DeviceSpec::h200_sim();
+        // per-FLOP energy advantage of tensor cores
+        assert!(d.cc_pj_per_flop / d.tc_pj_per_flop > 1.5);
+        // full-tilt dynamic power stays under the cap alongside base power
+        let dyn_w = d.tc_tflops * 1e12 * d.tc_pj_per_flop * 1e-12;
+        assert!(d.base_w + dyn_w < d.max_w);
+    }
+}

@@ -1,0 +1,25 @@
+//! Simulated-GPU energy substrate.
+//!
+//! The paper measures real GPUs (RTX 4090 / H200) with a physical power
+//! meter; neither is available here, so this module is the substitution
+//! (DESIGN.md §Hardware-Adaptation): a parametric device model that maps
+//! kernel descriptors (FLOPs, HBM bytes, compute unit, implementation
+//! quality) to `(time, energy)` via a roofline, and a [`PowerTrace`]
+//! timeline from which the paper's three measurement methods are
+//! simulated — exact integration (physical meter), 20 Hz delayed
+//! sampling (NVML), and windowed reads (Zeus).
+//!
+//! The model preserves the *relationships* Magneton's algorithms exploit:
+//! fused kernels move fewer HBM bytes than unfused chains, tensor-core
+//! math costs fewer pJ/FLOP than CUDA-core math, strided access wastes
+//! bandwidth, and busy-wait synchronisation burns near-peak power while
+//! an idle GPU draws idle power.
+
+pub mod device;
+pub mod cost;
+pub mod power;
+pub mod sampler;
+
+pub use cost::{ComputeUnit, KernelCost, KernelDesc};
+pub use device::DeviceSpec;
+pub use power::PowerTrace;

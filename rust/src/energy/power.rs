@@ -1,0 +1,175 @@
+//! Power-vs-time traces: piecewise-constant instantaneous device power.
+//!
+//! Every executor run appends one segment per kernel (its average power
+//! over its duration). The samplers (physical meter / NVML / Zeus) all
+//! read from the same trace, so their disagreement is purely a
+//! *measurement* artefact — exactly the effect Table 4 quantifies.
+
+/// One constant-power interval.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Segment {
+    pub t_start_us: f64,
+    pub t_end_us: f64,
+    pub watts: f64,
+}
+
+/// Piecewise-constant power timeline (segments are contiguous and
+/// appended in time order).
+#[derive(Clone, Debug, Default)]
+pub struct PowerTrace {
+    pub segments: Vec<Segment>,
+    /// Power reported when no segment covers a time point.
+    pub idle_w: f64,
+}
+
+impl PowerTrace {
+    pub fn new(idle_w: f64) -> PowerTrace {
+        PowerTrace { segments: Vec::new(), idle_w }
+    }
+
+    /// Current end-of-trace timestamp.
+    pub fn now_us(&self) -> f64 {
+        self.segments.last().map(|s| s.t_end_us).unwrap_or(0.0)
+    }
+
+    /// Append a segment of `dur_us` at `watts` starting at `now_us`.
+    pub fn push(&mut self, dur_us: f64, watts: f64) -> Segment {
+        let t0 = self.now_us();
+        let seg = Segment { t_start_us: t0, t_end_us: t0 + dur_us, watts };
+        self.segments.push(seg);
+        seg
+    }
+
+    /// Instantaneous power at time `t_us` (binary search).
+    pub fn power_at(&self, t_us: f64) -> f64 {
+        if self.segments.is_empty() {
+            return self.idle_w;
+        }
+        let mut lo = 0usize;
+        let mut hi = self.segments.len();
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if self.segments[mid].t_end_us <= t_us {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        if lo < self.segments.len() && self.segments[lo].t_start_us <= t_us {
+            self.segments[lo].watts
+        } else {
+            self.idle_w
+        }
+    }
+
+    /// Exact energy (J) over [t0, t1] by integrating segments.
+    pub fn energy_between(&self, t0_us: f64, t1_us: f64) -> f64 {
+        assert!(t1_us >= t0_us);
+        let mut e = 0.0;
+        let mut covered = 0.0;
+        for s in &self.segments {
+            let lo = s.t_start_us.max(t0_us);
+            let hi = s.t_end_us.min(t1_us);
+            if hi > lo {
+                e += s.watts * (hi - lo) * 1e-6;
+                covered += hi - lo;
+            }
+        }
+        // uncovered time is idle
+        e + self.idle_w * ((t1_us - t0_us) - covered).max(0.0) * 1e-6
+    }
+
+    /// Total energy over the whole trace.
+    pub fn total_energy(&self) -> f64 {
+        self.energy_between(0.0, self.now_us())
+    }
+
+    /// Total duration (µs).
+    pub fn duration_us(&self) -> f64 {
+        self.now_us()
+    }
+
+    /// Resample at `hz` for plotting (Fig 4): (t_ms, watts) points.
+    pub fn resample(&self, hz: f64) -> Vec<(f64, f64)> {
+        let step_us = 1e6 / hz;
+        let mut out = Vec::new();
+        let mut t = 0.0;
+        while t <= self.now_us() {
+            out.push((t / 1e3, self.power_at(t)));
+            t += step_us;
+        }
+        out
+    }
+
+    /// Concatenate another trace after this one (shifting its times).
+    pub fn extend_shifted(&mut self, other: &PowerTrace) {
+        let base = self.now_us();
+        for s in &other.segments {
+            self.segments.push(Segment {
+                t_start_us: s.t_start_us + base,
+                t_end_us: s.t_end_us + base,
+                watts: s.watts,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_is_contiguous() {
+        let mut tr = PowerTrace::new(50.0);
+        tr.push(100.0, 200.0);
+        tr.push(50.0, 400.0);
+        assert_eq!(tr.segments[1].t_start_us, 100.0);
+        assert_eq!(tr.now_us(), 150.0);
+    }
+
+    #[test]
+    fn power_at_lookup() {
+        let mut tr = PowerTrace::new(50.0);
+        tr.push(100.0, 200.0);
+        tr.push(100.0, 400.0);
+        assert_eq!(tr.power_at(50.0), 200.0);
+        assert_eq!(tr.power_at(150.0), 400.0);
+        assert_eq!(tr.power_at(500.0), 50.0); // past the end: idle
+    }
+
+    #[test]
+    fn energy_integration_exact() {
+        let mut tr = PowerTrace::new(50.0);
+        tr.push(1000.0, 100.0); // 1ms @ 100W = 0.1 J
+        tr.push(1000.0, 300.0); // 1ms @ 300W = 0.3 J
+        assert!((tr.total_energy() - 0.4).abs() < 1e-12);
+        assert!((tr.energy_between(500.0, 1500.0) - (0.05 + 0.15)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn uncovered_time_is_idle_energy() {
+        let tr = PowerTrace::new(100.0);
+        // empty trace, 1 second window -> 100 J * 1e-6 * 1e6? No: 100W * 1s = 100 J
+        assert!((tr.energy_between(0.0, 1e6) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn resample_counts() {
+        let mut tr = PowerTrace::new(0.0);
+        tr.push(1e6, 100.0); // 1 second
+        let pts = tr.resample(10.0); // 10 Hz -> 11 points incl. endpoints
+        assert_eq!(pts.len(), 11);
+        assert!(pts.iter().take(10).all(|&(_, w)| w == 100.0));
+    }
+
+    #[test]
+    fn extend_shifts_times() {
+        let mut a = PowerTrace::new(0.0);
+        a.push(100.0, 10.0);
+        let mut b = PowerTrace::new(0.0);
+        b.push(50.0, 20.0);
+        a.extend_shifted(&b);
+        assert_eq!(a.segments[1].t_start_us, 100.0);
+        assert_eq!(a.now_us(), 150.0);
+    }
+}

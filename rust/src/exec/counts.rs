@@ -1,0 +1,189 @@
+//! FLOP / HBM-byte accounting per operator.
+//!
+//! Counts derive from input/output tensor shapes — the standard
+//! analytical cost model (2mnk for GEMM, read+write streams for
+//! elementwise). Returns `(flops, bytes, n_kernel_launches)`; the
+//! launch count captures ops that real frameworks implement as several
+//! kernels (e.g. the unfused GELU decomposition already appears as
+//! separate graph nodes, but `eigvals`-style composite ops charge their
+//! internal launches here).
+
+use crate::graph::{Attrs, OpKind};
+use crate::tensor::Tensor;
+
+/// (flops, hbm_bytes, kernel_launches) for one operator application.
+pub fn op_counts(op: OpKind, attrs: &Attrs, ins: &[&Tensor], out: &Tensor) -> (f64, f64, usize) {
+    let in_bytes: f64 = ins.iter().map(|t| t.bytes() as f64).sum();
+    let out_bytes = out.bytes() as f64;
+    let out_n = out.numel() as f64;
+    match op {
+        OpKind::MatMul => {
+            let a = ins[0];
+            let b = ins[1];
+            let k = *a.shape().last().unwrap() as f64;
+            (2.0 * out_n * k, in_bytes + out_bytes, 1)
+        }
+        OpKind::AddMm => {
+            let a = ins[1];
+            let k = *a.shape().last().unwrap() as f64;
+            // fused epilogue: bias read rides along with the GEMM
+            (2.0 * out_n * k + out_n, in_bytes + out_bytes, 1)
+        }
+        OpKind::Attention => {
+            // q,k,v = [b, h, s, d] (fused flash-style kernel)
+            let q = ins[0];
+            let r = q.rank();
+            let (s, d) = (q.shape()[r - 2] as f64, q.shape()[r - 1] as f64);
+            let bh: f64 = q.shape()[..r - 2].iter().product::<usize>() as f64;
+            let flops = bh * (2.0 * s * s * d * 2.0 + 5.0 * s * s);
+            (flops, in_bytes + out_bytes, 1)
+        }
+        OpKind::Conv2d => {
+            let x = ins[0];
+            let w = ins[1];
+            let groups: f64 = attrs.get("groups").and_then(|s| s.parse().ok()).unwrap_or(1.0);
+            let (kh, kw) = (w.shape()[2] as f64, w.shape()[3] as f64);
+            let cin_per_group = w.shape()[1] as f64;
+            let flops = 2.0 * out_n * cin_per_group * kh * kw;
+            let bytes = match attrs.get("algo").map(String::as_str) {
+                // im2col materialises the column matrix: extra traffic
+                Some("im2col") => {
+                    let cols = out_n / w.shape()[0] as f64 * cin_per_group * kh * kw * groups;
+                    in_bytes + out_bytes + 2.0 * 4.0 * cols
+                }
+                _ => in_bytes + out_bytes,
+            };
+            (flops, bytes, if attrs.get("algo").map(String::as_str) == Some("im2col") { 2 } else { 1 })
+        }
+        OpKind::Softmax => (5.0 * out_n, in_bytes + out_bytes, 1),
+        OpKind::LayerNorm | OpKind::RmsNorm => (8.0 * out_n, in_bytes + out_bytes, 1),
+        OpKind::Gelu | OpKind::Silu | OpKind::Tanh => (8.0 * out_n, in_bytes + out_bytes, 1),
+        OpKind::Add | OpKind::Sub | OpKind::Mul | OpKind::Div | OpKind::Scale | OpKind::Pow | OpKind::Relu => {
+            (out_n, in_bytes + out_bytes, 1)
+        }
+        OpKind::Contiguous | OpKind::Copy => (0.0, in_bytes + out_bytes, 1),
+        OpKind::Concat | OpKind::SplitChunk | OpKind::Slice => (0.0, in_bytes.min(out_bytes) + out_bytes, 1),
+        OpKind::TopK => {
+            let last = *ins[0].shape().last().unwrap() as f64;
+            // selection-based top-k: ~n log k work
+            let k: f64 = attrs.get("k").and_then(|s| s.parse().ok()).unwrap_or(1.0);
+            (ins[0].numel() as f64 * (k.max(2.0)).log2(), in_bytes + out_bytes, 1).max_flops(last)
+        }
+        OpKind::Sort => {
+            let last = *ins[0].shape().last().unwrap() as f64;
+            (ins[0].numel() as f64 * last.log2().max(1.0), 2.0 * in_bytes + out_bytes, 2)
+        }
+        OpKind::CumSum => (out_n, in_bytes + out_bytes, 1),
+        OpKind::RepeatInterleave => (0.0, in_bytes + out_bytes, 1),
+        OpKind::Embedding => (0.0, out_bytes * 2.0, 1),
+        OpKind::Arange => (out_n, out_bytes, 1),
+        OpKind::CrossEntropy => {
+            let n = ins[0].numel() as f64;
+            (6.0 * n, in_bytes + out_bytes, 2)
+        }
+        OpKind::Eigvals => {
+            let n = ins[0].shape()[0] as f64;
+            // iterative eigensolver: O(n^3) with a sweep constant
+            (30.0 * n * n * n, in_bytes * 4.0, 8)
+        }
+        OpKind::Stft => {
+            let frame: f64 = attrs.get("frame").and_then(|s| s.parse().ok()).unwrap_or(32.0);
+            (out_n * frame * 4.0, in_bytes * 2.0 + out_bytes, 3)
+        }
+        OpKind::Expm => {
+            // scaling-and-squaring: ~18 GEMMs fused into ~8 launches
+            let n = ins[0].shape()[0] as f64;
+            (2.0 * 18.0 * n * n * n, in_bytes * 18.0, 8)
+        }
+        OpKind::CountNonzero => (ins[0].numel() as f64, in_bytes, 1),
+        OpKind::AllReduce => {
+            // ring all-reduce moves 2x the payload over the link
+            (ins[0].numel() as f64, 2.0 * in_bytes, 1)
+        }
+        OpKind::Barrier | OpKind::Idle => (0.0, 0.0, 1),
+        OpKind::Input | OpKind::Weight | OpKind::Output | OpKind::Permute | OpKind::Reshape => (0.0, 0.0, 0),
+    }
+}
+
+/// Small helper so `TopK` can express "at least one pass over the row".
+trait MaxFlops {
+    fn max_flops(self, last: f64) -> (f64, f64, usize);
+}
+
+impl MaxFlops for (f64, f64, usize) {
+    fn max_flops(self, last: f64) -> (f64, f64, usize) {
+        (self.0.max(last), self.1, self.2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Attrs;
+    use crate::util::Prng;
+
+    #[test]
+    fn matmul_flops_2mnk() {
+        let mut rng = Prng::new(1);
+        let a = Tensor::randn(&mut rng, &[4, 8]);
+        let b = Tensor::randn(&mut rng, &[8, 16]);
+        let out = crate::tensor::ops::matmul(&a, &b);
+        let (f, _, _) = op_counts(OpKind::MatMul, &Attrs::new(), &[&a, &b], &out);
+        assert_eq!(f, 2.0 * 4.0 * 8.0 * 16.0);
+    }
+
+    #[test]
+    fn elementwise_bytes_read_plus_write() {
+        let mut rng = Prng::new(2);
+        let a = Tensor::randn(&mut rng, &[100]);
+        let b = Tensor::randn(&mut rng, &[100]);
+        let out = crate::tensor::ops::add(&a, &b);
+        let (_, bytes, _) = op_counts(OpKind::Add, &Attrs::new(), &[&a, &b], &out);
+        assert_eq!(bytes, (100.0 * 4.0) * 3.0);
+    }
+
+    #[test]
+    fn im2col_charges_more_bytes_than_direct() {
+        let mut rng = Prng::new(3);
+        let x = Tensor::randn(&mut rng, &[1, 8, 16, 16]);
+        let w = Tensor::randn(&mut rng, &[8, 8, 3, 3]);
+        let out = crate::tensor::conv::conv2d_nchw(&x, &w, 1, 1);
+        let direct = op_counts(OpKind::Conv2d, &Attrs::new(), &[&x, &w], &out);
+        let mut attrs = Attrs::new();
+        attrs.insert("algo".into(), "im2col".into());
+        let im2col = op_counts(OpKind::Conv2d, &attrs, &[&x, &w], &out);
+        assert!(im2col.1 > direct.1 * 1.5);
+        assert_eq!(im2col.0, direct.0); // same math
+    }
+
+    #[test]
+    fn allreduce_moves_double_payload() {
+        let mut rng = Prng::new(4);
+        let g = Tensor::randn(&mut rng, &[1000]);
+        let (_, bytes, _) = op_counts(OpKind::AllReduce, &Attrs::new(), &[&g], &g);
+        assert_eq!(bytes, 2.0 * 4000.0);
+    }
+
+    #[test]
+    fn virtual_ops_are_free() {
+        let t = Tensor::zeros(&[10]);
+        for op in [OpKind::Permute, OpKind::Reshape] {
+            let (f, b, l) = op_counts(op, &Attrs::new(), &[&t], &t);
+            assert_eq!((f, b, l), (0.0, 0.0, 0));
+        }
+    }
+
+    #[test]
+    fn sort_costs_more_than_topk() {
+        let mut rng = Prng::new(5);
+        let a = Tensor::randn(&mut rng, &[64, 1024]);
+        let sorted = crate::tensor::ops::sort_lastdim_desc(&a);
+        let mut attrs = Attrs::new();
+        attrs.insert("k".into(), "8".into());
+        let top = crate::tensor::ops::topk_lastdim(&a, 8);
+        let (fs, bs, _) = op_counts(OpKind::Sort, &Attrs::new(), &[&a], &sorted);
+        let (ft, bt, _) = op_counts(OpKind::TopK, &attrs, &[&a], &top);
+        assert!(fs > ft, "sort flops {fs} <= topk {ft}");
+        assert!(bs > bt);
+    }
+}

@@ -1,0 +1,541 @@
+//! Graph executor: runs a computational graph on the tensor substrate
+//! while accounting energy, time, power, and trace events per kernel.
+//!
+//! For every non-virtual node the executor (1) asks the [`Dispatcher`]
+//! which kernel variant the owning framework would launch under the
+//! current configuration (this is where misconfigurations change both
+//! cost *and* numerics — a TF32 kernel truncates mantissas), (2)
+//! computes the output tensor, (3) derives FLOP/byte counts from the
+//! shapes, (4) evaluates the cost model and appends to the power trace,
+//! and (5) emits correlated API-call + kernel-launch trace events.
+
+pub mod counts;
+
+use std::collections::BTreeMap;
+
+use crate::dispatch::{Env, KernelChoice, Outcome, Routine};
+use crate::energy::{ComputeUnit, DeviceSpec, KernelDesc, PowerTrace};
+use crate::graph::{Graph, NodeId, OpKind};
+use crate::tensor::{conv, nn, ops, Tensor};
+use crate::trace::{EventKind, Frame, TraceBuffer};
+
+/// A runnable program: a graph plus tensors bound to its source nodes.
+#[derive(Clone, Debug)]
+pub struct Program {
+    pub graph: Graph,
+    /// Tensor feeds for `Input` / `Weight` nodes.
+    pub feeds: BTreeMap<NodeId, Tensor>,
+}
+
+impl Program {
+    pub fn new(graph: Graph) -> Program {
+        Program { graph, feeds: BTreeMap::new() }
+    }
+
+    pub fn feed(&mut self, node: NodeId, t: Tensor) -> &mut Self {
+        self.feeds.insert(node, t);
+        self
+    }
+}
+
+/// Kernel-selection oracle: routines registered per dispatch key. Nodes
+/// pick a routine via their `dispatch` attribute (falling back to the op
+/// name); unknown keys get a default direct routine.
+#[derive(Clone, Debug, Default)]
+pub struct Dispatcher {
+    pub routines: BTreeMap<String, Routine>,
+}
+
+impl Dispatcher {
+    pub fn new() -> Dispatcher {
+        Dispatcher::default()
+    }
+
+    pub fn register(&mut self, key: &str, routine: Routine) -> &mut Self {
+        self.routines.insert(key.to_string(), routine);
+        self
+    }
+
+    /// Dispatch a node under `env`. Falls back to a sane direct routine
+    /// per op kind when no routine is registered.
+    pub fn dispatch(&self, op: OpKind, key: &str, env: &Env) -> Outcome {
+        if let Some(r) = self.routines.get(key) {
+            return r.run(env);
+        }
+        if let Some(r) = self.routines.get(op.name()) {
+            return r.run(env);
+        }
+        default_routine(op).run(env)
+    }
+
+    /// Find the routine a node would use (for diagnosis re-runs).
+    pub fn routine_for(&self, op: OpKind, key: &str) -> Routine {
+        self.routines
+            .get(key)
+            .or_else(|| self.routines.get(op.name()))
+            .cloned()
+            .unwrap_or_else(|| default_routine(op))
+    }
+}
+
+/// Default kernel choice for an op when the framework registered nothing.
+pub fn default_routine(op: OpKind) -> Routine {
+    let unit = match op {
+        OpKind::MatMul | OpKind::AddMm | OpKind::Conv2d | OpKind::Attention => ComputeUnit::TensorCore,
+        OpKind::Tanh | OpKind::Gelu | OpKind::Silu | OpKind::Softmax | OpKind::Expm => ComputeUnit::Sfu,
+        OpKind::Contiguous | OpKind::Copy | OpKind::Concat | OpKind::SplitChunk | OpKind::Slice => ComputeUnit::Mem,
+        OpKind::AllReduce => ComputeUnit::Link,
+        _ => ComputeUnit::CudaCore,
+    };
+    let kernel = format!("default_{}", op.name());
+    Routine::direct(&format!("aten::{}", op.name()), vec![Frame::cpp("at::native::dispatch")], KernelChoice::new(&kernel, unit))
+}
+
+/// One executed kernel with full context (the unified trace row).
+#[derive(Clone, Debug)]
+pub struct KernelRecord {
+    pub node: NodeId,
+    pub op: OpKind,
+    pub label: String,
+    pub api: String,
+    /// Dispatch-routine key the executor used (for diagnosis re-runs).
+    pub dispatch_key: String,
+    pub kernel: String,
+    pub time_us: f64,
+    pub energy_j: f64,
+    pub avg_power_w: f64,
+    pub corr_id: u64,
+    pub bb_trace: Vec<(String, usize)>,
+    pub call_path: Vec<Frame>,
+}
+
+/// Everything a run produces.
+#[derive(Clone, Debug)]
+pub struct RunArtifacts {
+    pub graph: Graph,
+    /// Output tensor per node (present when `record_tensors`).
+    pub tensors: Vec<Option<Tensor>>,
+    pub records: Vec<KernelRecord>,
+    pub trace: TraceBuffer,
+    pub power: PowerTrace,
+    /// GPU busy time (µs).
+    pub gpu_time_us: f64,
+    /// End-to-end wall time incl. tracing overhead (µs).
+    pub wall_time_us: f64,
+    pub total_energy_j: f64,
+}
+
+impl RunArtifacts {
+    /// The final output tensor (last Output node's input, or last node).
+    pub fn output(&self) -> &Tensor {
+        let out_node = self
+            .graph
+            .nodes
+            .iter()
+            .rev()
+            .find(|n| n.op == OpKind::Output)
+            .map(|n| n.inputs[0])
+            .unwrap_or(self.graph.len() - 1);
+        self.tensors[out_node].as_ref().expect("run with record_tensors")
+    }
+
+    /// Energy attributed to a node.
+    pub fn node_energy_j(&self, node: NodeId) -> f64 {
+        self.records.iter().filter(|r| r.node == node).map(|r| r.energy_j).sum()
+    }
+
+    /// Per-operator energy breakdown aggregated by op kind (Fig 2 rows).
+    pub fn energy_by_op(&self) -> Vec<(String, f64)> {
+        let mut agg: BTreeMap<String, f64> = BTreeMap::new();
+        for r in &self.records {
+            *agg.entry(r.op.name().to_string()).or_insert(0.0) += r.energy_j;
+        }
+        let mut v: Vec<(String, f64)> = agg.into_iter().collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v
+    }
+}
+
+/// Executor options.
+#[derive(Clone, Debug)]
+pub struct ExecOptions {
+    /// Capture trace events (charges per-event overhead on wall time).
+    pub tracing: bool,
+    /// Keep every node's output tensor (needed for fingerprint matching).
+    pub record_tensors: bool,
+    /// Per-event tracing overhead, µs (Fig 10's knob). Calibrated so
+    /// the interception-cost : kernel-duration ratio matches the real
+    /// CUPTI-vs-H200 testbed (~1 µs interception against ~40 µs
+    /// kernels); our simulated kernels are ~40x shorter, so the
+    /// per-event cost scales down with them.
+    pub trace_overhead_us: f64,
+}
+
+impl Default for ExecOptions {
+    fn default() -> ExecOptions {
+        ExecOptions { tracing: true, record_tensors: true, trace_overhead_us: 0.008 }
+    }
+}
+
+/// The executor: device + dispatcher + global config.
+pub struct Executor {
+    pub device: DeviceSpec,
+    pub dispatcher: Dispatcher,
+    pub config: Env,
+    pub opts: ExecOptions,
+}
+
+impl Executor {
+    pub fn new(device: DeviceSpec, dispatcher: Dispatcher, config: Env) -> Executor {
+        Executor { device, dispatcher, config, opts: ExecOptions::default() }
+    }
+
+    /// Execute a program, producing tensors + energy + trace.
+    pub fn run(&self, prog: &Program) -> RunArtifacts {
+        let g = &prog.graph;
+        let mut tensors: Vec<Option<Tensor>> = vec![None; g.len()];
+        let mut records = Vec::new();
+        let mut trace = TraceBuffer::new(if self.opts.tracing { self.opts.trace_overhead_us } else { 0.0 });
+        let mut power = PowerTrace::new(self.device.idle_w);
+        let mut gpu_time_us = 0.0;
+
+        for node in &g.nodes {
+            // 1. bind sources
+            if matches!(node.op, OpKind::Input | OpKind::Weight) {
+                let t = prog
+                    .feeds
+                    .get(&node.id)
+                    .unwrap_or_else(|| panic!("no feed for {} `{}`", node.op.name(), node.label))
+                    .clone();
+                tensors[node.id] = Some(t);
+                continue;
+            }
+            if node.op == OpKind::Output {
+                tensors[node.id] = tensors[node.inputs[0]].clone();
+                continue;
+            }
+            // zero-copy metadata ops: no kernel launch, no energy
+            if matches!(node.op, OpKind::Permute | OpKind::Reshape) {
+                let ins: Vec<&Tensor> = node
+                    .inputs
+                    .iter()
+                    .map(|&i| tensors[i].as_ref().expect("topological order"))
+                    .collect();
+                tensors[node.id] = Some(eval_node(node.op, &node.attrs, &ins, false));
+                continue;
+            }
+
+            // 2. dispatch: which kernel variant does the framework pick?
+            let env = self.config.merged(&node.attrs);
+            let key = node.attrs.get("dispatch").cloned().unwrap_or_else(|| node.op.name().to_string());
+            let outcome = self.dispatcher.dispatch(node.op, &key, &env);
+            let choice = &outcome.choice;
+
+            // 3. numerics (TF32 kernels round inputs)
+            let ins: Vec<&Tensor> = node
+                .inputs
+                .iter()
+                .map(|&i| tensors[i].as_ref().expect("topological order"))
+                .collect();
+            let tf32 = choice.unit == ComputeUnit::TensorCore
+                && matches!(node.op, OpKind::MatMul | OpKind::AddMm | OpKind::Attention | OpKind::Conv2d);
+            let out = eval_node(node.op, &node.attrs, &ins, tf32);
+
+            // 4. cost
+            let (flops, bytes, n_launches) = counts::op_counts(node.op, &node.attrs, &ins, &out);
+            let desc = if node.op == OpKind::Barrier || node.op == OpKind::Idle {
+                let wait_us: f64 = node.attrs.get("wait_us").and_then(|s| s.parse().ok()).unwrap_or(1000.0);
+                let frac: f64 = node.attrs.get("power_frac").and_then(|s| s.parse().ok()).unwrap_or(
+                    if node.op == OpKind::Barrier { 0.45 } else { 0.0 },
+                );
+                let w = if node.op == OpKind::Idle {
+                    self.device.idle_w
+                } else {
+                    self.device.base_w.max(frac * self.device.max_w)
+                };
+                KernelDesc::fixed(&choice.kernel, wait_us, w)
+            } else {
+                KernelDesc {
+                    name: choice.kernel.clone(),
+                    unit: choice.unit,
+                    flops,
+                    bytes: bytes * choice.bytes_mult,
+                    efficiency: choice.efficiency,
+                    time_mult: choice.time_mult,
+                    fixed_time_us: 0.0,
+                    fixed_power_w: 0.0,
+                }
+            };
+            // multi-launch ops (e.g. per-launch overhead of split kernels)
+            let mut cost = desc.cost(&self.device);
+            if n_launches > 1 {
+                let extra = (n_launches - 1) as f64 * self.device.launch_overhead_us;
+                cost.time_us += extra;
+                cost.energy_j += extra * 1e-6 * self.device.base_w;
+                // keep the three energy views (records, trace, power
+                // integral) consistent after the adjustment
+                cost.avg_power_w = (cost.energy_j / (cost.time_us * 1e-6)).min(self.device.max_w);
+                cost.energy_j = cost.energy_j.min(cost.avg_power_w * cost.time_us * 1e-6);
+            }
+
+            // 5. trace + power accounting
+            let t0 = power.now_us();
+            power.push(cost.time_us, cost.avg_power_w.max(self.device.base_w.min(cost.avg_power_w + 1.0)));
+            gpu_time_us += cost.time_us;
+            let corr = trace.next_corr_id();
+            if self.opts.tracing {
+                trace.record(
+                    corr,
+                    t0,
+                    t0 + 1.0,
+                    EventKind::ApiCall { api: outcome.call_path[0].func.clone() },
+                    outcome.call_path.clone(),
+                    Some(node.id),
+                );
+                trace.record(
+                    corr,
+                    t0,
+                    t0 + cost.time_us,
+                    EventKind::KernelLaunch { kernel: choice.kernel.clone(), energy_j: cost.energy_j },
+                    vec![],
+                    Some(node.id),
+                );
+            }
+            records.push(KernelRecord {
+                node: node.id,
+                op: node.op,
+                label: node.label.clone(),
+                api: outcome.call_path[0].func.clone(),
+                dispatch_key: key.clone(),
+                kernel: choice.kernel.clone(),
+                time_us: cost.time_us,
+                energy_j: cost.energy_j,
+                avg_power_w: cost.avg_power_w,
+                corr_id: corr,
+                bb_trace: outcome.bb_trace.clone(),
+                call_path: outcome.call_path.clone(),
+            });
+
+            tensors[node.id] = Some(out);
+        }
+
+        let total_energy_j = records.iter().map(|r| r.energy_j).sum();
+        let wall_time_us = gpu_time_us + trace.total_overhead_us;
+        let mut arts = RunArtifacts {
+            graph: g.clone(),
+            tensors,
+            records,
+            trace,
+            power,
+            gpu_time_us,
+            wall_time_us,
+            total_energy_j,
+        };
+        if !self.opts.record_tensors {
+            // keep only sources + final output to bound memory
+            let keep: Vec<usize> = g
+                .nodes
+                .iter()
+                .filter(|n| n.op == OpKind::Output)
+                .map(|n| n.inputs[0])
+                .collect();
+            for i in 0..arts.tensors.len() {
+                if !keep.contains(&i) && !g.nodes[i].inputs.is_empty() {
+                    arts.tensors[i] = None;
+                }
+            }
+        }
+        arts
+    }
+}
+
+/// Parse helpers for node attrs.
+fn attr_usize(attrs: &crate::graph::Attrs, k: &str, default: usize) -> usize {
+    attrs.get(k).and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+fn attr_f32(attrs: &crate::graph::Attrs, k: &str, default: f32) -> f32 {
+    attrs.get(k).and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+fn attr_list(attrs: &crate::graph::Attrs, k: &str) -> Vec<usize> {
+    attrs
+        .get(k)
+        .map(|s| s.split(',').filter_map(|x| x.trim().parse().ok()).collect())
+        .unwrap_or_default()
+}
+
+/// Evaluate one operator's numerics.
+pub fn eval_node(op: OpKind, attrs: &crate::graph::Attrs, ins: &[&Tensor], tf32: bool) -> Tensor {
+    match op {
+        OpKind::MatMul => ops::matmul_ex(ins[0], ins[1], tf32),
+        OpKind::AddMm => ops::addmm(ins[0], ins[1], ins[2], tf32),
+        OpKind::Add => ops::add(ins[0], ins[1]),
+        OpKind::Sub => ops::sub(ins[0], ins[1]),
+        OpKind::Mul => ops::mul(ins[0], ins[1]),
+        OpKind::Div => ops::div(ins[0], ins[1]),
+        OpKind::Scale => ops::scale(ins[0], attr_f32(attrs, "s", 1.0)),
+        OpKind::Pow => {
+            let p = attr_f32(attrs, "p", 2.0);
+            ops::map(ins[0], |x| x.powf(p))
+        }
+        OpKind::Tanh => ops::map(ins[0], f32::tanh),
+        OpKind::Gelu => match attrs.get("approx").map(String::as_str) {
+            Some("tanh") => nn::gelu_tanh(ins[0]),
+            _ => nn::gelu_exact(ins[0]),
+        },
+        OpKind::Silu => nn::silu(ins[0]),
+        OpKind::Relu => ops::map(ins[0], |x| x.max(0.0)),
+        OpKind::Softmax => nn::softmax(ins[0]),
+        OpKind::LayerNorm => nn::layernorm(ins[0], ins[1], ins[2], 1e-5),
+        OpKind::RmsNorm => nn::rmsnorm(ins[0], ins[1], 1e-6),
+        OpKind::Attention => {
+            // fused GQA: expand kv heads inside the kernel (no HBM cost —
+            // the whole point of the c4 fix)
+            let reps = attr_usize(attrs, "gqa_reps", 1);
+            let nhd = attrs.get("layout").map(String::as_str) == Some("nhd");
+            let (k, v) = if reps > 1 {
+                let head_dim = if nhd { 2 } else { 1 };
+                (
+                    ops::repeat_interleave(ins[1], head_dim, reps),
+                    ops::repeat_interleave(ins[2], head_dim, reps),
+                )
+            } else {
+                (ins[1].clone(), ins[2].clone())
+            };
+            if nhd {
+                nn::attention_nhd(ins[0], &k, &v)
+            } else {
+                nn::attention_hnd(ins[0], &k, &v)
+            }
+        }
+        OpKind::Conv2d => {
+            let pad = attr_usize(attrs, "pad", 1);
+            let groups = attr_usize(attrs, "groups", 1);
+            match attrs.get("layout").map(String::as_str) {
+                Some("nhwc") => conv::conv2d_nhwc(ins[0], ins[1], pad, groups),
+                _ => match attrs.get("algo").map(String::as_str) {
+                    Some("im2col") => conv::conv2d_im2col(ins[0], ins[1], pad),
+                    _ => conv::conv2d_nchw(ins[0], ins[1], pad, groups),
+                },
+            }
+        }
+        OpKind::Permute => ins[0].permute(&attr_list(attrs, "perm")),
+        OpKind::Reshape => ins[0].reshape(&attr_list(attrs, "shape")),
+        OpKind::Contiguous | OpKind::Copy => ins[0].contiguous(),
+        OpKind::Concat => {
+            let dim = attr_usize(attrs, "dim", 0);
+            Tensor::concat(ins, dim)
+        }
+        OpKind::SplitChunk => {
+            let dim = attr_usize(attrs, "dim", 0);
+            let chunks = attr_usize(attrs, "chunks", 1);
+            let index = attr_usize(attrs, "index", 0);
+            ins[0].split(dim, chunks)[index].contiguous()
+        }
+        OpKind::Slice => {
+            let dim = attr_usize(attrs, "dim", 0);
+            ins[0]
+                .slice(dim, attr_usize(attrs, "start", 0), attr_usize(attrs, "stop", ins[0].shape()[dim]))
+                .contiguous()
+        }
+        OpKind::TopK => ops::topk_lastdim(ins[0], attr_usize(attrs, "k", 1)),
+        OpKind::Sort => ops::sort_lastdim_desc(ins[0]),
+        OpKind::CumSum => ops::cumsum_lastdim(ins[0]),
+        OpKind::RepeatInterleave => {
+            ops::repeat_interleave(ins[0], attr_usize(attrs, "dim", 0), attr_usize(attrs, "reps", 1))
+        }
+        OpKind::Embedding => {
+            let ids: Vec<usize> = attr_list(attrs, "ids");
+            ops::embedding(ins[0], &ids)
+        }
+        OpKind::Arange => Tensor::arange(attr_usize(attrs, "n", 1)),
+        OpKind::CrossEntropy => {
+            let targets = attr_list(attrs, "targets");
+            Tensor::from_vec(vec![nn::cross_entropy(ins[0], &targets)], &[1])
+        }
+        OpKind::Eigvals => {
+            // symmetrise then solve (c6: the efficient path for symmetric inputs)
+            let sym = ops::scale(&ops::add(ins[0], &ins[0].t().contiguous()), 0.5);
+            let ev = crate::linalg::eigvalsh(&sym);
+            let n = ev.len();
+            Tensor::from_vec(ev, &[n])
+        }
+        OpKind::Stft => crate::linalg::stft_mag(
+            ins[0],
+            attr_usize(attrs, "frame", 32),
+            attr_usize(attrs, "hop", 16),
+        ),
+        OpKind::Expm => crate::linalg::expm(ins[0]),
+        OpKind::CountNonzero => {
+            Tensor::from_vec(vec![ops::count_nonzero(ins[0]) as f32], &[1])
+        }
+        OpKind::AllReduce => ins[0].contiguous(), // single-rank view: identity
+        OpKind::Barrier | OpKind::Idle => ins
+            .first()
+            .map(|t| (*t).clone())
+            .unwrap_or_else(|| Tensor::zeros(&[1])),
+        OpKind::Input | OpKind::Weight | OpKind::Output => unreachable!("handled by run()"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    fn simple_program(tf32_config: bool) -> (Executor, Program) {
+        let mut g = Graph::new("test");
+        let x = g.add(OpKind::Input, &[], "x");
+        let w = g.add(OpKind::Weight, &[], "w");
+        let m = g.add(OpKind::MatMul, &[x, w], "proj");
+        let gl = g.add_attr1(OpKind::Gelu, &[m], "act", "approx", "tanh");
+        g.add(OpKind::Output, &[gl], "out");
+        let mut rng = Prng::new(1);
+        let mut prog = Program::new(g);
+        prog.feed(0, Tensor::randn(&mut rng, &[16, 32]));
+        prog.feed(1, Tensor::randn(&mut rng, &[32, 8]));
+        let mut config = Env::new();
+        if tf32_config {
+            config.set("allow_tf32", "true");
+        }
+        let exec = Executor::new(DeviceSpec::h200_sim(), Dispatcher::new(), config);
+        (exec, prog)
+    }
+
+    #[test]
+    fn run_produces_tensors_energy_trace() {
+        let (exec, prog) = simple_program(false);
+        let arts = exec.run(&prog);
+        assert_eq!(arts.output().shape(), &[16, 8]);
+        assert!(arts.total_energy_j > 0.0);
+        assert!(arts.gpu_time_us > 0.0);
+        assert_eq!(arts.records.len(), 2); // matmul + gelu
+        assert_eq!(arts.trace.kernel_call_paths().len(), 2);
+    }
+
+    #[test]
+    fn energy_by_op_sorted_desc() {
+        let (exec, prog) = simple_program(false);
+        let arts = exec.run(&prog);
+        let breakdown = arts.energy_by_op();
+        assert!(breakdown.windows(2).all(|w| w[0].1 >= w[1].1));
+    }
+
+    #[test]
+    fn tracing_overhead_increases_wall_time() {
+        let (mut exec, prog) = simple_program(false);
+        let traced = exec.run(&prog);
+        exec.opts.tracing = false;
+        let untraced = exec.run(&prog);
+        assert!(traced.wall_time_us > untraced.wall_time_us);
+        assert_eq!(traced.gpu_time_us, untraced.gpu_time_us);
+    }
+
+    #[test]
+    fn power_trace_energy_matches_records() {
+        let (exec, prog) = simple_program(false);
+        let arts = exec.run(&prog);
+        let from_trace = arts.power.total_energy();
+        let rel = (from_trace - arts.total_energy_j).abs() / arts.total_energy_j;
+        assert!(rel < 0.05, "trace {from_trace} vs records {}", arts.total_energy_j);
+    }
+}

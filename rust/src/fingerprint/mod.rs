@@ -1,0 +1,309 @@
+//! SVD-invariant tensor fingerprints (paper §4.2, "Matching Equivalent
+//! Tensors").
+//!
+//! Layout transformations (permute/reshape) reorder tensor entries
+//! without changing the singular-value spectra of its matricizations.
+//! For an r-way tensor we enumerate the non-trivial dimension subsets
+//! `G`, matricize with `G` as rows, and record a spectrum invariant per
+//! unfolding. Since `sigma(T_(G)) == sigma(T_(Gc))`, only the canonical
+//! half of the subsets is computed.
+//!
+//! Instead of a full thin SVD per unfolding, the hot path records the
+//! **spectral moments** `tr(G^k)`, `G = M M^T`, `k = 1..K` — the power
+//! sums of squared singular values, which determine the spectrum and
+//! are computable as pure matmuls. That is exactly the computation the
+//! L1 Pallas kernel (`python/compile/kernels/fingerprint.py`) performs
+//! on the MXU; [`MomentEngine`] abstracts over the Rust fallback and the
+//! PJRT-compiled artifact ([`crate::runtime`]). Exact Jacobi-SVD
+//! spectra ([`crate::linalg::singular_values`]) validate the moment
+//! path in tests.
+
+use crate::tensor::Tensor;
+
+/// Number of spectral moments per unfolding.
+pub const MOMENT_ORDER: usize = 4;
+
+/// Computes spectral moments of a matricized tensor. Implementations:
+/// the in-process Rust engine (default) and the PJRT-compiled Pallas
+/// kernel (see `runtime::PjrtMomentEngine`).
+pub trait MomentEngine: Sync {
+    /// `tr((M M^T)^k)` for `k = 1..=order`, with `M` oriented so that
+    /// `rows <= cols`.
+    fn moments(&self, mat: &Tensor, order: usize) -> Vec<f64>;
+
+    /// Engine name for reports.
+    fn name(&self) -> &'static str {
+        "rust"
+    }
+}
+
+/// Pure-Rust moment engine (f64 accumulation).
+pub struct RustMomentEngine;
+
+impl MomentEngine for RustMomentEngine {
+    fn moments(&self, mat: &Tensor, order: usize) -> Vec<f64> {
+        crate::linalg::spectral_moments(mat, order)
+    }
+}
+
+/// Invariants of one unfolding.
+#[derive(Clone, Debug, PartialEq)]
+pub struct UnfoldingInvariant {
+    /// Bitmask over dims selecting the row group `G`.
+    pub mask: u32,
+    /// Raw moments `tr(G^k)`, k = 1..=MOMENT_ORDER.
+    pub moments: Vec<f64>,
+}
+
+/// Layout-invariant fingerprint of a tensor.
+#[derive(Clone, Debug)]
+pub struct Fingerprint {
+    pub numel: usize,
+    /// Frobenius norm (= sqrt of first moment; cheap prefilter).
+    pub fro: f64,
+    /// Invariants for the canonical half of the non-trivial unfoldings,
+    /// sorted canonically so comparison is layout-independent.
+    pub unfoldings: Vec<UnfoldingInvariant>,
+}
+
+/// Matricize `t` with dims in `mask` as rows (row-major within groups).
+pub fn unfold(t: &Tensor, mask: u32) -> Tensor {
+    let r = t.rank();
+    let rows_dims: Vec<usize> = (0..r).filter(|i| mask & (1 << i) != 0).collect();
+    let cols_dims: Vec<usize> = (0..r).filter(|i| mask & (1 << i) == 0).collect();
+    let m: usize = rows_dims.iter().map(|&d| t.shape()[d]).product();
+    let n: usize = cols_dims.iter().map(|&d| t.shape()[d]).product();
+    let perm: Vec<usize> = rows_dims.iter().chain(cols_dims.iter()).copied().collect();
+    t.permute(&perm).contiguous().reshape(&[m, n])
+}
+
+/// Orient a matrix so rows <= cols (spectra invariant under transpose).
+fn orient(m: Tensor) -> Tensor {
+    if m.shape()[0] <= m.shape()[1] {
+        m
+    } else {
+        m.t().contiguous()
+    }
+}
+
+/// Canonical unfolding masks for rank `r`: one representative of each
+/// `{G, Gc}` pair (the one containing dim 0), excluding trivial sets.
+/// Rank-1 tensors get the single row-vector unfolding (mask 0 marker).
+pub fn canonical_masks(r: usize) -> Vec<u32> {
+    if r <= 1 {
+        return vec![0];
+    }
+    let full = (1u32 << r) - 1;
+    (1..full)
+        .filter(|g| g & 1 == 1) // contains dim 0 => canonical half
+        .collect()
+}
+
+/// Compute the fingerprint of a tensor with a given engine.
+pub fn fingerprint_with(engine: &dyn MomentEngine, t: &Tensor) -> Fingerprint {
+    let numel = t.numel();
+    let r = t.rank().max(1);
+    let mut unfoldings = Vec::new();
+    for mask in canonical_masks(r) {
+        let mat = if r == 1 {
+            t.reshape(&[1, numel])
+        } else {
+            orient(unfold(t, mask))
+        };
+        let moments = engine.moments(&mat, MOMENT_ORDER);
+        unfoldings.push(UnfoldingInvariant { mask, moments });
+    }
+    // canonical sort: by moment vector, so two layouts of the same data
+    // produce the same sequence
+    unfoldings.sort_by(|a, b| {
+        a.moments
+            .partial_cmp(&b.moments)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let fro = unfoldings
+        .first()
+        .map(|u| u.moments[0].max(0.0).sqrt())
+        .unwrap_or(0.0);
+    Fingerprint { numel, fro, unfoldings }
+}
+
+/// Fingerprint with the default Rust engine.
+pub fn fingerprint(t: &Tensor) -> Fingerprint {
+    fingerprint_with(&RustMomentEngine, t)
+}
+
+/// Relative distance between two moment vectors: max over k of the
+/// relative difference.
+fn moment_distance(a: &[f64], b: &[f64]) -> f64 {
+    let mut d: f64 = 0.0;
+    for (x, y) in a.iter().zip(b.iter()) {
+        let rel = (x - y).abs() / x.abs().max(y.abs()).max(1e-30);
+        d = d.max(rel);
+    }
+    d
+}
+
+impl Fingerprint {
+    /// Distance in [0, inf): 0 for identical invariant sets. Tensors
+    /// with different element counts are infinitely far apart.
+    pub fn distance(&self, other: &Fingerprint) -> f64 {
+        if self.numel != other.numel {
+            return f64::INFINITY;
+        }
+        // Injective greedy matching from the smaller invariant list into
+        // the larger (rank can differ across systems after reshapes).
+        let (small, large) = if self.unfoldings.len() <= other.unfoldings.len() {
+            (&self.unfoldings, &other.unfoldings)
+        } else {
+            (&other.unfoldings, &self.unfoldings)
+        };
+        let mut used = vec![false; large.len()];
+        let mut worst: f64 = 0.0;
+        for u in small {
+            let mut best = f64::INFINITY;
+            let mut best_j = None;
+            for (j, v) in large.iter().enumerate() {
+                if used[j] {
+                    continue;
+                }
+                let d = moment_distance(&u.moments, &v.moments);
+                if d < best {
+                    best = d;
+                    best_j = Some(j);
+                }
+            }
+            if let Some(j) = best_j {
+                used[j] = true;
+            }
+            worst = worst.max(best);
+        }
+        worst
+    }
+
+    /// The paper's equivalence predicate at tolerance eps.
+    pub fn matches(&self, other: &Fingerprint, eps: f64) -> bool {
+        self.distance(other) <= eps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    #[test]
+    fn canonical_masks_counts() {
+        assert_eq!(canonical_masks(1), vec![0]);
+        assert_eq!(canonical_masks(2), vec![1]); // {0} vs {1}: one pair
+        assert_eq!(canonical_masks(3).len(), 3); // 2^3-2 = 6 unfoldings, 3 pairs
+        assert_eq!(canonical_masks(4).len(), 7);
+    }
+
+    #[test]
+    fn identical_tensors_distance_zero() {
+        let mut rng = Prng::new(1);
+        let t = Tensor::randn(&mut rng, &[4, 6, 8]);
+        let f1 = fingerprint(&t);
+        let f2 = fingerprint(&t.clone());
+        assert!(f1.distance(&f2) < 1e-12);
+    }
+
+    #[test]
+    fn permuted_layouts_match() {
+        // HND vs NHD attention layouts (paper's motivating example)
+        let mut rng = Prng::new(2);
+        let hnd = Tensor::randn(&mut rng, &[2, 3, 5, 7]);
+        let nhd = hnd.permute(&[0, 2, 1, 3]).contiguous();
+        let f1 = fingerprint(&hnd);
+        let f2 = fingerprint(&nhd);
+        assert!(f1.matches(&f2, 1e-4), "distance {}", f1.distance(&f2));
+    }
+
+    #[test]
+    fn elementwise_comparison_would_fail_where_fingerprint_succeeds() {
+        let mut rng = Prng::new(3);
+        let a = Tensor::randn(&mut rng, &[4, 8, 16]);
+        let b = a.permute(&[1, 0, 2]).contiguous();
+        // naive element-wise check fails (different layout)…
+        assert!(a.to_vec() != b.to_vec());
+        // …but the invariant sets match
+        assert!(fingerprint(&a).matches(&fingerprint(&b), 1e-4));
+    }
+
+    #[test]
+    fn different_tensors_do_not_match() {
+        let mut rng = Prng::new(4);
+        let a = Tensor::randn(&mut rng, &[8, 8]);
+        let b = Tensor::randn(&mut rng, &[8, 8]);
+        let d = fingerprint(&a).distance(&fingerprint(&b));
+        assert!(d > 0.05, "independent tensors too close: {d}");
+    }
+
+    #[test]
+    fn different_numel_never_matches() {
+        let a = Tensor::zeros(&[4, 4]);
+        let b = Tensor::zeros(&[4, 5]);
+        assert_eq!(fingerprint(&a).distance(&fingerprint(&b)), f64::INFINITY);
+    }
+
+    #[test]
+    fn reshaped_matrix_still_matches_via_injective_map() {
+        // [B, S, H] vs [B*S, H]: systems flatten batch dims differently
+        let mut rng = Prng::new(5);
+        let t3 = Tensor::randn(&mut rng, &[4, 6, 10]);
+        let t2 = t3.reshape(&[24, 10]);
+        let f3 = fingerprint(&t3);
+        let f2 = fingerprint(&t2);
+        // the 2-D tensor's single unfolding appears among the 3-D one's
+        assert!(f3.matches(&f2, 1e-6), "distance {}", f3.distance(&f2));
+    }
+
+    #[test]
+    fn moments_match_exact_svd_spectrum() {
+        let mut rng = Prng::new(6);
+        let t = Tensor::randn(&mut rng, &[5, 12]);
+        let f = fingerprint(&t);
+        let sv = crate::linalg::singular_values(&t);
+        let m1: f64 = sv.iter().map(|&s| (s as f64).powi(2)).sum();
+        let rel = (f.unfoldings[0].moments[0] - m1).abs() / m1;
+        assert!(rel < 1e-3, "tr(G) {} vs sum sigma^2 {m1}", f.unfoldings[0].moments[0]);
+    }
+
+    #[test]
+    fn small_noise_within_loose_tolerance() {
+        // TF32-rounded results must still match at the paper's optimal
+        // epsilon range (1e-4..1.8e-2)
+        let mut rng = Prng::new(7);
+        let a = Tensor::randn(&mut rng, &[16, 16]);
+        let noisy = crate::tensor::ops::map(&a, crate::tensor::ops::tf32_round);
+        let d = fingerprint(&a).distance(&fingerprint(&noisy));
+        assert!(d < 1e-2, "tf32 noise distance {d}");
+        assert!(d > 0.0);
+    }
+
+    #[test]
+    fn prop_fingerprint_invariant_under_random_permutations() {
+        use crate::prop;
+        let gen = prop::Gen::new(|r| {
+            let rank = r.range(2, 4);
+            let shape: Vec<usize> = (0..rank).map(|_| r.range(2, 6)).collect();
+            let t = Tensor::randn(r, &shape);
+            let mut perm: Vec<usize> = (0..rank).collect();
+            r.shuffle(&mut perm);
+            (t, perm)
+        });
+        prop::forall("fingerprint permute-invariant", &gen, 40, |(t, perm)| {
+            let p = t.permute(perm).contiguous();
+            fingerprint(t).matches(&fingerprint(&p), 1e-4)
+        });
+    }
+
+    #[test]
+    fn rank1_tensors_fingerprintable() {
+        let mut rng = Prng::new(8);
+        let v = Tensor::randn(&mut rng, &[32]);
+        let f = fingerprint(&v);
+        assert_eq!(f.unfoldings.len(), 1);
+        assert!(f.fro > 0.0);
+    }
+}

@@ -1,0 +1,356 @@
+//! Dominator analysis on computational graphs.
+//!
+//! Algorithm 1 (paper §4.2) cuts two graphs at equivalent tensors found
+//! on their *dominator paths* — the chain source ≻ … ≻ sink in the
+//! dominator tree. We implement the Cooper–Harvey–Kennedy iterative
+//! dominator algorithm over reverse postorder, plus post-dominators (the
+//! same computation on the reversed graph), which define the node
+//! segments between consecutive cut points.
+
+use super::{Graph, NodeId};
+
+/// Immediate-dominator table: `idom[v]` is `v`'s immediate dominator;
+/// `idom[root] == root`; unreachable nodes hold `usize::MAX`.
+#[derive(Clone, Debug)]
+pub struct DomTree {
+    pub idom: Vec<NodeId>,
+    pub root: NodeId,
+    /// depth of each node in the dominator tree (root = 0).
+    pub depth: Vec<usize>,
+}
+
+pub const UNREACHABLE: usize = usize::MAX;
+
+fn postorder(n_nodes: usize, succ: &[Vec<NodeId>], root: NodeId) -> Vec<NodeId> {
+    let mut order = Vec::with_capacity(n_nodes);
+    let mut visited = vec![false; n_nodes];
+    // iterative DFS with explicit phase
+    let mut stack: Vec<(NodeId, usize)> = vec![(root, 0)];
+    visited[root] = true;
+    while let Some(&mut (v, ref mut i)) = stack.last_mut() {
+        if *i < succ[v].len() {
+            let child = succ[v][*i];
+            *i += 1;
+            if !visited[child] {
+                visited[child] = true;
+                stack.push((child, 0));
+            }
+        } else {
+            order.push(v);
+            stack.pop();
+        }
+    }
+    order
+}
+
+/// Compute dominators of a flow graph given by successor lists.
+pub fn dominators(n_nodes: usize, succ: &[Vec<NodeId>], root: NodeId) -> DomTree {
+    let post = postorder(n_nodes, succ, root);
+    let mut post_idx = vec![UNREACHABLE; n_nodes];
+    for (i, &v) in post.iter().enumerate() {
+        post_idx[v] = i;
+    }
+    // predecessor lists restricted to reachable nodes
+    let mut pred = vec![Vec::new(); n_nodes];
+    for v in 0..n_nodes {
+        if post_idx[v] == UNREACHABLE {
+            continue;
+        }
+        for &s in &succ[v] {
+            if post_idx[s] != UNREACHABLE {
+                pred[s].push(v);
+            }
+        }
+    }
+    let mut idom = vec![UNREACHABLE; n_nodes];
+    idom[root] = root;
+    let mut changed = true;
+    while changed {
+        changed = false;
+        // reverse postorder
+        for &v in post.iter().rev() {
+            if v == root {
+                continue;
+            }
+            let mut new_idom = UNREACHABLE;
+            for &p in &pred[v] {
+                if idom[p] == UNREACHABLE {
+                    continue;
+                }
+                new_idom = if new_idom == UNREACHABLE {
+                    p
+                } else {
+                    intersect(&idom, &post_idx, p, new_idom)
+                };
+            }
+            if new_idom != UNREACHABLE && idom[v] != new_idom {
+                idom[v] = new_idom;
+                changed = true;
+            }
+        }
+    }
+    // depths
+    let mut depth = vec![0usize; n_nodes];
+    for &v in post.iter().rev() {
+        if v != root && idom[v] != UNREACHABLE {
+            depth[v] = depth[idom[v]] + 1;
+        }
+    }
+    DomTree { idom, root, depth }
+}
+
+fn intersect(idom: &[NodeId], post_idx: &[usize], mut a: NodeId, mut b: NodeId) -> NodeId {
+    while a != b {
+        while post_idx[a] < post_idx[b] {
+            a = idom[a];
+        }
+        while post_idx[b] < post_idx[a] {
+            b = idom[b];
+        }
+    }
+    a
+}
+
+impl DomTree {
+    /// Does `a` dominate `b`? (reflexive)
+    pub fn dominates(&self, a: NodeId, b: NodeId) -> bool {
+        if self.idom[b] == UNREACHABLE && b != self.root {
+            return false;
+        }
+        let mut v = b;
+        loop {
+            if v == a {
+                return true;
+            }
+            if v == self.root {
+                return false;
+            }
+            v = self.idom[v];
+        }
+    }
+
+    /// The dominator path root → `sink`: every node that dominates
+    /// `sink`, in root-first order.
+    pub fn path_to(&self, sink: NodeId) -> Vec<NodeId> {
+        let mut path = vec![sink];
+        let mut v = sink;
+        while v != self.root {
+            v = self.idom[v];
+            path.push(v);
+        }
+        path.reverse();
+        path
+    }
+}
+
+/// Dominator analysis of a computational graph, augmented with a virtual
+/// source (dominating all graph sources) and virtual sink (dominated by
+/// all graph sinks) so the dominator path is well-defined for
+/// multi-input, multi-output graphs.
+#[derive(Clone, Debug)]
+pub struct GraphDom {
+    /// dominator tree over ids 0..n+2; `vsrc = n`, `vsink = n + 1`.
+    pub dom: DomTree,
+    /// post-dominator tree (dominators of the reversed graph from vsink).
+    pub pdom: DomTree,
+    pub vsrc: NodeId,
+    pub vsink: NodeId,
+}
+
+impl GraphDom {
+    /// Run dominator + post-dominator analysis on `g`.
+    ///
+    /// The virtual source connects only to *activation* sources (not
+    /// `Weight` nodes): the dominator path must follow the dataflow
+    /// spine of the model, as in the paper's Figure 7, where parameter
+    /// edges do not count as alternative paths. Weight nodes are
+    /// unreachable in the forward dominator analysis and are simply
+    /// ignored by it (they carry no energy).
+    pub fn analyze(g: &Graph) -> GraphDom {
+        let n = g.len();
+        let vsrc = n;
+        let vsink = n + 1;
+        let mut succ = vec![Vec::new(); n + 2];
+        for node in &g.nodes {
+            for &i in &node.inputs {
+                succ[i].push(node.id);
+            }
+        }
+        let sources = g.sources();
+        let activation_sources: Vec<NodeId> = sources
+            .iter()
+            .copied()
+            .filter(|&s| g.nodes[s].op != crate::graph::OpKind::Weight)
+            .collect();
+        let roots = if activation_sources.is_empty() { sources } else { activation_sources };
+        for s in roots {
+            succ[vsrc].push(s);
+        }
+        for s in g.sinks() {
+            succ[s].push(vsink);
+        }
+        let dom = dominators(n + 2, &succ, vsrc);
+        // reversed graph for post-dominators
+        let mut rsucc = vec![Vec::new(); n + 2];
+        for (v, ss) in succ.iter().enumerate() {
+            for &s in ss {
+                rsucc[s].push(v);
+            }
+        }
+        let pdom = dominators(n + 2, &rsucc, vsink);
+        GraphDom { dom, pdom, vsrc, vsink }
+    }
+
+    /// The dominator path from virtual source to virtual sink,
+    /// with the virtual endpoints stripped — the paper's `P`.
+    pub fn dominator_path(&self) -> Vec<NodeId> {
+        self.dom
+            .path_to(self.vsink)
+            .into_iter()
+            .filter(|&v| v != self.vsrc && v != self.vsink)
+            .collect()
+    }
+
+    /// Nodes strictly between two cut points: dominated by `a` and
+    /// post-dominated by `b`, excluding the endpoints themselves.
+    pub fn segment(&self, g: &Graph, a: NodeId, b: NodeId) -> Vec<NodeId> {
+        (0..g.len())
+            .filter(|&v| {
+                v != a && v != b && self.dom.dominates(a, v) && self.pdom.dominates(b, v)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+
+    fn diamond() -> Graph {
+        let mut g = Graph::new("d");
+        let i = g.add(OpKind::Input, &[], "x");
+        let a = g.add(OpKind::MatMul, &[i], "a");
+        let b = g.add(OpKind::Gelu, &[a], "b");
+        let c = g.add(OpKind::Tanh, &[a], "c");
+        let d = g.add(OpKind::Add, &[b, c], "d");
+        g.add(OpKind::Output, &[d], "out");
+        g
+    }
+
+    #[test]
+    fn diamond_dominators() {
+        let g = diamond();
+        let gd = GraphDom::analyze(&g);
+        // a (id 1) dominates everything downstream
+        assert!(gd.dom.dominates(1, 2));
+        assert!(gd.dom.dominates(1, 3));
+        assert!(gd.dom.dominates(1, 4));
+        // neither branch dominates the join
+        assert!(!gd.dom.dominates(2, 4));
+        assert!(!gd.dom.dominates(3, 4));
+    }
+
+    #[test]
+    fn dominator_path_skips_branches() {
+        let g = diamond();
+        let gd = GraphDom::analyze(&g);
+        let p = gd.dominator_path();
+        assert_eq!(p, vec![0, 1, 4, 5]); // input, matmul, join-add, output
+    }
+
+    #[test]
+    fn chain_path_is_whole_chain() {
+        let mut g = Graph::new("chain");
+        let mut prev = g.add(OpKind::Input, &[], "x");
+        for i in 0..5 {
+            prev = g.add(OpKind::MatMul, &[prev], &format!("m{i}"));
+        }
+        let gd = GraphDom::analyze(&g);
+        assert_eq!(gd.dominator_path().len(), 6);
+    }
+
+    #[test]
+    fn segment_between_cuts() {
+        let g = diamond();
+        let gd = GraphDom::analyze(&g);
+        // between matmul (1) and add (4): the two branch nodes
+        let seg = gd.segment(&g, 1, 4);
+        assert_eq!(seg, vec![2, 3]);
+    }
+
+    #[test]
+    fn postdominators_mirror() {
+        let g = diamond();
+        let gd = GraphDom::analyze(&g);
+        // the join post-dominates both branches
+        assert!(gd.pdom.dominates(4, 2));
+        assert!(gd.pdom.dominates(4, 3));
+        // a branch does not post-dominate the fork
+        assert!(!gd.pdom.dominates(2, 1));
+    }
+
+    #[test]
+    fn multi_source_graph_has_virtual_root_path() {
+        let mut g = Graph::new("ms");
+        let x = g.add(OpKind::Input, &[], "x");
+        let w = g.add(OpKind::Weight, &[], "w");
+        let m = g.add(OpKind::MatMul, &[x, w], "m");
+        g.add(OpKind::Output, &[m], "o");
+        let gd = GraphDom::analyze(&g);
+        let p = gd.dominator_path();
+        // weights are not flow sources: the activation spine is
+        // input -> matmul -> output
+        assert_eq!(p, vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn weight_only_sources_fall_back() {
+        let mut g = Graph::new("wonly");
+        let w1 = g.add(OpKind::Weight, &[], "w1");
+        let w2 = g.add(OpKind::Weight, &[], "w2");
+        let m = g.add(OpKind::MatMul, &[w1, w2], "m");
+        g.add(OpKind::Output, &[m], "o");
+        let gd = GraphDom::analyze(&g);
+        // degenerate graph: weights become roots so analysis still works
+        assert!(gd.dominator_path().contains(&m));
+    }
+
+    #[test]
+    fn dominates_is_reflexive_and_rooted() {
+        let g = diamond();
+        let gd = GraphDom::analyze(&g);
+        for v in 0..g.len() {
+            assert!(gd.dom.dominates(v, v));
+            assert!(gd.dom.dominates(gd.vsrc, v));
+        }
+    }
+
+    /// Property: on random DAGs, every node on the dominator path to the
+    /// sink dominates the sink, and path depths strictly increase.
+    #[test]
+    fn prop_dominator_path_sound_on_random_dags() {
+        use crate::prop;
+        let gen = prop::Gen::new(|r| {
+            let n = r.range(4, 40);
+            let mut g = Graph::new("rand");
+            g.add(OpKind::Input, &[], "x");
+            for i in 1..n {
+                let k = r.range(1, 2.min(i));
+                let mut ins = Vec::new();
+                for _ in 0..k {
+                    ins.push(r.below(i));
+                }
+                ins.dedup();
+                g.add(OpKind::MatMul, &ins, "n");
+            }
+            g
+        });
+        prop::forall("dominator path sound", &gen, 60, |g| {
+            let gd = GraphDom::analyze(g);
+            let p = gd.dom.path_to(gd.vsink);
+            p.iter().all(|&v| gd.dom.dominates(v, gd.vsink))
+                && p.windows(2).all(|w| gd.dom.depth[w[1]] == gd.dom.depth[w[0]] + 1)
+        });
+    }
+}

@@ -1,0 +1,393 @@
+//! Computational-graph IR: operators are nodes, tensors are edges.
+//!
+//! Magneton never compares ML systems at the source level (paper §4.2);
+//! it compares their computational graphs. Each node produces exactly
+//! one output tensor (multi-output ops like `split` are modelled as one
+//! `SplitChunk` node per chunk), so "tensor" and "node output" coincide,
+//! matching the paper's formulation where equivalent-tensor pairs become
+//! cut points of the recursive subgraph matcher.
+
+pub mod dom;
+
+use std::collections::BTreeMap;
+
+/// Node identifier within one [`Graph`].
+pub type NodeId = usize;
+
+/// Operator vocabulary shared by all mini ML systems.
+///
+/// The set covers every operator the paper's 24 cases touch: GEMM family
+/// (`MatMul`/`AddMm`), elementwise, normalisation, attention, convolution,
+/// layout ops (`Permute`/`Contiguous`/`Copy`), composition ops
+/// (`Concat`/`SplitChunk`/`Slice`), the misc numerics ops behind cases
+/// c3/c6/c14/c15/c16 (`TopK`/`Sort`/`Eigvals`/`Stft`/`Expm`/`CountNonzero`),
+/// and distributed ops (`AllReduce`/`Barrier`/`Idle`) for the DDP case.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum OpKind {
+    /// Model input placeholder.
+    Input,
+    /// Learned parameter (weights/bias).
+    Weight,
+    MatMul,
+    /// Fused bias + matmul (torch.addmm).
+    AddMm,
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Scale,
+    Pow,
+    Tanh,
+    Gelu,
+    Silu,
+    Relu,
+    Softmax,
+    LayerNorm,
+    RmsNorm,
+    /// Fused scaled-dot-product attention.
+    Attention,
+    Conv2d,
+    /// Layout permutation (zero-copy view).
+    Permute,
+    Reshape,
+    /// Materialising layout change (charged memory traffic).
+    Contiguous,
+    /// Explicit device-to-device data copy.
+    Copy,
+    Concat,
+    /// k-th output of a split.
+    SplitChunk,
+    Slice,
+    TopK,
+    Sort,
+    CumSum,
+    RepeatInterleave,
+    Embedding,
+    Arange,
+    CrossEntropy,
+    Eigvals,
+    Stft,
+    Expm,
+    CountNonzero,
+    /// Gradient all-reduce (DDP).
+    AllReduce,
+    /// Synchronisation barrier that keeps the GPU busy (dist.Join).
+    Barrier,
+    /// Idle period (early-exit path).
+    Idle,
+    /// Final output marker.
+    Output,
+}
+
+impl OpKind {
+    /// Stable lowercase name (used in reports and dispatch rules).
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::Input => "input",
+            OpKind::Weight => "weight",
+            OpKind::MatMul => "matmul",
+            OpKind::AddMm => "addmm",
+            OpKind::Add => "add",
+            OpKind::Sub => "sub",
+            OpKind::Mul => "mul",
+            OpKind::Div => "div",
+            OpKind::Scale => "scale",
+            OpKind::Pow => "pow",
+            OpKind::Tanh => "tanh",
+            OpKind::Gelu => "gelu",
+            OpKind::Silu => "silu",
+            OpKind::Relu => "relu",
+            OpKind::Softmax => "softmax",
+            OpKind::LayerNorm => "layernorm",
+            OpKind::RmsNorm => "rmsnorm",
+            OpKind::Attention => "attention",
+            OpKind::Conv2d => "conv2d",
+            OpKind::Permute => "permute",
+            OpKind::Reshape => "reshape",
+            OpKind::Contiguous => "contiguous",
+            OpKind::Copy => "copy",
+            OpKind::Concat => "concat",
+            OpKind::SplitChunk => "split",
+            OpKind::Slice => "slice",
+            OpKind::TopK => "topk",
+            OpKind::Sort => "sort",
+            OpKind::CumSum => "cumsum",
+            OpKind::RepeatInterleave => "repeat_interleave",
+            OpKind::Embedding => "embedding",
+            OpKind::Arange => "arange",
+            OpKind::CrossEntropy => "cross_entropy",
+            OpKind::Eigvals => "eigvals",
+            OpKind::Stft => "stft",
+            OpKind::Expm => "expm",
+            OpKind::CountNonzero => "count_nonzero",
+            OpKind::AllReduce => "all_reduce",
+            OpKind::Barrier => "barrier",
+            OpKind::Idle => "idle",
+            OpKind::Output => "output",
+        }
+    }
+
+    /// Ops that neither compute nor move data (free in the energy model).
+    pub fn is_virtual(&self) -> bool {
+        matches!(self, OpKind::Input | OpKind::Weight | OpKind::Output | OpKind::Permute | OpKind::Reshape)
+    }
+}
+
+/// String attribute map (dispatch keys, layouts, fusion hints, …).
+pub type Attrs = BTreeMap<String, String>;
+
+/// One operator instance.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: NodeId,
+    pub op: OpKind,
+    /// Producer nodes whose output tensors feed this op, in order.
+    pub inputs: Vec<NodeId>,
+    pub attrs: Attrs,
+    /// Human-readable site, e.g. `"attn.q_proj"` — stands in for the
+    /// source location the paper reports in diagnoses.
+    pub label: String,
+}
+
+/// A DAG of operators. Edges are implied by `Node::inputs`.
+#[derive(Clone, Debug, Default)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+    /// Display name (system + workload).
+    pub name: String,
+}
+
+impl Graph {
+    pub fn new(name: &str) -> Graph {
+        Graph { nodes: Vec::new(), name: name.to_string() }
+    }
+
+    /// Append a node; inputs must already exist (enforces acyclicity).
+    pub fn add(&mut self, op: OpKind, inputs: &[NodeId], label: &str) -> NodeId {
+        self.add_attrs(op, inputs, label, Attrs::new())
+    }
+
+    /// Append a node with attributes.
+    pub fn add_attrs(&mut self, op: OpKind, inputs: &[NodeId], label: &str, attrs: Attrs) -> NodeId {
+        let id = self.nodes.len();
+        for &i in inputs {
+            assert!(i < id, "input {i} must precede node {id} (acyclic by construction)");
+        }
+        self.nodes.push(Node { id, op, inputs: inputs.to_vec(), attrs, label: label.to_string() });
+        id
+    }
+
+    /// Convenience: single attribute.
+    pub fn add_attr1(&mut self, op: OpKind, inputs: &[NodeId], label: &str, k: &str, v: &str) -> NodeId {
+        let mut a = Attrs::new();
+        a.insert(k.to_string(), v.to_string());
+        self.add_attrs(op, inputs, label, a)
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Successor adjacency (consumers of each node's output).
+    pub fn consumers(&self) -> Vec<Vec<NodeId>> {
+        let mut out = vec![Vec::new(); self.nodes.len()];
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                out[i].push(n.id);
+            }
+        }
+        out
+    }
+
+    /// Nodes with no inputs (graph sources: Input/Weight/Arange).
+    pub fn sources(&self) -> Vec<NodeId> {
+        self.nodes.iter().filter(|n| n.inputs.is_empty()).map(|n| n.id).collect()
+    }
+
+    /// Nodes whose output no one consumes (graph sinks).
+    pub fn sinks(&self) -> Vec<NodeId> {
+        let cons = self.consumers();
+        self.nodes.iter().filter(|n| cons[n.id].is_empty()).map(|n| n.id).collect()
+    }
+
+    /// Topological order (construction order is already topological, but
+    /// this re-derives it as a structural check).
+    pub fn topo_order(&self) -> Vec<NodeId> {
+        let n = self.nodes.len();
+        let mut indeg = vec![0usize; n];
+        for node in &self.nodes {
+            indeg[node.id] = node.inputs.len();
+        }
+        let cons = self.consumers();
+        let mut queue: Vec<NodeId> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(v) = queue.pop() {
+            order.push(v);
+            for &c in &cons[v] {
+                indeg[c] -= 1;
+                if indeg[c] == 0 {
+                    queue.push(c);
+                }
+            }
+        }
+        assert_eq!(order.len(), n, "graph has a cycle");
+        order
+    }
+
+    /// Nodes reachable from `from` following consumer edges (inclusive).
+    pub fn reachable_from(&self, from: NodeId) -> Vec<bool> {
+        let cons = self.consumers();
+        let mut seen = vec![false; self.nodes.len()];
+        let mut stack = vec![from];
+        while let Some(v) = stack.pop() {
+            if seen[v] {
+                continue;
+            }
+            seen[v] = true;
+            for &c in &cons[v] {
+                stack.push(c);
+            }
+        }
+        seen
+    }
+
+    /// Nodes that can reach `to` following producer edges (inclusive).
+    pub fn reaching(&self, to: NodeId) -> Vec<bool> {
+        let mut seen = vec![false; self.nodes.len()];
+        let mut stack = vec![to];
+        while let Some(v) = stack.pop() {
+            if seen[v] {
+                continue;
+            }
+            seen[v] = true;
+            for &p in &self.nodes[v].inputs {
+                stack.push(p);
+            }
+        }
+        seen
+    }
+
+    /// Induced subgraph on `keep` (a node-id set), remapping ids and
+    /// dropping edges to excluded nodes. Returns the subgraph and the
+    /// old-id → new-id map.
+    pub fn induced(&self, keep: &[NodeId], name: &str) -> (Graph, BTreeMap<NodeId, NodeId>) {
+        let mut keep_sorted = keep.to_vec();
+        keep_sorted.sort_unstable();
+        keep_sorted.dedup();
+        let mut map = BTreeMap::new();
+        let mut g = Graph::new(name);
+        for &old in &keep_sorted {
+            let node = &self.nodes[old];
+            let inputs: Vec<NodeId> = node
+                .inputs
+                .iter()
+                .filter_map(|i| map.get(i).copied())
+                .collect();
+            let new_id = g.add_attrs(node.op, &inputs, &node.label, node.attrs.clone());
+            map.insert(old, new_id);
+        }
+        (g, map)
+    }
+
+    /// Graphviz DOT rendering (debugging aid).
+    pub fn to_dot(&self) -> String {
+        let mut s = format!("digraph \"{}\" {{\n", self.name);
+        for n in &self.nodes {
+            s.push_str(&format!("  n{} [label=\"{}:{}\"]\n", n.id, n.op.name(), n.label));
+        }
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                s.push_str(&format!("  n{} -> n{}\n", i, n.id));
+            }
+        }
+        s.push_str("}\n");
+        s
+    }
+
+    /// Count of non-virtual (energy-bearing) operators.
+    pub fn op_count(&self) -> usize {
+        self.nodes.iter().filter(|n| !n.op.is_virtual()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> Graph {
+        // in -> a -> {b, c} -> d(out)
+        let mut g = Graph::new("diamond");
+        let i = g.add(OpKind::Input, &[], "x");
+        let a = g.add(OpKind::MatMul, &[i], "a");
+        let b = g.add(OpKind::Gelu, &[a], "b");
+        let c = g.add(OpKind::Tanh, &[a], "c");
+        let d = g.add(OpKind::Add, &[b, c], "d");
+        g.add(OpKind::Output, &[d], "out");
+        g
+    }
+
+    #[test]
+    fn topo_order_is_valid() {
+        let g = diamond();
+        let order = g.topo_order();
+        let pos: BTreeMap<NodeId, usize> = order.iter().enumerate().map(|(i, &v)| (v, i)).collect();
+        for n in &g.nodes {
+            for &i in &n.inputs {
+                assert!(pos[&i] < pos[&n.id]);
+            }
+        }
+    }
+
+    #[test]
+    fn sources_and_sinks() {
+        let g = diamond();
+        assert_eq!(g.sources(), vec![0]);
+        assert_eq!(g.sinks(), vec![5]);
+    }
+
+    #[test]
+    fn reachability() {
+        let g = diamond();
+        let from_a = g.reachable_from(1);
+        assert!(from_a[4] && from_a[5] && !from_a[0]);
+        let to_d = g.reaching(4);
+        assert!(to_d[0] && to_d[1] && to_d[2] && to_d[3] && !to_d[5]);
+    }
+
+    #[test]
+    fn induced_subgraph_remaps() {
+        let g = diamond();
+        let (sub, map) = g.induced(&[1, 2, 4], "sub");
+        assert_eq!(sub.len(), 3);
+        // 'a' lost its input (excluded), 'b' keeps edge to 'a'
+        assert!(sub.nodes[map[&1]].inputs.is_empty());
+        assert_eq!(sub.nodes[map[&2]].inputs, vec![map[&1]]);
+        // 'd' keeps only the edge from 'b'
+        assert_eq!(sub.nodes[map[&4]].inputs, vec![map[&2]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "must precede")]
+    fn forward_edge_panics() {
+        let mut g = Graph::new("bad");
+        g.add(OpKind::Add, &[3], "dangling");
+    }
+
+    #[test]
+    fn op_count_skips_virtual() {
+        let g = diamond();
+        assert_eq!(g.op_count(), 4); // matmul, gelu, tanh, add
+    }
+
+    #[test]
+    fn dot_contains_nodes_and_edges() {
+        let g = diamond();
+        let dot = g.to_dot();
+        assert!(dot.contains("matmul"));
+        assert!(dot.contains("n1 -> n2"));
+    }
+}

@@ -1,0 +1,46 @@
+//! # Magneton — differential energy debugging for ML systems
+//!
+//! Reproduction of *"Magneton: Optimizing Energy Efficiency of ML Systems
+//! via Differential Energy Debugging"*. Given two ML systems executing the
+//! same workload, Magneton profiles energy at the operator granularity,
+//! matches semantically equivalent subgraphs across their computational
+//! graphs (SVD-invariant tensor fingerprints + dominator-path recursive
+//! matching), detects subgraph pairs whose energy diverges with no
+//! performance/accuracy trade-off, and diagnoses the root cause by diffing
+//! the call paths and basic-block traces that lead to GPU kernel selection.
+//!
+//! The crate is organised bottom-up:
+//!
+//! * substrates — [`util`], [`prop`], [`tensor`], [`linalg`], [`graph`]
+//! * simulation — [`energy`], [`trace`], [`dispatch`], [`exec`]
+//! * Magneton core — [`fingerprint`], [`matching`], [`detect`], [`diagnose`]
+//! * evaluation fleet — [`systems`], [`workload`], [`cases`], [`profiler`]
+//! * integration — [`runtime`] (PJRT/XLA), [`coordinator`], [`report`]
+//!
+//! See `DESIGN.md` for the per-experiment index and the substitution table
+//! (simulated GPU in place of H200 + physical power meter, mini ML systems
+//! in place of vLLM/SGLang/..., etc.).
+
+pub mod util;
+pub mod prop;
+pub mod tensor;
+pub mod linalg;
+pub mod graph;
+pub mod energy;
+pub mod trace;
+pub mod dispatch;
+pub mod exec;
+pub mod fingerprint;
+pub mod matching;
+pub mod detect;
+pub mod diagnose;
+pub mod profiler;
+pub mod systems;
+pub mod workload;
+pub mod cases;
+pub mod runtime;
+pub mod coordinator;
+pub mod report;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

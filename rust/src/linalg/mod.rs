@@ -1,0 +1,400 @@
+//! Dense linear algebra substrate: one-sided Jacobi SVD (singular
+//! values), symmetric Jacobi eigensolver, and Gram matrices.
+//!
+//! Magneton's tensor-equivalence test (paper §4.2) compares the
+//! singular-value spectra of all non-trivial matricizations of a tensor.
+//! This module is the *exact* path; the hot path uses spectral moments
+//! computed by the Pallas-lowered fingerprint kernel (see
+//! [`crate::fingerprint`]), validated against this implementation.
+
+use crate::tensor::Tensor;
+
+/// Singular values of an `m x n` matrix (descending), via one-sided
+/// Jacobi on the thinner orientation. Accurate to ~1e-5 relative for the
+/// well-conditioned tensors Magneton fingerprints.
+pub fn singular_values(a: &Tensor) -> Vec<f32> {
+    assert_eq!(a.rank(), 2, "singular_values expects a matrix");
+    let (m, n) = (a.shape()[0], a.shape()[1]);
+    // Work on A^T A's implicit form: one-sided Jacobi orthogonalises the
+    // columns of the wider-than-tall orientation's transpose.
+    let (rows, cols, data) = if m >= n {
+        (m, n, a.to_vec())
+    } else {
+        (n, m, a.t().to_vec())
+    };
+    // Column-major copy for cache-friendly column ops.
+    let mut col = vec![0.0f64; rows * cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            col[c * rows + r] = data[r * cols + c] as f64;
+        }
+    }
+    one_sided_jacobi(&mut col, rows, cols)
+}
+
+/// One-sided Jacobi: rotate column pairs until all are orthogonal; the
+/// singular values are the resulting column norms.
+fn one_sided_jacobi(col: &mut [f64], rows: usize, cols: usize) -> Vec<f32> {
+    let max_sweeps = 60;
+    let eps = 1e-14;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..cols {
+            for q in (p + 1)..cols {
+                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+                let (cp, cq) = (p * rows, q * rows);
+                for r in 0..rows {
+                    let (x, y) = (col[cp + r], col[cq + r]);
+                    app += x * x;
+                    aqq += y * y;
+                    apq += x * y;
+                }
+                off += apq.abs();
+                if apq.abs() <= eps * (app * aqq).sqrt() {
+                    continue;
+                }
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for r in 0..rows {
+                    let (x, y) = (col[cp + r], col[cq + r]);
+                    col[cp + r] = c * x - s * y;
+                    col[cq + r] = s * x + c * y;
+                }
+            }
+        }
+        if off < 1e-12 {
+            break;
+        }
+    }
+    let mut sv: Vec<f32> = (0..cols)
+        .map(|c| {
+            let s: f64 = (0..rows).map(|r| col[c * rows + r].powi(2)).sum();
+            s.sqrt() as f32
+        })
+        .collect();
+    sv.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    sv
+}
+
+/// Eigenvalues of a symmetric matrix (descending) via classical Jacobi.
+pub fn eigvalsh(a: &Tensor) -> Vec<f32> {
+    assert_eq!(a.rank(), 2);
+    let n = a.shape()[0];
+    assert_eq!(n, a.shape()[1], "eigvalsh expects square");
+    let mut m: Vec<f64> = a.to_vec().iter().map(|&x| x as f64).collect();
+    let idx = |i: usize, j: usize| i * n + j;
+    for _sweep in 0..100 {
+        // largest off-diagonal magnitude
+        let mut off = 0.0f64;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[idx(i, j)].powi(2);
+            }
+        }
+        if off.sqrt() < 1e-12 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[idx(p, q)];
+                if apq.abs() < 1e-15 {
+                    continue;
+                }
+                let theta = (m[idx(q, q)] - m[idx(p, p)]) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (1.0 + theta * theta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for k in 0..n {
+                    let (akp, akq) = (m[idx(k, p)], m[idx(k, q)]);
+                    m[idx(k, p)] = c * akp - s * akq;
+                    m[idx(k, q)] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let (apk, aqk) = (m[idx(p, k)], m[idx(q, k)]);
+                    m[idx(p, k)] = c * apk - s * aqk;
+                    m[idx(q, k)] = s * apk + c * aqk;
+                }
+            }
+        }
+    }
+    let mut ev: Vec<f32> = (0..n).map(|i| m[idx(i, i)] as f32).collect();
+    ev.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    ev
+}
+
+/// Gram matrix `G = A Aᵀ` (`[m, n] -> [m, m]`). Prefers the smaller side:
+/// callers should orient `A` so `m <= n`.
+pub fn gram(a: &Tensor) -> Tensor {
+    assert_eq!(a.rank(), 2);
+    crate::tensor::ops::matmul(a, &a.t())
+}
+
+/// Frobenius norm.
+pub fn fro_norm(a: &Tensor) -> f32 {
+    a.to_vec().iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt() as f32
+}
+
+/// Spectral moments tr(G^k), k = 1..=order, of G = A Aᵀ, computed by
+/// repeated multiplication. These are the power sums of squared singular
+/// values — the fingerprint invariants of [`crate::fingerprint`].
+pub fn spectral_moments(a: &Tensor, order: usize) -> Vec<f64> {
+    assert!(order <= 4, "moment order > 4 not supported by the fast path");
+    let g = gram(a);
+    let m = g.shape()[0];
+    let gv: Vec<f64> = g.to_vec().iter().map(|&x| x as f64).collect();
+    let mut moments = Vec::with_capacity(order);
+    // m1 = tr(G)
+    moments.push((0..m).map(|i| gv[i * m + i]).sum());
+    if order >= 2 {
+        // m2 = tr(G^2) = ||G||_F^2 (G symmetric) — no matmul needed
+        moments.push(gv.iter().map(|x| x * x).sum());
+    }
+    if order >= 3 {
+        // one m^3 product: G2 = G * G
+        let mut g2 = vec![0.0f64; m * m];
+        for i in 0..m {
+            for l in 0..m {
+                let c = gv[i * m + l];
+                if c == 0.0 {
+                    continue;
+                }
+                let row = &gv[l * m..(l + 1) * m];
+                let out = &mut g2[i * m..(i + 1) * m];
+                for j in 0..m {
+                    out[j] += c * row[j];
+                }
+            }
+        }
+        // m3 = tr(G^3) = <G2, G>;  m4 = tr(G^4) = ||G2||_F^2
+        moments.push(g2.iter().zip(gv.iter()).map(|(a, b)| a * b).sum());
+        if order >= 4 {
+            moments.push(g2.iter().map(|x| x * x).sum());
+        }
+    }
+    moments.truncate(order);
+    moments
+}
+
+/// Matrix exponential by scaling-and-squaring with a truncated Taylor
+/// series (the jax-28614/jax-9239 cases exercise `expm`/`stft`; this is
+/// the reference numeric used by those scenarios).
+pub fn expm(a: &Tensor) -> Tensor {
+    assert_eq!(a.rank(), 2);
+    let n = a.shape()[0];
+    assert_eq!(n, a.shape()[1]);
+    // scale so ||A/2^s||_1 < 0.5
+    let norm1: f32 = (0..n)
+        .map(|j| (0..n).map(|i| a.at(&[i, j]).abs()).sum::<f32>())
+        .fold(0.0, f32::max);
+    let s = if norm1 > 0.5 { (norm1 / 0.5).log2().ceil() as i32 } else { 0 };
+    let scale = 0.5f32.powi(s);
+    let av: Vec<f32> = a.to_vec().iter().map(|&x| x * scale).collect();
+    let scaled = Tensor::from_vec(av, &[n, n]);
+    // Taylor: I + X + X^2/2! + ... (18 terms)
+    let mut result = eye(n);
+    let mut term = eye(n);
+    for k in 1..=18usize {
+        term = crate::tensor::ops::scale(
+            &crate::tensor::ops::matmul(&term, &scaled),
+            1.0 / k as f32,
+        );
+        result = crate::tensor::ops::add(&result, &term);
+    }
+    // square back s times
+    for _ in 0..s {
+        result = crate::tensor::ops::matmul(&result, &result);
+    }
+    result
+}
+
+/// Identity matrix.
+pub fn eye(n: usize) -> Tensor {
+    let mut v = vec![0.0f32; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    Tensor::from_vec(v, &[n, n])
+}
+
+/// Naive STFT magnitude with precomputed twiddle tables: frame the
+/// signal (hann window), take the DFT of each frame, return
+/// `[n_frames, n_bins]` magnitudes.
+pub fn stft_mag(signal: &Tensor, frame: usize, hop: usize) -> Tensor {
+    assert_eq!(signal.rank(), 1);
+    let x = signal.to_vec();
+    let n = x.len();
+    assert!(frame <= n && hop > 0);
+    let n_frames = (n - frame) / hop + 1;
+    let n_bins = frame / 2 + 1;
+    let window: Vec<f32> = (0..frame)
+        .map(|i| {
+            0.5 - 0.5 * (2.0 * std::f32::consts::PI * i as f32 / frame as f32).cos()
+        })
+        .collect();
+    // twiddle tables cos/sin[k * i] indexed [k][i]
+    let mut cos_t = vec![0.0f64; n_bins * frame];
+    let mut sin_t = vec![0.0f64; n_bins * frame];
+    for k in 0..n_bins {
+        for i in 0..frame {
+            let ang = -2.0 * std::f64::consts::PI * (k * i) as f64 / frame as f64;
+            cos_t[k * frame + i] = ang.cos();
+            sin_t[k * frame + i] = ang.sin();
+        }
+    }
+    let mut out = Vec::with_capacity(n_frames * n_bins);
+    for f in 0..n_frames {
+        let seg: Vec<f64> = (0..frame).map(|i| (x[f * hop + i] * window[i]) as f64).collect();
+        for k in 0..n_bins {
+            let (mut re, mut im) = (0.0f64, 0.0f64);
+            let (ct, st) = (&cos_t[k * frame..(k + 1) * frame], &sin_t[k * frame..(k + 1) * frame]);
+            for (i, &v) in seg.iter().enumerate() {
+                re += v * ct[i];
+                im += v * st[i];
+            }
+            out.push(((re * re + im * im).sqrt()) as f32);
+        }
+    }
+    Tensor::from_vec(out, &[n_frames, n_bins])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    #[test]
+    fn svd_of_diagonal() {
+        let a = Tensor::from_vec(vec![3., 0., 0., 0., 4., 0.], &[2, 3]);
+        let sv = singular_values(&a);
+        assert!((sv[0] - 4.0).abs() < 1e-4, "{sv:?}");
+        assert!((sv[1] - 3.0).abs() < 1e-4, "{sv:?}");
+    }
+
+    #[test]
+    fn svd_invariant_under_transpose() {
+        let mut rng = Prng::new(1);
+        let a = Tensor::randn(&mut rng, &[5, 9]);
+        let s1 = singular_values(&a);
+        let s2 = singular_values(&a.t().contiguous());
+        for (x, y) in s1.iter().zip(s2.iter()) {
+            assert!((x - y).abs() < 1e-3 * x.abs().max(1.0), "{s1:?} vs {s2:?}");
+        }
+    }
+
+    #[test]
+    fn svd_frobenius_identity() {
+        // sum of squared singular values == squared Frobenius norm
+        let mut rng = Prng::new(2);
+        let a = Tensor::randn(&mut rng, &[6, 8]);
+        let sv = singular_values(&a);
+        let ss: f32 = sv.iter().map(|s| s * s).sum();
+        let f = fro_norm(&a);
+        assert!((ss - f * f).abs() < 1e-2 * (f * f), "{ss} vs {}", f * f);
+    }
+
+    #[test]
+    fn eigvalsh_known_2x2() {
+        let a = Tensor::from_vec(vec![2., 1., 1., 2.], &[2, 2]);
+        let ev = eigvalsh(&a);
+        assert!((ev[0] - 3.0).abs() < 1e-5);
+        assert!((ev[1] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn eig_of_gram_equals_squared_singulars() {
+        let mut rng = Prng::new(3);
+        let a = Tensor::randn(&mut rng, &[4, 7]);
+        let sv = singular_values(&a);
+        let ev = eigvalsh(&gram(&a));
+        for (s, e) in sv.iter().zip(ev.iter()) {
+            assert!((s * s - e).abs() < 1e-2 * e.abs().max(1.0), "{sv:?} {ev:?}");
+        }
+    }
+
+    #[test]
+    fn spectral_moments_match_singular_power_sums() {
+        let mut rng = Prng::new(4);
+        let a = Tensor::randn(&mut rng, &[5, 8]);
+        let sv = singular_values(&a);
+        let moments = spectral_moments(&a, 3);
+        for k in 1..=3usize {
+            let direct: f64 = sv.iter().map(|&s| (s as f64).powi(2 * k as i32)).sum();
+            let rel = (moments[k - 1] - direct).abs() / direct.abs().max(1e-9);
+            assert!(rel < 1e-3, "k={k}: {} vs {direct}", moments[k - 1]);
+        }
+    }
+
+    #[test]
+    fn expm_of_zero_is_identity() {
+        let z = Tensor::zeros(&[3, 3]);
+        let e = expm(&z);
+        assert!(e.allclose(&eye(3), 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn expm_diagonal_matches_scalar_exp() {
+        let d = Tensor::from_vec(vec![1.0, 0.0, 0.0, 2.0], &[2, 2]);
+        let e = expm(&d);
+        assert!((e.at(&[0, 0]) - 1f32.exp()).abs() < 1e-3);
+        assert!((e.at(&[1, 1]) - 2f32.exp()).abs() < 1e-2);
+        assert!(e.at(&[0, 1]).abs() < 1e-5);
+    }
+
+    #[test]
+    fn expm_additive_on_commuting() {
+        // exp(A) * exp(A) == exp(2A)
+        let mut rng = Prng::new(6);
+        let a = crate::tensor::ops::scale(&Tensor::randn(&mut rng, &[4, 4]), 0.3);
+        let e1 = expm(&a);
+        let e2 = crate::tensor::ops::matmul(&e1, &e1);
+        let e3 = expm(&crate::tensor::ops::scale(&a, 2.0));
+        assert!(e2.allclose(&e3, 1e-2, 1e-2));
+    }
+
+    #[test]
+    fn stft_shape_and_pure_tone() {
+        // a pure tone at bin 4 of a 32-sample frame dominates that bin
+        let n = 256;
+        let freq_bin = 4;
+        let frame = 32;
+        let x: Vec<f32> = (0..n)
+            .map(|i| {
+                (2.0 * std::f32::consts::PI * freq_bin as f32 * i as f32 / frame as f32).sin()
+            })
+            .collect();
+        let s = stft_mag(&Tensor::from_vec(x, &[n]), frame, 16);
+        assert_eq!(s.shape()[1], 17);
+        // the tone bin has the largest magnitude in every frame
+        for f in 0..s.shape()[0] {
+            let row: Vec<f32> = (0..17).map(|k| s.at(&[f, k])).collect();
+            let argmax = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            assert_eq!(argmax, freq_bin, "frame {f}: {row:?}");
+        }
+    }
+
+    #[test]
+    fn moments_invariant_under_row_permutation() {
+        let mut rng = Prng::new(5);
+        let a = Tensor::randn(&mut rng, &[6, 10]);
+        let mut order: Vec<usize> = (0..6).collect();
+        rng.shuffle(&mut order);
+        let av = a.to_vec();
+        let mut pv = Vec::with_capacity(av.len());
+        for &r in &order {
+            pv.extend_from_slice(&av[r * 10..(r + 1) * 10]);
+        }
+        let p = Tensor::from_vec(pv, &[6, 10]);
+        let ma = spectral_moments(&a, 4);
+        let mp = spectral_moments(&p, 4);
+        for (x, y) in ma.iter().zip(mp.iter()) {
+            assert!((x - y).abs() < 1e-6 * x.abs().max(1.0));
+        }
+    }
+}

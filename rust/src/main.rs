@@ -1,0 +1,180 @@
+//! Magneton CLI — the leader entrypoint.
+//!
+//! ```text
+//! magneton cases [--id c10] [--eps 1e-3] [--threshold 0.10]
+//! magneton fleet                      # Fig 5 cross-system comparison
+//! magneton ddp [--iters 20]           # Fig 4 power timeline
+//! magneton breakdown [--id c10]       # Fig 2-style per-op breakdown
+//! magneton accuracy                   # Table 4 measurement accuracy
+//! magneton artifacts [--dir artifacts]# list loadable PJRT artifacts
+//! ```
+
+use magneton::cases;
+use magneton::coordinator::Magneton;
+use magneton::energy::DeviceSpec;
+use magneton::report;
+use magneton::util::cli::Args;
+use magneton::util::table::{fmt_joules, Table};
+use magneton::util::Prng;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "cases" => cmd_cases(&args),
+        "fleet" => cmd_fleet(&args),
+        "ddp" => cmd_ddp(&args),
+        "breakdown" => cmd_breakdown(&args),
+        "accuracy" => cmd_accuracy(),
+        "artifacts" => cmd_artifacts(&args),
+        _ => print_help(),
+    }
+}
+
+fn print_help() {
+    println!(
+        "magneton — differential energy debugging for ML systems\n\n\
+         USAGE: magneton <command> [options]\n\n\
+         COMMANDS:\n\
+         \x20 cases      run known + new case audits (--id cX for one)\n\
+         \x20 fleet      cross-system energy comparison (Fig 5)\n\
+         \x20 ddp        DDP join-vs-early-exit power timeline (Fig 4)\n\
+         \x20 breakdown  per-operator energy breakdown of a case (Fig 2)\n\
+         \x20 accuracy   power-measurement accuracy comparison (Table 4)\n\
+         \x20 artifacts  list PJRT artifacts and smoke-run the fingerprint kernel\n\n\
+         OPTIONS: --id <case> --eps <f64> --threshold <f64> --seed <u64> --device <h200|rtx4090>"
+    );
+}
+
+fn device(args: &Args) -> DeviceSpec {
+    match args.get("device", "h200") {
+        "rtx4090" => DeviceSpec::rtx4090_sim(),
+        _ => DeviceSpec::h200_sim(),
+    }
+}
+
+fn magneton(args: &Args) -> Magneton {
+    let mut m = Magneton::new(device(args));
+    m.eps = args.get_parse("eps", 1e-3);
+    m.cfg.energy_threshold = args.get_parse("threshold", 0.10);
+    m
+}
+
+fn cmd_cases(args: &Args) {
+    let mag = magneton(args);
+    let mut rng = Prng::new(args.get_parse("seed", 2026u64));
+    let scenarios: Vec<cases::Scenario> = match args.options.get("id") {
+        Some(id) => cases::by_id(id).into_iter().collect(),
+        None => cases::known_cases().into_iter().chain(cases::new_cases()).collect(),
+    };
+    for s in scenarios {
+        println!("\n##### case {} ({}) — {}", s.id, s.issue, s.description);
+        let (a, b) = (s.build)(&mut rng);
+        let out = mag.audit(&a, &b);
+        println!("{}", report::render_audit(&a.label, &b.label, &out));
+        if s.expect_undetected {
+            println!(
+                "paper expectation: NOT detected (CPU-side issue) — magneton {}",
+                if out.detected() { "detected (unexpected)" } else { "correctly silent" }
+            );
+        }
+    }
+}
+
+fn cmd_fleet(args: &Args) {
+    use magneton::systems::llm;
+    let mag = magneton(args);
+    let mut rng = Prng::new(args.get_parse("seed", 2026u64));
+    let params = llm::TransformerParams::new(&mut rng, llm::LlmSpec::gpt2_sim());
+    let mut t = Table::new(vec!["system", "energy", "J/token", "kernels"]);
+    let tokens = (params.spec.batch * params.spec.seq) as f64;
+    for (name, opts, disp, env) in [
+        (
+            "mini-hf-transformers",
+            llm::LlmBuildOpts::hf(),
+            llm::hf_dispatcher(),
+            llm::default_env(magneton::systems::SystemId::MiniHf),
+        ),
+        (
+            "mini-vllm",
+            llm::LlmBuildOpts::vllm(),
+            llm::vllm_dispatcher(),
+            llm::default_env(magneton::systems::SystemId::MiniVllm),
+        ),
+        (
+            "mini-sglang",
+            llm::LlmBuildOpts::sglang(),
+            llm::sglang_dispatcher(),
+            llm::default_env(magneton::systems::SystemId::MiniSglang),
+        ),
+    ] {
+        let run = magneton::coordinator::SysRun::new(name, disp, env, llm::build_llm(&params, &opts));
+        let arts = mag.run_side(&run);
+        t.row(vec![
+            name.to_string(),
+            fmt_joules(arts.total_energy_j),
+            format!("{:.3} mJ", arts.total_energy_j / tokens * 1e3),
+            arts.records.len().to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+}
+
+fn cmd_ddp(args: &Args) {
+    use magneton::workload::{run_ddp, DdpWorkload, SyncStrategy};
+    let dev = device(args);
+    let mut w = DdpWorkload::paper_setup();
+    w.iterations = args.get_parse("iters", 20usize);
+    let join = run_ddp(&dev, &w, SyncStrategy::Join, 7);
+    let exit = run_ddp(&dev, &w, SyncStrategy::EarlyExit, 7);
+    println!(
+        "dist.Join: {}   early-exit: {}   saving {:.1}%",
+        fmt_joules(join.total_energy_j),
+        fmt_joules(exit.total_energy_j),
+        (1.0 - exit.total_energy_j / join.total_energy_j) * 100.0
+    );
+}
+
+fn cmd_breakdown(args: &Args) {
+    let mag = magneton(args);
+    let mut rng = Prng::new(args.get_parse("seed", 2026u64));
+    let id = args.get("id", "c10");
+    let Some(s) = cases::by_id(id) else {
+        println!("unknown case {id}");
+        return;
+    };
+    let (a, b) = (s.build)(&mut rng);
+    for (label, run) in [(&a.label, &a), (&b.label, &b)] {
+        let arts = mag.run_side(run);
+        println!("\n--- {label}: total {} ---", fmt_joules(arts.total_energy_j));
+        println!("{}", report::energy_breakdown(&arts, 5).render());
+    }
+}
+
+fn cmd_accuracy() {
+    // Table 4 lives in benches/table4_accuracy.rs; here a quick preview
+    println!("run `cargo bench --bench table4_accuracy` for the full table");
+}
+
+fn cmd_artifacts(args: &Args) {
+    let dir = std::path::PathBuf::from(args.get("dir", "artifacts"));
+    match magneton::runtime::PjrtRuntime::cpu() {
+        Err(e) => println!("PJRT unavailable: {e}"),
+        Ok(mut rt) => match rt.load_dir(&dir) {
+            Err(e) => println!("no artifacts loaded from {dir:?}: {e}"),
+            Ok(n) => {
+                println!("loaded {n} artifacts: {:?}", rt.names());
+                match magneton::runtime::PjrtMomentEngine::load(&dir) {
+                    Ok(eng) => {
+                        use magneton::fingerprint::MomentEngine;
+                        let mut rng = Prng::new(1);
+                        let t = magneton::tensor::Tensor::randn(&mut rng, &[16, 64]);
+                        let m = eng.moments(&t, 4);
+                        println!("fingerprint kernel smoke: moments = {m:?}");
+                    }
+                    Err(e) => println!("fingerprint engine: {e}"),
+                }
+            }
+        },
+    }
+}

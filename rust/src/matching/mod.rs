@@ -1,0 +1,457 @@
+//! Semantically-equivalent subgraph matching (paper §4.2, Algorithm 1).
+//!
+//! Step 1 ([`find_equivalent_tensors`]) fingerprints every recorded
+//! node-output tensor in both runs and finds cross-system pairs whose
+//! SVD-invariant sets match within ε — `O(|G₁|·|G₂|)` comparisons with a
+//! cheap (numel, ‖·‖_F) prefilter and fingerprints computed once per
+//! node (fanned out over worker threads).
+//!
+//! Step 2 ([`recursive_match`]) is the topology-aware divide-and-conquer:
+//! build dominator trees, walk the dominator paths of both graphs, keep
+//! the longest order-preserving chain of equivalent-tensor pairs as cut
+//! points, split both graphs at the cuts, and recurse into the matching
+//! segments. Segments that admit no further cuts are emitted as matched
+//! regions — the units Magneton compares for energy.
+//!
+//! [`brute_force_match`] is the strawman baseline of Fig 9: enumerate
+//! interval pairs of the two topological orders and test boundary
+//! equivalence, with combinatorial cost on large graphs.
+
+use std::collections::BTreeSet;
+
+use crate::exec::RunArtifacts;
+use crate::fingerprint::{fingerprint_with, Fingerprint, MomentEngine, RustMomentEngine};
+use crate::graph::dom::GraphDom;
+use crate::graph::{Graph, NodeId, OpKind};
+use crate::util::pool;
+
+/// Pairs of equivalent tensors `(node_in_A, node_in_B)`.
+#[derive(Clone, Debug, Default)]
+pub struct EqSet {
+    pub pairs: Vec<(NodeId, NodeId)>,
+    set: BTreeSet<(NodeId, NodeId)>,
+}
+
+impl EqSet {
+    pub fn from_pairs(pairs: Vec<(NodeId, NodeId)>) -> EqSet {
+        let set = pairs.iter().copied().collect();
+        EqSet { pairs, set }
+    }
+
+    pub fn contains(&self, a: NodeId, b: NodeId) -> bool {
+        self.set.contains(&(a, b))
+    }
+
+    pub fn len(&self) -> usize {
+        self.pairs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pairs.is_empty()
+    }
+}
+
+/// Minimum element count for a tensor to act as a cut anchor: tiny
+/// tensors (scalars, small biases) collide across unrelated sites.
+pub const MIN_ANCHOR_NUMEL: usize = 8;
+
+/// Fingerprint every recorded tensor of a run (indexed by node id).
+pub fn fingerprint_run(
+    arts: &RunArtifacts,
+    engine: &dyn MomentEngine,
+    threads: usize,
+) -> Vec<Option<Fingerprint>> {
+    let jobs: Vec<Option<&crate::tensor::Tensor>> = arts
+        .graph
+        .nodes
+        .iter()
+        .map(|n| {
+            // Outputs duplicate their producer; Weights are parameter
+            // edges — excluded from the dominator flow analysis, so they
+            // can never anchor a cut and need no fingerprint.
+            if n.op == OpKind::Output || n.op == OpKind::Weight {
+                return None;
+            }
+            arts.tensors[n.id].as_ref().filter(|t| t.numel() >= MIN_ANCHOR_NUMEL)
+        })
+        .collect();
+    pool::par_map(&jobs, threads, |t| t.map(|t| fingerprint_with(engine, t)))
+}
+
+/// Pairwise equivalent-tensor discovery at tolerance `eps`.
+pub fn find_equivalent_tensors(
+    a: &RunArtifacts,
+    b: &RunArtifacts,
+    eps: f64,
+    engine: &dyn MomentEngine,
+) -> EqSet {
+    let threads = pool::default_threads();
+    let fa = fingerprint_run(a, engine, threads);
+    let fb = fingerprint_run(b, engine, threads);
+    let mut pairs = Vec::new();
+    for (i, fi) in fa.iter().enumerate() {
+        let Some(fi) = fi else { continue };
+        for (j, fj) in fb.iter().enumerate() {
+            let Some(fj) = fj else { continue };
+            // prefilter: numel + Frobenius gate before full invariant match
+            if fi.numel != fj.numel {
+                continue;
+            }
+            let fro_gap = (fi.fro - fj.fro).abs() / fi.fro.abs().max(fj.fro.abs()).max(1e-30);
+            if fro_gap > eps.max(1e-12) * 4.0 {
+                continue;
+            }
+            if fi.matches(fj, eps) {
+                pairs.push((i, j));
+            }
+        }
+    }
+    EqSet::from_pairs(pairs)
+}
+
+/// A matched pair of subgraphs (node ids in the original graphs).
+#[derive(Clone, Debug)]
+pub struct Region {
+    pub a_nodes: Vec<NodeId>,
+    pub b_nodes: Vec<NodeId>,
+}
+
+impl Region {
+    pub fn size(&self) -> usize {
+        self.a_nodes.len().max(self.b_nodes.len())
+    }
+}
+
+/// Algorithm 1: recursive dominator-path matching. `ga`/`gb` are whole
+/// graphs whose inputs/outputs are assumed semantically equivalent
+/// (same workload fed to both systems).
+pub fn recursive_match(ga: &Graph, gb: &Graph, eq: &EqSet) -> Vec<Region> {
+    let a_all: Vec<NodeId> = (0..ga.len()).collect();
+    let b_all: Vec<NodeId> = (0..gb.len()).collect();
+    let mut out = Vec::new();
+    match_sub(ga, gb, a_all, b_all, eq, &mut out, 0);
+    out
+}
+
+fn match_sub(
+    ga: &Graph,
+    gb: &Graph,
+    a_nodes: Vec<NodeId>,
+    b_nodes: Vec<NodeId>,
+    eq: &EqSet,
+    out: &mut Vec<Region>,
+    depth: usize,
+) {
+    if a_nodes.is_empty() && b_nodes.is_empty() {
+        return;
+    }
+    if a_nodes.is_empty() || b_nodes.is_empty() || depth > 64 {
+        out.push(Region { a_nodes, b_nodes });
+        return;
+    }
+    // induced subgraphs + id maps (new -> old)
+    let (ia, map_a) = ga.induced(&a_nodes, "a");
+    let (ib, map_b) = gb.induced(&b_nodes, "b");
+    let back_a: Vec<NodeId> = invert(&map_a);
+    let back_b: Vec<NodeId> = invert(&map_b);
+
+    let da = GraphDom::analyze(&ia);
+    let db = GraphDom::analyze(&ib);
+    let pa: Vec<NodeId> = da.dominator_path();
+    let pb: Vec<NodeId> = db.dominator_path();
+
+    // E: order-preserving chain of equivalent pairs along the paths
+    // (longest monotone chain via O(n^2) LIS).
+    let mut candidates: Vec<(usize, usize)> = Vec::new();
+    for (i, &na) in pa.iter().enumerate() {
+        for (j, &nb) in pb.iter().enumerate() {
+            if eq.contains(back_a[na], back_b[nb]) {
+                candidates.push((i, j));
+            }
+        }
+    }
+    let chain = longest_monotone_chain(&candidates);
+
+    if chain.len() <= 1 {
+        // no interior structure to cut on: this pair is one region
+        out.push(Region { a_nodes, b_nodes });
+        return;
+    }
+
+    // every cut pair is itself a matched (single-op) region
+    for &(i, j) in &chain {
+        out.push(Region {
+            a_nodes: vec![back_a[pa[i]]],
+            b_nodes: vec![back_b[pb[j]]],
+        });
+    }
+
+    // segments: before first cut, between consecutive cuts, after last
+    let seg_a = |from: Option<usize>, to: Option<usize>| -> Vec<NodeId> {
+        segment_nodes(&ia, &da, &pa, from, to).into_iter().map(|v| back_a[v]).collect()
+    };
+    let seg_b = |from: Option<usize>, to: Option<usize>| -> Vec<NodeId> {
+        segment_nodes(&ib, &db, &pb, from, to).into_iter().map(|v| back_b[v]).collect()
+    };
+
+    let mut boundaries: Vec<(Option<usize>, Option<usize>)> = Vec::new();
+    boundaries.push((None, Some(0)));
+    for w in 0..chain.len() - 1 {
+        boundaries.push((Some(w), Some(w + 1)));
+    }
+    boundaries.push((Some(chain.len() - 1), None));
+
+    for (lo, hi) in boundaries {
+        let a_seg = seg_a(lo.map(|w| chain[w].0), hi.map(|w| chain[w].0));
+        let b_seg = seg_b(lo.map(|w| chain[w].1), hi.map(|w| chain[w].1));
+        if a_seg.is_empty() && b_seg.is_empty() {
+            continue;
+        }
+        match_sub(ga, gb, a_seg, b_seg, eq, out, depth + 1);
+    }
+}
+
+fn invert(map: &std::collections::BTreeMap<NodeId, NodeId>) -> Vec<NodeId> {
+    let mut v = vec![0; map.len()];
+    for (&old, &new) in map {
+        v[new] = old;
+    }
+    v
+}
+
+/// Nodes strictly between cut path positions `from` and `to` (either may
+/// be a virtual boundary). Uses dominator/post-dominator containment.
+fn segment_nodes(
+    g: &Graph,
+    gd: &GraphDom,
+    path: &[NodeId],
+    from: Option<usize>,
+    to: Option<usize>,
+) -> Vec<NodeId> {
+    let lo = from.map(|i| path[i]);
+    let hi = to.map(|i| path[i]);
+    (0..g.len())
+        .filter(|&v| {
+            if Some(v) == lo || Some(v) == hi {
+                return false;
+            }
+            let after = match lo {
+                Some(c) => gd.dom.dominates(c, v),
+                None => true,
+            };
+            let before = match hi {
+                Some(c) => gd.pdom.dominates(c, v),
+                None => match lo {
+                    // tail segment: exclude anything before the last cut
+                    Some(c) => !gd.pdom.dominates(c, v),
+                    None => true,
+                },
+            };
+            after && before
+        })
+        .collect()
+}
+
+/// Longest strictly-monotone (in both coordinates) chain of index pairs.
+fn longest_monotone_chain(pairs: &[(usize, usize)]) -> Vec<(usize, usize)> {
+    if pairs.is_empty() {
+        return Vec::new();
+    }
+    let mut sorted = pairs.to_vec();
+    sorted.sort();
+    let n = sorted.len();
+    let mut best_len = vec![1usize; n];
+    let mut prev = vec![usize::MAX; n];
+    for i in 0..n {
+        for j in 0..i {
+            if sorted[j].0 < sorted[i].0
+                && sorted[j].1 < sorted[i].1
+                && best_len[j] + 1 > best_len[i]
+            {
+                best_len[i] = best_len[j] + 1;
+                prev[i] = j;
+            }
+        }
+    }
+    let mut i = (0..n).max_by_key(|&i| best_len[i]).unwrap();
+    let mut chain = vec![sorted[i]];
+    while prev[i] != usize::MAX {
+        i = prev[i];
+        chain.push(sorted[i]);
+    }
+    chain.reverse();
+    chain
+}
+
+/// Strawman baseline (Fig 9): enumerate contiguous topological intervals
+/// of both graphs and accept interval pairs whose endpoint tensors are
+/// equivalent. Cost grows with |G₁|²·|G₂|²; `work_limit` bounds the
+/// number of pair checks (returns None when exceeded, modelling the
+/// paper's 5-minute timeout).
+pub fn brute_force_match(
+    ga: &Graph,
+    gb: &Graph,
+    eq: &EqSet,
+    work_limit: u64,
+) -> Option<Vec<Region>> {
+    let ta = ga.topo_order();
+    let tb = gb.topo_order();
+    let mut out = Vec::new();
+    let mut work: u64 = 0;
+    for ia in 0..ta.len() {
+        for ja in ia..ta.len() {
+            for ib in 0..tb.len() {
+                for jb in ib..tb.len() {
+                    work += 1;
+                    if work > work_limit {
+                        return None;
+                    }
+                    // boundary test: interval entry and exit tensors equivalent
+                    if eq.contains(ta[ia], tb[ib]) && eq.contains(ta[ja], tb[jb]) {
+                        out.push(Region {
+                            a_nodes: ta[ia..=ja].to_vec(),
+                            b_nodes: tb[ib..=jb].to_vec(),
+                        });
+                    }
+                }
+            }
+        }
+    }
+    Some(out)
+}
+
+/// Convenience wrapper: fingerprint, find pairs, and match two runs.
+pub fn match_runs(a: &RunArtifacts, b: &RunArtifacts, eps: f64) -> (EqSet, Vec<Region>) {
+    let eq = find_equivalent_tensors(a, b, eps, &RustMomentEngine);
+    let regions = recursive_match(&a.graph, &b.graph, &eq);
+    (eq, regions)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dispatch::Env;
+    use crate::energy::DeviceSpec;
+    use crate::exec::{Dispatcher, Executor, Program};
+    use crate::tensor::Tensor;
+    use crate::util::Prng;
+
+    /// System A: x -> matmul(w1) -> gelu -> matmul(w2)
+    /// System B: same math, but the first matmul output passes through a
+    /// redundant copy, and gelu is decomposed differently upstream.
+    fn two_programs() -> (Program, Program) {
+        let mut rng = Prng::new(7);
+        let x = Tensor::randn(&mut rng, &[8, 16]);
+        let w1 = Tensor::randn(&mut rng, &[16, 12]);
+        let w2 = Tensor::randn(&mut rng, &[12, 4]);
+
+        let mut ga = Graph::new("sysA");
+        let ax = ga.add(OpKind::Input, &[], "x");
+        let aw1 = ga.add(OpKind::Weight, &[], "w1");
+        let aw2 = ga.add(OpKind::Weight, &[], "w2");
+        let m1 = ga.add(OpKind::MatMul, &[ax, aw1], "proj1");
+        let g1 = ga.add_attr1(OpKind::Gelu, &[m1], "act", "approx", "tanh");
+        let m2 = ga.add(OpKind::MatMul, &[g1, aw2], "proj2");
+        ga.add(OpKind::Output, &[m2], "out");
+        let mut pa = Program::new(ga);
+        pa.feed(0, x.clone());
+        pa.feed(1, w1.clone());
+        pa.feed(2, w2.clone());
+
+        let mut gb = Graph::new("sysB");
+        let bx = gb.add(OpKind::Input, &[], "x");
+        let bw1 = gb.add(OpKind::Weight, &[], "w1");
+        let bw2 = gb.add(OpKind::Weight, &[], "w2");
+        let n1 = gb.add(OpKind::MatMul, &[bx, bw1], "dense1");
+        let cp = gb.add(OpKind::Copy, &[n1], "redundant_copy");
+        let g2 = gb.add_attr1(OpKind::Gelu, &[cp], "activation", "approx", "tanh");
+        let n2 = gb.add(OpKind::MatMul, &[g2, bw2], "dense2");
+        gb.add(OpKind::Output, &[n2], "out");
+        let mut pb = Program::new(gb);
+        pb.feed(0, x);
+        pb.feed(1, w1);
+        pb.feed(2, w2);
+        (pa, pb)
+    }
+
+    fn run(p: &Program) -> RunArtifacts {
+        Executor::new(DeviceSpec::h200_sim(), Dispatcher::new(), Env::new()).run(p)
+    }
+
+    #[test]
+    fn eq_pairs_found_across_systems() {
+        let (pa, pb) = two_programs();
+        let (a, b) = (run(&pa), run(&pb));
+        let eq = find_equivalent_tensors(&a, &b, 1e-4, &RustMomentEngine);
+        // matmul outputs, gelu outputs, copies, inputs, weights all pair up
+        assert!(eq.len() >= 4, "only {} pairs", eq.len());
+        // proj1 (node 3) matches both dense1 (3) and its copy (4)
+        assert!(eq.contains(3, 3));
+        assert!(eq.contains(3, 4));
+    }
+
+    #[test]
+    fn recursive_match_produces_regions_covering_differences() {
+        let (pa, pb) = two_programs();
+        let (a, b) = (run(&pa), run(&pb));
+        let (eq, regions) = match_runs(&a, &b, 1e-4);
+        assert!(!eq.is_empty());
+        assert!(!regions.is_empty());
+        // every region's nodes exist in their graphs
+        for r in &regions {
+            assert!(r.a_nodes.iter().all(|&n| n < a.graph.len()));
+            assert!(r.b_nodes.iter().all(|&n| n < b.graph.len()));
+        }
+        // some region must expose the asymmetry around the redundant copy
+        let has_asym = regions.iter().any(|r| {
+            let a_copies = r.a_nodes.iter().filter(|&&n| a.graph.nodes[n].op == OpKind::Copy).count();
+            let b_copies = r.b_nodes.iter().filter(|&&n| b.graph.nodes[n].op == OpKind::Copy).count();
+            b_copies > a_copies
+        });
+        assert!(has_asym, "no region isolates the redundant copy: {regions:?}");
+    }
+
+    #[test]
+    fn identical_programs_match_node_for_node() {
+        let (pa, _) = two_programs();
+        let a = run(&pa);
+        let b = run(&pa);
+        let (eq, regions) = match_runs(&a, &b, 1e-6);
+        // diagonal pairs exist for all anchorable nodes
+        for n in 0..a.graph.len() {
+            if a.tensors[n].as_ref().map(|t| t.numel() >= MIN_ANCHOR_NUMEL).unwrap_or(false)
+                && a.graph.nodes[n].op != OpKind::Output
+                && a.graph.nodes[n].op != OpKind::Weight
+            {
+                assert!(eq.contains(n, n), "node {n} missing diagonal pair");
+            }
+        }
+        assert!(!regions.is_empty());
+    }
+
+    #[test]
+    fn longest_chain_is_monotone() {
+        let pairs = vec![(0, 3), (1, 1), (2, 2), (3, 0), (4, 4)];
+        let chain = longest_monotone_chain(&pairs);
+        assert!(chain.windows(2).all(|w| w[0].0 < w[1].0 && w[0].1 < w[1].1));
+        assert_eq!(chain.len(), 3); // (1,1),(2,2),(4,4)
+    }
+
+    #[test]
+    fn brute_force_times_out_on_budget() {
+        let (pa, pb) = two_programs();
+        let (a, b) = (run(&pa), run(&pb));
+        let eq = find_equivalent_tensors(&a, &b, 1e-4, &RustMomentEngine);
+        assert!(brute_force_match(&a.graph, &b.graph, &eq, 10).is_none());
+        assert!(brute_force_match(&a.graph, &b.graph, &eq, u64::MAX).is_some());
+    }
+
+    #[test]
+    fn brute_force_agrees_regions_exist_on_small_graphs() {
+        let (pa, pb) = two_programs();
+        let (a, b) = (run(&pa), run(&pb));
+        let eq = find_equivalent_tensors(&a, &b, 1e-4, &RustMomentEngine);
+        let bf = brute_force_match(&a.graph, &b.graph, &eq, u64::MAX).unwrap();
+        assert!(!bf.is_empty());
+    }
+}

@@ -1,0 +1,143 @@
+//! Property-based testing mini-framework (the offline registry has no
+//! `proptest`). Provides value generators over a deterministic [`Prng`]
+//! and a `forall` runner with case-count control and failing-seed
+//! reporting. Used throughout the crate to check coordinator invariants:
+//! dominator-tree properties, matcher soundness, energy-model
+//! monotonicity, fingerprint invariance under layout transforms, etc.
+
+use crate::util::Prng;
+
+/// A generator of random values of type `T`.
+pub struct Gen<T> {
+    f: Box<dyn Fn(&mut Prng) -> T>,
+}
+
+impl<T: 'static> Gen<T> {
+    /// Build a generator from a closure.
+    pub fn new<F: Fn(&mut Prng) -> T + 'static>(f: F) -> Gen<T> {
+        Gen { f: Box::new(f) }
+    }
+
+    /// Sample one value.
+    pub fn sample(&self, rng: &mut Prng) -> T {
+        (self.f)(rng)
+    }
+
+    /// Map the generated value.
+    pub fn map<U: 'static, F: Fn(T) -> U + 'static>(self, f: F) -> Gen<U> {
+        Gen::new(move |r| f((self.f)(r)))
+    }
+}
+
+/// usize in [lo, hi] inclusive.
+pub fn usizes(lo: usize, hi: usize) -> Gen<usize> {
+    Gen::new(move |r| r.range(lo, hi))
+}
+
+/// f32 in [lo, hi).
+pub fn f32s(lo: f32, hi: f32) -> Gen<f32> {
+    Gen::new(move |r| r.range_f32(lo, hi))
+}
+
+/// Vec of `n` standard-normal f32s where n is drawn from [nlo, nhi].
+pub fn normal_vecs(nlo: usize, nhi: usize) -> Gen<Vec<f32>> {
+    Gen::new(move |r| {
+        let n = r.range(nlo, nhi);
+        r.normal_vec(n)
+    })
+}
+
+/// Tensor shapes with `rank` in [rlo, rhi] and dims in [dlo, dhi].
+pub fn shapes(rlo: usize, rhi: usize, dlo: usize, dhi: usize) -> Gen<Vec<usize>> {
+    Gen::new(move |r| {
+        let rank = r.range(rlo, rhi);
+        (0..rank).map(|_| r.range(dlo, dhi)).collect()
+    })
+}
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+/// Default seed: ASCII "MAGNETON" as a u64.
+pub const DEFAULT_SEED: u64 = 0x4d41_474e_4554_4f4e;
+
+impl Default for Config {
+    fn default() -> Config {
+        Config { cases: 64, seed: DEFAULT_SEED }
+    }
+}
+
+/// Run `prop` over `cases` samples from `gen`; panics with the failing
+/// seed and case index on the first violation.
+pub fn forall<T: std::fmt::Debug + 'static>(
+    name: &str,
+    gen: &Gen<T>,
+    cases: usize,
+    prop: impl Fn(&T) -> bool,
+) {
+    forall_seeded(name, gen, cases, DEFAULT_SEED, prop)
+}
+
+/// Like [`forall`] with an explicit seed.
+pub fn forall_seeded<T: std::fmt::Debug + 'static>(
+    name: &str,
+    gen: &Gen<T>,
+    cases: usize,
+    seed: u64,
+    prop: impl Fn(&T) -> bool,
+) {
+    let mut rng = Prng::new(seed);
+    for case in 0..cases {
+        let value = gen.sample(&mut rng);
+        if !prop(&value) {
+            panic!(
+                "property `{name}` failed at case {case}/{cases} (seed={seed:#x})\nvalue: {value:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivially() {
+        forall("usize in range", &usizes(1, 10), 100, |&n| (1..=10).contains(&n));
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always false` failed")]
+    fn forall_reports_failure() {
+        forall("always false", &usizes(0, 1), 10, |_| false);
+    }
+
+    #[test]
+    fn shapes_generator_respects_bounds() {
+        forall("shape bounds", &shapes(1, 4, 2, 8), 200, |s| {
+            (1..=4).contains(&s.len()) && s.iter().all(|&d| (2..=8).contains(&d))
+        });
+    }
+
+    #[test]
+    fn map_composes() {
+        let g = usizes(1, 5).map(|n| n * 2);
+        let mut rng = Prng::new(1);
+        for _ in 0..50 {
+            let v = g.sample(&mut rng);
+            assert!(v % 2 == 0 && (2..=10).contains(&v));
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = normal_vecs(3, 6);
+        let mut a = Prng::new(9);
+        let mut b = Prng::new(9);
+        assert_eq!(g.sample(&mut a), g.sample(&mut b));
+    }
+}

@@ -1,0 +1,122 @@
+//! Report rendering: audit summaries, the Table 2 replica, and energy
+//! breakdowns (Fig 2 style), with CSV persistence under `results/`.
+
+use crate::coordinator::AuditOutcome;
+use crate::exec::RunArtifacts;
+use crate::util::table::{fmt_joules, fmt_us, Table};
+
+/// Render an audit outcome as a human-readable report.
+pub fn render_audit(name_a: &str, name_b: &str, out: &AuditOutcome) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("=== Magneton audit: {name_a} vs {name_b} ===\n"));
+    s.push_str(&format!(
+        "energy: {} vs {}  (e2e diff {:.1}%)\n",
+        fmt_joules(out.a.total_energy_j),
+        fmt_joules(out.b.total_energy_j),
+        out.e2e_diff_frac * 100.0
+    ));
+    s.push_str(&format!(
+        "time:   {} vs {}\n",
+        fmt_us(out.a.gpu_time_us),
+        fmt_us(out.b.gpu_time_us)
+    ));
+    s.push_str(&format!(
+        "matched: {} equivalent tensor pairs, {} regions ({} matched in {})\n",
+        out.eq_pairs,
+        out.regions.len(),
+        out.regions.iter().map(|r| r.size()).sum::<usize>(),
+        fmt_us(out.match_time_us)
+    ));
+    if out.findings.is_empty() {
+        s.push_str("no energy waste detected above threshold\n");
+    }
+    for (i, (f, d)) in out.diagnoses.iter().enumerate() {
+        s.push_str(&format!("\n--- finding #{} ---\n{}\n{}\n", i + 1, f.summary(), d.render()));
+    }
+    s
+}
+
+/// Fig 2-style top-k energy breakdown of a run.
+pub fn energy_breakdown(arts: &RunArtifacts, top: usize) -> Table {
+    let mut t = Table::new(vec!["op", "energy", "share"]);
+    let by_op = arts.energy_by_op();
+    let total: f64 = by_op.iter().map(|(_, e)| e).sum();
+    for (op, e) in by_op.iter().take(top) {
+        t.row(vec![
+            op.clone(),
+            fmt_joules(*e),
+            format!("{:.1}%", e / total * 100.0),
+        ]);
+    }
+    t
+}
+
+/// Per-label (call-site) breakdown, most expensive first.
+pub fn label_breakdown(arts: &RunArtifacts, top: usize) -> Table {
+    let mut agg: std::collections::BTreeMap<String, (f64, f64)> = Default::default();
+    for r in &arts.records {
+        let e = agg.entry(r.label.clone()).or_insert((0.0, 0.0));
+        e.0 += r.energy_j;
+        e.1 += r.time_us;
+    }
+    let mut rows: Vec<(String, f64, f64)> = agg.into_iter().map(|(k, (e, t))| (k, e, t)).collect();
+    rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let mut t = Table::new(vec!["site", "energy", "time"]);
+    for (label, e, us) in rows.into_iter().take(top) {
+        t.row(vec![label, fmt_joules(e), fmt_us(us)]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Magneton, SysRun};
+    use crate::dispatch::Env;
+    use crate::energy::DeviceSpec;
+    use crate::exec::{Dispatcher, Program};
+    use crate::graph::{Graph, OpKind};
+    use crate::tensor::Tensor;
+    use crate::util::Prng;
+
+    fn small_run() -> SysRun {
+        let mut rng = Prng::new(3);
+        let mut g = Graph::new("r");
+        let x = g.add(OpKind::Input, &[], "x");
+        let w = g.add(OpKind::Weight, &[], "w");
+        let m = g.add(OpKind::MatMul, &[x, w], "proj");
+        let gl = g.add(OpKind::Gelu, &[m], "act");
+        g.add(OpKind::Output, &[gl], "out");
+        let mut p = Program::new(g);
+        p.feed(0, Tensor::randn(&mut rng, &[32, 32]));
+        p.feed(1, Tensor::randn(&mut rng, &[32, 32]));
+        SysRun::new("sys", Dispatcher::new(), Env::new(), p)
+    }
+
+    #[test]
+    fn audit_report_renders() {
+        let mag = Magneton::new(DeviceSpec::h200_sim());
+        let out = mag.audit(&small_run(), &small_run());
+        let s = render_audit("A", "B", &out);
+        assert!(s.contains("Magneton audit"));
+        assert!(s.contains("equivalent tensor pairs"));
+    }
+
+    #[test]
+    fn breakdown_shares_sum_to_100() {
+        let mag = Magneton::new(DeviceSpec::h200_sim());
+        let arts = mag.run_side(&small_run());
+        let t = energy_breakdown(&arts, 10);
+        assert!(!t.is_empty());
+        let csv = t.to_csv();
+        assert!(csv.contains("matmul"));
+    }
+
+    #[test]
+    fn label_breakdown_sorted() {
+        let mag = Magneton::new(DeviceSpec::h200_sim());
+        let arts = mag.run_side(&small_run());
+        let t = label_breakdown(&arts, 5);
+        assert!(t.len() >= 2);
+    }
+}

@@ -1,0 +1,262 @@
+//! PJRT/XLA runtime: loads the AOT-compiled artifacts produced by
+//! `python/compile/aot.py` (HLO *text* — see DESIGN.md and
+//! `/opt/xla-example`'s gotchas) and executes them on the CPU PJRT
+//! client from the Rust hot path. Python never runs at profiling time.
+//!
+//! Two uses:
+//! * [`PjrtMomentEngine`] — the L1 Pallas fingerprint kernel, compiled
+//!   once per canonical matrix shape; tensors are zero-padded up to the
+//!   nearest canonical shape (zero rows/columns leave Gram-trace
+//!   moments unchanged) and the Rust engine remains the fallback.
+//! * Reference-model execution — the jax-lowered GPT-2 block variants,
+//!   used by integration tests to validate the Rust executor's
+//!   numerics against XLA.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::fingerprint::{MomentEngine, RustMomentEngine, MOMENT_ORDER};
+use crate::tensor::Tensor;
+
+/// Canonical fingerprint-kernel shapes compiled by `aot.py`
+/// (rows × cols). Keep in sync with `python/compile/aot.py::FP_SHAPES`.
+pub const FP_SHAPES: &[(usize, usize)] = &[(32, 256), (64, 1024), (128, 4096)];
+
+/// Default artifact directory (workspace-relative).
+pub fn default_artifact_dir() -> PathBuf {
+    // honour MAGNETON_ARTIFACTS, else walk up from cwd looking for
+    // an `artifacts/` directory
+    if let Ok(p) = std::env::var("MAGNETON_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.is_dir() {
+            return cand;
+        }
+        if !dir.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+/// A PJRT CPU runtime holding compiled executables by name.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    execs: BTreeMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(PjrtRuntime { client, execs: BTreeMap::new() })
+    }
+
+    /// Load and compile one HLO-text artifact under `name`.
+    pub fn load_file(&mut self, name: &str, path: &Path) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        self.execs.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Load every `*.hlo.txt` in a directory; returns how many loaded.
+    pub fn load_dir(&mut self, dir: &Path) -> Result<usize> {
+        let mut n = 0;
+        for entry in std::fs::read_dir(dir).with_context(|| format!("read {dir:?}"))? {
+            let path = entry?.path();
+            let fname = path.file_name().and_then(|s| s.to_str()).unwrap_or("");
+            if let Some(stem) = fname.strip_suffix(".hlo.txt") {
+                self.load_file(stem, &path)?;
+                n += 1;
+            }
+        }
+        Ok(n)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.execs.contains_key(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.execs.keys().map(String::as_str).collect()
+    }
+
+    /// Execute an artifact on f32 inputs; returns all tuple outputs as
+    /// flat vectors. (aot.py lowers with `return_tuple=True`.)
+    pub fn execute_f32(&self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let exe = self
+            .execs
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact `{name}` not loaded"))?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, shape)| {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("reshape input: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let parts = result.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+        parts
+            .iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+}
+
+/// Moment engine backed by the Pallas fingerprint kernel compiled to a
+/// PJRT executable. Falls back to the Rust engine when no canonical
+/// shape fits.
+pub struct PjrtMomentEngine {
+    runtime: Mutex<PjrtRuntime>,
+    fallback: RustMomentEngine,
+    /// Count of PJRT-served vs fallback calls (perf accounting).
+    pub served: std::sync::atomic::AtomicUsize,
+    pub fell_back: std::sync::atomic::AtomicUsize,
+}
+
+// SAFETY: the xla crate's client/executable wrappers hold `Rc`s and raw
+// pointers, making them `!Send`/`!Sync` even though the underlying PJRT
+// CPU client is thread-safe. Every access to the runtime (and therefore
+// every Rc clone/drop and FFI call) happens while holding the `Mutex`,
+// so cross-thread use is fully serialised.
+unsafe impl Send for PjrtMomentEngine {}
+unsafe impl Sync for PjrtMomentEngine {}
+
+impl PjrtMomentEngine {
+    /// Load fingerprint artifacts from `dir`. Errors if none found.
+    pub fn load(dir: &Path) -> Result<PjrtMomentEngine> {
+        let mut rt = PjrtRuntime::cpu()?;
+        let mut found = 0;
+        for &(m, n) in FP_SHAPES {
+            let name = format!("fingerprint_{m}x{n}");
+            let path = dir.join(format!("{name}.hlo.txt"));
+            if path.exists() {
+                rt.load_file(&name, &path)?;
+                found += 1;
+            }
+        }
+        if found == 0 {
+            return Err(anyhow!("no fingerprint artifacts in {dir:?} (run `make artifacts`)"));
+        }
+        Ok(PjrtMomentEngine {
+            runtime: Mutex::new(rt),
+            fallback: RustMomentEngine,
+            served: Default::default(),
+            fell_back: Default::default(),
+        })
+    }
+
+    /// Smallest canonical shape that fits (rows ≤ m, cols ≤ n).
+    fn canonical_for(rows: usize, cols: usize) -> Option<(usize, usize)> {
+        FP_SHAPES
+            .iter()
+            .copied()
+            .find(|&(m, n)| rows <= m && cols <= n)
+    }
+}
+
+impl MomentEngine for PjrtMomentEngine {
+    fn moments(&self, mat: &Tensor, order: usize) -> Vec<f64> {
+        use std::sync::atomic::Ordering::Relaxed;
+        let (rows, cols) = (mat.shape()[0], mat.shape()[1]);
+        let Some((m, n)) = Self::canonical_for(rows, cols) else {
+            self.fell_back.fetch_add(1, Relaxed);
+            return self.fallback.moments(mat, order);
+        };
+        if order > MOMENT_ORDER {
+            self.fell_back.fetch_add(1, Relaxed);
+            return self.fallback.moments(mat, order);
+        }
+        // zero-pad into the canonical shape: padding rows/cols with
+        // zeros leaves every tr((M Mᵀ)^k) unchanged
+        let src = mat.to_vec();
+        let mut padded = vec![0.0f32; m * n];
+        for r in 0..rows {
+            padded[r * n..r * n + cols].copy_from_slice(&src[r * cols..(r + 1) * cols]);
+        }
+        let name = format!("fingerprint_{m}x{n}");
+        let rt = self.runtime.lock().unwrap();
+        match rt.execute_f32(&name, &[(&padded, &[m, n])]) {
+            Ok(outs) => {
+                self.served.fetch_add(1, Relaxed);
+                // kernel returns one vector of MOMENT_ORDER moments
+                outs[0].iter().take(order).map(|&x| x as f64).collect()
+            }
+            Err(_) => {
+                self.fell_back.fetch_add(1, Relaxed);
+                self.fallback.moments(mat, order)
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-pallas"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// These tests exercise the real PJRT path and are skipped when
+    /// `make artifacts` has not run yet.
+    fn engine() -> Option<PjrtMomentEngine> {
+        let dir = default_artifact_dir();
+        PjrtMomentEngine::load(&dir).ok()
+    }
+
+    #[test]
+    fn canonical_shape_selection() {
+        assert_eq!(PjrtMomentEngine::canonical_for(10, 100), Some((32, 256)));
+        assert_eq!(PjrtMomentEngine::canonical_for(64, 1024), Some((64, 1024)));
+        assert_eq!(PjrtMomentEngine::canonical_for(4096, 4096), None);
+    }
+
+    #[test]
+    fn pjrt_moments_match_rust_engine() {
+        let Some(eng) = engine() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut rng = crate::util::Prng::new(21);
+        let t = Tensor::randn(&mut rng, &[20, 150]);
+        let pj = eng.moments(&t, MOMENT_ORDER);
+        let rs = RustMomentEngine.moments(&t, MOMENT_ORDER);
+        for (a, b) in pj.iter().zip(rs.iter()) {
+            let rel = (a - b).abs() / b.abs().max(1e-9);
+            assert!(rel < 1e-3, "pjrt {a} vs rust {b}");
+        }
+        assert!(eng.served.load(std::sync::atomic::Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn pjrt_engine_fingerprints_match_layouts() {
+        let Some(eng) = engine() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut rng = crate::util::Prng::new(22);
+        let t = Tensor::randn(&mut rng, &[4, 8, 16]);
+        let p = t.permute(&[1, 0, 2]).contiguous();
+        let f1 = crate::fingerprint::fingerprint_with(&eng, &t);
+        let f2 = crate::fingerprint::fingerprint_with(&eng, &p);
+        assert!(f1.matches(&f2, 1e-3), "distance {}", f1.distance(&f2));
+    }
+}

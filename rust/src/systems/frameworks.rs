@@ -1,0 +1,353 @@
+//! Mini ML-framework systems: PyTorch-, JAX-, and TensorFlow-flavoured
+//! operator implementations (the paper's "ML libraries" category).
+//!
+//! These systems differ in convolution layout/algorithm choices
+//! (Fig 5c, pytorch-157334, jax-29875, tf-96396) and in the misc
+//! numeric APIs behind cases c6 (eigvals), c11 (busy-wait sync), c12
+//! (non-contiguous LayerNorm), c13 (cross_entropy), c14 (stft), c15
+//! (expm), and c16 (count_nonzero).
+
+use crate::dispatch::{Env, KernelChoice, Routine, VarSource};
+use crate::energy::ComputeUnit;
+use crate::exec::{Dispatcher, Program};
+use crate::graph::{Attrs, Graph, NodeId, OpKind};
+use crate::tensor::Tensor;
+use crate::trace::Frame;
+use crate::util::Prng;
+
+/// Convolution workload spec (Fig 5c: batch 128, hidden 512 — scaled
+/// down for the simulated testbed; ratios preserved).
+#[derive(Clone, Copy, Debug)]
+pub struct ConvSpec {
+    pub batch: usize,
+    pub channels: usize,
+    pub hw: usize,
+    pub out_channels: usize,
+    pub kernel: usize,
+    pub groups: usize,
+}
+
+impl ConvSpec {
+    pub fn fig5c() -> ConvSpec {
+        ConvSpec { batch: 8, channels: 32, hw: 16, out_channels: 32, kernel: 3, groups: 1 }
+    }
+
+    pub fn grouped() -> ConvSpec {
+        ConvSpec { groups: 4, ..ConvSpec::fig5c() }
+    }
+}
+
+/// Shared conv weights so framework outputs are comparable.
+pub fn conv_params(rng: &mut Prng, spec: ConvSpec) -> (Tensor, Tensor) {
+    let x = Tensor::randn(rng, &[spec.batch, spec.channels, spec.hw, spec.hw]);
+    let w = crate::tensor::ops::scale(
+        &Tensor::randn(rng, &[spec.out_channels, spec.channels / spec.groups, spec.kernel, spec.kernel]),
+        1.0 / (spec.channels as f32).sqrt(),
+    );
+    (x, w)
+}
+
+/// Layout a framework uses for convolution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConvLayout {
+    Nchw,
+    Nhwc,
+}
+
+/// Build a single-conv program in the given layout. The input feed is
+/// always provided NCHW and permuted in-graph when the framework wants
+/// NHWC (mirroring real framework format conversion).
+pub fn build_conv(sys: &str, spec: ConvSpec, layout: ConvLayout, x: &Tensor, w: &Tensor, dispatch: &str) -> Program {
+    let mut g = Graph::new(&format!("{sys}-conv"));
+    let xi = g.add(OpKind::Input, &[], "x");
+    let wi = g.add(OpKind::Weight, &[], "w");
+    let mut attrs = Attrs::new();
+    attrs.insert("pad".into(), (spec.kernel / 2).to_string());
+    attrs.insert("groups".into(), spec.groups.to_string());
+    attrs.insert("dispatch".into(), dispatch.into());
+    let out = match layout {
+        ConvLayout::Nchw => {
+            attrs.insert("layout".into(), "nchw".into());
+            g.add_attrs(OpKind::Conv2d, &[xi, wi], &format!("{sys}.conv2d"), attrs)
+        }
+        ConvLayout::Nhwc => {
+            let p = g.add_attr1(OpKind::Permute, &[xi], &format!("{sys}.to_nhwc"), "perm", "0,2,3,1");
+            let c = g.add(OpKind::Contiguous, &[p], &format!("{sys}.nhwc_copy"));
+            attrs.insert("layout".into(), "nhwc".into());
+            let o = g.add_attrs(OpKind::Conv2d, &[c, wi], &format!("{sys}.conv2d"), attrs);
+            let p2 = g.add_attr1(OpKind::Permute, &[o], &format!("{sys}.to_nchw"), "perm", "0,3,1,2");
+            g.add(OpKind::Contiguous, &[p2], &format!("{sys}.nchw_copy"))
+        }
+    };
+    g.add(OpKind::Output, &[out], "out");
+    let mut p = Program::new(g);
+    p.feed(0, x.clone());
+    p.feed(1, w.clone());
+    p
+}
+
+/// Generic one-op program builder for the framework micro cases
+/// (eigvals, stft, expm, count_nonzero, layernorm, cross-entropy...).
+pub fn build_unary_op(
+    sys: &str,
+    op: OpKind,
+    label: &str,
+    attrs: Attrs,
+    x: &Tensor,
+    extra_weights: &[Tensor],
+) -> Program {
+    let mut g = Graph::new(&format!("{sys}-{label}"));
+    let xi = g.add(OpKind::Input, &[], "x");
+    let mut inputs = vec![xi];
+    let mut feeds = vec![(xi, x.clone())];
+    for (i, wt) in extra_weights.iter().enumerate() {
+        let wi = g.add(OpKind::Weight, &[], &format!("w{i}"));
+        inputs.push(wi);
+        feeds.push((wi, wt.clone()));
+    }
+    let o = g.add_attrs(op, &inputs, label, attrs);
+    g.add(OpKind::Output, &[o], "out");
+    let mut p = Program::new(g);
+    for (id, t) in feeds {
+        p.feed(id, t);
+    }
+    p
+}
+
+// ---------------------------------------------------------------------
+// Dispatchers
+// ---------------------------------------------------------------------
+
+/// PyTorch conv dispatch: cuDNN kernels, layout-sensitive (new issues
+/// pytorch-157334 / tf-96396: cuDNN grouped-conv likes NHWC, custom
+/// kernels like NCHW).
+pub fn torch_conv_routine() -> Routine {
+    Routine::branch_on(
+        "torch.nn.functional.conv2d",
+        vec![Frame::cpp("at::native::cudnn_convolution")],
+        "cudnn::conv_dispatch",
+        "layout",
+        "nhwc",
+        VarSource::InputProperty("memory_format (NCHW vs channels_last)".into()),
+        KernelChoice::new("cudnn_implicit_gemm_nhwc", ComputeUnit::TensorCore),
+        KernelChoice::new("cudnn_implicit_gemm_nchw", ComputeUnit::TensorCore).quality(0.72, 1.05, 1.25),
+    )
+}
+
+/// TensorFlow conv dispatch: custom kernels, efficient under NCHW,
+/// poor under NHWC — the mirror image of PyTorch (tf-96396).
+pub fn tf_conv_routine() -> Routine {
+    Routine::branch_on(
+        "tf.nn.conv2d",
+        vec![Frame::cpp("tensorflow::LaunchConv2DOp")],
+        "tensorflow::conv_autotune",
+        "layout",
+        "nchw",
+        VarSource::InputProperty("data_format (NHWC vs NCHW)".into()),
+        KernelChoice::new("tf_custom_conv_nchw", ComputeUnit::TensorCore),
+        KernelChoice::new("tf_custom_conv_nhwc", ComputeUnit::TensorCore).quality(0.8, 1.03, 1.3),
+    )
+}
+
+/// JAX conv dispatch: XLA fusion, but grouped convs hit a slow cuDNN
+/// path (new issue jax-29875). Also the Fig 5c outlier: JAX's conv is
+/// 3.35x more energy-hungry than TF's on this workload.
+pub fn jax_conv_routine() -> Routine {
+    Routine::branch_on(
+        "jax.lax.conv_general_dilated",
+        vec![Frame::cpp("xla::gpu::ConvolutionThunk")],
+        "xla::gpu::PickBestAlgorithm",
+        "groups",
+        "1",
+        VarSource::ApiArgument("feature_group_count".into()),
+        KernelChoice::new("xla_fused_conv", ComputeUnit::TensorCore).quality(0.25, 2.2, 1.5),
+        KernelChoice::new("cudnn_grouped_conv_fallback", ComputeUnit::CudaCore).quality(0.45, 2.0, 1.8),
+    )
+}
+
+/// `torch.linalg.eigvals`: ignores symmetry and runs the general
+/// nonsymmetric solver (case c6, hf-34570). The efficient peer calls
+/// `eigvalsh`.
+pub fn torch_eigvals_routine() -> Routine {
+    Routine::branch_on(
+        "torch.linalg.eigvals",
+        vec![Frame::cpp("at::native::linalg_eig")],
+        "at::native::linalg_eig_dispatch",
+        "assume_symmetric",
+        "true",
+        VarSource::ApiArgument("use torch.linalg.eigvalsh for symmetric inputs".into()),
+        KernelChoice::new("cusolver_syevd", ComputeUnit::CudaCore),
+        KernelChoice::new("cusolver_geev_general", ComputeUnit::CudaCore).quality(0.45, 1.0, 2.2),
+    )
+}
+
+/// `F.cross_entropy` kernel selection (case c13, pytorch-141822).
+pub fn torch_cross_entropy_routine() -> Routine {
+    Routine::branch_on(
+        "torch.nn.functional.cross_entropy",
+        vec![Frame::cpp("at::native::cross_entropy_loss")],
+        "at::native::log_softmax_dispatch",
+        "fused_log_softmax",
+        "true",
+        VarSource::ConfigFlag("use fused log_softmax+nll path".into()),
+        KernelChoice::new("fused_log_softmax_nll", ComputeUnit::Sfu),
+        KernelChoice::new("softmax_then_nll_twopass", ComputeUnit::Sfu).quality(0.80, 1.0, 1.9),
+    )
+}
+
+/// `jax.scipy.signal.stft` calls an inefficient low-level path (c14).
+pub fn jax_stft_routine() -> Routine {
+    Routine::branch_on(
+        "jax.scipy.signal.stft",
+        vec![Frame::cpp("xla::gpu::FftThunk")],
+        "xla::fft_lowering",
+        "use_rfft",
+        "true",
+        VarSource::ApiArgument("lower via rfft instead of full complex fft".into()),
+        KernelChoice::new("cufft_r2c_batched", ComputeUnit::CudaCore),
+        KernelChoice::new("cufft_c2c_full_with_pad", ComputeUnit::CudaCore).quality(0.62, 1.05, 1.8),
+    )
+}
+
+/// `jax.scipy.linalg.expm` recomputes shared powers (c15).
+pub fn jax_expm_routine() -> Routine {
+    Routine::branch_on(
+        "jax.scipy.linalg.expm",
+        vec![Frame::cpp("xla::gpu::GemmThunk")],
+        "jax::expm_pade_dispatch",
+        "reuse_powers",
+        "true",
+        VarSource::ApiArgument("hoist repeated A^k computations".into()),
+        KernelChoice::new("expm_pade_hoisted", ComputeUnit::TensorCore),
+        KernelChoice::new("expm_pade_recompute", ComputeUnit::TensorCore).quality(0.55, 1.3, 1.9),
+    )
+}
+
+/// `tf.math.count_nonzero` triggers implicit casts/copies (c16).
+pub fn tf_count_nonzero_routine() -> Routine {
+    Routine::branch_on(
+        "tf.math.count_nonzero",
+        vec![Frame::cpp("tensorflow::CountNonzeroOp")],
+        "tensorflow::cast_and_reduce",
+        "direct_reduce",
+        "true",
+        VarSource::ApiArgument("reduce on the original dtype (no implicit cast copy)".into()),
+        KernelChoice::new("reduce_nonzero_direct", ComputeUnit::CudaCore),
+        KernelChoice::new("cast_to_int64_then_reduce", ComputeUnit::CudaCore).quality(0.58, 1.06, 3.0),
+    )
+}
+
+/// PyTorch dispatcher for framework-level comparisons.
+pub fn torch_dispatcher() -> Dispatcher {
+    let mut d = Dispatcher::new();
+    d.register("matmul", super::torch_matmul_routine());
+    d.register("torch.addmm", super::torch_addmm_routine());
+    d.register("torch.nn.functional.layer_norm", super::layernorm_routine());
+    d.register("torch.conv2d", torch_conv_routine());
+    d.register("torch.linalg.eigvals", torch_eigvals_routine());
+    d.register("torch.nn.functional.cross_entropy", torch_cross_entropy_routine());
+    d
+}
+
+/// JAX dispatcher.
+pub fn jax_dispatcher() -> Dispatcher {
+    let mut d = Dispatcher::new();
+    d.register(
+        "matmul",
+        Routine::direct(
+            "jax.numpy.matmul",
+            vec![Frame::cpp("xla::gpu::GemmThunk")],
+            KernelChoice::new("xla_tf32_gemm_fused", ComputeUnit::TensorCore),
+        ),
+    );
+    d.register("jax.conv2d", jax_conv_routine());
+    d.register("jax.stft", jax_stft_routine());
+    d.register("jax.expm", jax_expm_routine());
+    d
+}
+
+/// TensorFlow dispatcher.
+pub fn tf_dispatcher() -> Dispatcher {
+    let mut d = Dispatcher::new();
+    d.register(
+        "matmul",
+        Routine::direct(
+            "tf.linalg.matmul",
+            vec![Frame::cpp("tensorflow::MatMulOp")],
+            KernelChoice::new("tf_tf32_gemm", ComputeUnit::TensorCore),
+        ),
+    );
+    d.register("tf.conv2d", tf_conv_routine());
+    d.register("tf.count_nonzero", tf_count_nonzero_routine());
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::DeviceSpec;
+    use crate::exec::Executor;
+
+    fn exec(disp: Dispatcher, env: Env) -> Executor {
+        Executor::new(DeviceSpec::h200_sim(), disp, env)
+    }
+
+    #[test]
+    fn conv_values_agree_across_frameworks_and_layouts() {
+        let mut rng = Prng::new(1);
+        let spec = ConvSpec::fig5c();
+        let (x, w) = conv_params(&mut rng, spec);
+        let pt = build_conv("torch", spec, ConvLayout::Nchw, &x, &w, "torch.conv2d");
+        let tf = build_conv("tf", spec, ConvLayout::Nhwc, &x, &w, "tf.conv2d");
+        let jx = build_conv("jax", spec, ConvLayout::Nchw, &x, &w, "jax.conv2d");
+        let rp = exec(torch_dispatcher(), Env::new()).run(&pt);
+        let rt = exec(tf_dispatcher(), Env::new()).run(&tf);
+        let rj = exec(jax_dispatcher(), Env::new().with("groups", "1")).run(&jx);
+        assert!((rp.output().global_rel_diff(rt.output()) as f64) < 0.01);
+        assert!((rp.output().global_rel_diff(rj.output()) as f64) < 0.01);
+    }
+
+    #[test]
+    fn fig5c_energy_spread_is_large() {
+        // the paper reports up to 3.35x between JAX and TF on conv
+        let mut rng = Prng::new(2);
+        let spec = ConvSpec::fig5c();
+        let (x, w) = conv_params(&mut rng, spec);
+        let rt = exec(tf_dispatcher(), Env::new())
+            .run(&build_conv("tf", spec, ConvLayout::Nchw, &x, &w, "tf.conv2d"));
+        let rj = exec(jax_dispatcher(), Env::new().with("groups", "1"))
+            .run(&build_conv("jax", spec, ConvLayout::Nchw, &x, &w, "jax.conv2d"));
+        let ratio = rj.total_energy_j / rt.total_energy_j;
+        assert!(ratio > 1.5, "jax/tf conv energy ratio only {ratio:.2}");
+    }
+
+    #[test]
+    fn layout_dependent_kernel_choice() {
+        let r = torch_conv_routine();
+        let nchw = r.run(&Env::new().with("layout", "nchw"));
+        let nhwc = r.run(&Env::new().with("layout", "nhwc"));
+        assert_ne!(nchw.choice.kernel, nhwc.choice.kernel);
+        assert!(nchw.choice.efficiency < nhwc.choice.efficiency);
+    }
+
+    #[test]
+    fn eigvals_routines_differ_by_hint() {
+        let r = torch_eigvals_routine();
+        let gen = r.run(&Env::new());
+        let sym = r.run(&Env::new().with("assume_symmetric", "true"));
+        assert_eq!(gen.choice.kernel, "cusolver_geev_general");
+        assert_eq!(sym.choice.kernel, "cusolver_syevd");
+    }
+
+    #[test]
+    fn unary_op_builder_runs() {
+        let mut rng = Prng::new(3);
+        let x = Tensor::randn(&mut rng, &[16, 16]);
+        let mut at = Attrs::new();
+        at.insert("dispatch".into(), "torch.linalg.eigvals".into());
+        let p = build_unary_op("torch", OpKind::Eigvals, "eig", at, &x, &[]);
+        let r = exec(torch_dispatcher(), Env::new()).run(&p);
+        assert_eq!(r.output().shape(), &[16]);
+        assert!(r.total_energy_j > 0.0);
+    }
+}

@@ -1,0 +1,258 @@
+//! Mini image-generation systems: Stable-Diffusion-reference- and
+//! Diffusers-flavoured UNet blocks (Fig 5d, cases c7/c8).
+//!
+//! Both build the same residual UNet block (conv → norm → SiLU → conv →
+//! skip add → self-attention). The Diffusers variant round-trips the
+//! skip connection through an unnecessary `concat`/`split` pair (case
+//! c7, diffusers-12131); the SD-reference variant leaves `allow_tf32`
+//! unset so its convolutions/matmuls run on CUDA cores (case c8,
+//! sd-279 — fixed in release 1.10.1 for a 12.5 % end-to-end saving).
+
+use crate::dispatch::Env;
+use crate::exec::{Dispatcher, Program};
+use crate::graph::{Attrs, Graph, NodeId, OpKind};
+use crate::tensor::Tensor;
+use crate::util::Prng;
+
+/// UNet block spec.
+#[derive(Clone, Copy, Debug)]
+pub struct UnetSpec {
+    pub batch: usize,
+    pub channels: usize,
+    pub hw: usize,
+}
+
+impl UnetSpec {
+    pub fn sd3_sim() -> UnetSpec {
+        UnetSpec { batch: 2, channels: 64, hw: 24 }
+    }
+}
+
+/// Shared UNet weights.
+#[derive(Clone, Debug)]
+pub struct UnetParams {
+    pub spec: UnetSpec,
+    pub x: Tensor,
+    pub conv1_w: Tensor,
+    pub conv2_w: Tensor,
+    pub norm_g: Tensor,
+    pub norm_b: Tensor,
+    pub attn_qkv_w: Tensor,
+    pub attn_out_w: Tensor,
+}
+
+impl UnetParams {
+    pub fn new(rng: &mut Prng, spec: UnetSpec) -> UnetParams {
+        let c = spec.channels;
+        let scale = 1.0 / (c as f32).sqrt();
+        let mk = |rng: &mut Prng, shape: &[usize]| {
+            crate::tensor::ops::scale(&Tensor::randn(rng, shape), scale)
+        };
+        UnetParams {
+            spec,
+            x: Tensor::randn(rng, &[spec.batch, c, spec.hw, spec.hw]),
+            conv1_w: mk(rng, &[c, c, 3, 3]),
+            conv2_w: mk(rng, &[c, c, 3, 3]),
+            norm_g: Tensor::full(&[c], 1.0),
+            norm_b: Tensor::zeros(&[c]),
+            attn_qkv_w: mk(rng, &[c, 3 * c]),
+            attn_out_w: mk(rng, &[c, c]),
+        }
+    }
+}
+
+/// Build options for the two image-gen systems.
+#[derive(Clone, Copy, Debug)]
+pub struct UnetBuildOpts {
+    /// Route the skip connection through concat+split (Diffusers, c7).
+    pub concat_split_skip: bool,
+    /// Dispatch prefix.
+    pub prefix: &'static str,
+}
+
+impl UnetBuildOpts {
+    pub fn sd() -> UnetBuildOpts {
+        UnetBuildOpts { concat_split_skip: false, prefix: "sd" }
+    }
+    pub fn diffusers() -> UnetBuildOpts {
+        UnetBuildOpts { concat_split_skip: true, prefix: "diffusers" }
+    }
+}
+
+/// Build one UNet residual+attention block.
+pub fn build_unet_block(params: &UnetParams, opts: &UnetBuildOpts) -> Program {
+    let spec = params.spec;
+    let (b, c, hw) = (spec.batch, spec.channels, spec.hw);
+    let sys = opts.prefix;
+    let mut g = Graph::new(&format!("{sys}-unet"));
+    let mut feeds: Vec<(NodeId, Tensor)> = Vec::new();
+    fn add_w(g: &mut Graph, feeds: &mut Vec<(NodeId, Tensor)>, name: &str, t: &Tensor) -> NodeId {
+        let id = g.add(OpKind::Weight, &[], name);
+        feeds.push((id, t.clone()));
+        id
+    }
+
+    let xi = g.add(OpKind::Input, &[], "latent");
+    feeds.push((xi, params.x.clone()));
+    let w1 = add_w(&mut g, &mut feeds, "conv1_w", &params.conv1_w);
+    let w2 = add_w(&mut g, &mut feeds, "conv2_w", &params.conv2_w);
+    let ng = add_w(&mut g, &mut feeds, "norm_g", &params.norm_g);
+    let nb = add_w(&mut g, &mut feeds, "norm_b", &params.norm_b);
+    let qkv_w = add_w(&mut g, &mut feeds, "attn_qkv_w", &params.attn_qkv_w);
+    let out_w = add_w(&mut g, &mut feeds, "attn_out_w", &params.attn_out_w);
+
+    let mut conv = |g: &mut Graph, x: NodeId, w: NodeId, label: &str| {
+        let mut at = Attrs::new();
+        at.insert("pad".into(), "1".into());
+        at.insert("dispatch".into(), "matmul".into()); // conv lowers through gemm dispatch
+        at.insert("groups".into(), "1".into());
+        g.add_attrs(OpKind::Conv2d, &[x, w], label, at)
+    };
+
+    // residual conv branch
+    let c1 = conv(&mut g, xi, w1, &format!("{sys}.resnet.conv1"));
+    let act = g.add(OpKind::Silu, &[c1], &format!("{sys}.resnet.silu"));
+    let c2 = conv(&mut g, act, w2, &format!("{sys}.resnet.conv2"));
+
+    // skip connection: direct add, or the wasteful concat+split round trip
+    let skip_sum = if opts.concat_split_skip {
+        let cat = g.add_attr1(OpKind::Concat, &[c2, xi], &format!("{sys}.skip.concat"), "dim", "1");
+        let mut at = Attrs::new();
+        at.insert("dim".into(), "1".into());
+        at.insert("chunks".into(), "2".into());
+        at.insert("index".into(), "0".into());
+        let h = g.add_attrs(OpKind::SplitChunk, &[cat], &format!("{sys}.skip.split_h"), at);
+        let mut at2 = Attrs::new();
+        at2.insert("dim".into(), "1".into());
+        at2.insert("chunks".into(), "2".into());
+        at2.insert("index".into(), "1".into());
+        let s = g.add_attrs(OpKind::SplitChunk, &[cat], &format!("{sys}.skip.split_skip"), at2);
+        g.add(OpKind::Add, &[h, s], &format!("{sys}.skip.add"))
+    } else {
+        g.add(OpKind::Add, &[c2, xi], &format!("{sys}.skip.add"))
+    };
+
+    // spatial self-attention: [B,C,H,W] -> [B, HW, C]
+    let mut at = Attrs::new();
+    at.insert("shape".into(), format!("{b},{c},{}", hw * hw));
+    let flat = g.add_attrs(OpKind::Reshape, &[skip_sum], &format!("{sys}.attn.flatten"), at);
+    let seq = g.add_attr1(OpKind::Permute, &[flat], &format!("{sys}.attn.to_seq"), "perm", "0,2,1");
+    let seq_c = g.add(OpKind::Contiguous, &[seq], &format!("{sys}.attn.seq_copy"));
+    let norm = {
+        let mut at = Attrs::new();
+        at.insert("dispatch".into(), "torch.nn.functional.layer_norm".into());
+        at.insert("input_contiguous".into(), "true".into());
+        g.add_attrs(OpKind::LayerNorm, &[seq_c, ng, nb], &format!("{sys}.attn.groupnorm"), at)
+    };
+    let qkv = g.add_attr1(OpKind::MatMul, &[norm, qkv_w], &format!("{sys}.attn.qkv"), "dispatch", "matmul");
+    let mut split = |g: &mut Graph, idx: usize, name: &str| {
+        let mut at = Attrs::new();
+        at.insert("dim".into(), "2".into());
+        at.insert("chunks".into(), "3".into());
+        at.insert("index".into(), idx.to_string());
+        g.add_attrs(OpKind::SplitChunk, &[qkv], &format!("{sys}.attn.{name}"), at)
+    };
+    let q = split(&mut g, 0, "q");
+    let k = split(&mut g, 1, "k");
+    let v = split(&mut g, 2, "v");
+    // single-head attention over [B, HW, C]: reshape to [B,1,HW,C]
+    let mut r4 = |g: &mut Graph, t: NodeId, name: &str| {
+        let mut at = Attrs::new();
+        at.insert("shape".into(), format!("{b},1,{},{c}", hw * hw));
+        g.add_attrs(OpKind::Reshape, &[t], &format!("{sys}.attn.{name}4"), at)
+    };
+    let q4 = r4(&mut g, q, "q");
+    let k4 = r4(&mut g, k, "k");
+    let v4 = r4(&mut g, v, "v");
+    let mut at = Attrs::new();
+    at.insert("dispatch".into(), format!("{sys}.attention"));
+    let attn = g.add_attrs(OpKind::Attention, &[q4, k4, v4], &format!("{sys}.attn.sdpa"), at);
+    let mut at = Attrs::new();
+    at.insert("shape".into(), format!("{b},{},{c}", hw * hw));
+    let attn3 = g.add_attrs(OpKind::Reshape, &[attn], &format!("{sys}.attn.out3"), at);
+    let proj = g.add_attr1(OpKind::MatMul, &[attn3, out_w], &format!("{sys}.attn.out_proj"), "dispatch", "matmul");
+    let out = g.add(OpKind::Add, &[proj, seq_c], &format!("{sys}.attn.residual"));
+
+    g.add(OpKind::Output, &[out], "out");
+    let mut p = Program::new(g);
+    for (id, t) in feeds {
+        p.feed(id, t);
+    }
+    p
+}
+
+/// SD-reference dispatcher: torch kernels, `allow_tf32` comes from env.
+pub fn sd_dispatcher() -> Dispatcher {
+    let mut d = Dispatcher::new();
+    d.register("matmul", super::torch_matmul_routine());
+    d.register("torch.nn.functional.layer_norm", super::layernorm_routine());
+    d.register("sd.attention", super::attention_routine("sd.cross_attention"));
+    d
+}
+
+/// Diffusers dispatcher: same torch substrate.
+pub fn diffusers_dispatcher() -> Dispatcher {
+    let mut d = sd_dispatcher();
+    d.register("diffusers.attention", super::attention_routine("diffusers.attn_processor"));
+    d
+}
+
+/// Default env: Diffusers sets TF32 (post-fix); SD reference forgot it
+/// (the c8 bug) — callers flip this for the fixed variant.
+pub fn sd_env(tf32_enabled: bool) -> Env {
+    if tf32_enabled {
+        Env::new().with("allow_tf32", "true")
+    } else {
+        Env::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::DeviceSpec;
+    use crate::exec::Executor;
+
+    fn run(p: &Program, d: Dispatcher, env: Env) -> crate::exec::RunArtifacts {
+        Executor::new(DeviceSpec::h200_sim(), d, env).run(p)
+    }
+
+    #[test]
+    fn sd_and_diffusers_agree_numerically() {
+        let mut rng = Prng::new(1);
+        let params = UnetParams::new(&mut rng, UnetSpec::sd3_sim());
+        let sd = run(&build_unet_block(&params, &UnetBuildOpts::sd()), sd_dispatcher(), sd_env(true));
+        let df = run(
+            &build_unet_block(&params, &UnetBuildOpts::diffusers()),
+            diffusers_dispatcher(),
+            sd_env(true),
+        );
+        assert_eq!(sd.output().shape(), df.output().shape());
+        assert!((sd.output().global_rel_diff(df.output()) as f64) < 0.01);
+    }
+
+    #[test]
+    fn concat_split_skip_wastes_energy() {
+        let mut rng = Prng::new(2);
+        let params = UnetParams::new(&mut rng, UnetSpec::sd3_sim());
+        let clean = run(&build_unet_block(&params, &UnetBuildOpts::sd()), sd_dispatcher(), sd_env(true));
+        let waste = run(
+            &build_unet_block(&params, &UnetBuildOpts::diffusers()),
+            diffusers_dispatcher(),
+            sd_env(true),
+        );
+        assert!(waste.total_energy_j > clean.total_energy_j);
+        assert!(waste.records.iter().any(|r| r.label.contains("skip.concat")));
+    }
+
+    #[test]
+    fn tf32_off_costs_more_energy_same_values_within_1pct() {
+        let mut rng = Prng::new(3);
+        let params = UnetParams::new(&mut rng, UnetSpec::sd3_sim());
+        let on = run(&build_unet_block(&params, &UnetBuildOpts::sd()), sd_dispatcher(), sd_env(true));
+        let off = run(&build_unet_block(&params, &UnetBuildOpts::sd()), sd_dispatcher(), sd_env(false));
+        assert!(off.total_energy_j > on.total_energy_j * 1.05,
+            "tf32-off {} vs on {}", off.total_energy_j, on.total_energy_j);
+        assert!((on.output().global_rel_diff(off.output()) as f64) < 0.01);
+    }
+}

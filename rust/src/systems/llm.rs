@@ -1,0 +1,685 @@
+//! Mini LLM serving/training systems: HF-Transformers-, vLLM-, SGLang-,
+//! and Megatron-flavoured implementations of the same GPT-2-style
+//! transformer forward pass.
+//!
+//! All four consume the same [`TransformerParams`] (shared weights), so
+//! any two systems given the same workload compute the same function —
+//! but their graphs differ exactly where the paper's cases live:
+//! projection style (addmm vs matmul+add), QKV fusion, attention layout
+//! (HND + contiguous copies vs NHD), GELU decomposition, GQA
+//! `repeat_interleave`, and LM-head scope (all positions vs last).
+
+use std::collections::BTreeMap;
+
+use crate::dispatch::{Env, KernelChoice, Routine, VarSource};
+use crate::energy::ComputeUnit;
+use crate::exec::{Dispatcher, Program};
+use crate::graph::{Attrs, Graph, NodeId, OpKind};
+use crate::tensor::Tensor;
+use crate::trace::Frame;
+use crate::util::Prng;
+
+use super::{gelu_fused, gelu_unfused, linear_addmm, linear_matmul_add};
+
+/// Transformer architecture hyper-parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct LlmSpec {
+    pub batch: usize,
+    pub seq: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub layers: usize,
+}
+
+impl LlmSpec {
+    /// GPT-2-small-shaped config scaled for the simulated testbed.
+    pub fn gpt2_sim() -> LlmSpec {
+        LlmSpec { batch: 4, seq: 64, d_model: 256, n_heads: 8, d_ff: 1024, vocab: 2048, layers: 1 }
+    }
+
+    /// Llama-8B-shaped (node-count-wise) config: more layers for the
+    /// Fig 9 scalability experiment.
+    pub fn llama_sim(layers: usize) -> LlmSpec {
+        LlmSpec { batch: 2, seq: 32, d_model: 128, n_heads: 8, d_ff: 512, vocab: 1024, layers }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+}
+
+/// Shared weights: one tensor bank consumed by every system.
+#[derive(Clone, Debug)]
+pub struct TransformerParams {
+    pub spec: LlmSpec,
+    pub bank: BTreeMap<String, Tensor>,
+    /// Token ids for the workload.
+    pub ids: Vec<usize>,
+}
+
+impl TransformerParams {
+    pub fn new(rng: &mut Prng, spec: LlmSpec) -> TransformerParams {
+        let mut bank = BTreeMap::new();
+        let d = spec.d_model;
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut t = |name: String, shape: &[usize]| {
+            let n: usize = shape.iter().product();
+            let data: Vec<f32> = (0..n).map(|_| rng.normal_f32() * scale).collect();
+            bank.insert(name, Tensor::from_vec(data, shape));
+        };
+        t("wte".into(), &[spec.vocab, d]);
+        t("wpe".into(), &[spec.seq, d]);
+        for l in 0..spec.layers {
+            t(format!("l{l}.ln1_g"), &[d]);
+            t(format!("l{l}.ln1_b"), &[d]);
+            t(format!("l{l}.qkv_w"), &[d, 3 * d]);
+            t(format!("l{l}.qkv_b"), &[3 * d]);
+            t(format!("l{l}.out_w"), &[d, d]);
+            t(format!("l{l}.out_b"), &[d]);
+            t(format!("l{l}.ln2_g"), &[d]);
+            t(format!("l{l}.ln2_b"), &[d]);
+            t(format!("l{l}.ff1_w"), &[d, spec.d_ff]);
+            t(format!("l{l}.ff1_b"), &[spec.d_ff]);
+            t(format!("l{l}.ff2_w"), &[spec.d_ff, d]);
+            t(format!("l{l}.ff2_b"), &[d]);
+        }
+        t("lnf_g".into(), &[d]);
+        t("lnf_b".into(), &[d]);
+        // LN gains near 1 are more realistic than N(0, 1/sqrt d)
+        for (k, v) in bank.iter_mut() {
+            if k.ends_with("_g") {
+                let ones: Vec<f32> = v.to_vec().iter().map(|x| 1.0 + 0.1 * x).collect();
+                *v = Tensor::from_vec(ones, v.shape());
+            }
+        }
+        let ids: Vec<usize> = (0..spec.batch * spec.seq).map(|_| rng.below(spec.vocab)).collect();
+        TransformerParams { spec, bank, ids }
+    }
+}
+
+/// Builder context: adds Weight nodes and records feeds.
+struct Ctx<'a> {
+    g: Graph,
+    feeds: Vec<(NodeId, Tensor)>,
+    params: &'a TransformerParams,
+}
+
+impl<'a> Ctx<'a> {
+    fn new(name: &str, params: &'a TransformerParams) -> Ctx<'a> {
+        Ctx { g: Graph::new(name), feeds: Vec::new(), params }
+    }
+
+    fn weight(&mut self, key: &str) -> NodeId {
+        let t = self.params.bank.get(key).unwrap_or_else(|| panic!("missing weight {key}")).clone();
+        let id = self.g.add(OpKind::Weight, &[], key);
+        self.feeds.push((id, t));
+        id
+    }
+
+    /// A weight that is a column slice of a bank tensor (HF's separate
+    /// Q/K/V views of the fused QKV matrix).
+    fn weight_slice_cols(&mut self, key: &str, lo: usize, hi: usize, label: &str) -> NodeId {
+        let t = self.params.bank.get(key).unwrap().slice(1, lo, hi).contiguous();
+        let id = self.g.add(OpKind::Weight, &[], label);
+        self.feeds.push((id, t));
+        id
+    }
+
+    fn weight_slice_1d(&mut self, key: &str, lo: usize, hi: usize, label: &str) -> NodeId {
+        let t = self.params.bank.get(key).unwrap().slice(0, lo, hi).contiguous();
+        let id = self.g.add(OpKind::Weight, &[], label);
+        self.feeds.push((id, t));
+        id
+    }
+
+    fn finish(self, out: NodeId) -> Program {
+        let mut g = self.g;
+        g.add(OpKind::Output, &[out], "out");
+        let mut p = Program::new(g);
+        for (id, t) in self.feeds {
+            p.feed(id, t);
+        }
+        p
+    }
+}
+
+fn ids_csv(ids: &[usize]) -> String {
+    ids.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(",")
+}
+
+/// Embedding + position add, shared front-end ([B*S, D]).
+///
+/// Token ids are the *model input*: they appear as an `Input` node so
+/// the dominator analysis sees the activation spine starting at the
+/// ids (weights are parameter edges, not flow sources).
+fn embed_front(cx: &mut Ctx, sys: &str) -> NodeId {
+    let spec = cx.params.spec;
+    let ids_node = cx.g.add(OpKind::Input, &[], "token_ids");
+    let ids_tensor = Tensor::from_vec(
+        cx.params.ids.iter().map(|&i| i as f32).collect(),
+        &[cx.params.ids.len()],
+    );
+    cx.feeds.push((ids_node, ids_tensor));
+    let wte = cx.weight("wte");
+    let mut at = Attrs::new();
+    at.insert("ids".into(), ids_csv(&cx.params.ids));
+    let tok = cx.g.add_attrs(OpKind::Embedding, &[wte, ids_node], &format!("{sys}.wte_lookup"), at);
+    let wpe = cx.weight("wpe");
+    // positions repeat per batch row: model as embedding lookup too
+    let pos_ids: Vec<usize> = (0..spec.batch * spec.seq).map(|i| i % spec.seq).collect();
+    let mut ap = Attrs::new();
+    ap.insert("ids".into(), ids_csv(&pos_ids));
+    let pos = cx.g.add_attrs(OpKind::Embedding, &[wpe], &format!("{sys}.wpe_lookup"), ap);
+    cx.g.add(OpKind::Add, &[tok, pos], &format!("{sys}.embed_add"))
+}
+
+fn layernorm_node(cx: &mut Ctx, x: NodeId, gk: &str, bk: &str, label: &str, contiguous_input: bool) -> NodeId {
+    let g = cx.weight(gk);
+    let b = cx.weight(bk);
+    let mut at = Attrs::new();
+    at.insert("dispatch".into(), "torch.nn.functional.layer_norm".into());
+    at.insert("input_contiguous".into(), if contiguous_input { "true" } else { "false" }.into());
+    cx.g.add_attrs(OpKind::LayerNorm, &[x, g, b], label, at)
+}
+
+/// Options steering system quirks (used by the case library to toggle
+/// the buggy/fixed variants).
+#[derive(Clone, Debug)]
+pub struct LlmBuildOpts {
+    /// Use the fused-addmm projection kernels (HF) vs matmul+add.
+    pub use_addmm: bool,
+    /// HF-style unfused 5-kernel GELU.
+    pub unfused_gelu: bool,
+    /// HND attention layout with materialised contiguous() copies.
+    pub hnd_layout: bool,
+    /// LM head over all positions (redundant for decode; hf-38977).
+    pub lm_head_all_positions: bool,
+    /// Compute the LM head at all (fig 5 J/token workloads do).
+    pub lm_head: bool,
+    /// GQA: kv-head reduction factor with explicit repeat_interleave
+    /// materialisation (Megatron, case c4). 1 = standard MHA.
+    pub gqa_repeat: usize,
+    /// Fuse the GQA expansion into the attention kernel (the fix for c4).
+    pub gqa_fused: bool,
+    /// Extra layout round-trip in attention (HF default tensor format,
+    /// case c5).
+    pub layout_roundtrip: bool,
+    /// Sort-based top-k sampling (SGLang case c3); None = no sampling op.
+    pub topk: Option<TopkImpl>,
+    /// Dispatch-key prefix, e.g. "vllm".
+    pub prefix: &'static str,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TopkImpl {
+    /// Efficient fused top-k kernel.
+    Fused,
+    /// Full sort + slice (the energy-inefficient API combination).
+    SortSlice,
+}
+
+impl LlmBuildOpts {
+    pub fn hf() -> LlmBuildOpts {
+        LlmBuildOpts {
+            use_addmm: true,
+            unfused_gelu: true,
+            hnd_layout: true,
+            lm_head_all_positions: true,
+            lm_head: true,
+            gqa_repeat: 1,
+            gqa_fused: false,
+            layout_roundtrip: true,
+            topk: None,
+            prefix: "hf",
+        }
+    }
+
+    pub fn vllm() -> LlmBuildOpts {
+        LlmBuildOpts {
+            use_addmm: false,
+            unfused_gelu: false,
+            hnd_layout: false,
+            lm_head_all_positions: false,
+            lm_head: true,
+            gqa_repeat: 1,
+            gqa_fused: true,
+            layout_roundtrip: false,
+            topk: None,
+            prefix: "vllm",
+        }
+    }
+
+    pub fn sglang() -> LlmBuildOpts {
+        LlmBuildOpts { topk: Some(TopkImpl::Fused), prefix: "sglang", ..LlmBuildOpts::vllm() }
+    }
+
+    pub fn megatron() -> LlmBuildOpts {
+        LlmBuildOpts {
+            gqa_repeat: 2,
+            gqa_fused: false,
+            prefix: "megatron",
+            ..LlmBuildOpts::vllm()
+        }
+    }
+}
+
+/// Build a transformer forward program under the given options.
+pub fn build_llm(params: &TransformerParams, opts: &LlmBuildOpts) -> Program {
+    let spec = params.spec;
+    let (b, s, d, h) = (spec.batch, spec.seq, spec.d_model, spec.n_heads);
+    let dh = spec.head_dim();
+    let sys = opts.prefix;
+    let mut cx = Ctx::new(&format!("{sys}-llm"), params);
+    let mut x = embed_front(&mut cx, sys);
+
+    for l in 0..spec.layers {
+        let pre = format!("{sys}.l{l}");
+        let ln1 = layernorm_node(&mut cx, x, &format!("l{l}.ln1_g"), &format!("l{l}.ln1_b"), &format!("{pre}.ln1"), true);
+
+        // ---- QKV projection --------------------------------------
+        let (q2d, k2d, v2d);
+        if opts.use_addmm {
+            // separate Conv1D-style projections from sliced weights
+            let wq = cx.weight_slice_cols(&format!("l{l}.qkv_w"), 0, d, &format!("l{l}.wq"));
+            let wk = cx.weight_slice_cols(&format!("l{l}.qkv_w"), d, 2 * d, &format!("l{l}.wk"));
+            let wv = cx.weight_slice_cols(&format!("l{l}.qkv_w"), 2 * d, 3 * d, &format!("l{l}.wv"));
+            let bq = cx.weight_slice_1d(&format!("l{l}.qkv_b"), 0, d, &format!("l{l}.bq"));
+            let bk = cx.weight_slice_1d(&format!("l{l}.qkv_b"), d, 2 * d, &format!("l{l}.bk"));
+            let bv = cx.weight_slice_1d(&format!("l{l}.qkv_b"), 2 * d, 3 * d, &format!("l{l}.bv"));
+            q2d = linear_addmm(&mut cx.g, ln1, wq, bq, &format!("{pre}.attn.q_proj"));
+            k2d = linear_addmm(&mut cx.g, ln1, wk, bk, &format!("{pre}.attn.k_proj"));
+            v2d = linear_addmm(&mut cx.g, ln1, wv, bv, &format!("{pre}.attn.v_proj"));
+        } else {
+            let w = cx.weight(&format!("l{l}.qkv_w"));
+            let bias = cx.weight(&format!("l{l}.qkv_b"));
+            let qkv = linear_matmul_add(&mut cx.g, ln1, w, bias, &format!("{pre}.attn.qkv_proj"));
+            let mut split = |idx: usize, name: &str| {
+                let mut at = Attrs::new();
+                at.insert("dim".into(), "1".into());
+                at.insert("chunks".into(), "3".into());
+                at.insert("index".into(), idx.to_string());
+                cx.g.add_attrs(OpKind::SplitChunk, &[qkv], &format!("{pre}.attn.{name}"), at)
+            };
+            q2d = split(0, "q_split");
+            k2d = split(1, "k_split");
+            v2d = split(2, "v_split");
+        }
+
+        // ---- reshape to attention layout -------------------------
+        let kv_h = h / opts.gqa_repeat.max(1);
+        let to4d = |cx: &mut Ctx, t: NodeId, heads: usize, name: &str| {
+            let mut at = Attrs::new();
+            at.insert("shape".into(), format!("{b},{s},{heads},{dh}"));
+            cx.g.add_attrs(OpKind::Reshape, &[t], &format!("{pre}.attn.{name}_r"), at)
+        };
+        // GQA: k/v use fewer heads (slice columns before reshape)
+        let (k2d, v2d) = if opts.gqa_repeat > 1 {
+            let mut sl = |t: NodeId, name: &str| {
+                let mut at = Attrs::new();
+                at.insert("dim".into(), "1".into());
+                at.insert("start".into(), "0".into());
+                at.insert("stop".into(), (kv_h * dh).to_string());
+                cx.g.add_attrs(OpKind::Slice, &[t], &format!("{pre}.attn.{name}_gqa_slice"), at)
+            };
+            (sl(k2d, "k"), sl(v2d, "v"))
+        } else {
+            (k2d, v2d)
+        };
+        let q4 = to4d(&mut cx, q2d, h, "q");
+        let k4 = to4d(&mut cx, k2d, kv_h, "k");
+        let v4 = to4d(&mut cx, v2d, kv_h, "v");
+
+        let attn_out = if opts.hnd_layout {
+            // permute to [B,H,S,dh] and materialise (HF's HND layout)
+            let mut perm = |cx: &mut Ctx, t: NodeId, name: &str| {
+                let p = cx.g.add_attr1(OpKind::Permute, &[t], &format!("{pre}.attn.{name}_hnd"), "perm", "0,2,1,3");
+                cx.g.add(OpKind::Contiguous, &[p], &format!("{pre}.attn.{name}_contig"))
+            };
+            let mut qh = perm(&mut cx, q4, "q");
+            let (mut kh, mut vh) = (perm(&mut cx, k4, "k"), perm(&mut cx, v4, "v"));
+            if opts.layout_roundtrip {
+                // c5: default tensor format forces an extra round trip
+                let rt = |cx: &mut Ctx, t: NodeId, name: &str| {
+                    let p = cx.g.add_attr1(OpKind::Permute, &[t], &format!("{pre}.attn.{name}_to_nhd"), "perm", "0,2,1,3");
+                    let c = cx.g.add(OpKind::Contiguous, &[p], &format!("{pre}.attn.{name}_fmt_copy"));
+                    let p2 = cx.g.add_attr1(OpKind::Permute, &[c], &format!("{pre}.attn.{name}_back"), "perm", "0,2,1,3");
+                    cx.g.add(OpKind::Contiguous, &[p2], &format!("{pre}.attn.{name}_fmt_copy2"))
+                };
+                qh = rt(&mut cx, qh, "q");
+                kh = rt(&mut cx, kh, "k");
+                vh = rt(&mut cx, vh, "v");
+            }
+            // materialised GQA expansion (if not fused)
+            let (kh, vh) = expand_gqa(&mut cx, kh, vh, opts, 1, &pre);
+            let mut at = Attrs::new();
+            at.insert("dispatch".into(), format!("{sys}.attention"));
+            if opts.gqa_fused && opts.gqa_repeat > 1 {
+                at.insert("gqa_reps".into(), opts.gqa_repeat.to_string());
+            }
+            let a = cx.g.add_attrs(OpKind::Attention, &[qh, kh, vh], &format!("{pre}.attn.sdpa"), at);
+            // back to [B,S,H,dh] then 2-D
+            let p = cx.g.add_attr1(OpKind::Permute, &[a], &format!("{pre}.attn.out_nhd"), "perm", "0,2,1,3");
+            cx.g.add(OpKind::Contiguous, &[p], &format!("{pre}.attn.out_contig"))
+        } else {
+            // NHD layout: no permutes needed
+            let (k4, v4) = expand_gqa(&mut cx, k4, v4, opts, 2, &pre);
+            let mut at = Attrs::new();
+            at.insert("dispatch".into(), format!("{sys}.attention"));
+            at.insert("layout".into(), "nhd".into());
+            if opts.gqa_fused && opts.gqa_repeat > 1 {
+                at.insert("gqa_reps".into(), opts.gqa_repeat.to_string());
+            }
+            cx.g.add_attrs(OpKind::Attention, &[q4, k4, v4], &format!("{pre}.attn.flash"), at)
+        };
+        let mut at = Attrs::new();
+        at.insert("shape".into(), format!("{},{}", b * s, d));
+        let a2d = cx.g.add_attrs(OpKind::Reshape, &[attn_out], &format!("{pre}.attn.out_2d"), at);
+
+        // ---- output projection + residual -------------------------
+        let ow = cx.weight(&format!("l{l}.out_w"));
+        let ob = cx.weight(&format!("l{l}.out_b"));
+        let proj = if opts.use_addmm {
+            linear_addmm(&mut cx.g, a2d, ow, ob, &format!("{pre}.attn.out_proj"))
+        } else {
+            linear_matmul_add(&mut cx.g, a2d, ow, ob, &format!("{pre}.attn.out_proj"))
+        };
+        let res1 = cx.g.add(OpKind::Add, &[x, proj], &format!("{pre}.residual1"));
+
+        // ---- MLP ---------------------------------------------------
+        let ln2 = layernorm_node(&mut cx, res1, &format!("l{l}.ln2_g"), &format!("l{l}.ln2_b"), &format!("{pre}.ln2"), true);
+        let f1w = cx.weight(&format!("l{l}.ff1_w"));
+        let f1b = cx.weight(&format!("l{l}.ff1_b"));
+        let h1 = if opts.use_addmm {
+            linear_addmm(&mut cx.g, ln2, f1w, f1b, &format!("{pre}.mlp.fc_in"))
+        } else {
+            linear_matmul_add(&mut cx.g, ln2, f1w, f1b, &format!("{pre}.mlp.fc_in"))
+        };
+        let act = if opts.unfused_gelu {
+            gelu_unfused(&mut cx.g, h1, &format!("{pre}.mlp.gelu"))
+        } else {
+            gelu_fused(&mut cx.g, h1, &format!("{pre}.mlp.gelu"), &format!("{sys}.gelu"))
+        };
+        let f2w = cx.weight(&format!("l{l}.ff2_w"));
+        let f2b = cx.weight(&format!("l{l}.ff2_b"));
+        let h2 = if opts.use_addmm {
+            linear_addmm(&mut cx.g, act, f2w, f2b, &format!("{pre}.mlp.fc_out"))
+        } else {
+            linear_matmul_add(&mut cx.g, act, f2w, f2b, &format!("{pre}.mlp.fc_out"))
+        };
+        x = cx.g.add(OpKind::Add, &[res1, h2], &format!("{pre}.residual2"));
+    }
+
+    // ---- final LN + LM head --------------------------------------
+    let lnf = layernorm_node(&mut cx, x, "lnf_g", "lnf_b", &format!("{sys}.ln_f"), true);
+    let mut out = lnf;
+    if opts.lm_head {
+        let wte = cx.weight("wte"); // weight tying: logits = x @ wteᵀ
+        let wte_t = cx.g.add_attr1(OpKind::Permute, &[wte], &format!("{sys}.wte_t"), "perm", "1,0");
+        out = if opts.lm_head_all_positions {
+            // hf-38977: full-sequence logits, then keep the last row
+            let logits = cx.g.add(OpKind::MatMul, &[lnf, wte_t], &format!("{sys}.lm_head_all"));
+            let mut at = Attrs::new();
+            at.insert("dim".into(), "0".into());
+            // keep the final position of each batch row
+            at.insert("start".into(), (b * s - b).to_string());
+            at.insert("stop".into(), (b * s).to_string());
+            cx.g.add_attrs(OpKind::Slice, &[logits], &format!("{sys}.lm_head_last_rows"), at)
+        } else {
+            let mut at = Attrs::new();
+            at.insert("dim".into(), "0".into());
+            at.insert("start".into(), (b * s - b).to_string());
+            at.insert("stop".into(), (b * s).to_string());
+            let last = cx.g.add_attrs(OpKind::Slice, &[lnf], &format!("{sys}.last_hidden"), at);
+            cx.g.add(OpKind::MatMul, &[last, wte_t], &format!("{sys}.lm_head_last"))
+        };
+        if let Some(impl_) = opts.topk {
+            out = match impl_ {
+                TopkImpl::Fused => {
+                    let mut at = Attrs::new();
+                    at.insert("k".into(), "50".into());
+                    at.insert("dispatch".into(), format!("{sys}.topk"));
+                    cx.g.add_attrs(OpKind::TopK, &[out], &format!("{sys}.sample_topk"), at)
+                }
+                TopkImpl::SortSlice => {
+                    let sorted = cx.g.add(OpKind::Sort, &[out], &format!("{sys}.sample_sort"));
+                    let mut at = Attrs::new();
+                    at.insert("dim".into(), "1".into());
+                    at.insert("start".into(), "0".into());
+                    at.insert("stop".into(), "50".into());
+                    cx.g.add_attrs(OpKind::Slice, &[sorted], &format!("{sys}.sample_slice"), at)
+                }
+            };
+        }
+    }
+    cx.finish(out)
+}
+
+/// Materialised GQA expansion (repeat_interleave) when not fused.
+/// `dim_offset` selects the head dim: 1 for HND `[B,H,S,dh]`, 2 for NHD
+/// `[B,S,H,dh]`.
+fn expand_gqa(
+    cx: &mut Ctx,
+    k: NodeId,
+    v: NodeId,
+    opts: &LlmBuildOpts,
+    head_dim_index: usize,
+    pre: &str,
+) -> (NodeId, NodeId) {
+    if opts.gqa_repeat <= 1 || opts.gqa_fused {
+        return (k, v);
+    }
+    let mut rep = |t: NodeId, name: &str| {
+        let mut at = Attrs::new();
+        at.insert("dim".into(), head_dim_index.to_string());
+        at.insert("reps".into(), opts.gqa_repeat.to_string());
+        cx.g.add_attrs(OpKind::RepeatInterleave, &[t], &format!("{pre}.attn.{name}_repeat_interleave"), at)
+    };
+    (rep(k, "k"), rep(v, "v"))
+}
+
+// ---------------------------------------------------------------------
+// Dispatchers
+// ---------------------------------------------------------------------
+
+/// HF dispatcher: addmm epilogue kernels, HND attention.
+pub fn hf_dispatcher() -> Dispatcher {
+    let mut d = Dispatcher::new();
+    d.register("torch.addmm", super::torch_addmm_routine());
+    d.register("matmul", super::torch_matmul_routine());
+    d.register("torch.nn.functional.layer_norm", super::layernorm_routine());
+    d.register("hf.attention", super::attention_routine("hf.scaled_dot_product_attention"));
+    d
+}
+
+/// vLLM dispatcher: cutlass TC gemms, fused gelu, flashinfer attention
+/// with `use_tensor_cores` and the decode-copy flag (c2).
+pub fn vllm_dispatcher() -> Dispatcher {
+    let mut d = Dispatcher::new();
+    d.register(
+        "matmul",
+        Routine::direct(
+            "vllm.cutlass_gemm",
+            vec![Frame::cpp("cutlass::gemm::device::GemmUniversal")],
+            KernelChoice::new("cutlass_tf32_tensorop_gemm", ComputeUnit::TensorCore),
+        ),
+    );
+    d.register("torch.nn.functional.layer_norm", super::layernorm_routine());
+    d.register(
+        "vllm.gelu",
+        Routine::direct(
+            "vllm.gelu_tanh_and_mul",
+            vec![Frame::cpp("vllm::activation_kernels")],
+            KernelChoice::new("gelu_tanh_and_mul_fused", ComputeUnit::Sfu),
+        ),
+    );
+    d.register("vllm.attention", super::attention_routine("vllm.flashinfer_prefill"));
+    d.register(
+        "vllm.decode_attention",
+        Routine::branch_on(
+            "vllm.flashinfer_decode",
+            vec![Frame::cpp("flashinfer::BatchDecodeWithPagedKVCache")],
+            "flashinfer::decode_dispatch",
+            "kv_cache_aligned",
+            "false",
+            VarSource::ApiArgument("kv_cache layout (redundant copy when unaligned)".into()),
+            KernelChoice::new("decode_attn_with_copy", ComputeUnit::TensorCore).quality(0.92, 1.0, 1.45),
+            KernelChoice::new("decode_attn_inplace", ComputeUnit::TensorCore),
+        ),
+    );
+    d
+}
+
+/// SGLang dispatcher: vLLM-like plus a fused top-k kernel.
+pub fn sglang_dispatcher() -> Dispatcher {
+    let mut d = vllm_dispatcher();
+    d.register("sglang.attention", super::attention_routine("sglang.radix_attention"));
+    d.register(
+        "sglang.gelu",
+        Routine::direct(
+            "sglang.gelu_tanh",
+            vec![Frame::cpp("sgl_kernel::activation")],
+            KernelChoice::new("sgl_gelu_tanh_fused", ComputeUnit::Sfu),
+        ),
+    );
+    d.register(
+        "sglang.topk",
+        Routine::direct(
+            "sglang.fused_topk",
+            vec![Frame::cpp("sgl_kernel::topk_softmax")],
+            KernelChoice::new("fused_topk_radix", ComputeUnit::CudaCore),
+        ),
+    );
+    d
+}
+
+/// Megatron dispatcher: vLLM-like kernels under Megatron names.
+pub fn megatron_dispatcher() -> Dispatcher {
+    let mut d = Dispatcher::new();
+    d.register(
+        "matmul",
+        Routine::direct(
+            "megatron.fused_gemm",
+            vec![Frame::cpp("megatron::core::tensor_parallel")],
+            KernelChoice::new("te_tf32_gemm", ComputeUnit::TensorCore),
+        ),
+    );
+    d.register("torch.nn.functional.layer_norm", super::layernorm_routine());
+    d.register("megatron.attention", super::attention_routine("megatron.core_attention"));
+    d.register(
+        "megatron.gelu",
+        Routine::direct(
+            "megatron.bias_gelu_fused",
+            vec![Frame::cpp("megatron::fused_kernels")],
+            KernelChoice::new("bias_gelu_fused", ComputeUnit::Sfu),
+        ),
+    );
+    d
+}
+
+/// Default per-system environment.
+pub fn default_env(sys: super::SystemId) -> Env {
+    match sys {
+        // vLLM & friends ship with TF32 on
+        super::SystemId::MiniVllm | super::SystemId::MiniSglang | super::SystemId::MiniMegatron => {
+            Env::new().with("allow_tf32", "true").with("kv_cache_aligned", "true")
+        }
+        // HF inherits torch defaults: tf32 off in older versions
+        super::SystemId::MiniHf => Env::new().with("allow_tf32", "true"),
+        _ => Env::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::DeviceSpec;
+    use crate::exec::Executor;
+
+    fn small_spec() -> LlmSpec {
+        LlmSpec { batch: 2, seq: 8, d_model: 32, n_heads: 4, d_ff: 64, vocab: 64, layers: 1 }
+    }
+
+    fn run(params: &TransformerParams, opts: &LlmBuildOpts, disp: Dispatcher, env: Env) -> crate::exec::RunArtifacts {
+        let prog = build_llm(params, opts);
+        Executor::new(DeviceSpec::h200_sim(), disp, env).run(&prog)
+    }
+
+    #[test]
+    fn hf_and_vllm_compute_same_function() {
+        let mut rng = Prng::new(42);
+        let params = TransformerParams::new(&mut rng, small_spec());
+        let hf = run(&params, &LlmBuildOpts::hf(), hf_dispatcher(), default_env(super::super::SystemId::MiniHf));
+        let vllm = run(&params, &LlmBuildOpts::vllm(), vllm_dispatcher(), default_env(super::super::SystemId::MiniVllm));
+        let o1 = hf.output();
+        let o2 = vllm.output();
+        assert_eq!(o1.shape(), o2.shape());
+        assert!(
+            (o1.global_rel_diff(o2) as f64) < 0.01,
+            "outputs diverge: {}",
+            o1.max_rel_diff(o2)
+        );
+    }
+
+    #[test]
+    fn hf_consumes_more_energy_than_vllm() {
+        // Fig 5b: HF is the least efficient serving stack
+        let mut rng = Prng::new(43);
+        let params = TransformerParams::new(&mut rng, LlmSpec::gpt2_sim());
+        let hf = run(&params, &LlmBuildOpts::hf(), hf_dispatcher(), default_env(super::super::SystemId::MiniHf));
+        let vllm = run(&params, &LlmBuildOpts::vllm(), vllm_dispatcher(), default_env(super::super::SystemId::MiniVllm));
+        assert!(
+            hf.total_energy_j > vllm.total_energy_j * 1.3,
+            "hf {} vs vllm {}",
+            hf.total_energy_j,
+            vllm.total_energy_j
+        );
+    }
+
+    #[test]
+    fn sglang_and_megatron_run() {
+        let mut rng = Prng::new(44);
+        let params = TransformerParams::new(&mut rng, small_spec());
+        let sg = run(&params, &LlmBuildOpts::sglang(), sglang_dispatcher(), default_env(super::super::SystemId::MiniSglang));
+        let mg = run(&params, &LlmBuildOpts::megatron(), megatron_dispatcher(), default_env(super::super::SystemId::MiniMegatron));
+        assert!(sg.total_energy_j > 0.0 && mg.total_energy_j > 0.0);
+        // megatron's repeat_interleave appears in its kernel log
+        assert!(mg.records.iter().any(|r| r.label.contains("repeat_interleave")));
+    }
+
+    #[test]
+    fn gqa_fused_vs_materialised_same_values_less_energy() {
+        let mut rng = Prng::new(45);
+        let params = TransformerParams::new(&mut rng, small_spec());
+        let bad = LlmBuildOpts::megatron(); // materialised repeat
+        let good = LlmBuildOpts { gqa_fused: true, ..LlmBuildOpts::megatron() };
+        let rb = run(&params, &bad, megatron_dispatcher(), default_env(super::super::SystemId::MiniMegatron));
+        let rg = run(&params, &good, megatron_dispatcher(), default_env(super::super::SystemId::MiniMegatron));
+        assert!((rb.output().global_rel_diff(rg.output()) as f64) < 0.01);
+        assert!(rb.total_energy_j > rg.total_energy_j);
+    }
+
+    #[test]
+    fn graph_sizes_scale_with_layers() {
+        let mut rng = Prng::new(46);
+        let p1 = TransformerParams::new(&mut rng, LlmSpec::llama_sim(2));
+        let p2 = TransformerParams::new(&mut rng, LlmSpec::llama_sim(8));
+        let g1 = build_llm(&p1, &LlmBuildOpts::vllm()).graph;
+        let g2 = build_llm(&p2, &LlmBuildOpts::vllm()).graph;
+        assert!(g2.len() > g1.len() * 3);
+    }
+
+    #[test]
+    fn topk_variants_agree() {
+        let mut rng = Prng::new(47);
+        let params = TransformerParams::new(&mut rng, small_spec());
+        let fused = LlmBuildOpts { topk: Some(TopkImpl::Fused), ..LlmBuildOpts::sglang() };
+        let sorted = LlmBuildOpts { topk: Some(TopkImpl::SortSlice), ..LlmBuildOpts::sglang() };
+        let rf = run(&params, &fused, sglang_dispatcher(), default_env(super::super::SystemId::MiniSglang));
+        let rs = run(&params, &sorted, sglang_dispatcher(), default_env(super::super::SystemId::MiniSglang));
+        assert_eq!(rf.output().shape(), rs.output().shape());
+        assert!(rf.output().allclose(rs.output(), 1e-5, 1e-4));
+        assert!(rs.total_energy_j > rf.total_energy_j);
+    }
+}

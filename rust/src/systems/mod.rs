@@ -1,0 +1,254 @@
+//! The simulated ML-system fleet (DESIGN.md substitution table).
+//!
+//! Nine mini systems reproduce the *implementation diversity* the paper
+//! exploits: each builds a computational graph for the same task with
+//! its own idioms (operator decompositions, tensor layouts, fused vs
+//! unfused kernels) and its own dispatch routines (kernel selection
+//! under configuration flags). Weights are shared across systems so two
+//! systems given the same workload compute the same function — the
+//! precondition of differential energy debugging.
+//!
+//! | mini system     | stands in for              | signature quirks |
+//! |-----------------|----------------------------|------------------|
+//! | `MiniHf`        | HuggingFace Transformers   | Conv1D/addmm projections, 5-kernel GELU, HND layout + contiguous copies, full-sequence LM head |
+//! | `MiniVllm`      | vLLM                       | fused QKV, fused GELU, NHD layout, last-token LM head, `use_tensor_cores` flag |
+//! | `MiniSglang`    | SGLang                     | like vLLM + sort-based top-k variant |
+//! | `MiniMegatron`  | Megatron-LM                | GQA with `repeat_interleave`, DDP hooks |
+//! | `MiniTorch`     | PyTorch                    | addmm kernels, `allow_tf32` off by default, busy-wait sync flag |
+//! | `MiniJax`       | JAX                        | fused elementwise, grouped-conv cuDNN kernels |
+//! | `MiniTf`        | TensorFlow                 | custom conv kernels, implicit copies in `count_nonzero` |
+//! | `MiniSd`        | Stable Diffusion reference | UNet block, `allow_tf32` unset (c8) |
+//! | `MiniDiffusers` | HF Diffusers               | UNet block with concat/split round-trip (c7) |
+
+pub mod llm;
+pub mod frameworks;
+pub mod imagegen;
+
+use crate::dispatch::{Env, KernelChoice, Routine, VarSource};
+use crate::energy::ComputeUnit;
+use crate::graph::{Graph, NodeId, OpKind};
+use crate::trace::Frame;
+
+/// Identity of a mini system.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SystemId {
+    MiniHf,
+    MiniVllm,
+    MiniSglang,
+    MiniMegatron,
+    MiniTorch,
+    MiniJax,
+    MiniTf,
+    MiniSd,
+    MiniDiffusers,
+}
+
+impl SystemId {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SystemId::MiniHf => "mini-hf-transformers",
+            SystemId::MiniVllm => "mini-vllm",
+            SystemId::MiniSglang => "mini-sglang",
+            SystemId::MiniMegatron => "mini-megatron",
+            SystemId::MiniTorch => "mini-pytorch",
+            SystemId::MiniJax => "mini-jax",
+            SystemId::MiniTf => "mini-tensorflow",
+            SystemId::MiniSd => "mini-stable-diffusion",
+            SystemId::MiniDiffusers => "mini-diffusers",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shared graph-building helpers
+// ---------------------------------------------------------------------
+
+/// HF-style linear: `addmm(bias, x, w)` in one fused op (the Conv1D of
+/// `pytorch_utils.py` — the paper's Fig 3 snippet).
+pub fn linear_addmm(g: &mut Graph, x: NodeId, w: NodeId, b: NodeId, label: &str) -> NodeId {
+    let mut attrs = crate::graph::Attrs::new();
+    attrs.insert("dispatch".into(), "torch.addmm".into());
+    g.add_attrs(OpKind::AddMm, &[b, x, w], label, attrs)
+}
+
+/// vLLM-style linear: separate `matmul` + `add` kernels.
+pub fn linear_matmul_add(g: &mut Graph, x: NodeId, w: NodeId, b: NodeId, label: &str) -> NodeId {
+    let m = g.add(OpKind::MatMul, &[x, w], &format!("{label}.matmul"));
+    g.add(OpKind::Add, &[m, b], &format!("{label}.add_bias"))
+}
+
+/// The HuggingFace 5-kernel tanh-GELU decomposition (§6.3's GELU case):
+/// pow, scale+add, scale, tanh, mul — five separate HBM round trips.
+pub fn gelu_unfused(g: &mut Graph, x: NodeId, label: &str) -> NodeId {
+    let x3 = g.add_attr1(OpKind::Pow, &[x], &format!("{label}.pow3"), "p", "3");
+    let sc = g.add_attr1(OpKind::Scale, &[x3], &format!("{label}.scale_c"), "s", "0.044715");
+    let inner = g.add(OpKind::Add, &[x, sc], &format!("{label}.add"));
+    let scaled = g.add_attr1(OpKind::Scale, &[inner], &format!("{label}.scale_s2pi"), "s", "0.7978846");
+    let th = g.add(OpKind::Tanh, &[scaled], &format!("{label}.tanh"));
+    // 0.5*x*(1+tanh) == 0.5*x*tanh + 0.5*x
+    let half_tanh = g.add_attr1(OpKind::Scale, &[th], &format!("{label}.half_tanh"), "s", "0.5");
+    let xt = g.add(OpKind::Mul, &[x, half_tanh], &format!("{label}.mul1"));
+    let half_x = g.add_attr1(OpKind::Scale, &[x], &format!("{label}.half_x"), "s", "0.5");
+    g.add(OpKind::Add, &[xt, half_x], &format!("{label}.mul_out"))
+}
+
+/// Fused single-kernel tanh GELU.
+pub fn gelu_fused(g: &mut Graph, x: NodeId, label: &str, dispatch: &str) -> NodeId {
+    let mut attrs = crate::graph::Attrs::new();
+    attrs.insert("approx".into(), "tanh".into());
+    attrs.insert("dispatch".into(), dispatch.into());
+    g.add_attrs(OpKind::Gelu, &[x], label, attrs)
+}
+
+// ---------------------------------------------------------------------
+// Common dispatch routines
+// ---------------------------------------------------------------------
+
+/// `torch.matmul`: branches on `allow_tf32` (case c8 / pytorch-153195).
+pub fn torch_matmul_routine() -> Routine {
+    Routine::branch_on(
+        "torch.matmul",
+        vec![Frame::cpp("at::native::matmul"), Frame::cpp("at::cuda::blas::gemm")],
+        "at::cuda::blas::gemm",
+        "allow_tf32",
+        "true",
+        VarSource::ConfigFlag("torch.backends.cuda.matmul.allow_tf32".into()),
+        KernelChoice::new("ampere_tf32_s1688gemm_128x128", ComputeUnit::TensorCore),
+        KernelChoice::new("ampere_sgemm_fp32_128x128", ComputeUnit::CudaCore),
+    )
+}
+
+/// `torch.addmm`: the historically inefficient fused-epilogue kernel
+/// (case c10, pytorch-141210) — extra power at equal speed.
+pub fn torch_addmm_routine() -> Routine {
+    Routine::branch_on(
+        "torch.addmm",
+        vec![Frame::cpp("at::native::addmm"), Frame::cpp("at::cuda::blas::gemm_and_bias")],
+        "at::cuda::blas::gemm_and_bias",
+        "allow_tf32",
+        "true",
+        VarSource::ConfigFlag("torch.backends.cuda.matmul.allow_tf32".into()),
+        KernelChoice::new("ampere_tf32_gemm_bias_epilogue", ComputeUnit::TensorCore)
+            .quality(0.60, 1.8, 1.15),
+        KernelChoice::new("ampere_sgemm_bias_epilogue", ComputeUnit::CudaCore)
+            .quality(0.60, 1.8, 1.15),
+    )
+}
+
+/// Fused attention: branches on `use_tensor_cores` (case c1, vllm-9471).
+pub fn attention_routine(api: &str) -> Routine {
+    Routine::branch_on(
+        api,
+        vec![Frame::cpp("flashinfer::BatchPrefillWithKVCache")],
+        "flashinfer::dispatch_by_tensor_cores",
+        "use_tensor_cores",
+        "false",
+        VarSource::ApiArgument("use_tensor_cores".into()),
+        KernelChoice::new("prefill_attn_cuda_core", ComputeUnit::CudaCore).quality(0.55, 1.6, 1.25),
+        KernelChoice::new("prefill_attn_tensor_core_f16", ComputeUnit::TensorCore),
+    )
+}
+
+/// LayerNorm: non-contiguous inputs trigger a strided kernel (c12).
+pub fn layernorm_routine() -> Routine {
+    Routine::branch_on(
+        "torch.nn.functional.layer_norm",
+        vec![Frame::cpp("at::native::layer_norm")],
+        "at::native::layer_norm_kernel_impl",
+        "input_contiguous",
+        "false",
+        VarSource::InputProperty("input tensor contiguity".into()),
+        KernelChoice::new("vectorized_layer_norm_strided", ComputeUnit::CudaCore)
+            .quality(0.78, 1.12, 1.8),
+        KernelChoice::new("vectorized_layer_norm", ComputeUnit::CudaCore),
+    )
+}
+
+/// Baseline environment shared by all systems.
+pub fn base_env() -> Env {
+    Env::new()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dispatch::Env;
+    use crate::energy::DeviceSpec;
+    use crate::exec::{Dispatcher, Executor, Program};
+    use crate::tensor::Tensor;
+    use crate::util::Prng;
+
+    #[test]
+    fn gelu_unfused_matches_fused_numerics() {
+        let mut rng = Prng::new(1);
+        let x = Tensor::randn(&mut rng, &[16, 32]);
+
+        let mut g1 = Graph::new("fused");
+        let i1 = g1.add(OpKind::Input, &[], "x");
+        let f = gelu_fused(&mut g1, i1, "act", "gelu");
+        g1.add(OpKind::Output, &[f], "out");
+        let mut p1 = Program::new(g1);
+        p1.feed(0, x.clone());
+
+        let mut g2 = Graph::new("unfused");
+        let i2 = g2.add(OpKind::Input, &[], "x");
+        let u = gelu_unfused(&mut g2, i2, "act");
+        g2.add(OpKind::Output, &[u], "out");
+        let mut p2 = Program::new(g2);
+        p2.feed(0, x);
+
+        let exec = Executor::new(DeviceSpec::h200_sim(), Dispatcher::new(), Env::new());
+        let r1 = exec.run(&p1);
+        let r2 = exec.run(&p2);
+        assert!(r1.output().allclose(r2.output(), 1e-5, 1e-4));
+        // the unfused decomposition burns more energy for the same math
+        assert!(r2.total_energy_j > r1.total_energy_j * 1.3,
+            "unfused {} vs fused {}", r2.total_energy_j, r1.total_energy_j);
+    }
+
+    #[test]
+    fn addmm_and_matmul_add_agree() {
+        let mut rng = Prng::new(2);
+        let x = Tensor::randn(&mut rng, &[8, 16]);
+        let w = Tensor::randn(&mut rng, &[16, 8]);
+        let b = Tensor::randn(&mut rng, &[8]);
+
+        let build = |fused: bool| {
+            let mut g = Graph::new(if fused { "addmm" } else { "mm+add" });
+            let xi = g.add(OpKind::Input, &[], "x");
+            let wi = g.add(OpKind::Weight, &[], "w");
+            let bi = g.add(OpKind::Weight, &[], "b");
+            let o = if fused {
+                linear_addmm(&mut g, xi, wi, bi, "lin")
+            } else {
+                linear_matmul_add(&mut g, xi, wi, bi, "lin")
+            };
+            g.add(OpKind::Output, &[o], "out");
+            let mut p = Program::new(g);
+            p.feed(0, x.clone());
+            p.feed(1, w.clone());
+            p.feed(2, b.clone());
+            p
+        };
+        let mut disp = Dispatcher::new();
+        disp.register("torch.addmm", torch_addmm_routine());
+        disp.register("matmul", torch_matmul_routine());
+        let exec = Executor::new(
+            DeviceSpec::h200_sim(),
+            disp,
+            Env::new().with("allow_tf32", "true"),
+        );
+        let r1 = exec.run(&build(true));
+        let r2 = exec.run(&build(false));
+        assert!(r1.output().allclose(r2.output(), 1e-4, 1e-3));
+    }
+
+    #[test]
+    fn tf32_flag_changes_kernel_and_energy() {
+        let r = torch_matmul_routine();
+        let on = r.run(&Env::new().with("allow_tf32", "true"));
+        let off = r.run(&Env::new());
+        assert_eq!(on.choice.unit, ComputeUnit::TensorCore);
+        assert_eq!(off.choice.unit, ComputeUnit::CudaCore);
+    }
+}

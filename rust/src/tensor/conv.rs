@@ -1,0 +1,190 @@
+//! 2-D convolution in NCHW and NHWC layouts, plus grouped convolution.
+//!
+//! The layout split matters for the paper's cases: Fig 5c compares conv
+//! energy across PyTorch/TF/JAX, and two of the new issues
+//! (pytorch-157334, jax-29875, tf-96396) are layout-dependent kernel
+//! inefficiencies. Both layouts compute identical values; the energy
+//! model charges different memory-access costs per (layout, kernel
+//! variant) pair.
+
+use super::Tensor;
+
+/// Direct convolution, NCHW input `[n, c, h, w]`, weight `[o, c/g, kh, kw]`,
+/// stride 1, symmetric zero padding, `groups` channel groups.
+pub fn conv2d_nchw(x: &Tensor, w: &Tensor, pad: usize, groups: usize) -> Tensor {
+    assert_eq!(x.rank(), 4);
+    assert_eq!(w.rank(), 4);
+    let (n, c, h, wd) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let (oc, icg, kh, kw) = (w.shape()[0], w.shape()[1], w.shape()[2], w.shape()[3]);
+    assert_eq!(c % groups, 0);
+    assert_eq!(oc % groups, 0);
+    assert_eq!(icg, c / groups, "weight in-channels/groups mismatch");
+    let oh = h + 2 * pad - kh + 1;
+    let ow = wd + 2 * pad - kw + 1;
+    let xv = x.to_vec();
+    let wv = w.to_vec();
+    let mut out = vec![0.0f32; n * oc * oh * ow];
+    let ocg = oc / groups;
+    for ni in 0..n {
+        for g in 0..groups {
+            for ocl in 0..ocg {
+                let o = g * ocg + ocl;
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let mut acc = 0.0f32;
+                        for icl in 0..icg {
+                            let ci = g * icg + icl;
+                            for ky in 0..kh {
+                                let iy = oy + ky;
+                                if iy < pad || iy >= h + pad {
+                                    continue;
+                                }
+                                let iy = iy - pad;
+                                for kx in 0..kw {
+                                    let ix = ox + kx;
+                                    if ix < pad || ix >= wd + pad {
+                                        continue;
+                                    }
+                                    let ix = ix - pad;
+                                    let xi = ((ni * c + ci) * h + iy) * wd + ix;
+                                    let wi = ((o * icg + icl) * kh + ky) * kw + kx;
+                                    acc += xv[xi] * wv[wi];
+                                }
+                            }
+                        }
+                        out[((ni * oc + o) * oh + oy) * ow + ox] = acc;
+                    }
+                }
+            }
+        }
+    }
+    Tensor::from_vec(out, &[n, oc, oh, ow])
+}
+
+/// NHWC convolution: input `[n, h, w, c]`, same weight layout
+/// `[o, c/g, kh, kw]`; computed by converting layout, so values match
+/// [`conv2d_nchw`] exactly. The executor charges NHWC-variant memory
+/// costs for it.
+pub fn conv2d_nhwc(x: &Tensor, w: &Tensor, pad: usize, groups: usize) -> Tensor {
+    let x_nchw = x.permute(&[0, 3, 1, 2]).contiguous();
+    let o = conv2d_nchw(&x_nchw, w, pad, groups);
+    o.permute(&[0, 2, 3, 1]).contiguous()
+}
+
+/// im2col + GEMM convolution (the "algorithm selection" alternative some
+/// frameworks dispatch to). Identical values; different cost profile —
+/// a large intermediate matrix is materialised.
+pub fn conv2d_im2col(x: &Tensor, w: &Tensor, pad: usize) -> Tensor {
+    assert_eq!(x.rank(), 4);
+    let (n, c, h, wd) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let (oc, ic, kh, kw) = (w.shape()[0], w.shape()[1], w.shape()[2], w.shape()[3]);
+    assert_eq!(ic, c);
+    let oh = h + 2 * pad - kh + 1;
+    let ow = wd + 2 * pad - kw + 1;
+    let xv = x.to_vec();
+    // cols: [n*oh*ow, c*kh*kw]
+    let mut cols = vec![0.0f32; n * oh * ow * c * kh * kw];
+    let row_len = c * kh * kw;
+    for ni in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = (ni * oh + oy) * ow + ox;
+                for ci in 0..c {
+                    for ky in 0..kh {
+                        for kx in 0..kw {
+                            let iy = oy + ky;
+                            let ix = ox + kx;
+                            if iy < pad || iy >= h + pad || ix < pad || ix >= wd + pad {
+                                continue;
+                            }
+                            let v = xv[((ni * c + ci) * h + (iy - pad)) * wd + (ix - pad)];
+                            cols[row * row_len + (ci * kh + ky) * kw + kx] = v;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let cols_t = Tensor::from_vec(cols, &[n * oh * ow, row_len]);
+    let w_t = Tensor::from_vec(w.to_vec(), &[oc, row_len]);
+    let out = super::ops::matmul(&cols_t, &w_t.t()); // [n*oh*ow, oc]
+    out.reshape(&[n, oh, ow, oc]).permute(&[0, 3, 1, 2]).contiguous()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    #[test]
+    fn identity_kernel_passthrough() {
+        // 1x1 kernel with weight 1 on a single channel = identity
+        let x = Tensor::from_vec((0..16).map(|i| i as f32).collect(), &[1, 1, 4, 4]);
+        let w = Tensor::from_vec(vec![1.0], &[1, 1, 1, 1]);
+        let y = conv2d_nchw(&x, &w, 0, 1);
+        assert_eq!(y.to_vec(), x.to_vec());
+    }
+
+    #[test]
+    fn box_filter_sums() {
+        let x = Tensor::full(&[1, 1, 3, 3], 1.0);
+        let w = Tensor::full(&[1, 1, 3, 3], 1.0);
+        let y = conv2d_nchw(&x, &w, 1, 1);
+        assert_eq!(y.shape(), &[1, 1, 3, 3]);
+        // centre sees all 9 ones; corner sees 4
+        assert_eq!(y.at(&[0, 0, 1, 1]), 9.0);
+        assert_eq!(y.at(&[0, 0, 0, 0]), 4.0);
+    }
+
+    #[test]
+    fn nhwc_matches_nchw() {
+        let mut rng = Prng::new(1);
+        let x = Tensor::randn(&mut rng, &[2, 3, 8, 8]);
+        let w = Tensor::randn(&mut rng, &[4, 3, 3, 3]);
+        let a = conv2d_nchw(&x, &w, 1, 1);
+        let x_nhwc = x.permute(&[0, 2, 3, 1]).contiguous();
+        let b = conv2d_nhwc(&x_nhwc, &w, 1, 1);
+        let b_nchw = b.permute(&[0, 3, 1, 2]).contiguous();
+        assert!(a.allclose(&b_nchw, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn im2col_matches_direct() {
+        let mut rng = Prng::new(2);
+        let x = Tensor::randn(&mut rng, &[2, 3, 6, 6]);
+        let w = Tensor::randn(&mut rng, &[5, 3, 3, 3]);
+        let a = conv2d_nchw(&x, &w, 1, 1);
+        let b = conv2d_im2col(&x, &w, 1);
+        assert!(a.allclose(&b, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn grouped_conv_partitions_channels() {
+        let mut rng = Prng::new(3);
+        let x = Tensor::randn(&mut rng, &[1, 4, 5, 5]);
+        let w = Tensor::randn(&mut rng, &[4, 2, 3, 3]);
+        let y = conv2d_nchw(&x, &w, 1, 2);
+        assert_eq!(y.shape(), &[1, 4, 5, 5]);
+        // group 0 output depends only on channels 0..2: zeroing 2..4 must not change it
+        let mut xz = x.to_vec();
+        for ci in 2..4 {
+            for i in 0..25 {
+                xz[ci * 25 + i] = 0.0;
+            }
+        }
+        let y2 = conv2d_nchw(&Tensor::from_vec(xz, &[1, 4, 5, 5]), &w, 1, 2);
+        let g0 = y.slice(1, 0, 2);
+        let g0b = y2.slice(1, 0, 2);
+        assert!(g0.contiguous().allclose(&g0b.contiguous(), 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn output_shape_with_padding() {
+        let x = Tensor::zeros(&[1, 2, 7, 9]);
+        let w = Tensor::zeros(&[3, 2, 3, 3]);
+        let y = conv2d_nchw(&x, &w, 1, 1);
+        assert_eq!(y.shape(), &[1, 3, 7, 9]);
+        let y0 = conv2d_nchw(&x, &w, 0, 1);
+        assert_eq!(y0.shape(), &[1, 3, 5, 7]);
+    }
+}

@@ -1,0 +1,416 @@
+//! Strided f32 tensor substrate.
+//!
+//! The simulated ML systems ([`crate::systems`]) execute their
+//! computational graphs on this library, which gives Magneton real
+//! numerics to fingerprint and match. Tensors are `f32` with explicit
+//! shape/strides over shared storage, so layout-sensitive behaviours the
+//! paper exploits (HND vs NHD attention layouts, non-contiguous
+//! LayerNorm inputs, NCHW vs NHWC convolutions) are faithfully
+//! represented: `permute` produces a *view* and `contiguous` performs a
+//! real copy that the energy model charges for.
+
+pub mod ops;
+pub mod nn;
+pub mod conv;
+
+use std::sync::Arc;
+
+/// Dense f32 tensor with explicit strides over shared storage.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    /// Strides in elements (row-major for freshly created tensors).
+    strides: Vec<usize>,
+    data: Arc<Vec<f32>>,
+    offset: usize,
+}
+
+/// Row-major (C-order) strides for a shape.
+pub fn contiguous_strides(shape: &[usize]) -> Vec<usize> {
+    let mut strides = vec![1usize; shape.len()];
+    for i in (0..shape.len().saturating_sub(1)).rev() {
+        strides[i] = strides[i + 1] * shape[i + 1];
+    }
+    strides
+}
+
+impl Tensor {
+    /// Build from a flat row-major buffer.
+    pub fn from_vec(data: Vec<f32>, shape: &[usize]) -> Tensor {
+        let numel: usize = shape.iter().product();
+        assert_eq!(data.len(), numel, "data length {} != numel {}", data.len(), numel);
+        Tensor {
+            strides: contiguous_strides(shape),
+            shape: shape.to_vec(),
+            data: Arc::new(data),
+            offset: 0,
+        }
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor::from_vec(vec![0.0; shape.iter().product()], shape)
+    }
+
+    /// Tensor filled with a constant.
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        Tensor::from_vec(vec![v; shape.iter().product()], shape)
+    }
+
+    /// Standard-normal tensor from a PRNG (deterministic workloads).
+    pub fn randn(rng: &mut crate::util::Prng, shape: &[usize]) -> Tensor {
+        Tensor::from_vec(rng.normal_vec(shape.iter().product()), shape)
+    }
+
+    /// `arange(0..n)` as f32, shaped.
+    pub fn arange(n: usize) -> Tensor {
+        Tensor::from_vec((0..n).map(|i| i as f32).collect(), &[n])
+    }
+
+    /// Shape accessor.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Strides accessor (elements).
+    pub fn strides(&self) -> &[usize] {
+        &self.strides
+    }
+
+    /// Number of dimensions.
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Total element count.
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Size in bytes (f32 elements).
+    pub fn bytes(&self) -> usize {
+        self.numel() * 4
+    }
+
+    /// Whether the view is row-major contiguous.
+    pub fn is_contiguous(&self) -> bool {
+        self.strides == contiguous_strides(&self.shape)
+    }
+
+    /// Element at a multi-index.
+    #[inline]
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        debug_assert_eq!(idx.len(), self.rank());
+        let mut off = self.offset;
+        for (i, &ix) in idx.iter().enumerate() {
+            debug_assert!(ix < self.shape[i]);
+            off += ix * self.strides[i];
+        }
+        self.data[off]
+    }
+
+    /// Flat row-major element access (handles non-contiguous views).
+    #[inline]
+    pub fn at_flat(&self, mut flat: usize) -> f32 {
+        let mut off = self.offset;
+        for i in (0..self.rank()).rev() {
+            let d = self.shape[i];
+            off += (flat % d) * self.strides[i];
+            flat /= d;
+        }
+        self.data[off]
+    }
+
+    /// Copy out as a flat row-major Vec (materialises views).
+    pub fn to_vec(&self) -> Vec<f32> {
+        if self.is_contiguous() {
+            return self.data[self.offset..self.offset + self.numel()].to_vec();
+        }
+        let n = self.numel();
+        let mut out = Vec::with_capacity(n);
+        let rank = self.rank();
+        let mut idx = vec![0usize; rank];
+        for _ in 0..n {
+            out.push(self.at(&idx));
+            // increment multi-index (row-major)
+            for i in (0..rank).rev() {
+                idx[i] += 1;
+                if idx[i] < self.shape[i] {
+                    break;
+                }
+                idx[i] = 0;
+            }
+        }
+        out
+    }
+
+    /// Values as a borrowed slice when contiguous, else a materialised
+    /// copy — the allocation-free fast path for hot kernels.
+    pub fn values(&self) -> std::borrow::Cow<'_, [f32]> {
+        if self.is_contiguous() {
+            std::borrow::Cow::Borrowed(&self.data[self.offset..self.offset + self.numel()])
+        } else {
+            std::borrow::Cow::Owned(self.to_vec())
+        }
+    }
+
+    /// Borrow the underlying contiguous slice; panics if not contiguous.
+    pub fn as_slice(&self) -> &[f32] {
+        assert!(self.is_contiguous(), "as_slice on non-contiguous tensor");
+        &self.data[self.offset..self.offset + self.numel()]
+    }
+
+    /// Row-major materialised copy.
+    pub fn contiguous(&self) -> Tensor {
+        if self.is_contiguous() {
+            self.clone()
+        } else {
+            Tensor::from_vec(self.to_vec(), &self.shape)
+        }
+    }
+
+    /// Reshape (requires contiguous; returns a view sharing storage).
+    pub fn reshape(&self, shape: &[usize]) -> Tensor {
+        let numel: usize = shape.iter().product();
+        assert_eq!(numel, self.numel(), "reshape numel mismatch");
+        let base = self.contiguous();
+        Tensor {
+            strides: contiguous_strides(shape),
+            shape: shape.to_vec(),
+            data: base.data,
+            offset: base.offset,
+        }
+    }
+
+    /// Permute dimensions — a zero-copy view (layout change only).
+    pub fn permute(&self, perm: &[usize]) -> Tensor {
+        assert_eq!(perm.len(), self.rank());
+        let mut seen = vec![false; perm.len()];
+        for &p in perm {
+            assert!(p < perm.len() && !seen[p], "invalid permutation {perm:?}");
+            seen[p] = true;
+        }
+        Tensor {
+            shape: perm.iter().map(|&p| self.shape[p]).collect(),
+            strides: perm.iter().map(|&p| self.strides[p]).collect(),
+            data: Arc::clone(&self.data),
+            offset: self.offset,
+        }
+    }
+
+    /// Transpose the last two dims (view).
+    pub fn t(&self) -> Tensor {
+        let r = self.rank();
+        assert!(r >= 2);
+        let mut perm: Vec<usize> = (0..r).collect();
+        perm.swap(r - 2, r - 1);
+        self.permute(&perm)
+    }
+
+    /// Slice along `dim`: [start, stop) — a view.
+    pub fn slice(&self, dim: usize, start: usize, stop: usize) -> Tensor {
+        assert!(dim < self.rank() && start <= stop && stop <= self.shape[dim]);
+        let mut shape = self.shape.clone();
+        shape[dim] = stop - start;
+        Tensor {
+            shape,
+            strides: self.strides.clone(),
+            data: Arc::clone(&self.data),
+            offset: self.offset + start * self.strides[dim],
+        }
+    }
+
+    /// Split into `n` equal chunks along `dim`.
+    pub fn split(&self, dim: usize, n: usize) -> Vec<Tensor> {
+        assert!(self.shape[dim] % n == 0, "split: {} % {} != 0", self.shape[dim], n);
+        let chunk = self.shape[dim] / n;
+        (0..n)
+            .map(|i| self.slice(dim, i * chunk, (i + 1) * chunk))
+            .collect()
+    }
+
+    /// Concatenate along `dim` (materialises).
+    pub fn concat(parts: &[&Tensor], dim: usize) -> Tensor {
+        assert!(!parts.is_empty());
+        let mut shape = parts[0].shape.to_vec();
+        for p in &parts[1..] {
+            assert_eq!(p.rank(), shape.len());
+            for (i, (&a, &b)) in shape.iter().zip(p.shape.iter()).enumerate() {
+                if i != dim {
+                    assert_eq!(a, b, "concat shape mismatch on dim {i}");
+                }
+            }
+        }
+        shape[dim] = parts.iter().map(|p| p.shape[dim]).sum();
+        let outer: usize = shape[..dim].iter().product();
+        let inner: usize = shape[dim + 1..].iter().product();
+        let mut out = Vec::with_capacity(shape.iter().product());
+        let mats: Vec<Vec<f32>> = parts.iter().map(|p| p.to_vec()).collect();
+        for o in 0..outer {
+            for (p, mat) in parts.iter().zip(mats.iter()) {
+                let rows = p.shape[dim];
+                let start = o * rows * inner;
+                out.extend_from_slice(&mat[start..start + rows * inner]);
+            }
+        }
+        Tensor::from_vec(out, &shape)
+    }
+
+    /// Max |a - b| over all elements (shape-checked).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        let a = self.to_vec();
+        let b = other.to_vec();
+        a.iter()
+            .zip(b.iter())
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    /// Max element-wise relative difference (the paper's ≤1 % output guard).
+    pub fn max_rel_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        let a = self.to_vec();
+        let b = other.to_vec();
+        a.iter()
+            .zip(b.iter())
+            .map(|(x, y)| (x - y).abs() / x.abs().max(y.abs()).max(1e-6))
+            .fold(0.0f32, f32::max)
+    }
+
+    /// Largest absolute element value.
+    pub fn max_abs(&self) -> f32 {
+        self.to_vec().iter().map(|x| x.abs()).fold(0.0, f32::max)
+    }
+
+    /// Globally-normalised relative difference: max |a−b| over the
+    /// larger of the two tensors' max-magnitudes. This is the output
+    /// guard used by detection — element-wise relative error diverges
+    /// meaninglessly on near-zero entries.
+    pub fn global_rel_diff(&self, other: &Tensor) -> f32 {
+        let scale = self.max_abs().max(other.max_abs()).max(1e-12);
+        self.max_abs_diff(other) / scale
+    }
+
+    /// allclose with absolute + relative tolerance.
+    pub fn allclose(&self, other: &Tensor, atol: f32, rtol: f32) -> bool {
+        if self.shape != other.shape {
+            return false;
+        }
+        let a = self.to_vec();
+        let b = other.to_vec();
+        a.iter()
+            .zip(b.iter())
+            .all(|(x, y)| (x - y).abs() <= atol + rtol * y.abs())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    #[test]
+    fn from_vec_roundtrip() {
+        let t = Tensor::from_vec(vec![1., 2., 3., 4., 5., 6.], &[2, 3]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.at(&[1, 2]), 6.0);
+        assert_eq!(t.to_vec(), vec![1., 2., 3., 4., 5., 6.]);
+        assert!(t.is_contiguous());
+    }
+
+    #[test]
+    fn permute_is_view_and_correct() {
+        let t = Tensor::from_vec((0..24).map(|i| i as f32).collect(), &[2, 3, 4]);
+        let p = t.permute(&[2, 0, 1]);
+        assert_eq!(p.shape(), &[4, 2, 3]);
+        assert!(!p.is_contiguous());
+        assert_eq!(p.at(&[3, 1, 2]), t.at(&[1, 2, 3]));
+        // materialisation round-trips through the inverse permutation
+        let back = p.permute(&[1, 2, 0]);
+        assert_eq!(back.to_vec(), t.to_vec());
+    }
+
+    #[test]
+    fn transpose_2d() {
+        let t = Tensor::from_vec(vec![1., 2., 3., 4., 5., 6.], &[2, 3]);
+        let tt = t.t();
+        assert_eq!(tt.shape(), &[3, 2]);
+        assert_eq!(tt.to_vec(), vec![1., 4., 2., 5., 3., 6.]);
+    }
+
+    #[test]
+    fn reshape_preserves_order() {
+        let t = Tensor::from_vec((0..12).map(|i| i as f32).collect(), &[3, 4]);
+        let r = t.reshape(&[2, 6]);
+        assert_eq!(r.to_vec(), t.to_vec());
+    }
+
+    #[test]
+    fn slice_and_split() {
+        let t = Tensor::from_vec((0..12).map(|i| i as f32).collect(), &[3, 4]);
+        let s = t.slice(0, 1, 3);
+        assert_eq!(s.shape(), &[2, 4]);
+        assert_eq!(s.at(&[0, 0]), 4.0);
+        let parts = t.split(1, 2);
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].shape(), &[3, 2]);
+        assert_eq!(parts[1].at(&[0, 0]), 2.0);
+    }
+
+    #[test]
+    fn concat_inverts_split() {
+        let mut rng = Prng::new(1);
+        let t = Tensor::randn(&mut rng, &[4, 6]);
+        for dim in 0..2 {
+            let parts = t.split(dim, 2);
+            let refs: Vec<&Tensor> = parts.iter().collect();
+            let cat = Tensor::concat(&refs, dim);
+            assert_eq!(cat.to_vec(), t.to_vec());
+        }
+    }
+
+    #[test]
+    fn concat_along_middle_dim() {
+        let a = Tensor::from_vec((0..8).map(|i| i as f32).collect(), &[2, 2, 2]);
+        let b = Tensor::full(&[2, 1, 2], 9.0);
+        let c = Tensor::concat(&[&a, &b], 1);
+        assert_eq!(c.shape(), &[2, 3, 2]);
+        assert_eq!(c.at(&[0, 2, 0]), 9.0);
+        assert_eq!(c.at(&[1, 1, 1]), 7.0);
+    }
+
+    #[test]
+    fn at_flat_matches_to_vec() {
+        let t = Tensor::from_vec((0..24).map(|i| i as f32).collect(), &[2, 3, 4]);
+        let p = t.permute(&[1, 0, 2]);
+        let v = p.to_vec();
+        for i in 0..p.numel() {
+            assert_eq!(p.at_flat(i), v[i]);
+        }
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        let a = Tensor::from_vec(vec![1.0, 2.0], &[2]);
+        let b = Tensor::from_vec(vec![1.0 + 1e-6, 2.0 - 1e-6], &[2]);
+        assert!(a.allclose(&b, 1e-5, 0.0));
+        assert!(!a.allclose(&b, 1e-8, 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "reshape numel mismatch")]
+    fn reshape_bad_numel_panics() {
+        Tensor::zeros(&[2, 3]).reshape(&[4, 2]);
+    }
+
+    #[test]
+    fn contiguous_materialises_views() {
+        let t = Tensor::from_vec((0..6).map(|i| i as f32).collect(), &[2, 3]);
+        let v = t.t();
+        assert!(!v.is_contiguous());
+        let c = v.contiguous();
+        assert!(c.is_contiguous());
+        assert_eq!(c.to_vec(), v.to_vec());
+    }
+}

@@ -1,0 +1,256 @@
+//! Neural-network primitives: softmax, layernorm, GELU (exact / tanh /
+//! unfused decomposition), attention helpers, cross-entropy. These are
+//! the operator bodies the mini ML systems execute; the *unfused* GELU
+//! decomposition mirrors the 5-kernel HuggingFace implementation the
+//! paper contrasts with vLLM's fused kernel (§6.3).
+
+use super::ops::{add, map, matmul, mul, scale, sub};
+use super::Tensor;
+
+/// Softmax along the last dim (numerically stable).
+pub fn softmax(a: &Tensor) -> Tensor {
+    let shape = a.shape().to_vec();
+    let last = *shape.last().unwrap();
+    let rows = a.numel() / last;
+    let v = a.to_vec();
+    let mut out = vec![0.0f32; v.len()];
+    for r in 0..rows {
+        let row = &v[r * last..(r + 1) * last];
+        let m = row.iter().cloned().fold(f32::MIN, f32::max);
+        let mut denom = 0.0f32;
+        for (j, &x) in row.iter().enumerate() {
+            let e = (x - m).exp();
+            out[r * last + j] = e;
+            denom += e;
+        }
+        for j in 0..last {
+            out[r * last + j] /= denom;
+        }
+    }
+    Tensor::from_vec(out, &shape)
+}
+
+/// LayerNorm over the last dim with learned gamma/beta.
+pub fn layernorm(a: &Tensor, gamma: &Tensor, beta: &Tensor, eps: f32) -> Tensor {
+    let shape = a.shape().to_vec();
+    let last = *shape.last().unwrap();
+    assert_eq!(gamma.numel(), last);
+    assert_eq!(beta.numel(), last);
+    let rows = a.numel() / last;
+    let v = a.to_vec();
+    let g = gamma.to_vec();
+    let b = beta.to_vec();
+    let mut out = vec![0.0f32; v.len()];
+    for r in 0..rows {
+        let row = &v[r * last..(r + 1) * last];
+        let mean = row.iter().sum::<f32>() / last as f32;
+        let var = row.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / last as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        for j in 0..last {
+            out[r * last + j] = (row[j] - mean) * inv * g[j] + b[j];
+        }
+    }
+    Tensor::from_vec(out, &shape)
+}
+
+/// Exact GELU: x * Phi(x).
+pub fn gelu_exact(a: &Tensor) -> Tensor {
+    map(a, |x| 0.5 * x * (1.0 + erf(x / std::f32::consts::SQRT_2)))
+}
+
+/// Tanh-approximation GELU (the formulation GPT-2 uses).
+pub fn gelu_tanh(a: &Tensor) -> Tensor {
+    map(a, |x| {
+        0.5 * x * (1.0 + ((0.797_884_6) * (x + 0.044715 * x * x * x)).tanh())
+    })
+}
+
+/// The *unfused* tanh-GELU as five separate elementwise kernels — the
+/// HuggingFace-style decomposition (pow, mul-add, scale, tanh, final mul).
+/// Numerically identical to [`gelu_tanh`]; the executor charges five
+/// kernel launches and 5x the HBM round-trips for it.
+pub fn gelu_tanh_unfused_steps(a: &Tensor) -> (Vec<Tensor>, Tensor) {
+    let x3 = map(a, |x| x * x * x); // kernel 1: pow
+    let inner = add(a, &scale(&x3, 0.044715)); // kernel 2: mul-add
+    let scaled = scale(&inner, 0.797_884_6); // kernel 3: scale
+    let t = map(&scaled, f32::tanh); // kernel 4: tanh
+    let half = scale(&add(&t, &Tensor::full(&[1], 1.0)), 0.5);
+    let out = mul(a, &half); // kernel 5: mul
+    (vec![x3, inner, scaled, t.clone()], out)
+}
+
+/// erf via Abramowitz–Stegun 7.1.26 (|err| < 1.5e-7).
+pub fn erf(x: f32) -> f32 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.327_591_1 * x);
+    let y = 1.0
+        - (((((1.061_405_429 * t - 1.453_152_027) * t) + 1.421_413_741) * t
+            - 0.284_496_736)
+            * t
+            + 0.254_829_592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Scaled dot-product attention over `[b, h, s, d]` Q/K/V (HND layout).
+pub fn attention_hnd(q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+    let d = *q.shape().last().unwrap() as f32;
+    let scores = scale(&matmul(q, &k.t()), 1.0 / d.sqrt());
+    let probs = softmax(&scores);
+    matmul(&probs, v)
+}
+
+/// Attention with NHD-layout inputs `[b, s, h, d]` (SGLang-style): the
+/// math permutes to HND internally and permutes back, producing the same
+/// values in the caller's layout.
+pub fn attention_nhd(q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+    let to_hnd = |t: &Tensor| t.permute(&[0, 2, 1, 3]).contiguous();
+    let o = attention_hnd(&to_hnd(q), &to_hnd(k), &to_hnd(v));
+    o.permute(&[0, 2, 1, 3]).contiguous()
+}
+
+/// Cross-entropy loss from logits `[n, c]` and integer targets.
+pub fn cross_entropy(logits: &Tensor, targets: &[usize]) -> f32 {
+    assert_eq!(logits.rank(), 2);
+    let (n, c) = (logits.shape()[0], logits.shape()[1]);
+    assert_eq!(targets.len(), n);
+    let probs = softmax(logits);
+    let pv = probs.to_vec();
+    let mut loss = 0.0f32;
+    for (i, &t) in targets.iter().enumerate() {
+        assert!(t < c);
+        loss -= pv[i * c + t].max(1e-12).ln();
+    }
+    loss / n as f32
+}
+
+/// SiLU (used by Llama-style MLPs in the mini systems).
+pub fn silu(a: &Tensor) -> Tensor {
+    map(a, |x| x / (1.0 + (-x).exp()))
+}
+
+/// RMSNorm over the last dim (Llama-style).
+pub fn rmsnorm(a: &Tensor, gamma: &Tensor, eps: f32) -> Tensor {
+    let shape = a.shape().to_vec();
+    let last = *shape.last().unwrap();
+    assert_eq!(gamma.numel(), last);
+    let rows = a.numel() / last;
+    let v = a.to_vec();
+    let g = gamma.to_vec();
+    let mut out = vec![0.0f32; v.len()];
+    for r in 0..rows {
+        let row = &v[r * last..(r + 1) * last];
+        let ms = row.iter().map(|x| x * x).sum::<f32>() / last as f32;
+        let inv = 1.0 / (ms + eps).sqrt();
+        for j in 0..last {
+            out[r * last + j] = row[j] * inv * g[j];
+        }
+    }
+    Tensor::from_vec(out, &shape)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::sum_all;
+    use crate::util::Prng;
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut rng = Prng::new(1);
+        let a = Tensor::randn(&mut rng, &[5, 7]);
+        let s = softmax(&a);
+        for r in 0..5 {
+            let row = s.slice(0, r, r + 1);
+            assert!((sum_all(&row) - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn softmax_invariant_to_shift() {
+        let a = Tensor::from_vec(vec![1., 2., 3.], &[1, 3]);
+        let b = Tensor::from_vec(vec![1001., 1002., 1003.], &[1, 3]);
+        assert!(softmax(&a).allclose(&softmax(&b), 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let mut rng = Prng::new(2);
+        let a = Tensor::randn(&mut rng, &[4, 32]);
+        let g = Tensor::full(&[32], 1.0);
+        let b = Tensor::zeros(&[32]);
+        let ln = layernorm(&a, &g, &b, 1e-5);
+        let v = ln.to_vec();
+        for r in 0..4 {
+            let row = &v[r * 32..(r + 1) * 32];
+            let mean = row.iter().sum::<f32>() / 32.0;
+            let var = row.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / 32.0;
+            assert!(mean.abs() < 1e-5);
+            assert!((var - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn gelu_unfused_matches_fused() {
+        let mut rng = Prng::new(3);
+        let a = Tensor::randn(&mut rng, &[64]);
+        let fused = gelu_tanh(&a);
+        let (_tmps, unfused) = gelu_tanh_unfused_steps(&a);
+        assert!(fused.allclose(&unfused, 1e-6, 1e-5));
+    }
+
+    #[test]
+    fn gelu_tanh_close_to_exact() {
+        let mut rng = Prng::new(4);
+        let a = Tensor::randn(&mut rng, &[256]);
+        let d = gelu_tanh(&a).max_abs_diff(&gelu_exact(&a));
+        assert!(d < 5e-3, "tanh approx too far: {d}");
+    }
+
+    #[test]
+    fn erf_known_values() {
+        assert!((erf(0.0)).abs() < 1e-7);
+        assert!((erf(1.0) - 0.8427).abs() < 1e-3);
+        assert!((erf(-1.0) + 0.8427).abs() < 1e-3);
+        assert!((erf(3.0) - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn attention_layouts_agree() {
+        let mut rng = Prng::new(5);
+        // HND: [b, h, s, d]
+        let q = Tensor::randn(&mut rng, &[2, 3, 4, 8]);
+        let k = Tensor::randn(&mut rng, &[2, 3, 4, 8]);
+        let v = Tensor::randn(&mut rng, &[2, 3, 4, 8]);
+        let hnd = attention_hnd(&q, &k, &v);
+        // NHD inputs are the permuted views of the same tensors
+        let p = |t: &Tensor| t.permute(&[0, 2, 1, 3]).contiguous();
+        let nhd = attention_nhd(&p(&q), &p(&k), &p(&v));
+        assert!(p(&hnd).allclose(&nhd, 1e-5, 1e-4));
+    }
+
+    #[test]
+    fn cross_entropy_perfect_prediction_near_zero() {
+        let logits = Tensor::from_vec(vec![100., 0., 0., 0., 100., 0.], &[2, 3]);
+        let loss = cross_entropy(&logits, &[0, 1]);
+        assert!(loss < 1e-5);
+    }
+
+    #[test]
+    fn rmsnorm_unit_scale() {
+        let a = Tensor::from_vec(vec![3., 4.], &[1, 2]);
+        let g = Tensor::full(&[2], 1.0);
+        let r = rmsnorm(&a, &g, 0.0);
+        // rms = sqrt((9+16)/2); x / rms
+        let rms = (12.5f32).sqrt();
+        assert!((r.at(&[0, 0]) - 3.0 / rms).abs() < 1e-6);
+    }
+
+    #[test]
+    fn silu_midpoint() {
+        let a = Tensor::from_vec(vec![0.0], &[1]);
+        assert!((silu(&a).at(&[0]) - 0.0).abs() < 1e-7);
+    }
+}

@@ -1,0 +1,388 @@
+//! Elementwise, matmul, and reduction kernels over [`Tensor`].
+//!
+//! These are the *numerics* behind the simulated ML systems' operators;
+//! the energy model charges for them separately via kernel descriptors
+//! (see [`crate::energy`]). `matmul` supports an optional TF32-style
+//! mantissa truncation so the `allow_tf32` misconfiguration cases (c1,
+//! c8, pytorch-153195) produce genuinely different numerics within the
+//! paper's ≤1 % output-difference guard.
+
+use super::Tensor;
+
+/// Truncate an f32 mantissa to 10 bits — the TF32 input rounding
+/// performed by tensor cores.
+#[inline]
+pub fn tf32_round(x: f32) -> f32 {
+    f32::from_bits(x.to_bits() & 0xFFFF_E000)
+}
+
+/// Elementwise binary op with trailing broadcast (b may be a vector of
+/// size = last dim, or a scalar, or the full shape).
+fn zip_broadcast(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+    let av = a.to_vec();
+    let n = av.len();
+    let out: Vec<f32> = if b.shape() == a.shape() {
+        let bv = b.to_vec();
+        av.iter().zip(bv.iter()).map(|(&x, &y)| f(x, y)).collect()
+    } else if b.numel() == 1 {
+        let y = b.at_flat(0);
+        av.iter().map(|&x| f(x, y)).collect()
+    } else {
+        // broadcast along the last dimension
+        let last = *a.shape().last().expect("rank >= 1");
+        assert_eq!(
+            b.numel(),
+            last,
+            "broadcast requires b to be scalar, last-dim vector, or same shape"
+        );
+        let bv = b.to_vec();
+        (0..n).map(|i| f(av[i], bv[i % last])).collect()
+    };
+    Tensor::from_vec(out, a.shape())
+}
+
+/// a + b (with trailing broadcast).
+pub fn add(a: &Tensor, b: &Tensor) -> Tensor {
+    zip_broadcast(a, b, |x, y| x + y)
+}
+
+/// a - b (with trailing broadcast).
+pub fn sub(a: &Tensor, b: &Tensor) -> Tensor {
+    zip_broadcast(a, b, |x, y| x - y)
+}
+
+/// a * b (with trailing broadcast).
+pub fn mul(a: &Tensor, b: &Tensor) -> Tensor {
+    zip_broadcast(a, b, |x, y| x * y)
+}
+
+/// a / b (with trailing broadcast).
+pub fn div(a: &Tensor, b: &Tensor) -> Tensor {
+    zip_broadcast(a, b, |x, y| x / y)
+}
+
+/// a * scalar.
+pub fn scale(a: &Tensor, s: f32) -> Tensor {
+    Tensor::from_vec(a.to_vec().iter().map(|&x| x * s).collect(), a.shape())
+}
+
+/// Unary map.
+pub fn map(a: &Tensor, f: impl Fn(f32) -> f32) -> Tensor {
+    Tensor::from_vec(a.to_vec().iter().map(|&x| f(x)).collect(), a.shape())
+}
+
+/// Matrix multiply over the last two dims with leading-batch handling:
+/// `[.., m, k] x [.., k, n] -> [.., m, n]`; `b` may omit batch dims.
+/// `tf32` truncates inputs to 10-bit mantissas (tensor-core emulation).
+pub fn matmul_ex(a: &Tensor, b: &Tensor, tf32: bool) -> Tensor {
+    let ar = a.rank();
+    let br = b.rank();
+    assert!(ar >= 2 && br >= 2, "matmul requires rank >= 2");
+    let (m, k) = (a.shape()[ar - 2], a.shape()[ar - 1]);
+    let (kb, n) = (b.shape()[br - 2], b.shape()[br - 1]);
+    assert_eq!(k, kb, "matmul inner-dim mismatch: {k} vs {kb}");
+    let batch: usize = a.shape()[..ar - 2].iter().product();
+    let b_batch: usize = b.shape()[..br - 2].iter().product();
+    assert!(
+        b_batch == batch || b_batch == 1,
+        "matmul batch mismatch: {batch} vs {b_batch}"
+    );
+    let av = a.values();
+    let bv = b.values();
+    let prep = |x: f32| if tf32 { tf32_round(x) } else { x };
+    let mut out = vec![0.0f32; batch * m * n];
+    for bi in 0..batch {
+        let abase = bi * m * k;
+        let bbase = if b_batch == 1 { 0 } else { bi * k * n };
+        let obase = bi * m * n;
+        // ikj loop order: streams through b rows, accumulates into out rows.
+        for i in 0..m {
+            let arow = &av[abase + i * k..abase + (i + 1) * k];
+            let orow = &mut out[obase + i * n..obase + (i + 1) * n];
+            for (kk, &aik) in arow.iter().enumerate() {
+                let aik = prep(aik);
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &bv[bbase + kk * n..bbase + (kk + 1) * n];
+                for (j, &bkj) in brow.iter().enumerate() {
+                    orow[j] += aik * prep(bkj);
+                }
+            }
+        }
+    }
+    let mut shape = a.shape()[..ar - 2].to_vec();
+    shape.push(m);
+    shape.push(n);
+    Tensor::from_vec(out, &shape)
+}
+
+/// Standard f32 matmul.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    matmul_ex(a, b, false)
+}
+
+/// Fused `bias + a @ b` (torch.addmm semantics; bias broadcast on rows).
+pub fn addmm(bias: &Tensor, a: &Tensor, b: &Tensor, tf32: bool) -> Tensor {
+    let mm = matmul_ex(a, b, tf32);
+    add(&mm, bias)
+}
+
+/// Sum over all elements.
+pub fn sum_all(a: &Tensor) -> f32 {
+    a.to_vec().iter().sum()
+}
+
+/// Mean over all elements.
+pub fn mean_all(a: &Tensor) -> f32 {
+    sum_all(a) / a.numel() as f32
+}
+
+/// Reduce-sum along `dim` (keeps remaining dims).
+pub fn sum_dim(a: &Tensor, dim: usize) -> Tensor {
+    let shape = a.shape();
+    assert!(dim < shape.len());
+    let outer: usize = shape[..dim].iter().product();
+    let d = shape[dim];
+    let inner: usize = shape[dim + 1..].iter().product();
+    let v = a.to_vec();
+    let mut out = vec![0.0f32; outer * inner];
+    for o in 0..outer {
+        for j in 0..d {
+            let base = (o * d + j) * inner;
+            for i in 0..inner {
+                out[o * inner + i] += v[base + i];
+            }
+        }
+    }
+    let mut oshape: Vec<usize> = shape[..dim].to_vec();
+    oshape.extend_from_slice(&shape[dim + 1..]);
+    if oshape.is_empty() {
+        oshape.push(1);
+    }
+    Tensor::from_vec(out, &oshape)
+}
+
+/// Row-wise max along the last dim.
+pub fn max_lastdim(a: &Tensor) -> Tensor {
+    let shape = a.shape();
+    let last = *shape.last().unwrap();
+    let rows = a.numel() / last;
+    let v = a.to_vec();
+    let out: Vec<f32> = (0..rows)
+        .map(|r| v[r * last..(r + 1) * last].iter().cloned().fold(f32::MIN, f32::max))
+        .collect();
+    Tensor::from_vec(out, &shape[..shape.len() - 1])
+}
+
+/// Count of non-zero elements (TF `count_nonzero`, case c16).
+pub fn count_nonzero(a: &Tensor) -> usize {
+    a.to_vec().iter().filter(|&&x| x != 0.0).count()
+}
+
+/// Top-k values along the last dim, descending (SGLang top-k, case c3).
+pub fn topk_lastdim(a: &Tensor, k: usize) -> Tensor {
+    let shape = a.shape();
+    let last = *shape.last().unwrap();
+    assert!(k <= last);
+    let rows = a.numel() / last;
+    let v = a.to_vec();
+    let mut out = Vec::with_capacity(rows * k);
+    for r in 0..rows {
+        let mut row: Vec<f32> = v[r * last..(r + 1) * last].to_vec();
+        row.sort_by(|x, y| y.partial_cmp(x).unwrap());
+        out.extend_from_slice(&row[..k]);
+    }
+    let mut oshape = shape[..shape.len() - 1].to_vec();
+    oshape.push(k);
+    Tensor::from_vec(out, &oshape)
+}
+
+/// `repeat_interleave` along `dim` (Megatron GQA key/value expansion, c4).
+pub fn repeat_interleave(a: &Tensor, dim: usize, reps: usize) -> Tensor {
+    let shape = a.shape();
+    let outer: usize = shape[..dim].iter().product();
+    let d = shape[dim];
+    let inner: usize = shape[dim + 1..].iter().product();
+    let v = a.to_vec();
+    let mut out = Vec::with_capacity(v.len() * reps);
+    for o in 0..outer {
+        for j in 0..d {
+            let base = (o * d + j) * inner;
+            for _ in 0..reps {
+                out.extend_from_slice(&v[base..base + inner]);
+            }
+        }
+    }
+    let mut oshape = shape.to_vec();
+    oshape[dim] = d * reps;
+    Tensor::from_vec(out, &oshape)
+}
+
+/// Sort along the last dim, descending (the inefficient top-k path of
+/// case c3 sorts the full row before slicing).
+pub fn sort_lastdim_desc(a: &Tensor) -> Tensor {
+    let shape = a.shape();
+    let last = *shape.last().unwrap();
+    let rows = a.numel() / last;
+    let v = a.to_vec();
+    let mut out = Vec::with_capacity(v.len());
+    for r in 0..rows {
+        let mut row: Vec<f32> = v[r * last..(r + 1) * last].to_vec();
+        row.sort_by(|x, y| y.partial_cmp(x).unwrap());
+        out.extend_from_slice(&row);
+    }
+    Tensor::from_vec(out, shape)
+}
+
+/// Cumulative sum along the last dim.
+pub fn cumsum_lastdim(a: &Tensor) -> Tensor {
+    let shape = a.shape();
+    let last = *shape.last().unwrap();
+    let rows = a.numel() / last;
+    let v = a.to_vec();
+    let mut out = Vec::with_capacity(v.len());
+    for r in 0..rows {
+        let mut acc = 0.0f32;
+        for j in 0..last {
+            acc += v[r * last + j];
+            out.push(acc);
+        }
+    }
+    Tensor::from_vec(out, shape)
+}
+
+/// Embedding lookup: ids (flat, values cast to usize) into table [v, h].
+pub fn embedding(table: &Tensor, ids: &[usize]) -> Tensor {
+    assert_eq!(table.rank(), 2);
+    let h = table.shape()[1];
+    let tv = table.to_vec();
+    let mut out = Vec::with_capacity(ids.len() * h);
+    for &id in ids {
+        assert!(id < table.shape()[0], "embedding id {id} out of range");
+        out.extend_from_slice(&tv[id * h..(id + 1) * h]);
+    }
+    Tensor::from_vec(out, &[ids.len(), h])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Tensor::from_vec(vec![1., 2., 3., 4.], &[2, 2]);
+        let b = Tensor::from_vec(vec![1., 1., 1., 1.], &[2, 2]);
+        assert_eq!(matmul(&a, &b).to_vec(), vec![3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn matmul_batched_broadcast_b() {
+        let mut rng = Prng::new(2);
+        let a = Tensor::randn(&mut rng, &[3, 4, 5]);
+        let b = Tensor::randn(&mut rng, &[5, 6]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.shape(), &[3, 4, 6]);
+        // slice 0 equals standalone matmul of slice 0
+        let a0 = a.slice(0, 0, 1).reshape(&[4, 5]);
+        let c0 = matmul(&a0, &b);
+        assert!(c.slice(0, 0, 1).reshape(&[4, 6]).allclose(&c0, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn addmm_equals_add_plus_mm() {
+        let mut rng = Prng::new(3);
+        let a = Tensor::randn(&mut rng, &[8, 16]);
+        let b = Tensor::randn(&mut rng, &[16, 12]);
+        let bias = Tensor::randn(&mut rng, &[12]);
+        let fused = addmm(&bias, &a, &b, false);
+        let unfused = add(&matmul(&a, &b), &bias);
+        assert!(fused.allclose(&unfused, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn tf32_differs_slightly_but_within_1pct() {
+        let mut rng = Prng::new(4);
+        let a = Tensor::randn(&mut rng, &[32, 64]);
+        let b = Tensor::randn(&mut rng, &[64, 32]);
+        let exact = matmul_ex(&a, &b, false);
+        let tf32 = matmul_ex(&a, &b, true);
+        let d = exact.max_abs_diff(&tf32);
+        assert!(d > 0.0, "tf32 must change numerics");
+        // relative error stays small (paper's <=1% guard)
+        let denom = exact.to_vec().iter().map(|x| x.abs()).fold(0.0f32, f32::max);
+        assert!(d / denom < 0.01, "rel err {}", d / denom);
+    }
+
+    #[test]
+    fn broadcast_modes() {
+        let a = Tensor::from_vec(vec![1., 2., 3., 4.], &[2, 2]);
+        let s = Tensor::from_vec(vec![10.], &[1]);
+        assert_eq!(add(&a, &s).to_vec(), vec![11., 12., 13., 14.]);
+        let v = Tensor::from_vec(vec![10., 20.], &[2]);
+        assert_eq!(add(&a, &v).to_vec(), vec![11., 22., 13., 24.]);
+    }
+
+    #[test]
+    fn sum_dim_matches_manual() {
+        let a = Tensor::from_vec((0..24).map(|i| i as f32).collect(), &[2, 3, 4]);
+        let s = sum_dim(&a, 1);
+        assert_eq!(s.shape(), &[2, 4]);
+        assert_eq!(s.at(&[0, 0]), 0. + 4. + 8.);
+        assert_eq!(s.at(&[1, 3]), 15. + 19. + 23.);
+    }
+
+    #[test]
+    fn topk_sorted_desc() {
+        let a = Tensor::from_vec(vec![3., 1., 4., 1., 5., 9., 2., 6.], &[2, 4]);
+        let t = topk_lastdim(&a, 2);
+        assert_eq!(t.to_vec(), vec![4., 3., 9., 6.]);
+    }
+
+    #[test]
+    fn repeat_interleave_expands() {
+        let a = Tensor::from_vec(vec![1., 2., 3., 4.], &[2, 2]);
+        let r = repeat_interleave(&a, 0, 2);
+        assert_eq!(r.shape(), &[4, 2]);
+        assert_eq!(r.to_vec(), vec![1., 2., 1., 2., 3., 4., 3., 4.]);
+    }
+
+    #[test]
+    fn count_nonzero_counts() {
+        let a = Tensor::from_vec(vec![0., 1., 0., 2., 3., 0.], &[6]);
+        assert_eq!(count_nonzero(&a), 3);
+    }
+
+    #[test]
+    fn embedding_lookup() {
+        let table = Tensor::from_vec((0..6).map(|i| i as f32).collect(), &[3, 2]);
+        let e = embedding(&table, &[2, 0]);
+        assert_eq!(e.to_vec(), vec![4., 5., 0., 1.]);
+    }
+
+    #[test]
+    fn sort_then_slice_equals_topk() {
+        let a = Tensor::from_vec(vec![3., 1., 4., 1., 5., 9., 2., 6.], &[2, 4]);
+        let sorted = sort_lastdim_desc(&a);
+        let sliced = sorted.slice(1, 0, 2).contiguous();
+        assert_eq!(sliced.to_vec(), topk_lastdim(&a, 2).to_vec());
+    }
+
+    #[test]
+    fn cumsum_lastdim_known() {
+        let a = Tensor::from_vec(vec![1., 2., 3., 4.], &[2, 2]);
+        assert_eq!(cumsum_lastdim(&a).to_vec(), vec![1., 3., 3., 7.]);
+    }
+
+    #[test]
+    fn matmul_on_views_matches_contiguous() {
+        let mut rng = Prng::new(5);
+        let a = Tensor::randn(&mut rng, &[6, 8]);
+        let at_view = a.t(); // non-contiguous view
+        let b = Tensor::randn(&mut rng, &[6, 4]);
+        let via_view = matmul(&at_view, &b);
+        let via_copy = matmul(&at_view.contiguous(), &b);
+        assert!(via_view.allclose(&via_copy, 1e-6, 1e-6));
+    }
+}

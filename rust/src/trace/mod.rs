@@ -1,0 +1,229 @@
+//! Software-event tracing substrate (the CUPTI / libunwind /
+//! `PyEval_SetProfile` stand-in, paper §5.1).
+//!
+//! The executor emits an [`Event`] per framework API call and per kernel
+//! launch; correlation IDs link the CPU-side API record to the GPU-side
+//! kernel record, and each API record carries a multi-layer call stack
+//! (Python → C++ dispatch → CUDA runtime). Diagnosis (Algorithm 2) works
+//! entirely off these records. A configurable per-event overhead models
+//! the tracing cost measured in Fig 10.
+
+use std::collections::BTreeMap;
+
+/// Language layer of a stack frame (the paper's cross-layer stacks).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Layer {
+    Python,
+    Cpp,
+    Cuda,
+}
+
+/// One stack frame: a function at a layer.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Frame {
+    pub layer: Layer,
+    pub func: String,
+}
+
+impl Frame {
+    pub fn py(f: &str) -> Frame {
+        Frame { layer: Layer::Python, func: f.to_string() }
+    }
+    pub fn cpp(f: &str) -> Frame {
+        Frame { layer: Layer::Cpp, func: f.to_string() }
+    }
+    pub fn cuda(f: &str) -> Frame {
+        Frame { layer: Layer::Cuda, func: f.to_string() }
+    }
+}
+
+/// Call path from application entry down to the kernel launch site.
+pub type CallPath = Vec<Frame>;
+
+/// Kind of traced event.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EventKind {
+    /// Framework API call intercepted on the CPU side.
+    ApiCall { api: String },
+    /// GPU kernel execution (CUPTI Activity record stand-in).
+    KernelLaunch { kernel: String, energy_j: f64 },
+    /// Host↔device or device↔device copy.
+    MemCopy { bytes: f64 },
+}
+
+/// A traced event with timing and correlation.
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub id: usize,
+    /// Correlation ID linking an ApiCall to the kernels it launched.
+    pub corr_id: u64,
+    pub t_start_us: f64,
+    pub t_end_us: f64,
+    pub kind: EventKind,
+    /// Captured call stack (populated for ApiCall events).
+    pub stack: CallPath,
+    /// Graph node that produced the event, if any.
+    pub node: Option<usize>,
+}
+
+/// Append-only trace buffer.
+#[derive(Clone, Debug, Default)]
+pub struct TraceBuffer {
+    pub events: Vec<Event>,
+    next_corr: u64,
+    /// Per-event CPU overhead charged when tracing is enabled, µs
+    /// (interception + stack capture). Drives Fig 10.
+    pub overhead_per_event_us: f64,
+    /// Accumulated overhead, µs.
+    pub total_overhead_us: f64,
+}
+
+impl TraceBuffer {
+    pub fn new(overhead_per_event_us: f64) -> TraceBuffer {
+        TraceBuffer { overhead_per_event_us, ..Default::default() }
+    }
+
+    /// Allocate a fresh correlation ID.
+    pub fn next_corr_id(&mut self) -> u64 {
+        self.next_corr += 1;
+        self.next_corr
+    }
+
+    /// Record an event; returns its index.
+    pub fn record(
+        &mut self,
+        corr_id: u64,
+        t_start_us: f64,
+        t_end_us: f64,
+        kind: EventKind,
+        stack: CallPath,
+        node: Option<usize>,
+    ) -> usize {
+        let id = self.events.len();
+        self.events.push(Event { id, corr_id, t_start_us, t_end_us, kind, stack, node });
+        self.total_overhead_us += self.overhead_per_event_us;
+        id
+    }
+
+    /// All kernel-launch events.
+    pub fn kernels(&self) -> impl Iterator<Item = &Event> {
+        self.events
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::KernelLaunch { .. }))
+    }
+
+    /// The API-call event for a correlation ID, if any.
+    pub fn api_for_corr(&self, corr: u64) -> Option<&Event> {
+        self.events
+            .iter()
+            .find(|e| e.corr_id == corr && matches!(e.kind, EventKind::ApiCall { .. }))
+    }
+
+    /// Unified view: for every kernel, the call path of the API call that
+    /// launched it (CPU↔GPU correlation, paper §5.1). Returns
+    /// `(kernel_name, call_path, node)` tuples in launch order.
+    pub fn kernel_call_paths(&self) -> Vec<(String, CallPath, Option<usize>)> {
+        let by_corr: BTreeMap<u64, &Event> = self
+            .events
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::ApiCall { .. }))
+            .map(|e| (e.corr_id, e))
+            .collect();
+        self.kernels()
+            .map(|k| {
+                let kernel = match &k.kind {
+                    EventKind::KernelLaunch { kernel, .. } => kernel.clone(),
+                    _ => unreachable!(),
+                };
+                let mut path = by_corr
+                    .get(&k.corr_id)
+                    .map(|api| api.stack.clone())
+                    .unwrap_or_default();
+                // the kernel itself is the leaf of the path
+                path.push(Frame::cuda(&kernel));
+                (kernel, path, k.node)
+            })
+            .collect()
+    }
+
+    /// Total energy attributed to kernels (for overhead-free accounting).
+    pub fn kernel_energy_j(&self) -> f64 {
+        self.kernels()
+            .map(|e| match e.kind {
+                EventKind::KernelLaunch { energy_j, .. } => energy_j,
+                _ => 0.0,
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn correlation_links_api_to_kernel() {
+        let mut tb = TraceBuffer::new(0.1);
+        let c = tb.next_corr_id();
+        tb.record(
+            c,
+            0.0,
+            1.0,
+            EventKind::ApiCall { api: "torch.matmul".into() },
+            vec![Frame::py("model.forward"), Frame::cpp("at::matmul")],
+            Some(3),
+        );
+        tb.record(
+            c,
+            1.0,
+            5.0,
+            EventKind::KernelLaunch { kernel: "sgemm_128".into(), energy_j: 0.5 },
+            vec![],
+            Some(3),
+        );
+        let paths = tb.kernel_call_paths();
+        assert_eq!(paths.len(), 1);
+        let (k, p, node) = &paths[0];
+        assert_eq!(k, "sgemm_128");
+        assert_eq!(p.len(), 3); // py + cpp + cuda leaf
+        assert_eq!(p[2], Frame::cuda("sgemm_128"));
+        assert_eq!(*node, Some(3));
+    }
+
+    #[test]
+    fn overhead_accumulates() {
+        let mut tb = TraceBuffer::new(0.5);
+        for i in 0..10 {
+            let c = tb.next_corr_id();
+            tb.record(c, i as f64, i as f64 + 1.0, EventKind::MemCopy { bytes: 4.0 }, vec![], None);
+        }
+        assert!((tb.total_overhead_us - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kernel_energy_sums() {
+        let mut tb = TraceBuffer::new(0.0);
+        for e in [0.25, 0.75] {
+            let c = tb.next_corr_id();
+            tb.record(c, 0.0, 1.0, EventKind::KernelLaunch { kernel: "k".into(), energy_j: e }, vec![], None);
+        }
+        assert!((tb.kernel_energy_j() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn corr_ids_unique() {
+        let mut tb = TraceBuffer::new(0.0);
+        let a = tb.next_corr_id();
+        let b = tb.next_corr_id();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn kernel_without_api_still_has_leaf_path() {
+        let mut tb = TraceBuffer::new(0.0);
+        let c = tb.next_corr_id();
+        tb.record(c, 0.0, 1.0, EventKind::KernelLaunch { kernel: "orphan".into(), energy_j: 0.0 }, vec![], None);
+        let paths = tb.kernel_call_paths();
+        assert_eq!(paths[0].1.len(), 1);
+    }
+}

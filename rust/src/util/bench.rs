@@ -1,0 +1,126 @@
+//! Micro-bench harness used by the `benches/` targets (`harness = false`;
+//! the offline registry has no `criterion`). Provides warm-up, adaptive
+//! iteration counts, and summary statistics, plus helpers to persist
+//! regenerated paper tables/figures under `results/`.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// Result of timing a closure.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time in microseconds.
+    pub us: Summary,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>12} /iter  (p50 {:>10}, n={})",
+            self.name,
+            super::table::fmt_us(self.us.mean),
+            super::table::fmt_us(self.us.p50),
+            self.iters
+        )
+    }
+}
+
+/// Time `f`, choosing an iteration count so total time ≈ `budget`.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // Warm-up + calibration.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_nanos(50));
+    let iters = (budget.as_secs_f64() / once.as_secs_f64()).clamp(3.0, 1000.0) as usize;
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e6);
+    }
+    BenchResult { name: name.to_string(), us: Summary::of(&samples), iters }
+}
+
+/// Time one invocation of `f`, returning (result, micros).
+pub fn time_once<R, F: FnOnce() -> R>(f: F) -> (R, f64) {
+    let t = Instant::now();
+    let r = f();
+    (r, t.elapsed().as_secs_f64() * 1e6)
+}
+
+/// Run `f` with a wall-clock timeout on a helper thread; returns `None` on
+/// timeout (used for the brute-force matcher baseline in Fig 9, which the
+/// paper reports as timing out at 5 minutes).
+pub fn with_timeout<R: Send + 'static, F: FnOnce() -> R + Send + 'static>(
+    timeout: Duration,
+    f: F,
+) -> Option<R> {
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    rx.recv_timeout(timeout).ok()
+}
+
+/// Write a regenerated table/figure to `<workspace>/results/<name>` (both
+/// the rendered text and CSV), creating the directory if needed. Bench
+/// binaries run with the package (`rust/`) as cwd, so walk up to the
+/// outermost directory that still contains a `Cargo.toml`.
+pub fn persist(name: &str, text: &str, csv: Option<&str>) {
+    let mut root = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    while root.parent().map(|p| p.join("Cargo.toml").exists()).unwrap_or(false) {
+        root = root.parent().unwrap().to_path_buf();
+    }
+    let dir = root.join("results");
+    let _ = std::fs::create_dir_all(&dir);
+    let _ = std::fs::write(dir.join(format!("{name}.txt")), text);
+    if let Some(csv) = csv {
+        let _ = std::fs::write(dir.join(format!("{name}.csv")), csv);
+    }
+}
+
+/// Standard header printed by every bench binary.
+pub fn banner(fig: &str, caption: &str) {
+    println!("=== Magneton bench: {fig} ===");
+    println!("{caption}");
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_positive_time() {
+        let r = bench("noop-ish", Duration::from_millis(20), || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.us.mean > 0.0);
+        assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn timeout_fires() {
+        let r = with_timeout(Duration::from_millis(30), || {
+            std::thread::sleep(Duration::from_secs(5));
+            1
+        });
+        assert!(r.is_none());
+    }
+
+    #[test]
+    fn timeout_passes_result() {
+        let r = with_timeout(Duration::from_secs(5), || 42);
+        assert_eq!(r, Some(42));
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, us) = time_once(|| 7);
+        assert_eq!(v, 7);
+        assert!(us >= 0.0);
+    }
+}

@@ -1,0 +1,112 @@
+//! Minimal CLI argument parser (the offline registry has no `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// Positional arguments in order.
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag`s.
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw argument strings (no argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|nxt| !nxt.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.options.insert(rest.to_string(), v);
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// True if `--name` was passed as a bare flag or `--name=true`.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+            || self.options.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    /// String option with default.
+    pub fn get<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.options.get(name).map(String::as_str).unwrap_or(default)
+    }
+
+    /// Typed option with default; panics with a clear message on parse error.
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.options.get(name) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|e| panic!("invalid value for --{name}: {v} ({e})")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse(&["detect", "--threshold", "0.1", "--verbose", "--out=res"]);
+        assert_eq!(a.positional, vec!["detect"]);
+        assert_eq!(a.get("threshold", "0"), "0.1");
+        assert_eq!(a.get("out", ""), "res");
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse(&["--n", "42"]);
+        assert_eq!(a.get_parse("n", 0usize), 42);
+        assert_eq!(a.get_parse("missing", 7usize), 7);
+        assert!((a.get_parse("missing", 0.5f64) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["--a", "--b"]);
+        assert!(a.flag("a"));
+        assert!(a.flag("b"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_typed_value_panics() {
+        let a = parse(&["--n", "notanum"]);
+        let _: usize = a.get_parse("n", 0);
+    }
+}

@@ -1,0 +1,19 @@
+//! Small self-contained utilities shared across the crate.
+//!
+//! The offline crate registry lacks `rand`, `clap`, `criterion`, and
+//! `serde`, so this module provides the minimal equivalents Magneton
+//! needs: a deterministic PRNG, descriptive statistics, an ASCII table
+//! printer, a tiny CLI argument parser, a JSON writer, a scoped thread
+//! pool, and a bench harness used by the `benches/` targets.
+
+pub mod prng;
+pub mod stats;
+pub mod table;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod bench;
+
+pub use prng::Prng;
+pub use stats::Summary;
+pub use table::Table;

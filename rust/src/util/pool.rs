@@ -1,0 +1,72 @@
+//! Scoped thread-pool helpers (no `tokio`/`rayon` offline). The matcher
+//! fans tensor-fingerprint work out across worker threads; determinism is
+//! preserved because results are collected by index.
+
+/// Map `f` over `items` using up to `threads` scoped worker threads,
+/// returning results in input order.
+pub fn par_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let threads = threads.max(1).min(items.len().max(1));
+    if threads <= 1 || items.len() <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let mut out: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+    let slots: Vec<std::sync::Mutex<&mut Option<R>>> =
+        out.iter_mut().map(std::sync::Mutex::new).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(&items[i]);
+                **slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    out.into_iter().map(|r| r.unwrap()).collect()
+}
+
+/// Number of worker threads to use by default (cores, capped).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let xs: Vec<usize> = (0..1000).collect();
+        let ys = par_map(&xs, 8, |x| x * 2);
+        assert_eq!(ys, xs.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_fallback() {
+        let xs = vec![1, 2, 3];
+        assert_eq!(par_map(&xs, 1, |x| x + 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let xs: Vec<u32> = vec![];
+        assert!(par_map(&xs, 4, |x| *x).is_empty());
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        let xs = vec![5];
+        assert_eq!(par_map(&xs, 64, |x| x * x), vec![25]);
+    }
+}

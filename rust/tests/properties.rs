@@ -1,0 +1,134 @@
+//! Cross-module property tests on coordinator invariants: symmetry,
+//! determinism, energy conservation, and region sanity of the full
+//! differential pipeline.
+
+use magneton::cases;
+use magneton::coordinator::Magneton;
+use magneton::detect::Side;
+use magneton::energy::DeviceSpec;
+use magneton::util::Prng;
+
+fn mag() -> Magneton {
+    Magneton::new(DeviceSpec::h200_sim())
+}
+
+/// Swapping the two systems must swap the finding sides but preserve
+/// detection, diffs, and root causes.
+#[test]
+fn prop_audit_is_symmetric() {
+    let m = mag();
+    for id in ["c8", "c10", "c16"] {
+        let s = cases::by_id(id).unwrap();
+        let mut r1 = Prng::new(500);
+        let (a, b) = (s.build)(&mut r1);
+        let fwd = m.audit(&a, &b);
+        let mut r2 = Prng::new(500);
+        let (a2, b2) = (s.build)(&mut r2);
+        let rev = m.audit(&b2, &a2);
+        assert_eq!(fwd.detected(), rev.detected(), "{id}: detection not symmetric");
+        assert!(
+            (fwd.e2e_diff_frac - rev.e2e_diff_frac).abs() < 1e-9,
+            "{id}: e2e diff not symmetric"
+        );
+        if let (Some(f), Some(r)) = (fwd.findings.first(), rev.findings.first()) {
+            assert_ne!(f.wasteful == Side::A, r.wasteful == Side::A, "{id}: side must flip");
+            assert!((f.diff_frac - r.diff_frac).abs() < 1e-6, "{id}: diff must match");
+        }
+    }
+}
+
+/// The pipeline is deterministic given the workload seed.
+#[test]
+fn prop_audit_is_deterministic() {
+    let m = mag();
+    let render = |seed: u64| {
+        let s = cases::by_id("c12").unwrap();
+        let mut rng = Prng::new(seed);
+        let (a, b) = (s.build)(&mut rng);
+        let out = m.audit(&a, &b);
+        out.diagnoses
+            .iter()
+            .map(|(f, d)| format!("{}|{}", f.summary(), d.render()))
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    assert_eq!(render(7), render(7));
+    assert!(!render(7).is_empty());
+}
+
+/// Kernel-record energy, power-trace integration, and the trace-buffer
+/// attribution must all agree (three views of the same ground truth).
+#[test]
+fn prop_energy_accounting_consistent() {
+    let m = mag();
+    let mut rng = Prng::new(321);
+    for s in cases::known_cases().into_iter().take(6) {
+        let (a, _) = (s.build)(&mut rng);
+        let arts = m.run_side(&a);
+        let from_records: f64 = arts.records.iter().map(|r| r.energy_j).sum();
+        assert!((from_records - arts.total_energy_j).abs() < 1e-12);
+        let from_trace = arts.trace.kernel_energy_j();
+        assert!(
+            (from_trace - arts.total_energy_j).abs() / arts.total_energy_j.max(1e-12) < 1e-9,
+            "{}: trace attribution diverges",
+            s.id
+        );
+        let from_power = arts.power.total_energy();
+        let rel = (from_power - arts.total_energy_j).abs() / arts.total_energy_j.max(1e-12);
+        assert!(rel < 0.05, "{}: power integral diverges {rel}", s.id);
+    }
+}
+
+/// Matched regions only reference valid nodes and never claim energy
+/// that the runs did not spend.
+#[test]
+fn prop_regions_are_sane() {
+    let m = mag();
+    let mut rng = Prng::new(99);
+    for s in cases::known_cases().into_iter().take(8) {
+        let (a, b) = (s.build)(&mut rng);
+        let out = m.audit(&a, &b);
+        for region in &out.regions {
+            assert!(region.a_nodes.iter().all(|&n| n < out.a.graph.len()), "{}", s.id);
+            assert!(region.b_nodes.iter().all(|&n| n < out.b.graph.len()), "{}", s.id);
+        }
+        for f in &out.findings {
+            assert!(f.energy_a_j <= out.a.total_energy_j * (1.0 + 1e-9), "{}", s.id);
+            assert!(f.energy_b_j <= out.b.total_energy_j * (1.0 + 1e-9), "{}", s.id);
+            assert!((0.0..=1.0).contains(&f.diff_frac), "{}", s.id);
+        }
+    }
+}
+
+/// A stricter detection threshold can only shrink the finding set.
+#[test]
+fn prop_threshold_monotone() {
+    let s = cases::by_id("c5").unwrap();
+    let mut rng = Prng::new(44);
+    let (a, b) = (s.build)(&mut rng);
+    let mut counts = Vec::new();
+    for thr in [0.02, 0.05, 0.10, 0.30, 0.60] {
+        let mut m = mag();
+        m.cfg.energy_threshold = thr;
+        counts.push(m.audit(&a, &b).findings.len());
+    }
+    assert!(counts.windows(2).all(|w| w[0] >= w[1]), "not monotone: {counts:?}");
+    assert!(counts[0] > 0, "loosest threshold finds nothing");
+}
+
+/// Auditing a system against itself is always clean, for every case
+/// builder's wasteful side.
+#[test]
+fn prop_self_audit_is_clean() {
+    let m = mag();
+    for id in ["c3", "c7", "c13"] {
+        let s = cases::by_id(id).unwrap();
+        let mut r1 = Prng::new(61);
+        let mut r2 = Prng::new(61);
+        let (a1, _) = (s.build)(&mut r1);
+        let (a2, _) = (s.build)(&mut r2);
+        let out = m.audit(&a1, &a2);
+        assert!(!out.detected(), "{id}: self-audit flagged waste");
+        assert!(out.e2e_diff_frac < 1e-6, "{id}: self diff {}", out.e2e_diff_frac);
+    }
+}
