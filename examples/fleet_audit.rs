@@ -1,0 +1,68 @@
+//! Fleet-audit demo: run a batch of differential audits — every known
+//! case of the evaluation suite plus a cross-system LLM serving pair —
+//! concurrently over the bounded worker pool, and print the ranked
+//! cross-system waste report.
+//!
+//! ```sh
+//! cargo run --release --example fleet_audit [-- --workers 8 --pairs 12]
+//! ```
+
+use magneton::cases;
+use magneton::coordinator::fleet::FleetAudit;
+use magneton::coordinator::SysRun;
+use magneton::energy::DeviceSpec;
+use magneton::report;
+use magneton::systems::llm;
+use magneton::systems::SystemId;
+use magneton::util::cli::Args;
+use magneton::util::table::fmt_joules;
+use magneton::util::Prng;
+
+fn main() {
+    let args = Args::from_env();
+    let mut fleet = FleetAudit::new(DeviceSpec::h200_sim());
+    fleet.workers = args.get_parse("workers", fleet.workers);
+    let max_pairs: usize = args.get_parse("pairs", 12usize);
+
+    let mut rng = Prng::new(args.get_parse("seed", 2026u64));
+
+    // the paper's known-issue suite, one audit job per case
+    for s in cases::known_cases().into_iter().take(max_pairs.saturating_sub(1)) {
+        let (a, b) = (s.build)(&mut rng);
+        fleet.add_pair(s.id, a, b);
+    }
+
+    // plus a cross-system serving pair (Fig 5 style): HF vs vLLM on the
+    // same GPT-2-shaped workload
+    let params = llm::TransformerParams::new(&mut rng, llm::LlmSpec::gpt2_sim());
+    let hf = SysRun::new(
+        "mini-hf",
+        llm::hf_dispatcher(),
+        llm::default_env(SystemId::MiniHf),
+        llm::build_llm(&params, &llm::LlmBuildOpts::hf()),
+    );
+    let vllm = SysRun::new(
+        "mini-vllm",
+        llm::vllm_dispatcher(),
+        llm::default_env(SystemId::MiniVllm),
+        llm::build_llm(&params, &llm::LlmBuildOpts::vllm()),
+    );
+    fleet.add_pair("hf-vs-vllm", hf, vllm);
+
+    println!(
+        "auditing {} system pairs over {} workers...\n",
+        fleet.len(),
+        fleet.workers
+    );
+    let r = fleet.run();
+    print!("{}", report::render_fleet(&r));
+
+    if let Some(top) = r.entries.first() {
+        println!(
+            "\nworst offender: {} ({} wasted, {} findings)",
+            top.name,
+            fmt_joules(top.wasted_j),
+            top.findings
+        );
+    }
+}

@@ -34,7 +34,7 @@ fn ground_truth(a: &magneton::exec::RunArtifacts, b: &magneton::exec::RunArtifac
             return None;
         }
         let mut v = t.to_vec();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(f32::total_cmp);
         Some(v)
     };
     for i in 0..a.graph.len() {

@@ -1,0 +1,132 @@
+//! Fleet-scaling bench: (1) candidate-index equivalent-tensor matching
+//! vs the all-pairs scan on growing graph sizes, and (2) a concurrent
+//! `FleetAudit` of many system pairs over the bounded worker pool.
+//!
+//! The indexed path buckets fingerprints on `(numel, quantized
+//! Frobenius band)` so each query touches a small candidate set; both
+//! paths must return identical EqSets (also enforced by a property
+//! test in `matching::tests`), and on graphs ≥ 200 nodes the index
+//! must beat the all-pairs wall time.
+
+use magneton::cases;
+use magneton::coordinator::fleet::FleetAudit;
+use magneton::coordinator::Magneton;
+use magneton::energy::DeviceSpec;
+use magneton::fingerprint::RustMomentEngine;
+use magneton::matching::{fingerprint_run, pairs_from_fingerprints, MatchOptions};
+use magneton::report;
+use magneton::systems::llm;
+use magneton::systems::SystemId;
+use magneton::util::bench::{banner, persist, time_once};
+use magneton::util::pool;
+use magneton::util::table::{fmt_us, Table};
+use magneton::util::Prng;
+
+/// Best-of-3 wall time of one pair-discovery strategy, µs.
+fn best_of_3(
+    fa: &[Option<magneton::fingerprint::Fingerprint>],
+    fb: &[Option<magneton::fingerprint::Fingerprint>],
+    eps: f64,
+    opts: MatchOptions,
+) -> (magneton::matching::EqSet, f64) {
+    let mut best = f64::INFINITY;
+    let mut eq = None;
+    for _ in 0..3 {
+        let (e, us) = time_once(|| pairs_from_fingerprints(fa, fb, eps, opts));
+        best = best.min(us);
+        eq = Some(e);
+    }
+    (eq.unwrap(), best)
+}
+
+fn main() {
+    banner(
+        "Fleet scaling",
+        "Indexed vs all-pairs tensor matching + concurrent FleetAudit over a bounded pool",
+    );
+    let mag = Magneton::new(DeviceSpec::h200_sim());
+    let mut rng = Prng::new(2026);
+
+    // --- part 1: matching scalability -----------------------------------
+    let mut t = Table::new(vec![
+        "workload", "|G1|", "|G2|", "eq pairs", "all-pairs", "indexed", "speedup",
+    ]);
+    let mut csv = String::from("workload,n1,n2,exhaustive_us,indexed_us\n");
+    for (label, layers) in [("small", 2usize), ("gpt2-scale", 6), ("llama8b-scale", 14)] {
+        let params = llm::TransformerParams::new(&mut rng, llm::LlmSpec::llama_sim(layers));
+        let a = magneton::coordinator::SysRun::new(
+            "hf",
+            llm::hf_dispatcher(),
+            llm::default_env(SystemId::MiniHf),
+            llm::build_llm(&params, &llm::LlmBuildOpts::hf()),
+        );
+        let b = magneton::coordinator::SysRun::new(
+            "vllm",
+            llm::vllm_dispatcher(),
+            llm::default_env(SystemId::MiniVllm),
+            llm::build_llm(&params, &llm::LlmBuildOpts::vllm()),
+        );
+        let ra = mag.run_side(&a);
+        let rb = mag.run_side(&b);
+        let threads = pool::default_threads();
+        let fa = fingerprint_run(&ra, &RustMomentEngine, threads);
+        let fb = fingerprint_run(&rb, &RustMomentEngine, threads);
+
+        let (eq_slow, slow_us) =
+            best_of_3(&fa, &fb, mag.eps, MatchOptions { exhaustive: true });
+        let (eq_fast, fast_us) =
+            best_of_3(&fa, &fb, mag.eps, MatchOptions { exhaustive: false });
+        assert_eq!(eq_slow, eq_fast, "{label}: indexed EqSet diverges from exhaustive");
+
+        let n1 = ra.graph.len();
+        let n2 = rb.graph.len();
+        if n1.min(n2) >= 200 {
+            assert!(
+                fast_us < slow_us,
+                "{label}: indexed ({}) not faster than all-pairs ({}) on {}x{} nodes",
+                fmt_us(fast_us),
+                fmt_us(slow_us),
+                n1,
+                n2
+            );
+        }
+        t.row(vec![
+            label.to_string(),
+            n1.to_string(),
+            n2.to_string(),
+            eq_fast.len().to_string(),
+            fmt_us(slow_us),
+            fmt_us(fast_us),
+            format!("{:.1}x", slow_us / fast_us.max(1e-9)),
+        ]);
+        csv.push_str(&format!("{label},{n1},{n2},{slow_us:.0},{fast_us:.0}\n"));
+    }
+    let part1 = t.render();
+    println!("{part1}");
+
+    // --- part 2: fleet audit over the evaluation suite -------------------
+    let mut fleet = FleetAudit::new(DeviceSpec::h200_sim());
+    let mut fleet_rng = Prng::new(2027);
+    let scenarios: Vec<cases::Scenario> =
+        cases::known_cases().into_iter().take(8).collect();
+    assert!(scenarios.len() >= 8, "need at least 8 pairs for the fleet bench");
+    for s in &scenarios {
+        let (a, b) = (s.build)(&mut fleet_rng);
+        fleet.add_pair(s.id, a, b);
+    }
+    let (fleet_report, fleet_us) = time_once(|| fleet.run());
+
+    // aggregation invariants: totals equal per-entry sums
+    assert_eq!(fleet_report.entries.len(), 8);
+    let findings_sum: usize = fleet_report.entries.iter().map(|e| e.findings).sum();
+    assert_eq!(fleet_report.total_findings, findings_sum);
+    let waste_sum: f64 = fleet_report.entries.iter().map(|e| e.wasted_j).sum();
+    assert!((fleet_report.total_wasted_j - waste_sum).abs() < 1e-9);
+    assert!(fleet_report.flagged() > 0, "evaluation suite should flag waste");
+
+    let part2 = report::render_fleet(&fleet_report);
+    println!("{part2}");
+    println!("fleet wall time: {} over {} workers", fmt_us(fleet_us), fleet_report.workers);
+
+    persist("fleet_scaling", &format!("{part1}\n{part2}"), Some(&csv));
+}

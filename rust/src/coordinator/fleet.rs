@@ -1,0 +1,235 @@
+//! Fleet-scale differential auditing (the multi-workload layer the
+//! ROADMAP's north star asks for): run N system pairs concurrently over
+//! a bounded worker pool and aggregate their [`AuditOutcome`]s into a
+//! ranked cross-system waste report.
+//!
+//! Each worker owns its private [`Magneton`] coordinator (the Rust
+//! moment engine is zero-sized, so per-worker construction is free) and
+//! the pairs fan out through [`pool::par_map`], which bounds concurrency
+//! at [`FleetAudit::workers`] while preserving submission order before
+//! the final ranking — results are therefore deterministic regardless
+//! of worker count.
+
+use std::time::Instant;
+
+use crate::coordinator::{AuditOutcome, Magneton, SysRun};
+use crate::detect::DetectConfig;
+use crate::energy::DeviceSpec;
+use crate::exec::ExecOptions;
+use crate::util::pool;
+
+/// One named audit job: two systems on the same workload.
+pub struct FleetPair {
+    pub name: String,
+    pub a: SysRun,
+    pub b: SysRun,
+}
+
+/// The aggregated result of one pair's audit.
+pub struct FleetEntry {
+    pub name: String,
+    pub outcome: AuditOutcome,
+    /// Joules lost to genuine (non-trade-off) waste findings.
+    pub wasted_j: f64,
+    pub findings: usize,
+    pub tradeoffs: usize,
+}
+
+/// A finished fleet audit, entries ranked most-wasteful first.
+pub struct FleetReport {
+    pub entries: Vec<FleetEntry>,
+    pub total_wasted_j: f64,
+    pub total_findings: usize,
+    /// End-to-end wall time of the fleet run, µs.
+    pub wall_time_us: f64,
+    pub workers: usize,
+}
+
+impl FleetReport {
+    /// Pairs where Magneton flagged at least one finding.
+    pub fn flagged(&self) -> usize {
+        self.entries.iter().filter(|e| e.findings > 0).count()
+    }
+}
+
+/// Joules attributable to genuine waste in one audit (the ranking key):
+/// the absolute energy gap of every non-trade-off finding.
+pub fn waste_joules(outcome: &AuditOutcome) -> f64 {
+    outcome
+        .findings
+        .iter()
+        .filter(|f| !f.is_tradeoff)
+        .map(|f| (f.energy_a_j - f.energy_b_j).abs())
+        .sum()
+}
+
+/// Batch coordinator: queue [`SysRun`] pairs, then [`FleetAudit::run`]
+/// them over a bounded worker pool.
+pub struct FleetAudit {
+    pub device: DeviceSpec,
+    /// Tensor-equivalence tolerance ε (see [`Magneton::eps`]).
+    pub eps: f64,
+    pub cfg: DetectConfig,
+    pub exec_opts: ExecOptions,
+    /// Maximum concurrent audits.
+    pub workers: usize,
+    pairs: Vec<FleetPair>,
+}
+
+impl FleetAudit {
+    pub fn new(device: DeviceSpec) -> FleetAudit {
+        let defaults = Magneton::new(device.clone());
+        FleetAudit {
+            device,
+            eps: defaults.eps,
+            cfg: defaults.cfg,
+            exec_opts: defaults.exec_opts,
+            workers: pool::default_threads(),
+            pairs: Vec::new(),
+        }
+    }
+
+    /// Queue one audit job.
+    pub fn add_pair(&mut self, name: &str, a: SysRun, b: SysRun) -> &mut Self {
+        self.pairs.push(FleetPair { name: name.to_string(), a, b });
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.pairs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pairs.is_empty()
+    }
+
+    /// Run every queued pair over at most [`FleetAudit::workers`]
+    /// concurrent audits and rank the outcomes by wasted joules.
+    pub fn run(&self) -> FleetReport {
+        let t0 = Instant::now();
+        let workers = self.workers.max(1).min(self.pairs.len().max(1));
+        let mut entries: Vec<FleetEntry> = pool::par_map(&self.pairs, workers, |p| {
+            let mut mag = Magneton::new(self.device.clone());
+            mag.eps = self.eps;
+            mag.cfg = self.cfg;
+            mag.exec_opts = self.exec_opts.clone();
+            let outcome = mag.audit(&p.a, &p.b);
+            let wasted_j = waste_joules(&outcome);
+            let findings = outcome.findings.len();
+            let tradeoffs = outcome.findings.iter().filter(|f| f.is_tradeoff).count();
+            FleetEntry { name: p.name.clone(), outcome, wasted_j, findings, tradeoffs }
+        });
+        // rank most-wasteful first; tie-break on name so the report is
+        // stable across worker counts
+        entries.sort_by(|x, y| y.wasted_j.total_cmp(&x.wasted_j).then_with(|| x.name.cmp(&y.name)));
+        let total_wasted_j = entries.iter().map(|e| e.wasted_j).sum();
+        let total_findings = entries.iter().map(|e| e.findings).sum();
+        FleetReport {
+            entries,
+            total_wasted_j,
+            total_findings,
+            wall_time_us: t0.elapsed().as_secs_f64() * 1e6,
+            workers,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dispatch::{Env, KernelChoice, Routine};
+    use crate::energy::ComputeUnit;
+    use crate::exec::{Dispatcher, Program};
+    use crate::graph::{Graph, OpKind};
+    use crate::tensor::Tensor;
+    use crate::util::Prng;
+
+    /// A small matmul system whose kernel efficiency is `eff` (1.0 =
+    /// optimal; lower burns extra energy at equal time).
+    fn mk_run(label: &str, seed: u64, eff: f64) -> SysRun {
+        let mut rng = Prng::new(seed);
+        let x = Tensor::randn(&mut rng, &[128, 256]);
+        let w = Tensor::randn(&mut rng, &[256, 256]);
+        let mut g = Graph::new(label);
+        let xi = g.add(OpKind::Input, &[], "x");
+        let wi = g.add(OpKind::Weight, &[], "w");
+        let m = g.add(OpKind::MatMul, &[xi, wi], "proj");
+        g.add(OpKind::Output, &[m], "out");
+        let mut prog = Program::new(g);
+        prog.feed(0, x);
+        prog.feed(1, w);
+        let mut disp = Dispatcher::new();
+        disp.register(
+            "matmul",
+            Routine::direct(
+                "torch.matmul",
+                vec![],
+                KernelChoice::new("gemm", ComputeUnit::TensorCore).quality(eff, 1.0, 1.0),
+            ),
+        );
+        SysRun::new(label, disp, Env::new(), prog)
+    }
+
+    fn fleet_of(n: usize, workers: usize) -> FleetReport {
+        let mut fleet = FleetAudit::new(DeviceSpec::h200_sim());
+        fleet.workers = workers;
+        for i in 0..n {
+            // alternate wasteful and clean pairs; share the workload seed
+            // within a pair so the two sides compute the same tensors
+            let eff = if i % 2 == 0 { 0.6 } else { 1.0 };
+            fleet.add_pair(
+                &format!("pair-{i}"),
+                mk_run("sys-a", 40 + i as u64, eff),
+                mk_run("sys-b", 40 + i as u64, 1.0),
+            );
+        }
+        fleet.run()
+    }
+
+    #[test]
+    fn fleet_audits_all_pairs_and_ranks_by_waste() {
+        let r = fleet_of(8, 4);
+        assert_eq!(r.entries.len(), 8);
+        // wasteful pairs flagged, clean pairs silent
+        assert_eq!(r.flagged(), 4);
+        // ranking is descending in wasted joules
+        for w in r.entries.windows(2) {
+            assert!(w[0].wasted_j >= w[1].wasted_j);
+        }
+        // aggregates match per-entry sums
+        let sum: f64 = r.entries.iter().map(|e| e.wasted_j).sum();
+        assert!((r.total_wasted_j - sum).abs() < 1e-12);
+        assert_eq!(
+            r.total_findings,
+            r.entries.iter().map(|e| e.findings).sum::<usize>()
+        );
+        assert!(r.total_wasted_j > 0.0);
+    }
+
+    #[test]
+    fn fleet_result_independent_of_worker_count() {
+        let serial = fleet_of(6, 1);
+        let parallel = fleet_of(6, 8);
+        assert_eq!(serial.entries.len(), parallel.entries.len());
+        for (s, p) in serial.entries.iter().zip(parallel.entries.iter()) {
+            assert_eq!(s.name, p.name);
+            assert_eq!(s.findings, p.findings);
+            assert!((s.wasted_j - p.wasted_j).abs() < 1e-12, "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn clean_fleet_reports_no_waste() {
+        let mut fleet = FleetAudit::new(DeviceSpec::h200_sim());
+        for i in 0..3 {
+            fleet.add_pair(
+                &format!("clean-{i}"),
+                mk_run("a", 7, 1.0),
+                mk_run("b", 7, 1.0),
+            );
+        }
+        let r = fleet.run();
+        assert_eq!(r.flagged(), 0);
+        assert_eq!(r.total_wasted_j, 0.0);
+    }
+}

@@ -1,6 +1,9 @@
 //! End-to-end Magneton pipeline (Fig 6): run two systems on the same
 //! workload → profile energy per operator → match semantically
 //! equivalent subgraphs → detect waste → diagnose root causes.
+//! [`fleet`] batches many such audits over a bounded worker pool.
+
+pub mod fleet;
 
 use std::time::Instant;
 

@@ -71,14 +71,27 @@ impl Finding {
     }
 }
 
-fn region_cost(arts: &RunArtifacts, nodes: &[usize]) -> (f64, f64) {
+/// Per-node `(energy_j, time_us)` accumulated over a run's kernel
+/// records in one pass, so region costing is `O(records + Σ|region|)`
+/// instead of the old `O(records × |region|)` scan per region.
+fn per_node_costs(arts: &RunArtifacts) -> Vec<(f64, f64)> {
+    let mut costs = vec![(0.0, 0.0); arts.graph.len()];
+    for r in &arts.records {
+        if let Some(c) = costs.get_mut(r.node) {
+            c.0 += r.energy_j;
+            c.1 += r.time_us;
+        }
+    }
+    costs
+}
+
+fn region_cost(costs: &[(f64, f64)], nodes: &[usize]) -> (f64, f64) {
     let mut e = 0.0;
     let mut t = 0.0;
-    for r in &arts.records {
-        if nodes.contains(&r.node) {
-            e += r.energy_j;
-            t += r.time_us;
-        }
+    for &n in nodes {
+        let (ne, nt) = costs[n];
+        e += ne;
+        t += nt;
     }
     (e, t)
 }
@@ -109,10 +122,12 @@ pub fn detect(
     cfg: &DetectConfig,
 ) -> Vec<Finding> {
     let output_ok = outputs_agree(a, b, cfg.output_tolerance);
+    let costs_a = per_node_costs(a);
+    let costs_b = per_node_costs(b);
     let mut findings = Vec::new();
     for region in regions {
-        let (ea, ta) = region_cost(a, &region.a_nodes);
-        let (eb, tb) = region_cost(b, &region.b_nodes);
+        let (ea, ta) = region_cost(&costs_a, &region.a_nodes);
+        let (eb, tb) = region_cost(&costs_b, &region.b_nodes);
         if ea <= 0.0 && eb <= 0.0 {
             continue;
         }
@@ -154,7 +169,7 @@ pub fn detect(
     findings.sort_by(|x, y| {
         let ka = x.energy_a_j.max(x.energy_b_j) * x.diff_frac;
         let kb = y.energy_a_j.max(y.energy_b_j) * y.diff_frac;
-        kb.partial_cmp(&ka).unwrap()
+        kb.total_cmp(&ka)
     });
     findings
 }
@@ -254,5 +269,24 @@ mod tests {
     fn outputs_agree_guard() {
         let (a, b) = build(0.55);
         assert!(outputs_agree(&a, &b, 0.01));
+    }
+
+    /// Regression: a NaN energy record (e.g. a corrupted power sample)
+    /// must not panic the detector's ranking sort (`f64::total_cmp`).
+    #[test]
+    fn nan_energy_record_does_not_panic() {
+        let (mut a, b) = build(0.55);
+        // poison one record and make sure multiple findings still rank
+        if let Some(r) = a.records.first_mut() {
+            r.energy_j = f64::NAN;
+        }
+        let (_eq, regions) = match_runs(&a, &b, 1e-3);
+        let findings = detect(&a, &b, &regions, &DetectConfig::default());
+        // sort must complete and respect the total order (descending)
+        for w in findings.windows(2) {
+            let ka = w[0].energy_a_j.max(w[0].energy_b_j) * w[0].diff_frac;
+            let kb = w[1].energy_a_j.max(w[1].energy_b_j) * w[1].diff_frac;
+            assert!(ka.total_cmp(&kb).is_ge());
+        }
     }
 }

@@ -240,9 +240,7 @@ pub fn diagnose(
         .iter()
         .zip(eff_kernels.iter())
         .max_by(|(w1, e1), (w2, e2)| {
-            (w1.energy_j - e1.energy_j)
-                .partial_cmp(&(w2.energy_j - e2.energy_j))
-                .unwrap()
+            (w1.energy_j - e1.energy_j).total_cmp(&(w2.energy_j - e2.energy_j))
         });
     let subject = match worst {
         Some((w, e)) => format!(

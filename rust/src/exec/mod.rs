@@ -151,7 +151,7 @@ impl RunArtifacts {
             *agg.entry(r.op.name().to_string()).or_insert(0.0) += r.energy_j;
         }
         let mut v: Vec<(String, f64)> = agg.into_iter().collect();
-        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v.sort_by(|a, b| b.1.total_cmp(&a.1));
         v
     }
 }

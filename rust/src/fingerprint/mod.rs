@@ -116,9 +116,15 @@ pub fn fingerprint_with(engine: &dyn MomentEngine, t: &Tensor) -> Fingerprint {
     // canonical sort: by moment vector, so two layouts of the same data
     // produce the same sequence
     unfoldings.sort_by(|a, b| {
-        a.moments
-            .partial_cmp(&b.moments)
-            .unwrap_or(std::cmp::Ordering::Equal)
+        // lexicographic total order over moment vectors (NaN-safe)
+        let lex = a
+            .moments
+            .iter()
+            .zip(b.moments.iter())
+            .map(|(x, y)| x.total_cmp(y))
+            .find(|o| o.is_ne())
+            .unwrap_or(std::cmp::Ordering::Equal);
+        lex.then(a.moments.len().cmp(&b.moments.len()))
     });
     let fro = unfoldings
         .first()

@@ -17,9 +17,10 @@
 //! * evaluation fleet — [`systems`], [`workload`], [`cases`], [`profiler`]
 //! * integration — [`runtime`] (PJRT/XLA), [`coordinator`], [`report`]
 //!
-//! See `DESIGN.md` for the per-experiment index and the substitution table
-//! (simulated GPU in place of H200 + physical power meter, mini ML systems
-//! in place of vLLM/SGLang/..., etc.).
+//! See `DESIGN.md` (repository root) for the module map, per-experiment
+//! index, and the substitution table (simulated GPU in place of H200 +
+//! physical power meter, mini ML systems in place of vLLM/SGLang/...,
+//! etc.).
 
 pub mod util;
 pub mod prop;
@@ -42,5 +43,35 @@ pub mod runtime;
 pub mod coordinator;
 pub mod report;
 
+/// Crate-wide error type (the offline registry has no `anyhow`): a plain
+/// message, optionally chained with context lines by [`Error::context`].
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Error {
+        Error(m.into())
+    }
+
+    /// Prepend a context line, `anyhow::Context`-style.
+    pub fn context(self, ctx: impl std::fmt::Display) -> Error {
+        Error(format!("{ctx}: {}", self.0))
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error(e.to_string())
+    }
+}
+
 /// Crate-wide result type.
-pub type Result<T> = anyhow::Result<T>;
+pub type Result<T> = std::result::Result<T, Error>;

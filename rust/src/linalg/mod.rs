@@ -74,7 +74,7 @@ fn one_sided_jacobi(col: &mut [f64], rows: usize, cols: usize) -> Vec<f32> {
             s.sqrt() as f32
         })
         .collect();
-    sv.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    sv.sort_by(|a, b| b.total_cmp(a));
     sv
 }
 
@@ -120,7 +120,7 @@ pub fn eigvalsh(a: &Tensor) -> Vec<f32> {
         }
     }
     let mut ev: Vec<f32> = (0..n).map(|i| m[idx(i, i)] as f32).collect();
-    ev.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    ev.sort_by(|a, b| b.total_cmp(a));
     ev
 }
 
@@ -372,7 +372,7 @@ mod tests {
             let argmax = row
                 .iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .max_by(|a, b| a.1.total_cmp(b.1))
                 .unwrap()
                 .0;
             assert_eq!(argmax, freq_bin, "frame {f}: {row:?}");

@@ -1,23 +1,29 @@
 //! Semantically-equivalent subgraph matching (paper §4.2, Algorithm 1).
 //!
 //! Step 1 ([`find_equivalent_tensors`]) fingerprints every recorded
-//! node-output tensor in both runs and finds cross-system pairs whose
-//! SVD-invariant sets match within ε — `O(|G₁|·|G₂|)` comparisons with a
-//! cheap (numel, ‖·‖_F) prefilter and fingerprints computed once per
-//! node (fanned out over worker threads).
+//! node-output tensor in both runs (fanned out over worker threads) and
+//! finds cross-system pairs whose SVD-invariant sets match within ε.
+//! Instead of the all-pairs `O(|G₁|·|G₂|)` comparison, a bucketed
+//! [`CandidateIndex`] keyed on `(numel, quantized Frobenius band)`
+//! restricts each query tensor to a small candidate set that provably
+//! contains every pair the exhaustive prefilter would accept; the
+//! exhaustive scan is kept behind [`MatchOptions::exhaustive`] and a
+//! property test asserts both paths produce identical [`EqSet`]s.
 //!
 //! Step 2 ([`recursive_match`]) is the topology-aware divide-and-conquer:
 //! build dominator trees, walk the dominator paths of both graphs, keep
 //! the longest order-preserving chain of equivalent-tensor pairs as cut
 //! points, split both graphs at the cuts, and recurse into the matching
-//! segments. Segments that admit no further cuts are emitted as matched
-//! regions — the units Magneton compares for energy.
+//! segments — independent segments are dispatched in parallel through
+//! [`util::pool`](crate::util::pool). Segments that admit no further
+//! cuts are emitted as matched regions — the units Magneton compares
+//! for energy.
 //!
 //! [`brute_force_match`] is the strawman baseline of Fig 9: enumerate
 //! interval pairs of the two topological orders and test boundary
 //! equivalence, with combinatorial cost on large graphs.
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::exec::RunArtifacts;
 use crate::fingerprint::{fingerprint_with, Fingerprint, MomentEngine, RustMomentEngine};
@@ -26,7 +32,7 @@ use crate::graph::{Graph, NodeId, OpKind};
 use crate::util::pool;
 
 /// Pairs of equivalent tensors `(node_in_A, node_in_B)`.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct EqSet {
     pub pairs: Vec<(NodeId, NodeId)>,
     set: BTreeSet<(NodeId, NodeId)>,
@@ -55,6 +61,15 @@ impl EqSet {
 /// tensors (scalars, small biases) collide across unrelated sites.
 pub const MIN_ANCHOR_NUMEL: usize = 8;
 
+/// Options for the equivalent-tensor search.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MatchOptions {
+    /// Use the all-pairs `O(|G₁|·|G₂|)` scan instead of the candidate
+    /// index. Kept as the validation/strawman path; both paths return
+    /// identical [`EqSet`]s (enforced by a property test).
+    pub exhaustive: bool,
+}
+
 /// Fingerprint every recorded tensor of a run (indexed by node id).
 pub fn fingerprint_run(
     arts: &RunArtifacts,
@@ -78,31 +93,166 @@ pub fn fingerprint_run(
     pool::par_map(&jobs, threads, |t| t.map(|t| fingerprint_with(engine, t)))
 }
 
-/// Pairwise equivalent-tensor discovery at tolerance `eps`.
+/// The shared pair predicate: numel gate, relative-Frobenius prefilter
+/// at `4·max(eps, 1e-12)`, then the full invariant match. Both the
+/// exhaustive scan and the candidate index accept exactly the pairs
+/// this function accepts.
+fn pair_matches(fi: &Fingerprint, fj: &Fingerprint, eps: f64) -> bool {
+    if fi.numel != fj.numel {
+        return false;
+    }
+    let fro_gap = (fi.fro - fj.fro).abs() / fi.fro.abs().max(fj.fro.abs()).max(1e-30);
+    if fro_gap > fro_delta(eps) {
+        return false;
+    }
+    fi.matches(fj, eps)
+}
+
+/// Width of the Frobenius prefilter gate.
+fn fro_delta(eps: f64) -> f64 {
+    eps.max(1e-12) * 4.0
+}
+
+/// Bucketed candidate index over one side's fingerprints, keyed on
+/// `(numel, quantized log-Frobenius band)`.
+///
+/// Two fingerprints can only pass the Frobenius gate (relative gap
+/// ≤ δ) if their log-norms differ by at most `−ln(1−δ)`, so a query at
+/// band `b` probes bands `b−r ..= b+r` with
+/// `r = ⌈−ln(1−δ)/ln(1+δ)⌉ + 1` and provably sees every admissible
+/// candidate. Zero-norm tensors live in a dedicated bucket (a zero vs
+/// non-zero pair has gap 1 > δ for δ < 1). For δ ≥ 1 the gate accepts
+/// everything and the index degenerates to the exhaustive scan.
+pub struct CandidateIndex {
+    buckets: BTreeMap<(usize, i64), Vec<NodeId>>,
+    /// Node ids with a fingerprint, ascending (δ ≥ 1 fallback).
+    all: Vec<NodeId>,
+    band_w: f64,
+    radius: i64,
+    degenerate: bool,
+}
+
+/// Bucket key for zero-norm tensors (ln is undefined there).
+const ZERO_BAND: i64 = i64::MIN;
+
+impl CandidateIndex {
+    /// Build the index over `fps` (one side's per-node fingerprints).
+    pub fn build(fps: &[Option<Fingerprint>], eps: f64) -> CandidateIndex {
+        let delta = fro_delta(eps);
+        let degenerate = delta >= 1.0;
+        let band_w = (1.0 + delta).ln();
+        let radius = if degenerate {
+            0
+        } else {
+            (-(1.0 - delta).ln() / band_w).ceil() as i64 + 1
+        };
+        let mut buckets: BTreeMap<(usize, i64), Vec<NodeId>> = BTreeMap::new();
+        let mut all = Vec::new();
+        for (j, fp) in fps.iter().enumerate() {
+            let Some(fp) = fp else { continue };
+            all.push(j);
+            buckets
+                .entry((fp.numel, Self::band(fp.fro, band_w)))
+                .or_default()
+                .push(j);
+        }
+        CandidateIndex { buckets, all, band_w, radius, degenerate }
+    }
+
+    fn band(fro: f64, band_w: f64) -> i64 {
+        if fro <= 0.0 {
+            ZERO_BAND
+        } else {
+            (fro.ln() / band_w).floor() as i64
+        }
+    }
+
+    /// Node ids whose fingerprints could pass the Frobenius gate against
+    /// `q`, in ascending order. A superset of the true matches; never
+    /// misses one.
+    pub fn candidates(&self, q: &Fingerprint) -> Vec<NodeId> {
+        if self.degenerate {
+            return self.all.clone();
+        }
+        let qb = Self::band(q.fro, self.band_w);
+        if qb == ZERO_BAND {
+            return self
+                .buckets
+                .get(&(q.numel, ZERO_BAND))
+                .cloned()
+                .unwrap_or_default();
+        }
+        let mut out = Vec::new();
+        for b in qb.saturating_sub(self.radius)..=qb.saturating_add(self.radius) {
+            if let Some(v) = self.buckets.get(&(q.numel, b)) {
+                out.extend_from_slice(v);
+            }
+        }
+        // bands are probed in ascending order and each node id lives in
+        // exactly one bucket, but ids across bands interleave
+        out.sort_unstable();
+        out
+    }
+
+    /// Total number of non-empty buckets (introspection/benchmarks).
+    pub fn bucket_count(&self) -> usize {
+        self.buckets.len()
+    }
+}
+
+/// Pairwise equivalent-tensor discovery at tolerance `eps` using the
+/// default (indexed) strategy.
 pub fn find_equivalent_tensors(
     a: &RunArtifacts,
     b: &RunArtifacts,
     eps: f64,
     engine: &dyn MomentEngine,
 ) -> EqSet {
+    find_equivalent_tensors_with(a, b, eps, engine, MatchOptions::default())
+}
+
+/// Pairwise equivalent-tensor discovery with an explicit strategy.
+pub fn find_equivalent_tensors_with(
+    a: &RunArtifacts,
+    b: &RunArtifacts,
+    eps: f64,
+    engine: &dyn MomentEngine,
+    opts: MatchOptions,
+) -> EqSet {
     let threads = pool::default_threads();
     let fa = fingerprint_run(a, engine, threads);
     let fb = fingerprint_run(b, engine, threads);
+    pairs_from_fingerprints(&fa, &fb, eps, opts)
+}
+
+/// The pair-discovery stage alone (fingerprints already computed).
+/// Public so benchmarks can time it apart from fingerprinting.
+pub fn pairs_from_fingerprints(
+    fa: &[Option<Fingerprint>],
+    fb: &[Option<Fingerprint>],
+    eps: f64,
+    opts: MatchOptions,
+) -> EqSet {
     let mut pairs = Vec::new();
-    for (i, fi) in fa.iter().enumerate() {
-        let Some(fi) = fi else { continue };
-        for (j, fj) in fb.iter().enumerate() {
-            let Some(fj) = fj else { continue };
-            // prefilter: numel + Frobenius gate before full invariant match
-            if fi.numel != fj.numel {
-                continue;
+    if opts.exhaustive {
+        for (i, fi) in fa.iter().enumerate() {
+            let Some(fi) = fi else { continue };
+            for (j, fj) in fb.iter().enumerate() {
+                let Some(fj) = fj else { continue };
+                if pair_matches(fi, fj, eps) {
+                    pairs.push((i, j));
+                }
             }
-            let fro_gap = (fi.fro - fj.fro).abs() / fi.fro.abs().max(fj.fro.abs()).max(1e-30);
-            if fro_gap > eps.max(1e-12) * 4.0 {
-                continue;
-            }
-            if fi.matches(fj, eps) {
-                pairs.push((i, j));
+        }
+    } else {
+        let index = CandidateIndex::build(fb, eps);
+        for (i, fi) in fa.iter().enumerate() {
+            let Some(fi) = fi else { continue };
+            for j in index.candidates(fi) {
+                let fj = fb[j].as_ref().expect("indexed nodes have fingerprints");
+                if pair_matches(fi, fj, eps) {
+                    pairs.push((i, j));
+                }
             }
         }
     }
@@ -122,15 +272,20 @@ impl Region {
     }
 }
 
+/// Below this depth, independent segment recursions are dispatched over
+/// the worker pool; deeper levels recurse sequentially so nested calls
+/// do not oversubscribe threads.
+const PARALLEL_DEPTH: usize = 1;
+
 /// Algorithm 1: recursive dominator-path matching. `ga`/`gb` are whole
 /// graphs whose inputs/outputs are assumed semantically equivalent
-/// (same workload fed to both systems).
+/// (same workload fed to both systems). Top-level segments run in
+/// parallel; the emitted region order is identical to the sequential
+/// recursion.
 pub fn recursive_match(ga: &Graph, gb: &Graph, eq: &EqSet) -> Vec<Region> {
     let a_all: Vec<NodeId> = (0..ga.len()).collect();
     let b_all: Vec<NodeId> = (0..gb.len()).collect();
-    let mut out = Vec::new();
-    match_sub(ga, gb, a_all, b_all, eq, &mut out, 0);
-    out
+    match_sub(ga, gb, a_all, b_all, eq, 0)
 }
 
 fn match_sub(
@@ -139,15 +294,13 @@ fn match_sub(
     a_nodes: Vec<NodeId>,
     b_nodes: Vec<NodeId>,
     eq: &EqSet,
-    out: &mut Vec<Region>,
     depth: usize,
-) {
+) -> Vec<Region> {
     if a_nodes.is_empty() && b_nodes.is_empty() {
-        return;
+        return Vec::new();
     }
     if a_nodes.is_empty() || b_nodes.is_empty() || depth > 64 {
-        out.push(Region { a_nodes, b_nodes });
-        return;
+        return vec![Region { a_nodes, b_nodes }];
     }
     // induced subgraphs + id maps (new -> old)
     let (ia, map_a) = ga.induced(&a_nodes, "a");
@@ -174,10 +327,10 @@ fn match_sub(
 
     if chain.len() <= 1 {
         // no interior structure to cut on: this pair is one region
-        out.push(Region { a_nodes, b_nodes });
-        return;
+        return vec![Region { a_nodes, b_nodes }];
     }
 
+    let mut out = Vec::new();
     // every cut pair is itself a matched (single-op) region
     for &(i, j) in &chain {
         out.push(Region {
@@ -201,14 +354,36 @@ fn match_sub(
     }
     boundaries.push((Some(chain.len() - 1), None));
 
-    for (lo, hi) in boundaries {
-        let a_seg = seg_a(lo.map(|w| chain[w].0), hi.map(|w| chain[w].0));
-        let b_seg = seg_b(lo.map(|w| chain[w].1), hi.map(|w| chain[w].1));
-        if a_seg.is_empty() && b_seg.is_empty() {
-            continue;
+    let jobs: Vec<(Vec<NodeId>, Vec<NodeId>)> = boundaries
+        .into_iter()
+        .filter_map(|(lo, hi)| {
+            let a_seg = seg_a(lo.map(|w| chain[w].0), hi.map(|w| chain[w].0));
+            let b_seg = seg_b(lo.map(|w| chain[w].1), hi.map(|w| chain[w].1));
+            if a_seg.is_empty() && b_seg.is_empty() {
+                None
+            } else {
+                Some((a_seg, b_seg))
+            }
+        })
+        .collect();
+
+    if depth < PARALLEL_DEPTH && jobs.len() > 1 {
+        // independent segment recursions fan out over the worker pool;
+        // par_map preserves job order, so the region order matches the
+        // sequential recursion exactly
+        let threads = pool::default_threads().min(jobs.len());
+        let results = pool::par_map(&jobs, threads, |(a_seg, b_seg)| {
+            match_sub(ga, gb, a_seg.clone(), b_seg.clone(), eq, depth + 1)
+        });
+        for r in results {
+            out.extend(r);
         }
-        match_sub(ga, gb, a_seg, b_seg, eq, out, depth + 1);
+    } else {
+        for (a_seg, b_seg) in jobs {
+            out.extend(match_sub(ga, gb, a_seg, b_seg, eq, depth + 1));
+        }
     }
+    out
 }
 
 fn invert(map: &std::collections::BTreeMap<NodeId, NodeId>) -> Vec<NodeId> {
@@ -388,6 +563,128 @@ mod tests {
         // proj1 (node 3) matches both dense1 (3) and its copy (4)
         assert!(eq.contains(3, 3));
         assert!(eq.contains(3, 4));
+    }
+
+    #[test]
+    fn indexed_matches_exhaustive_on_fixture() {
+        let (pa, pb) = two_programs();
+        let (a, b) = (run(&pa), run(&pb));
+        for eps in [1e-7, 1e-4, 1e-3, 5e-2, 0.2, 0.5] {
+            let fast = find_equivalent_tensors_with(
+                &a, &b, eps, &RustMomentEngine, MatchOptions { exhaustive: false },
+            );
+            let slow = find_equivalent_tensors_with(
+                &a, &b, eps, &RustMomentEngine, MatchOptions { exhaustive: true },
+            );
+            assert_eq!(fast, slow, "eps {eps}: indexed vs exhaustive diverge");
+        }
+    }
+
+    /// Property: on randomized program pairs the candidate index returns
+    /// exactly the exhaustive EqSet (the acceptance criterion of the
+    /// indexed pipeline).
+    #[test]
+    fn prop_indexed_eqset_identical_to_exhaustive() {
+        use crate::prop;
+        let gen = prop::Gen::new(|r| {
+            let d = r.range(8, 12);
+            let m = r.range(8, 12);
+            let x = Tensor::randn(r, &[m, d]);
+            let depth = r.range(2, 5);
+            let mk = |with_copies: bool, rr: &mut Prng| {
+                let mut g = Graph::new("rand");
+                let xi = g.add(OpKind::Input, &[], "x");
+                let mut cur = xi;
+                let mut weights: Vec<(NodeId, Tensor)> = Vec::new();
+                for l in 0..depth {
+                    match rr.below(4) {
+                        0 => {
+                            let w = g.add(OpKind::Weight, &[], "w");
+                            // weights are feeds: generated deterministically
+                            // below from the layer index
+                            weights.push((w, Tensor::randn(&mut Prng::new(1000 + l as u64), &[d, d])));
+                            cur = g.add(OpKind::MatMul, &[cur, w], "mm");
+                        }
+                        1 => cur = g.add(OpKind::Gelu, &[cur], "gelu"),
+                        2 => cur = g.add(OpKind::Tanh, &[cur], "tanh"),
+                        _ => cur = g.add(OpKind::Relu, &[cur], "relu"),
+                    }
+                    // deterministic by layer index so A's and B's op
+                    // draws from `rr` stay in sync
+                    if with_copies && l % 2 == 1 {
+                        cur = g.add(OpKind::Copy, &[cur], "copy");
+                    }
+                }
+                g.add(OpKind::Output, &[cur], "out");
+                let mut p = Program::new(g);
+                p.feed(0, x.clone());
+                for (node, t) in weights {
+                    p.feed(node, t);
+                }
+                p
+            };
+            // the two systems share the op sequence seed so their math
+            // overlaps, but B sprinkles redundant copies
+            let seq_seed = r.next_u64();
+            let pa = mk(false, &mut Prng::new(seq_seed));
+            let pb = mk(true, &mut Prng::new(seq_seed));
+            (pa, pb, r.range_f32(0.0, 1.0))
+        });
+        prop::forall("indexed == exhaustive", &gen, 25, |(pa, pb, eps_knob)| {
+            let (a, b) = (run(pa), run(pb));
+            // sweep the paper's epsilon range plus a degenerate-band case
+            let eps = match (eps_knob * 4.0) as usize {
+                0 => 1e-6,
+                1 => 1e-4,
+                2 => 1e-2,
+                _ => 0.3,
+            };
+            let fast = find_equivalent_tensors_with(
+                &a, &b, eps, &RustMomentEngine, MatchOptions { exhaustive: false },
+            );
+            let slow = find_equivalent_tensors_with(
+                &a, &b, eps, &RustMomentEngine, MatchOptions { exhaustive: true },
+            );
+            fast == slow
+        });
+    }
+
+    #[test]
+    fn candidate_index_never_misses_gate_pairs() {
+        // direct unit check on the index: every pair accepted by the
+        // Frobenius gate appears in the candidate set
+        let mut rng = Prng::new(42);
+        let tensors: Vec<Tensor> = (0..40)
+            .map(|_| {
+                let s = rng.range(3, 6);
+                Tensor::randn(&mut rng, &[s, s])
+            })
+            .collect();
+        for eps in [1e-6, 1e-3, 0.1] {
+            let fps: Vec<Option<Fingerprint>> = tensors
+                .iter()
+                .map(|t| Some(fingerprint_with(&RustMomentEngine, t)))
+                .collect();
+            let index = CandidateIndex::build(&fps, eps);
+            let delta = super::fro_delta(eps);
+            for fi in fps.iter().flatten() {
+                let cands = index.candidates(fi);
+                for (j, fj) in fps.iter().enumerate() {
+                    let fj = fj.as_ref().unwrap();
+                    if fi.numel != fj.numel {
+                        continue;
+                    }
+                    let gap = (fi.fro - fj.fro).abs()
+                        / fi.fro.abs().max(fj.fro.abs()).max(1e-30);
+                    if gap <= delta {
+                        assert!(
+                            cands.contains(&j),
+                            "eps {eps}: index missed node {j} (gap {gap:.3e})"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

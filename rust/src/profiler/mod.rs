@@ -27,7 +27,7 @@ pub struct OpReport {
 /// rows sorted by value descending. `None` if absent/unmeasured.
 pub fn rank_of(rows: &[OpReport], needle: &str) -> Option<usize> {
     let mut sorted: Vec<&OpReport> = rows.iter().collect();
-    sorted.sort_by(|a, b| b.value.partial_cmp(&a.value).unwrap());
+    sorted.sort_by(|a, b| b.value.total_cmp(&a.value));
     sorted
         .iter()
         .position(|r| r.measured && r.label.contains(needle))

@@ -1,6 +1,8 @@
-//! Report rendering: audit summaries, the Table 2 replica, and energy
-//! breakdowns (Fig 2 style), with CSV persistence under `results/`.
+//! Report rendering: audit summaries, the Table 2 replica, energy
+//! breakdowns (Fig 2 style), and the ranked cross-system fleet waste
+//! report, with CSV persistence under `results/`.
 
+use crate::coordinator::fleet::FleetReport;
 use crate::coordinator::AuditOutcome;
 use crate::exec::RunArtifacts;
 use crate::util::table::{fmt_joules, fmt_us, Table};
@@ -36,6 +38,47 @@ pub fn render_audit(name_a: &str, name_b: &str, out: &AuditOutcome) -> String {
     s
 }
 
+/// Ranked cross-system waste table for a finished fleet audit: one row
+/// per pair, most wasteful first (the ranking [`FleetReport`] computed).
+pub fn fleet_table(report: &FleetReport) -> Table {
+    let mut t = Table::new(vec![
+        "rank", "pair", "energy A", "energy B", "findings", "trade-offs", "wasted", "e2e diff",
+    ]);
+    for (i, e) in report.entries.iter().enumerate() {
+        t.row(vec![
+            (i + 1).to_string(),
+            e.name.clone(),
+            fmt_joules(e.outcome.a.total_energy_j),
+            fmt_joules(e.outcome.b.total_energy_j),
+            e.findings.to_string(),
+            e.tradeoffs.to_string(),
+            fmt_joules(e.wasted_j),
+            format!("{:.1}%", e.outcome.e2e_diff_frac * 100.0),
+        ]);
+    }
+    t
+}
+
+/// Human-readable fleet report: ranked table plus aggregate summary.
+pub fn render_fleet(report: &FleetReport) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "=== Magneton fleet audit: {} pairs, {} workers, {} ===\n",
+        report.entries.len(),
+        report.workers,
+        fmt_us(report.wall_time_us)
+    ));
+    s.push_str(&fleet_table(report).render());
+    s.push_str(&format!(
+        "total: {} wasted across {} findings in {}/{} flagged pairs\n",
+        fmt_joules(report.total_wasted_j),
+        report.total_findings,
+        report.flagged(),
+        report.entries.len()
+    ));
+    s
+}
+
 /// Fig 2-style top-k energy breakdown of a run.
 pub fn energy_breakdown(arts: &RunArtifacts, top: usize) -> Table {
     let mut t = Table::new(vec!["op", "energy", "share"]);
@@ -60,7 +103,7 @@ pub fn label_breakdown(arts: &RunArtifacts, top: usize) -> Table {
         e.1 += r.time_us;
     }
     let mut rows: Vec<(String, f64, f64)> = agg.into_iter().map(|(k, (e, t))| (k, e, t)).collect();
-    rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    rows.sort_by(|a, b| b.1.total_cmp(&a.1));
     let mut t = Table::new(vec!["site", "energy", "time"]);
     for (label, e, us) in rows.into_iter().take(top) {
         t.row(vec![label, fmt_joules(e), fmt_us(us)]);
@@ -118,5 +161,18 @@ mod tests {
         let arts = mag.run_side(&small_run());
         let t = label_breakdown(&arts, 5);
         assert!(t.len() >= 2);
+    }
+
+    #[test]
+    fn fleet_report_renders_ranked_rows() {
+        let mut fleet = crate::coordinator::fleet::FleetAudit::new(DeviceSpec::h200_sim());
+        fleet.add_pair("alpha", small_run(), small_run());
+        fleet.add_pair("beta", small_run(), small_run());
+        let r = fleet.run();
+        let s = render_fleet(&r);
+        assert!(s.contains("fleet audit"));
+        assert!(s.contains("alpha") && s.contains("beta"));
+        assert!(s.contains("total:"));
+        assert_eq!(fleet_table(&r).len(), 2);
     }
 }

@@ -190,7 +190,7 @@ pub fn topk_lastdim(a: &Tensor, k: usize) -> Tensor {
     let mut out = Vec::with_capacity(rows * k);
     for r in 0..rows {
         let mut row: Vec<f32> = v[r * last..(r + 1) * last].to_vec();
-        row.sort_by(|x, y| y.partial_cmp(x).unwrap());
+        row.sort_by(|x, y| y.total_cmp(x));
         out.extend_from_slice(&row[..k]);
     }
     let mut oshape = shape[..shape.len() - 1].to_vec();
@@ -229,7 +229,7 @@ pub fn sort_lastdim_desc(a: &Tensor) -> Tensor {
     let mut out = Vec::with_capacity(v.len());
     for r in 0..rows {
         let mut row: Vec<f32> = v[r * last..(r + 1) * last].to_vec();
-        row.sort_by(|x, y| y.partial_cmp(x).unwrap());
+        row.sort_by(|x, y| y.total_cmp(x));
         out.extend_from_slice(&row);
     }
     Tensor::from_vec(out, shape)
