@@ -1,0 +1,148 @@
+//! Stream-scaling bench: (1) NVML readout cost vs trace length — the
+//! incremental sampler cursor must scale near-linearly where the old
+//! from-scratch re-simulation (retained as the `*_rescan` reference
+//! path, selectable via `--rescan-only`) is quadratic; (2) the stream
+//! auditor end-to-end on growing serving streams, with retained power
+//! memory pinned at the ring capacity regardless of stream length.
+
+use magneton::coordinator::fleet::StreamFleet;
+use magneton::coordinator::SysRun;
+use magneton::dispatch::Env;
+use magneton::energy::sampler::NvmlSampler;
+use magneton::energy::{DeviceSpec, PowerTrace};
+use magneton::util::bench::{banner, persist, time_once};
+use magneton::util::cli::Args;
+use magneton::util::table::{fmt_joules, fmt_us, Table};
+use magneton::util::Prng;
+use magneton::workload::{serving_dispatcher, serving_stream_program, ServingStream};
+
+/// A trace of `n` one-millisecond segments with varied power.
+fn mk_trace(n: usize) -> PowerTrace {
+    let mut tr = PowerTrace::new(90.0);
+    for i in 0..n {
+        tr.push(1000.0, 120.0 + (i % 97) as f64 * 4.0);
+    }
+    tr
+}
+
+fn main() {
+    banner(
+        "Stream scaling",
+        "Incremental sampler cursor vs from-scratch rescan + bounded-memory stream audits",
+    );
+    let args = Args::from_env();
+    let rescan_only = args.flag("rescan-only");
+
+    // --- part 1: full-trace readout cost vs trace length -----------------
+    // 1 kHz sampler over 1 ms segments: samples ≈ segments, so the
+    // rescan path does Θ(n²) EMA steps where the cursor does Θ(n).
+    let nvml = NvmlSampler { sample_hz: 1000.0, latency_us: 5_000.0, ema_alpha: 0.6 };
+    let mut t = Table::new(vec!["segments", "old (rescan)", "new (cursor)", "speedup"]);
+    let mut csv = String::from("segments,rescan_us,cursor_us\n");
+    let sizes = [500usize, 1000, 2000, 4000];
+    let mut cursor_us = Vec::new();
+    let mut speedups = Vec::new();
+    for &n in &sizes {
+        let tr = mk_trace(n);
+        let span = tr.duration_us();
+        let mut old_best = f64::INFINITY;
+        let mut new_best = f64::INFINITY;
+        let mut e_old = 0.0;
+        let mut e_new = 0.0;
+        for _ in 0..3 {
+            let (e, us) = time_once(|| nvml.energy_j_rescan(&tr, 0.0, span));
+            e_old = e;
+            old_best = old_best.min(us);
+            if !rescan_only {
+                let (e2, us2) = time_once(|| nvml.energy_j(&tr, 0.0, span));
+                e_new = e2;
+                new_best = new_best.min(us2);
+            }
+        }
+        if !rescan_only {
+            // the fix changed the complexity, not the answer
+            assert_eq!(
+                e_old.to_bits(),
+                e_new.to_bits(),
+                "cursor diverges from rescan at n={n}: {e_new} vs {e_old}"
+            );
+        }
+        t.row(vec![
+            n.to_string(),
+            fmt_us(old_best),
+            if rescan_only { "-".into() } else { fmt_us(new_best) },
+            if rescan_only { "-".into() } else { format!("{:.0}x", old_best / new_best.max(1e-9)) },
+        ]);
+        let cursor_csv = if rescan_only { "NA".to_string() } else { format!("{new_best:.1}") };
+        csv.push_str(&format!("{n},{old_best:.1},{cursor_csv}\n"));
+        cursor_us.push(new_best);
+        speedups.push(old_best / new_best.max(1e-9));
+    }
+    let part1 = t.render();
+    println!("{part1}");
+
+    if !rescan_only {
+        // quadratic-vs-linear signature: the rescan/cursor gap must widen
+        // as the trace grows
+        assert!(
+            speedups[sizes.len() - 1] > speedups[0],
+            "speedup did not grow with trace length: {speedups:?}"
+        );
+        // near-linear cursor: 8x the segments must stay well under the
+        // 64x a quadratic readout would cost (generous noise margin)
+        assert!(
+            cursor_us[sizes.len() - 1] < cursor_us[0].max(1.0) * 40.0,
+            "cursor readout not near-linear: {cursor_us:?}"
+        );
+    }
+
+    // --- part 2: stream audits with length-independent memory ------------
+    let mut t2 = Table::new(vec![
+        "stream ops", "wall", "wasted", "peak ring segs", "windows",
+    ]);
+    let mut csv2 = String::from("ops,wall_us,wasted_j,peak_ring\n");
+    let ring_cap = 128;
+    let mut peaks = Vec::new();
+    for requests in [100usize, 200, 400] {
+        let spec = ServingStream { requests, batch: 64, d_model: 128 };
+        let mut fleet = StreamFleet::new(DeviceSpec::h200_sim());
+        fleet.cfg.window_ops = 100;
+        fleet.cfg.hop_ops = 100;
+        fleet.cfg.ring_cap = ring_cap;
+        let mut ra = Prng::new(7);
+        let mut rb = Prng::new(7);
+        fleet.add_pair(
+            "serving",
+            SysRun::new("a", serving_dispatcher(0.6), Env::new(), serving_stream_program(&mut ra, &spec)),
+            SysRun::new("b", serving_dispatcher(1.0), Env::new(), serving_stream_program(&mut rb, &spec)),
+        );
+        let (report, wall_us) = time_once(|| fleet.run());
+        let s = &report.entries[0].summary;
+        assert!(s.aligned);
+        assert!(s.wasted_j > 0.0, "0.6-efficiency stream must be flagged");
+        assert!(
+            s.peak_retained_segments <= ring_cap,
+            "ring overflow: {} > {ring_cap}",
+            s.peak_retained_segments
+        );
+        t2.row(vec![
+            s.ops.to_string(),
+            fmt_us(wall_us),
+            fmt_joules(s.wasted_j),
+            format!("{}/{}", s.peak_retained_segments, ring_cap),
+            format!("{} ({} flagged)", s.windows, s.windows_flagged),
+        ]);
+        csv2.push_str(&format!(
+            "{},{wall_us:.0},{},{}\n",
+            s.ops, s.wasted_j, s.peak_retained_segments
+        ));
+        peaks.push(s.peak_retained_segments);
+    }
+    // memory is set by the ring, not the stream: peaks identical across
+    // a 4x stream-length spread
+    assert!(peaks.windows(2).all(|w| w[0] == w[1]), "peaks vary: {peaks:?}");
+    let part2 = t2.render();
+    println!("{part2}");
+
+    persist("stream_scaling", &format!("{part1}\n{part2}"), Some(&format!("{csv}\n{csv2}")));
+}

@@ -15,7 +15,8 @@ use std::time::Instant;
 use crate::coordinator::{AuditOutcome, Magneton, SysRun};
 use crate::detect::DetectConfig;
 use crate::energy::DeviceSpec;
-use crate::exec::ExecOptions;
+use crate::exec::{ExecOptions, Executor};
+use crate::stream::{StreamAuditor, StreamConfig, StreamSummary};
 use crate::util::pool;
 
 /// One named audit job: two systems on the same workload.
@@ -134,6 +135,105 @@ impl FleetAudit {
     }
 }
 
+/// The aggregated result of one streaming pair.
+pub struct StreamFleetEntry {
+    pub name: String,
+    pub summary: StreamSummary,
+}
+
+/// A finished streaming fleet audit, ranked most-wasteful first.
+pub struct StreamFleetReport {
+    pub entries: Vec<StreamFleetEntry>,
+    pub total_wasted_j: f64,
+    /// Matched op pairs audited across all streams.
+    pub total_ops: usize,
+    /// End-to-end wall time of the fleet run, µs.
+    pub wall_time_us: f64,
+    pub workers: usize,
+}
+
+impl StreamFleetReport {
+    /// Streams where at least one window was flagged.
+    pub fn flagged(&self) -> usize {
+        self.entries.iter().filter(|e| e.summary.windows_flagged > 0).count()
+    }
+}
+
+/// Streaming fleet audit: N long-running serving pairs, each consumed
+/// chunk-by-chunk through a [`StreamAuditor`] over the bounded worker
+/// pool. Unlike [`FleetAudit`], no run is ever materialised — each
+/// worker zips two [`crate::exec::StreamExec`] iterators into its
+/// auditor, so per-stream memory is bounded by the ring/window sizes
+/// regardless of stream length.
+pub struct StreamFleet {
+    pub device: DeviceSpec,
+    pub cfg: StreamConfig,
+    pub exec_opts: ExecOptions,
+    /// Maximum concurrent stream audits.
+    pub workers: usize,
+    pairs: Vec<FleetPair>,
+}
+
+impl StreamFleet {
+    pub fn new(device: DeviceSpec) -> StreamFleet {
+        StreamFleet {
+            device,
+            cfg: StreamConfig::default(),
+            exec_opts: ExecOptions::default(),
+            workers: pool::default_threads(),
+            pairs: Vec::new(),
+        }
+    }
+
+    /// Queue one serving stream pair.
+    pub fn add_pair(&mut self, name: &str, a: SysRun, b: SysRun) -> &mut Self {
+        self.pairs.push(FleetPair { name: name.to_string(), a, b });
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.pairs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pairs.is_empty()
+    }
+
+    /// Audit every queued stream pair concurrently and rank by waste.
+    pub fn run(&self) -> StreamFleetReport {
+        let t0 = Instant::now();
+        let workers = self.workers.max(1).min(self.pairs.len().max(1));
+        let mut entries: Vec<StreamFleetEntry> = pool::par_map(&self.pairs, workers, |p| {
+            let mut exec_a = Executor::new(self.device.clone(), p.a.dispatcher.clone(), p.a.env.clone());
+            exec_a.opts = self.exec_opts.clone();
+            let mut exec_b = Executor::new(self.device.clone(), p.b.dispatcher.clone(), p.b.env.clone());
+            exec_b.opts = self.exec_opts.clone();
+            let mut aud = StreamAuditor::new(self.cfg.clone(), self.device.idle_w);
+            let mut sa = exec_a.stream(&p.a.prog);
+            let mut sb = exec_b.stream(&p.b.prog);
+            // lock-step interleave (pending skew ≤ 1); per-window
+            // reports are dropped — the summary keeps the aggregates
+            let summary = aud.drive(&mut sa, &mut sb, |_| {});
+            StreamFleetEntry { name: p.name.clone(), summary }
+        });
+        entries.sort_by(|x, y| {
+            y.summary
+                .wasted_j
+                .total_cmp(&x.summary.wasted_j)
+                .then_with(|| x.name.cmp(&y.name))
+        });
+        let total_wasted_j = entries.iter().map(|e| e.summary.wasted_j).sum();
+        let total_ops = entries.iter().map(|e| e.summary.ops).sum();
+        StreamFleetReport {
+            entries,
+            total_wasted_j,
+            total_ops,
+            wall_time_us: t0.elapsed().as_secs_f64() * 1e6,
+            workers,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -143,6 +243,7 @@ mod tests {
     use crate::graph::{Graph, OpKind};
     use crate::tensor::Tensor;
     use crate::util::Prng;
+    use crate::workload::{serving_dispatcher, serving_stream_program, ServingStream};
 
     /// A small matmul system whose kernel efficiency is `eff` (1.0 =
     /// optimal; lower burns extra energy at equal time).
@@ -231,5 +332,75 @@ mod tests {
         let r = fleet.run();
         assert_eq!(r.flagged(), 0);
         assert_eq!(r.total_wasted_j, 0.0);
+    }
+
+    /// A serving stream pair: side A's matmuls run at quality `eff`.
+    fn mk_stream_run(label: &str, seed: u64, eff: f64, requests: usize) -> SysRun {
+        let mut rng = Prng::new(seed);
+        let spec = ServingStream { requests, batch: 64, d_model: 128 };
+        let prog = serving_stream_program(&mut rng, &spec);
+        SysRun::new(label, serving_dispatcher(eff), Env::new(), prog)
+    }
+
+    fn stream_fleet_of(workers: usize, requests: usize) -> StreamFleetReport {
+        let mut fleet = StreamFleet::new(DeviceSpec::h200_sim());
+        fleet.workers = workers;
+        fleet.cfg.window_ops = 40;
+        fleet.cfg.hop_ops = 40;
+        fleet.cfg.ring_cap = 64;
+        for (i, eff) in [0.6, 1.0, 0.7].iter().enumerate() {
+            fleet.add_pair(
+                &format!("stream-{i}"),
+                mk_stream_run("sys-a", 90 + i as u64, *eff, requests),
+                mk_stream_run("sys-b", 90 + i as u64, 1.0, requests),
+            );
+        }
+        fleet.run()
+    }
+
+    /// The streaming fleet must flag the two wasteful streams, keep the
+    /// clean one silent, rank by waste, and never retain more power
+    /// segments than the ring allows — on multi-hundred-op streams.
+    #[test]
+    fn stream_fleet_flags_wasteful_streams_with_bounded_memory() {
+        let r = stream_fleet_of(3, 24); // 120 kernel ops per side
+        assert_eq!(r.entries.len(), 3);
+        assert_eq!(r.flagged(), 2);
+        assert_eq!(r.total_ops, 3 * 120);
+        for w in r.entries.windows(2) {
+            assert!(w[0].summary.wasted_j >= w[1].summary.wasted_j);
+        }
+        // the 0.6-efficiency stream wastes more than the 0.7 one
+        assert_eq!(r.entries[0].name, "stream-0");
+        assert_eq!(r.entries[1].name, "stream-2");
+        assert!(r.entries[2].summary.wasted_j == 0.0);
+        for e in &r.entries {
+            assert!(e.summary.aligned, "{}", e.name);
+            assert!(
+                e.summary.peak_retained_segments <= 64,
+                "{}: ring overflow {}",
+                e.name,
+                e.summary.peak_retained_segments
+            );
+            assert!(e.summary.peak_pending <= 1, "{}", e.name);
+            // matmul call sites carry the waste
+            if e.summary.wasted_j > 0.0 {
+                let top = &e.summary.top_labels[0].0;
+                assert!(top == "serve.proj" || top == "serve.out", "{top}");
+            }
+        }
+    }
+
+    #[test]
+    fn stream_fleet_result_independent_of_worker_count() {
+        let serial = stream_fleet_of(1, 16);
+        let parallel = stream_fleet_of(8, 16);
+        assert_eq!(serial.entries.len(), parallel.entries.len());
+        for (s, p) in serial.entries.iter().zip(parallel.entries.iter()) {
+            assert_eq!(s.name, p.name);
+            assert_eq!(s.summary.ops, p.summary.ops);
+            assert_eq!(s.summary.windows, p.summary.windows);
+            assert!((s.summary.wasted_j - p.summary.wasted_j).abs() < 1e-12, "{}", s.name);
+        }
     }
 }

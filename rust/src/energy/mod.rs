@@ -22,4 +22,4 @@ pub mod sampler;
 
 pub use cost::{ComputeUnit, KernelCost, KernelDesc};
 pub use device::DeviceSpec;
-pub use power::PowerTrace;
+pub use power::{PowerSource, PowerTrace, Segment};

@@ -13,6 +13,41 @@ pub struct Segment {
     pub watts: f64,
 }
 
+impl Segment {
+    /// Duration of the interval, µs.
+    pub fn dur_us(&self) -> f64 {
+        self.t_end_us - self.t_start_us
+    }
+
+    /// Energy of the interval, Joules.
+    pub fn energy_j(&self) -> f64 {
+        self.watts * self.dur_us() * 1e-6
+    }
+}
+
+/// Anything that can report instantaneous device power at a wall-time
+/// point. Implemented by the fully-materialised [`PowerTrace`] and by
+/// the bounded [`crate::stream::PowerRing`], so the sampler cursor
+/// ([`super::sampler::SamplerState`]) can read either a finished run or
+/// a live, eviction-bounded stream.
+pub trait PowerSource {
+    /// Instantaneous power at `t_us` (idle outside covered intervals).
+    fn power_at_us(&self, t_us: f64) -> f64;
+
+    /// Power reported when no interval covers a time point.
+    fn idle_watts(&self) -> f64;
+}
+
+impl PowerSource for PowerTrace {
+    fn power_at_us(&self, t_us: f64) -> f64 {
+        self.power_at(t_us)
+    }
+
+    fn idle_watts(&self) -> f64 {
+        self.idle_w
+    }
+}
+
 /// Piecewise-constant power timeline (segments are contiguous and
 /// appended in time order).
 #[derive(Clone, Debug, Default)]

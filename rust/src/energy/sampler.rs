@@ -11,7 +11,7 @@
 //! * [`WindowedMeter`] — Zeus-style begin/end windows on top of NVML
 //!   readings, with the 100 ms minimum-window restriction.
 
-use super::power::PowerTrace;
+use super::power::{PowerSource, PowerTrace};
 
 /// Exact integration of the trace — the physical power meter stand-in.
 #[derive(Clone, Copy, Debug)]
@@ -50,11 +50,83 @@ impl Default for NvmlSampler {
     }
 }
 
+/// Incremental cursor over the driver's sample sequence.
+///
+/// The EMA the driver maintains is a left fold over the samples taken
+/// at `0, Δ, 2Δ, …` (Δ = one sample period). The old implementation
+/// re-ran that fold from `t = 0` on *every* query, making a full-trace
+/// readout `O(readings × samples)` — quadratic in trace length, and
+/// exactly the kind of software energy waste the paper hunts (§5.2).
+/// `SamplerState` carries the fold forward instead: advancing to a
+/// later wall time consumes only the samples in between, so a sweep of
+/// monotonically increasing queries is `O(samples)` total.
+///
+/// Queries must be non-decreasing in time (the counter cannot un-see a
+/// sample); an earlier query simply returns the current EMA untouched.
+/// Because the cursor replays the exact accumulation sequence of the
+/// from-scratch fold (`t_next += Δ` starting at 0.0, same observation
+/// order, same EMA arithmetic), its readings are **bit-identical** to
+/// [`NvmlSampler::reading_at_rescan`] — enforced by a golden test below.
+#[derive(Clone, Copy, Debug)]
+pub struct SamplerState {
+    /// Current EMA value — what the counter shows right now.
+    pub ema: f64,
+    /// Wall time of the next sample the driver will take, µs.
+    pub t_next_us: f64,
+    /// Samples consumed so far.
+    pub samples: usize,
+}
+
+impl SamplerState {
+    /// Fresh cursor at `t = 0` showing the idle floor.
+    pub fn new(idle_w: f64) -> SamplerState {
+        SamplerState { ema: idle_w, t_next_us: 0.0, samples: 0 }
+    }
+}
+
 impl NvmlSampler {
+    /// One sample period, µs.
+    pub fn step_us(&self) -> f64 {
+        1e6 / self.sample_hz
+    }
+
+    /// Advance `state` to wall time `t_us`, consuming the samples in
+    /// between, and return the counter value visible at `t_us`.
+    /// `O(new samples)`, not `O(t · hz)`.
+    pub fn advance<P: PowerSource + ?Sized>(
+        &self,
+        state: &mut SamplerState,
+        trace: &P,
+        t_us: f64,
+    ) -> f64 {
+        let step = self.step_us();
+        while state.t_next_us <= t_us {
+            let observed = trace.power_at_us((state.t_next_us - self.latency_us).max(0.0));
+            state.ema = if self.ema_alpha > 0.0 {
+                self.ema_alpha * state.ema + (1.0 - self.ema_alpha) * observed
+            } else {
+                observed
+            };
+            state.t_next_us += step;
+            state.samples += 1;
+        }
+        state.ema
+    }
+
     /// The counter value visible at wall time `t_us`: the EMA of the
-    /// delayed samples taken so far.
-    pub fn reading_at(&self, trace: &PowerTrace, t_us: f64) -> f64 {
-        let step = 1e6 / self.sample_hz;
+    /// delayed samples taken so far. One forward pass from `t = 0`; for
+    /// repeated queries carry a [`SamplerState`] and use
+    /// [`NvmlSampler::advance`] instead.
+    pub fn reading_at<P: PowerSource + ?Sized>(&self, trace: &P, t_us: f64) -> f64 {
+        let mut state = SamplerState::new(trace.idle_watts());
+        self.advance(&mut state, trace, t_us)
+    }
+
+    /// The pre-cursor implementation, kept verbatim as the golden
+    /// reference (and the "old path" flag of `benches/stream_scaling`):
+    /// re-simulates the driver EMA from `t = 0` for this single query.
+    pub fn reading_at_rescan(&self, trace: &PowerTrace, t_us: f64) -> f64 {
+        let step = self.step_us();
         // Reconstruct the sample sequence up to t; EMA over it.
         let mut ema = trace.idle_w;
         let mut t_sample = 0.0;
@@ -73,19 +145,55 @@ impl NvmlSampler {
     /// Energy estimate over a window: mean of the counter readings that
     /// fall inside it × duration (what NVML-based profilers do). Windows
     /// shorter than a sample period see at most one stale reading.
-    pub fn energy_j(&self, trace: &PowerTrace, t0_us: f64, t1_us: f64) -> f64 {
-        let step = 1e6 / self.sample_hz;
-        let mut readings = Vec::new();
+    /// `O(samples up to t1)` via one shared cursor.
+    pub fn energy_j<P: PowerSource + ?Sized>(&self, trace: &P, t0_us: f64, t1_us: f64) -> f64 {
+        let mut state = SamplerState::new(trace.idle_watts());
+        self.energy_j_with(&mut state, trace, t0_us, t1_us)
+    }
+
+    /// Cursor-carrying energy read for streaming use: `state` must not
+    /// have been advanced past `t0_us`'s first in-window sample. The
+    /// shared cursor is what turns a sweep of per-op windows (the 1000×
+    /// replay path, a live stream readout) from quadratic to linear.
+    pub fn energy_j_with<P: PowerSource + ?Sized>(
+        &self,
+        state: &mut SamplerState,
+        trace: &P,
+        t0_us: f64,
+        t1_us: f64,
+    ) -> f64 {
+        let step = self.step_us();
+        let mut sum = 0.0;
+        let mut n = 0usize;
         // samples strictly inside the window
         let mut t = (t0_us / step).ceil() * step;
         while t <= t1_us {
-            readings.push(self.reading_at(trace, t));
+            sum += self.advance(state, trace, t);
+            n += 1;
+            t += step;
+        }
+        let avg = if n == 0 {
+            // no counter update inside the window: caller sees the last
+            // (stale) reading
+            self.advance(state, trace, t0_us)
+        } else {
+            sum / n as f64
+        };
+        avg * (t1_us - t0_us) * 1e-6
+    }
+
+    /// The pre-cursor window estimate: one from-scratch re-simulation
+    /// per reading, `O(readings × samples)`. Golden reference only.
+    pub fn energy_j_rescan(&self, trace: &PowerTrace, t0_us: f64, t1_us: f64) -> f64 {
+        let step = self.step_us();
+        let mut readings = Vec::new();
+        let mut t = (t0_us / step).ceil() * step;
+        while t <= t1_us {
+            readings.push(self.reading_at_rescan(trace, t));
             t += step;
         }
         let avg = if readings.is_empty() {
-            // no counter update inside the window: caller sees the last
-            // (stale) reading
-            self.reading_at(trace, t0_us)
+            self.reading_at_rescan(trace, t0_us)
         } else {
             readings.iter().sum::<f64>() / readings.len() as f64
         };
@@ -93,7 +201,7 @@ impl NvmlSampler {
     }
 
     /// Average-power estimate for the window.
-    pub fn avg_power_w(&self, trace: &PowerTrace, t0_us: f64, t1_us: f64) -> f64 {
+    pub fn avg_power_w<P: PowerSource + ?Sized>(&self, trace: &P, t0_us: f64, t1_us: f64) -> f64 {
         if t1_us <= t0_us {
             return self.reading_at(trace, t0_us);
         }
@@ -183,6 +291,83 @@ mod tests {
         let zeus = WindowedMeter::default();
         assert!(!zeus.measure(&tr, 400_000.0, 400_500.0).reliable);
         assert!(zeus.measure(&tr, 0.0, 200_000.0).reliable);
+    }
+
+    /// A longer, irregular trace exercising many EMA updates.
+    fn long_trace() -> PowerTrace {
+        let mut tr = PowerTrace::new(85.0);
+        for i in 0..400u32 {
+            // deterministic pseudo-varied durations and powers
+            let dur = 3_000.0 + (i % 17) as f64 * 700.0;
+            let w = 90.0 + ((i * 37) % 260) as f64;
+            tr.push(dur, w);
+        }
+        tr
+    }
+
+    /// Golden comparison: the incremental cursor must be bit-identical
+    /// to the retained from-scratch re-simulation, for both a sweep of
+    /// point readings and a sweep of window reads — including windows
+    /// shorter than a sample period (the stale-reading fallback).
+    #[test]
+    fn cursor_matches_rescan_bitwise() {
+        let tr = long_trace();
+        for nvml in [
+            NvmlSampler::default(),
+            NvmlSampler { sample_hz: 50.0, latency_us: 200_000.0, ema_alpha: 0.0 },
+            NvmlSampler { sample_hz: 13.0, latency_us: 0.0, ema_alpha: 0.9 },
+        ] {
+            // point readings through one shared cursor vs rescans
+            let mut state = SamplerState::new(tr.idle_w);
+            let mut t = 0.0;
+            while t < tr.duration_us() {
+                let inc = nvml.advance(&mut state, &tr, t);
+                let old = nvml.reading_at_rescan(&tr, t);
+                assert_eq!(inc.to_bits(), old.to_bits(), "t={t} hz={}", nvml.sample_hz);
+                t += 41_000.0; // off-grid query times
+            }
+            // window reads: long, short (sub-sample-period), and zero-width
+            for (t0, t1) in [
+                (0.0, tr.duration_us()),
+                (100_000.0, 900_000.0),
+                (123_456.0, 123_900.0),
+                (500_000.0, 500_000.0),
+            ] {
+                let inc = nvml.energy_j(&tr, t0, t1);
+                let old = nvml.energy_j_rescan(&tr, t0, t1);
+                assert_eq!(inc.to_bits(), old.to_bits(), "[{t0},{t1}] hz={}", nvml.sample_hz);
+            }
+        }
+    }
+
+    /// Cursor queries are monotone: an out-of-order (earlier) query
+    /// returns the current counter value without consuming samples.
+    #[test]
+    fn cursor_is_monotone_and_sticky() {
+        let tr = long_trace();
+        let nvml = NvmlSampler::default();
+        let mut state = SamplerState::new(tr.idle_w);
+        let r1 = nvml.advance(&mut state, &tr, 800_000.0);
+        let consumed = state.samples;
+        let r2 = nvml.advance(&mut state, &tr, 100_000.0); // earlier: no-op
+        assert_eq!(r1.to_bits(), r2.to_bits());
+        assert_eq!(state.samples, consumed);
+    }
+
+    /// The shared-cursor window sweep (replay-style back-to-back
+    /// windows) agrees with fresh-cursor reads of the same windows.
+    #[test]
+    fn shared_cursor_window_sweep_matches_fresh() {
+        let tr = long_trace();
+        let nvml = NvmlSampler::default();
+        let mut state = SamplerState::new(tr.idle_w);
+        let mut t0 = 0.0;
+        while t0 + 150_000.0 <= tr.duration_us() {
+            let shared = nvml.energy_j_with(&mut state, &tr, t0, t0 + 150_000.0);
+            let fresh = nvml.energy_j(&tr, t0, t0 + 150_000.0);
+            assert_eq!(shared.to_bits(), fresh.to_bits(), "window at {t0}");
+            t0 += 150_000.0;
+        }
     }
 
     #[test]

@@ -15,7 +15,7 @@
 //! * simulation — [`energy`], [`trace`], [`dispatch`], [`exec`]
 //! * Magneton core — [`fingerprint`], [`matching`], [`detect`], [`diagnose`]
 //! * evaluation fleet — [`systems`], [`workload`], [`cases`], [`profiler`]
-//! * integration — [`runtime`] (PJRT/XLA), [`coordinator`], [`report`]
+//! * integration — [`runtime`] (PJRT/XLA), [`coordinator`], [`stream`], [`report`]
 //!
 //! See `DESIGN.md` (repository root) for the module map, per-experiment
 //! index, and the substitution table (simulated GPU in place of H200 +
@@ -41,6 +41,7 @@ pub mod workload;
 pub mod cases;
 pub mod runtime;
 pub mod coordinator;
+pub mod stream;
 pub mod report;
 
 /// Crate-wide error type (the offline registry has no `anyhow`): a plain

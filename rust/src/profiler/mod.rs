@@ -243,6 +243,48 @@ mod tests {
         assert!(many <= few + 1e-9, "many {many} vs few {few}");
     }
 
+    /// Magneton's adaptive replay mode must actually shrink error vs a
+    /// fixed small replay count on a sub-millisecond kernel: the fixed
+    /// 3× window (~0.9 ms) spans no NVML sample period at all, while
+    /// the adaptive mode stretches the window across ~50 periods.
+    #[test]
+    fn adaptive_replay_shrinks_error_on_submillisecond_kernel() {
+        let nvml = NvmlSampler::default();
+        let (time_us, power_w, idle_w) = (300.0, 400.0, 90.0);
+        let truth = power_w * time_us * 1e-6;
+        let fixed = replay_energy_ex(time_us, power_w, idle_w, 3, &nvml, false);
+        let adaptive = replay_energy_ex(time_us, power_w, idle_w, 3, &nvml, true);
+        let err_fixed = (fixed - truth).abs() / truth;
+        let err_adaptive = (adaptive - truth).abs() / truth;
+        assert!(
+            err_adaptive < err_fixed,
+            "adaptive {err_adaptive} not better than fixed {err_fixed}"
+        );
+        assert!(err_adaptive < 0.10, "adaptive error {err_adaptive} too large");
+        assert!(err_fixed > 0.30, "fixed-3 error {err_fixed} unexpectedly small");
+    }
+
+    /// The incremental sampler keeps the 1000× replay meter's accuracy
+    /// unchanged (it is bit-identical to the old path) — spot-check the
+    /// replay estimate against the rescan reference end to end.
+    #[test]
+    fn replay_meter_identical_through_cursor_and_rescan() {
+        let nvml = NvmlSampler::default();
+        let (time_us, power_w, idle_w, n) = (2000.0, 400.0, 90.0, 200usize);
+        // rebuild the replay trace exactly as replay_energy_ex does
+        let mut trace = PowerTrace::new(idle_w);
+        trace.push(300_000.0, idle_w);
+        let t0 = trace.now_us();
+        for _ in 0..n {
+            trace.push(time_us, power_w);
+        }
+        let t1 = trace.now_us();
+        trace.push(400_000.0, idle_w);
+        let through_cursor = nvml.energy_j(&trace, t0, t1 + nvml.latency_us);
+        let through_rescan = nvml.energy_j_rescan(&trace, t0, t1 + nvml.latency_us);
+        assert_eq!(through_cursor.to_bits(), through_rescan.to_bits());
+    }
+
     #[test]
     fn magneton_physical_meter_matches_records() {
         let arts = run();

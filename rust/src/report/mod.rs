@@ -1,10 +1,12 @@
 //! Report rendering: audit summaries, the Table 2 replica, energy
-//! breakdowns (Fig 2 style), and the ranked cross-system fleet waste
-//! report, with CSV persistence under `results/`.
+//! breakdowns (Fig 2 style), the ranked cross-system fleet waste
+//! report, and rolling summaries for streaming audits, with CSV
+//! persistence under `results/`.
 
-use crate::coordinator::fleet::FleetReport;
+use crate::coordinator::fleet::{FleetReport, StreamFleetReport};
 use crate::coordinator::AuditOutcome;
 use crate::exec::RunArtifacts;
+use crate::stream::{StreamSummary, WindowReport};
 use crate::util::table::{fmt_joules, fmt_us, Table};
 
 /// Render an audit outcome as a human-readable report.
@@ -73,6 +75,114 @@ pub fn render_fleet(report: &FleetReport) -> String {
         "total: {} wasted across {} findings in {}/{} flagged pairs\n",
         fmt_joules(report.total_wasted_j),
         report.total_findings,
+        report.flagged(),
+        report.entries.len()
+    ));
+    s
+}
+
+/// One-line rolling view of an emitted detection window (the streaming
+/// counterpart of a finding summary).
+pub fn render_window(w: &WindowReport) -> String {
+    let flagged: Vec<String> = w
+        .findings
+        .iter()
+        .map(|f| {
+            format!(
+                "{} {:+.1}%{}",
+                f.label,
+                f.diff_frac * 100.0,
+                if f.is_tradeoff { " (trade-off)" } else { "" }
+            )
+        })
+        .collect();
+    format!(
+        "window #{:<4} {:>4} pairs  A {} vs B {}  wasted {}  {}{}",
+        w.seq,
+        w.pairs,
+        fmt_joules(w.energy_a_j),
+        fmt_joules(w.energy_b_j),
+        fmt_joules(w.wasted_j),
+        if flagged.is_empty() { "clean".to_string() } else { flagged.join(", ") },
+        if w.aligned { "" } else { "  [STREAMS DIVERGED]" },
+    )
+}
+
+/// Rolling waste summary of one stream audit: cumulative energies,
+/// waste ledger by call site, and the memory high-water marks that
+/// prove the audit stayed bounded.
+pub fn render_stream(name: &str, s: &StreamSummary) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("=== Magneton stream audit: {name} ===\n"));
+    out.push_str(&format!(
+        "ops: {} pairs over {} windows ({} flagged){}\n",
+        s.ops,
+        s.windows,
+        s.windows_flagged,
+        if s.aligned { "" } else { "  [STREAMS DIVERGED]" },
+    ));
+    out.push_str(&format!("workload fingerprint: {:016x}", s.fingerprint_a));
+    if s.fingerprint_b != s.fingerprint_a {
+        out.push_str(&format!(" vs {:016x} (B differs)", s.fingerprint_b));
+    }
+    if s.unpaired > 0 {
+        out.push_str(&format!("  [{} events unpaired]", s.unpaired));
+    }
+    out.push('\n');
+    out.push_str(&format!(
+        "energy: {} vs {}  wasted {}\n",
+        fmt_joules(s.energy_a_j),
+        fmt_joules(s.energy_b_j),
+        fmt_joules(s.wasted_j)
+    ));
+    out.push_str(&format!(
+        "memory: {} power segments retained at peak, {} window pairs, {} pending\n",
+        s.peak_retained_segments, s.peak_window_pairs, s.peak_pending
+    ));
+    if !s.top_labels.is_empty() {
+        let mut t = Table::new(vec!["call site", "wasted", "windows"]);
+        for (label, j, n) in s.top_labels.iter().take(8) {
+            t.row(vec![label.clone(), fmt_joules(*j), n.to_string()]);
+        }
+        out.push_str(&t.render());
+    }
+    out
+}
+
+/// Ranked table for a finished streaming fleet audit.
+pub fn stream_fleet_table(report: &StreamFleetReport) -> Table {
+    let mut t = Table::new(vec![
+        "rank", "stream", "ops", "energy A", "energy B", "wasted", "flagged", "aligned",
+    ]);
+    for (i, e) in report.entries.iter().enumerate() {
+        t.row(vec![
+            (i + 1).to_string(),
+            e.name.clone(),
+            e.summary.ops.to_string(),
+            fmt_joules(e.summary.energy_a_j),
+            fmt_joules(e.summary.energy_b_j),
+            fmt_joules(e.summary.wasted_j),
+            format!("{}/{}", e.summary.windows_flagged, e.summary.windows),
+            if e.summary.aligned { "yes" } else { "NO" }.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Human-readable streaming fleet report.
+pub fn render_stream_fleet(report: &StreamFleetReport) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "=== Magneton streaming fleet audit: {} streams, {} workers, {} ===\n",
+        report.entries.len(),
+        report.workers,
+        fmt_us(report.wall_time_us)
+    ));
+    s.push_str(&stream_fleet_table(report).render());
+    s.push_str(&format!(
+        "total: {} wasted across {} op pairs in {}/{} flagged streams\n",
+        fmt_joules(report.total_wasted_j),
+        report.total_ops,
         report.flagged(),
         report.entries.len()
     ));
@@ -161,6 +271,34 @@ mod tests {
         let arts = mag.run_side(&small_run());
         let t = label_breakdown(&arts, 5);
         assert!(t.len() >= 2);
+    }
+
+    #[test]
+    fn stream_reports_render() {
+        use crate::coordinator::fleet::StreamFleet;
+        use crate::workload::{serving_dispatcher, serving_stream_program, ServingStream};
+        let spec = ServingStream { requests: 10, batch: 64, d_model: 128 };
+        let mut fleet = StreamFleet::new(DeviceSpec::h200_sim());
+        fleet.cfg.window_ops = 25;
+        fleet.cfg.hop_ops = 25;
+        let mk = |eff: f64| {
+            let mut rng = Prng::new(44);
+            SysRun::new("s", serving_dispatcher(eff), Env::new(), serving_stream_program(&mut rng, &spec))
+        };
+        fleet.add_pair("hot", mk(0.6), mk(1.0));
+        fleet.add_pair("clean", mk(1.0), mk(1.0));
+        let r = fleet.run();
+        let rendered = render_stream_fleet(&r);
+        assert!(rendered.contains("streaming fleet audit"));
+        assert!(rendered.contains("hot") && rendered.contains("clean"));
+        assert_eq!(stream_fleet_table(&r).len(), 2);
+        // per-stream rolling summary
+        let top = &r.entries[0];
+        assert_eq!(top.name, "hot");
+        let s = render_stream(&top.name, &top.summary);
+        assert!(s.contains("stream audit: hot"));
+        assert!(s.contains("wasted"));
+        assert!(s.contains("serve.proj") || s.contains("serve.out"));
     }
 
     #[test]

@@ -1,0 +1,919 @@
+//! Online differential auditing of long-running serving traffic.
+//!
+//! The batch pipeline ([`crate::coordinator`]) audits finished,
+//! fully-materialised runs: it needs both sides' complete
+//! `RunArtifacts` in memory. Production serving traffic (the ML.ENERGY
+//! / MLPerf-Power setting the ROADMAP points at) never finishes, so
+//! this module audits *streams* instead: it ingests
+//! `(KernelRecord, Segment)` events chunk-by-chunk from two live
+//! executors (see [`crate::exec::StreamExec`]), maintains
+//!
+//! * a **sliding detection window** of the last `window_ops` matched op
+//!   pairs with O(1) rolling cost sums,
+//! * **rolling structural fingerprints** of each side's matched op
+//!   history (polynomial hash over `(label, op)`), part of the
+//!   alignment verdict and exported in the summary so operators can
+//!   compare workloads across stream pairs and sessions,
+//! * **ring-buffered power segments** ([`PowerRing`]) with eviction, so
+//!   the retained power timeline — and through it the incremental NVML
+//!   cursor ([`crate::energy::sampler::SamplerState`]) — is bounded by
+//!   the ring capacity, never by the stream length,
+//!
+//! and emits incremental [`WindowReport`]s plus a cumulative
+//! [`StreamSummary`] without ever holding the full trace.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::detect::{DetectConfig, Side};
+use crate::energy::sampler::{NvmlSampler, SamplerState};
+use crate::energy::{PowerSource, Segment};
+use crate::exec::KernelRecord;
+
+/// Fixed-capacity ring of power segments: the bounded stand-in for a
+/// full [`crate::energy::PowerTrace`] on an unbounded stream. Evicted
+/// segments fold their energy into a running total, so cumulative
+/// accounting stays exact while retained memory stays O(capacity).
+#[derive(Clone, Debug)]
+pub struct PowerRing {
+    segs: VecDeque<Segment>,
+    cap: usize,
+    /// Power reported outside the retained span.
+    pub idle_w: f64,
+    /// Energy of evicted segments, Joules (exact cumulative bookkeeping).
+    pub evicted_energy_j: f64,
+    /// Number of evicted segments.
+    pub evicted: usize,
+    /// High-water mark of retained segments (≤ cap by construction;
+    /// exposed so callers can assert the memory bound).
+    pub peak_retained: usize,
+}
+
+impl PowerRing {
+    pub fn new(cap: usize, idle_w: f64) -> PowerRing {
+        assert!(cap > 0, "ring capacity must be positive");
+        PowerRing {
+            segs: VecDeque::with_capacity(cap),
+            cap,
+            idle_w,
+            evicted_energy_j: 0.0,
+            evicted: 0,
+            peak_retained: 0,
+        }
+    }
+
+    /// Append a segment, evicting the oldest when full.
+    pub fn push(&mut self, seg: Segment) {
+        if self.segs.len() == self.cap {
+            let old = self.segs.pop_front().expect("cap > 0");
+            self.evicted_energy_j += old.energy_j();
+            self.evicted += 1;
+        }
+        self.segs.push_back(seg);
+        if self.segs.len() > self.peak_retained {
+            self.peak_retained = self.segs.len();
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.segs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.segs.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// End timestamp of the newest retained segment, µs.
+    pub fn t_now_us(&self) -> f64 {
+        self.segs.back().map(|s| s.t_end_us).unwrap_or(0.0)
+    }
+
+    /// Start timestamp of the oldest retained segment, µs.
+    pub fn t_oldest_us(&self) -> f64 {
+        self.segs.front().map(|s| s.t_start_us).unwrap_or(0.0)
+    }
+
+    /// Energy of the retained segments only, Joules.
+    pub fn retained_energy_j(&self) -> f64 {
+        self.segs.iter().map(|s| s.energy_j()).sum()
+    }
+
+    /// Exact energy of the whole stream so far (retained + evicted).
+    pub fn total_energy_j(&self) -> f64 {
+        self.evicted_energy_j + self.retained_energy_j()
+    }
+}
+
+impl PowerSource for PowerRing {
+    /// Instantaneous power at `t_us`: binary search over the retained
+    /// (contiguous, time-ordered) segments; idle outside them. Evicted
+    /// history reads as idle — callers advancing a sampler cursor see
+    /// it only if they lag the stream by more than the ring span.
+    fn power_at_us(&self, t_us: f64) -> f64 {
+        if self.segs.is_empty() {
+            return self.idle_w;
+        }
+        let lo = self.segs.partition_point(|s| s.t_end_us <= t_us);
+        if lo < self.segs.len() && self.segs[lo].t_start_us <= t_us {
+            self.segs[lo].watts
+        } else {
+            self.idle_w
+        }
+    }
+
+    fn idle_watts(&self) -> f64 {
+        self.idle_w
+    }
+}
+
+/// Configuration of a [`StreamAuditor`].
+#[derive(Clone, Debug)]
+pub struct StreamConfig {
+    /// Sliding detection window, in matched op pairs.
+    pub window_ops: usize,
+    /// Window hop: a report is emitted every `hop_ops` ingested pairs.
+    /// `hop_ops == window_ops` (the default) tiles the stream, so
+    /// summing window waste is exact; smaller hops overlap windows for
+    /// finer-grained rolling detection.
+    pub hop_ops: usize,
+    /// Power segments retained per side.
+    pub ring_cap: usize,
+    /// Largest inter-side ingestion skew buffered before surplus
+    /// events are dropped (counted in `unpaired`, breaking alignment).
+    /// Bounds pending memory on one-sided floods; callers that ingest
+    /// in large one-sided chunks must size this to their chunk length.
+    pub max_pending: usize,
+    /// Detection thresholds (reused from the batch detector).
+    pub cfg: DetectConfig,
+    /// NVML model backing the rolling counter readout; `None` disables.
+    pub nvml: Option<NvmlSampler>,
+}
+
+impl Default for StreamConfig {
+    fn default() -> StreamConfig {
+        StreamConfig {
+            window_ops: 256,
+            hop_ops: 256,
+            ring_cap: 512,
+            max_pending: 4096,
+            cfg: DetectConfig::default(),
+            nvml: Some(NvmlSampler::default()),
+        }
+    }
+}
+
+/// One matched op pair in the sliding window.
+#[derive(Clone, Debug)]
+struct PairCost {
+    label: String,
+    energy_a_j: f64,
+    energy_b_j: f64,
+    time_a_us: f64,
+    time_b_us: f64,
+}
+
+/// One side's pending (not yet paired) op event.
+#[derive(Clone, Debug)]
+struct OpEvent {
+    label: String,
+    op_name: &'static str,
+    energy_j: f64,
+    time_us: f64,
+}
+
+/// A per-label divergence flagged inside one window.
+#[derive(Clone, Debug)]
+pub struct StreamFinding {
+    pub label: String,
+    /// Matched op pairs under this label inside the window.
+    pub ops: usize,
+    pub energy_a_j: f64,
+    pub energy_b_j: f64,
+    pub time_a_us: f64,
+    pub time_b_us: f64,
+    /// |eA − eB| / max(eA, eB).
+    pub diff_frac: f64,
+    pub wasteful: Side,
+    /// True when the efficient side pays more than the perf tolerance
+    /// in time — a trade-off, not waste.
+    pub is_tradeoff: bool,
+}
+
+impl StreamFinding {
+    /// Joules of genuine waste this finding represents (0 for trade-offs).
+    pub fn wasted_j(&self) -> f64 {
+        if self.is_tradeoff {
+            0.0
+        } else {
+            (self.energy_a_j - self.energy_b_j).abs()
+        }
+    }
+}
+
+/// Incremental detection report for one emitted window.
+#[derive(Clone, Debug)]
+pub struct WindowReport {
+    /// 0-based index of the emitted window.
+    pub seq: usize,
+    /// Matched pairs inside the window.
+    pub pairs: usize,
+    pub energy_a_j: f64,
+    pub energy_b_j: f64,
+    pub time_a_us: f64,
+    pub time_b_us: f64,
+    pub findings: Vec<StreamFinding>,
+    /// Joules of genuine (non-trade-off) waste across the findings.
+    pub wasted_j: f64,
+    /// Whether the rolling structural fingerprints still agree.
+    pub aligned: bool,
+}
+
+/// Cumulative state of a stream audit.
+#[derive(Clone, Debug)]
+pub struct StreamSummary {
+    /// Matched op pairs ingested.
+    pub ops: usize,
+    /// Windows emitted.
+    pub windows: usize,
+    /// Exact cumulative energies (records, not ring-truncated).
+    pub energy_a_j: f64,
+    pub energy_b_j: f64,
+    pub time_a_us: f64,
+    pub time_b_us: f64,
+    /// Joules of genuine waste accumulated over emitted windows.
+    pub wasted_j: f64,
+    /// Windows that contained at least one non-trade-off finding.
+    pub windows_flagged: usize,
+    /// Most wasteful labels: `(label, wasted_j, windows flagged in)`,
+    /// descending by waste.
+    pub top_labels: Vec<(String, f64, usize)>,
+    /// The two streams ran the same workload in the same order: every
+    /// matched pair agreed on `(label, op)`, the matched-history
+    /// fingerprints are equal, and (after `finish`) no unpaired tail
+    /// remained.
+    pub aligned: bool,
+    /// Rolling structural fingerprint of each side's matched op
+    /// history — equal whenever `aligned`; stable across runs, so
+    /// operators can compare workloads across stream pairs/sessions.
+    pub fingerprint_a: u64,
+    pub fingerprint_b: u64,
+    /// Events still unpaired (surplus of the longer stream). Non-zero
+    /// after `finish` means the sides emitted different op counts —
+    /// their cumulative energies are not directly comparable.
+    pub unpaired: usize,
+    /// Memory high-water marks: retained power segments (≤ ring cap),
+    /// window pairs, pending unpaired events.
+    pub peak_retained_segments: usize,
+    pub peak_window_pairs: usize,
+    pub peak_pending: usize,
+}
+
+/// Online differential auditor over two op streams.
+///
+/// Feed it with [`StreamAuditor::ingest_a`] / [`StreamAuditor::ingest_b`]
+/// (order between sides is free up to [`StreamConfig::max_pending`]
+/// skew; pairing is positional), drain emitted windows with
+/// [`StreamAuditor::take_emitted`], and finish with
+/// [`StreamAuditor::finish`]. All retained state is bounded: window +
+/// rings + per-label aggregates + at most `max_pending` pending events
+/// per side (surplus past the cap is dropped, counted in `unpaired`,
+/// and breaks alignment).
+pub struct StreamAuditor {
+    pub cfg: StreamConfig,
+    window: VecDeque<PairCost>,
+    win_e_a: f64,
+    win_e_b: f64,
+    win_t_a: f64,
+    win_t_b: f64,
+    pend_a: VecDeque<OpEvent>,
+    pend_b: VecDeque<OpEvent>,
+    /// Rolling structural fingerprints over the full matched history.
+    fp_a: u64,
+    fp_b: u64,
+    aligned: bool,
+    /// Power rings (public: the example asserts the memory bound).
+    pub ring_a: PowerRing,
+    pub ring_b: PowerRing,
+    sampler_a: SamplerState,
+    sampler_b: SamplerState,
+    pairs_since_hop: usize,
+    emitted: Vec<WindowReport>,
+    /// Pending events dropped after exceeding the skew cap.
+    unpaired_dropped: usize,
+    // cumulative accounting
+    ops: usize,
+    windows: usize,
+    windows_flagged: usize,
+    cum_e_a: f64,
+    cum_e_b: f64,
+    cum_t_a: f64,
+    cum_t_b: f64,
+    cum_wasted_j: f64,
+    label_waste: BTreeMap<String, (f64, usize)>,
+    peak_window_pairs: usize,
+    peak_pending: usize,
+}
+
+/// FNV-1a over a label + op name (the structural identity of one op).
+fn op_hash(label: &str, op_name: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in label.as_bytes().iter().chain([0xffu8].iter()).chain(op_name.as_bytes()) {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+impl StreamAuditor {
+    pub fn new(cfg: StreamConfig, idle_w: f64) -> StreamAuditor {
+        assert!(cfg.window_ops > 0 && cfg.hop_ops > 0, "window/hop must be positive");
+        let ring_a = PowerRing::new(cfg.ring_cap, idle_w);
+        let ring_b = PowerRing::new(cfg.ring_cap, idle_w);
+        StreamAuditor {
+            window: VecDeque::with_capacity(cfg.window_ops),
+            win_e_a: 0.0,
+            win_e_b: 0.0,
+            win_t_a: 0.0,
+            win_t_b: 0.0,
+            pend_a: VecDeque::new(),
+            pend_b: VecDeque::new(),
+            fp_a: 0,
+            fp_b: 0,
+            aligned: true,
+            ring_a,
+            ring_b,
+            sampler_a: SamplerState::new(idle_w),
+            sampler_b: SamplerState::new(idle_w),
+            pairs_since_hop: 0,
+            emitted: Vec::new(),
+            unpaired_dropped: 0,
+            ops: 0,
+            windows: 0,
+            windows_flagged: 0,
+            cum_e_a: 0.0,
+            cum_e_b: 0.0,
+            cum_t_a: 0.0,
+            cum_t_b: 0.0,
+            cum_wasted_j: 0.0,
+            label_waste: BTreeMap::new(),
+            peak_window_pairs: 0,
+            peak_pending: 0,
+            cfg,
+        }
+    }
+
+    /// Ingest one op event from side A.
+    pub fn ingest_a(&mut self, rec: &KernelRecord, seg: Segment) {
+        self.ingest(Side::A, rec, seg)
+    }
+
+    /// Ingest one op event from side B.
+    pub fn ingest_b(&mut self, rec: &KernelRecord, seg: Segment) {
+        self.ingest(Side::B, rec, seg)
+    }
+
+    /// Shared ingestion body — side-symmetry is structural, not by
+    /// copy-paste convention.
+    fn ingest(&mut self, side: Side, rec: &KernelRecord, seg: Segment) {
+        let (ring, pend, cum_e, cum_t) = match side {
+            Side::A => (&mut self.ring_a, &mut self.pend_a, &mut self.cum_e_a, &mut self.cum_t_a),
+            Side::B => (&mut self.ring_b, &mut self.pend_b, &mut self.cum_e_b, &mut self.cum_t_b),
+        };
+        ring.push(seg);
+        *cum_e += rec.energy_j;
+        *cum_t += rec.time_us;
+        pend.push_back(OpEvent {
+            label: rec.label.clone(),
+            op_name: rec.op.name(),
+            energy_j: rec.energy_j,
+            time_us: rec.time_us,
+        });
+        self.drain_pairs();
+    }
+
+    /// Pair pending events positionally and slide the window.
+    fn drain_pairs(&mut self) {
+        let pending = self.pend_a.len().max(self.pend_b.len());
+        if pending > self.peak_pending {
+            self.peak_pending = pending;
+        }
+        while !self.pend_a.is_empty() && !self.pend_b.is_empty() {
+            let a = self.pend_a.pop_front().expect("checked non-empty");
+            let b = self.pend_b.pop_front().expect("checked non-empty");
+            // structural check: positional pairing requires same op
+            if a.label != b.label || a.op_name != b.op_name {
+                self.aligned = false;
+            }
+            // rolling fingerprints over the *matched* history: equal
+            // whenever the streams ran the same ops in the same order,
+            // and exported so operators can compare workloads across
+            // stream pairs and sessions
+            self.fp_a = self.fp_a.rotate_left(1) ^ op_hash(&a.label, a.op_name);
+            self.fp_b = self.fp_b.rotate_left(1) ^ op_hash(&b.label, b.op_name);
+            self.ops += 1;
+            let pair = PairCost {
+                label: a.label,
+                energy_a_j: a.energy_j,
+                energy_b_j: b.energy_j,
+                time_a_us: a.time_us,
+                time_b_us: b.time_us,
+            };
+            self.win_e_a += pair.energy_a_j;
+            self.win_e_b += pair.energy_b_j;
+            self.win_t_a += pair.time_a_us;
+            self.win_t_b += pair.time_b_us;
+            self.window.push_back(pair);
+            if self.window.len() > self.cfg.window_ops {
+                let old = self.window.pop_front().expect("over capacity");
+                self.win_e_a -= old.energy_a_j;
+                self.win_e_b -= old.energy_b_j;
+                self.win_t_a -= old.time_a_us;
+                self.win_t_b -= old.time_b_us;
+            }
+            if self.window.len() > self.peak_window_pairs {
+                self.peak_window_pairs = self.window.len();
+            }
+            self.pairs_since_hop += 1;
+            if self.pairs_since_hop >= self.cfg.hop_ops && self.window.len() >= self.cfg.window_ops {
+                self.pairs_since_hop = 0;
+                self.emit_window();
+            }
+        }
+        // bound the surplus side: drop (and count) events beyond the
+        // skew cap so pending memory never scales with stream length
+        let cap = self.cfg.max_pending;
+        while self.pend_a.len() > cap {
+            self.pend_a.pop_front();
+            self.unpaired_dropped += 1;
+            self.aligned = false;
+        }
+        while self.pend_b.len() > cap {
+            self.pend_b.pop_front();
+            self.unpaired_dropped += 1;
+            self.aligned = false;
+        }
+    }
+
+    /// Detect per-label divergence over the current window contents.
+    fn window_findings(&self) -> Vec<StreamFinding> {
+        let mut by_label: BTreeMap<&str, (usize, f64, f64, f64, f64)> = BTreeMap::new();
+        for p in &self.window {
+            let cell = by_label.entry(p.label.as_str()).or_insert((0, 0.0, 0.0, 0.0, 0.0));
+            cell.0 += 1;
+            cell.1 += p.energy_a_j;
+            cell.2 += p.energy_b_j;
+            cell.3 += p.time_a_us;
+            cell.4 += p.time_b_us;
+        }
+        let mut findings = Vec::new();
+        for (label, (ops, ea, eb, ta, tb)) in by_label {
+            if ea <= 0.0 && eb <= 0.0 {
+                continue;
+            }
+            let diff = (ea - eb).abs() / ea.max(eb);
+            if diff < self.cfg.cfg.energy_threshold {
+                continue;
+            }
+            let wasteful = if ea > eb { Side::A } else { Side::B };
+            let (t_waste, t_eff) = match wasteful {
+                Side::A => (ta, tb),
+                Side::B => (tb, ta),
+            };
+            let is_tradeoff = t_eff > t_waste * (1.0 + self.cfg.cfg.perf_tolerance);
+            findings.push(StreamFinding {
+                label: label.to_string(),
+                ops,
+                energy_a_j: ea,
+                energy_b_j: eb,
+                time_a_us: ta,
+                time_b_us: tb,
+                diff_frac: diff,
+                wasteful,
+                is_tradeoff,
+            });
+        }
+        findings.sort_by(|x, y| {
+            let kx = x.energy_a_j.max(x.energy_b_j) * x.diff_frac;
+            let ky = y.energy_a_j.max(y.energy_b_j) * y.diff_frac;
+            ky.total_cmp(&kx)
+        });
+        findings
+    }
+
+    /// Build a report over the current window without emitting it.
+    pub fn window_report(&self) -> WindowReport {
+        let findings = self.window_findings();
+        let wasted_j = findings.iter().map(|f| f.wasted_j()).sum();
+        WindowReport {
+            seq: self.windows,
+            pairs: self.window.len(),
+            energy_a_j: self.win_e_a,
+            energy_b_j: self.win_e_b,
+            time_a_us: self.win_t_a,
+            time_b_us: self.win_t_b,
+            findings,
+            wasted_j,
+            aligned: self.aligned,
+        }
+    }
+
+    fn emit_window(&mut self) {
+        let report = self.window_report();
+        self.windows += 1;
+        self.cum_wasted_j += report.wasted_j;
+        if report.findings.iter().any(|f| !f.is_tradeoff) {
+            self.windows_flagged += 1;
+        }
+        for f in &report.findings {
+            if !f.is_tradeoff {
+                let cell = self.label_waste.entry(f.label.clone()).or_insert((0.0, 0));
+                cell.0 += f.wasted_j();
+                cell.1 += 1;
+            }
+        }
+        self.emitted.push(report);
+    }
+
+    /// Drain the window reports emitted since the last call (bounded by
+    /// how often the caller drains relative to the hop size).
+    pub fn take_emitted(&mut self) -> Vec<WindowReport> {
+        std::mem::take(&mut self.emitted)
+    }
+
+    /// The NVML counter reading visible *now* on side A's ring, through
+    /// the incremental cursor (O(new samples) per call).
+    pub fn nvml_reading_a(&mut self) -> Option<f64> {
+        self.nvml_reading(Side::A)
+    }
+
+    /// The NVML counter reading visible *now* on side B's ring.
+    pub fn nvml_reading_b(&mut self) -> Option<f64> {
+        self.nvml_reading(Side::B)
+    }
+
+    fn nvml_reading(&mut self, side: Side) -> Option<f64> {
+        let nvml = self.cfg.nvml.clone()?;
+        let (ring, state) = match side {
+            Side::A => (&self.ring_a, &mut self.sampler_a),
+            Side::B => (&self.ring_b, &mut self.sampler_b),
+        };
+        Some(nvml.advance(state, ring, ring.t_now_us()))
+    }
+
+    /// Drive two streaming executors to exhaustion in lock-step
+    /// (pending skew ≤ 1 while both are live), handing every emitted
+    /// window to `on_window`, then flush and return the final summary.
+    /// This is the one pairing protocol shared by
+    /// [`crate::coordinator::fleet::StreamFleet`] workers and the
+    /// `stream_audit` example.
+    pub fn drive(
+        &mut self,
+        a: &mut crate::exec::StreamExec<'_>,
+        b: &mut crate::exec::StreamExec<'_>,
+        mut on_window: impl FnMut(WindowReport),
+    ) -> StreamSummary {
+        loop {
+            let na = a.next();
+            let nb = b.next();
+            if na.is_none() && nb.is_none() {
+                break;
+            }
+            if let Some((rec, seg)) = na {
+                self.ingest_a(&rec, seg);
+            }
+            if let Some((rec, seg)) = nb {
+                self.ingest_b(&rec, seg);
+            }
+            for w in self.take_emitted() {
+                on_window(w);
+            }
+        }
+        let summary = self.finish();
+        for w in self.take_emitted() {
+            on_window(w);
+        }
+        summary
+    }
+
+    /// Cumulative summary so far (valid mid-stream).
+    pub fn summary(&self) -> StreamSummary {
+        let mut top: Vec<(String, f64, usize)> = self
+            .label_waste
+            .iter()
+            .map(|(l, &(j, n))| (l.clone(), j, n))
+            .collect();
+        top.sort_by(|x, y| y.1.total_cmp(&x.1).then_with(|| x.0.cmp(&y.0)));
+        StreamSummary {
+            ops: self.ops,
+            windows: self.windows,
+            energy_a_j: self.cum_e_a,
+            energy_b_j: self.cum_e_b,
+            time_a_us: self.cum_t_a,
+            time_b_us: self.cum_t_b,
+            wasted_j: self.cum_wasted_j,
+            windows_flagged: self.windows_flagged,
+            top_labels: top,
+            aligned: self.aligned && self.fp_a == self.fp_b,
+            fingerprint_a: self.fp_a,
+            fingerprint_b: self.fp_b,
+            unpaired: self.pend_a.len() + self.pend_b.len() + self.unpaired_dropped,
+            peak_retained_segments: self.ring_a.peak_retained.max(self.ring_b.peak_retained),
+            peak_window_pairs: self.peak_window_pairs,
+            peak_pending: self.peak_pending,
+        }
+    }
+
+    /// Flush a partial trailing window (if any pairs arrived since the
+    /// last emission) and return the final summary. The flushed window
+    /// is trimmed to the residual tail, so under the default tiling
+    /// every pair is counted exactly once in the waste ledger.
+    pub fn finish(&mut self) -> StreamSummary {
+        // a surplus on either side means the streams did not run the
+        // same workload: flag it rather than silently reporting the
+        // (incomparable) cumulative energies as a clean audit
+        if !self.pend_a.is_empty() || !self.pend_b.is_empty() {
+            self.aligned = false;
+        }
+        if self.pairs_since_hop > 0 {
+            let residual = self.pairs_since_hop.min(self.window.len());
+            while self.window.len() > residual {
+                let old = self.window.pop_front().expect("len > residual >= 0");
+                self.win_e_a -= old.energy_a_j;
+                self.win_e_b -= old.energy_b_j;
+                self.win_t_a -= old.time_a_us;
+                self.win_t_b -= old.time_b_us;
+            }
+            self.pairs_since_hop = 0;
+            self.emit_window();
+        }
+        self.summary()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+    use crate::trace::Frame;
+
+    fn rec(label: &str, op: OpKind, energy_j: f64, time_us: f64) -> KernelRecord {
+        KernelRecord {
+            node: 0,
+            op,
+            label: label.to_string(),
+            api: "api".into(),
+            dispatch_key: op.name().to_string(),
+            kernel: format!("k_{label}"),
+            time_us,
+            energy_j,
+            avg_power_w: energy_j / (time_us * 1e-6),
+            corr_id: 0,
+            bb_trace: vec![],
+            call_path: vec![Frame::py("serve")],
+        }
+    }
+
+    fn seg_after(t0: f64, dur: f64, watts: f64) -> Segment {
+        Segment { t_start_us: t0, t_end_us: t0 + dur, watts }
+    }
+
+    #[test]
+    fn ring_evicts_but_keeps_exact_total() {
+        let mut ring = PowerRing::new(4, 90.0);
+        let mut t = 0.0;
+        let mut expect = 0.0;
+        for i in 0..10 {
+            let w = 100.0 + i as f64;
+            ring.push(seg_after(t, 1000.0, w));
+            expect += w * 1000.0 * 1e-6;
+            t += 1000.0;
+        }
+        assert_eq!(ring.len(), 4);
+        assert_eq!(ring.evicted, 6);
+        assert_eq!(ring.peak_retained, 4);
+        assert!((ring.total_energy_j() - expect).abs() < 1e-12);
+        // power lookups: inside the retained span, outside it, and gaps
+        assert_eq!(ring.power_at_us(6500.0), 106.0);
+        assert_eq!(ring.power_at_us(500.0), 90.0); // evicted -> idle
+        assert_eq!(ring.power_at_us(20_000.0), 90.0); // future -> idle
+        assert_eq!(ring.t_oldest_us(), 6000.0);
+        assert_eq!(ring.t_now_us(), 10_000.0);
+    }
+
+    /// Feed two streams with a wasteful label on side A; the auditor
+    /// must flag it window after window, with memory bounded.
+    #[test]
+    fn auditor_flags_wasteful_label_incrementally() {
+        let cfg = StreamConfig {
+            window_ops: 8,
+            hop_ops: 8,
+            ring_cap: 16,
+            nvml: None,
+            ..Default::default()
+        };
+        let mut aud = StreamAuditor::new(cfg, 90.0);
+        let (mut ta, mut tb) = (0.0, 0.0);
+        for i in 0..64 {
+            let label = if i % 2 == 0 { "proj" } else { "act" };
+            let op = if i % 2 == 0 { OpKind::MatMul } else { OpKind::Gelu };
+            // side A burns 1.5x energy on proj at equal time
+            let (ea, eb) = if i % 2 == 0 { (0.15, 0.10) } else { (0.02, 0.02) };
+            aud.ingest_a(&rec(label, op, ea, 100.0), seg_after(ta, 100.0, ea / 100e-6));
+            ta += 100.0;
+            aud.ingest_b(&rec(label, op, eb, 100.0), seg_after(tb, 100.0, eb / 100e-6));
+            tb += 100.0;
+        }
+        let reports = aud.take_emitted();
+        assert_eq!(reports.len(), 8); // 64 pairs / hop 8
+        for r in &reports {
+            assert!(r.aligned);
+            assert_eq!(r.pairs, 8);
+            assert_eq!(r.findings.len(), 1, "only proj should be flagged");
+            let f = &r.findings[0];
+            assert_eq!(f.label, "proj");
+            assert_eq!(f.wasteful, Side::A);
+            assert!(!f.is_tradeoff);
+            assert!(f.diff_frac > 0.30);
+        }
+        let s = aud.finish();
+        assert_eq!(s.ops, 64);
+        assert_eq!(s.windows, 8);
+        assert_eq!(s.windows_flagged, 8);
+        // waste = 4 proj pairs per window x 0.05 J x 8 windows
+        assert!((s.wasted_j - 8.0 * 4.0 * 0.05).abs() < 1e-9);
+        assert_eq!(s.top_labels[0].0, "proj");
+        assert!(s.aligned);
+        // memory bounds: ring capped, window capped, pairing keeps up
+        assert!(s.peak_retained_segments <= 16);
+        assert_eq!(s.peak_window_pairs, 8);
+        assert!(s.peak_pending <= 2);
+    }
+
+    #[test]
+    fn misaligned_streams_are_reported() {
+        let mut aud = StreamAuditor::new(
+            StreamConfig { window_ops: 2, hop_ops: 2, ..Default::default() },
+            90.0,
+        );
+        aud.ingest_a(&rec("proj", OpKind::MatMul, 0.1, 50.0), seg_after(0.0, 50.0, 200.0));
+        aud.ingest_b(&rec("act", OpKind::Gelu, 0.1, 50.0), seg_after(0.0, 50.0, 200.0));
+        let s = aud.finish();
+        assert!(!s.aligned);
+        assert_ne!(s.fingerprint_a, s.fingerprint_b);
+    }
+
+    /// A surplus of events on one side (streams of different length)
+    /// must flag the audit as misaligned instead of reporting the
+    /// incomparable cumulative energies as clean.
+    #[test]
+    fn unequal_length_streams_flagged_misaligned() {
+        let mut aud = StreamAuditor::new(
+            StreamConfig { window_ops: 2, hop_ops: 2, nvml: None, ..Default::default() },
+            90.0,
+        );
+        let r = rec("proj", OpKind::MatMul, 0.1, 50.0);
+        let mut t = 0.0;
+        for _ in 0..4 {
+            aud.ingest_a(&r, seg_after(t, 50.0, 2000.0));
+            t += 50.0;
+        }
+        for i in 0..2 {
+            aud.ingest_b(&r, seg_after(i as f64 * 50.0, 50.0, 2000.0));
+        }
+        let s = aud.finish();
+        assert!(!s.aligned, "surplus side-A events must break alignment");
+        assert_eq!(s.unpaired, 2);
+        assert_eq!(s.ops, 2); // only the matched prefix was audited
+    }
+
+    /// A one-sided flood (the other stream stalled or ended) must not
+    /// grow pending memory with stream length: the surplus is dropped
+    /// past the skew cap, counted as unpaired, and breaks alignment.
+    #[test]
+    fn one_sided_flood_is_capped() {
+        let cap = 8;
+        let mut aud = StreamAuditor::new(
+            StreamConfig {
+                window_ops: 4,
+                hop_ops: 4,
+                ring_cap: 8,
+                max_pending: cap,
+                nvml: None,
+                ..Default::default()
+            },
+            90.0,
+        );
+        let r = rec("proj", OpKind::MatMul, 0.1, 50.0);
+        let mut t = 0.0;
+        for _ in 0..1000 {
+            aud.ingest_a(&r, seg_after(t, 50.0, 2000.0));
+            t += 50.0;
+        }
+        assert!(aud.ring_a.peak_retained <= 8);
+        let s = aud.finish();
+        assert!(!s.aligned);
+        assert_eq!(s.unpaired, 1000); // dropped + still-pending
+        assert_eq!(s.ops, 0);
+        assert!(s.peak_pending <= cap + 1, "pending grew: {}", s.peak_pending);
+    }
+
+    /// The matched-history fingerprint is a stable workload identity:
+    /// equal across both sides of an aligned audit and across two
+    /// independent auditors fed the same workload.
+    #[test]
+    fn matched_history_fingerprint_is_stable() {
+        let run = |energies: &[f64]| {
+            let mut aud = StreamAuditor::new(
+                StreamConfig { window_ops: 4, hop_ops: 4, nvml: None, ..Default::default() },
+                90.0,
+            );
+            let mut t = 0.0;
+            for (i, &e) in energies.iter().enumerate() {
+                let label = if i % 2 == 0 { "proj" } else { "act" };
+                let op = if i % 2 == 0 { OpKind::MatMul } else { OpKind::Gelu };
+                aud.ingest_a(&rec(label, op, e, 50.0), seg_after(t, 50.0, 1000.0));
+                aud.ingest_b(&rec(label, op, 0.1, 50.0), seg_after(t, 50.0, 1000.0));
+                t += 50.0;
+            }
+            aud.finish()
+        };
+        // different energies, same op structure -> same fingerprint
+        let s1 = run(&[0.1, 0.2, 0.3, 0.4]);
+        let s2 = run(&[0.9, 0.8, 0.7, 0.6]);
+        assert!(s1.aligned && s2.aligned);
+        assert_eq!(s1.fingerprint_a, s1.fingerprint_b);
+        assert_eq!(s1.fingerprint_a, s2.fingerprint_a);
+        // different structure -> different fingerprint
+        let s3 = run(&[0.1, 0.2]);
+        assert_ne!(s1.fingerprint_a, s3.fingerprint_a);
+    }
+
+    #[test]
+    fn equal_streams_produce_no_waste() {
+        let mut aud = StreamAuditor::new(
+            StreamConfig { window_ops: 4, hop_ops: 4, nvml: None, ..Default::default() },
+            90.0,
+        );
+        let mut t = 0.0;
+        for _ in 0..16 {
+            let r = rec("proj", OpKind::MatMul, 0.1, 100.0);
+            aud.ingest_a(&r, seg_after(t, 100.0, 1000.0));
+            aud.ingest_b(&r, seg_after(t, 100.0, 1000.0));
+            t += 100.0;
+        }
+        let s = aud.finish();
+        assert_eq!(s.wasted_j, 0.0);
+        assert_eq!(s.windows_flagged, 0);
+        assert!(s.aligned);
+    }
+
+    /// A performance/energy trade-off (efficient side slower) must be
+    /// annotated, not counted as waste.
+    #[test]
+    fn tradeoff_not_counted_as_waste() {
+        let mut aud = StreamAuditor::new(
+            StreamConfig { window_ops: 4, hop_ops: 4, nvml: None, ..Default::default() },
+            90.0,
+        );
+        let (mut ta, mut tb) = (0.0, 0.0);
+        for _ in 0..4 {
+            // side A: more energy but much faster; B is "efficient" but slow
+            aud.ingest_a(&rec("proj", OpKind::MatMul, 0.2, 50.0), seg_after(ta, 50.0, 4000.0));
+            ta += 50.0;
+            aud.ingest_b(&rec("proj", OpKind::MatMul, 0.1, 200.0), seg_after(tb, 200.0, 500.0));
+            tb += 200.0;
+        }
+        let s = aud.finish();
+        assert_eq!(s.windows, 1);
+        assert_eq!(s.wasted_j, 0.0, "trade-off counted as waste");
+        assert_eq!(s.windows_flagged, 0);
+    }
+
+    /// The incremental NVML cursor reads the ring without ever touching
+    /// evicted history: readings stay finite and converge toward the
+    /// recent power level.
+    #[test]
+    fn nvml_cursor_reads_ring() {
+        // off-phase sample grid (step ≈ 997 µs vs 1000 µs segments) so
+        // samples land inside segments, not on their idle boundaries
+        let nvml = NvmlSampler { sample_hz: 1003.0, latency_us: 0.0, ema_alpha: 0.0 };
+        let mut aud = StreamAuditor::new(
+            StreamConfig { window_ops: 4, hop_ops: 4, ring_cap: 8, nvml: Some(nvml), ..Default::default() },
+            90.0,
+        );
+        let mut t = 0.0;
+        for _ in 0..100 {
+            let r = rec("proj", OpKind::MatMul, 0.3, 1000.0);
+            aud.ingest_a(&r, seg_after(t, 1000.0, 300.0));
+            aud.ingest_b(&r, seg_after(t, 1000.0, 300.0));
+            t += 1000.0;
+        }
+        let reading = aud.nvml_reading_a().expect("nvml configured");
+        assert!((reading - 300.0).abs() < 1.0, "reading {reading}");
+        // ring never grew past its capacity despite 100 segments
+        assert_eq!(aud.ring_a.peak_retained, 8);
+    }
+}

@@ -76,6 +76,11 @@ pub struct TraceBuffer {
     pub overhead_per_event_us: f64,
     /// Accumulated overhead, µs.
     pub total_overhead_us: f64,
+    /// Correlation ID → index of the **first** ApiCall event recorded
+    /// with it, maintained on `record` so `api_for_corr` and
+    /// `kernel_call_paths` are O(log n) lookups instead of linear scans
+    /// / per-call map rebuilds.
+    api_index: BTreeMap<u64, usize>,
 }
 
 impl TraceBuffer {
@@ -100,6 +105,9 @@ impl TraceBuffer {
         node: Option<usize>,
     ) -> usize {
         let id = self.events.len();
+        if matches!(kind, EventKind::ApiCall { .. }) {
+            self.api_index.entry(corr_id).or_insert(id);
+        }
         self.events.push(Event { id, corr_id, t_start_us, t_end_us, kind, stack, node });
         self.total_overhead_us += self.overhead_per_event_us;
         id
@@ -112,31 +120,25 @@ impl TraceBuffer {
             .filter(|e| matches!(e.kind, EventKind::KernelLaunch { .. }))
     }
 
-    /// The API-call event for a correlation ID, if any.
+    /// The API-call event for a correlation ID, if any (the first one
+    /// recorded with it). Indexed: O(log n), not a linear scan.
     pub fn api_for_corr(&self, corr: u64) -> Option<&Event> {
-        self.events
-            .iter()
-            .find(|e| e.corr_id == corr && matches!(e.kind, EventKind::ApiCall { .. }))
+        self.api_index.get(&corr).map(|&i| &self.events[i])
     }
 
     /// Unified view: for every kernel, the call path of the API call that
     /// launched it (CPU↔GPU correlation, paper §5.1). Returns
-    /// `(kernel_name, call_path, node)` tuples in launch order.
+    /// `(kernel_name, call_path, node)` tuples in launch order. Uses the
+    /// maintained corr-id index instead of rebuilding a map per call.
     pub fn kernel_call_paths(&self) -> Vec<(String, CallPath, Option<usize>)> {
-        let by_corr: BTreeMap<u64, &Event> = self
-            .events
-            .iter()
-            .filter(|e| matches!(e.kind, EventKind::ApiCall { .. }))
-            .map(|e| (e.corr_id, e))
-            .collect();
         self.kernels()
             .map(|k| {
                 let kernel = match &k.kind {
                     EventKind::KernelLaunch { kernel, .. } => kernel.clone(),
                     _ => unreachable!(),
                 };
-                let mut path = by_corr
-                    .get(&k.corr_id)
+                let mut path = self
+                    .api_for_corr(k.corr_id)
                     .map(|api| api.stack.clone())
                     .unwrap_or_default();
                 // the kernel itself is the leaf of the path
@@ -208,6 +210,43 @@ mod tests {
             tb.record(c, 0.0, 1.0, EventKind::KernelLaunch { kernel: "k".into(), energy_j: e }, vec![], None);
         }
         assert!((tb.kernel_energy_j() - 1.0).abs() < 1e-12);
+    }
+
+    /// The maintained corr-id index must agree with the old linear scan
+    /// on a buffer mixing api calls, kernels, copies, orphan kernels,
+    /// and duplicate ApiCall corr-ids (first recorded wins).
+    #[test]
+    fn indexed_api_lookup_agrees_with_scan() {
+        let mut tb = TraceBuffer::new(0.0);
+        for i in 0..60u64 {
+            let c = tb.next_corr_id();
+            match i % 4 {
+                0 => {
+                    tb.record(c, 0.0, 1.0, EventKind::ApiCall { api: format!("api{i}") }, vec![Frame::py("f")], None);
+                    tb.record(c, 1.0, 2.0, EventKind::KernelLaunch { kernel: format!("k{i}"), energy_j: 0.1 }, vec![], None);
+                }
+                1 => {
+                    // duplicate ApiCall on the same corr: first must win
+                    tb.record(c, 0.0, 1.0, EventKind::ApiCall { api: format!("first{i}") }, vec![], None);
+                    tb.record(c, 1.0, 2.0, EventKind::ApiCall { api: format!("second{i}") }, vec![], None);
+                }
+                2 => {
+                    // orphan kernel: no api record at all
+                    tb.record(c, 0.0, 1.0, EventKind::KernelLaunch { kernel: format!("orphan{i}"), energy_j: 0.0 }, vec![], None);
+                }
+                _ => {
+                    tb.record(c, 0.0, 1.0, EventKind::MemCopy { bytes: 8.0 }, vec![], None);
+                }
+            }
+        }
+        for corr in 0..=61u64 {
+            let scanned = tb
+                .events
+                .iter()
+                .find(|e| e.corr_id == corr && matches!(e.kind, EventKind::ApiCall { .. }))
+                .map(|e| e.id);
+            assert_eq!(tb.api_for_corr(corr).map(|e| e.id), scanned, "corr {corr}");
+        }
     }
 
     #[test]

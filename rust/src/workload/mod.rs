@@ -3,11 +3,12 @@
 //! and the uneven data-parallel training workload behind the DDP
 //! `dist.Join` case (Fig 4 / c9).
 
-use crate::dispatch::Env;
-use crate::energy::{DeviceSpec, PowerTrace};
+use crate::dispatch::{Env, KernelChoice, Routine};
+use crate::energy::{ComputeUnit, DeviceSpec, PowerTrace};
 use crate::exec::{Dispatcher, Executor, Program, RunArtifacts};
 use crate::graph::{Attrs, Graph, OpKind};
 use crate::tensor::Tensor;
+use crate::trace::Frame;
 use crate::util::Prng;
 
 /// An offline-inference request mix: `(input_tokens, output_tokens)`
@@ -159,6 +160,79 @@ pub fn run_ddp(device: &DeviceSpec, w: &DdpWorkload, strategy: SyncStrategy, see
     DdpRun { traces, total_energy_j: total_e, wall_us, artifacts }
 }
 
+/// A long-running serving stream: `requests` back-to-back decode-style
+/// steps over shared weights, each hitting the same five call sites
+/// (`serve.proj` → `serve.scale` → `serve.act` → `serve.out` →
+/// `serve.softmax`). The graph is deliberately *long* (5 kernels per
+/// request) with a *small* live set (one activation + two weights), the
+/// shape [`crate::exec::StreamExec`] and the stream auditor are built
+/// for. The trailing softmax renormalises each step, so activations
+/// stay bounded over arbitrarily many requests.
+#[derive(Clone, Copy, Debug)]
+pub struct ServingStream {
+    pub requests: usize,
+    pub batch: usize,
+    pub d_model: usize,
+}
+
+impl Default for ServingStream {
+    fn default() -> ServingStream {
+        // matmuls sized so dynamic energy is a visible share of the op
+        // cost (a 0.6-efficiency kernel diverges well above the 10 %
+        // detection threshold), yet each step stays CPU-cheap
+        ServingStream { requests: 1000, batch: 64, d_model: 128 }
+    }
+}
+
+impl ServingStream {
+    /// Kernel launches the stream will emit (5 per request).
+    pub fn kernel_ops(&self) -> usize {
+        self.requests * 5
+    }
+}
+
+/// Build the serving-stream program (feeds included).
+pub fn serving_stream_program(rng: &mut Prng, s: &ServingStream) -> Program {
+    let d = s.d_model;
+    let mut g = Graph::new("serving-stream");
+    let x = g.add(OpKind::Input, &[], "tokens");
+    let w1 = g.add(OpKind::Weight, &[], "w1");
+    let w2 = g.add(OpKind::Weight, &[], "w2");
+    let inv_sqrt_d = format!("{}", 1.0 / (d as f64).sqrt());
+    let mut cur = x;
+    for _ in 0..s.requests {
+        let m = g.add(OpKind::MatMul, &[cur, w1], "serve.proj");
+        let sc = g.add_attr1(OpKind::Scale, &[m], "serve.scale", "s", &inv_sqrt_d);
+        let a = g.add(OpKind::Gelu, &[sc], "serve.act");
+        let o = g.add(OpKind::MatMul, &[a, w2], "serve.out");
+        cur = g.add(OpKind::Softmax, &[o], "serve.softmax");
+    }
+    g.add(OpKind::Output, &[cur], "serve.result");
+    let mut p = Program::new(g);
+    p.feed(x, Tensor::randn(rng, &[s.batch, d]));
+    p.feed(w1, Tensor::randn(rng, &[d, d]));
+    p.feed(w2, Tensor::randn(rng, &[d, d]));
+    p
+}
+
+/// Dispatcher for one side of a serving pair: its matmul kernel runs at
+/// implementation quality `eff` (1.0 = energy-optimal; lower burns
+/// extra power at equal speed — the differential signal the stream
+/// auditor hunts).
+pub fn serving_dispatcher(eff: f64) -> Dispatcher {
+    let kernel = if eff < 1.0 { "legacy_sgemm" } else { "tf32_gemm" };
+    let mut disp = Dispatcher::new();
+    disp.register(
+        "matmul",
+        Routine::direct(
+            "torch.matmul",
+            vec![Frame::cpp("at::cuda::blas::gemm")],
+            KernelChoice::new(kernel, ComputeUnit::TensorCore).quality(eff, 1.0, 1.0),
+        ),
+    );
+    disp
+}
+
 /// Serve a request mix on an LLM system builder, returning artifacts for
 /// the prefill pass and each decode step (J/token comes from these).
 pub fn serve_mix(
@@ -249,5 +323,47 @@ mod tests {
     fn mix_token_count() {
         let m = ServeMix { input_tokens: 128, output_tokens: 128, requests: 4 };
         assert_eq!(m.total_tokens(), 1024);
+    }
+
+    /// The serving stream emits exactly 5 kernels per request through
+    /// the streaming executor, stays numerically bounded (softmax
+    /// renormalisation), and its live tensor set is independent of the
+    /// stream length.
+    #[test]
+    fn serving_stream_is_long_but_bounded() {
+        let dev = DeviceSpec::h200_sim();
+        let spec = ServingStream { requests: 40, batch: 16, d_model: 32 };
+        let mut rng = Prng::new(17);
+        let prog = serving_stream_program(&mut rng, &spec);
+        let exec = Executor::new(dev, serving_dispatcher(1.0), Env::new());
+        let mut stream = exec.stream(&prog);
+        let mut ops = 0;
+        for (rec, seg) in stream.by_ref() {
+            assert!(rec.energy_j.is_finite() && rec.energy_j > 0.0, "{}", rec.label);
+            assert!(seg.watts.is_finite());
+            ops += 1;
+        }
+        assert_eq!(ops, spec.kernel_ops());
+        let stats = stream.stats();
+        assert_eq!(stats.ops, spec.kernel_ops());
+        // live set: activation chain + 2 weights + input, far below the
+        // 200+ node graph
+        assert!(stats.live_tensors_peak <= 8, "peak {}", stats.live_tensors_peak);
+    }
+
+    /// An inefficient matmul dispatcher must raise serving energy at
+    /// equal time — the signal the streaming detector keys on.
+    #[test]
+    fn serving_dispatcher_efficiency_changes_energy_not_time() {
+        let dev = DeviceSpec::h200_sim();
+        let spec = ServingStream { requests: 6, batch: 64, d_model: 128 };
+        let mut rng_a = Prng::new(5);
+        let mut rng_b = Prng::new(5);
+        let prog_a = serving_stream_program(&mut rng_a, &spec);
+        let prog_b = serving_stream_program(&mut rng_b, &spec);
+        let bad = Executor::new(dev.clone(), serving_dispatcher(0.6), Env::new()).run(&prog_a);
+        let good = Executor::new(dev, serving_dispatcher(1.0), Env::new()).run(&prog_b);
+        assert!(bad.total_energy_j > good.total_energy_j * 1.05);
+        assert!((bad.gpu_time_us - good.gpu_time_us).abs() / good.gpu_time_us < 1e-9);
     }
 }
