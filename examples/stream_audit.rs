@@ -1,14 +1,15 @@
 //! Streaming online-audit demo: a ≥5000-operator serving stream audited
-//! chunk-by-chunk against an energy-optimal reference, with retained
-//! power-trace memory bounded by the ring capacity — never the stream
-//! length. Finishes with a small streaming *fleet* audit over three
-//! concurrent serving pairs.
+//! chunk-by-chunk against an energy-optimal reference under a Poisson
+//! request-arrival process (idle lulls materialised in the power
+//! rings), with retained power-trace memory bounded by the ring
+//! capacity — never the stream length. Finishes with a small streaming
+//! *fleet* audit over three concurrent serving pairs.
 //!
 //! ```sh
-//! cargo run --release --example stream_audit [-- --requests 1200 --window 250 --ring 512]
+//! cargo run --release --example stream_audit [-- --requests 1200 --window 250 --ring 512 --rate 300]
 //! ```
 
-use magneton::coordinator::fleet::StreamFleet;
+use magneton::coordinator::fleet::{drive_pair_with_arrivals, StreamFleet};
 use magneton::coordinator::SysRun;
 use magneton::dispatch::Env;
 use magneton::energy::DeviceSpec;
@@ -17,22 +18,28 @@ use magneton::report;
 use magneton::stream::{StreamAuditor, StreamConfig};
 use magneton::util::cli::Args;
 use magneton::util::Prng;
-use magneton::workload::{serving_dispatcher, serving_stream_program, ServingStream};
+use magneton::workload::{serving_dispatcher, serving_stream_program, ArrivalProcess, ServingStream};
 
 fn main() {
     let args = Args::from_env();
     // ≥1000 requests keeps the demo stream at ≥5000 operators
     let requests: usize = args.get_parse("requests", 1200usize).max(1000);
     let spec = ServingStream { requests, ..Default::default() };
-    let mut cfg = StreamConfig::default();
-    cfg.window_ops = args.get_parse("window", 250usize);
-    cfg.hop_ops = cfg.window_ops;
-    cfg.ring_cap = args.get_parse("ring", 512usize);
+    let window_ops = args.get_parse("window", 250usize);
+    let cfg = StreamConfig {
+        window_ops,
+        hop_ops: window_ops,
+        ring_cap: args.get_parse("ring", 512usize),
+        // bounded report buffer: we drain every window, so nothing may drop
+        max_emitted: 64,
+        ..StreamConfig::default()
+    };
+    let arrival = ArrivalProcess::Poisson { rate_hz: args.get_parse("rate", 300.0f64) };
     let device = DeviceSpec::h200_sim();
     let seed: u64 = args.get_parse("seed", 2026u64);
 
     println!(
-        "auditing a {}-operator serving stream (window {} pairs, ring {} segments)...\n",
+        "auditing a {}-operator serving stream (window {} pairs, ring {} segments, {arrival:?} arrivals)...\n",
         spec.kernel_ops(),
         cfg.window_ops,
         cfg.ring_cap
@@ -44,14 +51,27 @@ fn main() {
     let mut rng_b = Prng::new(seed);
     let prog_a = serving_stream_program(&mut rng_a, &spec);
     let prog_b = serving_stream_program(&mut rng_b, &spec);
-    let exec_a = Executor::new(device.clone(), serving_dispatcher(0.62), Env::new());
-    let exec_b = Executor::new(device.clone(), serving_dispatcher(1.0), Env::new());
+    let mut exec_a = Executor::new(device.clone(), serving_dispatcher(0.62), Env::new());
+    let mut exec_b = Executor::new(device.clone(), serving_dispatcher(1.0), Env::new());
+    // content guards: per-op moment sketches ride the kernel records
+    exec_a.opts.content_sketch = true;
+    exec_b.opts.content_sketch = true;
 
     let mut aud = StreamAuditor::new(cfg.clone(), device.idle_w);
     let mut sa = exec_a.stream(&prog_a);
     let mut sb = exec_b.stream(&prog_b);
-    // rolling output: print each detection window as it closes
-    let summary = aud.drive(&mut sa, &mut sb, |w| println!("{}", report::render_window(&w)));
+    // rolling output: print each detection window as it closes; the
+    // shared arrival rng injects the same idle lulls into both rings
+    let mut arrival_rng = Prng::new(seed ^ 0xa441_b815);
+    let summary = drive_pair_with_arrivals(
+        &mut aud,
+        &mut sa,
+        &mut sb,
+        arrival,
+        spec.ops_per_request(),
+        &mut arrival_rng,
+        |w| println!("{}", report::render_window(&w)),
+    );
     if let Some(w) = aud.nvml_reading_a() {
         println!("live NVML counter, side A: {w:.0} W");
     }
@@ -59,7 +79,8 @@ fn main() {
     print!("{}", report::render_stream("inefficient-vs-optimal", &summary));
 
     // The acceptance invariant: peak retained power-trace memory is set
-    // by the ring capacity, not by how long the stream ran.
+    // by the ring capacity, not by how long the stream ran — arrival
+    // lulls included.
     assert_eq!(summary.ops, spec.kernel_ops());
     assert!(
         summary.peak_retained_segments <= cfg.ring_cap,
@@ -67,6 +88,12 @@ fn main() {
         summary.peak_retained_segments,
         cfg.ring_cap
     );
+    // identical workloads under a shared arrival sequence: no
+    // divergence, no content alarms, and a drained report buffer
+    assert!(summary.aligned, "same-workload pair must stay aligned");
+    assert_eq!(summary.resyncs, 0);
+    assert_eq!(summary.content_mismatches, 0, "content guard false alarm");
+    assert_eq!(summary.reports_dropped, 0, "drained auditor must not drop reports");
     println!(
         "\npeak retained power segments: {} (ring cap {}, stream emitted {} segments/side)",
         summary.peak_retained_segments,
@@ -74,10 +101,14 @@ fn main() {
         summary.ops
     );
 
-    // A small streaming fleet over three concurrent serving pairs.
+    // A small streaming fleet over three concurrent serving pairs under
+    // the same arrival process.
     println!();
     let mut fleet = StreamFleet::new(device);
     fleet.cfg = cfg;
+    fleet.arrival = arrival;
+    fleet.ops_per_request = spec.ops_per_request();
+    fleet.arrival_seed = seed;
     let fleet_spec = ServingStream { requests: requests / 6, ..spec };
     for (i, eff) in [0.62, 1.0, 0.8].iter().enumerate() {
         let mut ra = Prng::new(seed + 1 + i as u64);
@@ -96,4 +127,13 @@ fn main() {
     );
     let r = fleet.run();
     print!("{}", report::render_stream_fleet(&r));
+    for e in &r.entries {
+        assert!(e.summary.aligned, "{} diverged", e.name);
+        assert!(
+            e.summary.peak_retained_segments <= fleet.cfg.ring_cap,
+            "{}: ring overflow {}",
+            e.name,
+            e.summary.peak_retained_segments
+        );
+    }
 }

@@ -10,6 +10,8 @@ use magneton::coordinator::SysRun;
 use magneton::dispatch::Env;
 use magneton::energy::sampler::NvmlSampler;
 use magneton::energy::{DeviceSpec, PowerTrace};
+use magneton::exec::Executor;
+use magneton::stream::{StreamAuditor, StreamConfig};
 use magneton::util::bench::{banner, persist, time_once};
 use magneton::util::cli::Args;
 use magneton::util::table::{fmt_joules, fmt_us, Table};
@@ -144,5 +146,96 @@ fn main() {
     let part2 = t2.render();
     println!("{part2}");
 
-    persist("stream_scaling", &format!("{part1}\n{part2}"), Some(&format!("{csv}\n{csv2}")));
+    // --- part 3: resynchronisation keeps a dropped kernel local ----------
+    // One kernel skipped mid-stream on side A of an otherwise identical
+    // pair. With resync, the damage is exactly one quarantined window no
+    // matter how long the stream runs; with resync disabled (the
+    // pre-fix behaviour) every window after the skip is poisoned.
+    let mut t3 = Table::new(vec!["stream ops", "mode", "resyncs", "poisoned windows", "flagged", "wasted"]);
+    let mut csv3 = String::from("ops,mode,resyncs,poisoned,flagged\n");
+    let mut poisoned_by_mode: Vec<(usize, &str, usize)> = Vec::new();
+    for requests in [100usize, 200] {
+        let spec = ServingStream { requests, batch: 64, d_model: 128 };
+        for (mode, lookahead) in [("resync", 64usize), ("no-resync", 0)] {
+            let cfg = StreamConfig {
+                window_ops: 50,
+                hop_ops: 50,
+                ring_cap: 128,
+                resync_lookahead: lookahead,
+                nvml: None,
+                ..Default::default()
+            };
+            let dev = DeviceSpec::h200_sim();
+            let mut rng_a = Prng::new(7);
+            let mut rng_b = Prng::new(7);
+            let prog_a = serving_stream_program(&mut rng_a, &spec);
+            let prog_b = serving_stream_program(&mut rng_b, &spec);
+            let exec_a = Executor::new(dev.clone(), serving_dispatcher(1.0), Env::new());
+            let exec_b = Executor::new(dev.clone(), serving_dispatcher(1.0), Env::new());
+            let mut sa = exec_a.stream(&prog_a);
+            let mut sb = exec_b.stream(&prog_b);
+            let mut aud = StreamAuditor::new(cfg, dev.idle_w);
+            let skip_at = spec.kernel_ops() / 2;
+            let mut i = 0usize;
+            let mut poisoned = 0usize;
+            loop {
+                let mut na = sa.next();
+                if i == skip_at {
+                    na = sa.next(); // drop one side-A kernel on the floor
+                }
+                let nb = sb.next();
+                if na.is_none() && nb.is_none() {
+                    break;
+                }
+                if let Some((rec, seg)) = na {
+                    aud.ingest_a(&rec, seg);
+                }
+                if let Some((rec, seg)) = nb {
+                    aud.ingest_b(&rec, seg);
+                }
+                i += 1;
+                for w in aud.take_emitted() {
+                    if w.quarantined || !w.aligned {
+                        poisoned += 1;
+                    }
+                }
+            }
+            let s = aud.finish();
+            for w in aud.take_emitted() {
+                if w.quarantined || !w.aligned {
+                    poisoned += 1;
+                }
+            }
+            if lookahead > 0 {
+                assert_eq!(s.resyncs, 1, "exactly one re-anchor expected");
+                assert_eq!(poisoned, 1, "resync must localise the skip to one window");
+                assert_eq!(s.windows_flagged, 0, "no spurious findings after re-anchor");
+                assert_eq!(s.wasted_j, 0.0);
+            } else {
+                assert!(s.wasted_j > 0.0, "shifted pairing must flag garbage waste");
+            }
+            t3.row(vec![
+                s.ops.to_string(),
+                mode.to_string(),
+                s.resyncs.to_string(),
+                poisoned.to_string(),
+                s.windows_flagged.to_string(),
+                fmt_joules(s.wasted_j),
+            ]);
+            csv3.push_str(&format!("{},{mode},{},{poisoned},{}\n", s.ops, s.resyncs, s.windows_flagged));
+            poisoned_by_mode.push((requests, mode, poisoned));
+        }
+    }
+    // locality signature: without resync the poisoned-window count grows
+    // with stream length; with resync it is pinned at one
+    let no_resync: Vec<usize> = poisoned_by_mode.iter().filter(|x| x.1 == "no-resync").map(|x| x.2).collect();
+    assert!(no_resync[1] > no_resync[0], "no-resync poisoning did not grow: {no_resync:?}");
+    let part3 = t3.render();
+    println!("{part3}");
+
+    persist(
+        "stream_scaling",
+        &format!("{part1}\n{part2}\n{part3}"),
+        Some(&format!("{csv}\n{csv2}\n{csv3}")),
+    );
 }

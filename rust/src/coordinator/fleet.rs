@@ -14,10 +14,11 @@ use std::time::Instant;
 
 use crate::coordinator::{AuditOutcome, Magneton, SysRun};
 use crate::detect::DetectConfig;
-use crate::energy::DeviceSpec;
-use crate::exec::{ExecOptions, Executor};
-use crate::stream::{StreamAuditor, StreamConfig, StreamSummary};
-use crate::util::pool;
+use crate::energy::{DeviceSpec, Segment};
+use crate::exec::{ExecOptions, Executor, KernelRecord};
+use crate::stream::{StreamAuditor, StreamConfig, StreamSummary, WindowReport};
+use crate::util::{fnv1a, pool, Prng};
+use crate::workload::ArrivalProcess;
 
 /// One named audit job: two systems on the same workload.
 pub struct FleetPair {
@@ -135,6 +136,59 @@ impl FleetAudit {
     }
 }
 
+/// Drive one streaming event-source pair through an auditor,
+/// materialising request-arrival idle gaps every `ops_per_request` op
+/// pairs on both sides (`ops_per_request == 0` disables gaps). The gap
+/// sequence is sampled once from `rng` and applied to both rings, so
+/// the arrival process itself can never desynchronise the pair.
+/// Emitted windows stream through `on_window`; returns the final
+/// summary. Generic over any `(KernelRecord, Segment)` iterator — a
+/// live [`crate::exec::StreamExec`] (fleet workers, the `stream_audit`
+/// example) or a channel receiver draining chunked ingestion
+/// (`magneton stream`) — so the pairing protocol exists exactly once.
+pub fn drive_pair_with_arrivals(
+    aud: &mut StreamAuditor,
+    mut a: impl Iterator<Item = (KernelRecord, Segment)>,
+    mut b: impl Iterator<Item = (KernelRecord, Segment)>,
+    arrival: ArrivalProcess,
+    ops_per_request: usize,
+    rng: &mut Prng,
+    mut on_window: impl FnMut(WindowReport),
+) -> StreamSummary {
+    let mut pairs = 0usize;
+    let mut request = 0usize;
+    loop {
+        let na = a.next();
+        let nb = b.next();
+        if na.is_none() && nb.is_none() {
+            break;
+        }
+        if let Some((rec, seg)) = na {
+            aud.ingest_a(&rec, seg);
+        }
+        if let Some((rec, seg)) = nb {
+            aud.ingest_b(&rec, seg);
+        }
+        pairs += 1;
+        if ops_per_request > 0 && pairs % ops_per_request == 0 {
+            request += 1;
+            let gap = arrival.gap_us(rng, request);
+            if gap > 0.0 {
+                aud.ingest_idle_a(gap);
+                aud.ingest_idle_b(gap);
+            }
+        }
+        for w in aud.take_emitted() {
+            on_window(w);
+        }
+    }
+    let summary = aud.finish();
+    for w in aud.take_emitted() {
+        on_window(w);
+    }
+    summary
+}
+
 /// The aggregated result of one streaming pair.
 pub struct StreamFleetEntry {
     pub name: String,
@@ -171,6 +225,14 @@ pub struct StreamFleet {
     pub exec_opts: ExecOptions,
     /// Maximum concurrent stream audits.
     pub workers: usize,
+    /// Request arrival process driving every pair (idle lulls are
+    /// materialised in both rings).
+    pub arrival: ArrivalProcess,
+    /// Op pairs per request (gap-injection stride); `0` disables gaps.
+    pub ops_per_request: usize,
+    /// Seed of the per-pair arrival rngs (forked per pair name, so
+    /// results are independent of worker count and submission order).
+    pub arrival_seed: u64,
     pairs: Vec<FleetPair>,
 }
 
@@ -179,8 +241,13 @@ impl StreamFleet {
         StreamFleet {
             device,
             cfg: StreamConfig::default(),
-            exec_opts: ExecOptions::default(),
+            // streams guard output content by default: the sketch is
+            // cheap at serving-op sizes and rides the kernel records
+            exec_opts: ExecOptions { content_sketch: true, ..ExecOptions::default() },
             workers: pool::default_threads(),
+            arrival: ArrivalProcess::BackToBack,
+            ops_per_request: 0,
+            arrival_seed: 0x6d61_676e,
             pairs: Vec::new(),
         }
     }
@@ -211,9 +278,19 @@ impl StreamFleet {
             let mut aud = StreamAuditor::new(self.cfg.clone(), self.device.idle_w);
             let mut sa = exec_a.stream(&p.a.prog);
             let mut sb = exec_b.stream(&p.b.prog);
-            // lock-step interleave (pending skew ≤ 1); per-window
-            // reports are dropped — the summary keeps the aggregates
-            let summary = aud.drive(&mut sa, &mut sb, |_| {});
+            // lock-step interleave (pending skew ≤ 1) with arrival
+            // gaps; per-window reports are dropped — the summary keeps
+            // the aggregates
+            let mut rng = Prng::new(self.arrival_seed ^ fnv1a(p.name.bytes()));
+            let summary = drive_pair_with_arrivals(
+                &mut aud,
+                &mut sa,
+                &mut sb,
+                self.arrival,
+                self.ops_per_request,
+                &mut rng,
+                |_| {},
+            );
             StreamFleetEntry { name: p.name.clone(), summary }
         });
         entries.sort_by(|x, y| {
@@ -401,6 +478,66 @@ mod tests {
             assert_eq!(s.summary.ops, p.summary.ops);
             assert_eq!(s.summary.windows, p.summary.windows);
             assert!((s.summary.wasted_j - p.summary.wasted_j).abs() < 1e-12, "{}", s.name);
+        }
+    }
+
+    fn arrival_fleet(workers: usize, arrival: ArrivalProcess) -> StreamFleetReport {
+        let mut fleet = StreamFleet::new(DeviceSpec::h200_sim());
+        fleet.workers = workers;
+        fleet.cfg.window_ops = 40;
+        fleet.cfg.hop_ops = 40;
+        fleet.cfg.ring_cap = 64;
+        fleet.arrival = arrival;
+        fleet.ops_per_request = ServingStream::default().ops_per_request();
+        for (i, eff) in [0.6, 1.0].iter().enumerate() {
+            fleet.add_pair(
+                &format!("arrival-{i}"),
+                mk_stream_run("sys-a", 70 + i as u64, *eff, 24),
+                mk_stream_run("sys-b", 70 + i as u64, 1.0, 24),
+            );
+        }
+        fleet.run()
+    }
+
+    /// Poisson arrivals interleave idle lulls into both rings without
+    /// desynchronising the pair: detection verdicts match the
+    /// back-to-back run, memory stays ring-bounded, and the result is
+    /// still independent of worker count (per-pair arrival rngs).
+    #[test]
+    fn stream_fleet_with_poisson_arrivals_stays_aligned() {
+        let poisson = ArrivalProcess::Poisson { rate_hz: 500.0 };
+        let r = arrival_fleet(2, poisson);
+        assert_eq!(r.entries.len(), 2);
+        assert_eq!(r.flagged(), 1);
+        for e in &r.entries {
+            assert!(e.summary.aligned, "{}", e.name);
+            assert_eq!(e.summary.resyncs, 0, "{}", e.name);
+            assert_eq!(e.summary.content_mismatches, 0, "{}", e.name);
+            assert!(e.summary.peak_retained_segments <= 64, "{}", e.name);
+        }
+        // same verdicts as the gap-free process: arrivals change the
+        // power timeline, not the per-op energy accounting
+        let steady = arrival_fleet(2, ArrivalProcess::BackToBack);
+        for (p, s) in r.entries.iter().zip(steady.entries.iter()) {
+            assert_eq!(p.summary.ops, s.summary.ops);
+            assert!((p.summary.wasted_j - s.summary.wasted_j).abs() < 1e-12);
+        }
+        // deterministic across worker counts despite sampled gaps
+        let serial = arrival_fleet(1, poisson);
+        for (a, b) in r.entries.iter().zip(serial.entries.iter()) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.summary.ops, b.summary.ops);
+            assert!((a.summary.energy_a_j - b.summary.energy_a_j).abs() < 1e-12);
+        }
+    }
+
+    /// The streaming exec pairs carry content sketches by default, and
+    /// same-seed pairs agree on them (no false content alarms).
+    #[test]
+    fn stream_fleet_content_guard_is_quiet_on_equivalent_pairs() {
+        let r = stream_fleet_of(2, 12);
+        for e in &r.entries {
+            assert_eq!(e.summary.content_mismatches, 0, "{}", e.name);
         }
     }
 }

@@ -75,21 +75,16 @@ impl PowerTrace {
         seg
     }
 
-    /// Instantaneous power at time `t_us` (binary search).
+    /// Instantaneous power at time `t_us`: the first segment still
+    /// open at `t` (`partition_point` over the ended-by-`t` prefix,
+    /// the same rule [`crate::stream::PowerRing::power_at_us`] uses —
+    /// a shared boundary `t == t_end_us` reads the *next* segment,
+    /// the final end reads idle).
     pub fn power_at(&self, t_us: f64) -> f64 {
         if self.segments.is_empty() {
             return self.idle_w;
         }
-        let mut lo = 0usize;
-        let mut hi = self.segments.len();
-        while lo < hi {
-            let mid = (lo + hi) / 2;
-            if self.segments[mid].t_end_us <= t_us {
-                lo = mid + 1;
-            } else {
-                hi = mid;
-            }
-        }
+        let lo = self.segments.partition_point(|s| s.t_end_us <= t_us);
         if lo < self.segments.len() && self.segments[lo].t_start_us <= t_us {
             self.segments[lo].watts
         } else {
@@ -170,6 +165,19 @@ mod tests {
         assert_eq!(tr.power_at(50.0), 200.0);
         assert_eq!(tr.power_at(150.0), 400.0);
         assert_eq!(tr.power_at(500.0), 50.0); // past the end: idle
+    }
+
+    /// Boundary semantics: a shared boundary (`t == t_end_us` of one
+    /// segment == `t_start_us` of the next) reads the next segment;
+    /// the final `t_end_us` reads idle.
+    #[test]
+    fn power_at_boundary_semantics() {
+        let mut tr = PowerTrace::new(50.0);
+        tr.push(100.0, 200.0);
+        tr.push(100.0, 400.0);
+        assert_eq!(tr.power_at(0.0), 200.0);
+        assert_eq!(tr.power_at(100.0), 400.0); // shared boundary -> next
+        assert_eq!(tr.power_at(200.0), 50.0); // final end -> idle
     }
 
     #[test]

@@ -64,9 +64,11 @@ impl Default for NvmlSampler {
 /// Queries must be non-decreasing in time (the counter cannot un-see a
 /// sample); an earlier query simply returns the current EMA untouched.
 /// Because the cursor replays the exact accumulation sequence of the
-/// from-scratch fold (`t_next += Δ` starting at 0.0, same observation
-/// order, same EMA arithmetic), its readings are **bit-identical** to
-/// [`NvmlSampler::reading_at_rescan`] — enforced by a golden test below.
+/// from-scratch fold (the indexed sample grid `k · Δ` starting at
+/// k = 0, same observation order, same EMA arithmetic), its readings
+/// are **bit-identical** to [`NvmlSampler::reading_at_rescan`] —
+/// enforced by a golden test below, including at ≥ 1e9 µs offsets
+/// where an accumulated (`t += Δ`) grid would have drifted.
 #[derive(Clone, Copy, Debug)]
 pub struct SamplerState {
     /// Current EMA value — what the counter shows right now.
@@ -92,7 +94,10 @@ impl NvmlSampler {
 
     /// Advance `state` to wall time `t_us`, consuming the samples in
     /// between, and return the counter value visible at `t_us`.
-    /// `O(new samples)`, not `O(t · hz)`.
+    /// `O(new samples)`, not `O(t · hz)`. The sample grid is indexed
+    /// (`k · step`), never accumulated (`t += step`): accumulation
+    /// drifts by an ulp per step, which far into a long stream adds or
+    /// loses whole samples against the rescan reference grid.
     pub fn advance<P: PowerSource + ?Sized>(
         &self,
         state: &mut SamplerState,
@@ -100,15 +105,16 @@ impl NvmlSampler {
         t_us: f64,
     ) -> f64 {
         let step = self.step_us();
-        while state.t_next_us <= t_us {
-            let observed = trace.power_at_us((state.t_next_us - self.latency_us).max(0.0));
+        while state.samples as f64 * step <= t_us {
+            let t_k = state.samples as f64 * step;
+            let observed = trace.power_at_us((t_k - self.latency_us).max(0.0));
             state.ema = if self.ema_alpha > 0.0 {
                 self.ema_alpha * state.ema + (1.0 - self.ema_alpha) * observed
             } else {
                 observed
             };
-            state.t_next_us += step;
             state.samples += 1;
+            state.t_next_us = state.samples as f64 * step;
         }
         state.ema
     }
@@ -127,17 +133,19 @@ impl NvmlSampler {
     /// re-simulates the driver EMA from `t = 0` for this single query.
     pub fn reading_at_rescan(&self, trace: &PowerTrace, t_us: f64) -> f64 {
         let step = self.step_us();
-        // Reconstruct the sample sequence up to t; EMA over it.
+        // Reconstruct the sample sequence up to t; EMA over it. The
+        // grid is indexed (`k · step`) like the cursor's, so the two
+        // paths walk bit-identical sample times at any offset.
         let mut ema = trace.idle_w;
-        let mut t_sample = 0.0;
-        while t_sample <= t_us {
-            let observed = trace.power_at((t_sample - self.latency_us).max(0.0));
+        let mut k = 0.0f64;
+        while k * step <= t_us {
+            let observed = trace.power_at((k * step - self.latency_us).max(0.0));
             ema = if self.ema_alpha > 0.0 {
                 self.ema_alpha * ema + (1.0 - self.ema_alpha) * observed
             } else {
                 observed
             };
-            t_sample += step;
+            k += 1.0;
         }
         ema
     }
@@ -165,12 +173,13 @@ impl NvmlSampler {
         let step = self.step_us();
         let mut sum = 0.0;
         let mut n = 0usize;
-        // samples strictly inside the window
-        let mut t = (t0_us / step).ceil() * step;
-        while t <= t1_us {
-            sum += self.advance(state, trace, t);
+        // samples strictly inside the window, on the indexed grid
+        // (k · step) so long-offset windows can't drift off it
+        let mut k = (t0_us / step).ceil();
+        while k * step <= t1_us {
+            sum += self.advance(state, trace, k * step);
             n += 1;
-            t += step;
+            k += 1.0;
         }
         let avg = if n == 0 {
             // no counter update inside the window: caller sees the last
@@ -187,10 +196,10 @@ impl NvmlSampler {
     pub fn energy_j_rescan(&self, trace: &PowerTrace, t0_us: f64, t1_us: f64) -> f64 {
         let step = self.step_us();
         let mut readings = Vec::new();
-        let mut t = (t0_us / step).ceil() * step;
-        while t <= t1_us {
-            readings.push(self.reading_at_rescan(trace, t));
-            t += step;
+        let mut k = (t0_us / step).ceil();
+        while k * step <= t1_us {
+            readings.push(self.reading_at_rescan(trace, k * step));
+            k += 1.0;
         }
         let avg = if readings.is_empty() {
             self.reading_at_rescan(trace, t0_us)
@@ -326,18 +335,48 @@ mod tests {
                 assert_eq!(inc.to_bits(), old.to_bits(), "t={t} hz={}", nvml.sample_hz);
                 t += 41_000.0; // off-grid query times
             }
-            // window reads: long, short (sub-sample-period), and zero-width
+            // window reads: long, short (sub-sample-period), zero-width,
+            // and far past the trace end (≥ 1e9 µs) where an accumulated
+            // sample grid would have drifted off the rescan grid
             for (t0, t1) in [
                 (0.0, tr.duration_us()),
                 (100_000.0, 900_000.0),
                 (123_456.0, 123_900.0),
                 (500_000.0, 500_000.0),
+                (1e9, 1e9 + 400_000.0),
+                (2.5e9 + 123.0, 2.5e9 + 360_123.0),
             ] {
                 let inc = nvml.energy_j(&tr, t0, t1);
                 let old = nvml.energy_j_rescan(&tr, t0, t1);
                 assert_eq!(inc.to_bits(), old.to_bits(), "[{t0},{t1}] hz={}", nvml.sample_hz);
             }
+            // point readings at large offsets through a fresh cursor
+            let mut far = SamplerState::new(tr.idle_w);
+            for t in [1e9, 1e9 + 37_000.0, 3e9] {
+                let inc = nvml.advance(&mut far, &tr, t);
+                let old = nvml.reading_at_rescan(&tr, t);
+                assert_eq!(inc.to_bits(), old.to_bits(), "far t={t} hz={}", nvml.sample_hz);
+            }
         }
+    }
+
+    /// The sample grid is indexed, not accumulated: after advancing a
+    /// cursor to t = 1e9 µs at a binary-inexact step (1e6/30 µs), the
+    /// consumed sample count is exactly the number of k with
+    /// k·Δ <= t in f64 — an accumulated `t += Δ` grid drifts by whole
+    /// samples at this range.
+    #[test]
+    fn sample_grid_is_drift_free_at_large_offsets() {
+        let tr = long_trace();
+        let nvml = NvmlSampler { sample_hz: 30.0, latency_us: 0.0, ema_alpha: 0.5 };
+        let mut state = SamplerState::new(tr.idle_w);
+        nvml.advance(&mut state, &tr, 1e9);
+        // step = 1e6/30 rounds up in f64, so 30000·step > 1e9: the
+        // consumed samples are k = 0..=29999, exactly 30000 of them
+        assert!(30_000.0 * nvml.step_us() > 1e9);
+        assert_eq!(state.samples, 30_000);
+        // t_next_us stays on the indexed grid
+        assert_eq!(state.t_next_us.to_bits(), (30_000.0 * nvml.step_us()).to_bits());
     }
 
     /// Cursor queries are monotone: an out-of-order (earlier) query

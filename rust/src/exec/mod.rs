@@ -107,13 +107,25 @@ pub struct KernelRecord {
     pub corr_id: u64,
     pub bb_trace: Vec<(String, usize)>,
     pub call_path: Vec<Frame>,
+    /// Cheap spectral content sketch of the op's output
+    /// ([`crate::fingerprint::content_sketch`]); empty when
+    /// [`ExecOptions::content_sketch`] is off. The streaming auditor
+    /// compares sketches per matched pair to guard output equivalence.
+    pub moments: Vec<f64>,
 }
 
 /// Build the unified trace row for one executed kernel — the single
 /// source of truth for both the batch path ([`Executor::run_observed`])
 /// and the streaming path ([`StreamExec`]), so their records can never
 /// drift apart field by field.
-fn make_record(node: &Node, outcome: &Outcome, cost: &KernelCost, key: String, corr: u64) -> KernelRecord {
+fn make_record(
+    node: &Node,
+    outcome: &Outcome,
+    cost: &KernelCost,
+    key: String,
+    corr: u64,
+    moments: Vec<f64>,
+) -> KernelRecord {
     KernelRecord {
         node: node.id,
         op: node.op,
@@ -127,6 +139,7 @@ fn make_record(node: &Node, outcome: &Outcome, cost: &KernelCost, key: String, c
         corr_id: corr,
         bb_trace: outcome.bb_trace.clone(),
         call_path: outcome.call_path.clone(),
+        moments,
     }
 }
 
@@ -191,11 +204,23 @@ pub struct ExecOptions {
     /// kernels); our simulated kernels are ~40x shorter, so the
     /// per-event cost scales down with them.
     pub trace_overhead_us: f64,
+    /// Attach a cheap spectral content sketch
+    /// ([`crate::fingerprint::content_sketch`]) to every
+    /// [`KernelRecord`]. Off by default: the batch pipeline already
+    /// fingerprints retained tensors, and big offline graphs would pay
+    /// O(min² · max) per op for nothing. The streaming layer
+    /// ([`crate::stream`]) turns it on to guard output equivalence.
+    pub content_sketch: bool,
 }
 
 impl Default for ExecOptions {
     fn default() -> ExecOptions {
-        ExecOptions { tracing: true, record_tensors: true, trace_overhead_us: 0.008 }
+        ExecOptions {
+            tracing: true,
+            record_tensors: true,
+            trace_overhead_us: 0.008,
+            content_sketch: false,
+        }
     }
 }
 
@@ -265,6 +290,15 @@ impl Executor {
             cost.energy_j = cost.energy_j.min(cost.avg_power_w * cost.time_us * 1e-6);
         }
         (outcome, cost, out, key)
+    }
+
+    /// Content sketch of an op output when enabled (empty otherwise).
+    fn maybe_sketch(&self, out: &Tensor) -> Vec<f64> {
+        if self.opts.content_sketch {
+            crate::fingerprint::content_sketch(&crate::fingerprint::RustMomentEngine, out)
+        } else {
+            Vec::new()
+        }
     }
 
     /// Execute a program, producing tensors + energy + trace.
@@ -351,7 +385,7 @@ impl Executor {
                     Some(node.id),
                 );
             }
-            records.push(make_record(node, &outcome, &cost, key, corr));
+            records.push(make_record(node, &outcome, &cost, key, corr, self.maybe_sketch(&out)));
             observer(records.last().expect("just pushed"), seg);
 
             tensors[node.id] = Some(out);
@@ -528,7 +562,7 @@ impl Iterator for StreamExec<'_> {
                 .collect();
             let (outcome, cost, out, key) = self.exec.exec_kernel(node, &ins);
             self.next_corr += 1;
-            let record = make_record(node, &outcome, &cost, key, self.next_corr);
+            let record = make_record(node, &outcome, &cost, key, self.next_corr, self.exec.maybe_sketch(&out));
             self.release_inputs(id);
             self.retain(id, out);
 
@@ -822,6 +856,26 @@ mod tests {
             assert_eq!(label, &rec.label);
             assert_eq!(seg, pseg);
         }
+    }
+
+    /// With the content guard enabled, every record carries a finite
+    /// order-2 moment sketch of its output, bit-identical between the
+    /// batch and streaming paths (they share `exec_kernel`).
+    #[test]
+    fn content_sketch_attached_when_enabled() {
+        let (mut exec, prog) = simple_program(false);
+        exec.opts.content_sketch = true;
+        let arts = exec.run(&prog);
+        for r in &arts.records {
+            assert_eq!(r.moments.len(), 2, "{}", r.label);
+            assert!(r.moments.iter().all(|m| m.is_finite() && *m > 0.0), "{}", r.label);
+        }
+        let streamed: Vec<(KernelRecord, Segment)> = exec.stream(&prog).collect();
+        for ((sr, _), br) in streamed.iter().zip(arts.records.iter()) {
+            assert_eq!(sr.moments, br.moments, "{}", sr.label);
+        }
+        exec.opts.content_sketch = false;
+        assert!(exec.run(&prog).records.iter().all(|r| r.moments.is_empty()));
     }
 
     /// The streaming iterator must reproduce the batch run's records

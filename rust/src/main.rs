@@ -7,6 +7,8 @@
 //! magneton breakdown [--id c10]       # Fig 2-style per-op breakdown
 //! magneton accuracy                   # Table 4 measurement accuracy
 //! magneton artifacts [--dir artifacts]# list loadable PJRT artifacts
+//! magneton stream [--requests 500 --arrival poisson|bursty|steady]
+//!                                     # online serving-stream audit
 //! ```
 
 use magneton::cases;
@@ -17,8 +19,13 @@ use magneton::util::cli::Args;
 use magneton::util::table::{fmt_joules, Table};
 use magneton::util::Prng;
 
+/// Subcommand names, reserved at parse time so a bare flag never
+/// swallows one as its value (`magneton --verbose cases`).
+const SUBCOMMANDS: &[&str] =
+    &["cases", "fleet", "ddp", "breakdown", "accuracy", "artifacts", "stream", "help"];
+
 fn main() {
-    let args = Args::from_env();
+    let args = Args::from_env_reserved(SUBCOMMANDS);
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
     match cmd {
         "cases" => cmd_cases(&args),
@@ -27,6 +34,7 @@ fn main() {
         "breakdown" => cmd_breakdown(&args),
         "accuracy" => cmd_accuracy(),
         "artifacts" => cmd_artifacts(&args),
+        "stream" => cmd_stream(&args),
         _ => print_help(),
     }
 }
@@ -41,8 +49,15 @@ fn print_help() {
          \x20 ddp        DDP join-vs-early-exit power timeline (Fig 4)\n\
          \x20 breakdown  per-operator energy breakdown of a case (Fig 2)\n\
          \x20 accuracy   power-measurement accuracy comparison (Table 4)\n\
-         \x20 artifacts  list PJRT artifacts and smoke-run the fingerprint kernel\n\n\
-         OPTIONS: --id <case> --eps <f64> --threshold <f64> --seed <u64> --device <h200|rtx4090>"
+         \x20 artifacts  list PJRT artifacts and smoke-run the fingerprint kernel\n\
+         \x20 stream     online audit of a live serving pair: chunked channel\n\
+         \x20            ingestion, request-arrival idle gaps, resync + content\n\
+         \x20            guards, rolling window reports, then a streaming fleet\n\n\
+         OPTIONS: --id <case> --eps <f64> --threshold <f64> --seed <u64> --device <h200|rtx4090>\n\
+         STREAM:  --requests <n=500> --arrival <poisson|bursty|steady> --rate <hz=200>\n\
+         \x20        --burst <n=16> --window <pairs=250> --hop <pairs> --ring <segs=512>\n\
+         \x20        --chunk <events=64> --queue <chunks=4> --max-emitted <n=64>\n\
+         \x20        --eff <0..1=0.62> --pairs <fleet pairs=3>"
     );
 }
 
@@ -154,6 +169,145 @@ fn cmd_breakdown(args: &Args) {
 fn cmd_accuracy() {
     // Table 4 lives in benches/table4_accuracy.rs; here a quick preview
     println!("run `cargo bench --bench table4_accuracy` for the full table");
+}
+
+/// Online streaming audit: two producer threads execute a serving pair
+/// and ship `(KernelRecord, Segment)` events in bounded chunks over
+/// `sync_channel`s (the backpressure knob: at most `queue × chunk`
+/// events are in flight per side); the consumer pairs them through a
+/// `StreamAuditor`, materialising request-arrival idle gaps, printing
+/// every rolling window report, and finishing with a streaming fleet
+/// over N concurrent pairs under the same arrival process.
+fn cmd_stream(args: &Args) {
+    use magneton::coordinator::fleet::{drive_pair_with_arrivals, StreamFleet};
+    use magneton::coordinator::SysRun;
+    use magneton::dispatch::Env;
+    use magneton::energy::Segment;
+    use magneton::exec::{Executor, KernelRecord};
+    use magneton::stream::{StreamAuditor, StreamConfig};
+    use magneton::workload::{serving_dispatcher, serving_stream_program, ArrivalProcess, ServingStream};
+    use std::sync::mpsc;
+    use std::thread;
+
+    let device = device(args);
+    let requests: usize = args.get_parse("requests", 500usize);
+    let rate: f64 = args.get_parse("rate", 200.0f64);
+    let burst: usize = args.get_parse("burst", 16usize);
+    let arrival_kind = args.get("arrival", "poisson");
+    let Some(arrival) = ArrivalProcess::parse(arrival_kind, rate, burst) else {
+        println!("unknown arrival process `{arrival_kind}` (expected steady|poisson|bursty)");
+        return;
+    };
+    let spec = ServingStream { requests, ..Default::default() };
+    let chunk_len: usize = args.get_parse("chunk", 64usize).max(1);
+    let queue: usize = args.get_parse("queue", 4usize).max(1);
+    // clamp user input rather than panic on the auditor's internal
+    // asserts: window/ring must be positive, hop > window would leak
+    // pairs out of the waste ledger
+    let window_ops = args.get_parse("window", 250usize).max(1);
+    let mut cfg = StreamConfig {
+        window_ops,
+        hop_ops: args.get_parse("hop", window_ops).clamp(1, window_ops),
+        ring_cap: args.get_parse("ring", 512usize).max(1),
+        max_emitted: args.get_parse("max-emitted", 64usize),
+        ..StreamConfig::default()
+    };
+    // the consumer ingests chunk-by-chunk, so inter-side skew is
+    // bounded by one chunk; keep pending headroom over it
+    cfg.max_pending = cfg.max_pending.max(2 * chunk_len);
+    let seed: u64 = args.get_parse("seed", 2026u64);
+    let eff: f64 = args.get_parse("eff", 0.62f64);
+
+    println!(
+        "magneton stream: {} requests ({} kernel ops/side), {:?} arrivals,\n\
+         window {} pairs, ring {} segments, chunks of {} over a {}-deep channel\n",
+        spec.requests,
+        spec.kernel_ops(),
+        arrival,
+        cfg.window_ops,
+        cfg.ring_cap,
+        chunk_len,
+        queue
+    );
+
+    let spawn_side = |side_eff: f64| -> (mpsc::Receiver<Vec<(KernelRecord, Segment)>>, thread::JoinHandle<()>) {
+        let (tx, rx) = mpsc::sync_channel::<Vec<(KernelRecord, Segment)>>(queue);
+        let dev = device.clone();
+        let handle = thread::spawn(move || {
+            let mut rng = Prng::new(seed);
+            let prog = serving_stream_program(&mut rng, &spec);
+            let mut exec = Executor::new(dev, serving_dispatcher(side_eff), Env::new());
+            exec.opts.content_sketch = true;
+            let stream = exec.stream(&prog);
+            let mut chunk = Vec::with_capacity(chunk_len);
+            for ev in stream {
+                chunk.push(ev);
+                if chunk.len() == chunk_len {
+                    if tx.send(std::mem::take(&mut chunk)).is_err() {
+                        return; // consumer hung up
+                    }
+                    chunk.reserve(chunk_len);
+                }
+            }
+            if !chunk.is_empty() {
+                let _ = tx.send(chunk);
+            }
+        });
+        (rx, handle)
+    };
+    let (rx_a, handle_a) = spawn_side(eff);
+    let (rx_b, handle_b) = spawn_side(1.0);
+
+    // the consumer: the one shared pairing protocol, fed by iterators
+    // that drain the chunked channels (recv blocks = backpressure)
+    let mut aud = StreamAuditor::new(cfg.clone(), device.idle_w);
+    let mut arrival_rng = Prng::new(seed ^ 0xa441_b815);
+    let ops_per_request = spec.ops_per_request();
+    let summary = drive_pair_with_arrivals(
+        &mut aud,
+        rx_a.into_iter().flatten(),
+        rx_b.into_iter().flatten(),
+        arrival,
+        ops_per_request,
+        &mut arrival_rng,
+        |w| println!("{}", report::render_window(&w)),
+    );
+    handle_a.join().expect("producer A panicked");
+    handle_b.join().expect("producer B panicked");
+    if let (Some(wa), Some(wb)) = (aud.nvml_reading_a(), aud.nvml_reading_b()) {
+        println!("\nlive NVML counters: A {wa:.0} W, B {wb:.0} W (arrival lulls read through the rings)");
+    }
+    println!();
+    print!("{}", report::render_stream("inefficient-vs-optimal", &summary));
+
+    // final stage: a streaming fleet over N concurrent serving pairs
+    // under the same arrival process
+    let fleet_pairs: usize = args.get_parse("pairs", 3usize);
+    let mut fleet = StreamFleet::new(device);
+    fleet.cfg = cfg;
+    fleet.arrival = arrival;
+    fleet.ops_per_request = ops_per_request;
+    fleet.arrival_seed = seed;
+    let fleet_spec = ServingStream { requests: (requests / 5).max(20), ..spec };
+    for i in 0..fleet_pairs {
+        let pair_eff = if i % 2 == 0 { eff } else { 1.0 };
+        let mut ra = Prng::new(seed + 1 + i as u64);
+        let mut rb = Prng::new(seed + 1 + i as u64);
+        fleet.add_pair(
+            &format!("serving-{i}"),
+            SysRun::new("sys-a", serving_dispatcher(pair_eff), Env::new(), serving_stream_program(&mut ra, &fleet_spec)),
+            SysRun::new("sys-b", serving_dispatcher(1.0), Env::new(), serving_stream_program(&mut rb, &fleet_spec)),
+        );
+    }
+    println!(
+        "\nstreaming fleet: {} pairs x {} ops under {:?} arrivals over {} workers...",
+        fleet.len(),
+        fleet_spec.kernel_ops(),
+        arrival,
+        fleet.workers
+    );
+    let r = fleet.run();
+    print!("{}", report::render_stream_fleet(&r));
 }
 
 fn cmd_artifacts(args: &Args) {

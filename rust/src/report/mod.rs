@@ -96,15 +96,28 @@ pub fn render_window(w: &WindowReport) -> String {
             )
         })
         .collect();
+    let seq = if w.seq == WindowReport::PEEK_SEQ { "peek".to_string() } else { w.seq.to_string() };
+    let mut tags = String::new();
+    if w.resyncs > 0 {
+        tags.push_str(&format!("  [RESYNC x{}]", w.resyncs));
+    }
+    if w.quarantined {
+        tags.push_str("  [QUARANTINED]");
+    } else if !w.aligned {
+        tags.push_str("  [STREAMS DIVERGED]");
+    }
+    if w.content_mismatches > 0 {
+        tags.push_str(&format!("  [content: {} pairs diverged]", w.content_mismatches));
+    }
     format!(
         "window #{:<4} {:>4} pairs  A {} vs B {}  wasted {}  {}{}",
-        w.seq,
+        seq,
         w.pairs,
         fmt_joules(w.energy_a_j),
         fmt_joules(w.energy_b_j),
         fmt_joules(w.wasted_j),
         if flagged.is_empty() { "clean".to_string() } else { flagged.join(", ") },
-        if w.aligned { "" } else { "  [STREAMS DIVERGED]" },
+        tags,
     )
 }
 
@@ -135,6 +148,24 @@ pub fn render_stream(name: &str, s: &StreamSummary) -> String {
         fmt_joules(s.energy_b_j),
         fmt_joules(s.wasted_j)
     ));
+    if s.resyncs > 0 {
+        out.push_str(&format!(
+            "resyncs: {} ({} ops skipped, {} windows quarantined)\n",
+            s.resyncs, s.resync_skipped, s.windows_quarantined
+        ));
+    }
+    if s.content_mismatches > 0 {
+        out.push_str(&format!(
+            "content guard: {} matched pairs diverged beyond tolerance\n",
+            s.content_mismatches
+        ));
+    }
+    if s.reports_dropped > 0 {
+        out.push_str(&format!(
+            "backpressure: {} undrained window reports dropped\n",
+            s.reports_dropped
+        ));
+    }
     out.push_str(&format!(
         "memory: {} power segments retained at peak, {} window pairs, {} pending\n",
         s.peak_retained_segments, s.peak_window_pairs, s.peak_pending
@@ -152,7 +183,7 @@ pub fn render_stream(name: &str, s: &StreamSummary) -> String {
 /// Ranked table for a finished streaming fleet audit.
 pub fn stream_fleet_table(report: &StreamFleetReport) -> Table {
     let mut t = Table::new(vec![
-        "rank", "stream", "ops", "energy A", "energy B", "wasted", "flagged", "aligned",
+        "rank", "stream", "ops", "energy A", "energy B", "wasted", "flagged", "resyncs", "aligned",
     ]);
     for (i, e) in report.entries.iter().enumerate() {
         t.row(vec![
@@ -163,6 +194,7 @@ pub fn stream_fleet_table(report: &StreamFleetReport) -> Table {
             fmt_joules(e.summary.energy_b_j),
             fmt_joules(e.summary.wasted_j),
             format!("{}/{}", e.summary.windows_flagged, e.summary.windows),
+            e.summary.resyncs.to_string(),
             if e.summary.aligned { "yes" } else { "NO" }.to_string(),
         ]);
     }

@@ -14,13 +14,28 @@
 //!   history (polynomial hash over `(label, op)`), part of the
 //!   alignment verdict and exported in the summary so operators can
 //!   compare workloads across stream pairs and sessions,
+//! * **resynchronisation** for diverged streams: when a positional
+//!   pair disagrees on `(label, op)`, a bounded lookahead of both
+//!   pending queues is searched for a new anchor using the per-event
+//!   structural hashes; the minimal surplus is skipped, a
+//!   [`ResyncEvent`] is recorded, and the window covering the
+//!   divergence is **quarantined** (its waste excluded from the
+//!   cumulative ledger) — so one dropped kernel poisons at most one
+//!   window instead of every window after it,
+//! * **content guards**: cheap per-op spectral moment sketches
+//!   ([`crate::fingerprint::content_sketch`]) carried on
+//!   [`KernelRecord`], compared per matched pair so streaming
+//!   detection also guards output equivalence, not just structure,
 //! * **ring-buffered power segments** ([`PowerRing`]) with eviction, so
 //!   the retained power timeline — and through it the incremental NVML
 //!   cursor ([`crate::energy::sampler::SamplerState`]) — is bounded by
-//!   the ring capacity, never by the stream length,
+//!   the ring capacity, never by the stream length; inter-request idle
+//!   gaps ([`StreamAuditor::ingest_idle_a`]) are materialised as
+//!   idle-power segments in the rings,
 //!
-//! and emits incremental [`WindowReport`]s plus a cumulative
-//! [`StreamSummary`] without ever holding the full trace.
+//! and emits incremental [`WindowReport`]s (buffer bounded by
+//! [`StreamConfig::max_emitted`]) plus a cumulative [`StreamSummary`]
+//! without ever holding the full trace.
 
 use std::collections::{BTreeMap, VecDeque};
 
@@ -61,8 +76,22 @@ impl PowerRing {
         }
     }
 
-    /// Append a segment, evicting the oldest when full.
+    /// Append a segment, evicting the oldest when full. Segments must
+    /// arrive in time order without overlapping the tail: the
+    /// `power_at_us` binary search assumes segment *ends* are sorted,
+    /// and an overlapping push would silently corrupt every later
+    /// lookup. The tolerance absorbs float noise from the idle-gap
+    /// time shifting (`(a + s) + g` vs `a + (s + g)`) and scales with
+    /// absolute time so week-long streams don't trip it on ulps.
     pub fn push(&mut self, seg: Segment) {
+        debug_assert!(
+            self.segs.back().map_or(true, |b| {
+                seg.t_start_us >= b.t_end_us - 1e-6f64.max(b.t_end_us.abs() * 1e-9)
+            }),
+            "out-of-order segment: t_start {} overlaps ring tail ending at {}",
+            seg.t_start_us,
+            self.segs.back().map(|b| b.t_end_us).unwrap_or(0.0),
+        );
         if self.segs.len() == self.cap {
             let old = self.segs.pop_front().expect("cap > 0");
             self.evicted_energy_j += old.energy_j();
@@ -135,9 +164,13 @@ pub struct StreamConfig {
     /// Sliding detection window, in matched op pairs.
     pub window_ops: usize,
     /// Window hop: a report is emitted every `hop_ops` ingested pairs.
-    /// `hop_ops == window_ops` (the default) tiles the stream, so
-    /// summing window waste is exact; smaller hops overlap windows for
-    /// finer-grained rolling detection.
+    /// `hop_ops == window_ops` (the default) tiles the stream; smaller
+    /// hops overlap windows for finer-grained rolling detection. The
+    /// cumulative waste ledger attributes each matched pair exactly
+    /// once regardless of overlap (only the pairs new since the last
+    /// emission are ledgered) — which is why `hop_ops > window_ops` is
+    /// rejected at construction: pairs sliding out between emissions
+    /// would silently vanish from the ledger.
     pub hop_ops: usize,
     /// Power segments retained per side.
     pub ring_cap: usize,
@@ -146,6 +179,23 @@ pub struct StreamConfig {
     /// Bounds pending memory on one-sided floods; callers that ingest
     /// in large one-sided chunks must size this to their chunk length.
     pub max_pending: usize,
+    /// Bounded lookahead (events per side) searched for a new anchor
+    /// after a positional `(label, op)` mismatch. `0` disables
+    /// resynchronisation: a mismatch is force-paired and breaks
+    /// alignment permanently (the pre-resync behaviour).
+    pub resync_lookahead: usize,
+    /// Consecutive structural matches required to accept a resync
+    /// anchor mid-stream (at `finish` any fully-matching run is
+    /// accepted, since no more events can arrive to confirm it).
+    pub resync_min_run: usize,
+    /// Relative tolerance for the per-op content-sketch comparison.
+    /// Pairs whose sketches diverge beyond it are counted as content
+    /// mismatches per window and cumulatively.
+    pub content_eps: f64,
+    /// Emitted-report buffer cap: once exceeded, the *oldest* buffered
+    /// reports are dropped (counted in `reports_dropped`) so an
+    /// undrained auditor cannot grow without bound. `0` = unbounded.
+    pub max_emitted: usize,
     /// Detection thresholds (reused from the batch detector).
     pub cfg: DetectConfig,
     /// NVML model backing the rolling counter readout; `None` disables.
@@ -159,6 +209,10 @@ impl Default for StreamConfig {
             hop_ops: 256,
             ring_cap: 512,
             max_pending: 4096,
+            resync_lookahead: 256,
+            resync_min_run: 4,
+            content_eps: 1e-3,
+            max_emitted: 0,
             cfg: DetectConfig::default(),
             nvml: Some(NvmlSampler::default()),
         }
@@ -173,6 +227,9 @@ struct PairCost {
     energy_b_j: f64,
     time_a_us: f64,
     time_b_us: f64,
+    /// Whether the two sides' content sketches agreed (true when the
+    /// guard is disabled on either side).
+    content_ok: bool,
 }
 
 /// One side's pending (not yet paired) op event.
@@ -180,9 +237,31 @@ struct PairCost {
 struct OpEvent {
     label: String,
     op_name: &'static str,
+    /// Structural hash of `(label, op)` — the unit the rolling
+    /// fingerprints fold over and the resync anchor search compares.
+    shash: u64,
     energy_j: f64,
     time_us: f64,
+    /// Content sketch carried from the executor (may be empty).
+    moments: Vec<f64>,
 }
+
+/// One recovered divergence: positional pairing disagreed, and the
+/// auditor re-anchored by skipping the minimal surplus of pending
+/// events on each side.
+#[derive(Clone, Copy, Debug)]
+pub struct ResyncEvent {
+    /// Matched-pair count at which the divergence was detected.
+    pub at_ops: usize,
+    /// Events skipped from side A's pending queue to re-anchor.
+    pub skipped_a: usize,
+    /// Events skipped from side B's pending queue to re-anchor.
+    pub skipped_b: usize,
+}
+
+/// Resync events retained in the summary log (counters are exact even
+/// when the log saturates — bounded memory on pathological streams).
+const RESYNC_LOG_CAP: usize = 32;
 
 /// A per-label divergence flagged inside one window.
 #[derive(Clone, Debug)]
@@ -216,7 +295,9 @@ impl StreamFinding {
 /// Incremental detection report for one emitted window.
 #[derive(Clone, Debug)]
 pub struct WindowReport {
-    /// 0-based index of the emitted window.
+    /// 0-based index of the emitted window. Peeked (never-emitted)
+    /// reports carry [`WindowReport::PEEK_SEQ`] instead, so they can
+    /// never collide with the next emitted window's seq.
     pub seq: usize,
     /// Matched pairs inside the window.
     pub pairs: usize,
@@ -227,8 +308,21 @@ pub struct WindowReport {
     pub findings: Vec<StreamFinding>,
     /// Joules of genuine (non-trade-off) waste across the findings.
     pub wasted_j: f64,
-    /// Whether the rolling structural fingerprints still agree.
+    /// Whether every pair since the last emission matched structurally.
     pub aligned: bool,
+    /// Resyncs recovered inside this window.
+    pub resyncs: usize,
+    /// True when a resync poisoned this window: its findings are
+    /// suspect and excluded from the cumulative waste ledger.
+    pub quarantined: bool,
+    /// Pairs in the window whose content sketches disagreed.
+    pub content_mismatches: usize,
+}
+
+impl WindowReport {
+    /// Sentinel seq of a peeked ([`StreamAuditor::window_report`])
+    /// report — never assigned to an emitted window.
+    pub const PEEK_SEQ: usize = usize::MAX;
 }
 
 /// Cumulative state of a stream audit.
@@ -243,27 +337,43 @@ pub struct StreamSummary {
     pub energy_b_j: f64,
     pub time_a_us: f64,
     pub time_b_us: f64,
-    /// Joules of genuine waste accumulated over emitted windows.
+    /// Joules of genuine waste accumulated over the ledger (each
+    /// matched pair attributed exactly once; quarantined windows
+    /// excluded).
     pub wasted_j: f64,
-    /// Windows that contained at least one non-trade-off finding.
+    /// Non-quarantined windows that contained at least one
+    /// non-trade-off finding.
     pub windows_flagged: usize,
+    /// Windows quarantined by a resync (waste excluded from the ledger).
+    pub windows_quarantined: usize,
     /// Most wasteful labels: `(label, wasted_j, windows flagged in)`,
     /// descending by waste.
     pub top_labels: Vec<(String, f64, usize)>,
     /// The two streams ran the same workload in the same order: every
-    /// matched pair agreed on `(label, op)`, the matched-history
-    /// fingerprints are equal, and (after `finish`) no unpaired tail
-    /// remained.
+    /// matched pair agreed on `(label, op)`, no resync or flood drop
+    /// was needed, the matched-history fingerprints are equal, and
+    /// (after `finish`) no unpaired tail remained.
     pub aligned: bool,
     /// Rolling structural fingerprint of each side's matched op
     /// history — equal whenever `aligned`; stable across runs, so
     /// operators can compare workloads across stream pairs/sessions.
     pub fingerprint_a: u64,
     pub fingerprint_b: u64,
-    /// Events still unpaired (surplus of the longer stream). Non-zero
-    /// after `finish` means the sides emitted different op counts —
-    /// their cumulative energies are not directly comparable.
+    /// Events that never got a partner: surplus of the longer stream,
+    /// flood-dropped events, and events skipped by resyncs.
     pub unpaired: usize,
+    /// Divergences recovered by re-anchoring.
+    pub resyncs: usize,
+    /// Total events skipped (both sides) across all resyncs.
+    pub resync_skipped: usize,
+    /// First [`RESYNC_LOG_CAP`] resync events (counters stay exact
+    /// when the log saturates).
+    pub resync_log: Vec<ResyncEvent>,
+    /// Matched pairs whose content sketches disagreed (cumulative).
+    pub content_mismatches: usize,
+    /// Window reports dropped because the emitted buffer exceeded
+    /// [`StreamConfig::max_emitted`] between drains.
+    pub reports_dropped: usize,
     /// Memory high-water marks: retained power segments (≤ ring cap),
     /// window pairs, pending unpaired events.
     pub peak_retained_segments: usize,
@@ -271,16 +381,27 @@ pub struct StreamSummary {
     pub peak_pending: usize,
 }
 
+/// Outcome of the bounded anchor search after a positional mismatch.
+enum Anchor {
+    /// Skip this many pending events per side and resume pairing.
+    Found { skip_a: usize, skip_b: usize },
+    /// A candidate anchor exists but is too short to confirm (or the
+    /// queues are shorter than the lookahead): wait for more events.
+    NeedMore,
+    /// No anchor inside the lookahead: the streams genuinely diverged.
+    Diverged,
+}
+
 /// Online differential auditor over two op streams.
 ///
 /// Feed it with [`StreamAuditor::ingest_a`] / [`StreamAuditor::ingest_b`]
 /// (order between sides is free up to [`StreamConfig::max_pending`]
-/// skew; pairing is positional), drain emitted windows with
+/// skew; pairing is positional with bounded-lookahead
+/// resynchronisation), drain emitted windows with
 /// [`StreamAuditor::take_emitted`], and finish with
 /// [`StreamAuditor::finish`]. All retained state is bounded: window +
 /// rings + per-label aggregates + at most `max_pending` pending events
-/// per side (surplus past the cap is dropped, counted in `unpaired`,
-/// and breaks alignment).
+/// per side + at most `max_emitted` undrained reports.
 pub struct StreamAuditor {
     pub cfg: StreamConfig,
     window: VecDeque<PairCost>,
@@ -288,48 +409,103 @@ pub struct StreamAuditor {
     win_e_b: f64,
     win_t_a: f64,
     win_t_b: f64,
+    /// Pairs in the window whose content sketches disagreed (rolling).
+    win_content_bad: usize,
     pend_a: VecDeque<OpEvent>,
     pend_b: VecDeque<OpEvent>,
     /// Rolling structural fingerprints over the full matched history.
     fp_a: u64,
     fp_b: u64,
+    /// Global: no divergence, resync, flood drop, or surplus ever.
     aligned: bool,
+    /// Every pair since the last emission matched structurally.
+    window_aligned: bool,
+    /// A definitive anchor search already failed and pairing is
+    /// force-advancing: skip the O(lookahead²) re-scan per pair until
+    /// the streams demonstrably re-converge.
+    diverged_mode: bool,
+    /// Consecutive structurally-matched pairs (clears the diverged
+    /// latch at `resync_min_run` — one coincidental match on a
+    /// quasi-diverged stream must not re-trigger full anchor scans).
+    matched_run: usize,
+    /// Minimal-skip anchor candidate that fully matched but was too
+    /// short to confirm: re-verified in O(min_run) on the next ingest
+    /// instead of rescanning the whole O(lookahead²) candidate space.
+    /// Invalidated whenever queue fronts shift (resync, flood drop).
+    anchor_hint: Option<(usize, usize)>,
+    /// The next emitted window covers a resync: quarantine it.
+    quarantine_next: bool,
+    window_resyncs: usize,
+    resyncs: usize,
+    resync_skipped: usize,
+    resync_log: Vec<ResyncEvent>,
     /// Power rings (public: the example asserts the memory bound).
     pub ring_a: PowerRing,
     pub ring_b: PowerRing,
+    /// Accumulated idle-gap shift applied to ingested segment times.
+    shift_a: f64,
+    shift_b: f64,
     sampler_a: SamplerState,
     sampler_b: SamplerState,
     pairs_since_hop: usize,
-    emitted: Vec<WindowReport>,
+    emitted: VecDeque<WindowReport>,
+    reports_dropped: usize,
     /// Pending events dropped after exceeding the skew cap.
     unpaired_dropped: usize,
     // cumulative accounting
     ops: usize,
     windows: usize,
     windows_flagged: usize,
+    windows_quarantined: usize,
     cum_e_a: f64,
     cum_e_b: f64,
     cum_t_a: f64,
     cum_t_b: f64,
     cum_wasted_j: f64,
+    cum_content_bad: usize,
     label_waste: BTreeMap<String, (f64, usize)>,
     peak_window_pairs: usize,
     peak_pending: usize,
 }
 
-/// FNV-1a over a label + op name (the structural identity of one op).
+/// FNV-1a over a label + op name (the structural identity of one op;
+/// 0xff separates the parts so `("ab", "c")` ≠ `("a", "bc")`).
 fn op_hash(label: &str, op_name: &str) -> u64 {
-    let mut h: u64 = 0xcbf29ce484222325;
-    for b in label.as_bytes().iter().chain([0xffu8].iter()).chain(op_name.as_bytes()) {
-        h ^= *b as u64;
-        h = h.wrapping_mul(0x100000001b3);
+    crate::util::fnv1a(label.bytes().chain([0xffu8]).chain(op_name.bytes()))
+}
+
+/// Relative agreement of two content sketches. Empty sketches (guard
+/// disabled on either side) always agree.
+fn moments_close(a: &[f64], b: &[f64], eps: f64) -> bool {
+    if a.is_empty() || b.is_empty() {
+        return true;
     }
-    h
+    if a.len() != b.len() {
+        return false;
+    }
+    a.iter()
+        .zip(b.iter())
+        .all(|(x, y)| (x - y).abs() <= eps * x.abs().max(y.abs()).max(1e-30))
 }
 
 impl StreamAuditor {
     pub fn new(cfg: StreamConfig, idle_w: f64) -> StreamAuditor {
         assert!(cfg.window_ops > 0 && cfg.hop_ops > 0, "window/hop must be positive");
+        assert!(
+            cfg.hop_ops <= cfg.window_ops,
+            "hop {} exceeds window {}: pairs sliding out between emissions would never reach the waste ledger",
+            cfg.hop_ops,
+            cfg.window_ops
+        );
+        assert!(
+            cfg.resync_lookahead == 0
+                || cfg.resync_lookahead + cfg.resync_min_run.max(1) <= cfg.max_pending,
+            "resync lookahead {} + confirmation run {} exceeds the pending cap {}: an anchor near the \
+             lookahead boundary would be flood-dropped before it can be confirmed",
+            cfg.resync_lookahead,
+            cfg.resync_min_run.max(1),
+            cfg.max_pending
+        );
         let ring_a = PowerRing::new(cfg.ring_cap, idle_w);
         let ring_b = PowerRing::new(cfg.ring_cap, idle_w);
         StreamAuditor {
@@ -338,26 +514,41 @@ impl StreamAuditor {
             win_e_b: 0.0,
             win_t_a: 0.0,
             win_t_b: 0.0,
+            win_content_bad: 0,
             pend_a: VecDeque::new(),
             pend_b: VecDeque::new(),
             fp_a: 0,
             fp_b: 0,
             aligned: true,
+            window_aligned: true,
+            diverged_mode: false,
+            matched_run: 0,
+            anchor_hint: None,
+            quarantine_next: false,
+            window_resyncs: 0,
+            resyncs: 0,
+            resync_skipped: 0,
+            resync_log: Vec::new(),
             ring_a,
             ring_b,
+            shift_a: 0.0,
+            shift_b: 0.0,
             sampler_a: SamplerState::new(idle_w),
             sampler_b: SamplerState::new(idle_w),
             pairs_since_hop: 0,
-            emitted: Vec::new(),
+            emitted: VecDeque::new(),
+            reports_dropped: 0,
             unpaired_dropped: 0,
             ops: 0,
             windows: 0,
             windows_flagged: 0,
+            windows_quarantined: 0,
             cum_e_a: 0.0,
             cum_e_b: 0.0,
             cum_t_a: 0.0,
             cum_t_b: 0.0,
             cum_wasted_j: 0.0,
+            cum_content_bad: 0,
             label_waste: BTreeMap::new(),
             peak_window_pairs: 0,
             peak_pending: 0,
@@ -375,71 +566,112 @@ impl StreamAuditor {
         self.ingest(Side::B, rec, seg)
     }
 
+    /// Materialise an inter-request idle gap on side A: the ring gains
+    /// an idle-power segment and every later ingested segment is
+    /// shifted by the gap, so the power timeline shows the lull a real
+    /// arrival process produces (and the NVML cursor reads it).
+    pub fn ingest_idle_a(&mut self, gap_us: f64) {
+        self.ingest_idle(Side::A, gap_us)
+    }
+
+    /// Materialise an inter-request idle gap on side B.
+    pub fn ingest_idle_b(&mut self, gap_us: f64) {
+        self.ingest_idle(Side::B, gap_us)
+    }
+
+    fn ingest_idle(&mut self, side: Side, gap_us: f64) {
+        if gap_us <= 0.0 {
+            return;
+        }
+        let (ring, shift) = match side {
+            Side::A => (&mut self.ring_a, &mut self.shift_a),
+            Side::B => (&mut self.ring_b, &mut self.shift_b),
+        };
+        let t0 = ring.t_now_us();
+        let idle_w = ring.idle_w;
+        ring.push(Segment { t_start_us: t0, t_end_us: t0 + gap_us, watts: idle_w });
+        *shift += gap_us;
+    }
+
     /// Shared ingestion body — side-symmetry is structural, not by
     /// copy-paste convention.
     fn ingest(&mut self, side: Side, rec: &KernelRecord, seg: Segment) {
-        let (ring, pend, cum_e, cum_t) = match side {
-            Side::A => (&mut self.ring_a, &mut self.pend_a, &mut self.cum_e_a, &mut self.cum_t_a),
-            Side::B => (&mut self.ring_b, &mut self.pend_b, &mut self.cum_e_b, &mut self.cum_t_b),
+        let (ring, pend, cum_e, cum_t, shift) = match side {
+            Side::A => {
+                (&mut self.ring_a, &mut self.pend_a, &mut self.cum_e_a, &mut self.cum_t_a, self.shift_a)
+            }
+            Side::B => {
+                (&mut self.ring_b, &mut self.pend_b, &mut self.cum_e_b, &mut self.cum_t_b, self.shift_b)
+            }
         };
-        ring.push(seg);
+        // re-time the executor's segment past any materialised idle gaps
+        ring.push(Segment {
+            t_start_us: seg.t_start_us + shift,
+            t_end_us: seg.t_end_us + shift,
+            watts: seg.watts,
+        });
         *cum_e += rec.energy_j;
         *cum_t += rec.time_us;
         pend.push_back(OpEvent {
+            shash: op_hash(&rec.label, rec.op.name()),
             label: rec.label.clone(),
             op_name: rec.op.name(),
             energy_j: rec.energy_j,
             time_us: rec.time_us,
+            moments: rec.moments.clone(),
         });
-        self.drain_pairs();
+        self.drain(false);
     }
 
-    /// Pair pending events positionally and slide the window.
-    fn drain_pairs(&mut self) {
+    /// Pair pending events positionally, resynchronising across
+    /// divergences, and slide the window. `finishing` relaxes the
+    /// anchor-confirmation rule (no more events will ever arrive) and
+    /// force-pairs what cannot be anchored.
+    fn drain(&mut self, finishing: bool) {
         let pending = self.pend_a.len().max(self.pend_b.len());
         if pending > self.peak_pending {
             self.peak_pending = pending;
         }
         while !self.pend_a.is_empty() && !self.pend_b.is_empty() {
-            let a = self.pend_a.pop_front().expect("checked non-empty");
-            let b = self.pend_b.pop_front().expect("checked non-empty");
-            // structural check: positional pairing requires same op
-            if a.label != b.label || a.op_name != b.op_name {
-                self.aligned = false;
-            }
-            // rolling fingerprints over the *matched* history: equal
-            // whenever the streams ran the same ops in the same order,
-            // and exported so operators can compare workloads across
-            // stream pairs and sessions
-            self.fp_a = self.fp_a.rotate_left(1) ^ op_hash(&a.label, a.op_name);
-            self.fp_b = self.fp_b.rotate_left(1) ^ op_hash(&b.label, b.op_name);
-            self.ops += 1;
-            let pair = PairCost {
-                label: a.label,
-                energy_a_j: a.energy_j,
-                energy_b_j: b.energy_j,
-                time_a_us: a.time_us,
-                time_b_us: b.time_us,
+            let fronts_match = {
+                let (a, b) = (&self.pend_a[0], &self.pend_b[0]);
+                a.shash == b.shash && a.label == b.label && a.op_name == b.op_name
             };
-            self.win_e_a += pair.energy_a_j;
-            self.win_e_b += pair.energy_b_j;
-            self.win_t_a += pair.time_a_us;
-            self.win_t_b += pair.time_b_us;
-            self.window.push_back(pair);
-            if self.window.len() > self.cfg.window_ops {
-                let old = self.window.pop_front().expect("over capacity");
-                self.win_e_a -= old.energy_a_j;
-                self.win_e_b -= old.energy_b_j;
-                self.win_t_a -= old.time_a_us;
-                self.win_t_b -= old.time_b_us;
+            if fronts_match {
+                self.pair_fronts();
+                continue;
             }
-            if self.window.len() > self.peak_window_pairs {
-                self.peak_window_pairs = self.window.len();
+            if self.diverged_mode {
+                // a definitive search already failed: force-advance at
+                // O(1) per pair instead of re-scanning the lookahead
+                self.pair_fronts();
+                continue;
             }
-            self.pairs_since_hop += 1;
-            if self.pairs_since_hop >= self.cfg.hop_ops && self.window.len() >= self.cfg.window_ops {
-                self.pairs_since_hop = 0;
-                self.emit_window();
+            match self.find_anchor(finishing) {
+                Anchor::Found { skip_a, skip_b } => {
+                    for _ in 0..skip_a {
+                        self.pend_a.pop_front();
+                    }
+                    for _ in 0..skip_b {
+                        self.pend_b.pop_front();
+                    }
+                    self.resyncs += 1;
+                    self.resync_skipped += skip_a + skip_b;
+                    if self.resync_log.len() < RESYNC_LOG_CAP {
+                        self.resync_log.push(ResyncEvent { at_ops: self.ops, skipped_a: skip_a, skipped_b: skip_b });
+                    }
+                    // the divergence is recovered, but the window it
+                    // happened in cannot be trusted
+                    self.aligned = false;
+                    self.window_aligned = false;
+                    self.window_resyncs += 1;
+                    self.quarantine_next = true;
+                }
+                Anchor::NeedMore => break,
+                Anchor::Diverged => {
+                    self.diverged_mode = true;
+                    self.pair_fronts();
+                }
             }
         }
         // bound the surplus side: drop (and count) events beyond the
@@ -449,18 +681,164 @@ impl StreamAuditor {
             self.pend_a.pop_front();
             self.unpaired_dropped += 1;
             self.aligned = false;
+            // queue fronts shifted: any cached anchor indices are stale
+            self.anchor_hint = None;
         }
         while self.pend_b.len() > cap {
             self.pend_b.pop_front();
             self.unpaired_dropped += 1;
             self.aligned = false;
+            self.anchor_hint = None;
         }
     }
 
-    /// Detect per-label divergence over the current window contents.
-    fn window_findings(&self) -> Vec<StreamFinding> {
+    /// Pop and pair the two front events (force-pairing a structural
+    /// mismatch when called on diverged fronts), then slide the window.
+    fn pair_fronts(&mut self) {
+        let a = self.pend_a.pop_front().expect("checked non-empty");
+        let b = self.pend_b.pop_front().expect("checked non-empty");
+        if a.shash != b.shash || a.label != b.label || a.op_name != b.op_name {
+            // unrecoverable divergence (no anchor found): positional
+            // pairing continues, but the audit is permanently suspect
+            self.aligned = false;
+            self.window_aligned = false;
+            self.matched_run = 0;
+        } else {
+            // only a demonstrated re-convergence run lifts the diverged
+            // latch — a lone coincidental match on a quasi-diverged
+            // stream must not re-trigger full anchor scans per op
+            self.matched_run += 1;
+            if self.matched_run >= self.cfg.resync_min_run.max(1) {
+                self.diverged_mode = false;
+            }
+        }
+        // rolling fingerprints over the *matched* history: equal
+        // whenever the streams ran the same ops in the same order,
+        // and exported so operators can compare workloads across
+        // stream pairs and sessions
+        self.fp_a = self.fp_a.rotate_left(1) ^ a.shash;
+        self.fp_b = self.fp_b.rotate_left(1) ^ b.shash;
+        self.ops += 1;
+        let content_ok = moments_close(&a.moments, &b.moments, self.cfg.content_eps);
+        if !content_ok {
+            self.cum_content_bad += 1;
+        }
+        let pair = PairCost {
+            label: a.label,
+            energy_a_j: a.energy_j,
+            energy_b_j: b.energy_j,
+            time_a_us: a.time_us,
+            time_b_us: b.time_us,
+            content_ok,
+        };
+        self.win_e_a += pair.energy_a_j;
+        self.win_e_b += pair.energy_b_j;
+        self.win_t_a += pair.time_a_us;
+        self.win_t_b += pair.time_b_us;
+        if !pair.content_ok {
+            self.win_content_bad += 1;
+        }
+        self.window.push_back(pair);
+        if self.window.len() > self.cfg.window_ops {
+            let old = self.window.pop_front().expect("over capacity");
+            self.win_e_a -= old.energy_a_j;
+            self.win_e_b -= old.energy_b_j;
+            self.win_t_a -= old.time_a_us;
+            self.win_t_b -= old.time_b_us;
+            if !old.content_ok {
+                self.win_content_bad -= 1;
+            }
+        }
+        if self.window.len() > self.peak_window_pairs {
+            self.peak_window_pairs = self.window.len();
+        }
+        self.pairs_since_hop += 1;
+        if self.pairs_since_hop >= self.cfg.hop_ops && self.window.len() >= self.cfg.window_ops {
+            let n_new = self.pairs_since_hop.min(self.window.len());
+            self.pairs_since_hop = 0;
+            self.emit_window(n_new);
+        }
+    }
+
+    /// Structural agreement run at a candidate anchor, capped at the
+    /// confirmation target: `(run, want)` where `want` is how many
+    /// comparisons were possible.
+    fn anchor_run(&self, skip_a: usize, skip_b: usize, run_target: usize) -> (usize, usize) {
+        let avail = (self.pend_a.len() - skip_a).min(self.pend_b.len() - skip_b);
+        let want = run_target.min(avail);
+        let run = (0..want)
+            .take_while(|&t| self.pend_a[skip_a + t].shash == self.pend_b[skip_b + t].shash)
+            .count();
+        (run, want)
+    }
+
+    /// Bounded lookahead over both pending queues for a re-anchoring
+    /// point after the fronts disagreed: the `(skip_a, skip_b)` with
+    /// the smallest total skip whose structural hashes agree for
+    /// [`StreamConfig::resync_min_run`] consecutive events.
+    fn find_anchor(&mut self, finishing: bool) -> Anchor {
+        let lookahead = self.cfg.resync_lookahead;
+        if lookahead == 0 {
+            return Anchor::Diverged;
+        }
+        let run_target = self.cfg.resync_min_run.max(1);
+        // fast path: a previous full scan already picked its minimal-
+        // skip candidate and is only waiting for confirmation events —
+        // one O(run_target) re-check instead of a full lookahead scan.
+        // Already-mismatched candidates stay mismatched, so the hint is
+        // preferred until it confirms or breaks; it resolves within
+        // run_target further ingests either way.
+        if let Some((skip_a, skip_b)) = self.anchor_hint {
+            if skip_a < self.pend_a.len() && skip_b < self.pend_b.len() {
+                let (run, want) = self.anchor_run(skip_a, skip_b, run_target);
+                if run == want && run > 0 {
+                    if run >= run_target || finishing {
+                        self.anchor_hint = None;
+                        return Anchor::Found { skip_a, skip_b };
+                    }
+                    return Anchor::NeedMore;
+                }
+            }
+            // the candidate broke on extension: rescan from scratch
+            self.anchor_hint = None;
+        }
+        let la = self.pend_a.len().min(lookahead);
+        let lb = self.pend_b.len().min(lookahead);
+        let mut need_more = false;
+        // minimal total surplus first: the cheapest explanation of the
+        // divergence (one dropped kernel => skip exactly one event)
+        for d in 1..(la + lb) {
+            for skip_a in d.saturating_sub(lb - 1)..=d.min(la - 1) {
+                let skip_b = d - skip_a;
+                let (run, want) = self.anchor_run(skip_a, skip_b, run_target);
+                if run == want && run > 0 {
+                    if run >= run_target || finishing {
+                        return Anchor::Found { skip_a, skip_b };
+                    }
+                    // everything available matches, but the run is too
+                    // short to be confident: remember the candidate and
+                    // wait for more events
+                    if !need_more {
+                        self.anchor_hint = Some((skip_a, skip_b));
+                        need_more = true;
+                    }
+                }
+            }
+        }
+        if need_more && !finishing {
+            return Anchor::NeedMore;
+        }
+        if !finishing && (self.pend_a.len() < lookahead || self.pend_b.len() < lookahead) {
+            // the anchor may simply not have been ingested yet
+            return Anchor::NeedMore;
+        }
+        Anchor::Diverged
+    }
+
+    /// Detect per-label divergence over a set of window pairs.
+    fn findings_over<'a>(&self, pairs: impl Iterator<Item = &'a PairCost>) -> Vec<StreamFinding> {
         let mut by_label: BTreeMap<&str, (usize, f64, f64, f64, f64)> = BTreeMap::new();
-        for p in &self.window {
+        for p in pairs {
             let cell = by_label.entry(p.label.as_str()).or_insert((0, 0.0, 0.0, 0.0, 0.0));
             cell.0 += 1;
             cell.1 += p.energy_a_j;
@@ -503,12 +881,12 @@ impl StreamAuditor {
         findings
     }
 
-    /// Build a report over the current window without emitting it.
-    pub fn window_report(&self) -> WindowReport {
-        let findings = self.window_findings();
+    /// Build a report over the current window contents.
+    fn build_report(&self, seq: usize, quarantined: bool) -> WindowReport {
+        let findings = self.findings_over(self.window.iter());
         let wasted_j = findings.iter().map(|f| f.wasted_j()).sum();
         WindowReport {
-            seq: self.windows,
+            seq,
             pairs: self.window.len(),
             energy_a_j: self.win_e_a,
             energy_b_j: self.win_e_b,
@@ -516,31 +894,61 @@ impl StreamAuditor {
             time_b_us: self.win_t_b,
             findings,
             wasted_j,
-            aligned: self.aligned,
+            aligned: self.window_aligned,
+            resyncs: self.window_resyncs,
+            quarantined,
+            content_mismatches: self.win_content_bad,
         }
     }
 
-    fn emit_window(&mut self) {
-        let report = self.window_report();
+    /// Peek a report over the current window without emitting it. The
+    /// peek carries [`WindowReport::PEEK_SEQ`]: seqs are assigned only
+    /// at emission, so drained sequences stay gap-free and unique.
+    pub fn window_report(&self) -> WindowReport {
+        self.build_report(WindowReport::PEEK_SEQ, self.quarantine_next)
+    }
+
+    /// Emit the current window. `n_new` is the number of pairs added
+    /// since the previous emission: only those are attributed to the
+    /// cumulative waste ledger, so overlapping windows
+    /// (`hop_ops < window_ops`) never double-count a pair.
+    fn emit_window(&mut self, n_new: usize) {
+        let quarantined = self.quarantine_next;
+        let report = self.build_report(self.windows, quarantined);
         self.windows += 1;
-        self.cum_wasted_j += report.wasted_j;
-        if report.findings.iter().any(|f| !f.is_tradeoff) {
-            self.windows_flagged += 1;
-        }
-        for f in &report.findings {
-            if !f.is_tradeoff {
-                let cell = self.label_waste.entry(f.label.clone()).or_insert((0.0, 0));
-                cell.0 += f.wasted_j();
-                cell.1 += 1;
+        if quarantined {
+            self.windows_quarantined += 1;
+        } else {
+            if report.findings.iter().any(|f| !f.is_tradeoff) {
+                self.windows_flagged += 1;
+            }
+            let skip = self.window.len() - n_new;
+            let ledger = self.findings_over(self.window.iter().skip(skip));
+            for f in &ledger {
+                if !f.is_tradeoff {
+                    self.cum_wasted_j += f.wasted_j();
+                    let cell = self.label_waste.entry(f.label.clone()).or_insert((0.0, 0));
+                    cell.0 += f.wasted_j();
+                    cell.1 += 1;
+                }
             }
         }
-        self.emitted.push(report);
+        self.emitted.push_back(report);
+        if self.cfg.max_emitted > 0 {
+            while self.emitted.len() > self.cfg.max_emitted {
+                self.emitted.pop_front();
+                self.reports_dropped += 1;
+            }
+        }
+        self.window_aligned = true;
+        self.window_resyncs = 0;
+        self.quarantine_next = false;
     }
 
     /// Drain the window reports emitted since the last call (bounded by
-    /// how often the caller drains relative to the hop size).
+    /// [`StreamConfig::max_emitted`] regardless of drain cadence).
     pub fn take_emitted(&mut self) -> Vec<WindowReport> {
-        std::mem::take(&mut self.emitted)
+        self.emitted.drain(..).collect()
     }
 
     /// The NVML counter reading visible *now* on side A's ring, through
@@ -563,41 +971,6 @@ impl StreamAuditor {
         Some(nvml.advance(state, ring, ring.t_now_us()))
     }
 
-    /// Drive two streaming executors to exhaustion in lock-step
-    /// (pending skew ≤ 1 while both are live), handing every emitted
-    /// window to `on_window`, then flush and return the final summary.
-    /// This is the one pairing protocol shared by
-    /// [`crate::coordinator::fleet::StreamFleet`] workers and the
-    /// `stream_audit` example.
-    pub fn drive(
-        &mut self,
-        a: &mut crate::exec::StreamExec<'_>,
-        b: &mut crate::exec::StreamExec<'_>,
-        mut on_window: impl FnMut(WindowReport),
-    ) -> StreamSummary {
-        loop {
-            let na = a.next();
-            let nb = b.next();
-            if na.is_none() && nb.is_none() {
-                break;
-            }
-            if let Some((rec, seg)) = na {
-                self.ingest_a(&rec, seg);
-            }
-            if let Some((rec, seg)) = nb {
-                self.ingest_b(&rec, seg);
-            }
-            for w in self.take_emitted() {
-                on_window(w);
-            }
-        }
-        let summary = self.finish();
-        for w in self.take_emitted() {
-            on_window(w);
-        }
-        summary
-    }
-
     /// Cumulative summary so far (valid mid-stream).
     pub fn summary(&self) -> StreamSummary {
         let mut top: Vec<(String, f64, usize)> = self
@@ -615,22 +988,29 @@ impl StreamAuditor {
             time_b_us: self.cum_t_b,
             wasted_j: self.cum_wasted_j,
             windows_flagged: self.windows_flagged,
+            windows_quarantined: self.windows_quarantined,
             top_labels: top,
             aligned: self.aligned && self.fp_a == self.fp_b,
             fingerprint_a: self.fp_a,
             fingerprint_b: self.fp_b,
-            unpaired: self.pend_a.len() + self.pend_b.len() + self.unpaired_dropped,
+            unpaired: self.pend_a.len() + self.pend_b.len() + self.unpaired_dropped + self.resync_skipped,
+            resyncs: self.resyncs,
+            resync_skipped: self.resync_skipped,
+            resync_log: self.resync_log.clone(),
+            content_mismatches: self.cum_content_bad,
+            reports_dropped: self.reports_dropped,
             peak_retained_segments: self.ring_a.peak_retained.max(self.ring_b.peak_retained),
             peak_window_pairs: self.peak_window_pairs,
             peak_pending: self.peak_pending,
         }
     }
 
-    /// Flush a partial trailing window (if any pairs arrived since the
-    /// last emission) and return the final summary. The flushed window
-    /// is trimmed to the residual tail, so under the default tiling
-    /// every pair is counted exactly once in the waste ledger.
+    /// Resolve any pending divergence (final resyncs / forced pairs),
+    /// flush a partial trailing window, and return the final summary.
+    /// The trailing emission ledgers only the pairs added since the
+    /// last hop, so every matched pair is counted exactly once.
     pub fn finish(&mut self) -> StreamSummary {
+        self.drain(true);
         // a surplus on either side means the streams did not run the
         // same workload: flag it rather than silently reporting the
         // (incomparable) cumulative energies as a clean audit
@@ -638,16 +1018,9 @@ impl StreamAuditor {
             self.aligned = false;
         }
         if self.pairs_since_hop > 0 {
-            let residual = self.pairs_since_hop.min(self.window.len());
-            while self.window.len() > residual {
-                let old = self.window.pop_front().expect("len > residual >= 0");
-                self.win_e_a -= old.energy_a_j;
-                self.win_e_b -= old.energy_b_j;
-                self.win_t_a -= old.time_a_us;
-                self.win_t_b -= old.time_b_us;
-            }
+            let n_new = self.pairs_since_hop.min(self.window.len());
             self.pairs_since_hop = 0;
-            self.emit_window();
+            self.emit_window(n_new);
         }
         self.summary()
     }
@@ -656,10 +1029,15 @@ impl StreamAuditor {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::energy::PowerTrace;
     use crate::graph::OpKind;
     use crate::trace::Frame;
 
     fn rec(label: &str, op: OpKind, energy_j: f64, time_us: f64) -> KernelRecord {
+        rec_m(label, op, energy_j, time_us, vec![])
+    }
+
+    fn rec_m(label: &str, op: OpKind, energy_j: f64, time_us: f64, moments: Vec<f64>) -> KernelRecord {
         KernelRecord {
             node: 0,
             op,
@@ -673,11 +1051,43 @@ mod tests {
             corr_id: 0,
             bb_trace: vec![],
             call_path: vec![Frame::py("serve")],
+            moments,
         }
     }
 
     fn seg_after(t0: f64, dur: f64, watts: f64) -> Segment {
         Segment { t_start_us: t0, t_end_us: t0 + dur, watts }
+    }
+
+    /// The serving-shaped op cycle used by the resync tests: period 5,
+    /// per-kind energies distinct enough that any mispairing flags.
+    fn cycle_op(i: usize) -> (&'static str, OpKind, f64) {
+        match i % 5 {
+            0 => ("serve.proj", OpKind::MatMul, 0.30),
+            1 => ("serve.scale", OpKind::Mul, 0.02),
+            2 => ("serve.act", OpKind::Gelu, 0.05),
+            3 => ("serve.out", OpKind::MatMul, 0.30),
+            _ => ("serve.softmax", OpKind::Softmax, 0.08),
+        }
+    }
+
+    /// Feed `n` cycle ops to both sides, dropping the event at global
+    /// index `skip` on side A (None = identical streams).
+    fn run_with_skip(cfg: StreamConfig, n: usize, skip: Option<usize>) -> (StreamAuditor, Vec<WindowReport>) {
+        let mut aud = StreamAuditor::new(cfg, 90.0);
+        let (mut ta, mut tb) = (0.0, 0.0);
+        let mut reports = Vec::new();
+        for i in 0..n {
+            let (label, op, e) = cycle_op(i);
+            if skip != Some(i) {
+                aud.ingest_a(&rec(label, op, e, 100.0), seg_after(ta, 100.0, e / 100e-6));
+                ta += 100.0;
+            }
+            aud.ingest_b(&rec(label, op, e, 100.0), seg_after(tb, 100.0, e / 100e-6));
+            tb += 100.0;
+            reports.append(&mut aud.take_emitted());
+        }
+        (aud, reports)
     }
 
     #[test]
@@ -701,6 +1111,53 @@ mod tests {
         assert_eq!(ring.power_at_us(20_000.0), 90.0); // future -> idle
         assert_eq!(ring.t_oldest_us(), 6000.0);
         assert_eq!(ring.t_now_us(), 10_000.0);
+    }
+
+    /// Ring and trace must agree on boundary semantics everywhere:
+    /// interior points, segment starts, shared boundaries (`t ==
+    /// t_end_us` of one segment == `t_start_us` of the next), the final
+    /// end, and beyond — the contract `partition_point` must preserve.
+    #[test]
+    fn ring_and_trace_agree_on_boundary_semantics() {
+        let durs = [1000.0, 500.0, 2000.0, 750.0];
+        let watts = [100.0, 250.0, 180.0, 310.0];
+        let mut ring = PowerRing::new(8, 90.0);
+        let mut trace = PowerTrace::new(90.0);
+        let mut t = 0.0;
+        for (d, w) in durs.iter().zip(watts.iter()) {
+            ring.push(seg_after(t, *d, *w));
+            trace.push(*d, *w);
+            t += d;
+        }
+        let mut probes = vec![0.0, 1.0, 999.0];
+        let mut acc = 0.0;
+        for d in durs {
+            acc += d;
+            probes.push(acc); // every t_end_us (== next t_start_us)
+            probes.push(acc - 0.5);
+            probes.push(acc + 0.5);
+        }
+        for p in probes {
+            assert_eq!(
+                ring.power_at_us(p),
+                trace.power_at(p),
+                "ring and trace disagree at t={p}"
+            );
+        }
+        // t == final t_end_us reads as idle on both
+        assert_eq!(trace.power_at(t), 90.0);
+        assert_eq!(ring.power_at_us(t), 90.0);
+    }
+
+    /// Out-of-order segments would corrupt the binary search; the push
+    /// asserts the timeline stays monotone.
+    #[test]
+    #[should_panic(expected = "out-of-order segment")]
+    #[cfg(debug_assertions)]
+    fn out_of_order_push_asserts() {
+        let mut ring = PowerRing::new(4, 90.0);
+        ring.push(seg_after(1000.0, 100.0, 200.0));
+        ring.push(seg_after(0.0, 100.0, 200.0));
     }
 
     /// Feed two streams with a wasteful label on side A; the auditor
@@ -730,6 +1187,7 @@ mod tests {
         assert_eq!(reports.len(), 8); // 64 pairs / hop 8
         for r in &reports {
             assert!(r.aligned);
+            assert!(!r.quarantined);
             assert_eq!(r.pairs, 8);
             assert_eq!(r.findings.len(), 1, "only proj should be flagged");
             let f = &r.findings[0];
@@ -746,6 +1204,8 @@ mod tests {
         assert!((s.wasted_j - 8.0 * 4.0 * 0.05).abs() < 1e-9);
         assert_eq!(s.top_labels[0].0, "proj");
         assert!(s.aligned);
+        assert_eq!(s.resyncs, 0);
+        assert_eq!(s.content_mismatches, 0);
         // memory bounds: ring capped, window capped, pairing keeps up
         assert!(s.peak_retained_segments <= 16);
         assert_eq!(s.peak_window_pairs, 8);
@@ -801,6 +1261,7 @@ mod tests {
                 hop_ops: 4,
                 ring_cap: 8,
                 max_pending: cap,
+                resync_lookahead: 4,
                 nvml: None,
                 ..Default::default()
             },
@@ -915,5 +1376,347 @@ mod tests {
         assert!((reading - 300.0).abs() < 1.0, "reading {reading}");
         // ring never grew past its capacity despite 100 segments
         assert_eq!(aud.ring_a.peak_retained, 8);
+    }
+
+    /// The tentpole acceptance scenario: one skipped kernel on side A
+    /// of an otherwise identical 1000-op stream pair. The auditor must
+    /// re-anchor immediately (skipping exactly the dropped kernel's
+    /// partner), quarantine the one poisoned window, and keep every
+    /// later window aligned with zero spurious findings.
+    #[test]
+    fn resync_after_single_skipped_kernel() {
+        let cfg = StreamConfig {
+            window_ops: 100,
+            hop_ops: 100,
+            ring_cap: 128,
+            nvml: None,
+            ..Default::default()
+        };
+        let (mut aud, mut reports) = run_with_skip(cfg, 1000, Some(437));
+        let s = aud.finish();
+        reports.append(&mut aud.take_emitted());
+
+        assert_eq!(s.resyncs, 1);
+        assert_eq!(s.resync_log.len(), 1);
+        // divergence detected at the skipped position; B's surplus
+        // partner (the kernel A dropped) is the only skipped event
+        assert_eq!(s.resync_log[0].at_ops, 437);
+        assert_eq!(s.resync_log[0].skipped_a, 0);
+        assert_eq!(s.resync_log[0].skipped_b, 1);
+        assert_eq!(s.unpaired, 1);
+        assert_eq!(s.ops, 999);
+        // exactly one window poisoned; its waste is not ledgered
+        assert_eq!(s.windows_quarantined, 1);
+        assert_eq!(s.wasted_j, 0.0);
+        assert_eq!(s.windows_flagged, 0, "spurious findings after resync");
+        // a recovered divergence is still a divergence overall
+        assert!(!s.aligned);
+        // exactly one drained report is quarantined; every other window
+        // is clean and aligned — one dropped kernel poisons at most one
+        let quarantined: Vec<&WindowReport> = reports.iter().filter(|r| r.quarantined).collect();
+        assert_eq!(quarantined.len(), 1);
+        assert_eq!(quarantined[0].resyncs, 1);
+        assert!(!quarantined[0].aligned);
+        for r in reports.iter().filter(|r| !r.quarantined) {
+            assert!(r.aligned, "window #{} misaligned after resync", r.seq);
+            assert!(r.findings.is_empty(), "window #{} has spurious findings", r.seq);
+        }
+        // post-resync matched histories agree
+        assert_eq!(s.fingerprint_a, s.fingerprint_b);
+    }
+
+    /// The same scenario with resynchronisation disabled reproduces the
+    /// old failure mode: every window after the skip is misaligned and
+    /// flags garbage findings from shifted pairing.
+    #[test]
+    fn without_resync_one_skip_poisons_every_later_window() {
+        let cfg = StreamConfig {
+            window_ops: 100,
+            hop_ops: 100,
+            ring_cap: 128,
+            resync_lookahead: 0, // the pre-resync behaviour
+            nvml: None,
+            ..Default::default()
+        };
+        let (mut aud, mut reports) = run_with_skip(cfg, 1000, Some(437));
+        let s = aud.finish();
+        reports.append(&mut aud.take_emitted());
+        assert!(!s.aligned);
+        assert_eq!(s.resyncs, 0);
+        // shifted pairing garbles per-label sums: windows past the skip
+        // are all misaligned and flag spurious waste
+        let poisoned = reports.iter().filter(|r| !r.aligned).count();
+        assert!(poisoned >= 5, "only {poisoned} poisoned windows");
+        assert!(s.windows_flagged >= 5);
+        assert!(s.wasted_j > 0.0);
+        assert_ne!(s.fingerprint_a, s.fingerprint_b);
+    }
+
+    /// Clean streams through the same harness: no resyncs, no
+    /// quarantine, fully aligned (guards the test harness itself).
+    #[test]
+    fn identical_streams_never_resync() {
+        let cfg = StreamConfig { window_ops: 100, hop_ops: 100, ring_cap: 128, nvml: None, ..Default::default() };
+        let (mut aud, reports) = run_with_skip(cfg, 1000, None);
+        let s = aud.finish();
+        assert!(s.aligned);
+        assert_eq!(s.resyncs, 0);
+        assert_eq!(s.windows_quarantined, 0);
+        assert!(reports.iter().all(|r| r.aligned && !r.quarantined));
+    }
+
+    /// Overlapping windows (`hop_ops < window_ops`) must not inflate
+    /// the cumulative ledger: halving the hop cannot change the total
+    /// waste, because each matched pair is attributed exactly once.
+    #[test]
+    fn overlapping_windows_do_not_double_count_waste() {
+        let run = |hop: usize| {
+            let cfg = StreamConfig { window_ops: 8, hop_ops: hop, nvml: None, ..Default::default() };
+            let mut aud = StreamAuditor::new(cfg, 90.0);
+            let (mut ta, mut tb) = (0.0, 0.0);
+            for i in 0..64 {
+                let label = if i % 2 == 0 { "proj" } else { "act" };
+                let op = if i % 2 == 0 { OpKind::MatMul } else { OpKind::Gelu };
+                let (ea, eb) = if i % 2 == 0 { (0.15, 0.10) } else { (0.02, 0.02) };
+                aud.ingest_a(&rec(label, op, ea, 100.0), seg_after(ta, 100.0, ea / 100e-6));
+                ta += 100.0;
+                aud.ingest_b(&rec(label, op, eb, 100.0), seg_after(tb, 100.0, eb / 100e-6));
+                tb += 100.0;
+            }
+            aud.finish()
+        };
+        let tiled = run(8);
+        let overlap2 = run(4);
+        let overlap4 = run(2);
+        // 32 proj pairs x 0.05 J, exactly once each, at every hop
+        assert!((tiled.wasted_j - 32.0 * 0.05).abs() < 1e-9, "tiled {}", tiled.wasted_j);
+        assert!(
+            (overlap2.wasted_j - tiled.wasted_j).abs() < 1e-9,
+            "hop 4 inflated waste: {} vs {}",
+            overlap2.wasted_j,
+            tiled.wasted_j
+        );
+        assert!(
+            (overlap4.wasted_j - tiled.wasted_j).abs() < 1e-9,
+            "hop 2 inflated waste: {} vs {}",
+            overlap4.wasted_j,
+            tiled.wasted_j
+        );
+        // overlap emits more windows, but the ledger is hop-invariant
+        assert!(overlap4.windows > tiled.windows);
+    }
+
+    /// Peeked reports must not collide with emitted seqs: drained
+    /// sequences are strictly increasing and gap-free no matter how
+    /// often the caller peeks.
+    #[test]
+    fn peeked_reports_do_not_collide_with_emitted_seqs() {
+        let cfg = StreamConfig { window_ops: 2, hop_ops: 2, nvml: None, ..Default::default() };
+        let mut aud = StreamAuditor::new(cfg, 90.0);
+        let mut t = 0.0;
+        let mut drained = Vec::new();
+        for i in 0..10 {
+            let r = rec("proj", OpKind::MatMul, 0.1, 100.0);
+            aud.ingest_a(&r, seg_after(t, 100.0, 1000.0));
+            aud.ingest_b(&r, seg_after(t, 100.0, 1000.0));
+            t += 100.0;
+            // peek between every ingest: must never consume a seq
+            let peek = aud.window_report();
+            assert_eq!(peek.seq, WindowReport::PEEK_SEQ, "peek #{i} stole a seq");
+            drained.append(&mut aud.take_emitted());
+        }
+        aud.finish();
+        drained.append(&mut aud.take_emitted());
+        assert_eq!(drained.len(), 5);
+        for (i, r) in drained.iter().enumerate() {
+            assert_eq!(r.seq, i, "emitted seqs must be gap-free");
+        }
+    }
+
+    /// Content sketches diverging beyond the tolerance are counted per
+    /// window and cumulatively, even when the structure matches.
+    #[test]
+    fn content_guard_flags_diverging_outputs() {
+        let cfg = StreamConfig { window_ops: 4, hop_ops: 4, nvml: None, ..Default::default() };
+        let mut aud = StreamAuditor::new(cfg, 90.0);
+        let mut t = 0.0;
+        for i in 0..8 {
+            // same (label, op) and energy; outputs differ on odd ops
+            let ma = vec![100.0, 10_000.0];
+            let mb = if i % 2 == 1 { vec![103.0, 10_600.0] } else { ma.clone() };
+            aud.ingest_a(&rec_m("proj", OpKind::MatMul, 0.1, 100.0, ma), seg_after(t, 100.0, 1000.0));
+            aud.ingest_b(&rec_m("proj", OpKind::MatMul, 0.1, 100.0, mb), seg_after(t, 100.0, 1000.0));
+            t += 100.0;
+        }
+        let reports = aud.take_emitted();
+        assert_eq!(reports.len(), 2);
+        for r in &reports {
+            assert_eq!(r.content_mismatches, 2, "2 of 4 window pairs diverge");
+            assert!(r.aligned, "content divergence is not structural misalignment");
+        }
+        let s = aud.finish();
+        assert_eq!(s.content_mismatches, 4);
+        // energies equal: no waste — the content guard is orthogonal
+        assert_eq!(s.wasted_j, 0.0);
+    }
+
+    /// Sketch-free records (the guard disabled) never count as content
+    /// mismatches, and a tolerance-sized wobble is not flagged.
+    #[test]
+    fn content_guard_tolerates_disabled_and_small_noise() {
+        let cfg = StreamConfig { window_ops: 2, hop_ops: 2, nvml: None, ..Default::default() };
+        let mut aud = StreamAuditor::new(cfg, 90.0);
+        // disabled on side B
+        aud.ingest_a(&rec_m("p", OpKind::MatMul, 0.1, 50.0, vec![1.0, 2.0]), seg_after(0.0, 50.0, 100.0));
+        aud.ingest_b(&rec("p", OpKind::MatMul, 0.1, 50.0), seg_after(0.0, 50.0, 100.0));
+        // within tolerance (1e-3 relative)
+        aud.ingest_a(&rec_m("p", OpKind::MatMul, 0.1, 50.0, vec![1.0, 2.0]), seg_after(50.0, 50.0, 100.0));
+        aud.ingest_b(
+            &rec_m("p", OpKind::MatMul, 0.1, 50.0, vec![1.0000001, 2.0000002]),
+            seg_after(50.0, 50.0, 100.0),
+        );
+        let s = aud.finish();
+        assert_eq!(s.content_mismatches, 0);
+    }
+
+    /// Idle gaps must materialise as idle power in the ring and shift
+    /// later segments so the timeline stays monotone and contiguous.
+    #[test]
+    fn idle_gaps_materialise_idle_power() {
+        let cfg = StreamConfig { window_ops: 4, hop_ops: 4, ring_cap: 16, nvml: None, ..Default::default() };
+        let mut aud = StreamAuditor::new(cfg, 90.0);
+        let r = rec("proj", OpKind::MatMul, 0.1, 100.0);
+        // executor timeline is contiguous from 0; gaps come from the caller
+        aud.ingest_a(&r, seg_after(0.0, 100.0, 1000.0));
+        aud.ingest_b(&r, seg_after(0.0, 100.0, 1000.0));
+        aud.ingest_idle_a(400.0);
+        aud.ingest_idle_b(400.0);
+        aud.ingest_a(&r, seg_after(100.0, 100.0, 1000.0));
+        aud.ingest_b(&r, seg_after(100.0, 100.0, 1000.0));
+        // ring timeline: [0,100) busy, [100,500) idle, [500,600) busy
+        assert_eq!(aud.ring_a.len(), 3);
+        assert_eq!(aud.ring_a.power_at_us(50.0), 1000.0);
+        assert_eq!(aud.ring_a.power_at_us(300.0), 90.0, "gap must read as idle power");
+        assert_eq!(aud.ring_a.power_at_us(550.0), 1000.0);
+        assert_eq!(aud.ring_a.t_now_us(), 600.0);
+        // gaps carry no op events: pairing and energy are unaffected
+        let s = aud.finish();
+        assert_eq!(s.ops, 2);
+        assert!(s.aligned);
+        assert!((s.energy_a_j - 0.2).abs() < 1e-12);
+    }
+
+    /// An undrained auditor must not grow its report buffer without
+    /// bound: the oldest reports are dropped, counted, and the
+    /// survivors keep their (strictly increasing) emitted seqs.
+    #[test]
+    fn emitted_buffer_is_bounded_by_max_emitted() {
+        let cfg = StreamConfig { window_ops: 1, hop_ops: 1, max_emitted: 4, nvml: None, ..Default::default() };
+        let mut aud = StreamAuditor::new(cfg, 90.0);
+        let r = rec("proj", OpKind::MatMul, 0.1, 100.0);
+        let mut t = 0.0;
+        for _ in 0..20 {
+            aud.ingest_a(&r, seg_after(t, 100.0, 1000.0));
+            aud.ingest_b(&r, seg_after(t, 100.0, 1000.0));
+            t += 100.0;
+        }
+        let reports = aud.take_emitted();
+        assert_eq!(reports.len(), 4, "buffer exceeded max_emitted");
+        let seqs: Vec<usize> = reports.iter().map(|r| r.seq).collect();
+        assert_eq!(seqs, vec![16, 17, 18, 19]);
+        let s = aud.finish();
+        assert_eq!(s.reports_dropped, 16);
+        // dropped reports were still ledgered before being dropped
+        assert_eq!(s.windows, 20);
+    }
+
+    /// `hop_ops > window_ops` would let pairs slide out of the window
+    /// between emissions without ever reaching the waste ledger — the
+    /// constructor rejects the configuration outright.
+    #[test]
+    #[should_panic(expected = "hop")]
+    fn hop_larger_than_window_is_rejected() {
+        StreamAuditor::new(
+            StreamConfig { window_ops: 4, hop_ops: 8, nvml: None, ..Default::default() },
+            90.0,
+        );
+    }
+
+    /// Permanently diverged streams must keep force-advancing (one
+    /// definitive anchor search, then O(1) per pair via the diverged
+    /// latch) — and the latch must clear when the streams re-converge,
+    /// so a later dropped kernel is still resynchronised.
+    #[test]
+    fn diverged_latch_force_pairs_then_clears_on_reconvergence() {
+        let cfg = StreamConfig {
+            window_ops: 4,
+            hop_ops: 4,
+            resync_lookahead: 8,
+            max_pending: 64,
+            nvml: None,
+            ..Default::default()
+        };
+        let mut aud = StreamAuditor::new(cfg, 90.0);
+        let mut t = 0.0;
+        // phase 1: the two sides run entirely different workloads
+        for _ in 0..100 {
+            aud.ingest_a(&rec("proj", OpKind::MatMul, 0.1, 50.0), seg_after(t, 50.0, 2000.0));
+            aud.ingest_b(&rec("act", OpKind::Gelu, 0.1, 50.0), seg_after(t, 50.0, 2000.0));
+            t += 50.0;
+        }
+        // every pair was force-advanced despite the failed anchor search
+        assert_eq!(aud.summary().ops, 100);
+        assert_eq!(aud.summary().resyncs, 0);
+        // phase 2: the streams re-converge, then side A drops a kernel —
+        // the resync machinery must be live again
+        for i in 0..40 {
+            let (label, op, e) = cycle_op(i);
+            if i != 20 {
+                aud.ingest_a(&rec(label, op, e, 50.0), seg_after(t, 50.0, 2000.0));
+            }
+            aud.ingest_b(&rec(label, op, e, 50.0), seg_after(t, 50.0, 2000.0));
+            t += 50.0;
+        }
+        let s = aud.finish();
+        assert!(!s.aligned);
+        assert_eq!(s.resyncs, 1, "resync must work again after re-convergence");
+        assert_eq!(s.ops, 100 + 39);
+        assert_eq!(s.resync_skipped, 1);
+    }
+
+    /// After a flood drops pending events, pairing resumes shifted;
+    /// the resync machinery re-anchors instead of garbling every
+    /// later window.
+    #[test]
+    fn resync_recovers_after_flood_shift() {
+        let cfg = StreamConfig {
+            window_ops: 10,
+            hop_ops: 10,
+            ring_cap: 16,
+            max_pending: 16,
+            resync_lookahead: 8,
+            nvml: None,
+            ..Default::default()
+        };
+        let mut aud = StreamAuditor::new(cfg, 90.0);
+        let (mut ta, mut tb) = (0.0, 0.0);
+        // A floods 30 cycle ops while B stalls: 14 oldest dropped
+        for i in 0..30 {
+            let (label, op, e) = cycle_op(i);
+            aud.ingest_a(&rec(label, op, e, 100.0), seg_after(ta, 100.0, e / 100e-6));
+            ta += 100.0;
+        }
+        // B catches up with the same 30-op workload
+        for i in 0..30 {
+            let (label, op, e) = cycle_op(i);
+            aud.ingest_b(&rec(label, op, e, 100.0), seg_after(tb, 100.0, e / 100e-6));
+            tb += 100.0;
+        }
+        let s = aud.finish();
+        assert!(!s.aligned, "flood drops must break overall alignment");
+        assert!(s.resyncs >= 1, "pairing must re-anchor after the flood shift");
+        // once re-anchored, pairs match structurally again
+        assert!(s.ops > 0);
+        assert_eq!(s.windows_flagged, 0, "re-anchored windows must not flag garbage");
     }
 }

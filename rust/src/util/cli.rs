@@ -18,6 +18,21 @@ pub struct Args {
 impl Args {
     /// Parse from an iterator of raw argument strings (no argv[0]).
     pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        Args::parse_reserved(raw, &[])
+    }
+
+    /// Like [`Args::parse`], but while no positional has been seen yet,
+    /// tokens in `reserved` (the CLI's subcommand names) are never
+    /// consumed as a bare flag's value: `--verbose cases` parses as
+    /// flag `verbose` + positional `cases` instead of option
+    /// `verbose=cases` (which silently emptied the positional list and
+    /// fell through to the help screen). Once the subcommand is parsed,
+    /// reserved words are ordinary values again (`artifacts --dir
+    /// stream` works); to pass one *before* the subcommand, use the
+    /// unambiguous `--key=value` form. Negative numbers (`--offset -5`)
+    /// still parse as values — only `--`-prefixed tokens and
+    /// pre-subcommand reserved words stop a bare flag.
+    pub fn parse_reserved<I: IntoIterator<Item = String>>(raw: I, reserved: &[&str]) -> Args {
         let mut args = Args::default();
         let mut iter = raw.into_iter().peekable();
         while let Some(a) = iter.next() {
@@ -26,7 +41,10 @@ impl Args {
                     args.options.insert(k.to_string(), v.to_string());
                 } else if iter
                     .peek()
-                    .map(|nxt| !nxt.starts_with("--"))
+                    .map(|nxt| {
+                        !nxt.starts_with("--")
+                            && !(args.positional.is_empty() && reserved.contains(&nxt.as_str()))
+                    })
                     .unwrap_or(false)
                 {
                     let v = iter.next().unwrap();
@@ -44,6 +62,11 @@ impl Args {
     /// Parse the process arguments (skipping argv[0]).
     pub fn from_env() -> Args {
         Args::parse(std::env::args().skip(1))
+    }
+
+    /// Parse the process arguments with reserved subcommand words.
+    pub fn from_env_reserved(reserved: &[&str]) -> Args {
+        Args::parse_reserved(std::env::args().skip(1), reserved)
     }
 
     /// True if `--name` was passed as a bare flag or `--name=true`.
@@ -101,6 +124,61 @@ mod tests {
         let a = parse(&["--a", "--b"]);
         assert!(a.flag("a"));
         assert!(a.flag("b"));
+    }
+
+    fn parse_r(s: &[&str], reserved: &[&str]) -> Args {
+        Args::parse_reserved(s.iter().map(|x| x.to_string()), reserved)
+    }
+
+    /// Regression: a bare flag before a subcommand must not swallow it
+    /// (`magneton --verbose cases` used to parse as `verbose=cases`
+    /// with no positionals, so the CLI printed help instead).
+    #[test]
+    fn bare_flag_does_not_swallow_reserved_subcommand() {
+        let a = parse_r(&["--verbose", "cases", "--id", "c10"], &["cases", "fleet"]);
+        assert_eq!(a.positional, vec!["cases"]);
+        assert!(a.flag("verbose"));
+        assert!(a.options.get("verbose").is_none());
+        assert_eq!(a.get("id", ""), "c10");
+    }
+
+    /// The `=` form stays unambiguous: it can pass even a reserved
+    /// word as a value.
+    #[test]
+    fn equals_form_can_pass_reserved_word() {
+        let a = parse_r(&["--cmd=cases", "fleet"], &["cases", "fleet"]);
+        assert_eq!(a.get("cmd", ""), "cases");
+        assert_eq!(a.positional, vec!["fleet"]);
+    }
+
+    /// Negative numeric values must still be consumed by the preceding
+    /// option (they start with `-`, not `--`, and are not reserved).
+    #[test]
+    fn negative_numeric_values_are_option_values() {
+        let a = parse_r(&["cases", "--offset", "-5", "--scale", "-0.25"], &["cases"]);
+        assert_eq!(a.positional, vec!["cases"]);
+        assert_eq!(a.get_parse("offset", 0i64), -5);
+        assert!((a.get_parse("scale", 0.0f64) + 0.25).abs() < 1e-12);
+    }
+
+    /// Non-reserved tokens after a bare flag keep the old greedy
+    /// behaviour (a value, not a positional).
+    #[test]
+    fn unreserved_token_still_parses_as_value() {
+        let a = parse_r(&["--device", "rtx4090", "cases"], &["cases"]);
+        assert_eq!(a.get("device", ""), "rtx4090");
+        assert_eq!(a.positional, vec!["cases"]);
+    }
+
+    /// Once the subcommand is parsed, a reserved word is an ordinary
+    /// option value again: `artifacts --dir stream` must not discard
+    /// the user's path.
+    #[test]
+    fn reserved_word_is_plain_value_after_subcommand() {
+        let a = parse_r(&["artifacts", "--dir", "stream"], &["artifacts", "stream"]);
+        assert_eq!(a.positional, vec!["artifacts"]);
+        assert_eq!(a.get("dir", "default"), "stream");
+        assert!(!a.flag("dir"));
     }
 
     #[test]

@@ -17,3 +17,26 @@ pub mod bench;
 pub use prng::Prng;
 pub use stats::Summary;
 pub use table::Table;
+
+/// FNV-1a over a byte stream — the one 64-bit structural hash shared by
+/// the stream auditor's op identities and the fleet's per-pair rng
+/// derivation (keep the constants in one place).
+pub fn fnv1a<I: IntoIterator<Item = u8>>(bytes: I) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod fnv_tests {
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        // canonical FNV-1a 64-bit test vectors
+        assert_eq!(super::fnv1a([]), 0xcbf29ce484222325);
+        assert_eq!(super::fnv1a("a".bytes()), 0xaf63dc4c8601ec8c);
+        assert_eq!(super::fnv1a("foobar".bytes()), 0x85944171f73967e8);
+    }
+}

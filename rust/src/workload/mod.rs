@@ -185,9 +185,15 @@ impl Default for ServingStream {
 }
 
 impl ServingStream {
+    /// Kernel launches per request (the request-boundary stride for
+    /// arrival-gap injection).
+    pub fn ops_per_request(&self) -> usize {
+        5
+    }
+
     /// Kernel launches the stream will emit (5 per request).
     pub fn kernel_ops(&self) -> usize {
-        self.requests * 5
+        self.requests * self.ops_per_request()
     }
 }
 
@@ -213,6 +219,60 @@ pub fn serving_stream_program(rng: &mut Prng, s: &ServingStream) -> Program {
     p.feed(w1, Tensor::randn(rng, &[d, d]));
     p.feed(w2, Tensor::randn(rng, &[d, d]));
     p
+}
+
+/// How serving requests arrive at a stream pair. The PR 2 loop ran
+/// requests back-to-back; real deployments (MLPerf Power, ML.ENERGY)
+/// see memoryless or bursty traffic, whose idle lulls the stream
+/// auditor materialises as idle-power ring segments
+/// ([`crate::stream::StreamAuditor::ingest_idle_a`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// No idle time between requests (the fixed serving loop).
+    BackToBack,
+    /// Memoryless arrivals at `rate_hz` requests/second: exponential
+    /// inter-arrival gaps.
+    Poisson { rate_hz: f64 },
+    /// On/off traffic: `burst_len` back-to-back requests, then an
+    /// exponential lull drawn at `lull_hz`.
+    Bursty { burst_len: usize, lull_hz: f64 },
+}
+
+impl ArrivalProcess {
+    /// Parse a CLI spelling (`steady` | `poisson` | `bursty`).
+    pub fn parse(kind: &str, rate_hz: f64, burst_len: usize) -> Option<ArrivalProcess> {
+        match kind {
+            "steady" | "back-to-back" => Some(ArrivalProcess::BackToBack),
+            "poisson" => Some(ArrivalProcess::Poisson { rate_hz }),
+            "bursty" => Some(ArrivalProcess::Bursty { burst_len: burst_len.max(1), lull_hz: rate_hz }),
+            _ => None,
+        }
+    }
+
+    /// Idle gap (µs) preceding request `i` (request 0 starts
+    /// immediately; callers pass `i >= 1`). Deterministic given the
+    /// rng state, so both sides of a pair can share one gap sequence.
+    pub fn gap_us(&self, rng: &mut Prng, i: usize) -> f64 {
+        match *self {
+            ArrivalProcess::BackToBack => 0.0,
+            ArrivalProcess::Poisson { rate_hz } => exp_gap_us(rng, rate_hz),
+            ArrivalProcess::Bursty { burst_len, lull_hz } => {
+                if burst_len > 0 && i % burst_len == 0 {
+                    exp_gap_us(rng, lull_hz)
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+}
+
+/// Exponential inter-arrival sample, µs (mean `1e6 / rate_hz`).
+fn exp_gap_us(rng: &mut Prng, rate_hz: f64) -> f64 {
+    if rate_hz <= 0.0 {
+        return 0.0;
+    }
+    -rng.f64().max(1e-12).ln() / rate_hz * 1e6
 }
 
 /// Dispatcher for one side of a serving pair: its matmul kernel runs at
@@ -349,6 +409,58 @@ mod tests {
         // live set: activation chain + 2 weights + input, far below the
         // 200+ node graph
         assert!(stats.live_tensors_peak <= 8, "peak {}", stats.live_tensors_peak);
+    }
+
+    /// Arrival processes: back-to-back never idles, Poisson gaps are
+    /// exponential with the right mean, bursty idles only at burst
+    /// boundaries — all deterministic under a fixed seed.
+    #[test]
+    fn arrival_processes_shape_idle_gaps() {
+        let mut rng = Prng::new(23);
+        for i in 1..100 {
+            assert_eq!(ArrivalProcess::BackToBack.gap_us(&mut rng, i), 0.0);
+        }
+        // Poisson: mean gap ~= 1e6 / rate
+        let poisson = ArrivalProcess::Poisson { rate_hz: 200.0 };
+        let n = 20_000;
+        let mut sum = 0.0;
+        for i in 1..=n {
+            let g = poisson.gap_us(&mut rng, i);
+            assert!(g > 0.0);
+            sum += g;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 5000.0).abs() / 5000.0 < 0.05, "poisson mean {mean}");
+        // bursty: idle only every `burst_len` requests
+        let bursty = ArrivalProcess::Bursty { burst_len: 8, lull_hz: 50.0 };
+        for i in 1..64 {
+            let g = bursty.gap_us(&mut rng, i);
+            if i % 8 == 0 {
+                assert!(g > 0.0, "burst boundary {i} must idle");
+            } else {
+                assert_eq!(g, 0.0, "mid-burst {i} must not idle");
+            }
+        }
+        // determinism: same seed, same gap sequence
+        let mut r1 = Prng::new(7);
+        let mut r2 = Prng::new(7);
+        for i in 1..50 {
+            assert_eq!(poisson.gap_us(&mut r1, i).to_bits(), poisson.gap_us(&mut r2, i).to_bits());
+        }
+    }
+
+    #[test]
+    fn arrival_parse_spellings() {
+        assert_eq!(ArrivalProcess::parse("steady", 1.0, 4), Some(ArrivalProcess::BackToBack));
+        assert_eq!(
+            ArrivalProcess::parse("poisson", 120.0, 4),
+            Some(ArrivalProcess::Poisson { rate_hz: 120.0 })
+        );
+        assert_eq!(
+            ArrivalProcess::parse("bursty", 50.0, 16),
+            Some(ArrivalProcess::Bursty { burst_len: 16, lull_hz: 50.0 })
+        );
+        assert_eq!(ArrivalProcess::parse("nope", 1.0, 1), None);
     }
 
     /// An inefficient matmul dispatcher must raise serving energy at
