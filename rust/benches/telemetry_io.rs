@@ -1,0 +1,108 @@
+//! Telemetry IO bench: NDJSON snapshot append and replay throughput,
+//! plus the rotation invariant — on-disk usage must stay under the
+//! byte budget no matter how many snapshots stream through the sink
+//! (the disk-side analogue of the power-ring memory bound).
+
+use magneton::detect::Side;
+use magneton::stream::{StreamFinding, WindowReport};
+use magneton::telemetry::{load_dir, SinkConfig, Snapshot, SnapshotSink};
+use magneton::util::bench::{banner, persist, time_once};
+use magneton::util::table::Table;
+
+/// A representative emitted window: one finding, realistic magnitudes.
+fn window(seq: usize) -> WindowReport {
+    WindowReport {
+        seq,
+        pairs: 250,
+        energy_a_j: 1.5 + seq as f64 * 1e-3,
+        energy_b_j: 1.2 + seq as f64 * 7e-4,
+        time_a_us: 2.5e4,
+        time_b_us: 2.5e4,
+        findings: vec![StreamFinding {
+            label: "serve.proj".into(),
+            ops: 100,
+            energy_a_j: 0.9,
+            energy_b_j: 0.6,
+            time_a_us: 1e4,
+            time_b_us: 1e4,
+            diff_frac: 1.0 / 3.0,
+            wasteful: Side::A,
+            is_tradeoff: false,
+        }],
+        wasted_j: 0.3,
+        aligned: true,
+        resyncs: 0,
+        quarantined: false,
+        content_mismatches: 0,
+    }
+}
+
+fn main() {
+    banner("Telemetry IO", "snapshot append/replay throughput + bounded rotation");
+    let dir =
+        std::env::temp_dir().join(format!("magneton-telemetry-bench-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let n = 5000usize;
+    let budget: u64 = 512 * 1024;
+    let cfg = SinkConfig { max_snapshot_bytes: budget, rotate_bytes: 64 * 1024 };
+    let snaps: Vec<Snapshot> =
+        (0..n).map(|i| Snapshot::Window { pair: "bench".into(), report: window(i) }).collect();
+
+    // --- append throughput under rotation --------------------------------
+    let mut sink = SnapshotSink::new(&dir, "bench", cfg).expect("sink");
+    let ((), write_us) = time_once(|| {
+        for s in &snaps {
+            sink.append(s).expect("append");
+        }
+    });
+    // the rotation invariant: disk usage bounded by the budget, not by n
+    assert!(
+        sink.total_bytes() <= budget,
+        "rotation failed: {} bytes retained > {budget} budget",
+        sink.total_bytes()
+    );
+    assert!(sink.dropped_files > 0, "bench must exercise file drops");
+    assert_eq!(sink.written, n);
+    assert_eq!(sink.written_bytes, sink.total_bytes() + sink.dropped_bytes);
+
+    // --- replay (read + parse) throughput over the retained suffix -------
+    let (loaded, read_us) = time_once(|| load_dir(&dir).expect("load"));
+    assert!(!loaded.is_empty() && loaded.len() < n, "retained suffix expected");
+    // the retained suffix replays losslessly, ending at the last write
+    assert_eq!(loaded.last().expect("non-empty").to_line(), snaps.last().expect("n > 0").to_line());
+
+    // --- in-memory parse cost (no filesystem) -----------------------------
+    let lines: Vec<String> = snaps.iter().take(1000).map(Snapshot::to_line).collect();
+    let (parsed, parse_us) = time_once(|| {
+        lines.iter().map(|l| Snapshot::parse_line(l).expect("parse")).count()
+    });
+    assert_eq!(parsed, lines.len());
+
+    let mut t = Table::new(vec!["stage", "items", "total", "per item"]);
+    let mut csv = String::from("stage,items,total_us,per_item_us\n");
+    for (stage, items, us) in [
+        ("append (rotating sink)", n, write_us),
+        ("replay (read+parse dir)", loaded.len(), read_us),
+        ("parse (in-memory)", parsed, parse_us),
+    ] {
+        t.row(vec![
+            stage.to_string(),
+            items.to_string(),
+            format!("{:.1} ms", us / 1e3),
+            format!("{:.2} µs", us / items as f64),
+        ]);
+        csv.push_str(&format!("{stage},{items},{us:.1},{:.3}\n", us / items as f64));
+    }
+    let rendered = t.render();
+    println!("{rendered}");
+    println!(
+        "retained {} files / {} bytes after {} snapshots ({} files dropped) — disk bounded by budget",
+        sink.retained_files(),
+        sink.total_bytes(),
+        n,
+        sink.dropped_files
+    );
+    persist("telemetry_io", &rendered, Some(&csv));
+    let _ = std::fs::remove_dir_all(&dir);
+}

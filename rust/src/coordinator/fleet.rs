@@ -9,14 +9,28 @@
 //! at [`FleetAudit::workers`] while preserving submission order before
 //! the final ranking — results are therefore deterministic regardless
 //! of worker count.
+//!
+//! Beyond per-pair audits, the streaming fleet correlates divergence
+//! *across* pairs: when at least [`StreamFleet::correlate_min`] pairs
+//! recover a resync within one correlation window of op positions
+//! (shared-cause divergence — a config push, a model reload, a noisy
+//! neighbour), their [`ResyncEvent`]s are coalesced into a single
+//! ranked [`FleetDivergence`] — one fleet-wide alarm instead of N
+//! per-pair ones, with per-pair attribution retained. With
+//! [`StreamFleet::snapshot_dir`] set, every pair's windows, resyncs,
+//! and summary — plus the fleet ranking and divergence events — are
+//! persisted as replayable snapshots ([`crate::telemetry`]).
 
+use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::time::Instant;
 
 use crate::coordinator::{AuditOutcome, Magneton, SysRun};
 use crate::detect::DetectConfig;
 use crate::energy::{DeviceSpec, Segment};
 use crate::exec::{ExecOptions, Executor, KernelRecord};
-use crate::stream::{StreamAuditor, StreamConfig, StreamSummary, WindowReport};
+use crate::stream::{ResyncEvent, StreamAuditor, StreamConfig, StreamSummary, WindowReport};
+use crate::telemetry::{RankEntry, SinkConfig, Snapshot, SnapshotSink};
 use crate::util::{fnv1a, pool, Prng};
 use crate::workload::ArrivalProcess;
 
@@ -193,6 +207,9 @@ pub fn drive_pair_with_arrivals(
 pub struct StreamFleetEntry {
     pub name: String,
     pub summary: StreamSummary,
+    /// Snapshot-sink IO errors for this pair (0 when no sink is
+    /// configured).
+    pub snapshot_errors: usize,
 }
 
 /// A finished streaming fleet audit, ranked most-wasteful first.
@@ -201,9 +218,105 @@ pub struct StreamFleetReport {
     pub total_wasted_j: f64,
     /// Matched op pairs audited across all streams.
     pub total_ops: usize,
+    /// Fleet-wide coalesced divergence events (see
+    /// [`correlate_divergences`]), in op-position order.
+    pub divergences: Vec<FleetDivergence>,
+    /// Snapshot IO errors across the pairs and the fleet-level sink.
+    pub snapshot_errors: usize,
     /// End-to-end wall time of the fleet run, µs.
     pub wall_time_us: f64,
     pub workers: usize,
+}
+
+/// One pair's share of a fleet-wide divergence.
+#[derive(Clone, Debug)]
+pub struct DivergentPair {
+    pub name: String,
+    /// Matched-op position of this pair's first coalesced resync.
+    pub at_ops: usize,
+    /// Resync events coalesced for this pair.
+    pub resyncs: usize,
+    /// Total events skipped re-anchoring this pair.
+    pub skipped: usize,
+}
+
+/// A fleet-wide divergence: at least `correlate_min` pairs recovered a
+/// resync within one correlation window of matched-op positions — one
+/// alarm for what is almost certainly a shared cause, instead of N
+/// independent per-pair resync lines.
+#[derive(Clone, Debug)]
+pub struct FleetDivergence {
+    /// Matched-op position of the earliest coalesced resync.
+    pub at_ops_min: usize,
+    /// Matched-op position of the latest coalesced resync.
+    pub at_ops_max: usize,
+    /// Per-pair attribution, ranked by skipped events (descending,
+    /// name tiebreak).
+    pub pairs: Vec<DivergentPair>,
+}
+
+/// Coalesce per-pair [`ResyncEvent`]s into fleet-wide
+/// [`FleetDivergence`] events. Events are sorted by matched-op
+/// position and swept greedily: a cluster opens at the first unclaimed
+/// event and absorbs every event within `window_ops` positions of it.
+/// A cluster touching at least `min_pairs` *distinct* pairs becomes
+/// one divergence event (a pair with several resyncs in the cluster is
+/// attributed once, with its events and skips summed); smaller
+/// clusters stay per-pair noise and produce nothing.
+///
+/// Positions are comparable across pairs because every pair of one
+/// fleet runs the same workload program, so `ResyncEvent::at_ops`
+/// indexes the same logical op sequence.
+///
+/// The input is each pair's **in-memory** resync log, which is capped
+/// (the auditor retains the first `RESYNC_LOG_CAP` = 32 events so its
+/// memory stays bounded; the counters stay exact and the snapshot sink
+/// persists every event). A pair that saturates that cap is chronically
+/// diverging — permanently flagged `aligned: false` with exact
+/// `resyncs`/`resync_skipped` totals — so its later events being absent
+/// from live correlation is a deliberate bound, not lost evidence: the
+/// full event history remains on disk for offline analysis via
+/// `magneton replay`.
+pub fn correlate_divergences(
+    entries: &[StreamFleetEntry],
+    window_ops: usize,
+    min_pairs: usize,
+) -> Vec<FleetDivergence> {
+    let mut events: Vec<(usize, &str, &ResyncEvent)> = Vec::new();
+    for e in entries {
+        for ev in &e.summary.resync_log {
+            events.push((ev.at_ops, e.name.as_str(), ev));
+        }
+    }
+    events.sort_by(|a, b| a.0.cmp(&b.0).then_with(|| a.1.cmp(b.1)));
+    let min_pairs = min_pairs.max(1);
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < events.len() {
+        let start = events[i].0;
+        let mut j = i + 1;
+        while j < events.len() && events[j].0 <= start.saturating_add(window_ops) {
+            j += 1;
+        }
+        let mut by_pair: BTreeMap<&str, DivergentPair> = BTreeMap::new();
+        for &(at, name, ev) in &events[i..j] {
+            let cell = by_pair.entry(name).or_insert_with(|| DivergentPair {
+                name: name.to_string(),
+                at_ops: at,
+                resyncs: 0,
+                skipped: 0,
+            });
+            cell.resyncs += 1;
+            cell.skipped += ev.skipped_a + ev.skipped_b;
+        }
+        if by_pair.len() >= min_pairs {
+            let mut pairs: Vec<DivergentPair> = by_pair.into_values().collect();
+            pairs.sort_by(|x, y| y.skipped.cmp(&x.skipped).then_with(|| x.name.cmp(&y.name)));
+            out.push(FleetDivergence { at_ops_min: start, at_ops_max: events[j - 1].0, pairs });
+        }
+        i = j;
+    }
+    out
 }
 
 impl StreamFleetReport {
@@ -233,6 +346,23 @@ pub struct StreamFleet {
     /// Seed of the per-pair arrival rngs (forked per pair name, so
     /// results are independent of worker count and submission order).
     pub arrival_seed: u64,
+    /// Minimum distinct pairs resyncing inside one correlation window
+    /// for the fleet to coalesce them into one [`FleetDivergence`].
+    pub correlate_min: usize,
+    /// Correlation window in matched-op positions; `0` (the default)
+    /// uses `cfg.window_ops` — divergences closer than one detection
+    /// window are indistinguishable anyway.
+    pub correlate_window_ops: usize,
+    /// When set, each pair appends its window/resync/summary snapshots
+    /// under this directory (`pair-<submission index>-<name>-NNNNNN.ndjson`
+    /// — the index keeps file series distinct across duplicate pair
+    /// names and names that sanitize to the same stem) and the fleet
+    /// appends its ranking and divergence events
+    /// (`fleet-NNNNNN.ndjson`), rotation-bounded by `sink_cfg`.
+    /// `magneton replay --dir <dir>` re-renders all of it offline.
+    pub snapshot_dir: Option<PathBuf>,
+    /// Rotation bounds shared by the per-pair and fleet-level sinks.
+    pub sink_cfg: SinkConfig,
     pairs: Vec<FleetPair>,
 }
 
@@ -248,12 +378,24 @@ impl StreamFleet {
             arrival: ArrivalProcess::BackToBack,
             ops_per_request: 0,
             arrival_seed: 0x6d61_676e,
+            correlate_min: 2,
+            correlate_window_ops: 0,
+            snapshot_dir: None,
+            sink_cfg: SinkConfig::default(),
             pairs: Vec::new(),
         }
     }
 
-    /// Queue one serving stream pair.
+    /// Queue one serving stream pair. Names must be unique: they key
+    /// snapshot attribution, replay ranking verification, and
+    /// divergence correlation, all of which would silently collapse
+    /// two same-named pairs into one.
     pub fn add_pair(&mut self, name: &str, a: SysRun, b: SysRun) -> &mut Self {
+        assert!(
+            !self.pairs.iter().any(|q| q.name == name),
+            "duplicate stream pair name `{name}`: pair names key snapshot attribution, \
+             ranking verification, and divergence correlation"
+        );
         self.pairs.push(FleetPair { name: name.to_string(), a, b });
         self
     }
@@ -270,17 +412,32 @@ impl StreamFleet {
     pub fn run(&self) -> StreamFleetReport {
         let t0 = Instant::now();
         let workers = self.workers.max(1).min(self.pairs.len().max(1));
-        let mut entries: Vec<StreamFleetEntry> = pool::par_map(&self.pairs, workers, |p| {
+        let indexed: Vec<(usize, &FleetPair)> = self.pairs.iter().enumerate().collect();
+        let mut entries: Vec<StreamFleetEntry> = pool::par_map(&indexed, workers, |&(idx, p)| {
             let mut exec_a = Executor::new(self.device.clone(), p.a.dispatcher.clone(), p.a.env.clone());
             exec_a.opts = self.exec_opts.clone();
             let mut exec_b = Executor::new(self.device.clone(), p.b.dispatcher.clone(), p.b.env.clone());
             exec_b.opts = self.exec_opts.clone();
             let mut aud = StreamAuditor::new(self.cfg.clone(), self.device.idle_w);
+            let mut snapshot_errors = 0usize;
+            if let Some(dir) = &self.snapshot_dir {
+                // the submission index keeps file series distinct even
+                // when two (unique) pair names sanitize to the same
+                // filename stem ("svc.a" vs "svc a") — otherwise their
+                // concurrent sinks would interleave appends and delete
+                // each other's files during rotation
+                let prefix = format!("pair-{idx:03}-{}", p.name);
+                match SnapshotSink::new(dir.clone(), &prefix, self.sink_cfg.clone()) {
+                    Ok(sink) => aud.set_sink(&p.name, sink),
+                    Err(_) => snapshot_errors += 1,
+                }
+            }
             let mut sa = exec_a.stream(&p.a.prog);
             let mut sb = exec_b.stream(&p.b.prog);
             // lock-step interleave (pending skew ≤ 1) with arrival
-            // gaps; per-window reports are dropped — the summary keeps
-            // the aggregates
+            // gaps; per-window reports are dropped from memory — with a
+            // sink configured they persist on disk — while the summary
+            // keeps the aggregates
             let mut rng = Prng::new(self.arrival_seed ^ fnv1a(p.name.bytes()));
             let summary = drive_pair_with_arrivals(
                 &mut aud,
@@ -291,7 +448,8 @@ impl StreamFleet {
                 &mut rng,
                 |_| {},
             );
-            StreamFleetEntry { name: p.name.clone(), summary }
+            snapshot_errors += aud.sink_errors();
+            StreamFleetEntry { name: p.name.clone(), summary, snapshot_errors }
         });
         entries.sort_by(|x, y| {
             y.summary
@@ -301,10 +459,48 @@ impl StreamFleet {
         });
         let total_wasted_j = entries.iter().map(|e| e.summary.wasted_j).sum();
         let total_ops = entries.iter().map(|e| e.summary.ops).sum();
+        // cross-pair resync correlation: one fleet-wide alarm instead
+        // of N per-pair ones when divergence strikes together
+        let window = if self.correlate_window_ops > 0 {
+            self.correlate_window_ops
+        } else {
+            self.cfg.window_ops
+        };
+        let divergences = correlate_divergences(&entries, window, self.correlate_min);
+        let mut snapshot_errors: usize = entries.iter().map(|e| e.snapshot_errors).sum();
+        if let Some(dir) = &self.snapshot_dir {
+            match SnapshotSink::new(dir.clone(), "fleet", self.sink_cfg.clone()) {
+                Ok(mut sink) => {
+                    for d in &divergences {
+                        if sink.append(&Snapshot::Divergence { event: d.clone() }).is_err() {
+                            snapshot_errors += 1;
+                        }
+                    }
+                    let ranking: Vec<RankEntry> = entries
+                        .iter()
+                        .map(|e| RankEntry {
+                            name: e.name.clone(),
+                            wasted_j: e.summary.wasted_j,
+                            ops: e.summary.ops,
+                            windows: e.summary.windows,
+                            windows_flagged: e.summary.windows_flagged,
+                            resyncs: e.summary.resyncs,
+                            aligned: e.summary.aligned,
+                        })
+                        .collect();
+                    if sink.append(&Snapshot::Fleet { ranking }).is_err() {
+                        snapshot_errors += 1;
+                    }
+                }
+                Err(_) => snapshot_errors += 1,
+            }
+        }
         StreamFleetReport {
             entries,
             total_wasted_j,
             total_ops,
+            divergences,
+            snapshot_errors,
             wall_time_us: t0.elapsed().as_secs_f64() * 1e6,
             workers,
         }
@@ -435,6 +631,112 @@ mod tests {
         fleet.run()
     }
 
+    /// Synthetic fleet entry carrying only a resync log — the input
+    /// `correlate_divergences` actually reads.
+    fn entry_with_resyncs(name: &str, events: &[(usize, usize)]) -> StreamFleetEntry {
+        let resync_log: Vec<ResyncEvent> = events
+            .iter()
+            .map(|&(at, skipped)| ResyncEvent { at_ops: at, skipped_a: 0, skipped_b: skipped })
+            .collect();
+        StreamFleetEntry {
+            name: name.to_string(),
+            summary: StreamSummary {
+                ops: 1000,
+                windows: 10,
+                energy_a_j: 1.0,
+                energy_b_j: 1.0,
+                time_a_us: 1.0,
+                time_b_us: 1.0,
+                wasted_j: 0.0,
+                windows_flagged: 0,
+                windows_quarantined: resync_log.len(),
+                top_labels: vec![],
+                aligned: resync_log.is_empty(),
+                fingerprint_a: 1,
+                fingerprint_b: 1,
+                unpaired: 0,
+                resyncs: resync_log.len(),
+                resync_skipped: events.iter().map(|&(_, s)| s).sum(),
+                resync_log,
+                content_mismatches: 0,
+                reports_dropped: 0,
+                peak_retained_segments: 0,
+                peak_window_pairs: 0,
+                peak_pending: 0,
+            },
+            snapshot_errors: 0,
+        }
+    }
+
+    /// Three pairs resync within one correlation window: the fleet
+    /// coalesces them into exactly one divergence event with all three
+    /// attributed, ranked by skipped events.
+    #[test]
+    fn simultaneous_divergence_coalesces_into_one_event() {
+        let entries = vec![
+            entry_with_resyncs("p0", &[(437, 1)]),
+            entry_with_resyncs("p1", &[(438, 3)]),
+            entry_with_resyncs("p2", &[(439, 1)]),
+        ];
+        let divs = correlate_divergences(&entries, 100, 2);
+        assert_eq!(divs.len(), 1, "one fleet-wide alarm, not three per-pair ones");
+        let d = &divs[0];
+        assert_eq!(d.at_ops_min, 437);
+        assert_eq!(d.at_ops_max, 439);
+        assert_eq!(d.pairs.len(), 3);
+        // ranked by skipped (desc), name tiebreak
+        assert_eq!(d.pairs[0].name, "p1");
+        assert_eq!(d.pairs[0].skipped, 3);
+        assert_eq!(d.pairs[1].name, "p0");
+        assert_eq!(d.pairs[2].name, "p2");
+    }
+
+    /// Pair names key snapshot attribution and ranking verification;
+    /// a duplicate would silently collapse two pairs into one, so it
+    /// is rejected at add time.
+    #[test]
+    #[should_panic(expected = "duplicate stream pair name")]
+    fn duplicate_stream_pair_names_are_rejected() {
+        let mut fleet = StreamFleet::new(DeviceSpec::h200_sim());
+        fleet.add_pair("svc", mk_stream_run("a", 1, 1.0, 4), mk_stream_run("b", 1, 1.0, 4));
+        fleet.add_pair("svc", mk_stream_run("a", 2, 1.0, 4), mk_stream_run("b", 2, 1.0, 4));
+    }
+
+    /// Below `correlate_min` distinct pairs nothing coalesces — a lone
+    /// pair resyncing repeatedly stays per-pair noise.
+    #[test]
+    fn lone_pair_resyncs_do_not_become_fleet_events() {
+        let entries = vec![
+            entry_with_resyncs("p0", &[(100, 1), (120, 1), (140, 1)]),
+            entry_with_resyncs("p1", &[]),
+        ];
+        assert!(correlate_divergences(&entries, 100, 2).is_empty());
+        // min_pairs 1 degenerates to per-cluster reporting
+        assert_eq!(correlate_divergences(&entries, 100, 1).len(), 1);
+    }
+
+    /// Resyncs farther apart than the window form separate clusters;
+    /// each cluster qualifies independently.
+    #[test]
+    fn far_apart_divergences_stay_separate_events() {
+        let entries = vec![
+            entry_with_resyncs("p0", &[(100, 1), (5000, 2)]),
+            entry_with_resyncs("p1", &[(130, 1), (5040, 1)]),
+            entry_with_resyncs("p2", &[(5020, 1)]),
+        ];
+        let divs = correlate_divergences(&entries, 100, 2);
+        assert_eq!(divs.len(), 2);
+        assert_eq!(divs[0].pairs.len(), 2);
+        assert_eq!(divs[0].at_ops_min, 100);
+        assert_eq!(divs[1].pairs.len(), 3);
+        assert_eq!(divs[1].at_ops_min, 5000);
+        assert_eq!(divs[1].at_ops_max, 5040);
+        // a pair with several resyncs in one cluster is attributed once
+        let p0 = divs[1].pairs.iter().find(|p| p.name == "p0").unwrap();
+        assert_eq!(p0.resyncs, 1);
+        assert_eq!(p0.skipped, 2);
+    }
+
     /// The streaming fleet must flag the two wasteful streams, keep the
     /// clean one silent, rank by waste, and never retain more power
     /// segments than the ring allows — on multi-hundred-op streams.
@@ -444,6 +746,10 @@ mod tests {
         assert_eq!(r.entries.len(), 3);
         assert_eq!(r.flagged(), 2);
         assert_eq!(r.total_ops, 3 * 120);
+        // aligned same-workload pairs: no resyncs, no fleet divergence,
+        // and no snapshot sink configured means no snapshot errors
+        assert!(r.divergences.is_empty());
+        assert_eq!(r.snapshot_errors, 0);
         for w in r.entries.windows(2) {
             assert!(w[0].summary.wasted_j >= w[1].summary.wasted_j);
         }

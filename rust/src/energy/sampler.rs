@@ -10,6 +10,32 @@
 //!   the paper reports.
 //! * [`WindowedMeter`] — Zeus-style begin/end windows on top of NVML
 //!   readings, with the 100 ms minimum-window restriction.
+//!
+//! # The cursor-vs-rescan contract
+//!
+//! The NVML model has two readout paths, and they are contractually
+//! **bit-identical**:
+//!
+//! * **cursor** — [`NvmlSampler::advance`] carries the driver's EMA
+//!   fold forward in a [`SamplerState`]: a later query consumes only
+//!   the samples since the previous one, so a monotone sweep of
+//!   readings is `O(samples)` total. Queries must be non-decreasing in
+//!   time (a counter cannot un-see a sample); an earlier query returns
+//!   the current EMA untouched. The cursor is generic over
+//!   [`PowerSource`], so it reads finished [`PowerTrace`]s and live
+//!   [`crate::stream::PowerRing`]s alike — on a ring, history evicted
+//!   before the cursor reached it reads as idle power.
+//! * **rescan** — [`NvmlSampler::reading_at_rescan`] /
+//!   [`NvmlSampler::energy_j_rescan`] re-run the fold from `t = 0` on
+//!   every query: `O(readings × samples)`, quadratic over a full-trace
+//!   sweep. Retained verbatim as the reference implementation and the
+//!   strawman benched in `benches/stream_scaling.rs`.
+//!
+//! Both paths walk the identical *indexed* sample grid (`k · Δ`, never
+//! an accumulated `t += Δ`, which drifts an ulp per step) in the same
+//! observation order with the same EMA arithmetic, so their readings
+//! agree to the last bit — enforced by the golden tests below,
+//! including at ≥ 1e9 µs offsets.
 
 use super::power::{PowerSource, PowerTrace};
 

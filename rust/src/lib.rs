@@ -15,12 +15,66 @@
 //! * simulation — [`energy`], [`trace`], [`dispatch`], [`exec`]
 //! * Magneton core — [`fingerprint`], [`matching`], [`detect`], [`diagnose`]
 //! * evaluation fleet — [`systems`], [`workload`], [`cases`], [`profiler`]
-//! * integration — [`runtime`] (PJRT/XLA), [`coordinator`], [`stream`], [`report`]
+//! * integration — [`runtime`] (PJRT/XLA), [`coordinator`], [`stream`],
+//!   [`telemetry`], [`report`]
 //!
-//! See `DESIGN.md` (repository root) for the module map, per-experiment
+//! Two consumption modes sit on top of the core:
+//!
+//! * **batch** ([`coordinator`]) — audit two finished runs and diagnose
+//!   each finding; scaled across N system pairs by
+//!   [`coordinator::fleet::FleetAudit`];
+//! * **streaming** ([`stream`]) — audit live serving traffic in bounded
+//!   memory, with resynchronisation across dropped kernels, content
+//!   guards, and fleet-wide divergence correlation
+//!   ([`coordinator::fleet::StreamFleet`]); [`telemetry`] persists the
+//!   rolling state as replayable snapshots (`magneton replay`).
+//!
+//! See `README.md` for a subcommand-by-subcommand quickstart and
+//! `DESIGN.md` (repository root) for the module map, per-experiment
 //! index, and the substitution table (simulated GPU in place of H200 +
 //! physical power meter, mini ML systems in place of vLLM/SGLang/...,
 //! etc.).
+//!
+//! # Example: a minimal differential audit
+//!
+//! ```
+//! use magneton::coordinator::{Magneton, SysRun};
+//! use magneton::dispatch::{Env, KernelChoice, Routine};
+//! use magneton::energy::{ComputeUnit, DeviceSpec};
+//! use magneton::exec::{Dispatcher, Program};
+//! use magneton::graph::{Graph, OpKind};
+//! use magneton::tensor::Tensor;
+//! use magneton::util::Prng;
+//!
+//! // Two systems computing the same projection; side A's matmul kernel
+//! // burns extra energy at equal speed (quality 0.6).
+//! fn system(label: &str, kernel_quality: f64) -> SysRun {
+//!     let mut rng = Prng::new(40); // same seed: same workload tensors
+//!     let mut g = Graph::new(label);
+//!     let x = g.add(OpKind::Input, &[], "x");
+//!     let w = g.add(OpKind::Weight, &[], "w");
+//!     let m = g.add(OpKind::MatMul, &[x, w], "proj");
+//!     g.add(OpKind::Output, &[m], "out");
+//!     let mut prog = Program::new(g);
+//!     prog.feed(0, Tensor::randn(&mut rng, &[128, 256]));
+//!     prog.feed(1, Tensor::randn(&mut rng, &[256, 256]));
+//!     let mut disp = Dispatcher::new();
+//!     disp.register(
+//!         "matmul",
+//!         Routine::direct(
+//!             "torch.matmul",
+//!             vec![],
+//!             KernelChoice::new("gemm", ComputeUnit::TensorCore)
+//!                 .quality(kernel_quality, 1.0, 1.0),
+//!         ),
+//!     );
+//!     SysRun::new(label, disp, Env::new(), prog)
+//! }
+//!
+//! let mag = Magneton::new(DeviceSpec::h200_sim());
+//! let outcome = mag.audit(&system("wasteful", 0.6), &system("optimal", 1.0));
+//! assert!(outcome.detected(), "the 0.6-quality kernel must be flagged");
+//! ```
 
 pub mod util;
 pub mod prop;
@@ -42,6 +96,7 @@ pub mod cases;
 pub mod runtime;
 pub mod coordinator;
 pub mod stream;
+pub mod telemetry;
 pub mod report;
 
 /// Crate-wide error type (the offline registry has no `anyhow`): a plain

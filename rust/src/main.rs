@@ -8,8 +8,16 @@
 //! magneton accuracy                   # Table 4 measurement accuracy
 //! magneton artifacts [--dir artifacts]# list loadable PJRT artifacts
 //! magneton stream [--requests 500 --arrival poisson|bursty|steady]
-//!                                     # online serving-stream audit
+//!                 [--snapshot-dir d]  # online serving-stream audit
+//! magneton replay --dir <d>           # re-render persisted snapshots
 //! ```
+//!
+//! Commands exit non-zero on failure (a missing snapshot/artifact
+//! directory, a snapshot that fails verification) so the CLI is
+//! scriptable; diagnostics go to stderr, reports to stdout.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
 
 use magneton::cases;
 use magneton::coordinator::Magneton;
@@ -22,20 +30,52 @@ use magneton::util::Prng;
 /// Subcommand names, reserved at parse time so a bare flag never
 /// swallows one as its value (`magneton --verbose cases`).
 const SUBCOMMANDS: &[&str] =
-    &["cases", "fleet", "ddp", "breakdown", "accuracy", "artifacts", "stream", "help"];
+    &["cases", "fleet", "ddp", "breakdown", "accuracy", "artifacts", "stream", "replay", "help"];
 
-fn main() {
+fn main() -> ExitCode {
     let args = Args::from_env_reserved(SUBCOMMANDS);
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
-    match cmd {
-        "cases" => cmd_cases(&args),
-        "fleet" => cmd_fleet(&args),
-        "ddp" => cmd_ddp(&args),
-        "breakdown" => cmd_breakdown(&args),
-        "accuracy" => cmd_accuracy(),
+    let result = match cmd {
+        "cases" => {
+            cmd_cases(&args);
+            Ok(())
+        }
+        "fleet" => {
+            cmd_fleet(&args);
+            Ok(())
+        }
+        "ddp" => {
+            cmd_ddp(&args);
+            Ok(())
+        }
+        "breakdown" => {
+            cmd_breakdown(&args);
+            Ok(())
+        }
+        "accuracy" => {
+            cmd_accuracy();
+            Ok(())
+        }
         "artifacts" => cmd_artifacts(&args),
         "stream" => cmd_stream(&args),
-        _ => print_help(),
+        "replay" => cmd_replay(&args),
+        "help" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            // a typo'd subcommand must not exit 0 — a script gating on
+            // `magneton repaly` would otherwise silently skip its check
+            print_help();
+            Err(magneton::Error::msg(format!("unknown command `{other}`")))
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("magneton {cmd}: {e}");
+            ExitCode::FAILURE
+        }
     }
 }
 
@@ -52,12 +92,17 @@ fn print_help() {
          \x20 artifacts  list PJRT artifacts and smoke-run the fingerprint kernel\n\
          \x20 stream     online audit of a live serving pair: chunked channel\n\
          \x20            ingestion, request-arrival idle gaps, resync + content\n\
-         \x20            guards, rolling window reports, then a streaming fleet\n\n\
+         \x20            guards, rolling window reports, then a streaming fleet;\n\
+         \x20            --snapshot-dir <d> persists replayable NDJSON snapshots\n\
+         \x20 replay     reload a snapshot directory (--dir <d>) offline:\n\
+         \x20            re-render windows, per-pair summaries, fleet ranking and\n\
+         \x20            divergence events, and verify the ranking bit-for-bit\n\n\
          OPTIONS: --id <case> --eps <f64> --threshold <f64> --seed <u64> --device <h200|rtx4090>\n\
          STREAM:  --requests <n=500> --arrival <poisson|bursty|steady> --rate <hz=200>\n\
          \x20        --burst <n=16> --window <pairs=250> --hop <pairs> --ring <segs=512>\n\
          \x20        --chunk <events=64> --queue <chunks=4> --max-emitted <n=64>\n\
-         \x20        --eff <0..1=0.62> --pairs <fleet pairs=3>"
+         \x20        --eff <0..1=0.62> --pairs <fleet pairs=3> --snapshot-dir <dir>\n\
+         REPLAY:  --dir <dir=snapshots> --windows <n=12> --no-ranking-ok"
     );
 }
 
@@ -73,6 +118,12 @@ fn magneton(args: &Args) -> Magneton {
     m.eps = args.get_parse("eps", 1e-3);
     m.cfg.energy_threshold = args.get_parse("threshold", 0.10);
     m
+}
+
+/// Directory option shared by `artifacts --dir`, `replay --dir`, and
+/// `stream --snapshot-dir`: one resolution rule for all of them.
+fn dir_arg(args: &Args, key: &str, default: &str) -> PathBuf {
+    PathBuf::from(args.get(key, default))
 }
 
 fn cmd_cases(args: &Args) {
@@ -177,14 +228,18 @@ fn cmd_accuracy() {
 /// events are in flight per side); the consumer pairs them through a
 /// `StreamAuditor`, materialising request-arrival idle gaps, printing
 /// every rolling window report, and finishing with a streaming fleet
-/// over N concurrent pairs under the same arrival process.
-fn cmd_stream(args: &Args) {
+/// over N concurrent pairs under the same arrival process. With
+/// `--snapshot-dir <d>`, every window, resync, and summary — plus the
+/// fleet ranking and divergence events — are persisted as replayable
+/// NDJSON snapshots (`magneton replay --dir <d>`).
+fn cmd_stream(args: &Args) -> magneton::Result<()> {
     use magneton::coordinator::fleet::{drive_pair_with_arrivals, StreamFleet};
     use magneton::coordinator::SysRun;
     use magneton::dispatch::Env;
     use magneton::energy::Segment;
     use magneton::exec::{Executor, KernelRecord};
     use magneton::stream::{StreamAuditor, StreamConfig};
+    use magneton::telemetry::{SinkConfig, SnapshotSink};
     use magneton::workload::{serving_dispatcher, serving_stream_program, ArrivalProcess, ServingStream};
     use std::sync::mpsc;
     use std::thread;
@@ -195,8 +250,9 @@ fn cmd_stream(args: &Args) {
     let burst: usize = args.get_parse("burst", 16usize);
     let arrival_kind = args.get("arrival", "poisson");
     let Some(arrival) = ArrivalProcess::parse(arrival_kind, rate, burst) else {
-        println!("unknown arrival process `{arrival_kind}` (expected steady|poisson|bursty)");
-        return;
+        return Err(magneton::Error::msg(format!(
+            "unknown arrival process `{arrival_kind}` (expected steady|poisson|bursty)"
+        )));
     };
     let spec = ServingStream { requests, ..Default::default() };
     let chunk_len: usize = args.get_parse("chunk", 64usize).max(1);
@@ -217,6 +273,7 @@ fn cmd_stream(args: &Args) {
     cfg.max_pending = cfg.max_pending.max(2 * chunk_len);
     let seed: u64 = args.get_parse("seed", 2026u64);
     let eff: f64 = args.get_parse("eff", 0.62f64);
+    let snapshot_dir = args.options.get("snapshot-dir").map(PathBuf::from);
 
     println!(
         "magneton stream: {} requests ({} kernel ops/side), {:?} arrivals,\n\
@@ -261,6 +318,12 @@ fn cmd_stream(args: &Args) {
     // the consumer: the one shared pairing protocol, fed by iterators
     // that drain the chunked channels (recv blocks = backpressure)
     let mut aud = StreamAuditor::new(cfg.clone(), device.idle_w);
+    let pair_name = "inefficient-vs-optimal";
+    if let Some(dir) = &snapshot_dir {
+        let sink = SnapshotSink::new(dir.clone(), "pair-inefficient-vs-optimal", SinkConfig::default())
+            .map_err(|e| e.context("snapshot sink"))?;
+        aud.set_sink(pair_name, sink);
+    }
     let mut arrival_rng = Prng::new(seed ^ 0xa441_b815);
     let ops_per_request = spec.ops_per_request();
     let summary = drive_pair_with_arrivals(
@@ -274,11 +337,17 @@ fn cmd_stream(args: &Args) {
     );
     handle_a.join().expect("producer A panicked");
     handle_b.join().expect("producer B panicked");
+    // remembered and failed at the end (after the reports render), so a
+    // full disk cannot silently produce a truncated snapshot directory
+    let pair_sink_errors = aud.sink_errors();
+    if pair_sink_errors > 0 {
+        eprintln!("warning: {pair_sink_errors} snapshot writes failed");
+    }
     if let (Some(wa), Some(wb)) = (aud.nvml_reading_a(), aud.nvml_reading_b()) {
         println!("\nlive NVML counters: A {wa:.0} W, B {wb:.0} W (arrival lulls read through the rings)");
     }
     println!();
-    print!("{}", report::render_stream("inefficient-vs-optimal", &summary));
+    print!("{}", report::render_stream(pair_name, &summary));
 
     // final stage: a streaming fleet over N concurrent serving pairs
     // under the same arrival process
@@ -288,6 +357,7 @@ fn cmd_stream(args: &Args) {
     fleet.arrival = arrival;
     fleet.ops_per_request = ops_per_request;
     fleet.arrival_seed = seed;
+    fleet.snapshot_dir = snapshot_dir.clone();
     let fleet_spec = ServingStream { requests: (requests / 5).max(20), ..spec };
     for i in 0..fleet_pairs {
         let pair_eff = if i % 2 == 0 { eff } else { 1.0 };
@@ -308,27 +378,114 @@ fn cmd_stream(args: &Args) {
     );
     let r = fleet.run();
     print!("{}", report::render_stream_fleet(&r));
+    if pair_sink_errors + r.snapshot_errors > 0 {
+        let msg = format!(
+            "{} snapshot writes failed ({pair_sink_errors} single-pair, {} fleet)",
+            pair_sink_errors + r.snapshot_errors,
+            r.snapshot_errors
+        );
+        return Err(magneton::Error::msg(msg));
+    }
+    if let Some(dir) = &snapshot_dir {
+        println!(
+            "\nsnapshots persisted under {} — replay with `magneton replay --dir {}`",
+            dir.display(),
+            dir.display()
+        );
+    }
+    Ok(())
 }
 
-fn cmd_artifacts(args: &Args) {
-    let dir = std::path::PathBuf::from(args.get("dir", "artifacts"));
-    match magneton::runtime::PjrtRuntime::cpu() {
-        Err(e) => println!("PJRT unavailable: {e}"),
-        Ok(mut rt) => match rt.load_dir(&dir) {
-            Err(e) => println!("no artifacts loaded from {dir:?}: {e}"),
-            Ok(n) => {
-                println!("loaded {n} artifacts: {:?}", rt.names());
-                match magneton::runtime::PjrtMomentEngine::load(&dir) {
-                    Ok(eng) => {
-                        use magneton::fingerprint::MomentEngine;
-                        let mut rng = Prng::new(1);
-                        let t = magneton::tensor::Tensor::randn(&mut rng, &[16, 64]);
-                        let m = eng.moments(&t, 4);
-                        println!("fingerprint kernel smoke: moments = {m:?}");
-                    }
-                    Err(e) => println!("fingerprint engine: {e}"),
-                }
-            }
-        },
+/// Offline replay of a snapshot directory: re-render the persisted
+/// windows, resyncs, per-pair summaries, fleet ranking, and divergence
+/// events, then verify the ranking reproduces the per-pair waste
+/// ledgers bit-for-bit (non-zero exit on mismatch, so CI can gate on
+/// it).
+fn cmd_replay(args: &Args) -> magneton::Result<()> {
+    use magneton::telemetry::Replay;
+    let dir = dir_arg(args, "dir", "snapshots");
+    let replay = Replay::load(&dir)?;
+    println!(
+        "replaying {}: {} windows, {} resyncs, {} summaries, {} rankings, {} divergences\n",
+        dir.display(),
+        replay.windows.len(),
+        replay.resyncs.len(),
+        replay.summaries.len(),
+        replay.rankings.len(),
+        replay.divergences.len()
+    );
+    if replay.windows.is_empty() && replay.summaries.is_empty() {
+        return Err(magneton::Error::msg(format!("no snapshots found under {}", dir.display())));
     }
+    let max_windows: usize = args.get_parse("windows", 12usize);
+    let skip = replay.windows.len().saturating_sub(max_windows);
+    if skip > 0 {
+        println!("... {skip} earlier windows elided (raise with --windows <n>)");
+    }
+    for (pair, w) in replay.windows.iter().skip(skip) {
+        println!("[{pair}] {}", report::render_window(w));
+    }
+    for (pair, ev) in &replay.resyncs {
+        println!(
+            "[{pair}] resync at op {}: skipped {} (A) + {} (B)",
+            ev.at_ops, ev.skipped_a, ev.skipped_b
+        );
+    }
+    for (pair, s) in &replay.summaries {
+        println!();
+        print!("{}", report::render_stream(pair, s));
+    }
+    if !replay.divergences.is_empty() {
+        println!();
+        for d in &replay.divergences {
+            println!("{}", report::render_divergence(d));
+        }
+    }
+    for ranking in &replay.rankings {
+        println!("\npersisted fleet ranking:");
+        print!("{}", report::render_ranking(ranking));
+    }
+    // a directory with summaries but no ranking is an interrupted or
+    // truncated fleet run — exactly what the verification gate exists
+    // to catch, so it must not pass vacuously (`--no-ranking-ok`
+    // accepts directories written by a bare StreamAuditor sink, which
+    // never produces a fleet ranking)
+    if replay.rankings.is_empty() && !args.flag("no-ranking-ok") {
+        return Err(magneton::Error::msg(
+            "no fleet ranking snapshot found: the fleet stage never persisted its ranking \
+             (interrupted run or truncated directory); pass --no-ranking-ok for directories \
+             written without a fleet",
+        ));
+    }
+    match replay.verify_ranking() {
+        Ok(n) => {
+            println!("\nreplay verified: {n} ranking entries reproduce their pair summaries bit-for-bit");
+            Ok(())
+        }
+        Err(e) => Err(magneton::Error::msg(format!(
+            "persisted ranking does not reproduce the summaries: {e}"
+        ))),
+    }
+}
+
+/// List PJRT artifacts and smoke-run the fingerprint kernel. Exits
+/// non-zero when the runtime is unavailable or nothing loads, so
+/// scripts can gate on artifact presence instead of parsing stdout.
+fn cmd_artifacts(args: &Args) -> magneton::Result<()> {
+    let dir = dir_arg(args, "dir", "artifacts");
+    let mut rt = magneton::runtime::PjrtRuntime::cpu().map_err(|e| e.context("PJRT unavailable"))?;
+    let n = rt
+        .load_dir(&dir)
+        .map_err(|e| e.context(format!("no artifacts loaded from {}", dir.display())))?;
+    println!("loaded {n} artifacts: {:?}", rt.names());
+    let eng = magneton::runtime::PjrtMomentEngine::load(&dir)
+        .map_err(|e| e.context("fingerprint engine"))?;
+    {
+        use magneton::fingerprint::MomentEngine;
+        let mut rng = Prng::new(1);
+        let t = magneton::tensor::Tensor::randn(&mut rng, &[16, 64]);
+        let m = eng.moments(&t, 4);
+        println!("fingerprint kernel smoke: moments = {m:?}");
+    }
+    Ok(())
 }

@@ -3,10 +3,11 @@
 //! report, and rolling summaries for streaming audits, with CSV
 //! persistence under `results/`.
 
-use crate::coordinator::fleet::{FleetReport, StreamFleetReport};
+use crate::coordinator::fleet::{FleetDivergence, FleetReport, StreamFleetReport};
 use crate::coordinator::AuditOutcome;
 use crate::exec::RunArtifacts;
 use crate::stream::{StreamSummary, WindowReport};
+use crate::telemetry::RankEntry;
 use crate::util::table::{fmt_joules, fmt_us, Table};
 
 /// Render an audit outcome as a human-readable report.
@@ -201,6 +202,51 @@ pub fn stream_fleet_table(report: &StreamFleetReport) -> Table {
     t
 }
 
+/// One fleet-wide coalesced divergence alarm: the single line that
+/// replaces N per-pair resync reports, attribution retained.
+pub fn render_divergence(d: &FleetDivergence) -> String {
+    let attribution: Vec<String> = d
+        .pairs
+        .iter()
+        .map(|p| {
+            format!(
+                "{} ({} resync{}, {} skipped, first at op {})",
+                p.name,
+                p.resyncs,
+                if p.resyncs == 1 { "" } else { "s" },
+                p.skipped,
+                p.at_ops
+            )
+        })
+        .collect();
+    format!(
+        "!!! fleet divergence at ops {}..{}: {} pairs resynced together — {}",
+        d.at_ops_min,
+        d.at_ops_max,
+        d.pairs.len(),
+        attribution.join("; ")
+    )
+}
+
+/// Ranked table for a persisted fleet ranking (the replay-side
+/// counterpart of [`stream_fleet_table`]).
+pub fn render_ranking(ranking: &[RankEntry]) -> String {
+    let mut t =
+        Table::new(vec!["rank", "stream", "ops", "wasted", "flagged", "resyncs", "aligned"]);
+    for (i, e) in ranking.iter().enumerate() {
+        t.row(vec![
+            (i + 1).to_string(),
+            e.name.clone(),
+            e.ops.to_string(),
+            fmt_joules(e.wasted_j),
+            format!("{}/{}", e.windows_flagged, e.windows),
+            e.resyncs.to_string(),
+            if e.aligned { "yes" } else { "NO" }.to_string(),
+        ]);
+    }
+    t.render()
+}
+
 /// Human-readable streaming fleet report.
 pub fn render_stream_fleet(report: &StreamFleetReport) -> String {
     let mut s = String::new();
@@ -211,6 +257,13 @@ pub fn render_stream_fleet(report: &StreamFleetReport) -> String {
         fmt_us(report.wall_time_us)
     ));
     s.push_str(&stream_fleet_table(report).render());
+    for d in &report.divergences {
+        s.push_str(&render_divergence(d));
+        s.push('\n');
+    }
+    if report.snapshot_errors > 0 {
+        s.push_str(&format!("snapshot sink: {} IO errors\n", report.snapshot_errors));
+    }
     s.push_str(&format!(
         "total: {} wasted across {} op pairs in {}/{} flagged streams\n",
         fmt_joules(report.total_wasted_j),
@@ -331,6 +384,35 @@ mod tests {
         assert!(s.contains("stream audit: hot"));
         assert!(s.contains("wasted"));
         assert!(s.contains("serve.proj") || s.contains("serve.out"));
+    }
+
+    #[test]
+    fn divergence_and_ranking_render() {
+        use crate::coordinator::fleet::DivergentPair;
+        let d = FleetDivergence {
+            at_ops_min: 437,
+            at_ops_max: 439,
+            pairs: vec![
+                DivergentPair { name: "serving-1".into(), at_ops: 438, resyncs: 2, skipped: 3 },
+                DivergentPair { name: "serving-0".into(), at_ops: 437, resyncs: 1, skipped: 1 },
+            ],
+        };
+        let line = render_divergence(&d);
+        assert!(line.contains("ops 437..439"), "{line}");
+        assert!(line.contains("2 pairs"), "{line}");
+        assert!(line.contains("serving-1 (2 resyncs, 3 skipped, first at op 438)"), "{line}");
+        let ranking = vec![RankEntry {
+            name: "hot".into(),
+            wasted_j: 1.5,
+            ops: 100,
+            windows: 4,
+            windows_flagged: 3,
+            resyncs: 0,
+            aligned: true,
+        }];
+        let table = render_ranking(&ranking);
+        assert!(table.contains("hot"), "{table}");
+        assert!(table.contains("3/4"), "{table}");
     }
 
     #[test]

@@ -35,7 +35,25 @@
 //!
 //! and emits incremental [`WindowReport`]s (buffer bounded by
 //! [`StreamConfig::max_emitted`]) plus a cumulative [`StreamSummary`]
-//! without ever holding the full trace.
+//! without ever holding the full trace. With a snapshot sink attached
+//! ([`StreamAuditor::set_sink`]), every emitted window, every
+//! [`ResyncEvent`], and the final summary are also appended as durable
+//! NDJSON snapshots ([`crate::telemetry`]) so the audit survives the
+//! process and can be replayed offline (`magneton replay`).
+//!
+//! # The resync latch
+//!
+//! The anchor search after a positional mismatch costs
+//! O(lookahead²·min_run) in the worst case. Running it once per op on a
+//! *permanently* diverged pair (two streams that genuinely run
+//! different workloads) would turn the auditor quadratic, so a
+//! definitively failed search — both queues full to the lookahead with
+//! no anchor — latches `diverged_mode`: pairing force-advances at O(1)
+//! per op without re-scanning. The latch clears only after
+//! [`StreamConfig::resync_min_run`] *consecutive* structural matches (a
+//! demonstrated re-convergence; one coincidental match on a
+//! quasi-diverged stream must not re-arm the scan), after which a later
+//! dropped kernel is resynchronised normally again.
 
 use std::collections::{BTreeMap, VecDeque};
 
@@ -43,6 +61,7 @@ use crate::detect::{DetectConfig, Side};
 use crate::energy::sampler::{NvmlSampler, SamplerState};
 use crate::energy::{PowerSource, Segment};
 use crate::exec::KernelRecord;
+use crate::telemetry::{Snapshot, SnapshotSink};
 
 /// Fixed-capacity ring of power segments: the bounded stand-in for a
 /// full [`crate::energy::PowerTrace`] on an unbounded stream. Evicted
@@ -450,6 +469,11 @@ pub struct StreamAuditor {
     pairs_since_hop: usize,
     emitted: VecDeque<WindowReport>,
     reports_dropped: usize,
+    /// Durable telemetry hook: `(pair name, sink)`; every emitted
+    /// window, resync, and the final summary are appended as snapshots.
+    sink: Option<(String, SnapshotSink)>,
+    /// Sink IO errors (counted, never unwinding the ingest hot path).
+    sink_errors: usize,
     /// Pending events dropped after exceeding the skew cap.
     unpaired_dropped: usize,
     // cumulative accounting
@@ -538,6 +562,8 @@ impl StreamAuditor {
             pairs_since_hop: 0,
             emitted: VecDeque::new(),
             reports_dropped: 0,
+            sink: None,
+            sink_errors: 0,
             unpaired_dropped: 0,
             ops: 0,
             windows: 0,
@@ -553,6 +579,54 @@ impl StreamAuditor {
             peak_window_pairs: 0,
             peak_pending: 0,
             cfg,
+        }
+    }
+
+    /// Attach a durable snapshot sink: every window emitted from now
+    /// on, every [`ResyncEvent`], and the final summary (at
+    /// [`StreamAuditor::finish`]) are appended as NDJSON snapshots
+    /// attributed to `pair`. Sink IO failures are counted in
+    /// [`StreamAuditor::sink_errors`] rather than unwinding ingestion —
+    /// a full disk must not kill a live audit.
+    pub fn set_sink(&mut self, pair: &str, sink: SnapshotSink) {
+        self.sink = Some((pair.to_string(), sink));
+    }
+
+    /// Detach and return the sink (to inspect rotation counters or
+    /// hand it to another auditor).
+    pub fn take_sink(&mut self) -> Option<SnapshotSink> {
+        self.sink.take().map(|(_, s)| s)
+    }
+
+    /// Snapshot-sink IO errors so far (0 when no sink is attached).
+    pub fn sink_errors(&self) -> usize {
+        self.sink_errors
+    }
+
+    fn sink_window(&mut self, report: &WindowReport) {
+        if let Some((pair, sink)) = &mut self.sink {
+            let snap = Snapshot::Window { pair: pair.clone(), report: report.clone() };
+            if sink.append(&snap).is_err() {
+                self.sink_errors += 1;
+            }
+        }
+    }
+
+    fn sink_resync(&mut self, event: ResyncEvent) {
+        if let Some((pair, sink)) = &mut self.sink {
+            let snap = Snapshot::Resync { pair: pair.clone(), event };
+            if sink.append(&snap).is_err() {
+                self.sink_errors += 1;
+            }
+        }
+    }
+
+    fn sink_summary(&mut self, summary: &StreamSummary) {
+        if let Some((pair, sink)) = &mut self.sink {
+            let snap = Snapshot::Summary { pair: pair.clone(), summary: summary.clone() };
+            if sink.append(&snap).is_err() {
+                self.sink_errors += 1;
+            }
         }
     }
 
@@ -657,9 +731,13 @@ impl StreamAuditor {
                     }
                     self.resyncs += 1;
                     self.resync_skipped += skip_a + skip_b;
+                    let ev = ResyncEvent { at_ops: self.ops, skipped_a: skip_a, skipped_b: skip_b };
                     if self.resync_log.len() < RESYNC_LOG_CAP {
-                        self.resync_log.push(ResyncEvent { at_ops: self.ops, skipped_a: skip_a, skipped_b: skip_b });
+                        self.resync_log.push(ev);
                     }
+                    // the sink persists every event, even past the
+                    // in-memory log cap — that is its whole point
+                    self.sink_resync(ev);
                     // the divergence is recovered, but the window it
                     // happened in cannot be trusted
                     self.aligned = false;
@@ -933,6 +1011,7 @@ impl StreamAuditor {
                 }
             }
         }
+        self.sink_window(&report);
         self.emitted.push_back(report);
         if self.cfg.max_emitted > 0 {
             while self.emitted.len() > self.cfg.max_emitted {
@@ -1022,7 +1101,9 @@ impl StreamAuditor {
             self.pairs_since_hop = 0;
             self.emit_window(n_new);
         }
-        self.summary()
+        let summary = self.summary();
+        self.sink_summary(&summary);
+        summary
     }
 }
 
@@ -1682,6 +1763,113 @@ mod tests {
         assert_eq!(s.resyncs, 1, "resync must work again after re-convergence");
         assert_eq!(s.ops, 100 + 39);
         assert_eq!(s.resync_skipped, 1);
+    }
+
+    /// With a snapshot sink attached, every emitted window, every
+    /// resync event, and the final summary land on disk as replayable
+    /// NDJSON snapshots, and the persisted waste ledger is
+    /// bit-identical to the live one.
+    #[test]
+    fn sink_persists_windows_resyncs_and_summary() {
+        use crate::telemetry::{load_dir, SinkConfig, Snapshot, SnapshotSink};
+        let dir =
+            std::env::temp_dir().join(format!("magneton-stream-sink-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = StreamConfig {
+            window_ops: 100,
+            hop_ops: 100,
+            ring_cap: 128,
+            nvml: None,
+            ..Default::default()
+        };
+        let mut aud = StreamAuditor::new(cfg, 90.0);
+        aud.set_sink("pair-0", SnapshotSink::new(&dir, "pair-0", SinkConfig::default()).unwrap());
+        let (mut ta, mut tb) = (0.0, 0.0);
+        for i in 0..1000 {
+            let (label, op, e) = cycle_op(i);
+            if i != 437 {
+                aud.ingest_a(&rec(label, op, e, 100.0), seg_after(ta, 100.0, e / 100e-6));
+                ta += 100.0;
+            }
+            aud.ingest_b(&rec(label, op, e, 100.0), seg_after(tb, 100.0, e / 100e-6));
+            tb += 100.0;
+        }
+        let live = aud.finish();
+        assert_eq!(aud.sink_errors(), 0);
+        let snaps = load_dir(&dir).expect("snapshots load back");
+        let (mut windows, mut resyncs, mut summaries) = (0usize, 0usize, Vec::new());
+        for s in snaps {
+            match s {
+                Snapshot::Window { pair, .. } => {
+                    assert_eq!(pair, "pair-0");
+                    windows += 1;
+                }
+                Snapshot::Resync { event, .. } => {
+                    assert_eq!(event.at_ops, 437);
+                    resyncs += 1;
+                }
+                Snapshot::Summary { summary, .. } => summaries.push(summary),
+                other => panic!("unexpected snapshot {other:?}"),
+            }
+        }
+        assert_eq!(windows, live.windows, "every emitted window must be persisted");
+        assert_eq!(resyncs, 1);
+        assert_eq!(summaries.len(), 1, "finish persists exactly one summary");
+        let s = &summaries[0];
+        assert_eq!(s.wasted_j.to_bits(), live.wasted_j.to_bits(), "ledger must be bit-identical");
+        assert_eq!(s.fingerprint_a, live.fingerprint_a);
+        assert_eq!(s.fingerprint_b, live.fingerprint_b);
+        assert_eq!(s.ops, live.ops);
+        assert_eq!(s.windows_quarantined, live.windows_quarantined);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// `take_sink` hands the sink — with its file index and byte
+    /// accounting intact — to a fresh auditor, which continues the
+    /// same snapshot series (the safe way to resume a series: a new
+    /// `SnapshotSink::new` on the same directory would restart its
+    /// indices and budget from zero).
+    #[test]
+    fn sink_hand_off_continues_the_same_file_series() {
+        use crate::telemetry::{load_dir, SinkConfig, Snapshot, SnapshotSink};
+        let dir =
+            std::env::temp_dir().join(format!("magneton-stream-handoff-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = StreamConfig { window_ops: 2, hop_ops: 2, nvml: None, ..Default::default() };
+        let mut aud = StreamAuditor::new(cfg.clone(), 90.0);
+        aud.set_sink("pair-0", SnapshotSink::new(&dir, "pair-0", SinkConfig::default()).unwrap());
+        let r = rec("proj", OpKind::MatMul, 0.1, 100.0);
+        let mut t = 0.0;
+        for _ in 0..4 {
+            aud.ingest_a(&r, seg_after(t, 100.0, 1000.0));
+            aud.ingest_b(&r, seg_after(t, 100.0, 1000.0));
+            t += 100.0;
+        }
+        aud.finish(); // 2 windows + 1 summary
+        let sink = aud.take_sink().expect("sink was attached");
+        let first_session_written = sink.written;
+        assert_eq!(first_session_written, 3);
+        assert!(aud.take_sink().is_none(), "take_sink must detach");
+        // session restart: a fresh auditor continues the series
+        let mut aud2 = StreamAuditor::new(cfg, 90.0);
+        aud2.set_sink("pair-0", sink);
+        let mut t2 = 0.0;
+        for _ in 0..2 {
+            aud2.ingest_a(&r, seg_after(t2, 100.0, 1000.0));
+            aud2.ingest_b(&r, seg_after(t2, 100.0, 1000.0));
+            t2 += 100.0;
+        }
+        aud2.finish(); // 1 window + 1 summary more
+        let sink2 = aud2.take_sink().expect("sink attached to second auditor");
+        assert_eq!(sink2.written, first_session_written + 2, "accounting must carry over");
+        // the combined series replays as one: both sessions' snapshots,
+        // in write order
+        let snaps = load_dir(&dir).expect("combined series loads");
+        assert_eq!(snaps.len(), sink2.written);
+        let summaries =
+            snaps.iter().filter(|s| matches!(s, Snapshot::Summary { .. })).count();
+        assert_eq!(summaries, 2, "one summary per session");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     /// After a flood drops pending events, pairing resumes shifted;

@@ -1,0 +1,503 @@
+//! JSON reader for the telemetry layer (the offline registry has no
+//! `serde`, so snapshots are parsed by hand).
+//!
+//! The *writer* lives in [`crate::util::json`] — this module re-exports
+//! its [`Json`] value type and completes the round trip with
+//! [`Json::parse`] plus typed accessors. The pairing is escape-correct
+//! by construction:
+//!
+//! * every string the writer escapes (`"`, `\\`, `\n`, `\t`, `\r`, and
+//!   `\u` escapes for the remaining control characters) is decoded back
+//!   to the identical Rust string, and non-ASCII text written raw reads
+//!   back raw;
+//! * finite floats are written in Rust's shortest round-trip `Display`
+//!   form, so `parse(render(x))` returns the *bit-identical* `f64` —
+//!   the property the snapshot replay relies on;
+//! * non-finite floats are written as `null` (NaN-free output), so a
+//!   parsed snapshot can never smuggle a NaN into a report.
+//!
+//! The number grammar is a small superset of JSON's (anything
+//! `f64::from_str` accepts over the characters `0-9 + - . e E`), which
+//! parses everything the writer emits.
+//!
+//! ```
+//! use magneton::telemetry::json::Json;
+//!
+//! let j = Json::parse(r#"{"pair":"serving-0","wasted_j":0.25,"tags":["a\nb",null,true]}"#)
+//!     .unwrap();
+//! assert_eq!(j.get("pair").and_then(Json::as_str), Some("serving-0"));
+//! assert_eq!(j.get("wasted_j").and_then(Json::as_f64), Some(0.25));
+//! // render → parse → render is a fixed point
+//! assert_eq!(j.render(), Json::parse(&j.render()).unwrap().render());
+//! ```
+
+use std::collections::BTreeMap;
+
+pub use crate::util::json::{Json, JsonObj};
+
+use crate::{Error, Result};
+
+/// Recursive-descent JSON parser over a pre-decoded char buffer (UTF-8
+/// handling comes for free from `str::chars`; snapshot lines are small,
+/// so the O(n) buffer is irrelevant next to the file IO).
+struct Parser {
+    chars: Vec<char>,
+    pos: usize,
+    /// Remaining nesting budget: a corrupt/hostile line of 100k `[`s
+    /// must come back as a parse `Err`, not a stack overflow.
+    depth: usize,
+}
+
+/// Maximum container nesting accepted by [`Json::parse`] — snapshots
+/// nest 4 levels; 128 leaves generous headroom while keeping recursion
+/// depth (and stack use) bounded on malformed input.
+const MAX_DEPTH: usize = 128;
+
+impl Parser {
+    fn peek(&self) -> Option<char> {
+        self.chars.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.peek();
+        if c.is_some() {
+            self.pos += 1;
+        }
+        c
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(' ' | '\t' | '\n' | '\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn err(&self, msg: &str) -> Error {
+        Error::msg(format!("json parse error at char {}: {msg}", self.pos))
+    }
+
+    fn expect(&mut self, want: char) -> Result<()> {
+        match self.bump() {
+            Some(c) if c == want => Ok(()),
+            Some(c) => Err(self.err(&format!("expected `{want}`, found `{c}`"))),
+            None => Err(self.err(&format!("expected `{want}`, found end of input"))),
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        self.skip_ws();
+        match self.peek() {
+            Some('{') => self.nested(Parser::object),
+            Some('[') => self.nested(Parser::array),
+            Some('"') => Ok(Json::Str(self.string()?)),
+            Some('t') => self.literal("true", Json::Bool(true)),
+            Some('f') => self.literal("false", Json::Bool(false)),
+            Some('n') => self.literal("null", Json::Null),
+            Some(c) if c == '-' || c.is_ascii_digit() => self.number(),
+            Some(c) => Err(self.err(&format!("unexpected character `{c}`"))),
+            None => Err(self.err("unexpected end of input")),
+        }
+    }
+
+    /// Run a container parser one nesting level down, bounding the
+    /// recursion depth.
+    fn nested(&mut self, f: fn(&mut Parser) -> Result<Json>) -> Result<Json> {
+        if self.depth == 0 {
+            return Err(self.err(&format!("nesting deeper than {MAX_DEPTH} levels")));
+        }
+        self.depth -= 1;
+        let v = f(self);
+        self.depth += 1;
+        v
+    }
+
+    fn literal(&mut self, lit: &str, value: Json) -> Result<Json> {
+        for want in lit.chars() {
+            if self.bump() != Some(want) {
+                return Err(self.err(&format!("malformed literal (expected `{lit}`)")));
+            }
+        }
+        Ok(value)
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        fn is_num_char(c: char) -> bool {
+            c.is_ascii_digit() || matches!(c, '-' | '+' | '.' | 'e' | 'E')
+        }
+        let start = self.pos;
+        while matches!(self.peek(), Some(c) if is_num_char(c)) {
+            self.pos += 1;
+        }
+        let text: String = self.chars[start..self.pos].iter().collect();
+        match text.parse::<f64>() {
+            // overflowing literals (1e999) saturate to ±inf in FromStr;
+            // the writer never emits non-finite values, so a corrupt
+            // line must be rejected, not smuggled into reports
+            Ok(x) if x.is_finite() => Ok(Json::Num(x)),
+            Ok(_) => Err(self.err(&format!("non-finite number `{text}`"))),
+            Err(e) => Err(self.err(&format!("bad number `{text}`: {e}"))),
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect('"')?;
+        let mut out = String::new();
+        loop {
+            let c = self.bump().ok_or_else(|| self.err("unterminated string"))?;
+            match c {
+                '"' => return Ok(out),
+                '\\' => {
+                    let e = self.bump().ok_or_else(|| self.err("unterminated escape"))?;
+                    match e {
+                        '"' => out.push('"'),
+                        '\\' => out.push('\\'),
+                        '/' => out.push('/'),
+                        'b' => out.push('\u{0008}'),
+                        'f' => out.push('\u{000c}'),
+                        'n' => out.push('\n'),
+                        'r' => out.push('\r'),
+                        't' => out.push('\t'),
+                        'u' => {
+                            let hi = self.hex4()?;
+                            let cp = if (0xd800..0xdc00).contains(&hi) {
+                                // UTF-16 surrogate pair: the low half
+                                // must follow as another \u escape
+                                if self.bump() != Some('\\') || self.bump() != Some('u') {
+                                    return Err(self.err("high surrogate without a \\u low half"));
+                                }
+                                let lo = self.hex4()?;
+                                if !(0xdc00..0xe000).contains(&lo) {
+                                    return Err(self.err("invalid low surrogate"));
+                                }
+                                0x10000 + ((hi - 0xd800) << 10) + (lo - 0xdc00)
+                            } else if (0xdc00..0xe000).contains(&hi) {
+                                return Err(self.err("unpaired low surrogate"));
+                            } else {
+                                hi
+                            };
+                            let ch = char::from_u32(cp)
+                                .ok_or_else(|| self.err("invalid \\u code point"))?;
+                            out.push(ch);
+                        }
+                        other => return Err(self.err(&format!("unknown escape `\\{other}`"))),
+                    }
+                }
+                c => out.push(c),
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let c = self.bump().ok_or_else(|| self.err("truncated \\u escape"))?;
+            let d = c
+                .to_digit(16)
+                .ok_or_else(|| self.err(&format!("non-hex digit `{c}` in \\u escape")))?;
+            v = v * 16 + d;
+        }
+        Ok(v)
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect('[')?;
+        let mut xs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(']') {
+            self.pos += 1;
+            return Ok(Json::Arr(xs));
+        }
+        loop {
+            xs.push(self.value()?);
+            self.skip_ws();
+            match self.bump() {
+                Some(',') => continue,
+                Some(']') => return Ok(Json::Arr(xs)),
+                _ => return Err(self.err("expected `,` or `]` in array")),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect('{')?;
+        let mut m = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some('}') {
+            self.pos += 1;
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            self.skip_ws();
+            let k = self.string()?;
+            self.skip_ws();
+            self.expect(':')?;
+            let v = self.value()?;
+            // duplicate keys: last one wins (the writer never emits them)
+            m.insert(k, v);
+            self.skip_ws();
+            match self.bump() {
+                Some(',') => continue,
+                Some('}') => return Ok(Json::Obj(m)),
+                _ => return Err(self.err("expected `,` or `}` in object")),
+            }
+        }
+    }
+}
+
+impl Json {
+    /// Parse one JSON value from `text` (the whole string must be the
+    /// value, modulo surrounding whitespace).
+    pub fn parse(text: &str) -> Result<Json> {
+        let mut p = Parser { chars: text.chars().collect(), pos: 0, depth: MAX_DEPTH };
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.chars.len() {
+            return Err(p.err("trailing characters after value"));
+        }
+        Ok(v)
+    }
+
+    /// Field lookup on an object; `None` for other variants.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// Numeric value as an index: non-negative, fraction-free, and
+    /// inside f64's exact-integer range.
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x <= 9.0e15 => Some(*x as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(xs) => Some(xs.as_slice()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    fn roundtrip(j: &Json) {
+        let text = j.render();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("parse `{text}`: {e}"));
+        assert_eq!(&back, j, "round trip changed the value for `{text}`");
+        assert_eq!(back.render(), text, "render is not a fixed point for `{text}`");
+    }
+
+    #[test]
+    fn scalars_round_trip() {
+        roundtrip(&Json::Null);
+        roundtrip(&Json::Bool(true));
+        roundtrip(&Json::Bool(false));
+        roundtrip(&Json::Num(0.0));
+        roundtrip(&Json::Num(42.0));
+        roundtrip(&Json::Num(-17.0));
+        roundtrip(&Json::Num(0.1));
+        roundtrip(&Json::Str(String::new()));
+        roundtrip(&Json::Str("plain".into()));
+    }
+
+    /// Floats must round-trip bit-for-bit: shortest `Display` form out,
+    /// `from_str` back — including negative zero, subnormals, huge
+    /// magnitudes, and ugly fractions.
+    #[test]
+    fn floats_round_trip_bit_for_bit() {
+        let cases = [
+            0.0,
+            -0.0,
+            1.0 / 3.0,
+            0.1 + 0.2,
+            1e-300,
+            -1e300,
+            f64::MIN_POSITIVE,
+            f64::MAX,
+            5e-324, // smallest subnormal
+            1e15,   // the writer's integer-shortcut boundary
+            1e15 - 1.0,
+            -(1e15 - 1.0),
+            2.0f64.powi(53),
+            437.25,
+        ];
+        for x in cases {
+            let text = Json::Num(x).render();
+            let back = Json::parse(&text).unwrap();
+            let y = back.as_f64().unwrap();
+            assert_eq!(y.to_bits(), x.to_bits(), "{x} → `{text}` → {y}");
+        }
+    }
+
+    /// Non-finite floats are written as `null` (never `NaN`/`inf`
+    /// tokens), so parsed snapshots are NaN-free by construction.
+    #[test]
+    fn non_finite_renders_null_and_parses_as_null() {
+        for x in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let text = Json::Num(x).render();
+            assert_eq!(text, "null");
+            assert_eq!(Json::parse(&text).unwrap(), Json::Null);
+        }
+    }
+
+    #[test]
+    fn pathological_strings_round_trip() {
+        let cases = [
+            "quote \" backslash \\ slash /".to_string(),
+            "newline \n tab \t return \r".to_string(),
+            "control \u{0000} \u{0001} \u{0008} \u{000c} \u{001f}".to_string(),
+            "non-ascii: caffè, 東京, Ωμέγα".to_string(),
+            "emoji beyond the BMP: 🦀🔋".to_string(),
+            "line sep \u{2028} para sep \u{2029}".to_string(),
+            "\\u0041 is not an escape once escaped".to_string(),
+            "trailing backslash \\".to_string(),
+        ];
+        for s in cases {
+            roundtrip(&Json::Str(s));
+        }
+    }
+
+    #[test]
+    fn escape_sequences_decode() {
+        let j = Json::parse(r#""Aé\n\t\"\\\/\b\f\r""#).unwrap();
+        assert_eq!(j.as_str(), Some("Aé\n\t\"\\/\u{0008}\u{000c}\r"));
+        // surrogate pair → one astral code point
+        let j = Json::parse(r#""🦀""#).unwrap();
+        assert_eq!(j.as_str(), Some("🦀"));
+    }
+
+    #[test]
+    fn malformed_inputs_are_rejected() {
+        for text in [
+            "",
+            "{",
+            "[1,",
+            "[1 2]",
+            r#"{"a" 1}"#,
+            r#"{"a":1,}"#, // trailing comma (writer never emits one)
+            "tru",
+            "nul",
+            "1e",
+            "--1",
+            "1e999",  // overflows to inf — non-finite must not parse
+            "-1e999",
+            "\"unterminated",
+            r#""bad \q escape""#,
+            r#""\ud800 lone high""#,
+            r#""\udc00 lone low""#,
+            r#""\u12""#,
+            "1 2",     // trailing content
+            "[1] []",  // trailing content
+        ] {
+            assert!(Json::parse(text).is_err(), "`{text}` should not parse");
+        }
+    }
+
+    /// A hostile/corrupt line of deeply nested containers must come
+    /// back as a parse error, never a stack overflow.
+    #[test]
+    fn pathological_nesting_is_rejected_not_overflowed() {
+        let deep_arr = "[".repeat(100_000);
+        assert!(Json::parse(&deep_arr).is_err());
+        let deep_obj = "{\"k\":".repeat(100_000);
+        assert!(Json::parse(&deep_obj).is_err());
+        // nesting at the limit still parses
+        let ok = format!("{}1{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(Json::parse(&ok).is_ok());
+        let too_deep = format!("{}1{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        assert!(Json::parse(&too_deep).is_err());
+    }
+
+    #[test]
+    fn whitespace_is_tolerated() {
+        let j = Json::parse(" {\n\t\"a\" : [ 1 , 2 ] ,\r\n \"b\" : null } ").unwrap();
+        assert_eq!(j.get("a").and_then(Json::as_arr).map(<[Json]>::len), Some(2));
+        assert_eq!(j.get("b"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn accessors_are_typed() {
+        let j = Json::parse(r#"{"n":3,"x":1.5,"s":"hi","b":false,"xs":[1],"neg":-1}"#).unwrap();
+        assert_eq!(j.get("n").and_then(Json::as_usize), Some(3));
+        assert_eq!(j.get("x").and_then(Json::as_usize), None, "fractional is not an index");
+        assert_eq!(j.get("neg").and_then(Json::as_usize), None, "negative is not an index");
+        assert_eq!(j.get("x").and_then(Json::as_f64), Some(1.5));
+        assert_eq!(j.get("s").and_then(Json::as_str), Some("hi"));
+        assert_eq!(j.get("b").and_then(Json::as_bool), Some(false));
+        assert_eq!(j.get("xs").and_then(Json::as_arr).map(<[Json]>::len), Some(1));
+        assert_eq!(j.get("missing"), None);
+        assert_eq!(Json::Null.get("n"), None);
+    }
+
+    /// Property: randomly generated values (nested, with pathological
+    /// strings and floats) survive render → parse → render unchanged.
+    #[test]
+    fn prop_random_values_round_trip() {
+        let mut rng = Prng::new(0x7e1e);
+        for _ in 0..200 {
+            let j = gen_json(&mut rng, 3);
+            roundtrip(&j);
+        }
+    }
+
+    fn gen_string(rng: &mut Prng) -> String {
+        let alphabet: Vec<char> =
+            "ab\"\\\n\t\r\u{0}\u{1f}é東🦀 /".chars().collect();
+        (0..rng.below(12)).map(|_| *rng.choose(&alphabet)).collect()
+    }
+
+    fn gen_f64(rng: &mut Prng) -> f64 {
+        match rng.below(4) {
+            0 => rng.below(2000) as f64 - 1000.0,
+            1 => rng.normal() * 1e-6,
+            2 => rng.normal() * 1e12,
+            _ => rng.f64(),
+        }
+    }
+
+    fn gen_json(rng: &mut Prng, depth: usize) -> Json {
+        let top = if depth == 0 { 4 } else { 6 };
+        match rng.below(top) {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num(gen_f64(rng)),
+            3 => Json::Str(gen_string(rng)),
+            4 => Json::Arr((0..rng.below(4)).map(|_| gen_json(rng, depth - 1)).collect()),
+            _ => {
+                let mut obj = Json::obj();
+                for _ in 0..rng.below(4) {
+                    obj = obj.field(&gen_string(rng), gen_json(rng, depth - 1));
+                }
+                obj.build()
+            }
+        }
+    }
+}

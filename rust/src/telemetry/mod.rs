@@ -1,0 +1,1097 @@
+//! Durable, replayable telemetry for long-running audits.
+//!
+//! The streaming subsystem ([`crate::stream`]) keeps every retained
+//! structure bounded, which means its findings are *transient*: once a
+//! window report is drained and printed, the evidence is gone with the
+//! process. For the operator-facing setting the paper targets —
+//! serving fleets audited over days — the audit state must outlive the
+//! process and stay inspectable after the fact. This module is that
+//! layer:
+//!
+//! * [`Snapshot`] — the five durable artifact kinds: per-window
+//!   reports, per-pair resync events, cumulative per-pair summaries
+//!   (the waste ledger), fleet rankings, and fleet-wide
+//!   [`FleetDivergence`] events;
+//! * [`json`] — the zero-dependency JSON reader completing the
+//!   round trip with the writer in [`crate::util::json`]; every
+//!   snapshot is one newline-delimited JSON line, and
+//!   `Snapshot → json → Snapshot` is lossless (bit-for-bit on floats,
+//!   escape-correct on strings — property-tested below);
+//! * [`SnapshotSink`] — an appending NDJSON writer with **bounded
+//!   rotation**: files are cut at [`SinkConfig::rotate_bytes`] and the
+//!   oldest file is deleted (and counted) once the directory exceeds
+//!   [`SinkConfig::max_snapshot_bytes`], so disk usage never scales
+//!   with stream length — the same discipline the in-memory rings
+//!   apply;
+//! * [`Replay`] — loads a snapshot directory back into typed reports
+//!   so `magneton replay` can re-render window/fleet/divergence views
+//!   offline and [`Replay::verify_ranking`] can prove the persisted
+//!   fleet ranking reproduces the per-pair waste ledgers bit-for-bit.
+//!
+//! Producers: [`crate::stream::StreamAuditor::set_sink`] hooks one pair
+//! to a sink; [`crate::coordinator::fleet::StreamFleet`] (via its
+//! `snapshot_dir`) snapshots every pair plus the fleet-level ranking
+//! and divergence events. `magneton stream --snapshot-dir <d>` turns
+//! both on; `magneton replay --dir <d>` reads them back.
+//!
+//! ```
+//! use magneton::stream::ResyncEvent;
+//! use magneton::telemetry::Snapshot;
+//!
+//! let snap = Snapshot::Resync {
+//!     pair: "serving-0 \"canary\"".into(), // escapes round-trip too
+//!     event: ResyncEvent { at_ops: 437, skipped_a: 0, skipped_b: 1 },
+//! };
+//! let line = snap.to_line();
+//! let back = Snapshot::parse_line(&line).unwrap();
+//! assert_eq!(back.to_line(), line);
+//! ```
+
+use std::collections::VecDeque;
+use std::fs::{self, File, OpenOptions};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::fleet::{DivergentPair, FleetDivergence};
+use crate::detect::Side;
+use crate::stream::{ResyncEvent, StreamFinding, StreamSummary, WindowReport};
+use crate::{Error, Result};
+
+pub mod json;
+
+use json::Json;
+
+/// One entry of a persisted fleet ranking: the aggregate counters an
+/// operator dashboard ranks streams by, in rank order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RankEntry {
+    pub name: String,
+    /// Cumulative waste ledger of the pair, Joules.
+    pub wasted_j: f64,
+    pub ops: usize,
+    pub windows: usize,
+    pub windows_flagged: usize,
+    pub resyncs: usize,
+    pub aligned: bool,
+}
+
+/// One durable telemetry artifact — a single NDJSON line in a snapshot
+/// file. The conversion to/from [`Json`] is lossless: floats keep their
+/// bits (shortest round-trip formatting, non-finite forbidden by the
+/// writer), `u64` fingerprints travel as hex strings so they never pass
+/// through `f64`, and strings are escape-correct.
+#[derive(Clone, Debug)]
+pub enum Snapshot {
+    /// One emitted detection window of one stream pair.
+    Window { pair: String, report: WindowReport },
+    /// One recovered divergence of one stream pair.
+    Resync { pair: String, event: ResyncEvent },
+    /// The cumulative summary (waste ledger) of one stream pair.
+    Summary { pair: String, summary: StreamSummary },
+    /// A fleet ranking, entries in rank order.
+    Fleet { ranking: Vec<RankEntry> },
+    /// A fleet-wide coalesced divergence event.
+    Divergence { event: FleetDivergence },
+}
+
+impl Snapshot {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Snapshot::Window { pair, report } => Json::obj()
+                .field("type", "window")
+                .field("pair", pair.as_str())
+                .field("report", window_json(report))
+                .build(),
+            Snapshot::Resync { pair, event } => Json::obj()
+                .field("type", "resync")
+                .field("pair", pair.as_str())
+                .field("event", resync_json(event))
+                .build(),
+            Snapshot::Summary { pair, summary } => Json::obj()
+                .field("type", "summary")
+                .field("pair", pair.as_str())
+                .field("summary", summary_json(summary))
+                .build(),
+            Snapshot::Fleet { ranking } => Json::obj()
+                .field("type", "fleet")
+                .field("ranking", Json::Arr(ranking.iter().map(rank_json).collect()))
+                .build(),
+            Snapshot::Divergence { event } => Json::obj()
+                .field("type", "divergence")
+                .field("event", divergence_json(event))
+                .build(),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Snapshot> {
+        let kind = req_str(j, "type")?;
+        match kind {
+            "window" => Ok(Snapshot::Window {
+                pair: req_str(j, "pair")?.to_string(),
+                report: window_from(req(j, "report")?)?,
+            }),
+            "resync" => Ok(Snapshot::Resync {
+                pair: req_str(j, "pair")?.to_string(),
+                event: resync_from(req(j, "event")?)?,
+            }),
+            "summary" => Ok(Snapshot::Summary {
+                pair: req_str(j, "pair")?.to_string(),
+                summary: summary_from(req(j, "summary")?)?,
+            }),
+            "fleet" => Ok(Snapshot::Fleet {
+                ranking: req_arr(j, "ranking")?.iter().map(rank_from).collect::<Result<_>>()?,
+            }),
+            "divergence" => {
+                Ok(Snapshot::Divergence { event: divergence_from(req(j, "event")?)? })
+            }
+            other => Err(Error::msg(format!("unknown snapshot type `{other}`"))),
+        }
+    }
+
+    /// Render as one NDJSON line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        self.to_json().render()
+    }
+
+    /// Parse one NDJSON line.
+    pub fn parse_line(line: &str) -> Result<Snapshot> {
+        Snapshot::from_json(&Json::parse(line)?)
+    }
+}
+
+// ---- field helpers ------------------------------------------------------
+
+fn req<'a>(obj: &'a Json, key: &str) -> Result<&'a Json> {
+    obj.get(key).ok_or_else(|| Error::msg(format!("missing snapshot field `{key}`")))
+}
+
+fn req_str<'a>(obj: &'a Json, key: &str) -> Result<&'a str> {
+    req(obj, key)?
+        .as_str()
+        .ok_or_else(|| Error::msg(format!("snapshot field `{key}` is not a string")))
+}
+
+fn req_f64(obj: &Json, key: &str) -> Result<f64> {
+    req(obj, key)?
+        .as_f64()
+        .ok_or_else(|| Error::msg(format!("snapshot field `{key}` is not a number")))
+}
+
+fn req_usize(obj: &Json, key: &str) -> Result<usize> {
+    req(obj, key)?
+        .as_usize()
+        .ok_or_else(|| Error::msg(format!("snapshot field `{key}` is not an index")))
+}
+
+fn req_bool(obj: &Json, key: &str) -> Result<bool> {
+    req(obj, key)?
+        .as_bool()
+        .ok_or_else(|| Error::msg(format!("snapshot field `{key}` is not a bool")))
+}
+
+fn req_arr<'a>(obj: &'a Json, key: &str) -> Result<&'a [Json]> {
+    req(obj, key)?
+        .as_arr()
+        .ok_or_else(|| Error::msg(format!("snapshot field `{key}` is not an array")))
+}
+
+/// `u64` values (rolling fingerprints) use the full 64-bit range, which
+/// `f64` cannot carry exactly — they travel as fixed-width hex strings.
+fn hex_u64(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+fn req_hex_u64(obj: &Json, key: &str) -> Result<u64> {
+    let s = req_str(obj, key)?;
+    u64::from_str_radix(s, 16)
+        .map_err(|e| Error::msg(format!("snapshot field `{key}`: bad hex `{s}`: {e}")))
+}
+
+fn side_str(s: Side) -> &'static str {
+    match s {
+        Side::A => "A",
+        Side::B => "B",
+    }
+}
+
+fn side_from(s: &str) -> Result<Side> {
+    match s {
+        "A" => Ok(Side::A),
+        "B" => Ok(Side::B),
+        other => Err(Error::msg(format!("unknown side `{other}`"))),
+    }
+}
+
+// ---- per-type conversions -----------------------------------------------
+
+fn finding_json(f: &StreamFinding) -> Json {
+    Json::obj()
+        .field("label", f.label.as_str())
+        .field("ops", f.ops)
+        .field("energy_a_j", f.energy_a_j)
+        .field("energy_b_j", f.energy_b_j)
+        .field("time_a_us", f.time_a_us)
+        .field("time_b_us", f.time_b_us)
+        .field("diff_frac", f.diff_frac)
+        .field("wasteful", side_str(f.wasteful))
+        .field("is_tradeoff", f.is_tradeoff)
+        .build()
+}
+
+fn finding_from(j: &Json) -> Result<StreamFinding> {
+    Ok(StreamFinding {
+        label: req_str(j, "label")?.to_string(),
+        ops: req_usize(j, "ops")?,
+        energy_a_j: req_f64(j, "energy_a_j")?,
+        energy_b_j: req_f64(j, "energy_b_j")?,
+        time_a_us: req_f64(j, "time_a_us")?,
+        time_b_us: req_f64(j, "time_b_us")?,
+        diff_frac: req_f64(j, "diff_frac")?,
+        wasteful: side_from(req_str(j, "wasteful")?)?,
+        is_tradeoff: req_bool(j, "is_tradeoff")?,
+    })
+}
+
+fn window_json(w: &WindowReport) -> Json {
+    // PEEK_SEQ is usize::MAX — outside f64's exact range — and marks a
+    // never-emitted report; it travels as null
+    let seq = if w.seq == WindowReport::PEEK_SEQ { Json::Null } else { Json::Num(w.seq as f64) };
+    Json::obj()
+        .field("seq", seq)
+        .field("pairs", w.pairs)
+        .field("energy_a_j", w.energy_a_j)
+        .field("energy_b_j", w.energy_b_j)
+        .field("time_a_us", w.time_a_us)
+        .field("time_b_us", w.time_b_us)
+        .field("findings", Json::Arr(w.findings.iter().map(finding_json).collect()))
+        .field("wasted_j", w.wasted_j)
+        .field("aligned", w.aligned)
+        .field("resyncs", w.resyncs)
+        .field("quarantined", w.quarantined)
+        .field("content_mismatches", w.content_mismatches)
+        .build()
+}
+
+fn window_from(j: &Json) -> Result<WindowReport> {
+    let seq = match req(j, "seq")? {
+        Json::Null => WindowReport::PEEK_SEQ,
+        v => v.as_usize().ok_or_else(|| Error::msg("snapshot field `seq` is not an index"))?,
+    };
+    Ok(WindowReport {
+        seq,
+        pairs: req_usize(j, "pairs")?,
+        energy_a_j: req_f64(j, "energy_a_j")?,
+        energy_b_j: req_f64(j, "energy_b_j")?,
+        time_a_us: req_f64(j, "time_a_us")?,
+        time_b_us: req_f64(j, "time_b_us")?,
+        findings: req_arr(j, "findings")?.iter().map(finding_from).collect::<Result<_>>()?,
+        wasted_j: req_f64(j, "wasted_j")?,
+        aligned: req_bool(j, "aligned")?,
+        resyncs: req_usize(j, "resyncs")?,
+        quarantined: req_bool(j, "quarantined")?,
+        content_mismatches: req_usize(j, "content_mismatches")?,
+    })
+}
+
+fn resync_json(e: &ResyncEvent) -> Json {
+    Json::obj()
+        .field("at_ops", e.at_ops)
+        .field("skipped_a", e.skipped_a)
+        .field("skipped_b", e.skipped_b)
+        .build()
+}
+
+fn resync_from(j: &Json) -> Result<ResyncEvent> {
+    Ok(ResyncEvent {
+        at_ops: req_usize(j, "at_ops")?,
+        skipped_a: req_usize(j, "skipped_a")?,
+        skipped_b: req_usize(j, "skipped_b")?,
+    })
+}
+
+fn summary_json(s: &StreamSummary) -> Json {
+    let top_labels = Json::Arr(
+        s.top_labels
+            .iter()
+            .map(|(label, j, n)| {
+                Json::Arr(vec![Json::Str(label.clone()), Json::Num(*j), Json::Num(*n as f64)])
+            })
+            .collect(),
+    );
+    Json::obj()
+        .field("ops", s.ops)
+        .field("windows", s.windows)
+        .field("energy_a_j", s.energy_a_j)
+        .field("energy_b_j", s.energy_b_j)
+        .field("time_a_us", s.time_a_us)
+        .field("time_b_us", s.time_b_us)
+        .field("wasted_j", s.wasted_j)
+        .field("windows_flagged", s.windows_flagged)
+        .field("windows_quarantined", s.windows_quarantined)
+        .field("top_labels", top_labels)
+        .field("aligned", s.aligned)
+        .field("fingerprint_a", hex_u64(s.fingerprint_a))
+        .field("fingerprint_b", hex_u64(s.fingerprint_b))
+        .field("unpaired", s.unpaired)
+        .field("resyncs", s.resyncs)
+        .field("resync_skipped", s.resync_skipped)
+        .field("resync_log", Json::Arr(s.resync_log.iter().map(resync_json).collect()))
+        .field("content_mismatches", s.content_mismatches)
+        .field("reports_dropped", s.reports_dropped)
+        .field("peak_retained_segments", s.peak_retained_segments)
+        .field("peak_window_pairs", s.peak_window_pairs)
+        .field("peak_pending", s.peak_pending)
+        .build()
+}
+
+fn summary_from(j: &Json) -> Result<StreamSummary> {
+    let mut top_labels = Vec::new();
+    for cell in req_arr(j, "top_labels")? {
+        let parts = cell
+            .as_arr()
+            .ok_or_else(|| Error::msg("top_labels entry is not an array"))?;
+        if parts.len() != 3 {
+            return Err(Error::msg("top_labels entry must be [label, wasted_j, windows]"));
+        }
+        let label = parts[0]
+            .as_str()
+            .ok_or_else(|| Error::msg("top_labels label is not a string"))?;
+        let wasted = parts[1]
+            .as_f64()
+            .ok_or_else(|| Error::msg("top_labels wasted_j is not a number"))?;
+        let windows = parts[2]
+            .as_usize()
+            .ok_or_else(|| Error::msg("top_labels windows is not an index"))?;
+        top_labels.push((label.to_string(), wasted, windows));
+    }
+    Ok(StreamSummary {
+        ops: req_usize(j, "ops")?,
+        windows: req_usize(j, "windows")?,
+        energy_a_j: req_f64(j, "energy_a_j")?,
+        energy_b_j: req_f64(j, "energy_b_j")?,
+        time_a_us: req_f64(j, "time_a_us")?,
+        time_b_us: req_f64(j, "time_b_us")?,
+        wasted_j: req_f64(j, "wasted_j")?,
+        windows_flagged: req_usize(j, "windows_flagged")?,
+        windows_quarantined: req_usize(j, "windows_quarantined")?,
+        top_labels,
+        aligned: req_bool(j, "aligned")?,
+        fingerprint_a: req_hex_u64(j, "fingerprint_a")?,
+        fingerprint_b: req_hex_u64(j, "fingerprint_b")?,
+        unpaired: req_usize(j, "unpaired")?,
+        resyncs: req_usize(j, "resyncs")?,
+        resync_skipped: req_usize(j, "resync_skipped")?,
+        resync_log: req_arr(j, "resync_log")?.iter().map(resync_from).collect::<Result<_>>()?,
+        content_mismatches: req_usize(j, "content_mismatches")?,
+        reports_dropped: req_usize(j, "reports_dropped")?,
+        peak_retained_segments: req_usize(j, "peak_retained_segments")?,
+        peak_window_pairs: req_usize(j, "peak_window_pairs")?,
+        peak_pending: req_usize(j, "peak_pending")?,
+    })
+}
+
+fn rank_json(e: &RankEntry) -> Json {
+    Json::obj()
+        .field("name", e.name.as_str())
+        .field("wasted_j", e.wasted_j)
+        .field("ops", e.ops)
+        .field("windows", e.windows)
+        .field("windows_flagged", e.windows_flagged)
+        .field("resyncs", e.resyncs)
+        .field("aligned", e.aligned)
+        .build()
+}
+
+fn rank_from(j: &Json) -> Result<RankEntry> {
+    Ok(RankEntry {
+        name: req_str(j, "name")?.to_string(),
+        wasted_j: req_f64(j, "wasted_j")?,
+        ops: req_usize(j, "ops")?,
+        windows: req_usize(j, "windows")?,
+        windows_flagged: req_usize(j, "windows_flagged")?,
+        resyncs: req_usize(j, "resyncs")?,
+        aligned: req_bool(j, "aligned")?,
+    })
+}
+
+fn divergence_json(d: &FleetDivergence) -> Json {
+    let pairs = Json::Arr(
+        d.pairs
+            .iter()
+            .map(|p| {
+                Json::obj()
+                    .field("name", p.name.as_str())
+                    .field("at_ops", p.at_ops)
+                    .field("resyncs", p.resyncs)
+                    .field("skipped", p.skipped)
+                    .build()
+            })
+            .collect(),
+    );
+    Json::obj()
+        .field("at_ops_min", d.at_ops_min)
+        .field("at_ops_max", d.at_ops_max)
+        .field("pairs", pairs)
+        .build()
+}
+
+fn divergence_from(j: &Json) -> Result<FleetDivergence> {
+    let mut pairs = Vec::new();
+    for p in req_arr(j, "pairs")? {
+        pairs.push(DivergentPair {
+            name: req_str(p, "name")?.to_string(),
+            at_ops: req_usize(p, "at_ops")?,
+            resyncs: req_usize(p, "resyncs")?,
+            skipped: req_usize(p, "skipped")?,
+        });
+    }
+    Ok(FleetDivergence {
+        at_ops_min: req_usize(j, "at_ops_min")?,
+        at_ops_max: req_usize(j, "at_ops_max")?,
+        pairs,
+    })
+}
+
+// ---- sink ---------------------------------------------------------------
+
+/// Rotation bounds of a [`SnapshotSink`].
+#[derive(Clone, Debug)]
+pub struct SinkConfig {
+    /// Total bytes retained across the sink's files. Once exceeded, the
+    /// *oldest* file is deleted (counted in
+    /// [`SnapshotSink::dropped_files`]) — the current file is never
+    /// dropped. `0` = unbounded.
+    pub max_snapshot_bytes: u64,
+    /// The current file is closed and a new one begun once it would
+    /// exceed this many bytes. A single snapshot line larger than the
+    /// limit still lands in one (oversize) file. `0` = never rotate
+    /// (one growing file; the total budget then cannot drop anything,
+    /// since the current file is never deleted).
+    pub rotate_bytes: u64,
+}
+
+impl Default for SinkConfig {
+    fn default() -> SinkConfig {
+        SinkConfig { max_snapshot_bytes: 8 * 1024 * 1024, rotate_bytes: 1024 * 1024 }
+    }
+}
+
+/// File-name stem derived from a pair name: path separators and other
+/// non-`[A-Za-z0-9_-]` characters become `-`, so arbitrary pair names
+/// can never escape the snapshot directory.
+pub fn sanitize_stem(name: &str) -> String {
+    let s: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '-' })
+        .collect();
+    if s.is_empty() {
+        "snap".to_string()
+    } else {
+        s
+    }
+}
+
+/// Appending NDJSON snapshot writer with bounded rotation.
+///
+/// Files are named `<prefix>-NNNNNN.ndjson` with a zero-padded monotone
+/// index; [`load_dir`] / [`Replay::load`] reconstruct chronological
+/// order per sink by parsing that index (not by raw lexicographic
+/// order, which would break past a million rotations). Writes go
+/// straight to the file (one `write_all` per line, no buffering), so a
+/// crashed process loses at most the line being written.
+pub struct SnapshotSink {
+    dir: PathBuf,
+    prefix: String,
+    cfg: SinkConfig,
+    /// Retained files oldest-first: `(path, bytes)`; the last entry is
+    /// the file currently being appended to.
+    files: VecDeque<(PathBuf, u64)>,
+    file: Option<File>,
+    next_index: usize,
+    /// Snapshots appended.
+    pub written: usize,
+    /// Bytes appended (including rotated-away files).
+    pub written_bytes: u64,
+    /// Oldest files deleted to honour the byte budget.
+    pub dropped_files: usize,
+    /// Bytes those dropped files held.
+    pub dropped_bytes: u64,
+}
+
+impl SnapshotSink {
+    /// Create the directory (if needed) and an empty sink. The first
+    /// file is opened lazily on the first [`SnapshotSink::append`].
+    ///
+    /// Use a fresh (or per-run) directory per audit: a second sink with
+    /// the same prefix appends to the first one's files, which is safe
+    /// for replay (lines stay ordered) but makes the byte accounting —
+    /// and therefore the rotation budget — restart from zero, and
+    /// mixes the runs' summaries during ranking verification.
+    pub fn new(dir: impl Into<PathBuf>, prefix: &str, cfg: SinkConfig) -> Result<SnapshotSink> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)
+            .map_err(|e| Error::msg(format!("create snapshot dir {}: {e}", dir.display())))?;
+        Ok(SnapshotSink {
+            dir,
+            prefix: sanitize_stem(prefix),
+            cfg,
+            files: VecDeque::new(),
+            file: None,
+            next_index: 0,
+            written: 0,
+            written_bytes: 0,
+            dropped_files: 0,
+            dropped_bytes: 0,
+        })
+    }
+
+    /// Append one snapshot as an NDJSON line, rotating and enforcing
+    /// the byte budget as needed.
+    pub fn append(&mut self, snap: &Snapshot) -> Result<()> {
+        let mut line = snap.to_line();
+        line.push('\n');
+        let bytes = line.len() as u64;
+        let needs_new = match self.files.back() {
+            None => true,
+            Some((_, cur)) => {
+                self.cfg.rotate_bytes > 0 && *cur > 0 && *cur + bytes > self.cfg.rotate_bytes
+            }
+        };
+        if needs_new {
+            let path = self.dir.join(format!("{}-{:06}.ndjson", self.prefix, self.next_index));
+            self.next_index += 1;
+            let f = OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(&path)
+                .map_err(|e| Error::msg(format!("open snapshot file {}: {e}", path.display())))?;
+            self.file = Some(f);
+            self.files.push_back((path, 0));
+        }
+        let f = self.file.as_mut().expect("file opened above");
+        f.write_all(line.as_bytes())
+            .map_err(|e| Error::msg(format!("append snapshot: {e}")))?;
+        self.files.back_mut().expect("file opened above").1 += bytes;
+        self.written += 1;
+        self.written_bytes += bytes;
+        if self.cfg.max_snapshot_bytes > 0 {
+            while self.files.len() > 1 && self.total_bytes() > self.cfg.max_snapshot_bytes {
+                let (old, sz) = self.files.pop_front().expect("len > 1");
+                let _ = fs::remove_file(&old);
+                self.dropped_files += 1;
+                self.dropped_bytes += sz;
+            }
+        }
+        Ok(())
+    }
+
+    /// Bytes currently retained on disk across this sink's files.
+    pub fn total_bytes(&self) -> u64 {
+        self.files.iter().map(|(_, b)| b).sum()
+    }
+
+    /// Snapshot files currently retained.
+    pub fn retained_files(&self) -> usize {
+        self.files.len()
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+// ---- replay -------------------------------------------------------------
+
+/// Sort key reconstructing write order from a snapshot file name:
+/// `(sink prefix, numeric rotation index, full stem)`. A plain
+/// lexicographic sort would order a 7-digit rotation index before
+/// `-0999999` and scramble the replay of a very long audit; comparing
+/// the parsed index keeps per-sink chronology at any width. Files
+/// without a `-<digits>` suffix (not written by a [`SnapshotSink`])
+/// sort by name with index 0.
+fn file_order_key(path: &Path) -> (String, u64, String) {
+    let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("").to_string();
+    if let Some((prefix, idx)) = stem.rsplit_once('-') {
+        if let Ok(i) = idx.parse::<u64>() {
+            return (prefix.to_string(), i, stem);
+        }
+    }
+    (stem.clone(), 0, stem)
+}
+
+/// Load every snapshot under `dir` (all `*.ndjson` files, per-sink
+/// rotation order via [`file_order_key`], line order within a file),
+/// in write order per producer.
+///
+/// A process killed mid-append leaves an unterminated final fragment
+/// in its current file; complete lines always end with `\n` (the sink
+/// writes line + newline in one `write_all`), so such a fragment is
+/// **skipped** rather than failing the whole replay — this is what
+/// makes the sink's "a crash loses at most the line being written"
+/// guarantee hold at read time. Newline-*terminated* lines that fail
+/// to parse are genuine corruption and still error out.
+pub fn load_dir(dir: &Path) -> Result<Vec<Snapshot>> {
+    let rd = fs::read_dir(dir)
+        .map_err(|e| Error::msg(format!("read snapshot dir {}: {e}", dir.display())))?;
+    let mut paths = Vec::new();
+    for entry in rd {
+        let entry =
+            entry.map_err(|e| Error::msg(format!("read snapshot dir {}: {e}", dir.display())))?;
+        let path = entry.path();
+        if path.extension().and_then(|e| e.to_str()) == Some("ndjson") {
+            paths.push(path);
+        }
+    }
+    paths.sort_by_key(|p| file_order_key(p));
+    let mut out = Vec::new();
+    for path in &paths {
+        // bytes + lossy conversion: a torn multi-byte UTF-8 char in the
+        // trailing fragment must not fail the read either (the fragment
+        // is dropped below; intact lines are unaffected)
+        let bytes =
+            fs::read(path).map_err(|e| Error::msg(format!("read {}: {e}", path.display())))?;
+        let text = String::from_utf8_lossy(&bytes);
+        let complete = match text.rfind('\n') {
+            Some(pos) => &text[..pos + 1],
+            None => "",
+        };
+        for (i, line) in complete.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let snap = Snapshot::parse_line(line)
+                .map_err(|e| e.context(format!("{} line {}", path.display(), i + 1)))?;
+            out.push(snap);
+        }
+    }
+    Ok(out)
+}
+
+/// A snapshot directory loaded back into typed reports, grouped by
+/// artifact kind (each group in persisted order).
+#[derive(Default)]
+pub struct Replay {
+    pub windows: Vec<(String, WindowReport)>,
+    pub resyncs: Vec<(String, ResyncEvent)>,
+    pub summaries: Vec<(String, StreamSummary)>,
+    /// Every persisted fleet ranking (one per fleet run).
+    pub rankings: Vec<Vec<RankEntry>>,
+    pub divergences: Vec<FleetDivergence>,
+}
+
+impl Replay {
+    pub fn load(dir: &Path) -> Result<Replay> {
+        let mut r = Replay::default();
+        for snap in load_dir(dir)? {
+            match snap {
+                Snapshot::Window { pair, report } => r.windows.push((pair, report)),
+                Snapshot::Resync { pair, event } => r.resyncs.push((pair, event)),
+                Snapshot::Summary { pair, summary } => r.summaries.push((pair, summary)),
+                Snapshot::Fleet { ranking } => r.rankings.push(ranking),
+                Snapshot::Divergence { event } => r.divergences.push(event),
+            }
+        }
+        Ok(r)
+    }
+
+    /// The most recent persisted summary for `pair`, if any.
+    pub fn summary_of(&self, pair: &str) -> Option<&StreamSummary> {
+        self.summaries.iter().rev().find(|(n, _)| n == pair).map(|(_, s)| s)
+    }
+
+    /// Verify every persisted fleet ranking against the persisted
+    /// per-pair summaries: entries must be in the exact order
+    /// `StreamFleet::run` ranks (wasted joules descending, name
+    /// tiebreak), and every entry's waste ledger must match its pair's
+    /// summary **bit-for-bit** (`f64::to_bits`). Returns the number of
+    /// entries checked.
+    pub fn verify_ranking(&self) -> std::result::Result<usize, String> {
+        let mut checked = 0;
+        for ranking in &self.rankings {
+            for w in ranking.windows(2) {
+                let ord = w[1]
+                    .wasted_j
+                    .total_cmp(&w[0].wasted_j)
+                    .then_with(|| w[0].name.cmp(&w[1].name));
+                if ord == std::cmp::Ordering::Greater {
+                    return Err(format!(
+                        "ranking out of order: `{}` ({} J) before `{}` ({} J)",
+                        w[0].name, w[0].wasted_j, w[1].name, w[1].wasted_j
+                    ));
+                }
+            }
+            for e in ranking {
+                let Some(s) = self.summary_of(&e.name) else {
+                    return Err(format!("ranking entry `{}` has no persisted summary", e.name));
+                };
+                if s.wasted_j.to_bits() != e.wasted_j.to_bits() {
+                    return Err(format!(
+                        "`{}`: ranking wasted_j {} differs from summary {}",
+                        e.name, e.wasted_j, s.wasted_j
+                    ));
+                }
+                if s.ops != e.ops
+                    || s.windows != e.windows
+                    || s.windows_flagged != e.windows_flagged
+                    || s.resyncs != e.resyncs
+                    || s.aligned != e.aligned
+                {
+                    return Err(format!("`{}`: ranking counters diverge from summary", e.name));
+                }
+                checked += 1;
+            }
+        }
+        Ok(checked)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("magneton-telemetry-mod-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn finding(label: &str) -> StreamFinding {
+        StreamFinding {
+            label: label.to_string(),
+            ops: 4,
+            energy_a_j: 0.6,
+            energy_b_j: 0.4,
+            time_a_us: 400.0,
+            time_b_us: 400.0,
+            diff_frac: 1.0 / 3.0,
+            wasteful: Side::A,
+            is_tradeoff: false,
+        }
+    }
+
+    fn window(seq: usize, label: &str) -> WindowReport {
+        WindowReport {
+            seq,
+            pairs: 8,
+            energy_a_j: 1.23456789,
+            energy_b_j: 0.1 + 0.2, // deliberately ugly float
+            time_a_us: 800.0,
+            time_b_us: 801.5,
+            findings: vec![finding(label)],
+            wasted_j: 0.2,
+            aligned: true,
+            resyncs: 0,
+            quarantined: false,
+            content_mismatches: 1,
+        }
+    }
+
+    fn summary(label: &str) -> StreamSummary {
+        StreamSummary {
+            ops: 1000,
+            windows: 10,
+            energy_a_j: 12.5,
+            energy_b_j: 10.0,
+            time_a_us: 1e6,
+            time_b_us: 1e6 + 0.5,
+            wasted_j: 2.5000000001,
+            windows_flagged: 9,
+            windows_quarantined: 1,
+            top_labels: vec![(label.to_string(), 2.5000000001, 9), ("other".into(), 0.0, 0)],
+            aligned: false,
+            fingerprint_a: 0xdead_beef_0123_4567,
+            fingerprint_b: u64::MAX, // not representable in f64 — must survive via hex
+            unpaired: 1,
+            resyncs: 1,
+            resync_skipped: 1,
+            resync_log: vec![ResyncEvent { at_ops: 437, skipped_a: 0, skipped_b: 1 }],
+            content_mismatches: 2,
+            reports_dropped: 3,
+            peak_retained_segments: 128,
+            peak_window_pairs: 100,
+            peak_pending: 2,
+        }
+    }
+
+    fn divergence() -> FleetDivergence {
+        FleetDivergence {
+            at_ops_min: 437,
+            at_ops_max: 439,
+            pairs: vec![
+                DivergentPair { name: "serving-0".into(), at_ops: 437, resyncs: 2, skipped: 3 },
+                DivergentPair { name: "serving-1".into(), at_ops: 439, resyncs: 1, skipped: 1 },
+            ],
+        }
+    }
+
+    /// Render-equality is a lossless-round-trip proof: the writer is
+    /// injective on finite floats (shortest round-trip formatting) and
+    /// on escaped strings.
+    fn roundtrip(snap: &Snapshot) {
+        let line = snap.to_line();
+        let back = Snapshot::parse_line(&line).unwrap_or_else(|e| panic!("parse `{line}`: {e}"));
+        assert_eq!(back.to_line(), line, "snapshot round trip not lossless");
+    }
+
+    #[test]
+    fn every_snapshot_kind_round_trips() {
+        roundtrip(&Snapshot::Window { pair: "p0".into(), report: window(3, "serve.proj") });
+        roundtrip(&Snapshot::Resync {
+            pair: "p0".into(),
+            event: ResyncEvent { at_ops: 437, skipped_a: 0, skipped_b: 1 },
+        });
+        roundtrip(&Snapshot::Summary { pair: "p0".into(), summary: summary("serve.proj") });
+        roundtrip(&Snapshot::Fleet {
+            ranking: vec![RankEntry {
+                name: "p0".into(),
+                wasted_j: 2.5,
+                ops: 1000,
+                windows: 10,
+                windows_flagged: 9,
+                resyncs: 1,
+                aligned: false,
+            }],
+        });
+        roundtrip(&Snapshot::Divergence { event: divergence() });
+    }
+
+    /// The satellite acceptance property: `Snapshot → json → Snapshot`
+    /// is lossless for pathological strings (quotes, control chars,
+    /// non-ASCII) and bit-exact on floats — checked field-by-field, not
+    /// just by render equality.
+    #[test]
+    fn prop_snapshot_round_trip_is_lossless() {
+        let labels = [
+            "plain",
+            "with \"quotes\" and \\backslashes\\",
+            "newline\nand\ttab and \r",
+            "control \u{0001}\u{0002}\u{001f}",
+            "non-ascii 東京 🦀 Ωμέγα",
+            "",
+        ];
+        let mut rng = Prng::new(0x5eed);
+        for (i, label) in labels.iter().enumerate() {
+            // floats drawn to hit ugly mantissas, tiny + huge magnitudes
+            let mut s = summary(label);
+            s.energy_a_j = rng.normal() * 10f64.powi(rng.below(30) as i32 - 15);
+            s.wasted_j = rng.f64() / 3.0;
+            s.fingerprint_a = rng.next_u64();
+            s.fingerprint_b = rng.next_u64();
+            let snap = Snapshot::Summary { pair: label.to_string(), summary: s.clone() };
+            let line = snap.to_line();
+            let back = Snapshot::parse_line(&line).unwrap();
+            let Snapshot::Summary { pair, summary: t } = back else {
+                panic!("round trip changed the variant");
+            };
+            assert_eq!(&pair, label, "case {i}");
+            assert_eq!(t.energy_a_j.to_bits(), s.energy_a_j.to_bits(), "case {i}");
+            assert_eq!(t.wasted_j.to_bits(), s.wasted_j.to_bits(), "case {i}");
+            assert_eq!(t.fingerprint_a, s.fingerprint_a, "case {i}");
+            assert_eq!(t.fingerprint_b, s.fingerprint_b, "case {i}");
+            assert_eq!(t.top_labels[0].0, s.top_labels[0].0, "case {i}");
+            assert_eq!(t.ops, s.ops);
+            assert_eq!(t.resync_log.len(), s.resync_log.len());
+
+            let mut w = window(i, label);
+            w.findings[0].diff_frac = rng.f64();
+            let snap = Snapshot::Window { pair: label.to_string(), report: w.clone() };
+            let back = Snapshot::parse_line(&snap.to_line()).unwrap();
+            let Snapshot::Window { report: r, .. } = back else {
+                panic!("round trip changed the variant");
+            };
+            assert_eq!(r.findings[0].diff_frac.to_bits(), w.findings[0].diff_frac.to_bits());
+            assert_eq!(r.findings[0].label, w.findings[0].label);
+            assert_eq!(r.seq, w.seq);
+        }
+    }
+
+    #[test]
+    fn peek_seq_travels_as_null() {
+        let w = window(WindowReport::PEEK_SEQ, "l");
+        let snap = Snapshot::Window { pair: "p".into(), report: w };
+        let line = snap.to_line();
+        assert!(line.contains("\"seq\":null"), "{line}");
+        let Snapshot::Window { report, .. } = Snapshot::parse_line(&line).unwrap() else {
+            panic!("variant changed");
+        };
+        assert_eq!(report.seq, WindowReport::PEEK_SEQ);
+    }
+
+    #[test]
+    fn malformed_snapshots_are_rejected() {
+        for line in [
+            "{}",
+            r#"{"type":"nope"}"#,
+            r#"{"type":"window","pair":"p"}"#,
+            r#"{"type":"resync","pair":"p","event":{"at_ops":-1,"skipped_a":0,"skipped_b":0}}"#,
+            r#"{"type":"summary","pair":"p","summary":{"ops":1}}"#,
+            "not json",
+        ] {
+            assert!(Snapshot::parse_line(line).is_err(), "`{line}` should be rejected");
+        }
+    }
+
+    #[test]
+    fn sink_rotates_and_honours_byte_budget() {
+        let dir = tmp_dir("rotate");
+        let cfg = SinkConfig { max_snapshot_bytes: 4096, rotate_bytes: 1024 };
+        let mut sink = SnapshotSink::new(&dir, "pair-x", cfg).unwrap();
+        let ev = ResyncEvent { at_ops: 1, skipped_a: 2, skipped_b: 3 };
+        for _ in 0..200 {
+            sink.append(&Snapshot::Resync { pair: "pair-x".into(), event: ev }).unwrap();
+        }
+        assert_eq!(sink.written, 200);
+        assert!(sink.dropped_files > 0, "budget should have forced drops");
+        assert!(
+            sink.total_bytes() <= 4096,
+            "retained {} bytes > 4096 budget",
+            sink.total_bytes()
+        );
+        // accounting is exact: written = retained + dropped
+        assert_eq!(sink.written_bytes, sink.total_bytes() + sink.dropped_bytes);
+        // on-disk state agrees with the sink's view
+        let on_disk: Vec<_> = fs::read_dir(&dir).unwrap().map(|e| e.unwrap().path()).collect();
+        assert_eq!(on_disk.len(), sink.retained_files());
+        let disk_bytes: u64 =
+            on_disk.iter().map(|p| fs::metadata(p).unwrap().len()).sum();
+        assert_eq!(disk_bytes, sink.total_bytes());
+        // the retained suffix still parses, in order
+        let snaps = load_dir(&dir).unwrap();
+        assert!(!snaps.is_empty() && snaps.len() < 200);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sink_unbounded_budget_keeps_everything() {
+        let dir = tmp_dir("unbounded");
+        let cfg = SinkConfig { max_snapshot_bytes: 0, rotate_bytes: 512 };
+        let mut sink = SnapshotSink::new(&dir, "p", cfg).unwrap();
+        for i in 0..50 {
+            sink.append(&Snapshot::Resync {
+                pair: "p".into(),
+                event: ResyncEvent { at_ops: i, skipped_a: 0, skipped_b: 1 },
+            })
+            .unwrap();
+        }
+        assert_eq!(sink.dropped_files, 0);
+        let snaps = load_dir(&dir).unwrap();
+        assert_eq!(snaps.len(), 50);
+        // write order is preserved across file rotation
+        for (i, s) in snaps.iter().enumerate() {
+            let Snapshot::Resync { event, .. } = s else { panic!("variant changed") };
+            assert_eq!(event.at_ops, i);
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    /// A crash mid-append leaves an unterminated trailing fragment;
+    /// replay must skip exactly that fragment and keep every intact
+    /// line — the read-side half of the sink's durability guarantee.
+    #[test]
+    fn torn_trailing_line_is_skipped_on_replay() {
+        let dir = tmp_dir("torn");
+        let mut sink = SnapshotSink::new(&dir, "p", SinkConfig::default()).unwrap();
+        for i in 0..5 {
+            sink.append(&Snapshot::Resync {
+                pair: "p".into(),
+                event: ResyncEvent { at_ops: i, skipped_a: 0, skipped_b: 1 },
+            })
+            .unwrap();
+        }
+        // simulate the crash: a partial line (no trailing newline),
+        // torn mid-way through a multi-byte UTF-8 char for good measure
+        use std::io::Write as _;
+        let path = dir.join("p-000000.ndjson");
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b"{\"type\":\"resync\",\"pair\":\"\xf0\x9f\xa6").unwrap();
+        let snaps = load_dir(&dir).expect("torn tail must not fail the replay");
+        assert_eq!(snaps.len(), 5, "every intact line survives");
+        // a newline-terminated garbage line is real corruption: error
+        f.write_all(b"ADE\"}\nnot json\n").unwrap();
+        assert!(load_dir(&dir).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    /// Replay order is reconstructed from the parsed rotation index, so
+    /// it survives the index growing a digit (where raw lexicographic
+    /// order would put `-1000000` before `-0999999`).
+    #[test]
+    fn file_order_survives_index_width_growth() {
+        let key = |s: &str| file_order_key(Path::new(s));
+        assert!(key("p-0999999.ndjson") < key("p-1000000.ndjson"));
+        assert!(key("p-000009.ndjson") < key("p-000010.ndjson"));
+        // distinct sinks stay grouped by prefix
+        assert!(key("a-000001.ndjson") < key("b-000000.ndjson"));
+        // non-sink files fall back to name order without panicking
+        assert!(key("aaa.ndjson") < key("bbb.ndjson"));
+    }
+
+    /// `rotate_bytes: 0` disables per-file rotation (one growing file)
+    /// instead of panicking — a user-settable config must degrade, not
+    /// take down a fleet worker.
+    #[test]
+    fn zero_rotate_bytes_means_single_growing_file() {
+        let dir = tmp_dir("norotate");
+        let cfg = SinkConfig { max_snapshot_bytes: 1024, rotate_bytes: 0 };
+        let mut sink = SnapshotSink::new(&dir, "p", cfg).unwrap();
+        let ev = ResyncEvent { at_ops: 1, skipped_a: 0, skipped_b: 1 };
+        for _ in 0..100 {
+            sink.append(&Snapshot::Resync { pair: "p".into(), event: ev }).unwrap();
+        }
+        // one file, never rotated; the current file is never dropped,
+        // so the budget cannot delete anything either
+        assert_eq!(sink.retained_files(), 1);
+        assert_eq!(sink.dropped_files, 0);
+        assert_eq!(load_dir(&dir).unwrap().len(), 100);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sanitize_stem_neutralises_path_separators() {
+        assert_eq!(sanitize_stem("serving-0"), "serving-0");
+        assert_eq!(sanitize_stem("../../etc/passwd"), "------etc-passwd");
+        assert_eq!(sanitize_stem("a/b\\c d"), "a-b-c-d");
+        assert_eq!(sanitize_stem(""), "snap");
+    }
+
+    #[test]
+    fn replay_groups_and_verifies_ranking() {
+        let dir = tmp_dir("replay");
+        let mut sink = SnapshotSink::new(&dir, "fleet", SinkConfig::default()).unwrap();
+        let mut s0 = summary("serve.proj");
+        s0.wasted_j = 2.5;
+        let mut s1 = summary("serve.out");
+        s1.wasted_j = 0.5;
+        sink.append(&Snapshot::Summary { pair: "hot".into(), summary: s0.clone() }).unwrap();
+        sink.append(&Snapshot::Summary { pair: "cool".into(), summary: s1.clone() }).unwrap();
+        let rank = |name: &str, s: &StreamSummary| RankEntry {
+            name: name.to_string(),
+            wasted_j: s.wasted_j,
+            ops: s.ops,
+            windows: s.windows,
+            windows_flagged: s.windows_flagged,
+            resyncs: s.resyncs,
+            aligned: s.aligned,
+        };
+        sink.append(&Snapshot::Fleet { ranking: vec![rank("hot", &s0), rank("cool", &s1)] })
+            .unwrap();
+        let replay = Replay::load(&dir).unwrap();
+        assert_eq!(replay.summaries.len(), 2);
+        assert_eq!(replay.rankings.len(), 1);
+        assert_eq!(replay.verify_ranking(), Ok(2));
+        assert!(replay.summary_of("hot").is_some());
+        assert!(replay.summary_of("missing").is_none());
+
+        // a tampered ledger no longer verifies
+        let mut bad = Replay::load(&dir).unwrap();
+        bad.rankings[0][0].wasted_j += 1e-9;
+        assert!(bad.verify_ranking().is_err());
+        // out-of-order ranking no longer verifies
+        let mut swapped = Replay::load(&dir).unwrap();
+        swapped.rankings[0].swap(0, 1);
+        assert!(swapped.verify_ranking().is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -34,7 +34,9 @@ impl Json {
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
                 if x.is_finite() {
-                    if *x == x.trunc() && x.abs() < 1e15 {
+                    // integer shortcut, except for -0.0: `0` would lose
+                    // the sign bit the round trip promises to keep
+                    if *x == x.trunc() && x.abs() < 1e15 && (*x != 0.0 || x.is_sign_positive()) {
                         let _ = write!(out, "{}", *x as i64);
                     } else {
                         let _ = write!(out, "{}", x);
@@ -158,6 +160,12 @@ mod tests {
     fn integers_render_without_decimal() {
         assert_eq!(Json::Num(42.0).render(), "42");
         assert_eq!(Json::Num(0.5).render(), "0.5");
+    }
+
+    #[test]
+    fn negative_zero_keeps_its_sign() {
+        assert_eq!(Json::Num(-0.0).render(), "-0");
+        assert_eq!(Json::Num(0.0).render(), "0");
     }
 
     #[test]

@@ -1,0 +1,184 @@
+//! End-to-end telemetry acceptance: persisting a streaming fleet audit
+//! (`magneton stream --snapshot-dir`) and replaying it (`magneton
+//! replay --dir`) must reproduce the cumulative waste ledger and the
+//! fleet ranking **bit-for-bit**, and a simultaneous multi-pair
+//! divergence must coalesce into exactly one fleet-wide event.
+
+use std::path::PathBuf;
+
+use magneton::coordinator::fleet::{correlate_divergences, StreamFleet, StreamFleetEntry};
+use magneton::coordinator::SysRun;
+use magneton::dispatch::Env;
+use magneton::energy::{DeviceSpec, Segment};
+use magneton::exec::KernelRecord;
+use magneton::graph::OpKind;
+use magneton::stream::{StreamAuditor, StreamConfig};
+use magneton::telemetry::Replay;
+use magneton::trace::Frame;
+use magneton::util::Prng;
+use magneton::workload::{serving_dispatcher, serving_stream_program, ServingStream};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("magneton-telemetry-it-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn mk_stream_run(label: &str, seed: u64, eff: f64, requests: usize) -> SysRun {
+    let mut rng = Prng::new(seed);
+    let spec = ServingStream { requests, batch: 64, d_model: 128 };
+    SysRun::new(label, serving_dispatcher(eff), Env::new(), serving_stream_program(&mut rng, &spec))
+}
+
+/// The tentpole acceptance path: run a streaming fleet with a snapshot
+/// directory, load the directory back, and check the replayed waste
+/// ledger and fleet ranking against the live report bit-for-bit.
+#[test]
+fn snapshots_reproduce_ledger_and_ranking_bit_for_bit() {
+    let dir = tmp_dir("fleet");
+    let mut fleet = StreamFleet::new(DeviceSpec::h200_sim());
+    fleet.cfg.window_ops = 40;
+    fleet.cfg.hop_ops = 40;
+    fleet.cfg.ring_cap = 64;
+    fleet.snapshot_dir = Some(dir.clone());
+    for (i, eff) in [0.6, 1.0, 0.7].iter().enumerate() {
+        fleet.add_pair(
+            &format!("stream-{i}"),
+            mk_stream_run("sys-a", 90 + i as u64, *eff, 24),
+            mk_stream_run("sys-b", 90 + i as u64, 1.0, 24),
+        );
+    }
+    let live = fleet.run();
+    assert_eq!(live.snapshot_errors, 0, "snapshot writes must succeed");
+    assert!(live.total_wasted_j > 0.0, "the harness needs real waste to compare");
+
+    let replay = Replay::load(&dir).expect("snapshot dir loads");
+    assert_eq!(replay.summaries.len(), 3, "one summary per pair");
+    assert_eq!(replay.rankings.len(), 1, "one persisted fleet ranking");
+    assert!(replay.resyncs.is_empty(), "same-workload pairs never resync");
+
+    // per-pair cumulative waste ledger: bit-identical floats, identical
+    // label attribution
+    for e in &live.entries {
+        let s = replay.summary_of(&e.name).expect("pair summary persisted");
+        assert_eq!(s.wasted_j.to_bits(), e.summary.wasted_j.to_bits(), "{}", e.name);
+        assert_eq!(s.energy_a_j.to_bits(), e.summary.energy_a_j.to_bits(), "{}", e.name);
+        assert_eq!(s.energy_b_j.to_bits(), e.summary.energy_b_j.to_bits(), "{}", e.name);
+        assert_eq!(s.ops, e.summary.ops, "{}", e.name);
+        assert_eq!(s.windows, e.summary.windows, "{}", e.name);
+        assert_eq!(s.fingerprint_a, e.summary.fingerprint_a, "{}", e.name);
+        assert_eq!(s.top_labels.len(), e.summary.top_labels.len(), "{}", e.name);
+        for (x, y) in s.top_labels.iter().zip(e.summary.top_labels.iter()) {
+            assert_eq!(x.0, y.0);
+            assert_eq!(x.1.to_bits(), y.1.to_bits(), "label {} ledger drifted", x.0);
+            assert_eq!(x.2, y.2);
+        }
+    }
+
+    // the persisted fleet ranking reproduces the live ranking: same
+    // order, bit-identical waste
+    let ranking = &replay.rankings[0];
+    assert_eq!(ranking.len(), live.entries.len());
+    for (r, e) in ranking.iter().zip(live.entries.iter()) {
+        assert_eq!(r.name, e.name, "ranking order drifted");
+        assert_eq!(r.wasted_j.to_bits(), e.summary.wasted_j.to_bits());
+        assert_eq!(r.windows_flagged, e.summary.windows_flagged);
+    }
+    assert_eq!(replay.verify_ranking(), Ok(3));
+
+    // every emitted window was persisted (nothing rotated away at this
+    // size), so offline re-rendering sees the full rolling history
+    let live_windows: usize = live.entries.iter().map(|e| e.summary.windows).sum();
+    assert_eq!(replay.windows.len(), live_windows);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+fn rec(label: &str, op: OpKind, energy_j: f64, time_us: f64) -> KernelRecord {
+    KernelRecord {
+        node: 0,
+        op,
+        label: label.to_string(),
+        api: "api".into(),
+        dispatch_key: op.name().to_string(),
+        kernel: format!("k_{label}"),
+        time_us,
+        energy_j,
+        avg_power_w: energy_j / (time_us * 1e-6),
+        corr_id: 0,
+        bb_trace: vec![],
+        call_path: vec![Frame::py("serve")],
+        moments: vec![],
+    }
+}
+
+fn seg_after(t0: f64, dur: f64, watts: f64) -> Segment {
+    Segment { t_start_us: t0, t_end_us: t0 + dur, watts }
+}
+
+/// Serving-shaped op cycle (period 5) with per-kind energies distinct
+/// enough that any mispairing would flag.
+fn cycle_op(i: usize) -> (&'static str, OpKind, f64) {
+    match i % 5 {
+        0 => ("serve.proj", OpKind::MatMul, 0.30),
+        1 => ("serve.scale", OpKind::Mul, 0.02),
+        2 => ("serve.act", OpKind::Gelu, 0.05),
+        3 => ("serve.out", OpKind::MatMul, 0.30),
+        _ => ("serve.softmax", OpKind::Softmax, 0.08),
+    }
+}
+
+/// Run one 1000-op stream pair through a real auditor, dropping side
+/// A's event at `skip_at` (if any), and wrap the summary as a fleet
+/// entry.
+fn audited_entry(name: &str, skip_at: Option<usize>) -> StreamFleetEntry {
+    let cfg = StreamConfig {
+        window_ops: 100,
+        hop_ops: 100,
+        ring_cap: 128,
+        nvml: None,
+        ..Default::default()
+    };
+    let mut aud = StreamAuditor::new(cfg, 90.0);
+    let (mut ta, mut tb) = (0.0, 0.0);
+    for i in 0..1000 {
+        let (label, op, e) = cycle_op(i);
+        if Some(i) != skip_at {
+            aud.ingest_a(&rec(label, op, e, 100.0), seg_after(ta, 100.0, e / 100e-6));
+            ta += 100.0;
+        }
+        aud.ingest_b(&rec(label, op, e, 100.0), seg_after(tb, 100.0, e / 100e-6));
+        tb += 100.0;
+    }
+    let summary = aud.finish();
+    let expected = usize::from(skip_at.is_some());
+    assert_eq!(summary.resyncs, expected, "{name}: unexpected resync count");
+    StreamFleetEntry { name: name.to_string(), summary, snapshot_errors: 0 }
+}
+
+/// The acceptance scenario: three pairs drop a kernel at (nearly) the
+/// same op position — a shared-cause divergence. The fleet correlation
+/// must emit exactly one `FleetDivergence` with all three pairs
+/// attributed, instead of three per-pair alarms.
+#[test]
+fn simultaneous_three_pair_divergence_yields_one_fleet_event() {
+    let entries = vec![
+        audited_entry("serving-0", Some(437)),
+        audited_entry("serving-1", Some(438)),
+        audited_entry("serving-2", Some(439)),
+    ];
+    let divs = correlate_divergences(&entries, 100, 2);
+    assert_eq!(divs.len(), 1, "exactly one fleet-wide divergence event");
+    let d = &divs[0];
+    assert_eq!(d.pairs.len(), 3, "all three pairs attributed");
+    assert!(d.at_ops_min >= 436 && d.at_ops_max <= 440, "{}..{}", d.at_ops_min, d.at_ops_max);
+    for p in &d.pairs {
+        assert_eq!(p.resyncs, 1, "{}", p.name);
+        assert_eq!(p.skipped, 1, "{}: one dropped kernel costs one skip", p.name);
+    }
+
+    // one pair diverging alone stays below the correlation threshold
+    let solo = vec![audited_entry("serving-0", Some(437)), audited_entry("serving-1", None)];
+    assert!(correlate_divergences(&solo, 100, 2).is_empty());
+}
