@@ -1,0 +1,130 @@
+//! Cross-session diff bench: persist two sessions of the same serving
+//! workload (one with an injected per-label regression), then measure
+//! session load, matching, and the full differential replay — plus the
+//! window re-anchoring cost on long fingerprint sequences with
+//! scattered skips (the alignment must stay near-linear, not
+//! quadratic, when sessions drift).
+
+use std::path::PathBuf;
+
+use magneton::energy::Segment;
+use magneton::exec::KernelRecord;
+use magneton::fingerprint::WorkloadSig;
+use magneton::graph::OpKind;
+use magneton::report::render_session_diff;
+use magneton::stream::{StreamAuditor, StreamConfig};
+use magneton::telemetry::session::{align_windows, diff_sessions, DiffConfig, SessionInfo};
+use magneton::telemetry::{SessionHeader, SinkConfig, SnapshotSink};
+use magneton::trace::Frame;
+use magneton::util::bench::{banner, time_once};
+use magneton::util::table::{fmt_us, Table};
+use magneton::util::Prng;
+
+fn cycle_op(i: usize) -> (&'static str, OpKind, f64) {
+    match i % 5 {
+        0 => ("serve.proj", OpKind::MatMul, 0.30),
+        1 => ("serve.scale", OpKind::Mul, 0.02),
+        2 => ("serve.act", OpKind::Gelu, 0.05),
+        3 => ("serve.out", OpKind::MatMul, 0.30),
+        _ => ("serve.softmax", OpKind::Softmax, 0.08),
+    }
+}
+
+fn rec(label: &str, op: OpKind, energy_j: f64, time_us: f64) -> KernelRecord {
+    KernelRecord {
+        node: 0,
+        op,
+        label: label.to_string(),
+        api: "api".into(),
+        dispatch_key: op.name().to_string(),
+        kernel: format!("k_{label}"),
+        time_us,
+        energy_j,
+        avg_power_w: energy_j / (time_us * 1e-6),
+        corr_id: 0,
+        bb_trace: vec![],
+        call_path: vec![Frame::py("serve")],
+        moments: vec![],
+    }
+}
+
+/// Persist one `n`-op session; `proj_scale` inflates side A's
+/// `serve.proj` energy (the injected regression).
+fn persist(dir: &PathBuf, id: &str, n: usize, proj_scale: f64) {
+    let _ = std::fs::remove_dir_all(dir);
+    let cfg = StreamConfig { window_ops: 100, hop_ops: 100, ring_cap: 128, nvml: None, ..Default::default() };
+    let mut aud = StreamAuditor::new(cfg.clone(), 90.0);
+    // header + sink BEFORE ingestion: windows persist at emission time
+    let mut sig = WorkloadSig::new();
+    for i in 0..n {
+        let (label, op, _) = cycle_op(i);
+        sig.add(label, op.name());
+    }
+    aud.set_session_header(SessionHeader::new(id, "bench", "pair", &sig, "steady", cfg.digest()));
+    aud.set_sink("pair", SnapshotSink::new(dir.clone(), "pair", SinkConfig::default()).expect("sink"));
+    let (mut ta, mut tb) = (0.0, 0.0);
+    for i in 0..n {
+        let (label, op, e) = cycle_op(i);
+        let ea = if label == "serve.proj" { e * proj_scale } else { e };
+        aud.ingest_a(&rec(label, op, ea, 100.0), Segment { t_start_us: ta, t_end_us: ta + 100.0, watts: ea / 100e-6 });
+        ta += 100.0;
+        aud.ingest_b(&rec(label, op, e, 100.0), Segment { t_start_us: tb, t_end_us: tb + 100.0, watts: e / 100e-6 });
+        tb += 100.0;
+        aud.take_emitted();
+    }
+    aud.finish();
+    assert_eq!(aud.sink_errors(), 0);
+}
+
+fn main() {
+    banner("Session diff", "cross-session load + match + differential replay");
+    let base = std::env::temp_dir().join(format!("magneton-session-bench-{}", std::process::id()));
+    let dir_a = base.join("a");
+    let dir_b = base.join("b");
+
+    let n = 20_000usize;
+    let (_, build_us) = time_once(|| {
+        persist(&dir_a, "deploy-a", n, 1.0);
+        persist(&dir_b, "deploy-b", n, 1.3);
+    });
+
+    let ((a, b), load_us) = time_once(|| {
+        (SessionInfo::load(&dir_a).expect("load a"), SessionInfo::load(&dir_b).expect("load b"))
+    });
+    let (diff, diff_us) = time_once(|| diff_sessions(&a, &b, &DiffConfig::default()).expect("diff"));
+    assert_eq!(diff.labels[0].label, "serve.proj", "regression must rank first");
+    assert!(diff.regressed(0.05));
+    assert_eq!(diff.windows.aligned, n / 100);
+    // deterministic: the rendered report reproduces bit-for-bit
+    let (r1, render_us) = time_once(|| render_session_diff(&diff));
+    let diff2 = diff_sessions(&a, &b, &DiffConfig::default()).expect("diff2");
+    assert_eq!(render_session_diff(&diff2), r1, "diff must be reproducible");
+
+    // --- window re-anchoring on long drifting sequences ------------------
+    // 100k windows with 200 scattered single-window skips on each side:
+    // the minimal-skip search must stay near-linear overall
+    let mut rng = Prng::new(7);
+    let wa: Vec<u64> = (0..100_000u64).map(|i| i * 2654435761 % 1_000_003).collect();
+    let mut wb = wa.clone();
+    for _ in 0..200 {
+        let at = rng.below(wb.len());
+        wb.remove(at);
+    }
+    let (al, align_us) = time_once(|| align_windows(&wa, &wb, 16));
+    assert!(al.aligned > 99_000, "aligned {}", al.aligned);
+    assert!(al.skipped_a >= 200);
+
+    let mut t = Table::new(vec!["stage", "items", "total"]);
+    for (stage, items, us) in [
+        ("persist 2 sessions", 2 * n, build_us),
+        ("load sessions", 2 * n / 100 + 2, load_us),
+        ("diff (match+align+delta)", n / 100, diff_us),
+        ("render report", diff.labels.len(), render_us),
+        ("align 100k windows, 200 skips", 100_000, align_us),
+    ] {
+        t.row(vec![stage.to_string(), items.to_string(), fmt_us(us)]);
+    }
+    print!("{}", t.render());
+
+    let _ = std::fs::remove_dir_all(&base);
+}

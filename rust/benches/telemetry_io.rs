@@ -34,6 +34,7 @@ fn window(seq: usize) -> WindowReport {
         resyncs: 0,
         quarantined: false,
         content_mismatches: 0,
+        window_fp: 0x00c0_ffee + seq as u64,
     }
 }
 

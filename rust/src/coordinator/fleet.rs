@@ -29,8 +29,10 @@ use crate::coordinator::{AuditOutcome, Magneton, SysRun};
 use crate::detect::DetectConfig;
 use crate::energy::{DeviceSpec, Segment};
 use crate::exec::{ExecOptions, Executor, KernelRecord};
-use crate::stream::{ResyncEvent, StreamAuditor, StreamConfig, StreamSummary, WindowReport};
-use crate::telemetry::{RankEntry, SinkConfig, Snapshot, SnapshotSink};
+use crate::stream::{
+    workload_sig_of_program, ResyncEvent, StreamAuditor, StreamConfig, StreamSummary, WindowReport,
+};
+use crate::telemetry::{RankEntry, SessionHeader, SinkConfig, Snapshot, SnapshotSink};
 use crate::util::{fnv1a, pool, Prng};
 use crate::workload::ArrivalProcess;
 
@@ -363,6 +365,14 @@ pub struct StreamFleet {
     pub snapshot_dir: Option<PathBuf>,
     /// Rotation bounds shared by the per-pair and fleet-level sinks.
     pub sink_cfg: SinkConfig,
+    /// Session identity stamped into every per-pair sink as a
+    /// [`SessionHeader`] (workload fingerprint from the pair's side-A
+    /// program, arrival + config digests). Requires `snapshot_dir`;
+    /// `None` writes no headers, so the directory cannot be matched by
+    /// `magneton diff`.
+    pub session_id: Option<String>,
+    /// Free-form deploy tag carried alongside `session_id`.
+    pub deploy_tag: String,
     pairs: Vec<FleetPair>,
 }
 
@@ -382,6 +392,8 @@ impl StreamFleet {
             correlate_window_ops: 0,
             snapshot_dir: None,
             sink_cfg: SinkConfig::default(),
+            session_id: None,
+            deploy_tag: String::new(),
             pairs: Vec::new(),
         }
     }
@@ -428,7 +440,24 @@ impl StreamFleet {
                 // each other's files during rotation
                 let prefix = format!("pair-{idx:03}-{}", p.name);
                 match SnapshotSink::new(dir.clone(), &prefix, self.sink_cfg.clone()) {
-                    Ok(sink) => aud.set_sink(&p.name, sink),
+                    Ok(sink) => {
+                        // the session header (workload fingerprint of
+                        // the pair's program) goes first in the series,
+                        // so this directory stays joinable with other
+                        // deploys of the same workload (magneton diff)
+                        if let Some(id) = &self.session_id {
+                            let sig = workload_sig_of_program(&p.a.prog);
+                            aud.set_session_header(SessionHeader::new(
+                                id,
+                                &self.deploy_tag,
+                                &p.name,
+                                &sig,
+                                &self.arrival.describe(),
+                                self.cfg.digest(),
+                            ));
+                        }
+                        aud.set_sink(&p.name, sink)
+                    }
                     Err(_) => snapshot_errors += 1,
                 }
             }

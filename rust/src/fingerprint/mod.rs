@@ -18,10 +18,112 @@
 //! spectra ([`crate::linalg::singular_values`]) validate the moment
 //! path in tests.
 
+use std::collections::BTreeMap;
+
 use crate::tensor::Tensor;
 
 /// Number of spectral moments per unfolding.
 pub const MOMENT_ORDER: usize = 4;
+
+/// Structural signature of one kernel-op event: FNV-1a over the
+/// call-site label and op name (0xff separates the parts so
+/// `("ab", "c")` ≠ `("a", "bc")`). This is the unit the streaming
+/// auditor's positional pairing compares and the session-level
+/// [`WorkloadSig`] folds over, so a workload hashes identically whether
+/// it is fingerprinted statically (from the program graph) or
+/// dynamically (from the emitted kernel records).
+pub fn op_signature(label: &str, op_name: &str) -> u64 {
+    crate::util::fnv1a(label.bytes().chain([0xffu8]).chain(op_name.bytes()))
+}
+
+/// SplitMix64 finaliser: full-avalanche mixing applied to each op
+/// signature before the commutative fold in [`WorkloadSig`], so the
+/// multiset hash is sensitive to every bit of every signature (a plain
+/// sum of raw FNV values would let related labels cancel).
+pub fn mix64(v: u64) -> u64 {
+    let mut z = v.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Deterministic, order-independent signature of a workload's kernel-op
+/// multiset: the wrapping sum of [`mix64`]-mixed [`op_signature`]s plus
+/// the explicit per-label op counts behind it.
+///
+/// Two runs of the same workload — on different days, different worker
+/// counts, even different op *orders* (the fold is commutative) —
+/// produce the same signature, which is what lets
+/// [`crate::telemetry::session`] join persisted sessions from different
+/// deploys for longitudinal differential auditing. The label counts are
+/// kept explicit (not just hashed) so tolerant matching can reason
+/// about *partial* overlap between two workloads.
+///
+/// ```
+/// use magneton::fingerprint::WorkloadSig;
+///
+/// let mut a = WorkloadSig::new();
+/// a.add("serve.proj", "matmul");
+/// a.add("serve.act", "gelu");
+/// let mut b = WorkloadSig::new();
+/// b.add("serve.act", "gelu"); // other order, same multiset
+/// b.add("serve.proj", "matmul");
+/// assert_eq!(a.fp(), b.fp());
+/// ```
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WorkloadSig {
+    fp: u64,
+    total_ops: usize,
+    labels: BTreeMap<String, usize>,
+}
+
+impl WorkloadSig {
+    pub fn new() -> WorkloadSig {
+        WorkloadSig::default()
+    }
+
+    /// Fold one kernel-op event into the signature.
+    pub fn add(&mut self, label: &str, op_name: &str) {
+        self.fp = self.fp.wrapping_add(mix64(op_signature(label, op_name)));
+        self.total_ops += 1;
+        if let Some(n) = self.labels.get_mut(label) {
+            *n += 1;
+        } else {
+            self.labels.insert(label.to_string(), 1);
+        }
+    }
+
+    /// Fold another signature in (multiset union — used to combine the
+    /// per-pair signatures of one session into a session-level one).
+    pub fn merge(&mut self, other: &WorkloadSig) {
+        self.fp = self.fp.wrapping_add(other.fp);
+        self.total_ops += other.total_ops;
+        for (label, n) in &other.labels {
+            *self.labels.entry(label.clone()).or_insert(0) += n;
+        }
+    }
+
+    /// The order-independent multiset hash (0 for an empty workload).
+    pub fn fp(&self) -> u64 {
+        self.fp
+    }
+
+    /// Kernel ops folded in.
+    pub fn total_ops(&self) -> usize {
+        self.total_ops
+    }
+
+    /// Per-label op counts (label-sorted).
+    pub fn labels(&self) -> &BTreeMap<String, usize> {
+        &self.labels
+    }
+
+    /// Per-label op counts as a label-sorted vector (the form the
+    /// session header persists).
+    pub fn label_counts(&self) -> Vec<(String, usize)> {
+        self.labels.iter().map(|(l, &n)| (l.clone(), n)).collect()
+    }
+}
 
 /// Computes spectral moments of a matricized tensor. Implementations:
 /// the in-process Rust engine (default) and the PJRT-compiled Pallas
@@ -344,6 +446,43 @@ mod tests {
         // rank-1 and rank-3 shapes are sketchable too
         assert_eq!(content_sketch(&RustMomentEngine, &Tensor::randn(&mut rng, &[32])).len(), 2);
         assert_eq!(content_sketch(&RustMomentEngine, &Tensor::randn(&mut rng, &[2, 3, 4])).len(), 2);
+    }
+
+    /// The workload multiset signature: order-independent, count- and
+    /// label-sensitive, and mergeable.
+    #[test]
+    fn workload_sig_is_an_order_independent_multiset_hash() {
+        let mut fwd = WorkloadSig::new();
+        let mut rev = WorkloadSig::new();
+        let ops = [("serve.proj", "matmul"), ("serve.act", "gelu"), ("serve.proj", "matmul")];
+        for (l, o) in ops {
+            fwd.add(l, o);
+        }
+        for (l, o) in ops.iter().rev() {
+            rev.add(l, o);
+        }
+        assert_eq!(fwd.fp(), rev.fp());
+        assert_eq!(fwd.total_ops(), 3);
+        assert_eq!(fwd.label_counts(), vec![("serve.act".into(), 1), ("serve.proj".into(), 2)]);
+        // multiset-sensitive: dropping one duplicate changes the hash
+        let mut fewer = WorkloadSig::new();
+        fewer.add("serve.proj", "matmul");
+        fewer.add("serve.act", "gelu");
+        assert_ne!(fwd.fp(), fewer.fp());
+        // label- and op-sensitive
+        let mut other = fewer.clone();
+        other.add("serve.out", "matmul");
+        assert_ne!(fwd.fp(), other.fp());
+        // merge == folding both multisets into one
+        let mut merged = fewer.clone();
+        let mut tail = WorkloadSig::new();
+        tail.add("serve.proj", "matmul");
+        merged.merge(&tail);
+        assert_eq!(merged.fp(), fwd.fp());
+        assert_eq!(merged.total_ops(), fwd.total_ops());
+        assert_eq!(merged.label_counts(), fwd.label_counts());
+        // the label/op separator matters
+        assert_ne!(op_signature("ab", "c"), op_signature("a", "bc"));
     }
 
     #[test]

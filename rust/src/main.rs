@@ -29,8 +29,10 @@ use magneton::util::Prng;
 
 /// Subcommand names, reserved at parse time so a bare flag never
 /// swallows one as its value (`magneton --verbose cases`).
-const SUBCOMMANDS: &[&str] =
-    &["cases", "fleet", "ddp", "breakdown", "accuracy", "artifacts", "stream", "replay", "help"];
+const SUBCOMMANDS: &[&str] = &[
+    "cases", "fleet", "ddp", "breakdown", "accuracy", "artifacts", "stream", "replay", "diff",
+    "help",
+];
 
 fn main() -> ExitCode {
     let args = Args::from_env_reserved(SUBCOMMANDS);
@@ -59,6 +61,7 @@ fn main() -> ExitCode {
         "artifacts" => cmd_artifacts(&args),
         "stream" => cmd_stream(&args),
         "replay" => cmd_replay(&args),
+        "diff" => cmd_diff(&args),
         "help" => {
             print_help();
             Ok(())
@@ -96,13 +99,21 @@ fn print_help() {
          \x20            --snapshot-dir <d> persists replayable NDJSON snapshots\n\
          \x20 replay     reload a snapshot directory (--dir <d>) offline:\n\
          \x20            re-render windows, per-pair summaries, fleet ranking and\n\
-         \x20            divergence events, and verify the ranking bit-for-bit\n\n\
+         \x20            divergence events, and verify the ranking bit-for-bit\n\
+         \x20 diff       cross-session differential replay: match two persisted\n\
+         \x20            sessions (--dir-a/--dir-b) by workload fingerprint, align\n\
+         \x20            their windows, and rank per-label energy regressions;\n\
+         \x20            exits non-zero above --regress-threshold, refuses\n\
+         \x20            non-matching workloads with a diagnostic\n\n\
          OPTIONS: --id <case> --eps <f64> --threshold <f64> --seed <u64> --device <h200|rtx4090>\n\
          STREAM:  --requests <n=500> --arrival <poisson|bursty|steady> --rate <hz=200>\n\
          \x20        --burst <n=16> --window <pairs=250> --hop <pairs> --ring <segs=512>\n\
          \x20        --chunk <events=64> --queue <chunks=4> --max-emitted <n=64>\n\
          \x20        --eff <0..1=0.62> --pairs <fleet pairs=3> --snapshot-dir <dir>\n\
-         REPLAY:  --dir <dir=snapshots> --windows <n=12> --no-ranking-ok"
+         \x20        --session-id <id=stream> --deploy-tag <tag>\n\
+         REPLAY:  --dir <dir=snapshots> --windows <n=12> --no-ranking-ok\n\
+         DIFF:    --dir-a <dir> --dir-b <dir> --regress-threshold <frac=0.05>\n\
+         \x20        --threshold <frac=0.10> --tolerant --min-overlap <frac=0.8>"
     );
 }
 
@@ -238,8 +249,8 @@ fn cmd_stream(args: &Args) -> magneton::Result<()> {
     use magneton::dispatch::Env;
     use magneton::energy::Segment;
     use magneton::exec::{Executor, KernelRecord};
-    use magneton::stream::{StreamAuditor, StreamConfig};
-    use magneton::telemetry::{SinkConfig, SnapshotSink};
+    use magneton::stream::{workload_sig_of_program, StreamAuditor, StreamConfig};
+    use magneton::telemetry::{SessionHeader, SinkConfig, SnapshotSink};
     use magneton::workload::{serving_dispatcher, serving_stream_program, ArrivalProcess, ServingStream};
     use std::sync::mpsc;
     use std::thread;
@@ -274,6 +285,10 @@ fn cmd_stream(args: &Args) -> magneton::Result<()> {
     let seed: u64 = args.get_parse("seed", 2026u64);
     let eff: f64 = args.get_parse("eff", 0.62f64);
     let snapshot_dir = args.options.get("snapshot-dir").map(PathBuf::from);
+    // session identity for cross-session matching (`magneton diff`):
+    // free-form, stamped into every sink's SessionHeader
+    let session_id = args.get("session-id", "stream").to_string();
+    let deploy_tag = args.get("deploy-tag", "").to_string();
 
     println!(
         "magneton stream: {} requests ({} kernel ops/side), {:?} arrivals,\n\
@@ -322,6 +337,18 @@ fn cmd_stream(args: &Args) -> magneton::Result<()> {
     if let Some(dir) = &snapshot_dir {
         let sink = SnapshotSink::new(dir.clone(), "pair-inefficient-vs-optimal", SinkConfig::default())
             .map_err(|e| e.context("snapshot sink"))?;
+        // the session header is computed statically from the program
+        // the producers will execute, so it lands first in the series
+        let mut sig_rng = Prng::new(seed);
+        let sig = workload_sig_of_program(&serving_stream_program(&mut sig_rng, &spec));
+        aud.set_session_header(SessionHeader::new(
+            &session_id,
+            &deploy_tag,
+            pair_name,
+            &sig,
+            &arrival.describe(),
+            cfg.digest(),
+        ));
         aud.set_sink(pair_name, sink);
     }
     let mut arrival_rng = Prng::new(seed ^ 0xa441_b815);
@@ -358,6 +385,8 @@ fn cmd_stream(args: &Args) -> magneton::Result<()> {
     fleet.ops_per_request = ops_per_request;
     fleet.arrival_seed = seed;
     fleet.snapshot_dir = snapshot_dir.clone();
+    fleet.session_id = snapshot_dir.as_ref().map(|_| session_id.clone());
+    fleet.deploy_tag = deploy_tag.clone();
     let fleet_spec = ServingStream { requests: (requests / 5).max(20), ..spec };
     for i in 0..fleet_pairs {
         let pair_eff = if i % 2 == 0 { eff } else { 1.0 };
@@ -414,6 +443,15 @@ fn cmd_replay(args: &Args) -> magneton::Result<()> {
         replay.rankings.len(),
         replay.divergences.len()
     );
+    for h in &replay.sessions {
+        println!(
+            "session {} [{}] scope {}: workload {:016x} ({} ops, {} arrivals)",
+            h.session_id, h.deploy_tag, h.scope, h.workload_fp, h.total_ops, h.arrival
+        );
+    }
+    if !replay.sessions.is_empty() {
+        println!();
+    }
     if replay.windows.is_empty() && replay.summaries.is_empty() {
         return Err(magneton::Error::msg(format!("no snapshots found under {}", dir.display())));
     }
@@ -466,6 +504,56 @@ fn cmd_replay(args: &Args) -> magneton::Result<()> {
             "persisted ranking does not reproduce the summaries: {e}"
         ))),
     }
+}
+
+/// Cross-session differential replay: load two persisted sessions,
+/// refuse them unless their workload fingerprints match (exactly, or
+/// tolerantly on label-multiset overlap with `--tolerant`), align their
+/// persisted windows, run the differential detector over the paired
+/// per-label ledgers, and render the ranked regression report. Exits
+/// non-zero when the regression exceeds `--regress-threshold` — the CI
+/// gate for "this deploy wastes more energy on the same workload".
+fn cmd_diff(args: &Args) -> magneton::Result<()> {
+    use magneton::telemetry::session::{diff_sessions, DiffConfig, MatchMode, SessionInfo};
+    let Some(dir_a) = args.options.get("dir-a") else {
+        return Err(magneton::Error::msg("missing --dir-a <snapshot dir of session A>"));
+    };
+    let Some(dir_b) = args.options.get("dir-b") else {
+        return Err(magneton::Error::msg("missing --dir-b <snapshot dir of session B>"));
+    };
+    let a = SessionInfo::load(&PathBuf::from(dir_a))?;
+    let b = SessionInfo::load(&PathBuf::from(dir_b))?;
+    let mode = if args.flag("tolerant") {
+        MatchMode::Tolerant { min_overlap: args.get_parse("min-overlap", 0.8f64) }
+    } else {
+        MatchMode::Exact
+    };
+    let cfg = DiffConfig {
+        mode,
+        energy_threshold: args.get_parse("threshold", 0.10f64),
+        ..DiffConfig::default()
+    };
+    // refusal of incomparable sessions surfaces here as a non-zero
+    // exit carrying the match diagnostic
+    let diff = diff_sessions(&a, &b, &cfg)?;
+    print!("{}", report::render_session_diff(&diff));
+    let regress: f64 = args.get_parse("regress-threshold", 0.05f64);
+    if diff.regressed(regress) {
+        return Err(magneton::Error::msg(format!(
+            "energy regression above threshold: session {:+.1}% overall, worst label {:+.1}% \
+             (threshold {:.1}%)",
+            diff.total_delta_frac() * 100.0,
+            diff.max_regression_frac() * 100.0,
+            regress * 100.0
+        )));
+    }
+    println!(
+        "\nno regression above {:.1}%: session delta {:+.1}%, worst label {:+.1}%",
+        regress * 100.0,
+        diff.total_delta_frac() * 100.0,
+        diff.max_regression_frac() * 100.0
+    );
+    Ok(())
 }
 
 /// List PJRT artifacts and smoke-run the fingerprint kernel. Exits

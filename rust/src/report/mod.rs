@@ -7,8 +7,18 @@ use crate::coordinator::fleet::{FleetDivergence, FleetReport, StreamFleetReport}
 use crate::coordinator::AuditOutcome;
 use crate::exec::RunArtifacts;
 use crate::stream::{StreamSummary, WindowReport};
+use crate::telemetry::session::{MatchVerdict, SessionDiff};
 use crate::telemetry::RankEntry;
 use crate::util::table::{fmt_joules, fmt_us, Table};
+
+/// Joules with an explicit sign (for delta columns).
+fn fmt_joules_signed(j: f64) -> String {
+    if j < 0.0 {
+        format!("-{}", fmt_joules(-j))
+    } else {
+        format!("+{}", fmt_joules(j))
+    }
+}
 
 /// Render an audit outcome as a human-readable report.
 pub fn render_audit(name_a: &str, name_b: &str, out: &AuditOutcome) -> String {
@@ -228,6 +238,104 @@ pub fn render_divergence(d: &FleetDivergence) -> String {
     )
 }
 
+/// Ranked cross-session regression report: the `magneton diff` output.
+/// Regressions lead the table (largest ΔJ first); the footer carries
+/// the session-level totals, waste/divergence deltas, and the window
+/// alignment summary.
+pub fn render_session_diff(d: &SessionDiff) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "=== Magneton session diff: {} -> {} ===\n",
+        d.session_a, d.session_b
+    ));
+    match &d.verdict {
+        MatchVerdict::Exact => {
+            s.push_str("workloads match exactly (identical fingerprint multisets)\n");
+        }
+        MatchVerdict::Tolerant { overlap } => {
+            s.push_str(&format!(
+                "workloads match tolerantly: label-multiset overlap {:.1}%\n",
+                overlap * 100.0
+            ));
+        }
+        MatchVerdict::Incomparable { reason } => {
+            // diff_sessions refuses these; render defensively anyway
+            s.push_str(&format!("WORKLOADS INCOMPARABLE: {reason}\n"));
+        }
+    }
+    for note in &d.notes {
+        s.push_str(&format!("note: {note}\n"));
+    }
+    let frac = d.total_delta_frac();
+    s.push_str(&format!(
+        "energy: {} -> {}  ({}{:.1}%)\n",
+        fmt_joules(d.total_a_j),
+        fmt_joules(d.total_b_j),
+        if frac >= 0.0 { "+" } else { "" },
+        frac * 100.0
+    ));
+    s.push_str(&format!(
+        "waste vs in-session reference: {} -> {}\n",
+        fmt_joules(d.wasted_a_j),
+        fmt_joules(d.wasted_b_j)
+    ));
+    if d.resyncs_a + d.resyncs_b + d.divergences_a + d.divergences_b > 0 {
+        s.push_str(&format!(
+            "divergence events: {} resyncs / {} fleet divergences -> {} / {}\n",
+            d.resyncs_a, d.divergences_a, d.resyncs_b, d.divergences_b
+        ));
+    }
+    s.push_str(&format!(
+        "windows: {} aligned, {} realigns ({} + {} skipped), {} forced\n",
+        d.windows.aligned,
+        d.windows.realigns,
+        d.windows.skipped_a,
+        d.windows.skipped_b,
+        d.windows.forced
+    ));
+    if !d.labels.is_empty() {
+        let mut t = Table::new(vec![
+            "rank", "label", "ops A->B", "energy A", "energy B", "delta", "delta%", "waste A->B",
+            "verdict",
+        ]);
+        for (i, l) in d.labels.iter().enumerate() {
+            let signed_frac = if l.delta_j >= 0.0 { l.delta_frac } else { -l.delta_frac };
+            let verdict = if l.delta_frac >= d.energy_threshold {
+                if l.delta_j > 0.0 {
+                    "REGRESSED"
+                } else {
+                    "improved"
+                }
+            } else {
+                "~"
+            };
+            t.row(vec![
+                (i + 1).to_string(),
+                l.label.clone(),
+                if l.ops_a == l.ops_b {
+                    l.ops_a.to_string()
+                } else {
+                    format!("{}->{}", l.ops_a, l.ops_b)
+                },
+                fmt_joules(l.energy_a_j),
+                fmt_joules(l.energy_b_j),
+                fmt_joules_signed(l.delta_j),
+                format!("{:+.1}%", signed_frac * 100.0),
+                format!("{}->{}", fmt_joules(l.waste_a_j), fmt_joules(l.waste_b_j)),
+                verdict.to_string(),
+            ]);
+        }
+        s.push_str(&t.render());
+    }
+    for (label, j) in &d.new_labels {
+        s.push_str(&format!("new label in B: {label} ({})\n", fmt_joules(*j)));
+    }
+    for (label, j) in &d.vanished_labels {
+        s.push_str(&format!("vanished label (A only): {label} ({})\n", fmt_joules(*j)));
+    }
+    s
+}
+
 /// Ranked table for a persisted fleet ranking (the replay-side
 /// counterpart of [`stream_fleet_table`]).
 pub fn render_ranking(ranking: &[RankEntry]) -> String {
@@ -413,6 +521,63 @@ mod tests {
         let table = render_ranking(&ranking);
         assert!(table.contains("hot"), "{table}");
         assert!(table.contains("3/4"), "{table}");
+    }
+
+    #[test]
+    fn session_diff_renders_ranked_regressions() {
+        use crate::telemetry::session::{LabelDelta, SessionDiff, WindowAlignment};
+        let delta = |label: &str, ea: f64, eb: f64| LabelDelta {
+            label: label.to_string(),
+            ops_a: 100,
+            ops_b: 100,
+            energy_a_j: ea,
+            energy_b_j: eb,
+            delta_j: eb - ea,
+            delta_frac: (eb - ea).abs() / ea.max(eb),
+            waste_a_j: 0.0,
+            waste_b_j: (eb - ea).max(0.0),
+        };
+        let d = SessionDiff {
+            session_a: "deploy-a".into(),
+            session_b: "deploy-b (canary)".into(),
+            verdict: MatchVerdict::Exact,
+            notes: vec!["arrival processes differ (steady vs poisson@200Hz)".into()],
+            labels: vec![delta("serve.proj", 1.0, 1.5), delta("serve.act", 0.5, 0.5)],
+            new_labels: vec![("serve.extra".into(), 0.25)],
+            vanished_labels: vec![("serve.old".into(), 0.125)],
+            total_a_j: 1.5,
+            total_b_j: 2.0,
+            wasted_a_j: 0.0,
+            wasted_b_j: 0.5,
+            resyncs_a: 0,
+            resyncs_b: 1,
+            divergences_a: 0,
+            divergences_b: 0,
+            windows: WindowAlignment {
+                aligned: 10,
+                realigns: 1,
+                skipped_a: 0,
+                skipped_b: 1,
+                forced: 0,
+            },
+            energy_threshold: 0.10,
+        };
+        let s = render_session_diff(&d);
+        assert!(s.contains("session diff: deploy-a -> deploy-b (canary)"), "{s}");
+        assert!(s.contains("match exactly"), "{s}");
+        assert!(s.contains("note: arrival processes differ"), "{s}");
+        assert!(s.contains("REGRESSED"), "{s}");
+        assert!(s.contains("serve.proj"), "{s}");
+        assert!(s.contains("+500.00 mJ"), "{s}");
+        assert!(s.contains("+33.3%"), "{s}");
+        assert!(s.contains("0.00 uJ->500.00 mJ"), "{s}");
+        assert!(s.contains("new label in B: serve.extra"), "{s}");
+        assert!(s.contains("vanished label (A only): serve.old"), "{s}");
+        assert!(s.contains("10 aligned, 1 realigns (0 + 1 skipped), 0 forced"), "{s}");
+        // the regressed label ranks first, the flat one is "~"
+        let proj_pos = s.find("serve.proj").unwrap();
+        let act_pos = s.find("serve.act").unwrap();
+        assert!(proj_pos < act_pos, "regression must rank first");
     }
 
     #[test]

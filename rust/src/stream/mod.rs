@@ -60,8 +60,10 @@ use std::collections::{BTreeMap, VecDeque};
 use crate::detect::{DetectConfig, Side};
 use crate::energy::sampler::{NvmlSampler, SamplerState};
 use crate::energy::{PowerSource, Segment};
-use crate::exec::KernelRecord;
-use crate::telemetry::{Snapshot, SnapshotSink};
+use crate::exec::{KernelRecord, Program};
+use crate::fingerprint::{mix64, op_signature, WorkloadSig};
+use crate::graph::OpKind;
+use crate::telemetry::{SessionHeader, Snapshot, SnapshotSink};
 
 /// Fixed-capacity ring of power segments: the bounded stand-in for a
 /// full [`crate::energy::PowerTrace`] on an unbounded stream. Evicted
@@ -238,10 +240,52 @@ impl Default for StreamConfig {
     }
 }
 
+impl StreamConfig {
+    /// Digest of the comparison-relevant configuration, carried in the
+    /// [`SessionHeader`]: two sessions persisted under different
+    /// digests tiled their windows differently (or flagged at different
+    /// thresholds), so their window sequences are not
+    /// position-comparable even when the workload fingerprints match —
+    /// `magneton diff` uses this to decide whether window alignment is
+    /// meaningful.
+    pub fn digest(&self) -> u64 {
+        let fields: [u64; 8] = [
+            self.window_ops as u64,
+            self.hop_ops as u64,
+            self.resync_lookahead as u64,
+            self.resync_min_run as u64,
+            self.content_eps.to_bits(),
+            self.cfg.energy_threshold.to_bits(),
+            self.cfg.perf_tolerance.to_bits(),
+            self.cfg.output_tolerance.to_bits(),
+        ];
+        crate::util::fnv1a(fields.iter().flat_map(|v| v.to_le_bytes()))
+    }
+}
+
+/// Cumulative per-label cost of the matched pairs of one stream audit —
+/// the pair-level waste detector's per-label input, persisted at
+/// `finish` (`Snapshot::Ledger`) so `magneton diff` can pair the
+/// ledgers of two *sessions* of the same workload and run the
+/// differential detector longitudinally.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LabelLedger {
+    pub label: String,
+    /// Matched op pairs under this label.
+    pub ops: usize,
+    pub energy_a_j: f64,
+    pub energy_b_j: f64,
+    pub time_a_us: f64,
+    pub time_b_us: f64,
+}
+
 /// One matched op pair in the sliding window.
 #[derive(Clone, Debug)]
 struct PairCost {
     label: String,
+    /// Structural hash of the pair's `(label, op)` — folded (mixed)
+    /// into the rolling window fingerprint.
+    shash: u64,
     energy_a_j: f64,
     energy_b_j: f64,
     time_a_us: f64,
@@ -336,6 +380,12 @@ pub struct WindowReport {
     pub quarantined: bool,
     /// Pairs in the window whose content sketches disagreed.
     pub content_mismatches: usize,
+    /// Order-independent multiset hash over the `(label, op)`
+    /// signatures of the pairs in this window. Two sessions of the same
+    /// workload emit the same fingerprint sequence, so `magneton diff`
+    /// can re-anchor their persisted window lists positionally
+    /// (resync-style) without re-running the auditor.
+    pub window_fp: u64,
 }
 
 impl WindowReport {
@@ -428,6 +478,9 @@ pub struct StreamAuditor {
     win_e_b: f64,
     win_t_a: f64,
     win_t_b: f64,
+    /// Rolling order-independent multiset hash over the window's pair
+    /// signatures (wrapping add on push, subtract on slide-out).
+    win_fp: u64,
     /// Pairs in the window whose content sketches disagreed (rolling).
     win_content_bad: usize,
     pend_a: VecDeque<OpEvent>,
@@ -488,14 +541,48 @@ pub struct StreamAuditor {
     cum_wasted_j: f64,
     cum_content_bad: usize,
     label_waste: BTreeMap<String, (f64, usize)>,
+    /// Cumulative per-label pair costs:
+    /// `(ops, energy_a, energy_b, time_a, time_b)` — every matched pair
+    /// attributed, persisted at `finish` as a `Snapshot::Ledger`.
+    label_ledger: BTreeMap<String, (usize, f64, f64, f64, f64)>,
+    /// Session header applied to any attached sink (see
+    /// [`StreamAuditor::set_session_header`]).
+    session: Option<SessionHeader>,
     peak_window_pairs: usize,
     peak_pending: usize,
 }
 
-/// FNV-1a over a label + op name (the structural identity of one op;
-/// 0xff separates the parts so `("ab", "c")` ≠ `("a", "bc")`).
+/// Structural identity of one op — shared with the session-level
+/// workload fingerprint ([`crate::fingerprint::op_signature`]) so a
+/// workload hashes identically online and in persisted session headers.
 fn op_hash(label: &str, op_name: &str) -> u64 {
-    crate::util::fnv1a(label.bytes().chain([0xffu8]).chain(op_name.bytes()))
+    op_signature(label, op_name)
+}
+
+/// Static workload signature of a program: the `(label, op)` multiset
+/// the executor will emit kernel records for — every node except
+/// `Input`/`Weight`/`Output` sources/sinks and the zero-copy metadata
+/// ops (`Permute`/`Reshape`), exactly the skip rule
+/// [`crate::exec::Executor::run`] and [`crate::exec::StreamExec`]
+/// apply, so the static fingerprint equals the one an auditor would
+/// observe from the emitted kernel stream. Computable *before* any
+/// execution, which is what lets `magneton stream` write the
+/// [`SessionHeader`] first in the snapshot series; and because
+/// [`WorkloadSig`]'s fold is commutative, two deploys of the same
+/// workload produce the same fingerprint however their streams
+/// interleave.
+pub fn workload_sig_of_program(prog: &Program) -> WorkloadSig {
+    let mut sig = WorkloadSig::new();
+    for node in &prog.graph.nodes {
+        if matches!(
+            node.op,
+            OpKind::Input | OpKind::Weight | OpKind::Output | OpKind::Permute | OpKind::Reshape
+        ) {
+            continue;
+        }
+        sig.add(&node.label, node.op.name());
+    }
+    sig
 }
 
 /// Relative agreement of two content sketches. Empty sketches (guard
@@ -538,6 +625,7 @@ impl StreamAuditor {
             win_e_b: 0.0,
             win_t_a: 0.0,
             win_t_b: 0.0,
+            win_fp: 0,
             win_content_bad: 0,
             pend_a: VecDeque::new(),
             pend_b: VecDeque::new(),
@@ -576,6 +664,8 @@ impl StreamAuditor {
             cum_wasted_j: 0.0,
             cum_content_bad: 0,
             label_waste: BTreeMap::new(),
+            label_ledger: BTreeMap::new(),
+            session: None,
             peak_window_pairs: 0,
             peak_pending: 0,
             cfg,
@@ -588,8 +678,45 @@ impl StreamAuditor {
     /// attributed to `pair`. Sink IO failures are counted in
     /// [`StreamAuditor::sink_errors`] rather than unwinding ingestion —
     /// a full disk must not kill a live audit.
-    pub fn set_sink(&mut self, pair: &str, sink: SnapshotSink) {
+    pub fn set_sink(&mut self, pair: &str, mut sink: SnapshotSink) {
+        if let Some(h) = &self.session {
+            if sink.set_header(&Snapshot::Session { header: h.clone() }).is_err() {
+                self.sink_errors += 1;
+            }
+        }
         self.sink = Some((pair.to_string(), sink));
+    }
+
+    /// Stamp this audit with a session identity: the header is pinned
+    /// to the attached sink (or to the next one attached), written
+    /// first in its snapshot series and re-written across rotations, so
+    /// the persisted session stays joinable with other deploys of the
+    /// same workload (`magneton diff`).
+    pub fn set_session_header(&mut self, header: SessionHeader) {
+        if let Some((_, sink)) = &mut self.sink {
+            if sink.set_header(&Snapshot::Session { header: header.clone() }).is_err() {
+                self.sink_errors += 1;
+            }
+        }
+        self.session = Some(header);
+    }
+
+    /// Cumulative per-label pair-cost ledger (label-sorted), valid
+    /// mid-stream. Quarantined windows' pairs are included — the ledger
+    /// tracks cost, not verdicts — while the *waste* ledger in the
+    /// summary stays quarantine-filtered.
+    pub fn label_ledger(&self) -> Vec<LabelLedger> {
+        self.label_ledger
+            .iter()
+            .map(|(label, &(ops, ea, eb, ta, tb))| LabelLedger {
+                label: label.clone(),
+                ops,
+                energy_a_j: ea,
+                energy_b_j: eb,
+                time_a_us: ta,
+                time_b_us: tb,
+            })
+            .collect()
     }
 
     /// Detach and return the sink (to inspect rotation counters or
@@ -801,8 +928,22 @@ impl StreamAuditor {
         if !content_ok {
             self.cum_content_bad += 1;
         }
+        // per-label pair-cost ledger: every matched pair attributed
+        // (cost accounting, independent of the quarantine-filtered
+        // waste ledger)
+        if let Some(cell) = self.label_ledger.get_mut(&a.label) {
+            cell.0 += 1;
+            cell.1 += a.energy_j;
+            cell.2 += b.energy_j;
+            cell.3 += a.time_us;
+            cell.4 += b.time_us;
+        } else {
+            self.label_ledger
+                .insert(a.label.clone(), (1, a.energy_j, b.energy_j, a.time_us, b.time_us));
+        }
         let pair = PairCost {
             label: a.label,
+            shash: a.shash,
             energy_a_j: a.energy_j,
             energy_b_j: b.energy_j,
             time_a_us: a.time_us,
@@ -813,6 +954,7 @@ impl StreamAuditor {
         self.win_e_b += pair.energy_b_j;
         self.win_t_a += pair.time_a_us;
         self.win_t_b += pair.time_b_us;
+        self.win_fp = self.win_fp.wrapping_add(mix64(pair.shash));
         if !pair.content_ok {
             self.win_content_bad += 1;
         }
@@ -823,6 +965,7 @@ impl StreamAuditor {
             self.win_e_b -= old.energy_b_j;
             self.win_t_a -= old.time_a_us;
             self.win_t_b -= old.time_b_us;
+            self.win_fp = self.win_fp.wrapping_sub(mix64(old.shash));
             if !old.content_ok {
                 self.win_content_bad -= 1;
             }
@@ -976,6 +1119,7 @@ impl StreamAuditor {
             resyncs: self.window_resyncs,
             quarantined,
             content_mismatches: self.win_content_bad,
+            window_fp: self.win_fp,
         }
     }
 
@@ -1103,6 +1247,15 @@ impl StreamAuditor {
         }
         let summary = self.summary();
         self.sink_summary(&summary);
+        // the per-label ledger rides behind the summary so a persisted
+        // session can be differenced against another deploy's ledger
+        let ledger = self.label_ledger();
+        if let Some((pair, sink)) = &mut self.sink {
+            let snap = Snapshot::Ledger { pair: pair.clone(), entries: ledger };
+            if sink.append(&snap).is_err() {
+                self.sink_errors += 1;
+            }
+        }
         summary
     }
 }
@@ -1391,6 +1544,98 @@ mod tests {
         // different structure -> different fingerprint
         let s3 = run(&[0.1, 0.2]);
         assert_ne!(s1.fingerprint_a, s3.fingerprint_a);
+    }
+
+    /// Window fingerprints are stable workload identities: two
+    /// independent audits of the same workload emit bit-identical
+    /// fingerprint sequences, and a different workload emits different
+    /// ones — the property `magneton diff` aligns sessions by.
+    #[test]
+    fn window_fingerprints_reproduce_across_independent_audits() {
+        let cfg = || StreamConfig {
+            window_ops: 50,
+            hop_ops: 50,
+            ring_cap: 64,
+            nvml: None,
+            ..Default::default()
+        };
+        let (_, r1) = run_with_skip(cfg(), 500, None);
+        let (_, r2) = run_with_skip(cfg(), 500, None);
+        let f1: Vec<u64> = r1.iter().map(|w| w.window_fp).collect();
+        let f2: Vec<u64> = r2.iter().map(|w| w.window_fp).collect();
+        assert_eq!(f1.len(), 10);
+        assert_eq!(f1, f2, "same workload must emit the same window fingerprints");
+        // a structurally different stream fingerprints differently
+        let mut aud = StreamAuditor::new(cfg(), 90.0);
+        let mut t = 0.0;
+        for _ in 0..50 {
+            let r = rec("other.label", OpKind::MatMul, 0.1, 100.0);
+            aud.ingest_a(&r, seg_after(t, 100.0, 1000.0));
+            aud.ingest_b(&r, seg_after(t, 100.0, 1000.0));
+            t += 100.0;
+        }
+        let other = aud.take_emitted();
+        assert_eq!(other.len(), 1);
+        assert_ne!(other[0].window_fp, f1[0]);
+    }
+
+    /// The static program signature agrees with a manual fold over the
+    /// op sequence the executor emits — the contract that makes a
+    /// pre-stream `SessionHeader` honest about the workload.
+    #[test]
+    fn program_workload_sig_matches_manual_fold() {
+        use crate::workload::{serving_stream_program, ServingStream};
+        let spec = ServingStream { requests: 7, batch: 4, d_model: 8 };
+        let mut rng = crate::util::Prng::new(3);
+        let prog = serving_stream_program(&mut rng, &spec);
+        let sig = workload_sig_of_program(&prog);
+        assert_eq!(sig.total_ops(), spec.kernel_ops());
+        let mut manual = WorkloadSig::new();
+        for _ in 0..spec.requests {
+            manual.add("serve.proj", "matmul");
+            manual.add("serve.scale", "scale");
+            manual.add("serve.act", "gelu");
+            manual.add("serve.out", "matmul");
+            manual.add("serve.softmax", "softmax");
+        }
+        assert_eq!(sig.fp(), manual.fp());
+        assert_eq!(sig.label_counts(), manual.label_counts());
+        // zero-copy metadata ops (no kernel record) are excluded, so
+        // the static fingerprint matches the observable stream
+        let mut g = crate::graph::Graph::new("meta");
+        let x = g.add(OpKind::Input, &[], "x");
+        let p = g.add_attr1(OpKind::Permute, &[x], "perm", "perm", "1,0");
+        let m = g.add(OpKind::Gelu, &[p], "act");
+        g.add(OpKind::Output, &[m], "out");
+        let meta_sig = workload_sig_of_program(&Program::new(g));
+        assert_eq!(meta_sig.total_ops(), 1, "permute must not count as a kernel op");
+        assert_eq!(meta_sig.label_counts(), vec![("act".to_string(), 1)]);
+        // the config digest separates detection-relevant configs
+        let base = StreamConfig { nvml: None, ..Default::default() };
+        let mut other = base.clone();
+        other.window_ops = base.window_ops + 1;
+        assert_ne!(base.digest(), other.digest());
+        assert_eq!(base.digest(), StreamConfig { nvml: None, ..Default::default() }.digest());
+    }
+
+    /// The per-label ledger attributes every matched pair exactly once
+    /// and sums back to the cumulative energies.
+    #[test]
+    fn label_ledger_sums_to_cumulative_energies() {
+        let cfg = StreamConfig { window_ops: 25, hop_ops: 25, nvml: None, ..Default::default() };
+        let (mut aud, _) = run_with_skip(cfg, 200, None);
+        let s = aud.finish();
+        let ledger = aud.label_ledger();
+        assert_eq!(ledger.len(), 5, "five cycle labels");
+        assert_eq!(ledger.iter().map(|e| e.ops).sum::<usize>(), s.ops);
+        let ea: f64 = ledger.iter().map(|e| e.energy_a_j).sum();
+        let eb: f64 = ledger.iter().map(|e| e.energy_b_j).sum();
+        assert!((ea - s.energy_a_j).abs() < 1e-9);
+        assert!((eb - s.energy_b_j).abs() < 1e-9);
+        // label-sorted, per-label counts match the cycle shares
+        for e in &ledger {
+            assert_eq!(e.ops, 40, "{}", e.label);
+        }
     }
 
     #[test]
@@ -1798,6 +2043,7 @@ mod tests {
         assert_eq!(aud.sink_errors(), 0);
         let snaps = load_dir(&dir).expect("snapshots load back");
         let (mut windows, mut resyncs, mut summaries) = (0usize, 0usize, Vec::new());
+        let mut ledgers = Vec::new();
         for s in snaps {
             match s {
                 Snapshot::Window { pair, .. } => {
@@ -1809,12 +2055,20 @@ mod tests {
                     resyncs += 1;
                 }
                 Snapshot::Summary { summary, .. } => summaries.push(summary),
+                Snapshot::Ledger { entries, .. } => ledgers.push(entries),
                 other => panic!("unexpected snapshot {other:?}"),
             }
         }
         assert_eq!(windows, live.windows, "every emitted window must be persisted");
         assert_eq!(resyncs, 1);
         assert_eq!(summaries.len(), 1, "finish persists exactly one summary");
+        assert_eq!(ledgers.len(), 1, "finish persists exactly one per-label ledger");
+        // the persisted ledger sums back to the exact cumulative
+        // energies of the matched pairs
+        let led_ops: usize = ledgers[0].iter().map(|e| e.ops).sum();
+        assert_eq!(led_ops, live.ops);
+        let led_e_a: f64 = ledgers[0].iter().map(|e| e.energy_a_j).sum();
+        assert!((led_e_a - summaries[0].energy_a_j).abs() < 1e-9 * summaries[0].energy_a_j.max(1.0));
         let s = &summaries[0];
         assert_eq!(s.wasted_j.to_bits(), live.wasted_j.to_bits(), "ledger must be bit-identical");
         assert_eq!(s.fingerprint_a, live.fingerprint_a);
@@ -1845,10 +2099,10 @@ mod tests {
             aud.ingest_b(&r, seg_after(t, 100.0, 1000.0));
             t += 100.0;
         }
-        aud.finish(); // 2 windows + 1 summary
+        aud.finish(); // 2 windows + 1 summary + 1 ledger
         let sink = aud.take_sink().expect("sink was attached");
         let first_session_written = sink.written;
-        assert_eq!(first_session_written, 3);
+        assert_eq!(first_session_written, 4);
         assert!(aud.take_sink().is_none(), "take_sink must detach");
         // session restart: a fresh auditor continues the series
         let mut aud2 = StreamAuditor::new(cfg, 90.0);
@@ -1859,9 +2113,9 @@ mod tests {
             aud2.ingest_b(&r, seg_after(t2, 100.0, 1000.0));
             t2 += 100.0;
         }
-        aud2.finish(); // 1 window + 1 summary more
+        aud2.finish(); // 1 window + 1 summary + 1 ledger more
         let sink2 = aud2.take_sink().expect("sink attached to second auditor");
-        assert_eq!(sink2.written, first_session_written + 2, "accounting must carry over");
+        assert_eq!(sink2.written, first_session_written + 3, "accounting must carry over");
         // the combined series replays as one: both sessions' snapshots,
         // in write order
         let snaps = load_dir(&dir).expect("combined series loads");

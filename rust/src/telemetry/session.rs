@@ -1,0 +1,899 @@
+//! Cross-session workload matching and differential replay — the
+//! longitudinal arm of the paper's differential model.
+//!
+//! The batch and streaming auditors compare two *systems* running the
+//! same workload at the same time. Production regressions more often
+//! arrive the other way round: the **same system, days apart** — a new
+//! deploy, a config push, a driver update — quietly spending more
+//! energy on the same traffic. This module turns the persisted snapshot
+//! store ([`crate::telemetry`]) into that comparison:
+//!
+//! * [`SessionInfo`] loads one snapshot directory as a *session*: its
+//!   [`SessionHeader`]s (one per sink scope, deduped across rotation
+//!   re-writes), replayed reports, and per-label ledgers;
+//! * [`SessionIndex::scan`] loads many directories and
+//!   [`SessionIndex::groups`] clusters the sessions whose workload
+//!   fingerprints match — exactly, or tolerantly on label-multiset
+//!   overlap for partially-overlapping runs;
+//! * [`diff_sessions`] pairs two sessions of the same workload: it
+//!   refuses incomparable pairs with a reasoned diagnostic, re-anchors
+//!   their persisted window sequences by matched-op position (the same
+//!   minimal-skip logic the live resync uses, applied to persisted
+//!   window fingerprints instead of pending op queues), and runs the
+//!   differential detector over the paired per-label energy ledgers,
+//!   producing a ranked [`SessionDiff`]
+//!   ([`crate::report::render_session_diff`], `magneton diff`).
+//!
+//! Side convention: within each session, side A is the system under
+//! audit and side B its in-session reference, so the cross-session
+//! comparison differences the two sessions' **side-A** ledgers (and
+//! reports each session's own waste verdicts alongside).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::telemetry::{Replay, SessionHeader};
+use crate::{Error, Result};
+
+/// One snapshot directory loaded as a session.
+pub struct SessionInfo {
+    pub dir: PathBuf,
+    /// Distinct per-scope headers (a `magneton stream` directory holds
+    /// the single pair's scope plus one per fleet pair).
+    pub headers: Vec<SessionHeader>,
+    pub replay: Replay,
+}
+
+impl SessionInfo {
+    /// Load a snapshot directory as one session. Fails when the
+    /// directory has no [`SessionHeader`] (written by sinks configured
+    /// with a session identity), when two headers claim the same scope
+    /// with different content (two sessions mixed into one directory),
+    /// or when the headers disagree on the session identity.
+    pub fn load(dir: &Path) -> Result<SessionInfo> {
+        let replay = Replay::load(dir)?;
+        let headers = replay.sessions.clone();
+        if headers.is_empty() {
+            return Err(Error::msg(format!(
+                "{}: no session header found — the directory was persisted without a session \
+                 identity (re-run `magneton stream --snapshot-dir` with --session-id, or an \
+                 auditor with a session header set)",
+                dir.display()
+            )));
+        }
+        let mut scopes: BTreeMap<&str, &SessionHeader> = BTreeMap::new();
+        for h in &headers {
+            if let Some(prev) = scopes.insert(h.scope.as_str(), h) {
+                if *prev != *h {
+                    return Err(Error::msg(format!(
+                        "{}: conflicting session headers for scope `{}` — the directory mixes \
+                         more than one session (use a fresh directory per run)",
+                        dir.display(),
+                        h.scope
+                    )));
+                }
+            }
+            if h.session_id != headers[0].session_id || h.deploy_tag != headers[0].deploy_tag {
+                return Err(Error::msg(format!(
+                    "{}: headers disagree on the session identity (`{}` vs `{}`)",
+                    dir.display(),
+                    headers[0].session_id,
+                    h.session_id
+                )));
+            }
+        }
+        Ok(SessionInfo { dir: dir.to_path_buf(), headers, replay })
+    }
+
+    pub fn session_id(&self) -> &str {
+        &self.headers[0].session_id
+    }
+
+    pub fn deploy_tag(&self) -> &str {
+        &self.headers[0].deploy_tag
+    }
+
+    /// Combined workload fingerprint across the session's scopes (the
+    /// commutative multiset fold, so scope order is irrelevant).
+    pub fn combined_fp(&self) -> u64 {
+        self.headers.iter().fold(0u64, |acc, h| acc.wrapping_add(h.workload_fp))
+    }
+
+    /// Total kernel ops across the session's scopes.
+    pub fn total_ops(&self) -> usize {
+        self.headers.iter().map(|h| h.total_ops).sum()
+    }
+
+    /// Combined per-label op counts across scopes.
+    pub fn label_counts(&self) -> BTreeMap<String, usize> {
+        let mut out = BTreeMap::new();
+        for h in &self.headers {
+            for (label, n) in &h.labels {
+                *out.entry(label.clone()).or_insert(0) += n;
+            }
+        }
+        out
+    }
+
+    /// Display name: `session_id` plus the deploy tag when present.
+    pub fn display_name(&self) -> String {
+        if self.deploy_tag().is_empty() {
+            self.session_id().to_string()
+        } else {
+            format!("{} ({})", self.session_id(), self.deploy_tag())
+        }
+    }
+
+    /// Aggregated per-label side costs across the session's pairs
+    /// (latest ledger per pair): `label -> (ops, energy_a, energy_b)`.
+    fn aggregated_ledger(&self) -> BTreeMap<String, (usize, f64, f64)> {
+        let mut out: BTreeMap<String, (usize, f64, f64)> = BTreeMap::new();
+        for pair in self.pair_names_with_ledgers() {
+            let Some(entries) = self.replay.ledger_of(&pair) else { continue };
+            for e in entries {
+                let cell = out.entry(e.label.clone()).or_insert((0, 0.0, 0.0));
+                cell.0 += e.ops;
+                cell.1 += e.energy_a_j;
+                cell.2 += e.energy_b_j;
+            }
+        }
+        out
+    }
+
+    /// Distinct pair names that persisted a ledger, in first-seen order.
+    fn pair_names_with_ledgers(&self) -> Vec<String> {
+        let mut seen = Vec::new();
+        for (pair, _) in &self.replay.ledgers {
+            if !seen.iter().any(|p| p == pair) {
+                seen.push(pair.clone());
+            }
+        }
+        seen
+    }
+
+    /// Aggregated per-label ledgered waste across the session's pairs
+    /// (latest summary per pair): `label -> wasted_j`.
+    fn aggregated_waste(&self) -> BTreeMap<String, f64> {
+        let mut out: BTreeMap<String, f64> = BTreeMap::new();
+        for pair in self.pair_names_with_summaries() {
+            let Some(s) = self.replay.summary_of(&pair) else { continue };
+            for (label, j, _) in &s.top_labels {
+                *out.entry(label.clone()).or_insert(0.0) += j;
+            }
+        }
+        out
+    }
+
+    fn pair_names_with_summaries(&self) -> Vec<String> {
+        let mut seen = Vec::new();
+        for (pair, _) in &self.replay.summaries {
+            if !seen.iter().any(|p| p == pair) {
+                seen.push(pair.clone());
+            }
+        }
+        seen
+    }
+
+    /// Total ledgered waste and resync count across pairs.
+    fn aggregated_summary_counters(&self) -> (f64, usize) {
+        let mut wasted = 0.0;
+        let mut resyncs = 0;
+        for pair in self.pair_names_with_summaries() {
+            if let Some(s) = self.replay.summary_of(&pair) {
+                wasted += s.wasted_j;
+                resyncs += s.resyncs;
+            }
+        }
+        (wasted, resyncs)
+    }
+}
+
+/// How strictly two sessions must agree to be considered the same
+/// workload.
+#[derive(Clone, Copy, Debug)]
+pub enum MatchMode {
+    /// Identical combined fingerprints and op counts.
+    Exact,
+    /// Label-multiset overlap of at least `min_overlap` (partially
+    /// overlapping runs: a deploy that added or removed some call
+    /// sites but mostly serves the same traffic).
+    Tolerant { min_overlap: f64 },
+}
+
+/// Outcome of matching two sessions' workload fingerprints.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MatchVerdict {
+    /// Bit-identical combined fingerprints (and op counts).
+    Exact,
+    /// Fingerprints differ but the label multisets overlap by this
+    /// fraction (≥ the tolerant threshold).
+    Tolerant { overlap: f64 },
+    /// The sessions did not run the same workload; the reason explains
+    /// why (and is what `magneton diff` prints when refusing).
+    Incomparable { reason: String },
+}
+
+/// Weighted label-multiset overlap of two sessions:
+/// `Σ_label min(ops_a, ops_b) / max(total_a, total_b)` — 1.0 for
+/// identical multisets, 0.0 for disjoint ones.
+pub fn label_overlap(a: &BTreeMap<String, usize>, b: &BTreeMap<String, usize>) -> f64 {
+    let total_a: usize = a.values().sum();
+    let total_b: usize = b.values().sum();
+    let denom = total_a.max(total_b);
+    if denom == 0 {
+        return 0.0;
+    }
+    let shared: usize = a
+        .iter()
+        .map(|(label, &na)| na.min(b.get(label).copied().unwrap_or(0)))
+        .sum();
+    shared as f64 / denom as f64
+}
+
+/// The largest per-label count differences between two multisets, for
+/// diagnostics: `(label, ops_a, ops_b)`, biggest absolute gap first.
+fn top_label_gaps(
+    a: &BTreeMap<String, usize>,
+    b: &BTreeMap<String, usize>,
+    top: usize,
+) -> Vec<(String, usize, usize)> {
+    let mut gaps: Vec<(String, usize, usize)> = a
+        .iter()
+        .map(|(l, &na)| (l.clone(), na, b.get(l).copied().unwrap_or(0)))
+        .chain(
+            b.iter()
+                .filter(|(l, _)| !a.contains_key(*l))
+                .map(|(l, &nb)| (l.clone(), 0, nb)),
+        )
+        .filter(|&(_, na, nb)| na != nb)
+        .collect();
+    gaps.sort_by(|x, y| {
+        let gx = x.1.abs_diff(x.2);
+        let gy = y.1.abs_diff(y.2);
+        gy.cmp(&gx).then_with(|| x.0.cmp(&y.0))
+    });
+    gaps.truncate(top);
+    gaps
+}
+
+/// Match two sessions' workload fingerprints under `mode`.
+pub fn match_sessions(a: &SessionInfo, b: &SessionInfo, mode: MatchMode) -> MatchVerdict {
+    if a.total_ops() == 0 || b.total_ops() == 0 {
+        return MatchVerdict::Incomparable {
+            reason: "a session declares zero kernel ops — nothing to compare".to_string(),
+        };
+    }
+    if a.combined_fp() == b.combined_fp() && a.total_ops() == b.total_ops() {
+        return MatchVerdict::Exact;
+    }
+    let la = a.label_counts();
+    let lb = b.label_counts();
+    let overlap = label_overlap(&la, &lb);
+    match mode {
+        MatchMode::Tolerant { min_overlap } if overlap >= min_overlap => {
+            MatchVerdict::Tolerant { overlap }
+        }
+        _ => {
+            let gaps = top_label_gaps(&la, &lb, 4);
+            let gap_lines: Vec<String> = gaps
+                .iter()
+                .map(|(l, na, nb)| format!("`{l}` {na} vs {nb} ops"))
+                .collect();
+            let hint = match mode {
+                MatchMode::Exact => {
+                    "; pass --tolerant to match partially-overlapping runs".to_string()
+                }
+                MatchMode::Tolerant { min_overlap } => {
+                    format!(" (below the tolerant threshold {:.0}%)", min_overlap * 100.0)
+                }
+            };
+            MatchVerdict::Incomparable {
+                reason: format!(
+                    "workload fingerprints do not match: {:016x} ({} ops) vs {:016x} ({} ops), \
+                     label-multiset overlap {:.1}%{}{}",
+                    a.combined_fp(),
+                    a.total_ops(),
+                    b.combined_fp(),
+                    b.total_ops(),
+                    overlap * 100.0,
+                    if gap_lines.is_empty() {
+                        String::new()
+                    } else {
+                        format!("; largest gaps: {}", gap_lines.join(", "))
+                    },
+                    hint
+                ),
+            }
+        }
+    }
+}
+
+/// An index over persisted sessions (one per scanned directory).
+pub struct SessionIndex {
+    pub sessions: Vec<SessionInfo>,
+}
+
+impl SessionIndex {
+    /// Load every directory as one session.
+    pub fn scan(dirs: &[PathBuf]) -> Result<SessionIndex> {
+        let mut sessions = Vec::new();
+        for dir in dirs {
+            sessions.push(SessionInfo::load(dir)?);
+        }
+        Ok(SessionIndex { sessions })
+    }
+
+    /// Group session indices whose workloads match under `mode`
+    /// (greedy: the first unclaimed session seeds a group and absorbs
+    /// every later session matching it). Deterministic in scan order.
+    pub fn groups(&self, mode: MatchMode) -> Vec<Vec<usize>> {
+        let mut claimed = vec![false; self.sessions.len()];
+        let mut out = Vec::new();
+        for i in 0..self.sessions.len() {
+            if claimed[i] {
+                continue;
+            }
+            claimed[i] = true;
+            let mut group = vec![i];
+            for j in i + 1..self.sessions.len() {
+                if claimed[j] {
+                    continue;
+                }
+                let v = match_sessions(&self.sessions[i], &self.sessions[j], mode);
+                if !matches!(v, MatchVerdict::Incomparable { .. }) {
+                    claimed[j] = true;
+                    group.push(j);
+                }
+            }
+            out.push(group);
+        }
+        out
+    }
+}
+
+/// Configuration of a cross-session diff.
+#[derive(Clone, Debug)]
+pub struct DiffConfig {
+    pub mode: MatchMode,
+    /// Minimum relative per-label energy delta for the renderer to mark
+    /// a row REGRESSED/improved (mirrors the detector's threshold).
+    pub energy_threshold: f64,
+    /// Bounded lookahead of the window re-anchoring search.
+    pub align_lookahead: usize,
+}
+
+impl Default for DiffConfig {
+    fn default() -> DiffConfig {
+        DiffConfig { mode: MatchMode::Exact, energy_threshold: 0.10, align_lookahead: 16 }
+    }
+}
+
+/// One label's cross-session energy delta (session B minus session A,
+/// on each session's side-A ledger).
+#[derive(Clone, Debug)]
+pub struct LabelDelta {
+    pub label: String,
+    pub ops_a: usize,
+    pub ops_b: usize,
+    /// Session A's audited-side energy under this label.
+    pub energy_a_j: f64,
+    /// Session B's audited-side energy under this label.
+    pub energy_b_j: f64,
+    /// `energy_b_j - energy_a_j`: positive = the newer session spends
+    /// more on the same label (a regression candidate).
+    pub delta_j: f64,
+    /// `|delta_j| / max(energy_a_j, energy_b_j)`.
+    pub delta_frac: f64,
+    /// Each session's own ledgered waste under this label (vs its
+    /// in-session reference side).
+    pub waste_a_j: f64,
+    pub waste_b_j: f64,
+}
+
+/// How the two sessions' persisted window sequences aligned.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WindowAlignment {
+    /// Window pairs whose fingerprints matched positionally.
+    pub aligned: usize,
+    /// Re-anchoring events (a minimal-skip anchor was found).
+    pub realigns: usize,
+    /// Windows skipped from session A to re-anchor (tail surplus
+    /// included).
+    pub skipped_a: usize,
+    /// Windows skipped from session B.
+    pub skipped_b: usize,
+    /// Positions force-advanced with no anchor inside the lookahead.
+    pub forced: usize,
+}
+
+/// A ranked cross-session regression report.
+pub struct SessionDiff {
+    pub session_a: String,
+    pub session_b: String,
+    pub verdict: MatchVerdict,
+    /// Comparability caveats (config digest mismatch, arrival mismatch,
+    /// per-label op-count drift) — flagged, not fatal.
+    pub notes: Vec<String>,
+    /// Labels present in both sessions, ranked regressions-first
+    /// (`delta_j` descending).
+    pub labels: Vec<LabelDelta>,
+    /// Labels only session B ran: `(label, energy_b_j)`, energy
+    /// descending.
+    pub new_labels: Vec<(String, f64)>,
+    /// Labels only session A ran: `(label, energy_a_j)`.
+    pub vanished_labels: Vec<(String, f64)>,
+    /// Audited-side session totals.
+    pub total_a_j: f64,
+    pub total_b_j: f64,
+    /// Each session's own ledgered waste total.
+    pub wasted_a_j: f64,
+    pub wasted_b_j: f64,
+    /// Divergence-event deltas: per-session resync and fleet-divergence
+    /// counts.
+    pub resyncs_a: usize,
+    pub resyncs_b: usize,
+    pub divergences_a: usize,
+    pub divergences_b: usize,
+    /// Window-sequence alignment summed over the pairs common to both
+    /// sessions.
+    pub windows: WindowAlignment,
+    /// The render threshold the diff was computed under.
+    pub energy_threshold: f64,
+}
+
+impl SessionDiff {
+    /// Largest relative per-label regression (0.0 when session B
+    /// improved or held everywhere).
+    pub fn max_regression_frac(&self) -> f64 {
+        self.labels
+            .iter()
+            .filter(|d| d.delta_j > 0.0)
+            .map(|d| d.delta_frac)
+            .fold(0.0, f64::max)
+    }
+
+    /// Relative session-level energy delta (positive = session B
+    /// spends more overall).
+    pub fn total_delta_frac(&self) -> f64 {
+        let denom = self.total_a_j.max(self.total_b_j);
+        if denom <= 0.0 {
+            0.0
+        } else {
+            (self.total_b_j - self.total_a_j) / denom
+        }
+    }
+
+    /// The `--regress-threshold` gate: true when the session-level
+    /// delta or any single label regressed by at least `threshold`.
+    pub fn regressed(&self, threshold: f64) -> bool {
+        self.total_delta_frac() >= threshold || self.max_regression_frac() >= threshold
+    }
+}
+
+/// Re-anchor two persisted window-fingerprint sequences by matched-op
+/// position: positional pairing while fingerprints agree, and on a
+/// mismatch a minimal-total-skip anchor search over a bounded lookahead
+/// — the same shape as the live resync, run over persisted windows
+/// instead of pending op queues.
+pub fn align_windows(a: &[u64], b: &[u64], lookahead: usize) -> WindowAlignment {
+    let mut out = WindowAlignment::default();
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        if a[i] == b[j] {
+            out.aligned += 1;
+            i += 1;
+            j += 1;
+            continue;
+        }
+        // minimal total surplus first: the cheapest explanation of the
+        // divergence, exactly like the live anchor search
+        let mut found = None;
+        'search: for d in 1..=(2 * lookahead.max(1)) {
+            let lo = d.saturating_sub(lookahead);
+            for da in lo..=d.min(lookahead) {
+                let db = d - da;
+                if i + da < a.len() && j + db < b.len() && a[i + da] == b[j + db] {
+                    found = Some((da, db));
+                    break 'search;
+                }
+            }
+        }
+        match found {
+            Some((da, db)) => {
+                out.realigns += 1;
+                out.skipped_a += da;
+                out.skipped_b += db;
+                i += da;
+                j += db;
+            }
+            None => {
+                out.forced += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    // unmatched tails never aligned
+    out.skipped_a += a.len() - i;
+    out.skipped_b += b.len() - j;
+    out
+}
+
+/// Pair names common to both sessions' persisted windows, in session
+/// A's first-seen order.
+fn common_window_pairs(a: &SessionInfo, b: &SessionInfo) -> Vec<String> {
+    let mut names = Vec::new();
+    for (pair, _) in &a.replay.windows {
+        if !names.iter().any(|n| n == pair) && b.replay.windows.iter().any(|(p, _)| p == pair) {
+            names.push(pair.clone());
+        }
+    }
+    names
+}
+
+/// Diff two persisted sessions of the same workload. Refuses
+/// incomparable sessions with the match diagnostic as the error; on a
+/// match, differences the aggregated side-A label ledgers, aligns the
+/// common pairs' window sequences, and returns the ranked
+/// [`SessionDiff`].
+pub fn diff_sessions(a: &SessionInfo, b: &SessionInfo, cfg: &DiffConfig) -> Result<SessionDiff> {
+    let verdict = match_sessions(a, b, cfg.mode);
+    if let MatchVerdict::Incomparable { reason } = &verdict {
+        return Err(Error::msg(format!(
+            "sessions {} and {} are not comparable: {reason}",
+            a.display_name(),
+            b.display_name()
+        )));
+    }
+    let ledger_a = a.aggregated_ledger();
+    let ledger_b = b.aggregated_ledger();
+    if ledger_a.is_empty() || ledger_b.is_empty() {
+        return Err(Error::msg(
+            "a session has no persisted per-label ledger (`finish` never ran or the directory \
+             predates ledger snapshots) — nothing to difference",
+        ));
+    }
+    let waste_a = a.aggregated_waste();
+    let waste_b = b.aggregated_waste();
+
+    let mut notes = Vec::new();
+    // config digests decide whether window sequences are comparable
+    let digests_match = {
+        let da: Vec<u64> = a.headers.iter().map(|h| h.config_digest).collect();
+        let db: Vec<u64> = b.headers.iter().map(|h| h.config_digest).collect();
+        da.iter().all(|d| db.contains(d)) && db.iter().all(|d| da.contains(d))
+    };
+    if !digests_match {
+        notes.push(
+            "stream/detect configs differ between the sessions: window alignment skipped, \
+             ledger deltas remain valid"
+                .to_string(),
+        );
+    }
+    let arrivals_a: Vec<&str> = a.headers.iter().map(|h| h.arrival.as_str()).collect();
+    let arrivals_b: Vec<&str> = b.headers.iter().map(|h| h.arrival.as_str()).collect();
+    if arrivals_a != arrivals_b {
+        notes.push(format!(
+            "arrival processes differ ({} vs {}): idle-power timelines are not comparable, \
+             per-op energies are",
+            arrivals_a.join("/"),
+            arrivals_b.join("/")
+        ));
+    }
+
+    let mut labels = Vec::new();
+    let mut vanished_labels = Vec::new();
+    let mut drifted = 0usize;
+    for (label, &(ops_a, ea, _)) in &ledger_a {
+        match ledger_b.get(label) {
+            Some(&(ops_b, eb, _)) => {
+                if ops_a != ops_b {
+                    drifted += 1;
+                }
+                let delta_j = eb - ea;
+                let denom = ea.max(eb);
+                labels.push(LabelDelta {
+                    label: label.clone(),
+                    ops_a,
+                    ops_b,
+                    energy_a_j: ea,
+                    energy_b_j: eb,
+                    delta_j,
+                    delta_frac: if denom > 0.0 { delta_j.abs() / denom } else { 0.0 },
+                    waste_a_j: waste_a.get(label).copied().unwrap_or(0.0),
+                    waste_b_j: waste_b.get(label).copied().unwrap_or(0.0),
+                });
+            }
+            None => vanished_labels.push((label.clone(), ea)),
+        }
+    }
+    let mut new_labels: Vec<(String, f64)> = ledger_b
+        .iter()
+        .filter(|(label, _)| !ledger_a.contains_key(*label))
+        .map(|(label, &(_, eb, _))| (label.clone(), eb))
+        .collect();
+    if drifted > 0 {
+        notes.push(format!(
+            "{drifted} label(s) ran different op counts across the sessions (resyncs or \
+             tolerant matching): their absolute deltas include the count drift"
+        ));
+    }
+    // rank regressions first (largest ΔJ down), improvements last
+    labels.sort_by(|x, y| y.delta_j.total_cmp(&x.delta_j).then_with(|| x.label.cmp(&y.label)));
+    new_labels.sort_by(|x, y| y.1.total_cmp(&x.1).then_with(|| x.0.cmp(&y.0)));
+    vanished_labels.sort_by(|x, y| y.1.total_cmp(&x.1).then_with(|| x.0.cmp(&y.0)));
+
+    let windows = if digests_match {
+        let mut total = WindowAlignment::default();
+        for pair in common_window_pairs(a, b) {
+            let fps = |s: &SessionInfo| -> Vec<u64> {
+                s.replay
+                    .windows
+                    .iter()
+                    .filter(|(p, _)| *p == pair)
+                    .map(|(_, w)| w.window_fp)
+                    .collect()
+            };
+            let al = align_windows(&fps(a), &fps(b), cfg.align_lookahead);
+            total.aligned += al.aligned;
+            total.realigns += al.realigns;
+            total.skipped_a += al.skipped_a;
+            total.skipped_b += al.skipped_b;
+            total.forced += al.forced;
+        }
+        total
+    } else {
+        WindowAlignment::default()
+    };
+
+    let (wasted_a_j, resyncs_a) = a.aggregated_summary_counters();
+    let (wasted_b_j, resyncs_b) = b.aggregated_summary_counters();
+    let total_a_j: f64 = ledger_a.values().map(|&(_, ea, _)| ea).sum();
+    let total_b_j: f64 = ledger_b.values().map(|&(_, eb, _)| eb).sum();
+    Ok(SessionDiff {
+        session_a: a.display_name(),
+        session_b: b.display_name(),
+        verdict,
+        notes,
+        labels,
+        new_labels,
+        vanished_labels,
+        total_a_j,
+        total_b_j,
+        wasted_a_j,
+        wasted_b_j,
+        resyncs_a,
+        resyncs_b,
+        divergences_a: a.replay.divergences.len(),
+        divergences_b: b.replay.divergences.len(),
+        windows,
+        energy_threshold: cfg.energy_threshold,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fingerprint::WorkloadSig;
+    use crate::telemetry::{SinkConfig, SnapshotSink};
+
+    fn sig_of(ops: &[(&str, &str, usize)]) -> WorkloadSig {
+        let mut sig = WorkloadSig::new();
+        for &(label, op, n) in ops {
+            for _ in 0..n {
+                sig.add(label, op);
+            }
+        }
+        sig
+    }
+
+    fn header(id: &str, scope: &str, ops: &[(&str, &str, usize)]) -> SessionHeader {
+        SessionHeader::new(id, "", scope, &sig_of(ops), "steady", 0xc0ffee)
+    }
+
+    fn info(id: &str, ops: &[(&str, &str, usize)]) -> SessionInfo {
+        SessionInfo {
+            dir: PathBuf::from(format!("mem-{id}")),
+            headers: vec![header(id, "pair", ops)],
+            replay: Replay::default(),
+        }
+    }
+
+    const BASE: &[(&str, &str, usize)] =
+        &[("serve.proj", "matmul", 200), ("serve.act", "gelu", 200), ("serve.out", "matmul", 200)];
+
+    #[test]
+    fn exact_match_requires_identical_multisets() {
+        let a = info("a", BASE);
+        let b = info("b", BASE);
+        assert_eq!(match_sessions(&a, &b, MatchMode::Exact), MatchVerdict::Exact);
+        // order of scopes is irrelevant: split the same multiset in two
+        let mut split = info("c", &[("serve.proj", "matmul", 200)]);
+        split.headers.push(header(
+            "c",
+            "pair2",
+            &[("serve.act", "gelu", 200), ("serve.out", "matmul", 200)],
+        ));
+        assert_eq!(match_sessions(&a, &split, MatchMode::Exact), MatchVerdict::Exact);
+        // one extra op breaks exactness with a reasoned diagnostic
+        let c = info(
+            "d",
+            &[
+                ("serve.proj", "matmul", 201),
+                ("serve.act", "gelu", 200),
+                ("serve.out", "matmul", 200),
+            ],
+        );
+        let MatchVerdict::Incomparable { reason } = match_sessions(&a, &c, MatchMode::Exact)
+        else {
+            panic!("must be incomparable in exact mode");
+        };
+        assert!(reason.contains("serve.proj"), "{reason}");
+        assert!(reason.contains("--tolerant"), "{reason}");
+    }
+
+    #[test]
+    fn tolerant_match_accepts_partial_overlap_above_threshold() {
+        let a = info("a", BASE);
+        // 500 of 620 ops shared with `a` (overlap ≈ 0.806)
+        let b = info(
+            "b",
+            &[
+                ("serve.proj", "matmul", 200),
+                ("serve.act", "gelu", 200),
+                ("serve.out", "matmul", 100),
+                ("serve.extra", "softmax", 120),
+            ],
+        );
+        let v = match_sessions(&a, &b, MatchMode::Tolerant { min_overlap: 0.8 });
+        let MatchVerdict::Tolerant { overlap } = v else {
+            panic!("expected tolerant match, got {v:?}");
+        };
+        assert!((overlap - 500.0 / 620.0).abs() < 1e-12);
+        // a higher floor refuses the same pair, naming the overlap
+        let v = match_sessions(&a, &b, MatchMode::Tolerant { min_overlap: 0.9 });
+        let MatchVerdict::Incomparable { reason } = v else {
+            panic!("expected refusal above the floor");
+        };
+        assert!(reason.contains("80.6%"), "{reason}");
+        // disjoint workloads never match tolerantly
+        let c = info("c", &[("train.step", "matmul", 600)]);
+        assert!(matches!(
+            match_sessions(&a, &c, MatchMode::Tolerant { min_overlap: 0.1 }),
+            MatchVerdict::Incomparable { .. }
+        ));
+    }
+
+    #[test]
+    fn groups_cluster_matching_sessions() {
+        let idx = SessionIndex {
+            sessions: vec![
+                info("a", BASE),
+                info("b", &[("train.step", "matmul", 600)]),
+                info("c", BASE),
+                info("d", &[("train.step", "matmul", 600)]),
+            ],
+        };
+        let groups = idx.groups(MatchMode::Exact);
+        assert_eq!(groups, vec![vec![0, 2], vec![1, 3]]);
+    }
+
+    /// The window re-anchoring: one skipped window on either side costs
+    /// exactly one skip, and everything after re-aligns.
+    #[test]
+    fn align_windows_reanchors_after_skips() {
+        let a: Vec<u64> = (0..20).collect();
+        // b is missing window 7 and has an extra window after 14
+        let mut b: Vec<u64> = (0..20).filter(|&x| x != 7).collect();
+        b.insert(14, 999);
+        let al = align_windows(&a, &b, 8);
+        assert_eq!(al.aligned, 19, "all shared windows must align");
+        assert_eq!(al.realigns, 2);
+        assert_eq!(al.skipped_a, 1); // a's window 7 has no partner
+        assert_eq!(al.skipped_b, 1); // b's extra 999
+        assert_eq!(al.forced, 0);
+        // identical sequences align trivially
+        let id = align_windows(&a, &a, 8);
+        assert_eq!(id.aligned, 20);
+        assert_eq!(id.realigns + id.skipped_a + id.skipped_b + id.forced, 0);
+        // disjoint sequences force-advance without panicking
+        let c: Vec<u64> = (100..110).collect();
+        let disjoint = align_windows(&a[..10], &c, 4);
+        assert_eq!(disjoint.aligned, 0);
+        assert_eq!(disjoint.forced, 10);
+    }
+
+    /// End-to-end on real sinks: two in-memory-built sessions with a
+    /// per-label regression diff correctly, ranked regressed-first; the
+    /// diff is deterministic; incomparable sessions are refused.
+    #[test]
+    fn diff_ranks_injected_regression_first() {
+        use std::fs;
+        let base = std::env::temp_dir()
+            .join(format!("magneton-session-unit-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&base);
+        // build one persisted session: `scale` is the regressed label
+        // in session B (1.5x side-A energy), everything else equal
+        let build = |dir: &std::path::Path, id: &str, scale_e: f64| {
+            use crate::energy::Segment;
+            use crate::exec::KernelRecord;
+            use crate::graph::OpKind;
+            use crate::stream::{StreamAuditor, StreamConfig};
+            use crate::trace::Frame;
+            let cfg = StreamConfig { window_ops: 10, hop_ops: 10, nvml: None, ..Default::default() };
+            let mut aud = StreamAuditor::new(cfg.clone(), 90.0);
+            // sink + header attach BEFORE ingestion: windows are
+            // persisted at emission time, and the header must lead the
+            // series. The static multiset is known upfront here.
+            let mut sig = WorkloadSig::new();
+            for i in 0..100 {
+                let (label, op) = if i % 2 == 0 {
+                    ("serve.proj", crate::graph::OpKind::MatMul)
+                } else {
+                    ("serve.scale", crate::graph::OpKind::Mul)
+                };
+                sig.add(label, op.name());
+            }
+            let header = SessionHeader::new(id, "", "pair", &sig, "steady", cfg.digest());
+            aud.set_session_header(header);
+            aud.set_sink("pair", SnapshotSink::new(dir, "pair", SinkConfig::default()).unwrap());
+            for i in 0..100 {
+                let (label, op, e) = match i % 2 {
+                    0 => ("serve.proj", OpKind::MatMul, 0.30),
+                    _ => ("serve.scale", OpKind::Mul, scale_e),
+                };
+                let rec = |e: f64| KernelRecord {
+                    node: 0,
+                    op,
+                    label: label.to_string(),
+                    api: "api".into(),
+                    dispatch_key: op.name().to_string(),
+                    kernel: "k".into(),
+                    time_us: 100.0,
+                    energy_j: e,
+                    avg_power_w: e / 100e-6,
+                    corr_id: 0,
+                    bb_trace: vec![],
+                    call_path: vec![Frame::py("serve")],
+                    moments: vec![],
+                };
+                let t = i as f64 * 100.0;
+                let seg = |e: f64| Segment { t_start_us: t, t_end_us: t + 100.0, watts: e / 100e-6 };
+                aud.ingest_a(&rec(e), seg(e));
+                // the in-session reference side is always clean
+                let e_ref = if i % 2 == 0 { 0.30 } else { 0.02 };
+                aud.ingest_b(&rec(e_ref), seg(e_ref));
+            }
+            aud.finish();
+            assert_eq!(aud.sink_errors(), 0);
+        };
+        let dir_a = base.join("a");
+        let dir_b = base.join("b");
+        build(&dir_a, "deploy-a", 0.02);
+        build(&dir_b, "deploy-b", 0.03); // +50 % on serve.scale
+        let a = SessionInfo::load(&dir_a).unwrap();
+        let b = SessionInfo::load(&dir_b).unwrap();
+        assert_eq!(a.session_id(), "deploy-a");
+        let diff = diff_sessions(&a, &b, &DiffConfig::default()).unwrap();
+        assert_eq!(diff.verdict, MatchVerdict::Exact);
+        assert_eq!(diff.labels.len(), 2);
+        assert_eq!(diff.labels[0].label, "serve.scale", "regressed label must rank first");
+        assert!(diff.labels[0].delta_j > 0.0);
+        assert!((diff.labels[0].delta_frac - 1.0 / 3.0).abs() < 1e-9);
+        assert_eq!(diff.labels[1].delta_j, 0.0);
+        assert!(diff.regressed(0.05));
+        assert!(!diff.regressed(0.50));
+        // windows aligned cleanly (same config digest, same workload)
+        assert_eq!(diff.windows.aligned, 10);
+        assert_eq!(diff.windows.forced, 0);
+        // deterministic: a second load + diff produces identical deltas
+        let diff2 = diff_sessions(
+            &SessionInfo::load(&dir_a).unwrap(),
+            &SessionInfo::load(&dir_b).unwrap(),
+            &DiffConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(diff.labels[0].delta_j.to_bits(), diff2.labels[0].delta_j.to_bits());
+        let _ = fs::remove_dir_all(&base);
+    }
+}

@@ -249,6 +249,19 @@ impl ArrivalProcess {
         }
     }
 
+    /// Stable textual description of the arrival configuration, carried
+    /// in persisted [`crate::telemetry::SessionHeader`]s so a session
+    /// diff can flag sessions captured under different traffic shapes.
+    pub fn describe(&self) -> String {
+        match *self {
+            ArrivalProcess::BackToBack => "steady".to_string(),
+            ArrivalProcess::Poisson { rate_hz } => format!("poisson@{rate_hz}Hz"),
+            ArrivalProcess::Bursty { burst_len, lull_hz } => {
+                format!("bursty[{burst_len}]@{lull_hz}Hz")
+            }
+        }
+    }
+
     /// Idle gap (µs) preceding request `i` (request 0 starts
     /// immediately; callers pass `i >= 1`). Deterministic given the
     /// rng state, so both sides of a pair can share one gap sequence.
@@ -447,6 +460,16 @@ mod tests {
         for i in 1..50 {
             assert_eq!(poisson.gap_us(&mut r1, i).to_bits(), poisson.gap_us(&mut r2, i).to_bits());
         }
+    }
+
+    #[test]
+    fn arrival_describe_is_stable() {
+        assert_eq!(ArrivalProcess::BackToBack.describe(), "steady");
+        assert_eq!(ArrivalProcess::Poisson { rate_hz: 200.0 }.describe(), "poisson@200Hz");
+        assert_eq!(
+            ArrivalProcess::Bursty { burst_len: 16, lull_hz: 50.0 }.describe(),
+            "bursty[16]@50Hz"
+        );
     }
 
     #[test]

@@ -1,0 +1,166 @@
+//! Shared test-support harness for the integration suites
+//! (`integration.rs`, `properties.rs`, `telemetry.rs`, `session.rs`,
+//! `golden.rs`): seeded program/stream builders, snapshot-dir fixtures,
+//! and the cycle-op auditor harness, so each suite composes scenarios
+//! instead of re-declaring builders.
+#![allow(dead_code)] // each test binary compiles its own copy and uses a subset
+
+use std::path::PathBuf;
+
+use magneton::coordinator::fleet::StreamFleetEntry;
+use magneton::coordinator::{Magneton, SysRun};
+use magneton::dispatch::Env;
+use magneton::energy::{DeviceSpec, Segment};
+use magneton::exec::KernelRecord;
+use magneton::graph::OpKind;
+use magneton::stream::{StreamAuditor, StreamConfig, WindowReport};
+use magneton::trace::Frame;
+use magneton::util::Prng;
+use magneton::workload::{serving_dispatcher, serving_stream_program, ServingStream};
+
+/// Fresh per-test temp directory (removed first if a previous run left
+/// it behind). Tag it uniquely per test: suites run concurrently.
+pub fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("magneton-test-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A default coordinator on the simulated H200.
+pub fn mag() -> Magneton {
+    Magneton::new(DeviceSpec::h200_sim())
+}
+
+/// Kernel record without a content sketch.
+pub fn rec(label: &str, op: OpKind, energy_j: f64, time_us: f64) -> KernelRecord {
+    rec_m(label, op, energy_j, time_us, vec![])
+}
+
+/// Kernel record carrying a content sketch.
+pub fn rec_m(
+    label: &str,
+    op: OpKind,
+    energy_j: f64,
+    time_us: f64,
+    moments: Vec<f64>,
+) -> KernelRecord {
+    KernelRecord {
+        node: 0,
+        op,
+        label: label.to_string(),
+        api: "api".into(),
+        dispatch_key: op.name().to_string(),
+        kernel: format!("k_{label}"),
+        time_us,
+        energy_j,
+        avg_power_w: energy_j / (time_us * 1e-6),
+        corr_id: 0,
+        bb_trace: vec![],
+        call_path: vec![Frame::py("serve")],
+        moments,
+    }
+}
+
+/// A power segment starting at `t0`.
+pub fn seg_after(t0: f64, dur: f64, watts: f64) -> Segment {
+    Segment { t_start_us: t0, t_end_us: t0 + dur, watts }
+}
+
+/// The serving-shaped op cycle shared by the stream/telemetry suites:
+/// period 5, per-kind energies distinct enough that any mispairing
+/// flags.
+pub fn cycle_op(i: usize) -> (&'static str, OpKind, f64) {
+    match i % 5 {
+        0 => ("serve.proj", OpKind::MatMul, 0.30),
+        1 => ("serve.scale", OpKind::Mul, 0.02),
+        2 => ("serve.act", OpKind::Gelu, 0.05),
+        3 => ("serve.out", OpKind::MatMul, 0.30),
+        _ => ("serve.softmax", OpKind::Softmax, 0.08),
+    }
+}
+
+/// Stream config for the cycle harness: tiled windows, NVML off.
+pub fn stream_cfg(window_ops: usize) -> StreamConfig {
+    StreamConfig {
+        window_ops,
+        hop_ops: window_ops,
+        ring_cap: 128,
+        nvml: None,
+        ..Default::default()
+    }
+}
+
+/// A kernel-level stream fault injected on side A.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Fault {
+    /// The kernel never ran on side A.
+    Drop,
+    /// Side A emitted the kernel twice.
+    Duplicate,
+    /// A stray kernel ran on side A just before this one.
+    Insert,
+}
+
+/// Drive `n` cycle ops through an auditor in lock-step, injecting
+/// `faults` (position → kind, side A) and draining reports as they
+/// emit. Returns the auditor (un-finished, so callers can inspect or
+/// `finish` it) plus the drained reports.
+pub fn run_cycle_pair_with_faults(
+    cfg: StreamConfig,
+    n: usize,
+    faults: &[(usize, Fault)],
+) -> (StreamAuditor, Vec<WindowReport>) {
+    let mut aud = StreamAuditor::new(cfg, 90.0);
+    let (mut ta, mut tb) = (0.0, 0.0);
+    let mut reports = Vec::new();
+    for i in 0..n {
+        let (label, op, e) = cycle_op(i);
+        let fault = faults.iter().find(|&&(at, _)| at == i).map(|&(_, f)| f);
+        match fault {
+            Some(Fault::Drop) => {}
+            Some(Fault::Duplicate) => {
+                for _ in 0..2 {
+                    aud.ingest_a(&rec(label, op, e, 100.0), seg_after(ta, 100.0, e / 100e-6));
+                    ta += 100.0;
+                }
+            }
+            Some(Fault::Insert) => {
+                aud.ingest_a(
+                    &rec("fault.extra", OpKind::Mul, 0.01, 50.0),
+                    seg_after(ta, 50.0, 0.01 / 50e-6),
+                );
+                ta += 50.0;
+                aud.ingest_a(&rec(label, op, e, 100.0), seg_after(ta, 100.0, e / 100e-6));
+                ta += 100.0;
+            }
+            None => {
+                aud.ingest_a(&rec(label, op, e, 100.0), seg_after(ta, 100.0, e / 100e-6));
+                ta += 100.0;
+            }
+        }
+        aud.ingest_b(&rec(label, op, e, 100.0), seg_after(tb, 100.0, e / 100e-6));
+        tb += 100.0;
+        reports.append(&mut aud.take_emitted());
+    }
+    (aud, reports)
+}
+
+/// A serving stream pair side: side A's matmuls run at quality `eff`
+/// (1.0 = optimal; lower burns extra energy at equal time).
+pub fn mk_stream_run(label: &str, seed: u64, eff: f64, requests: usize) -> SysRun {
+    let mut rng = Prng::new(seed);
+    let spec = ServingStream { requests, batch: 64, d_model: 128 };
+    SysRun::new(label, serving_dispatcher(eff), Env::new(), serving_stream_program(&mut rng, &spec))
+}
+
+/// Run a 1000-op cycle pair through a real auditor (optionally dropping
+/// side A's event at `skip_at`) and wrap the summary as a fleet entry —
+/// the input shape the divergence-correlation layer consumes.
+pub fn audited_cycle_entry(name: &str, skip_at: Option<usize>) -> StreamFleetEntry {
+    let faults: Vec<(usize, Fault)> = skip_at.map(|at| (at, Fault::Drop)).into_iter().collect();
+    let (mut aud, _) = run_cycle_pair_with_faults(stream_cfg(100), 1000, &faults);
+    let summary = aud.finish();
+    let expected = usize::from(skip_at.is_some());
+    assert_eq!(summary.resyncs, expected, "{name}: unexpected resync count");
+    StreamFleetEntry { name: name.to_string(), summary, snapshot_errors: 0 }
+}

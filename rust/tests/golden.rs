@@ -1,0 +1,249 @@
+//! Golden-file tests for the report renderers: each render is compared
+//! byte-for-byte against a committed fixture under `tests/golden/`, so
+//! an accidental format drift (column order, units, float precision)
+//! shows up as a diff instead of silently changing operator-facing
+//! output. Regenerate the fixtures with `BLESS=1 cargo test`.
+
+use std::fs;
+use std::path::PathBuf;
+
+use magneton::coordinator::fleet::{
+    DivergentPair, FleetDivergence, FleetReport, StreamFleetEntry, StreamFleetReport,
+};
+use magneton::detect::Side;
+use magneton::report::{
+    render_divergence, render_fleet, render_ranking, render_session_diff, render_stream,
+    render_stream_fleet, render_window,
+};
+use magneton::stream::{StreamFinding, StreamSummary, WindowReport};
+use magneton::telemetry::session::{LabelDelta, MatchVerdict, SessionDiff, WindowAlignment};
+use magneton::telemetry::RankEntry;
+
+/// Compare `rendered` against the committed fixture. `BLESS=1`
+/// regenerates; a missing fixture is written (and flagged) so a fresh
+/// renderer gets its baseline committed alongside.
+fn check_golden(name: &str, rendered: &str) {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden").join(name);
+    let bless = std::env::var("BLESS").map(|v| v == "1").unwrap_or(false);
+    if bless || !path.exists() {
+        fs::create_dir_all(path.parent().unwrap()).unwrap();
+        fs::write(&path, rendered).unwrap();
+        if !bless {
+            eprintln!("golden fixture {name} was missing; wrote it — commit it and re-run");
+        }
+        return;
+    }
+    let want = fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        rendered, want,
+        "render drifted from tests/golden/{name} (run with BLESS=1 to re-bless)"
+    );
+}
+
+fn finding() -> StreamFinding {
+    StreamFinding {
+        label: "serve.proj".into(),
+        ops: 4,
+        energy_a_j: 0.75,
+        energy_b_j: 0.5,
+        time_a_us: 400.0,
+        time_b_us: 400.0,
+        diff_frac: 1.0 / 3.0,
+        wasteful: Side::A,
+        is_tradeoff: false,
+    }
+}
+
+fn hot_summary() -> StreamSummary {
+    StreamSummary {
+        ops: 1000,
+        windows: 10,
+        energy_a_j: 12.5,
+        energy_b_j: 10.0,
+        time_a_us: 100_000.0,
+        time_b_us: 100_000.0,
+        wasted_j: 2.5,
+        windows_flagged: 9,
+        windows_quarantined: 0,
+        top_labels: vec![("serve.proj".into(), 2.0, 9), ("serve.out".into(), 0.5, 3)],
+        aligned: true,
+        fingerprint_a: 0x00c0_ffee_1234_5678,
+        fingerprint_b: 0x00c0_ffee_1234_5678,
+        unpaired: 0,
+        resyncs: 0,
+        resync_skipped: 0,
+        resync_log: vec![],
+        content_mismatches: 0,
+        reports_dropped: 0,
+        peak_retained_segments: 128,
+        peak_window_pairs: 100,
+        peak_pending: 2,
+    }
+}
+
+fn cool_summary() -> StreamSummary {
+    StreamSummary {
+        energy_a_j: 10.0,
+        wasted_j: 0.0,
+        windows_flagged: 0,
+        top_labels: vec![],
+        ..hot_summary()
+    }
+}
+
+fn divergence() -> FleetDivergence {
+    FleetDivergence {
+        at_ops_min: 437,
+        at_ops_max: 439,
+        pairs: vec![
+            DivergentPair { name: "serving-1".into(), at_ops: 438, resyncs: 2, skipped: 3 },
+            DivergentPair { name: "serving-0".into(), at_ops: 437, resyncs: 1, skipped: 1 },
+        ],
+    }
+}
+
+#[test]
+fn golden_render_window() {
+    let w = WindowReport {
+        seq: 3,
+        pairs: 8,
+        energy_a_j: 1.5,
+        energy_b_j: 1.25,
+        time_a_us: 800.0,
+        time_b_us: 800.0,
+        findings: vec![finding()],
+        wasted_j: 0.25,
+        aligned: true,
+        resyncs: 0,
+        quarantined: false,
+        content_mismatches: 0,
+        window_fp: 0xabc,
+    };
+    check_golden("window.txt", &render_window(&w));
+}
+
+#[test]
+fn golden_render_stream() {
+    check_golden("stream.txt", &render_stream("hot", &hot_summary()));
+}
+
+#[test]
+fn golden_render_divergence() {
+    check_golden("divergence.txt", &render_divergence(&divergence()));
+}
+
+#[test]
+fn golden_render_ranking() {
+    let ranking = vec![
+        RankEntry {
+            name: "hot".into(),
+            wasted_j: 2.5,
+            ops: 1000,
+            windows: 10,
+            windows_flagged: 9,
+            resyncs: 0,
+            aligned: true,
+        },
+        RankEntry {
+            name: "cool".into(),
+            wasted_j: 0.0,
+            ops: 1000,
+            windows: 10,
+            windows_flagged: 0,
+            resyncs: 1,
+            aligned: false,
+        },
+    ];
+    check_golden("ranking.txt", &render_ranking(&ranking));
+}
+
+#[test]
+fn golden_render_fleet_empty() {
+    let r = FleetReport {
+        entries: vec![],
+        total_wasted_j: 0.0,
+        total_findings: 0,
+        wall_time_us: 2500.0,
+        workers: 8,
+    };
+    check_golden("fleet.txt", &render_fleet(&r));
+}
+
+#[test]
+fn golden_render_stream_fleet() {
+    let r = StreamFleetReport {
+        entries: vec![
+            StreamFleetEntry { name: "hot".into(), summary: hot_summary(), snapshot_errors: 0 },
+            StreamFleetEntry { name: "cool".into(), summary: cool_summary(), snapshot_errors: 0 },
+        ],
+        total_wasted_j: 2.5,
+        total_ops: 2000,
+        divergences: vec![divergence()],
+        snapshot_errors: 0,
+        wall_time_us: 1500.0,
+        workers: 4,
+    };
+    check_golden("stream_fleet.txt", &render_stream_fleet(&r));
+}
+
+#[test]
+fn golden_render_session_diff() {
+    let d = SessionDiff {
+        session_a: "deploy-a".into(),
+        session_b: "deploy-b (canary)".into(),
+        verdict: MatchVerdict::Exact,
+        notes: vec![
+            "arrival processes differ (steady vs poisson@200Hz): idle-power timelines are not \
+             comparable, per-op energies are"
+                .into(),
+        ],
+        labels: vec![
+            LabelDelta {
+                label: "serve.proj".into(),
+                ops_a: 100,
+                ops_b: 100,
+                energy_a_j: 1.0,
+                energy_b_j: 1.5,
+                delta_j: 0.5,
+                delta_frac: 1.0 / 3.0,
+                waste_a_j: 0.0,
+                waste_b_j: 0.5,
+            },
+            LabelDelta {
+                label: "serve.act".into(),
+                ops_a: 100,
+                ops_b: 120,
+                energy_a_j: 0.5,
+                energy_b_j: 0.5,
+                delta_j: 0.0,
+                delta_frac: 0.0,
+                waste_a_j: 0.0,
+                waste_b_j: 0.0,
+            },
+            LabelDelta {
+                label: "serve.softmax".into(),
+                ops_a: 100,
+                ops_b: 100,
+                energy_a_j: 0.5,
+                energy_b_j: 0.25,
+                delta_j: -0.25,
+                delta_frac: 0.5,
+                waste_a_j: 0.0,
+                waste_b_j: 0.0,
+            },
+        ],
+        new_labels: vec![("serve.extra".into(), 0.25)],
+        vanished_labels: vec![("serve.old".into(), 0.125)],
+        total_a_j: 2.0,
+        total_b_j: 2.25,
+        wasted_a_j: 0.0,
+        wasted_b_j: 0.5,
+        resyncs_a: 0,
+        resyncs_b: 1,
+        divergences_a: 0,
+        divergences_b: 1,
+        windows: WindowAlignment { aligned: 10, realigns: 1, skipped_a: 0, skipped_b: 1, forced: 0 },
+        energy_threshold: 0.10,
+    };
+    check_golden("session_diff.txt", &render_session_diff(&d));
+}

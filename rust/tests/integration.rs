@@ -4,7 +4,9 @@
 //! jax→HLO→PJRT path); without artifacts they skip with a note so that
 //! `cargo test` stays green on a fresh checkout.
 
-use magneton::coordinator::{Magneton, SysRun};
+mod common;
+
+use common::mag;
 use magneton::dispatch::{Env, KernelChoice, Routine};
 use magneton::energy::{ComputeUnit, DeviceSpec};
 use magneton::exec::{Dispatcher, Program};
@@ -195,7 +197,7 @@ fn full_pipeline_with_pjrt_fingerprint_engine() {
         return;
     }
     let engine = PjrtMomentEngine::load(&default_artifact_dir()).unwrap();
-    let mut mag = Magneton::new(DeviceSpec::h200_sim());
+    let mut mag = mag();
     mag.engine = Box::new(engine);
 
     // audit a known case end-to-end with the Pallas-backed engine
@@ -214,7 +216,7 @@ fn full_pipeline_with_pjrt_fingerprint_engine() {
 fn known_cases_detection_summary() {
     // The Table 2 headline: 15/16 known cases diagnosed, c11 missed by
     // design. (Rust engine for speed; the PJRT engine is exercised above.)
-    let mag = Magneton::new(DeviceSpec::h200_sim());
+    let mag = mag();
     let mut rng = Prng::new(2026);
     let mut diagnosed = 0;
     let mut missed: Vec<&str> = Vec::new();
@@ -246,7 +248,7 @@ fn known_cases_detection_summary() {
 
 #[test]
 fn new_issues_detection_summary() {
-    let mag = Magneton::new(DeviceSpec::h200_sim());
+    let mag = mag();
     let mut rng = Prng::new(2027);
     let mut found = 0;
     let mut missed: Vec<&str> = Vec::new();

@@ -1,16 +1,15 @@
 //! Cross-module property tests on coordinator invariants: symmetry,
 //! determinism, energy conservation, and region sanity of the full
-//! differential pipeline.
+//! differential pipeline — plus streaming-resync robustness under
+//! random fault sequences and arrival-process statistics.
 
+mod common;
+
+use common::{mag, run_cycle_pair_with_faults, stream_cfg, Fault};
 use magneton::cases;
-use magneton::coordinator::Magneton;
 use magneton::detect::Side;
-use magneton::energy::DeviceSpec;
-use magneton::util::Prng;
-
-fn mag() -> Magneton {
-    Magneton::new(DeviceSpec::h200_sim())
-}
+use magneton::util::{fnv1a, Prng};
+use magneton::workload::ArrivalProcess;
 
 /// Swapping the two systems must swap the finding sides but preserve
 /// detection, diffs, and root causes.
@@ -131,4 +130,144 @@ fn prop_self_audit_is_clean() {
         assert!(!out.detected(), "{id}: self-audit flagged waste");
         assert!(out.e2e_diff_frac < 1e-6, "{id}: self diff {}", out.e2e_diff_frac);
     }
+}
+
+/// Resync robustness: seeded random drop/insert/duplicate kernel fault
+/// sequences injected into a 1000-op stream pair must always
+/// re-converge — every fault recovered by exactly one resync,
+/// `windows_quarantined` bounded by the fault count, zero spurious
+/// findings anywhere (the two sides spend identical energy on every
+/// matched pair), and clean aligned windows after the last fault.
+#[test]
+fn prop_resync_reconverges_under_random_fault_sequences() {
+    let kinds = [Fault::Drop, Fault::Duplicate, Fault::Insert];
+    let mut rng = Prng::new(0x5eed_fa17);
+    for case in 0..6 {
+        // 1..=4 faults at random positions, spaced ≥ 50 ops so each
+        // divergence resolves before the next one begins
+        let n_faults = 1 + rng.below(4);
+        let mut faults = Vec::new();
+        let mut at = 60 + rng.below(60);
+        for _ in 0..n_faults {
+            if at >= 900 {
+                break;
+            }
+            faults.push((at, kinds[rng.below(kinds.len())]));
+            at += 50 + rng.below(150);
+        }
+        let (mut aud, mut reports) = run_cycle_pair_with_faults(stream_cfg(100), 1000, &faults);
+        let s = aud.finish();
+        reports.append(&mut aud.take_emitted());
+
+        assert_eq!(
+            s.resyncs,
+            faults.len(),
+            "case {case} ({faults:?}): every fault must cost exactly one resync"
+        );
+        assert_eq!(s.resync_skipped, faults.len(), "case {case}: one skip per fault");
+        assert!(
+            s.windows_quarantined <= faults.len(),
+            "case {case}: {} quarantined > {} faults",
+            s.windows_quarantined,
+            faults.len()
+        );
+        assert!(s.windows_quarantined >= 1, "case {case}: a fault must quarantine its window");
+        // both sides spend identical energy on every matched pair, so
+        // ANY finding is spurious — recovered pairing must stay clean
+        assert_eq!(s.windows_flagged, 0, "case {case}: spurious findings after resync");
+        assert_eq!(s.wasted_j, 0.0, "case {case}");
+        // re-convergence: the matched histories end identical
+        assert_eq!(s.fingerprint_a, s.fingerprint_b, "case {case}");
+        // every window after the last fault is aligned and clean
+        let last_fault = faults.last().unwrap().0;
+        let window_ops = 100;
+        for r in &reports {
+            assert!(r.findings.is_empty(), "case {case}: window #{} flagged", r.seq);
+            if r.seq * window_ops > last_fault + window_ops {
+                assert!(r.aligned, "case {case}: window #{} misaligned after last fault", r.seq);
+                assert!(!r.quarantined, "case {case}: window #{} quarantined", r.seq);
+            }
+        }
+    }
+}
+
+/// Arrival statistics: empirical inter-arrival means match the
+/// configured rates for Poisson and bursty traffic, steady never
+/// idles, and the gap sequences are bit-identical for equal seeds.
+#[test]
+fn prop_arrival_means_match_configured_rates() {
+    let mut rng = Prng::new(0xa441);
+    // steady: no idle gaps, ever
+    for i in 1..200 {
+        assert_eq!(ArrivalProcess::BackToBack.gap_us(&mut rng, i), 0.0);
+    }
+    // Poisson at rate r: mean gap within 5 % of 1e6/r, for several rates
+    for rate_hz in [50.0, 200.0, 1000.0] {
+        let p = ArrivalProcess::Poisson { rate_hz };
+        let n = 30_000;
+        let mut sum = 0.0;
+        for i in 1..=n {
+            let g = p.gap_us(&mut rng, i);
+            assert!(g > 0.0);
+            sum += g;
+        }
+        let mean = sum / n as f64;
+        let want = 1e6 / rate_hz;
+        assert!(
+            (mean - want).abs() / want < 0.05,
+            "poisson@{rate_hz}: empirical mean {mean} vs {want}"
+        );
+    }
+    // bursty: idles only at burst boundaries, and the lull mean tracks
+    // the configured lull rate
+    let bursty = ArrivalProcess::Bursty { burst_len: 8, lull_hz: 100.0 };
+    let mut lulls = 0usize;
+    let mut lull_sum = 0.0;
+    for i in 1..=40_000 {
+        let g = bursty.gap_us(&mut rng, i);
+        if i % 8 == 0 {
+            assert!(g > 0.0, "burst boundary {i} must idle");
+            lulls += 1;
+            lull_sum += g;
+        } else {
+            assert_eq!(g, 0.0, "mid-burst {i} must not idle");
+        }
+    }
+    let lull_mean = lull_sum / lulls as f64;
+    assert!(
+        (lull_mean - 10_000.0).abs() / 10_000.0 < 0.05,
+        "bursty lull mean {lull_mean} vs 10000"
+    );
+}
+
+/// The per-pair arrival rng fork (`arrival_seed ^ fnv1a(pair name)`,
+/// the scheme `StreamFleet` uses) yields gap sequences that are
+/// bit-identical for equal seeds no matter how many workers process
+/// the pairs or in what order — the property that makes fleet results
+/// worker-count-independent under sampled arrivals.
+#[test]
+fn prop_arrival_sequences_bit_identical_across_worker_orders() {
+    let arrival = ArrivalProcess::Poisson { rate_hz: 500.0 };
+    let seed = 0x6d61_676eu64;
+    let pairs = ["serving-0", "serving-1", "serving-2", "serving-3"];
+    let gaps_for = |name: &str| -> Vec<u64> {
+        let mut rng = Prng::new(seed ^ fnv1a(name.bytes()));
+        (1..=200).map(|i| arrival.gap_us(&mut rng, i).to_bits()).collect()
+    };
+    // "one worker": pairs processed in submission order
+    let serial: Vec<Vec<u64>> = pairs.iter().map(|p| gaps_for(p)).collect();
+    // "many workers": pairs processed in reverse (any interleaving —
+    // each pair's rng is independent of processing order)
+    let reversed: Vec<Vec<u64>> = pairs.iter().rev().map(|p| gaps_for(p)).collect();
+    for (i, p) in pairs.iter().enumerate() {
+        assert_eq!(
+            serial[i],
+            reversed[pairs.len() - 1 - i],
+            "{p}: gap sequence depends on processing order"
+        );
+    }
+    // distinct pairs draw distinct sequences (no accidental sharing)
+    assert_ne!(serial[0], serial[1]);
+    // and equal seeds reproduce bit-for-bit across runs
+    assert_eq!(gaps_for("serving-0"), serial[0]);
 }

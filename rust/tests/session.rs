@@ -1,0 +1,181 @@
+//! Cross-session differential replay acceptance: two persisted
+//! sessions of the same workload — one with an injected per-label
+//! energy regression — must diff to a report that ranks the regressed
+//! labels first and trips the regression gate; the diff must be
+//! bit-reproducible across runs and worker counts; and sessions with
+//! non-matching workload fingerprints must be refused with a reasoned
+//! diagnostic rather than compared.
+
+mod common;
+
+use std::path::PathBuf;
+
+use common::{mk_stream_run, tmp_dir};
+use magneton::coordinator::fleet::StreamFleet;
+use magneton::energy::DeviceSpec;
+use magneton::report::render_session_diff;
+use magneton::telemetry::session::{
+    diff_sessions, match_sessions, DiffConfig, MatchMode, MatchVerdict, SessionIndex, SessionInfo,
+};
+
+/// Persist one session: a 2-pair streaming fleet over the serving
+/// workload, side A at quality `eff`, into `dir`.
+fn persist_session(dir: &PathBuf, id: &str, eff: f64, workers: usize, requests: usize) {
+    let mut fleet = StreamFleet::new(DeviceSpec::h200_sim());
+    fleet.workers = workers;
+    fleet.cfg.window_ops = 40;
+    fleet.cfg.hop_ops = 40;
+    fleet.cfg.ring_cap = 64;
+    fleet.snapshot_dir = Some(dir.clone());
+    fleet.session_id = Some(id.to_string());
+    fleet.deploy_tag = "accept".into();
+    for i in 0..2 {
+        fleet.add_pair(
+            &format!("serving-{i}"),
+            mk_stream_run("sys-a", 90 + i as u64, eff, requests),
+            mk_stream_run("sys-b", 90 + i as u64, 1.0, requests),
+        );
+    }
+    let r = fleet.run();
+    assert_eq!(r.snapshot_errors, 0, "{id}: snapshot writes must succeed");
+}
+
+/// The tentpole acceptance path: deploy A is clean, deploy B ships a
+/// matmul-kernel regression (side A at 0.6 efficiency). `diff`
+/// must rank the regressed matmul labels first, gate non-zero, and be
+/// bit-reproducible — including against a session persisted with a
+/// different worker count.
+#[test]
+fn diff_ranks_injected_regression_first_and_reproduces_bitwise() {
+    let dir_a = tmp_dir("session-a");
+    let dir_b = tmp_dir("session-b");
+    let dir_b2 = tmp_dir("session-b2");
+    persist_session(&dir_a, "deploy-a", 1.0, 2, 24);
+    persist_session(&dir_b, "deploy-b", 0.6, 2, 24);
+    // same deploy as B, but audited over a different worker count
+    persist_session(&dir_b2, "deploy-b", 0.6, 1, 24);
+
+    let a = SessionInfo::load(&dir_a).expect("session A loads");
+    let b = SessionInfo::load(&dir_b).expect("session B loads");
+    assert_eq!(a.session_id(), "deploy-a");
+    assert_eq!(a.deploy_tag(), "accept");
+    assert_eq!(match_sessions(&a, &b, MatchMode::Exact), MatchVerdict::Exact);
+
+    let diff = diff_sessions(&a, &b, &DiffConfig::default()).expect("same workload diffs");
+    // the two matmul call sites carry the regression and rank first
+    // (identical per-op costs → bit-equal deltas → label tiebreak)
+    assert!(diff.labels.len() >= 5, "all serving labels ledgered");
+    assert_eq!(diff.labels[0].label, "serve.out");
+    assert_eq!(diff.labels[1].label, "serve.proj");
+    for l in &diff.labels[..2] {
+        assert!(l.delta_j > 0.0, "{}: must regress", l.label);
+        assert!(l.delta_frac > 0.10, "{}: visible regression", l.label);
+    }
+    for l in &diff.labels[2..] {
+        assert!(l.delta_j.abs() < 1e-12, "{}: non-matmul labels unchanged", l.label);
+    }
+    // session B wastes more against its in-session reference too
+    assert!(diff.wasted_b_j > diff.wasted_a_j);
+    // the regression gate trips at 5 %, stays quiet at 90 %
+    assert!(diff.regressed(0.05));
+    assert!(!diff.regressed(0.90));
+    // aligned same-workload sessions: every window pairs positionally
+    assert!(diff.windows.aligned > 0);
+    assert_eq!(diff.windows.forced, 0);
+    assert_eq!(diff.windows.skipped_a + diff.windows.skipped_b, 0);
+
+    // bit-reproducible: a fresh load + diff renders identically, and a
+    // session persisted under a different worker count diffs to the
+    // bit-identical report (worker-count independence end-to-end)
+    let rendered = render_session_diff(&diff);
+    assert!(rendered.contains("REGRESSED"), "{rendered}");
+    let again = diff_sessions(
+        &SessionInfo::load(&dir_a).unwrap(),
+        &SessionInfo::load(&dir_b).unwrap(),
+        &DiffConfig::default(),
+    )
+    .unwrap();
+    assert_eq!(render_session_diff(&again), rendered, "diff must be deterministic");
+    let b2 = SessionInfo::load(&dir_b2).expect("session B2 loads");
+    let diff2 = diff_sessions(&a, &b2, &DiffConfig::default()).unwrap();
+    assert_eq!(render_session_diff(&diff2), rendered, "worker count leaked into the diff");
+    for (x, y) in diff.labels.iter().zip(diff2.labels.iter()) {
+        assert_eq!(x.label, y.label);
+        assert_eq!(x.delta_j.to_bits(), y.delta_j.to_bits(), "{}", x.label);
+        assert_eq!(x.energy_b_j.to_bits(), y.energy_b_j.to_bits(), "{}", x.label);
+    }
+
+    let _ = std::fs::remove_dir_all(&dir_a);
+    let _ = std::fs::remove_dir_all(&dir_b);
+    let _ = std::fs::remove_dir_all(&dir_b2);
+}
+
+/// Sessions that ran different workloads are refused with a reasoned
+/// diagnostic in exact mode; tolerant mode accepts them only above the
+/// configured label-multiset overlap, and the session index groups
+/// matching sessions together.
+#[test]
+fn mismatched_workloads_are_refused_with_a_diagnostic() {
+    let dir_a = tmp_dir("session-ref-a");
+    let dir_c = tmp_dir("session-ref-c");
+    persist_session(&dir_a, "deploy-a", 1.0, 2, 24);
+    // same label set, half the requests: overlap 0.5
+    persist_session(&dir_c, "deploy-c", 1.0, 2, 12);
+
+    let a = SessionInfo::load(&dir_a).unwrap();
+    let c = SessionInfo::load(&dir_c).unwrap();
+    let MatchVerdict::Incomparable { reason } = match_sessions(&a, &c, MatchMode::Exact) else {
+        panic!("different op counts must be incomparable in exact mode");
+    };
+    assert!(reason.contains("do not match"), "{reason}");
+    assert!(reason.contains("--tolerant"), "{reason}");
+    // diff refuses outright, carrying the diagnostic
+    let err = diff_sessions(&a, &c, &DiffConfig::default()).unwrap_err();
+    assert!(format!("{err}").contains("not comparable"), "{err}");
+
+    // tolerant mode: overlap is exactly 0.5 (half the ops shared)
+    let v = match_sessions(&a, &c, MatchMode::Tolerant { min_overlap: 0.4 });
+    let MatchVerdict::Tolerant { overlap } = v else {
+        panic!("expected tolerant match, got {v:?}");
+    };
+    assert!((overlap - 0.5).abs() < 1e-12, "overlap {overlap}");
+    assert!(matches!(
+        match_sessions(&a, &c, MatchMode::Tolerant { min_overlap: 0.8 }),
+        MatchVerdict::Incomparable { .. }
+    ));
+    // a tolerant diff proceeds and notes the op-count drift
+    let cfg = DiffConfig { mode: MatchMode::Tolerant { min_overlap: 0.4 }, ..Default::default() };
+    let diff = diff_sessions(&a, &c, &cfg).unwrap();
+    assert!(matches!(diff.verdict, MatchVerdict::Tolerant { .. }));
+    assert!(diff.notes.iter().any(|n| n.contains("different op counts")), "{:?}", diff.notes);
+
+    // the index groups the matching pair and isolates the odd one out
+    let idx = SessionIndex::scan(&[dir_a.clone(), dir_c.clone()]).unwrap();
+    assert_eq!(idx.groups(MatchMode::Exact), vec![vec![0], vec![1]]);
+    assert_eq!(
+        idx.groups(MatchMode::Tolerant { min_overlap: 0.4 }),
+        vec![vec![0, 1]],
+        "tolerant grouping joins the overlapping sessions"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir_a);
+    let _ = std::fs::remove_dir_all(&dir_c);
+}
+
+/// A directory persisted without session headers is rejected with a
+/// pointer at the fix, not compared garbage-to-garbage.
+#[test]
+fn headerless_directories_are_rejected() {
+    let dir = tmp_dir("session-headerless");
+    let mut fleet = StreamFleet::new(DeviceSpec::h200_sim());
+    fleet.cfg.window_ops = 40;
+    fleet.cfg.hop_ops = 40;
+    fleet.snapshot_dir = Some(dir.clone());
+    // no session_id: sinks write data but no headers
+    fleet.add_pair("solo", mk_stream_run("a", 7, 1.0, 12), mk_stream_run("b", 7, 1.0, 12));
+    let r = fleet.run();
+    assert_eq!(r.snapshot_errors, 0);
+    let err = SessionInfo::load(&dir).unwrap_err();
+    assert!(format!("{err}").contains("no session header"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

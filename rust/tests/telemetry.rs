@@ -1,47 +1,31 @@
 //! End-to-end telemetry acceptance: persisting a streaming fleet audit
 //! (`magneton stream --snapshot-dir`) and replaying it (`magneton
 //! replay --dir`) must reproduce the cumulative waste ledger and the
-//! fleet ranking **bit-for-bit**, and a simultaneous multi-pair
-//! divergence must coalesce into exactly one fleet-wide event.
+//! fleet ranking **bit-for-bit**, a simultaneous multi-pair divergence
+//! must coalesce into exactly one fleet-wide event, and session headers
+//! must identify the persisted workload even after rotation.
 
-use std::path::PathBuf;
+mod common;
 
-use magneton::coordinator::fleet::{correlate_divergences, StreamFleet, StreamFleetEntry};
-use magneton::coordinator::SysRun;
-use magneton::dispatch::Env;
-use magneton::energy::{DeviceSpec, Segment};
-use magneton::exec::KernelRecord;
-use magneton::graph::OpKind;
-use magneton::stream::{StreamAuditor, StreamConfig};
+use common::{audited_cycle_entry, mk_stream_run, tmp_dir};
+use magneton::coordinator::fleet::{correlate_divergences, StreamFleet};
+use magneton::energy::DeviceSpec;
+use magneton::stream::workload_sig_of_program;
 use magneton::telemetry::Replay;
-use magneton::trace::Frame;
-use magneton::util::Prng;
-use magneton::workload::{serving_dispatcher, serving_stream_program, ServingStream};
-
-fn tmp_dir(tag: &str) -> PathBuf {
-    let dir =
-        std::env::temp_dir().join(format!("magneton-telemetry-it-{tag}-{}", std::process::id()));
-    let _ = std::fs::remove_dir_all(&dir);
-    dir
-}
-
-fn mk_stream_run(label: &str, seed: u64, eff: f64, requests: usize) -> SysRun {
-    let mut rng = Prng::new(seed);
-    let spec = ServingStream { requests, batch: 64, d_model: 128 };
-    SysRun::new(label, serving_dispatcher(eff), Env::new(), serving_stream_program(&mut rng, &spec))
-}
 
 /// The tentpole acceptance path: run a streaming fleet with a snapshot
 /// directory, load the directory back, and check the replayed waste
 /// ledger and fleet ranking against the live report bit-for-bit.
 #[test]
 fn snapshots_reproduce_ledger_and_ranking_bit_for_bit() {
-    let dir = tmp_dir("fleet");
+    let dir = tmp_dir("telemetry-fleet");
     let mut fleet = StreamFleet::new(DeviceSpec::h200_sim());
     fleet.cfg.window_ops = 40;
     fleet.cfg.hop_ops = 40;
     fleet.cfg.ring_cap = 64;
     fleet.snapshot_dir = Some(dir.clone());
+    fleet.session_id = Some("telemetry-acceptance".into());
+    fleet.deploy_tag = "pr5".into();
     for (i, eff) in [0.6, 1.0, 0.7].iter().enumerate() {
         fleet.add_pair(
             &format!("stream-{i}"),
@@ -57,6 +41,24 @@ fn snapshots_reproduce_ledger_and_ranking_bit_for_bit() {
     assert_eq!(replay.summaries.len(), 3, "one summary per pair");
     assert_eq!(replay.rankings.len(), 1, "one persisted fleet ranking");
     assert!(replay.resyncs.is_empty(), "same-workload pairs never resync");
+
+    // session headers: one per pair scope, all carrying the session
+    // identity and the static workload fingerprint of the pair program
+    assert_eq!(replay.sessions.len(), 3, "one header per pair sink");
+    let expected_fp = {
+        let probe = mk_stream_run("sys-a", 90, 1.0, 24);
+        workload_sig_of_program(&probe.prog).fp()
+    };
+    for h in &replay.sessions {
+        assert_eq!(h.session_id, "telemetry-acceptance");
+        assert_eq!(h.deploy_tag, "pr5");
+        assert_eq!(h.workload_fp, expected_fp, "{}", h.scope);
+        assert_eq!(h.total_ops, 24 * 5, "{}", h.scope);
+        assert_eq!(h.arrival, "steady");
+    }
+
+    // per-pair ledgers persisted at finish, one per pair
+    assert_eq!(replay.ledgers.len(), 3);
 
     // per-pair cumulative waste ledger: bit-identical floats, identical
     // label attribution
@@ -74,6 +76,15 @@ fn snapshots_reproduce_ledger_and_ranking_bit_for_bit() {
             assert_eq!(x.1.to_bits(), y.1.to_bits(), "label {} ledger drifted", x.0);
             assert_eq!(x.2, y.2);
         }
+        // the persisted label ledger covers every matched pair
+        let ledger = replay.ledger_of(&e.name).expect("pair ledger persisted");
+        assert_eq!(ledger.iter().map(|l| l.ops).sum::<usize>(), e.summary.ops, "{}", e.name);
+        let led_e_a: f64 = ledger.iter().map(|l| l.energy_a_j).sum();
+        assert!(
+            (led_e_a - e.summary.energy_a_j).abs() < 1e-9 * e.summary.energy_a_j.max(1.0),
+            "{}: ledger energy drifted",
+            e.name
+        );
     }
 
     // the persisted fleet ranking reproduces the live ranking: same
@@ -95,68 +106,6 @@ fn snapshots_reproduce_ledger_and_ranking_bit_for_bit() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
-fn rec(label: &str, op: OpKind, energy_j: f64, time_us: f64) -> KernelRecord {
-    KernelRecord {
-        node: 0,
-        op,
-        label: label.to_string(),
-        api: "api".into(),
-        dispatch_key: op.name().to_string(),
-        kernel: format!("k_{label}"),
-        time_us,
-        energy_j,
-        avg_power_w: energy_j / (time_us * 1e-6),
-        corr_id: 0,
-        bb_trace: vec![],
-        call_path: vec![Frame::py("serve")],
-        moments: vec![],
-    }
-}
-
-fn seg_after(t0: f64, dur: f64, watts: f64) -> Segment {
-    Segment { t_start_us: t0, t_end_us: t0 + dur, watts }
-}
-
-/// Serving-shaped op cycle (period 5) with per-kind energies distinct
-/// enough that any mispairing would flag.
-fn cycle_op(i: usize) -> (&'static str, OpKind, f64) {
-    match i % 5 {
-        0 => ("serve.proj", OpKind::MatMul, 0.30),
-        1 => ("serve.scale", OpKind::Mul, 0.02),
-        2 => ("serve.act", OpKind::Gelu, 0.05),
-        3 => ("serve.out", OpKind::MatMul, 0.30),
-        _ => ("serve.softmax", OpKind::Softmax, 0.08),
-    }
-}
-
-/// Run one 1000-op stream pair through a real auditor, dropping side
-/// A's event at `skip_at` (if any), and wrap the summary as a fleet
-/// entry.
-fn audited_entry(name: &str, skip_at: Option<usize>) -> StreamFleetEntry {
-    let cfg = StreamConfig {
-        window_ops: 100,
-        hop_ops: 100,
-        ring_cap: 128,
-        nvml: None,
-        ..Default::default()
-    };
-    let mut aud = StreamAuditor::new(cfg, 90.0);
-    let (mut ta, mut tb) = (0.0, 0.0);
-    for i in 0..1000 {
-        let (label, op, e) = cycle_op(i);
-        if Some(i) != skip_at {
-            aud.ingest_a(&rec(label, op, e, 100.0), seg_after(ta, 100.0, e / 100e-6));
-            ta += 100.0;
-        }
-        aud.ingest_b(&rec(label, op, e, 100.0), seg_after(tb, 100.0, e / 100e-6));
-        tb += 100.0;
-    }
-    let summary = aud.finish();
-    let expected = usize::from(skip_at.is_some());
-    assert_eq!(summary.resyncs, expected, "{name}: unexpected resync count");
-    StreamFleetEntry { name: name.to_string(), summary, snapshot_errors: 0 }
-}
-
 /// The acceptance scenario: three pairs drop a kernel at (nearly) the
 /// same op position — a shared-cause divergence. The fleet correlation
 /// must emit exactly one `FleetDivergence` with all three pairs
@@ -164,9 +113,9 @@ fn audited_entry(name: &str, skip_at: Option<usize>) -> StreamFleetEntry {
 #[test]
 fn simultaneous_three_pair_divergence_yields_one_fleet_event() {
     let entries = vec![
-        audited_entry("serving-0", Some(437)),
-        audited_entry("serving-1", Some(438)),
-        audited_entry("serving-2", Some(439)),
+        audited_cycle_entry("serving-0", Some(437)),
+        audited_cycle_entry("serving-1", Some(438)),
+        audited_cycle_entry("serving-2", Some(439)),
     ];
     let divs = correlate_divergences(&entries, 100, 2);
     assert_eq!(divs.len(), 1, "exactly one fleet-wide divergence event");
@@ -179,6 +128,6 @@ fn simultaneous_three_pair_divergence_yields_one_fleet_event() {
     }
 
     // one pair diverging alone stays below the correlation threshold
-    let solo = vec![audited_entry("serving-0", Some(437)), audited_entry("serving-1", None)];
+    let solo = vec![audited_cycle_entry("serving-0", Some(437)), audited_cycle_entry("serving-1", None)];
     assert!(correlate_divergences(&solo, 100, 2).is_empty());
 }
