@@ -1,0 +1,61 @@
+//! Lint perf bench: static analysis must stay cheap relative to the
+//! dynamic differential runs it front-runs. Times target construction
+//! and the full lint suite at one worker and at the pool default, and
+//! emits the shared `BENCH_lint.json` trajectory record so lint cost is
+//! tracked commit-over-commit alongside the findings it produces.
+
+use std::time::Duration;
+
+use magneton::analysis::{builtin_targets, lint_suite};
+use magneton::energy::DeviceSpec;
+use magneton::util::bench::{banner, bench, persist, persist_bench_json, BenchResult};
+use magneton::util::json::Json;
+use magneton::util::pool::default_threads;
+
+fn main() {
+    banner("Lint perf", "static energy lint over the built-in system programs");
+    let device = DeviceSpec::h200_sim();
+    let budget = Duration::from_millis(400);
+
+    let build = bench("build targets (seed 7)", budget, || {
+        std::hint::black_box(builtin_targets(7));
+    });
+    let targets = builtin_targets(7);
+    let report = lint_suite(&targets, &device, 1);
+    assert!(report.targets.iter().all(|t| t.error.is_none()), "builtin target failed lint");
+    assert!(report.total_findings >= 5, "suite should surface findings");
+
+    let threads = default_threads();
+    let mut results: Vec<BenchResult> = vec![build];
+    for (label, n) in [("lint suite (1 worker)", 1usize), ("lint suite (pool)", threads)] {
+        results.push(bench(label, budget, || {
+            std::hint::black_box(lint_suite(&targets, &device, n));
+        }));
+    }
+
+    let mut text = String::new();
+    for r in &results {
+        let line = r.report();
+        println!("{line}");
+        text.push_str(&line);
+        text.push('\n');
+    }
+    println!(
+        "\n{} targets, {} findings, est. {:.4} J wasted (pool = {threads} workers)",
+        report.targets.len(),
+        report.total_findings,
+        report.total_est_wasted_j
+    );
+
+    persist("lint_perf", &text, None);
+    persist_bench_json(
+        "lint",
+        &results,
+        &[
+            ("targets", Json::Num(report.targets.len() as f64)),
+            ("findings", Json::Num(report.total_findings as f64)),
+            ("est_wasted_j", Json::Num(report.total_est_wasted_j)),
+            ("workers", Json::Num(threads as f64)),
+        ],
+    );
+}

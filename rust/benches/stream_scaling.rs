@@ -12,8 +12,9 @@ use magneton::energy::sampler::NvmlSampler;
 use magneton::energy::{DeviceSpec, PowerTrace};
 use magneton::exec::Executor;
 use magneton::stream::{StreamAuditor, StreamConfig};
-use magneton::util::bench::{banner, persist, time_once};
+use magneton::util::bench::{banner, persist, persist_json, time_once};
 use magneton::util::cli::Args;
+use magneton::util::json::Json;
 use magneton::util::table::{fmt_joules, fmt_us, Table};
 use magneton::util::Prng;
 use magneton::workload::{serving_dispatcher, serving_stream_program, ServingStream};
@@ -237,5 +238,19 @@ fn main() {
         "stream_scaling",
         &format!("{part1}\n{part2}\n{part3}"),
         Some(&format!("{csv}\n{csv2}\n{csv3}")),
+    );
+    persist_json(
+        "BENCH_stream_scaling",
+        &Json::obj()
+            .field("bench", "stream_scaling")
+            .field("segments", sizes.iter().map(|&n| Json::Num(n as f64)).collect::<Vec<_>>())
+            .field("cursor_us", cursor_us.iter().map(|&x| Json::Num(x)).collect::<Vec<_>>())
+            .field("speedups", speedups.iter().map(|&x| Json::Num(x)).collect::<Vec<_>>())
+            .field(
+                "peak_ring_segments",
+                peaks.iter().map(|&p| Json::Num(p as f64)).collect::<Vec<_>>(),
+            )
+            .field("rescan_only", rescan_only)
+            .build(),
     );
 }

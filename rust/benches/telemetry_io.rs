@@ -6,7 +6,8 @@
 use magneton::detect::Side;
 use magneton::stream::{StreamFinding, WindowReport};
 use magneton::telemetry::{load_dir, SinkConfig, Snapshot, SnapshotSink};
-use magneton::util::bench::{banner, persist, time_once};
+use magneton::util::bench::{banner, persist, persist_json, time_once};
+use magneton::util::json::Json;
 use magneton::util::table::Table;
 
 /// A representative emitted window: one finding, realistic magnitudes.
@@ -82,6 +83,7 @@ fn main() {
 
     let mut t = Table::new(vec!["stage", "items", "total", "per item"]);
     let mut csv = String::from("stage,items,total_us,per_item_us\n");
+    let mut stages: Vec<Json> = Vec::new();
     for (stage, items, us) in [
         ("append (rotating sink)", n, write_us),
         ("replay (read+parse dir)", loaded.len(), read_us),
@@ -94,6 +96,14 @@ fn main() {
             format!("{:.2} µs", us / items as f64),
         ]);
         csv.push_str(&format!("{stage},{items},{us:.1},{:.3}\n", us / items as f64));
+        stages.push(
+            Json::obj()
+                .field("stage", stage)
+                .field("items", items)
+                .field("total_us", us)
+                .field("per_item_us", us / items as f64)
+                .build(),
+        );
     }
     let rendered = t.render();
     println!("{rendered}");
@@ -105,5 +115,15 @@ fn main() {
         sink.dropped_files
     );
     persist("telemetry_io", &rendered, Some(&csv));
+    persist_json(
+        "BENCH_telemetry_io",
+        &Json::obj()
+            .field("bench", "telemetry_io")
+            .field("stages", stages)
+            .field("snapshots", n)
+            .field("retained_bytes", sink.total_bytes() as f64)
+            .field("dropped_files", sink.dropped_files as f64)
+            .build(),
+    );
     let _ = std::fs::remove_dir_all(&dir);
 }

@@ -1,0 +1,837 @@
+//! Static energy lint over the graph IR.
+//!
+//! The dynamic pipeline (exec → detect → diagnose) finds waste by
+//! *running* two systems and diffing them; but each of the paper's three
+//! root-cause classes — redundant operations, API misuse,
+//! misconfiguration — leaves a statically visible signature in the
+//! computation graph. This module finds those signatures before a single
+//! joule is spent: a pass framework ([`LintPass`] over a [`LintContext`])
+//! walks one graph with dominators, consumer lists, structural subtree
+//! hashes, inferred shapes, and a per-node static cost derived from the
+//! same dispatch + `counts::op_counts` + `KernelDesc::cost` path the
+//! executor charges, so the estimate in every [`LintFinding`] is the
+//! joule figure the executor *would* bill for the flagged nodes.
+//!
+//! Findings carry a mechanical rewrite ([`RewriteStep`]); `--verify`
+//! applies it to a cloned program and drives the existing differential
+//! pipeline to confirm the static prediction against a measured delta
+//! (see [`rewrite::verify_finding`]). A config-lint layer
+//! ([`lint_stream_config`] / [`lint_detect_config`]) covers the
+//! misconfiguration class for the streaming/detect knobs that cannot be
+//! seen in any graph.
+
+pub mod rewrite;
+pub mod rules;
+pub mod suite;
+
+use std::collections::BTreeMap;
+
+use crate::detect::DetectConfig;
+use crate::dispatch::Env;
+use crate::energy::{DeviceSpec, KernelCost, KernelDesc};
+use crate::exec::{counts, Dispatcher, Program};
+use crate::fingerprint::{mix64, op_signature};
+use crate::graph::dom::GraphDom;
+use crate::graph::{Attrs, Graph, Node, NodeId, OpKind};
+use crate::stream::StreamConfig;
+use crate::tensor::Tensor;
+use crate::Error;
+
+pub use rewrite::{apply_rewrite, verify_finding, VerifyOutcome};
+pub use rules::default_passes;
+pub use suite::{builtin_targets, lint_suite, LintReport, LintTarget, TargetReport};
+
+// ---------------------------------------------------------------------
+// Findings
+// ---------------------------------------------------------------------
+
+/// How bad a finding is. `Error` is reserved for configurations that
+/// break the tool itself (e.g. a stream window that can never close);
+/// graph-level waste is `Warn`, fusion opportunities are `Info`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Info,
+    Warn,
+    Error,
+}
+
+impl Severity {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Severity::Info => "info",
+            Severity::Warn => "warn",
+            Severity::Error => "error",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Severity> {
+        match s {
+            "info" => Some(Severity::Info),
+            "warn" => Some(Severity::Warn),
+            "error" => Some(Severity::Error),
+            _ => None,
+        }
+    }
+}
+
+/// One mechanical edit of a suggested rewrite. Steps are interpreted by
+/// [`rewrite::apply_rewrite`], which rebuilds the graph rather than
+/// mutating it (the executor charges every constructed node, dead or
+/// not, so an unhooked node would still burn energy).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RewriteStep {
+    /// Delete `node`; its consumers read `replacement` instead.
+    Bypass { node: NodeId, replacement: NodeId },
+    /// Delete `node` (must have no surviving consumers).
+    Remove { node: NodeId },
+    /// Set an attribute on a surviving node.
+    SetAttr { node: NodeId, key: String, value: String },
+    /// Replace `add` with a fused `AddMm(bias, x, w)` and delete `mm`.
+    FuseAddMm { mm: NodeId, add: NodeId },
+}
+
+/// One lint finding: a rule violation with the nodes involved, a static
+/// estimate of the joules the executor would charge for them, and a
+/// suggested rewrite.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LintFinding {
+    pub rule: &'static str,
+    pub severity: Severity,
+    /// Involved node ids, ascending (empty for config findings).
+    pub nodes: Vec<NodeId>,
+    /// Representative site label (or config key for config findings).
+    pub label: String,
+    /// Static estimate of wasted joules (0 for config findings).
+    pub est_wasted_j: f64,
+    pub suggestion: String,
+    /// Mechanical rewrite; empty when the finding is advisory only.
+    pub steps: Vec<RewriteStep>,
+}
+
+/// Rank findings: worst severity first, then largest estimate (total
+/// order on the f64 bits, so the sort is deterministic), then stable
+/// tie-breaks on rule/label/nodes.
+pub fn sort_findings(findings: &mut [LintFinding]) {
+    findings.sort_by(|a, b| {
+        b.severity
+            .cmp(&a.severity)
+            .then(b.est_wasted_j.total_cmp(&a.est_wasted_j))
+            .then(a.rule.cmp(b.rule))
+            .then(a.label.cmp(&b.label))
+            .then(a.nodes.cmp(&b.nodes))
+    });
+}
+
+/// A lint rule: a pure function of the analysed graph.
+pub trait LintPass {
+    fn name(&self) -> &'static str;
+    fn run(&self, cx: &LintContext) -> Vec<LintFinding>;
+}
+
+/// Run every default pass over one analysed graph and rank the results.
+pub fn lint_graph(cx: &LintContext) -> Vec<LintFinding> {
+    let mut out = Vec::new();
+    for pass in default_passes() {
+        out.extend(pass.run(cx));
+    }
+    sort_findings(&mut out);
+    out
+}
+
+// ---------------------------------------------------------------------
+// Context
+// ---------------------------------------------------------------------
+
+/// Everything a pass needs, computed once per graph: dominators, topo
+/// order, consumer lists, structural subtree hashes, inferred shapes,
+/// and the per-node static cost under the target's dispatcher + env +
+/// device.
+pub struct LintContext<'a> {
+    pub prog: &'a Program,
+    pub graph: &'a Graph,
+    pub dispatcher: &'a Dispatcher,
+    pub env: &'a Env,
+    pub device: &'a DeviceSpec,
+    pub dom: GraphDom,
+    pub topo: Vec<NodeId>,
+    pub consumers: Vec<Vec<NodeId>>,
+    /// Structural subtree hash per node: leaves hash their identity,
+    /// interior nodes fold op + attrs + ordered input hashes (labels are
+    /// ignored for interior nodes, so renamed duplicates still collide).
+    pub hashes: Vec<u64>,
+    /// Inferred output shape per node; `None` when inference gave up
+    /// (such nodes cost 0 and are skipped by shape-sensitive rules).
+    pub shapes: Vec<Option<Vec<usize>>>,
+    /// Static per-node cost (time/energy/power the executor would bill).
+    pub cost: Vec<KernelCost>,
+}
+
+impl<'a> LintContext<'a> {
+    /// Analyse `prog`. Fails (typed) on malformed graphs via
+    /// [`Graph::validate`].
+    pub fn new(
+        prog: &'a Program,
+        dispatcher: &'a Dispatcher,
+        env: &'a Env,
+        device: &'a DeviceSpec,
+    ) -> crate::Result<LintContext<'a>> {
+        let graph = &prog.graph;
+        graph
+            .validate()
+            .map_err(|e| e.context(format!("lint: graph `{}`", graph.name)))?;
+        let topo = graph.topo_order();
+        let consumers = graph.consumers();
+        let dom = GraphDom::analyze(graph);
+        let hashes = structural_hashes(graph);
+        let shapes = infer_shapes(graph, &prog.feeds);
+        let mut cx = LintContext {
+            prog,
+            graph,
+            dispatcher,
+            env,
+            device,
+            dom,
+            topo,
+            consumers,
+            hashes,
+            shapes,
+            cost: Vec::new(),
+        };
+        cx.cost = graph.nodes.iter().map(|n| cx.node_cost(n)).collect();
+        Ok(cx)
+    }
+
+    /// Static energy estimate for one node (J).
+    pub fn cost_j(&self, id: NodeId) -> f64 {
+        self.cost[id].energy_j
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.graph.nodes[id]
+    }
+
+    /// The static cost of one existing node: shapes in, executor's cost
+    /// model out. Unknown shapes cost zero (never over-claim).
+    fn node_cost(&self, node: &Node) -> KernelCost {
+        let zero = KernelCost { time_us: 0.0, energy_j: 0.0, avg_power_w: 0.0 };
+        if node.op.is_virtual() {
+            return zero;
+        }
+        let out_shape = match &self.shapes[node.id] {
+            Some(s) => s.clone(),
+            None => return zero,
+        };
+        let mut in_shapes = Vec::with_capacity(node.inputs.len());
+        for &i in &node.inputs {
+            match &self.shapes[i] {
+                Some(s) => in_shapes.push(s.clone()),
+                None => return zero,
+            }
+        }
+        self.op_cost(node.op, &node.attrs, &in_shapes, &out_shape)
+    }
+
+    /// Cost of a (possibly hypothetical) op application under this
+    /// target's dispatcher/env/device. Mirrors the executor's
+    /// `exec_kernel` cost path exactly: dispatch by the node's
+    /// `dispatch` attr (falling back to the op name), count FLOPs/bytes
+    /// with [`counts::op_counts`] on placeholder tensors, build the same
+    /// [`KernelDesc`], and apply the same multi-launch adjustment.
+    pub fn op_cost(
+        &self,
+        op: OpKind,
+        attrs: &Attrs,
+        in_shapes: &[Vec<usize>],
+        out_shape: &[usize],
+    ) -> KernelCost {
+        let env = self.env.merged(attrs);
+        let key = attrs.get("dispatch").cloned().unwrap_or_else(|| op.name().to_string());
+        let outcome = self.dispatcher.dispatch(op, &key, &env);
+        let choice = &outcome.choice;
+        let ins: Vec<Tensor> = in_shapes.iter().map(|s| Tensor::zeros(s)).collect();
+        let ins_ref: Vec<&Tensor> = ins.iter().collect();
+        let out = Tensor::zeros(out_shape);
+        let (flops, bytes, n_launches) = counts::op_counts(op, attrs, &ins_ref, &out);
+        let desc = if op == OpKind::Barrier || op == OpKind::Idle {
+            let wait_us = attr_f64(attrs, "wait_us", 1000.0);
+            let frac = attr_f64(
+                attrs,
+                "power_frac",
+                if op == OpKind::Barrier { 0.45 } else { 0.0 },
+            );
+            let w = if op == OpKind::Idle {
+                self.device.idle_w
+            } else {
+                self.device.base_w.max(frac * self.device.max_w)
+            };
+            KernelDesc::fixed(&choice.kernel, wait_us, w)
+        } else {
+            KernelDesc {
+                name: choice.kernel.clone(),
+                unit: choice.unit,
+                flops,
+                bytes: bytes * choice.bytes_mult,
+                efficiency: choice.efficiency,
+                time_mult: choice.time_mult,
+                fixed_time_us: 0.0,
+                fixed_power_w: 0.0,
+            }
+        };
+        let mut cost = desc.cost(self.device);
+        if n_launches > 1 {
+            let extra = (n_launches - 1) as f64 * self.device.launch_overhead_us;
+            cost.time_us += extra;
+            cost.energy_j += extra * 1e-6 * self.device.base_w;
+            cost.avg_power_w = (cost.energy_j / (cost.time_us * 1e-6)).min(self.device.max_w);
+            cost.energy_j = cost.energy_j.min(cost.avg_power_w * cost.time_us * 1e-6);
+        }
+        cost
+    }
+
+    /// Total static energy of the graph (J) — context for ranking.
+    pub fn total_static_j(&self) -> f64 {
+        self.cost.iter().map(|c| c.energy_j).sum()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Structural hashes
+// ---------------------------------------------------------------------
+
+/// Subtree hash per node, reusing the fingerprint primitives: source
+/// nodes (no inputs) hash their identity — two distinct `Input`s are
+/// distinct values even under the same label — while interior nodes
+/// fold op name, sorted attrs, and ordered input hashes, ignoring the
+/// label so renamed duplicates still bucket together.
+pub fn structural_hashes(g: &Graph) -> Vec<u64> {
+    let mut hashes = vec![0u64; g.len()];
+    for node in &g.nodes {
+        let mut h = mix64(op_signature("", node.op.name()));
+        for (k, v) in &node.attrs {
+            h = mix64(h ^ op_signature(k, v));
+        }
+        if node.inputs.is_empty() {
+            // leaf identity: the node id (bound to its feed)
+            h = mix64(h ^ op_signature(&node.label, "leaf") ^ node.id as u64);
+        }
+        for &i in &node.inputs {
+            h = mix64(h.rotate_left(7) ^ hashes[i]);
+        }
+        hashes[node.id] = h;
+    }
+    hashes
+}
+
+// ---------------------------------------------------------------------
+// Shape inference
+// ---------------------------------------------------------------------
+
+pub(crate) fn attr_f64(attrs: &Attrs, k: &str, default: f64) -> f64 {
+    attrs.get(k).and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+pub(crate) fn attr_usize(attrs: &Attrs, k: &str, default: usize) -> usize {
+    attrs.get(k).and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+pub(crate) fn attr_csv(attrs: &Attrs, k: &str) -> Option<Vec<usize>> {
+    attrs.get(k).map(|s| s.split(',').filter_map(|x| x.trim().parse().ok()).collect())
+}
+
+/// Right-aligned broadcast of two shapes (NumPy rules); `None` if
+/// incompatible.
+fn broadcast(a: &[usize], b: &[usize]) -> Option<Vec<usize>> {
+    let rank = a.len().max(b.len());
+    let mut out = Vec::with_capacity(rank);
+    for i in 0..rank {
+        let da = if i < rank - a.len() { 1 } else { a[i - (rank - a.len())] };
+        let db = if i < rank - b.len() { 1 } else { b[i - (rank - b.len())] };
+        if da != db && da != 1 && db != 1 {
+            return None;
+        }
+        out.push(da.max(db));
+    }
+    Some(out)
+}
+
+/// Infer every node's output shape without evaluating any numerics
+/// (`eval_node` would run seconds-slow composites like `Eigvals`).
+/// Mirrors `exec::eval_node`'s shape semantics; ops it cannot handle
+/// yield `None` and cost zero.
+pub fn infer_shapes(g: &Graph, feeds: &BTreeMap<NodeId, Tensor>) -> Vec<Option<Vec<usize>>> {
+    let mut shapes: Vec<Option<Vec<usize>>> = vec![None; g.len()];
+    for node in &g.nodes {
+        let ins: Vec<Option<&Vec<usize>>> =
+            node.inputs.iter().map(|&i| shapes[i].as_ref()).collect();
+        let first = ins.first().copied().flatten();
+        let attrs = &node.attrs;
+        shapes[node.id] = match node.op {
+            OpKind::Input | OpKind::Weight => {
+                feeds.get(&node.id).map(|t| t.shape().to_vec())
+            }
+            OpKind::MatMul => match (ins.first().copied().flatten(), ins.get(1).copied().flatten()) {
+                (Some(a), Some(b)) if !a.is_empty() && !b.is_empty() => {
+                    let mut s = a[..a.len() - 1].to_vec();
+                    s.push(*b.last().unwrap());
+                    Some(s)
+                }
+                _ => None,
+            },
+            OpKind::AddMm => match (ins.get(1).copied().flatten(), ins.get(2).copied().flatten()) {
+                // inputs are [bias, x, w]
+                (Some(x), Some(w)) if !x.is_empty() && !w.is_empty() => {
+                    let mut s = x[..x.len() - 1].to_vec();
+                    s.push(*w.last().unwrap());
+                    Some(s)
+                }
+                _ => None,
+            },
+            OpKind::Add | OpKind::Sub | OpKind::Mul | OpKind::Div => {
+                match (ins.first().copied().flatten(), ins.get(1).copied().flatten()) {
+                    (Some(a), Some(b)) => broadcast(a, b),
+                    _ => None,
+                }
+            }
+            OpKind::Scale
+            | OpKind::Pow
+            | OpKind::Tanh
+            | OpKind::Gelu
+            | OpKind::Silu
+            | OpKind::Relu
+            | OpKind::Softmax
+            | OpKind::LayerNorm
+            | OpKind::RmsNorm
+            | OpKind::Attention
+            | OpKind::Contiguous
+            | OpKind::Copy
+            | OpKind::CumSum
+            | OpKind::Sort
+            | OpKind::Expm
+            | OpKind::AllReduce
+            | OpKind::Output => first.cloned(),
+            OpKind::Barrier | OpKind::Idle => {
+                first.cloned().or(Some(vec![1]))
+            }
+            OpKind::Permute => match (first, attr_csv(attrs, "perm")) {
+                (Some(s), Some(perm)) if perm.len() == s.len() => {
+                    Some(perm.iter().map(|&p| s[p]).collect())
+                }
+                _ => None,
+            },
+            OpKind::Reshape => attr_csv(attrs, "shape"),
+            OpKind::Concat => {
+                let dim = attr_usize(attrs, "dim", 0);
+                let mut acc: Option<Vec<usize>> = None;
+                let mut ok = !ins.is_empty();
+                for s in &ins {
+                    match (s, &mut acc) {
+                        (Some(s), None) if dim < s.len() => acc = Some(s.to_vec()),
+                        (Some(s), Some(a)) if s.len() == a.len() => a[dim] += s[dim],
+                        _ => {
+                            ok = false;
+                            break;
+                        }
+                    }
+                }
+                if ok {
+                    acc
+                } else {
+                    None
+                }
+            }
+            OpKind::SplitChunk => {
+                let dim = attr_usize(attrs, "dim", 0);
+                let chunks = attr_usize(attrs, "chunks", 1).max(1);
+                first.and_then(|s| {
+                    if dim < s.len() && s[dim] % chunks == 0 {
+                        let mut o = s.clone();
+                        o[dim] /= chunks;
+                        Some(o)
+                    } else {
+                        None
+                    }
+                })
+            }
+            OpKind::Slice => first.and_then(|s| {
+                let dim = attr_usize(attrs, "dim", 0);
+                if dim >= s.len() {
+                    return None;
+                }
+                let start = attr_usize(attrs, "start", 0);
+                let stop = attr_usize(attrs, "stop", s[dim]).min(s[dim]);
+                if start > stop {
+                    return None;
+                }
+                let mut o = s.clone();
+                o[dim] = stop - start;
+                Some(o)
+            }),
+            OpKind::TopK => first.and_then(|s| {
+                let k = attr_usize(attrs, "k", 1);
+                let mut o = s.clone();
+                *o.last_mut()? = k;
+                Some(o)
+            }),
+            OpKind::RepeatInterleave => first.and_then(|s| {
+                let dim = attr_usize(attrs, "dim", 0);
+                let reps = attr_usize(attrs, "reps", 1);
+                if dim >= s.len() {
+                    return None;
+                }
+                let mut o = s.clone();
+                o[dim] *= reps;
+                Some(o)
+            }),
+            OpKind::Embedding => match (first, attr_csv(attrs, "ids")) {
+                (Some(table), Some(ids)) if !table.is_empty() => {
+                    Some(vec![ids.len(), *table.last().unwrap()])
+                }
+                _ => None,
+            },
+            OpKind::Arange => Some(vec![attr_usize(attrs, "n", 1)]),
+            OpKind::CrossEntropy | OpKind::CountNonzero => Some(vec![1]),
+            OpKind::Eigvals => first.and_then(|s| s.first().map(|&n| vec![n])),
+            OpKind::Conv2d => {
+                conv2d_shape(first, ins.get(1).copied().flatten(), attrs)
+            }
+            // composite whose output geometry we don't model statically
+            OpKind::Stft => None,
+        };
+    }
+    shapes
+}
+
+fn conv2d_shape(
+    x: Option<&Vec<usize>>,
+    w: Option<&Vec<usize>>,
+    attrs: &Attrs,
+) -> Option<Vec<usize>> {
+    let (x, w) = (x?, w?);
+    if x.len() != 4 || w.len() != 4 {
+        return None;
+    }
+    let pad = attr_usize(attrs, "pad", 1);
+    let (co, kh, kw) = (w[0], w[2], w[3]);
+    let nhwc = attrs.get("layout").map(String::as_str) == Some("nhwc");
+    let (h, wdim) = if nhwc { (x[1], x[2]) } else { (x[2], x[3]) };
+    let oh = (h + 2 * pad).checked_sub(kh)? + 1;
+    let ow = (wdim + 2 * pad).checked_sub(kw)? + 1;
+    Some(if nhwc { vec![x[0], oh, ow, co] } else { vec![x[0], co, oh, ow] })
+}
+
+// ---------------------------------------------------------------------
+// Config lints (misconfiguration class: no graph to inspect)
+// ---------------------------------------------------------------------
+
+fn config_finding(severity: Severity, label: &str, suggestion: String) -> LintFinding {
+    LintFinding {
+        rule: "stream-config",
+        severity,
+        nodes: vec![],
+        label: label.to_string(),
+        est_wasted_j: 0.0,
+        suggestion,
+        steps: vec![],
+    }
+}
+
+/// Foot-gun checks over a [`StreamConfig`] *before* an auditor is
+/// constructed from it (the auditor asserts on some of these).
+pub fn lint_stream_config(cfg: &StreamConfig) -> Vec<LintFinding> {
+    let mut out = Vec::new();
+    if cfg.window_ops == 0 {
+        out.push(config_finding(
+            Severity::Error,
+            "window_ops",
+            "window_ops is 0: no window can ever close; use a positive window".into(),
+        ));
+    }
+    if cfg.hop_ops > cfg.window_ops {
+        out.push(config_finding(
+            Severity::Error,
+            "hop_ops",
+            format!(
+                "hop_ops {} > window_ops {}: ops between windows are never audited (the \
+                 auditor rejects this); set hop_ops <= window_ops",
+                cfg.hop_ops, cfg.window_ops
+            ),
+        ));
+    }
+    if cfg.ring_cap == 0 {
+        out.push(config_finding(
+            Severity::Error,
+            "ring_cap",
+            "ring_cap is 0: no segment can be retained for matching".into(),
+        ));
+    } else if cfg.ring_cap < cfg.window_ops {
+        out.push(config_finding(
+            Severity::Warn,
+            "ring_cap",
+            format!(
+                "ring_cap {} < window_ops {}: segments are evicted before their window \
+                 closes, forcing spurious resyncs",
+                cfg.ring_cap, cfg.window_ops
+            ),
+        ));
+    }
+    if cfg.resync_lookahead == 0 {
+        out.push(config_finding(
+            Severity::Warn,
+            "resync_lookahead",
+            "resync_lookahead is 0: a single dropped kernel desynchronises the stream \
+             permanently; use a positive lookahead"
+                .into(),
+        ));
+    }
+    if cfg.resync_min_run == 0 {
+        out.push(config_finding(
+            Severity::Warn,
+            "resync_min_run",
+            "resync_min_run is 0: any accidental single-op agreement re-anchors the \
+             stream; require a run of matching ops"
+                .into(),
+        ));
+    }
+    if cfg.content_eps <= 0.0 {
+        out.push(config_finding(
+            Severity::Warn,
+            "content_eps",
+            "content_eps <= 0 makes the content guard reject numerically identical \
+             tensors under float noise"
+                .into(),
+        ));
+    }
+    out
+}
+
+/// Sanity checks over a [`DetectConfig`].
+pub fn lint_detect_config(cfg: &DetectConfig) -> Vec<LintFinding> {
+    let mut out = Vec::new();
+    let mut cfg_finding = |severity, label: &str, suggestion: String| {
+        out.push(LintFinding {
+            rule: "detect-config",
+            severity,
+            nodes: vec![],
+            label: label.to_string(),
+            est_wasted_j: 0.0,
+            suggestion,
+            steps: vec![],
+        });
+    };
+    if cfg.energy_threshold <= 0.0 || cfg.energy_threshold > 1.0 {
+        cfg_finding(
+            Severity::Error,
+            "energy_threshold",
+            format!(
+                "energy_threshold {} is outside (0, 1]: every (or no) pair would be \
+                 flagged regardless of waste",
+                cfg.energy_threshold
+            ),
+        );
+    }
+    if cfg.perf_tolerance < 0.0 {
+        cfg_finding(
+            Severity::Error,
+            "perf_tolerance",
+            format!("perf_tolerance {} is negative", cfg.perf_tolerance),
+        );
+    }
+    if cfg.output_tolerance <= 0.0 {
+        cfg_finding(
+            Severity::Warn,
+            "output_tolerance",
+            "output_tolerance <= 0 rejects numerically identical outputs under float \
+             noise (tf32 vs fp32 pairs would never match)"
+                .into(),
+        );
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Manifest (expected-findings gate for CI)
+// ---------------------------------------------------------------------
+
+/// One expected finding: `target rule label-substring` per line.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ExpectedFinding {
+    pub target: String,
+    pub rule: String,
+    pub label_substr: String,
+}
+
+/// Parse an expected-findings manifest (`#` comments, blank lines ok).
+pub fn parse_manifest(text: &str) -> crate::Result<Vec<ExpectedFinding>> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        match (it.next(), it.next(), it.next()) {
+            (Some(target), Some(rule), Some(substr)) => out.push(ExpectedFinding {
+                target: target.to_string(),
+                rule: rule.to_string(),
+                label_substr: substr.to_string(),
+            }),
+            _ => {
+                return Err(Error::msg(format!(
+                    "manifest line {}: expected `target rule label-substring`, got `{line}`",
+                    lineno + 1
+                )))
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Check a lint report against a manifest; returns the unmet entries.
+pub fn check_manifest(report: &LintReport, expected: &[ExpectedFinding]) -> Vec<ExpectedFinding> {
+    expected
+        .iter()
+        .filter(|e| {
+            !report.targets.iter().any(|t| {
+                t.name == e.target
+                    && t.findings
+                        .iter()
+                        .any(|f| f.rule == e.rule && f.label.contains(&e.label_substr))
+            })
+        })
+        .cloned()
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::DeviceSpec;
+
+    fn ctx_parts() -> (Dispatcher, Env, DeviceSpec) {
+        (Dispatcher::new(), Env::new(), DeviceSpec::h200_sim())
+    }
+
+    fn simple_prog() -> Program {
+        let mut g = Graph::new("t");
+        let x = g.add(OpKind::Input, &[], "x");
+        let w = g.add(OpKind::Weight, &[], "w");
+        let m = g.add(OpKind::MatMul, &[x, w], "proj");
+        g.add(OpKind::Output, &[m], "out");
+        let mut p = Program::new(g);
+        p.feed(0, Tensor::zeros(&[8, 16]));
+        p.feed(1, Tensor::zeros(&[16, 4]));
+        p
+    }
+
+    #[test]
+    fn shapes_follow_matmul() {
+        let p = simple_prog();
+        let shapes = infer_shapes(&p.graph, &p.feeds);
+        assert_eq!(shapes[2], Some(vec![8, 4]));
+        assert_eq!(shapes[3], Some(vec![8, 4]));
+    }
+
+    #[test]
+    fn static_cost_matches_executor_cost_model() {
+        let p = simple_prog();
+        let (d, e, dev) = ctx_parts();
+        let cx = LintContext::new(&p, &d, &e, &dev).unwrap();
+        // the matmul must carry a positive static cost; virtual nodes none
+        assert!(cx.cost_j(2) > 0.0);
+        assert_eq!(cx.cost_j(0), 0.0);
+        assert_eq!(cx.cost_j(3), 0.0);
+        // and the executor bills the same energy for the same node
+        let exec = crate::exec::Executor::new(dev.clone(), Dispatcher::new(), Env::new());
+        let run = exec.run(&p);
+        let billed = run.node_energy_j(2);
+        assert!(
+            (cx.cost_j(2) - billed).abs() < 1e-12 * billed.max(1.0),
+            "static {} vs executor {}",
+            cx.cost_j(2),
+            billed
+        );
+    }
+
+    #[test]
+    fn broadcast_rules() {
+        assert_eq!(broadcast(&[4, 8], &[8]), Some(vec![4, 8]));
+        assert_eq!(broadcast(&[4, 1], &[4, 8]), Some(vec![4, 8]));
+        assert_eq!(broadcast(&[3], &[4]), None);
+    }
+
+    #[test]
+    fn structural_hashes_merge_renamed_duplicates() {
+        let mut g = Graph::new("h");
+        let x = g.add(OpKind::Input, &[], "x");
+        let a = g.add(OpKind::Gelu, &[x], "first");
+        let b = g.add(OpKind::Gelu, &[x], "second");
+        let y = g.add(OpKind::Input, &[], "y");
+        let c = g.add(OpKind::Gelu, &[y], "third");
+        let h = structural_hashes(&g);
+        assert_eq!(h[a], h[b], "same op on same input must collide");
+        assert_ne!(h[a], h[c], "same op on a different source must differ");
+    }
+
+    #[test]
+    fn stream_config_foot_guns() {
+        let good = StreamConfig::default();
+        assert!(lint_stream_config(&good).is_empty());
+        let bad = StreamConfig {
+            hop_ops: good.window_ops + 1,
+            resync_lookahead: 0,
+            ..StreamConfig::default()
+        };
+        let findings = lint_stream_config(&bad);
+        assert!(findings.iter().any(|f| f.label == "hop_ops" && f.severity == Severity::Error));
+        assert!(findings
+            .iter()
+            .any(|f| f.label == "resync_lookahead" && f.severity == Severity::Warn));
+    }
+
+    #[test]
+    fn detect_config_threshold_range() {
+        assert!(lint_detect_config(&DetectConfig::default()).is_empty());
+        let bad = DetectConfig { energy_threshold: 0.0, ..DetectConfig::default() };
+        let f = lint_detect_config(&bad);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].severity, Severity::Error);
+    }
+
+    #[test]
+    fn manifest_roundtrip_and_check() {
+        let text = "# comment\nmini-vllm unfused-matmul-add qkv_proj\n\ncase-c9 redundant-sync barrier\n";
+        let m = parse_manifest(text).unwrap();
+        assert_eq!(m.len(), 2);
+        assert!(parse_manifest("just two").is_err());
+        let empty = LintReport { targets: vec![], total_findings: 0, total_est_wasted_j: 0.0 };
+        assert_eq!(check_manifest(&empty, &m).len(), 2);
+    }
+
+    #[test]
+    fn severity_orders_and_parses() {
+        assert!(Severity::Error > Severity::Warn && Severity::Warn > Severity::Info);
+        assert_eq!(Severity::parse("warn"), Some(Severity::Warn));
+        assert_eq!(Severity::parse("nope"), None);
+    }
+
+    #[test]
+    fn sort_is_severity_then_estimate() {
+        let f = |rule: &'static str, sev, est| LintFinding {
+            rule,
+            severity: sev,
+            nodes: vec![],
+            label: rule.into(),
+            est_wasted_j: est,
+            suggestion: String::new(),
+            steps: vec![],
+        };
+        let mut v = vec![
+            f("small-warn", Severity::Warn, 0.1),
+            f("big-info", Severity::Info, 5.0),
+            f("big-warn", Severity::Warn, 2.0),
+        ];
+        sort_findings(&mut v);
+        let order: Vec<&str> = v.iter().map(|x| x.rule).collect();
+        assert_eq!(order, vec!["big-warn", "small-warn", "big-info"]);
+    }
+}

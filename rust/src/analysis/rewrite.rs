@@ -1,0 +1,262 @@
+//! Mechanical graph rewrites and the measure-after-fix loop.
+//!
+//! A lint finding's [`RewriteStep`]s describe the fix abstractly;
+//! [`apply_rewrite`] performs it on a clone of the program, and
+//! [`verify_finding`] closes the paper's measure-optimize-remeasure loop
+//! by running the original and the rewritten program through the
+//! existing differential pipeline ([`Magneton::audit`]) and comparing
+//! the measured energy delta against the static estimate.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::coordinator::{Magneton, SysRun};
+use crate::energy::DeviceSpec;
+use crate::exec::Program;
+use crate::graph::{Attrs, Graph, NodeId, OpKind};
+use crate::Error;
+
+use super::{LintFinding, RewriteStep};
+
+/// Apply `steps` to a clone of `prog`, rebuilding the graph so removed
+/// nodes are physically absent (the executor bills every constructed
+/// node, so merely disconnecting one would not save its energy).
+///
+/// Fails if a step drops a node something still consumes, or if
+/// bypass replacements form a cycle.
+pub fn apply_rewrite(prog: &Program, steps: &[RewriteStep]) -> crate::Result<Program> {
+    let g = &prog.graph;
+    let mut replace: BTreeMap<NodeId, NodeId> = BTreeMap::new();
+    let mut removed: BTreeSet<NodeId> = BTreeSet::new();
+    let mut set_attrs: Vec<(NodeId, &str, &str)> = Vec::new();
+    // add-node id → matmul id it absorbs
+    let mut fused: BTreeMap<NodeId, NodeId> = BTreeMap::new();
+    for step in steps {
+        match step {
+            RewriteStep::Bypass { node, replacement } => {
+                replace.insert(*node, *replacement);
+                removed.insert(*node);
+            }
+            RewriteStep::Remove { node } => {
+                removed.insert(*node);
+            }
+            RewriteStep::SetAttr { node, key, value } => {
+                set_attrs.push((*node, key, value));
+            }
+            RewriteStep::FuseAddMm { mm, add } => {
+                removed.insert(*mm);
+                fused.insert(*add, *mm);
+            }
+        }
+    }
+    for &node in fused.keys() {
+        let n = &g.nodes[node];
+        if n.op != OpKind::Add || n.inputs.len() != 2 {
+            return Err(Error::msg(format!(
+                "fuse-addmm target `{}` is not a two-input add",
+                n.label
+            )));
+        }
+    }
+    // follow bypass chains to the surviving producer
+    let resolve = |mut id: NodeId| -> crate::Result<NodeId> {
+        let mut hops = 0usize;
+        while let Some(&r) = replace.get(&id) {
+            id = r;
+            hops += 1;
+            if hops > replace.len() {
+                return Err(Error::msg("rewrite replacement chain forms a cycle"));
+            }
+        }
+        Ok(id)
+    };
+    let mut map: BTreeMap<NodeId, NodeId> = BTreeMap::new();
+    let mut out = Graph::new(&format!("{}+lint-fix", g.name));
+    for node in &g.nodes {
+        if removed.contains(&node.id) {
+            continue;
+        }
+        let remap = |inputs: &[NodeId]| -> crate::Result<Vec<NodeId>> {
+            inputs
+                .iter()
+                .map(|&i| {
+                    let r = resolve(i)?;
+                    map.get(&r).copied().ok_or_else(|| {
+                        Error::msg(format!(
+                            "rewrite drops node {r} (`{}`) still consumed by `{}`",
+                            g.nodes[r].label, node.label
+                        ))
+                    })
+                })
+                .collect()
+        };
+        let (op, inputs, mut attrs) = match fused.get(&node.id) {
+            Some(&mm_id) => {
+                let mm = &g.nodes[mm_id];
+                let bias = node
+                    .inputs
+                    .iter()
+                    .copied()
+                    .find(|&i| i != mm_id)
+                    .expect("validated two-input add");
+                // AddMm input order is [bias, x, w]
+                (OpKind::AddMm, remap(&[bias, mm.inputs[0], mm.inputs[1]])?, Attrs::new())
+            }
+            None => (node.op, remap(&node.inputs)?, node.attrs.clone()),
+        };
+        for &(id, key, value) in &set_attrs {
+            if id == node.id {
+                attrs.insert(key.to_string(), value.to_string());
+            }
+        }
+        let new_id = out.add_attrs(op, &inputs, &node.label, attrs);
+        map.insert(node.id, new_id);
+    }
+    let mut fixed = Program::new(out);
+    for (&old, tensor) in &prog.feeds {
+        if let Some(&new_id) = map.get(&old) {
+            fixed.feed(new_id, tensor.clone());
+        }
+    }
+    Ok(fixed)
+}
+
+/// What [`verify_finding`] measured.
+#[derive(Clone, Debug)]
+pub struct VerifyOutcome {
+    /// Label of the system the finding came from.
+    pub target: String,
+    /// Site label of the finding.
+    pub label: String,
+    /// Rule that produced the finding.
+    pub rule: &'static str,
+    /// Static cost-model estimate of the waste (J).
+    pub est_wasted_j: f64,
+    /// Measured `before − after` energy (J); positive = the fix saves.
+    pub measured_delta_j: f64,
+    pub energy_before_j: f64,
+    pub energy_after_j: f64,
+    /// Static estimate and measured delta agree on direction.
+    pub same_sign: bool,
+    /// The differential detector itself flagged the before/after pair.
+    pub detected: bool,
+}
+
+/// Apply a finding's rewrite and A/B the original vs fixed program
+/// through the full differential pipeline, confirming (or refuting) the
+/// static prediction with a measured energy delta.
+pub fn verify_finding(
+    run: &SysRun,
+    finding: &LintFinding,
+    device: &DeviceSpec,
+) -> crate::Result<VerifyOutcome> {
+    if finding.steps.is_empty() {
+        return Err(Error::msg(format!(
+            "finding `{}` at `{}` is advisory (no mechanical rewrite to verify)",
+            finding.rule, finding.label
+        )));
+    }
+    let rewritten = apply_rewrite(&run.prog, &finding.steps)
+        .map_err(|e| e.context(format!("verify `{}` at `{}`", finding.rule, finding.label)))?;
+    let fixed = SysRun::new(
+        &format!("{} (lint fix: {})", run.label, finding.rule),
+        run.dispatcher.clone(),
+        run.env.clone(),
+        rewritten,
+    );
+    let outcome = Magneton::new(device.clone()).audit(run, &fixed);
+    let before = outcome.a.total_energy_j;
+    let after = outcome.b.total_energy_j;
+    let measured = before - after;
+    Ok(VerifyOutcome {
+        target: run.label.clone(),
+        label: finding.label.clone(),
+        rule: finding.rule,
+        est_wasted_j: finding.est_wasted_j,
+        measured_delta_j: measured,
+        energy_before_j: before,
+        energy_after_j: after,
+        same_sign: (measured > 0.0) == (finding.est_wasted_j > 0.0),
+        detected: outcome.detected(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dispatch::Env;
+    use crate::exec::{Dispatcher, Executor};
+    use crate::tensor::Tensor;
+
+    fn exec(prog: &Program) -> crate::exec::RunArtifacts {
+        Executor::new(DeviceSpec::h200_sim(), Dispatcher::new(), Env::new()).run(prog)
+    }
+
+    #[test]
+    fn bypass_rewires_and_removes() {
+        let mut g = Graph::new("t");
+        let x = g.add(OpKind::Input, &[], "x");
+        let c = g.add(OpKind::Copy, &[x], "staging_copy");
+        let s = g.add_attr1(OpKind::Scale, &[c], "halve", "s", "0.5");
+        g.add(OpKind::Output, &[s], "out");
+        let mut p = Program::new(g);
+        p.feed(x, Tensor::randn(&mut crate::util::Prng::new(1), &[16, 16]));
+        let fixed =
+            apply_rewrite(&p, &[RewriteStep::Bypass { node: c, replacement: x }]).unwrap();
+        assert_eq!(fixed.graph.len(), 3, "copy must be physically gone");
+        assert!(fixed.graph.nodes.iter().all(|n| n.op != OpKind::Copy));
+        // outputs unchanged, energy strictly lower
+        let (before, after) = (exec(&p), exec(&fixed));
+        assert_eq!(before.output().to_vec(), after.output().to_vec());
+        assert!(after.total_energy_j < before.total_energy_j);
+    }
+
+    #[test]
+    fn remove_refuses_dangling_consumer() {
+        let mut g = Graph::new("t");
+        let x = g.add(OpKind::Input, &[], "x");
+        let t = g.add(OpKind::Tanh, &[x], "mid");
+        g.add(OpKind::Output, &[t], "out");
+        let p = Program::new(g);
+        let err = apply_rewrite(&p, &[RewriteStep::Remove { node: t }]).unwrap_err();
+        assert!(err.to_string().contains("still consumed"), "got: {err}");
+    }
+
+    #[test]
+    fn fuse_addmm_preserves_semantics() {
+        let mut rng = crate::util::Prng::new(7);
+        let mut g = Graph::new("lin");
+        let x = g.add(OpKind::Input, &[], "x");
+        let w = g.add(OpKind::Weight, &[], "w");
+        let b = g.add(OpKind::Weight, &[], "b");
+        let m = g.add(OpKind::MatMul, &[x, w], "lin.matmul");
+        let a = g.add(OpKind::Add, &[m, b], "lin.add_bias");
+        g.add(OpKind::Output, &[a], "out");
+        let mut p = Program::new(g);
+        p.feed(x, Tensor::randn(&mut rng, &[8, 12]));
+        p.feed(w, Tensor::randn(&mut rng, &[12, 4]));
+        p.feed(b, Tensor::randn(&mut rng, &[4]));
+        let fixed = apply_rewrite(&p, &[RewriteStep::FuseAddMm { mm: m, add: a }]).unwrap();
+        assert_eq!(fixed.graph.len(), 5);
+        let addmm = fixed.graph.nodes.iter().find(|n| n.op == OpKind::AddMm).unwrap();
+        assert_eq!(addmm.label, "lin.add_bias");
+        let (before, after) = (exec(&p), exec(&fixed));
+        let d = before.output().max_abs_diff(after.output());
+        assert!(d < 1e-5, "fused output drifted by {d}");
+        assert!(after.total_energy_j < before.total_energy_j);
+    }
+
+    #[test]
+    fn set_attr_lands_on_kept_node() {
+        let mut g = Graph::new("t");
+        let x = g.add(OpKind::Input, &[], "x");
+        let t = g.add(OpKind::Tanh, &[x], "mid");
+        g.add(OpKind::Output, &[t], "out");
+        let p = Program::new(g);
+        let fixed = apply_rewrite(
+            &p,
+            &[RewriteStep::SetAttr { node: t, key: "k".into(), value: "v".into() }],
+        )
+        .unwrap();
+        assert_eq!(fixed.graph.nodes[1].attrs.get("k").map(String::as_str), Some("v"));
+    }
+}

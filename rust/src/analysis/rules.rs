@@ -1,0 +1,819 @@
+//! The initial lint rule set, grounded in the paper's root-cause
+//! taxonomy (§6): redundant operations (dead subgraphs, duplicated
+//! subexpressions, layout round-trips, redundant copies, materialised
+//! broadcast expansion, redundant synchronisation), API misuse (unfused
+//! matmul+add), and algebraic no-ops that cost a kernel launch for
+//! identity math. Each rule reports the nodes involved, the joules the
+//! executor would bill for them, and — where the fix is mechanical — a
+//! rewrite that [`super::rewrite::apply_rewrite`] can perform.
+
+use std::collections::BTreeMap;
+
+use crate::graph::{NodeId, OpKind};
+
+use super::{attr_csv, attr_f64, attr_usize, LintContext, LintFinding, LintPass, RewriteStep, Severity};
+
+/// The default rule set, in stable order.
+pub fn default_passes() -> Vec<Box<dyn LintPass>> {
+    vec![
+        Box::new(DeadSubgraph),
+        Box::new(CseDuplicate),
+        Box::new(AlgebraicNoop),
+        Box::new(RedundantCopy),
+        Box::new(LayoutRoundtrip),
+        Box::new(ConcatSplitRoundtrip),
+        Box::new(RepeatBroadcast),
+        Box::new(UnfusedMatmulAdd),
+        Box::new(RedundantSync),
+    ]
+}
+
+// ---------------------------------------------------------------------
+// dead-subgraph
+// ---------------------------------------------------------------------
+
+/// Nodes that reach no `Output`: the executor still runs and bills them
+/// (it walks construction order, not liveness).
+pub struct DeadSubgraph;
+
+impl LintPass for DeadSubgraph {
+    fn name(&self) -> &'static str {
+        "dead-subgraph"
+    }
+
+    fn run(&self, cx: &LintContext) -> Vec<LintFinding> {
+        let g = cx.graph;
+        let outputs: Vec<NodeId> =
+            g.nodes.iter().filter(|n| n.op == OpKind::Output).map(|n| n.id).collect();
+        if outputs.is_empty() {
+            return vec![]; // output-less graphs have no liveness notion
+        }
+        let mut live = vec![false; g.len()];
+        for &o in &outputs {
+            for (id, reach) in g.reaching(o).into_iter().enumerate() {
+                live[id] = live[id] || reach;
+            }
+        }
+        let dead: Vec<NodeId> = (0..g.len()).filter(|&id| !live[id]).collect();
+        if dead.is_empty() {
+            return vec![];
+        }
+        let est: f64 = dead.iter().map(|&id| cx.cost_j(id)).sum();
+        // representative site: the most expensive dead node
+        let top = dead
+            .iter()
+            .copied()
+            .max_by(|&a, &b| cx.cost_j(a).total_cmp(&cx.cost_j(b)).then(b.cmp(&a)))
+            .expect("non-empty");
+        vec![LintFinding {
+            rule: "dead-subgraph",
+            severity: Severity::Warn,
+            nodes: dead.clone(),
+            label: g.nodes[top].label.clone(),
+            est_wasted_j: est,
+            suggestion: format!(
+                "{} node(s) never reach an Output but are still executed and billed; \
+                 delete the dead subgraph",
+                dead.len()
+            ),
+            steps: dead.iter().map(|&node| RewriteStep::Remove { node }).collect(),
+        }]
+    }
+}
+
+// ---------------------------------------------------------------------
+// cse-duplicate
+// ---------------------------------------------------------------------
+
+/// Structurally identical subtrees computed more than once: bucket the
+/// subtree hashes and point every duplicate at the first occurrence.
+pub struct CseDuplicate;
+
+impl LintPass for CseDuplicate {
+    fn name(&self) -> &'static str {
+        "cse-duplicate"
+    }
+
+    fn run(&self, cx: &LintContext) -> Vec<LintFinding> {
+        let g = cx.graph;
+        let mut buckets: BTreeMap<u64, Vec<NodeId>> = BTreeMap::new();
+        for node in &g.nodes {
+            if node.op.is_virtual() || node.inputs.is_empty() {
+                continue;
+            }
+            buckets.entry(cx.hashes[node.id]).or_default().push(node.id);
+        }
+        let mut out = Vec::new();
+        for (_, ids) in buckets {
+            if ids.len() < 2 {
+                continue;
+            }
+            let canon = ids[0];
+            // hash-collision paranoia: duplicates must agree on op + shape
+            let dups: Vec<NodeId> = ids[1..]
+                .iter()
+                .copied()
+                .filter(|&d| {
+                    g.nodes[d].op == g.nodes[canon].op && cx.shapes[d] == cx.shapes[canon]
+                })
+                .collect();
+            if dups.is_empty() {
+                continue;
+            }
+            let est: f64 = dups.iter().map(|&d| cx.cost_j(d)).sum();
+            let mut nodes = vec![canon];
+            nodes.extend(&dups);
+            out.push(LintFinding {
+                rule: "cse-duplicate",
+                severity: Severity::Warn,
+                nodes,
+                label: g.nodes[canon].label.clone(),
+                est_wasted_j: est,
+                suggestion: format!(
+                    "{} duplicate(s) of `{}` recompute an identical subtree; reuse its \
+                     output",
+                    dups.len(),
+                    g.nodes[canon].label
+                ),
+                steps: dups
+                    .iter()
+                    .map(|&d| RewriteStep::Bypass { node: d, replacement: canon })
+                    .collect(),
+            });
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// algebraic-noop
+// ---------------------------------------------------------------------
+
+/// Identity math that still launches a kernel: `Scale(1)`, `Pow(1)`,
+/// `Contiguous` straight after `Contiguous`, back-to-back `Copy`.
+pub struct AlgebraicNoop;
+
+impl LintPass for AlgebraicNoop {
+    fn name(&self) -> &'static str {
+        "algebraic-noop"
+    }
+
+    fn run(&self, cx: &LintContext) -> Vec<LintFinding> {
+        let g = cx.graph;
+        let mut out = Vec::new();
+        for node in &g.nodes {
+            let input_op = node.inputs.first().map(|&i| g.nodes[i].op);
+            let reason = match node.op {
+                OpKind::Scale if attr_f64(&node.attrs, "s", 1.0) == 1.0 => "scale by 1.0",
+                OpKind::Pow if attr_f64(&node.attrs, "p", 2.0) == 1.0 => "pow with exponent 1.0",
+                OpKind::Contiguous if input_op == Some(OpKind::Contiguous) => {
+                    "contiguous of an already-contiguous tensor"
+                }
+                OpKind::Copy if input_op == Some(OpKind::Copy) => "copy of a fresh copy",
+                _ => continue,
+            };
+            out.push(LintFinding {
+                rule: "algebraic-noop",
+                severity: Severity::Warn,
+                nodes: vec![node.id],
+                label: node.label.clone(),
+                est_wasted_j: cx.cost_j(node.id),
+                suggestion: format!("`{}` is a no-op ({reason}); drop it", node.label),
+                steps: vec![RewriteStep::Bypass { node: node.id, replacement: node.inputs[0] }],
+            });
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// redundant-copy
+// ---------------------------------------------------------------------
+
+/// `Copy` of a source tensor (`Input`/`Weight`): the buffer is already
+/// resident — the copy is pure HBM traffic (case c2's kv-cache copy).
+pub struct RedundantCopy;
+
+impl LintPass for RedundantCopy {
+    fn name(&self) -> &'static str {
+        "redundant-copy"
+    }
+
+    fn run(&self, cx: &LintContext) -> Vec<LintFinding> {
+        let g = cx.graph;
+        let mut out = Vec::new();
+        for node in &g.nodes {
+            if node.op != OpKind::Copy {
+                continue;
+            }
+            let src = match node.inputs.first() {
+                Some(&i) => i,
+                None => continue,
+            };
+            if !matches!(g.nodes[src].op, OpKind::Input | OpKind::Weight) {
+                continue;
+            }
+            out.push(LintFinding {
+                rule: "redundant-copy",
+                severity: Severity::Warn,
+                nodes: vec![node.id],
+                label: node.label.clone(),
+                est_wasted_j: cx.cost_j(node.id),
+                suggestion: format!(
+                    "`{}` copies the already-resident source `{}`; read it in place \
+                     (e.g. pass an aligned layout so no staging copy is needed)",
+                    node.label, g.nodes[src].label
+                ),
+                steps: vec![RewriteStep::Bypass { node: node.id, replacement: src }],
+            });
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// layout-roundtrip
+// ---------------------------------------------------------------------
+
+/// `Permute → Contiguous → Permute → Contiguous` where the two permutes
+/// compose to the identity: two materialised copies for a tensor that
+/// ends up exactly where it started (case c5's default-format round
+/// trip).
+pub struct LayoutRoundtrip;
+
+impl LintPass for LayoutRoundtrip {
+    fn name(&self) -> &'static str {
+        "layout-roundtrip"
+    }
+
+    fn run(&self, cx: &LintContext) -> Vec<LintFinding> {
+        let g = cx.graph;
+        let mut out = Vec::new();
+        for node in &g.nodes {
+            // anchor at the trailing Contiguous of the round trip
+            let c2 = node;
+            if c2.op != OpKind::Contiguous {
+                continue;
+            }
+            let p2 = match c2.inputs.first().map(|&i| &g.nodes[i]) {
+                Some(n) if n.op == OpKind::Permute => n,
+                _ => continue,
+            };
+            let c1 = match p2.inputs.first().map(|&i| &g.nodes[i]) {
+                Some(n) if n.op == OpKind::Contiguous => n,
+                _ => continue,
+            };
+            let p1 = match c1.inputs.first().map(|&i| &g.nodes[i]) {
+                Some(n) if n.op == OpKind::Permute => n,
+                _ => continue,
+            };
+            // the interior of the chain must have no other consumers
+            if cx.consumers[p2.id] != [c2.id]
+                || cx.consumers[c1.id] != [p2.id]
+                || cx.consumers[p1.id] != [c1.id]
+            {
+                continue;
+            }
+            let (perm1, perm2) = match (attr_csv(&p1.attrs, "perm"), attr_csv(&p2.attrs, "perm")) {
+                (Some(a), Some(b)) if a.len() == b.len() => (a, b),
+                _ => continue,
+            };
+            let identity = perm2.iter().enumerate().all(|(i, &p)| perm1.get(p) == Some(&i));
+            if !identity {
+                continue;
+            }
+            let src = match p1.inputs.first() {
+                Some(&i) => i,
+                None => continue,
+            };
+            let est = cx.cost_j(c1.id) + cx.cost_j(c2.id);
+            out.push(LintFinding {
+                rule: "layout-roundtrip",
+                severity: Severity::Warn,
+                nodes: vec![p1.id, c1.id, p2.id, c2.id],
+                label: c2.label.clone(),
+                est_wasted_j: est,
+                suggestion: format!(
+                    "`{}` permutes, materialises, permutes back, and materialises again — \
+                     an identity round trip costing two full copies; keep `{}`'s layout",
+                    c2.label, g.nodes[src].label
+                ),
+                steps: vec![
+                    RewriteStep::Bypass { node: c2.id, replacement: src },
+                    RewriteStep::Remove { node: p2.id },
+                    RewriteStep::Remove { node: c1.id },
+                    RewriteStep::Remove { node: p1.id },
+                ],
+            });
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// concat-split-roundtrip
+// ---------------------------------------------------------------------
+
+/// `Concat` whose only consumers split it straight back into the
+/// original parts (case c7's skip-connection concat/chunk round trip).
+pub struct ConcatSplitRoundtrip;
+
+impl LintPass for ConcatSplitRoundtrip {
+    fn name(&self) -> &'static str {
+        "concat-split-roundtrip"
+    }
+
+    fn run(&self, cx: &LintContext) -> Vec<LintFinding> {
+        let g = cx.graph;
+        let mut out = Vec::new();
+        for node in &g.nodes {
+            if node.op != OpKind::Concat || node.inputs.is_empty() {
+                continue;
+            }
+            let dim = attr_usize(&node.attrs, "dim", 0);
+            let splits = &cx.consumers[node.id];
+            if splits.is_empty() {
+                continue;
+            }
+            // every consumer must be an even SplitChunk along the same
+            // dim with as many chunks as the concat has inputs
+            let k = node.inputs.len();
+            if !splits.iter().all(|&s| {
+                let sn = &g.nodes[s];
+                sn.op == OpKind::SplitChunk
+                    && attr_usize(&sn.attrs, "dim", 0) == dim
+                    && attr_usize(&sn.attrs, "chunks", 1) == k
+                    && attr_usize(&sn.attrs, "index", 0) < k
+            }) {
+                continue;
+            }
+            // chunks are equal-sized only if every part has the same
+            // extent along `dim`
+            let part = match cx.shapes[node.inputs[0]].as_ref().and_then(|s| s.get(dim)) {
+                Some(&d) => d,
+                None => continue,
+            };
+            if !node.inputs.iter().all(|&i| {
+                cx.shapes[i].as_ref().and_then(|s| s.get(dim)) == Some(&part)
+            }) {
+                continue;
+            }
+            let est =
+                cx.cost_j(node.id) + splits.iter().map(|&s| cx.cost_j(s)).sum::<f64>();
+            let mut nodes = vec![node.id];
+            nodes.extend(splits.iter().copied());
+            nodes.sort_unstable();
+            let mut steps: Vec<RewriteStep> = splits
+                .iter()
+                .map(|&s| {
+                    let idx = attr_usize(&g.nodes[s].attrs, "index", 0);
+                    RewriteStep::Bypass { node: s, replacement: node.inputs[idx] }
+                })
+                .collect();
+            steps.push(RewriteStep::Remove { node: node.id });
+            out.push(LintFinding {
+                rule: "concat-split-roundtrip",
+                severity: Severity::Warn,
+                nodes,
+                label: node.label.clone(),
+                est_wasted_j: est,
+                suggestion: format!(
+                    "`{}` concatenates {} tensors only to split them straight back; use \
+                     the original tensors directly",
+                    node.label, k
+                ),
+                steps,
+            });
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// repeat-broadcast
+// ---------------------------------------------------------------------
+
+/// Materialised `RepeatInterleave` feeding an op that can broadcast the
+/// expansion itself — the paper's flagship redundant-operation case
+/// (c4's GQA head expansion): the attention kernel takes `gqa_reps` and
+/// expands in-kernel for free.
+pub struct RepeatBroadcast;
+
+impl LintPass for RepeatBroadcast {
+    fn name(&self) -> &'static str {
+        "repeat-broadcast"
+    }
+
+    fn run(&self, cx: &LintContext) -> Vec<LintFinding> {
+        let g = cx.graph;
+        let mut out = Vec::new();
+        // (a) rewritable: repeats whose sole consumer is an Attention
+        // that does not already expand in-kernel
+        for attn in &g.nodes {
+            if attn.op != OpKind::Attention || attr_usize(&attn.attrs, "gqa_reps", 1) > 1 {
+                continue;
+            }
+            let reps_nodes: Vec<NodeId> = attn
+                .inputs
+                .iter()
+                .copied()
+                .filter(|&i| {
+                    g.nodes[i].op == OpKind::RepeatInterleave
+                        && attr_usize(&g.nodes[i].attrs, "reps", 1) > 1
+                        && cx.consumers[i] == [attn.id]
+                })
+                .collect();
+            if reps_nodes.is_empty() {
+                continue;
+            }
+            let reps = attr_usize(&g.nodes[reps_nodes[0]].attrs, "reps", 1);
+            if !reps_nodes
+                .iter()
+                .all(|&r| attr_usize(&g.nodes[r].attrs, "reps", 1) == reps)
+            {
+                continue; // mixed factors cannot fold into one gqa_reps
+            }
+            let est: f64 = reps_nodes.iter().map(|&r| cx.cost_j(r)).sum();
+            let mut nodes = reps_nodes.clone();
+            nodes.push(attn.id);
+            nodes.sort_unstable();
+            let mut steps: Vec<RewriteStep> = reps_nodes
+                .iter()
+                .map(|&r| RewriteStep::Bypass { node: r, replacement: g.nodes[r].inputs[0] })
+                .collect();
+            steps.push(RewriteStep::SetAttr {
+                node: attn.id,
+                key: "gqa_reps".into(),
+                value: reps.to_string(),
+            });
+            out.push(LintFinding {
+                rule: "repeat-broadcast",
+                severity: Severity::Warn,
+                nodes,
+                label: g.nodes[reps_nodes[0]].label.clone(),
+                est_wasted_j: est,
+                suggestion: format!(
+                    "`{}` materialises a {reps}x head expansion that `{}` can broadcast \
+                     in-kernel; pass gqa_reps={reps} instead",
+                    g.nodes[reps_nodes[0]].label, attn.label
+                ),
+                steps,
+            });
+        }
+        // (b) advisory: repeats feeding only broadcast-capable
+        // elementwise ops (no mechanical rewrite: the operand would need
+        // a singleton dim for broadcasting to kick in)
+        for node in &g.nodes {
+            if node.op != OpKind::RepeatInterleave
+                || attr_usize(&node.attrs, "reps", 1) <= 1
+                || cx.consumers[node.id].is_empty()
+            {
+                continue;
+            }
+            let all_elementwise = cx.consumers[node.id].iter().all(|&c| {
+                matches!(g.nodes[c].op, OpKind::Add | OpKind::Sub | OpKind::Mul | OpKind::Div)
+            });
+            if !all_elementwise {
+                continue;
+            }
+            out.push(LintFinding {
+                rule: "repeat-broadcast",
+                severity: Severity::Info,
+                nodes: vec![node.id],
+                label: node.label.clone(),
+                est_wasted_j: cx.cost_j(node.id),
+                suggestion: format!(
+                    "`{}` materialises a repeat that only feeds elementwise ops; a \
+                     broadcastable view (singleton dim) would avoid the copy",
+                    node.label
+                ),
+                steps: vec![],
+            });
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// unfused-matmul-add
+// ---------------------------------------------------------------------
+
+/// `MatMul` whose only consumer adds a bias: a fused `AddMm` saves the
+/// intermediate's HBM round trip and a launch. Reported only when the
+/// target's own dispatcher prices the fused kernel cheaper (a system
+/// with a power-hungry addmm epilogue, case c10, would not benefit).
+pub struct UnfusedMatmulAdd;
+
+impl LintPass for UnfusedMatmulAdd {
+    fn name(&self) -> &'static str {
+        "unfused-matmul-add"
+    }
+
+    fn run(&self, cx: &LintContext) -> Vec<LintFinding> {
+        let g = cx.graph;
+        let mut out = Vec::new();
+        for mm in &g.nodes {
+            if mm.op != OpKind::MatMul || cx.consumers[mm.id].len() != 1 {
+                continue;
+            }
+            let add = &g.nodes[cx.consumers[mm.id][0]];
+            if add.op != OpKind::Add || add.inputs.len() != 2 {
+                continue;
+            }
+            let bias = match add.inputs.iter().copied().find(|&i| i != mm.id) {
+                Some(b) => b,
+                None => continue, // add(m, m) is not a bias pattern
+            };
+            let (x, w) = match (mm.inputs.first(), mm.inputs.get(1)) {
+                (Some(&x), Some(&w)) => (x, w),
+                _ => continue,
+            };
+            let shapes = |ids: &[NodeId]| -> Option<Vec<Vec<usize>>> {
+                ids.iter().map(|&i| cx.shapes[i].clone()).collect()
+            };
+            let (in_shapes, out_shape) = match (shapes(&[bias, x, w]), cx.shapes[add.id].clone()) {
+                (Some(i), Some(o)) => (i, o),
+                _ => continue,
+            };
+            let fused = cx.op_cost(OpKind::AddMm, &Default::default(), &in_shapes, &out_shape);
+            let est = cx.cost_j(mm.id) + cx.cost_j(add.id) - fused.energy_j;
+            if est <= 0.0 {
+                continue; // fusion would not pay on this dispatcher
+            }
+            out.push(LintFinding {
+                rule: "unfused-matmul-add",
+                severity: Severity::Info,
+                nodes: vec![mm.id, add.id],
+                label: mm.label.clone(),
+                est_wasted_j: est,
+                suggestion: format!(
+                    "`{}` + `{}` round-trip the GEMM output through HBM; a fused addmm \
+                     kernel saves the intermediate",
+                    mm.label, add.label
+                ),
+                steps: vec![RewriteStep::FuseAddMm { mm: mm.id, add: add.id }],
+            });
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// redundant-sync
+// ---------------------------------------------------------------------
+
+/// A `Barrier` that dominates no `AllReduce`: nothing downstream needs
+/// the rendezvous, so the GPU spins near base power for nothing (case
+/// c9's `dist.Join` busy-wait after the collective already finished).
+pub struct RedundantSync;
+
+impl LintPass for RedundantSync {
+    fn name(&self) -> &'static str {
+        "redundant-sync"
+    }
+
+    fn run(&self, cx: &LintContext) -> Vec<LintFinding> {
+        let g = cx.graph;
+        let mut out = Vec::new();
+        for node in &g.nodes {
+            if node.op != OpKind::Barrier {
+                continue;
+            }
+            let guards_collective = g.nodes.iter().any(|n| {
+                n.op == OpKind::AllReduce && n.id != node.id && cx.dom.dom.dominates(node.id, n.id)
+            });
+            if guards_collective {
+                continue;
+            }
+            let steps = match node.inputs.first() {
+                Some(&i) => vec![RewriteStep::Bypass { node: node.id, replacement: i }],
+                None => vec![RewriteStep::Remove { node: node.id }],
+            };
+            out.push(LintFinding {
+                rule: "redundant-sync",
+                severity: Severity::Warn,
+                nodes: vec![node.id],
+                label: node.label.clone(),
+                est_wasted_j: cx.cost_j(node.id),
+                suggestion: format!(
+                    "`{}` gates no collective (it dominates no all_reduce); the busy-wait \
+                     burns power for nothing — drop the barrier or use an event wait",
+                    node.label
+                ),
+                steps,
+            });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dispatch::Env;
+    use crate::energy::DeviceSpec;
+    use crate::exec::{Dispatcher, Program};
+    use crate::graph::Graph;
+    use crate::tensor::Tensor;
+
+    struct Harness {
+        prog: Program,
+        dispatcher: Dispatcher,
+        env: Env,
+        device: DeviceSpec,
+    }
+
+    impl Harness {
+        fn new(prog: Program) -> Harness {
+            Harness {
+                prog,
+                dispatcher: Dispatcher::new(),
+                env: Env::new(),
+                device: DeviceSpec::h200_sim(),
+            }
+        }
+
+        fn lint(&self) -> Vec<LintFinding> {
+            let cx =
+                LintContext::new(&self.prog, &self.dispatcher, &self.env, &self.device).unwrap();
+            super::super::lint_graph(&cx)
+        }
+    }
+
+    fn feed_x(p: &mut Program, shape: &[usize]) {
+        p.feed(0, Tensor::zeros(shape));
+    }
+
+    #[test]
+    fn dead_subgraph_is_found_and_costed() {
+        let mut g = Graph::new("dead");
+        let x = g.add(OpKind::Input, &[], "x");
+        let live = g.add(OpKind::Gelu, &[x], "live");
+        let dead = g.add(OpKind::Tanh, &[x], "dead.branch");
+        let dead2 = g.add(OpKind::Gelu, &[dead], "dead.tip");
+        g.add(OpKind::Output, &[live], "out");
+        let mut p = Program::new(g);
+        feed_x(&mut p, &[64, 64]);
+        let h = Harness::new(p);
+        let f = h.lint();
+        let dead_f: Vec<_> = f.iter().filter(|f| f.rule == "dead-subgraph").collect();
+        assert_eq!(dead_f.len(), 1);
+        assert_eq!(dead_f[0].nodes, vec![dead, dead2]);
+        assert!(dead_f[0].est_wasted_j > 0.0);
+    }
+
+    #[test]
+    fn cse_duplicates_bucket_together() {
+        let mut g = Graph::new("cse");
+        let x = g.add(OpKind::Input, &[], "x");
+        let a = g.add(OpKind::Gelu, &[x], "act.a");
+        let b = g.add(OpKind::Gelu, &[x], "act.b"); // duplicate of a
+        let s = g.add(OpKind::Add, &[a, b], "sum");
+        g.add(OpKind::Output, &[s], "out");
+        let mut p = Program::new(g);
+        feed_x(&mut p, &[32, 32]);
+        let f = Harness::new(p).lint();
+        let cse: Vec<_> = f.iter().filter(|f| f.rule == "cse-duplicate").collect();
+        assert_eq!(cse.len(), 1);
+        assert_eq!(cse[0].nodes, vec![a, b]);
+        assert_eq!(cse[0].steps, vec![RewriteStep::Bypass { node: b, replacement: a }]);
+    }
+
+    #[test]
+    fn algebraic_noops_scale_pow_contiguous() {
+        let mut g = Graph::new("noop");
+        let x = g.add(OpKind::Input, &[], "x");
+        let s1 = g.add_attr1(OpKind::Scale, &[x], "scale.one", "s", "1.0");
+        let p1 = g.add_attr1(OpKind::Pow, &[s1], "pow.one", "p", "1");
+        let c1 = g.add(OpKind::Contiguous, &[p1], "contig.a");
+        let c2 = g.add(OpKind::Contiguous, &[c1], "contig.b");
+        g.add(OpKind::Output, &[c2], "out");
+        let mut p = Program::new(g);
+        feed_x(&mut p, &[16, 16]);
+        let f = Harness::new(p).lint();
+        let noops: Vec<&str> = f
+            .iter()
+            .filter(|f| f.rule == "algebraic-noop")
+            .map(|f| f.label.as_str())
+            .collect();
+        assert!(noops.contains(&"scale.one"));
+        assert!(noops.contains(&"pow.one"));
+        assert!(noops.contains(&"contig.b"));
+        assert!(!noops.contains(&"contig.a"), "first contiguous is not a no-op");
+        // a real scale must not be flagged
+        assert!(!f.iter().any(|f| f.label == "scale.half"));
+    }
+
+    #[test]
+    fn scale_with_real_factor_not_flagged() {
+        let mut g = Graph::new("ok");
+        let x = g.add(OpKind::Input, &[], "x");
+        let s = g.add_attr1(OpKind::Scale, &[x], "scale.half", "s", "0.5");
+        g.add(OpKind::Output, &[s], "out");
+        let mut p = Program::new(g);
+        feed_x(&mut p, &[8]);
+        let f = Harness::new(p).lint();
+        assert!(!f.iter().any(|f| f.rule == "algebraic-noop"));
+    }
+
+    #[test]
+    fn layout_roundtrip_identity_perms_only() {
+        let build = |perm2: &str| {
+            let mut g = Graph::new("rt");
+            let x = g.add(OpKind::Input, &[], "x");
+            let p1 = g.add_attr1(OpKind::Permute, &[x], "to_hnd", "perm", "0,2,1,3");
+            let c1 = g.add(OpKind::Contiguous, &[p1], "fmt_copy");
+            let p2 = g.add_attr1(OpKind::Permute, &[c1], "back", "perm", perm2);
+            let c2 = g.add(OpKind::Contiguous, &[p2], "fmt_copy2");
+            g.add(OpKind::Output, &[c2], "out");
+            let mut p = Program::new(g);
+            feed_x(&mut p, &[2, 4, 8, 16]);
+            Harness::new(p).lint()
+        };
+        let f = build("0,2,1,3"); // involution: identity round trip
+        let rt: Vec<_> = f.iter().filter(|f| f.rule == "layout-roundtrip").collect();
+        assert_eq!(rt.len(), 1);
+        assert_eq!(rt[0].nodes, vec![1, 2, 3, 4]);
+        // a non-inverse second permute is NOT a round trip
+        let f = build("0,3,1,2");
+        assert!(!f.iter().any(|f| f.rule == "layout-roundtrip"));
+    }
+
+    #[test]
+    fn barrier_guarding_collective_not_flagged() {
+        let mut g = Graph::new("sync");
+        let x = g.add(OpKind::Input, &[], "grads");
+        let b = g.add(OpKind::Barrier, &[x], "pre.barrier");
+        let ar = g.add(OpKind::AllReduce, &[b], "ddp.all_reduce");
+        g.add(OpKind::Output, &[ar], "out");
+        let mut p = Program::new(g);
+        feed_x(&mut p, &[1024]);
+        let f = Harness::new(p).lint();
+        assert!(!f.iter().any(|f| f.rule == "redundant-sync"));
+    }
+
+    #[test]
+    fn barrier_after_collective_is_flagged() {
+        let mut g = Graph::new("sync2");
+        let x = g.add(OpKind::Input, &[], "grads");
+        let ar = g.add(OpKind::AllReduce, &[x], "ddp.all_reduce");
+        let b = g.add(OpKind::Barrier, &[ar], "dist.Join.barrier");
+        g.add(OpKind::Output, &[b], "out");
+        let mut p = Program::new(g);
+        feed_x(&mut p, &[1024]);
+        let f = Harness::new(p).lint();
+        let sync: Vec<_> = f.iter().filter(|f| f.rule == "redundant-sync").collect();
+        assert_eq!(sync.len(), 1);
+        assert_eq!(sync[0].nodes, vec![b]);
+        assert!(sync[0].est_wasted_j > 0.0, "barrier busy-wait must carry a cost");
+    }
+
+    #[test]
+    fn unfused_matmul_add_suggests_fusion() {
+        let mut g = Graph::new("lin");
+        let x = g.add(OpKind::Input, &[], "x");
+        let w = g.add(OpKind::Weight, &[], "w");
+        let bias = g.add(OpKind::Weight, &[], "b");
+        let m = g.add(OpKind::MatMul, &[x, w], "lin.matmul");
+        let a = g.add(OpKind::Add, &[m, bias], "lin.add_bias");
+        g.add(OpKind::Output, &[a], "out");
+        let mut p = Program::new(g);
+        p.feed(0, Tensor::zeros(&[64, 128]));
+        p.feed(1, Tensor::zeros(&[128, 32]));
+        p.feed(2, Tensor::zeros(&[32]));
+        let f = Harness::new(p).lint();
+        let fused: Vec<_> = f.iter().filter(|f| f.rule == "unfused-matmul-add").collect();
+        assert_eq!(fused.len(), 1);
+        assert_eq!(fused[0].nodes, vec![m, a]);
+        assert_eq!(fused[0].steps, vec![RewriteStep::FuseAddMm { mm: m, add: a }]);
+        assert!(fused[0].est_wasted_j > 0.0);
+    }
+
+    #[test]
+    fn repeat_into_attention_rewrites_to_gqa_attr() {
+        let mut g = Graph::new("gqa");
+        let q = g.add(OpKind::Input, &[], "q");
+        let k = g.add(OpKind::Input, &[], "k");
+        let v = g.add(OpKind::Input, &[], "v");
+        let mut at = crate::graph::Attrs::new();
+        at.insert("dim".into(), "2".into());
+        at.insert("reps".into(), "2".into());
+        let kr = g.add_attrs(OpKind::RepeatInterleave, &[k], "attn.k_repeat_interleave", at.clone());
+        let vr = g.add_attrs(OpKind::RepeatInterleave, &[v], "attn.v_repeat_interleave", at);
+        let mut aat = crate::graph::Attrs::new();
+        aat.insert("layout".into(), "nhd".into());
+        let attn = g.add_attrs(OpKind::Attention, &[q, kr, vr], "attn.flash", aat);
+        g.add(OpKind::Output, &[attn], "out");
+        let mut p = Program::new(g);
+        p.feed(0, Tensor::zeros(&[1, 8, 4, 16]));
+        p.feed(1, Tensor::zeros(&[1, 8, 2, 16]));
+        p.feed(2, Tensor::zeros(&[1, 8, 2, 16]));
+        let f = Harness::new(p).lint();
+        let rb: Vec<_> = f.iter().filter(|f| f.rule == "repeat-broadcast").collect();
+        assert_eq!(rb.len(), 1);
+        assert_eq!(rb[0].nodes, vec![kr, vr, attn]);
+        assert!(rb[0]
+            .steps
+            .contains(&RewriteStep::SetAttr { node: attn, key: "gqa_reps".into(), value: "2".into() }));
+    }
+}

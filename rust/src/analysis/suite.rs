@@ -1,0 +1,215 @@
+//! The lint suite: every built-in system program as a lintable target,
+//! plus the fan-out driver that runs the pass framework over all of
+//! them. This is what `magneton lint` invokes; CI gates the result on a
+//! committed expected-findings manifest so the static rules provably
+//! rediscover a declared subset of `cases/known.rs`.
+
+use crate::cases;
+use crate::coordinator::SysRun;
+use crate::energy::DeviceSpec;
+use crate::systems::frameworks::{
+    build_conv, conv_params, tf_dispatcher, torch_dispatcher, ConvLayout, ConvSpec,
+};
+use crate::systems::imagegen::{
+    build_unet_block, diffusers_dispatcher, sd_dispatcher, sd_env, UnetBuildOpts, UnetParams,
+    UnetSpec,
+};
+use crate::systems::llm::{
+    build_llm, default_env, hf_dispatcher, megatron_dispatcher, sglang_dispatcher,
+    vllm_dispatcher, LlmBuildOpts, LlmSpec, TransformerParams,
+};
+use crate::systems::SystemId;
+use crate::util::pool::par_map;
+use crate::util::Prng;
+
+use super::{lint_graph, LintContext, LintFinding};
+
+/// One lintable system program.
+pub struct LintTarget {
+    /// Stable name used by the CLI `--target` filter and the manifest.
+    pub name: String,
+    pub run: SysRun,
+}
+
+impl LintTarget {
+    fn new(name: &str, run: SysRun) -> LintTarget {
+        LintTarget { name: name.to_string(), run }
+    }
+}
+
+/// Every built-in program the lint suite covers: the four LLM serving
+/// stacks (shared weights), both UNet builds, the torch/tf conv
+/// routines, and the wasteful sides of the two known cases the static
+/// rules are expected to rediscover (c2 redundant copy, c9 redundant
+/// barrier).
+pub fn builtin_targets(seed: u64) -> Vec<LintTarget> {
+    let mut out = Vec::new();
+    let mut rng = Prng::new(seed);
+    let params = TransformerParams::new(&mut rng, LlmSpec::gpt2_sim());
+    let llm: [(SystemId, LlmBuildOpts, crate::exec::Dispatcher); 4] = [
+        (SystemId::MiniHf, LlmBuildOpts::hf(), hf_dispatcher()),
+        (SystemId::MiniVllm, LlmBuildOpts::vllm(), vllm_dispatcher()),
+        (SystemId::MiniSglang, LlmBuildOpts::sglang(), sglang_dispatcher()),
+        (SystemId::MiniMegatron, LlmBuildOpts::megatron(), megatron_dispatcher()),
+    ];
+    for (sys, opts, dispatcher) in llm {
+        let prog = build_llm(&params, &opts);
+        out.push(LintTarget::new(
+            sys.name(),
+            SysRun::new(sys.name(), dispatcher, default_env(sys), prog),
+        ));
+    }
+    let unet = UnetParams::new(&mut rng, UnetSpec::sd3_sim());
+    out.push(LintTarget::new(
+        SystemId::MiniSd.name(),
+        SysRun::new(
+            SystemId::MiniSd.name(),
+            sd_dispatcher(),
+            sd_env(true),
+            build_unet_block(&unet, &UnetBuildOpts::sd()),
+        ),
+    ));
+    out.push(LintTarget::new(
+        SystemId::MiniDiffusers.name(),
+        SysRun::new(
+            SystemId::MiniDiffusers.name(),
+            diffusers_dispatcher(),
+            sd_env(true),
+            build_unet_block(&unet, &UnetBuildOpts::diffusers()),
+        ),
+    ));
+    let spec = ConvSpec::fig5c();
+    let (x, w) = conv_params(&mut rng, spec);
+    out.push(LintTarget::new(
+        SystemId::MiniTorch.name(),
+        SysRun::new(
+            SystemId::MiniTorch.name(),
+            torch_dispatcher(),
+            default_env(SystemId::MiniTorch),
+            build_conv("torch", spec, ConvLayout::Nchw, &x, &w, "torch.conv2d"),
+        ),
+    ));
+    out.push(LintTarget::new(
+        SystemId::MiniTf.name(),
+        SysRun::new(
+            SystemId::MiniTf.name(),
+            tf_dispatcher(),
+            default_env(SystemId::MiniTf),
+            build_conv("tf", spec, ConvLayout::Nhwc, &x, &w, "tf.conv2d"),
+        ),
+    ));
+    for id in ["c2", "c9"] {
+        let scenario = cases::by_id(id).expect("known case");
+        let (wasteful, _clean) = (scenario.build)(&mut Prng::new(seed));
+        out.push(LintTarget::new(&format!("case-{id}"), wasteful));
+    }
+    out
+}
+
+/// Lint result for one target.
+pub struct TargetReport {
+    pub name: String,
+    /// Graph size (all nodes, including virtual ones).
+    pub nodes: usize,
+    /// Cost-model estimate of the whole program's energy (J).
+    pub static_j: f64,
+    /// Ranked findings (severity desc, then estimated waste desc).
+    pub findings: Vec<LintFinding>,
+    /// Set when the target's graph failed validation or shape inference.
+    pub error: Option<String>,
+}
+
+/// Lint results across the whole suite.
+pub struct LintReport {
+    pub targets: Vec<TargetReport>,
+    pub total_findings: usize,
+    pub total_est_wasted_j: f64,
+}
+
+/// Run the default passes over every target, fanning out across
+/// `threads` workers. Per-target results are independent and each
+/// target's findings are fully ordered, so the report is
+/// bit-identical for any worker count.
+pub fn lint_suite(targets: &[LintTarget], device: &DeviceSpec, threads: usize) -> LintReport {
+    let reports: Vec<TargetReport> = par_map(targets, threads, |t| {
+        let cx = match LintContext::new(&t.run.prog, &t.run.dispatcher, &t.run.env, device) {
+            Ok(cx) => cx,
+            Err(e) => {
+                return TargetReport {
+                    name: t.name.clone(),
+                    nodes: t.run.prog.graph.len(),
+                    static_j: 0.0,
+                    findings: vec![],
+                    error: Some(e.to_string()),
+                }
+            }
+        };
+        TargetReport {
+            name: t.name.clone(),
+            nodes: t.run.prog.graph.len(),
+            static_j: cx.total_static_j(),
+            findings: lint_graph(&cx),
+            error: None,
+        }
+    });
+    let total_findings = reports.iter().map(|r| r.findings.len()).sum();
+    let total_est_wasted_j = reports
+        .iter()
+        .flat_map(|r| r.findings.iter())
+        .map(|f| f.est_wasted_j)
+        .sum();
+    LintReport { targets: reports, total_findings, total_est_wasted_j }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_targets_are_unique_and_stable() {
+        let t = builtin_targets(7);
+        let names: Vec<&str> = t.iter().map(|t| t.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "mini-hf-transformers",
+                "mini-vllm",
+                "mini-sglang",
+                "mini-megatron",
+                "mini-stable-diffusion",
+                "mini-diffusers",
+                "mini-pytorch",
+                "mini-tensorflow",
+                "case-c2",
+                "case-c9",
+            ]
+        );
+    }
+
+    #[test]
+    fn suite_runs_clean_over_all_builtins() {
+        let targets = builtin_targets(7);
+        let report = lint_suite(&targets, &DeviceSpec::h200_sim(), 2);
+        assert_eq!(report.targets.len(), targets.len());
+        for t in &report.targets {
+            assert!(t.error.is_none(), "{}: {:?}", t.name, t.error);
+            assert!(t.static_j > 0.0, "{} has no static cost", t.name);
+        }
+        assert!(report.total_findings >= 5);
+        assert!(report.total_est_wasted_j > 0.0);
+    }
+
+    #[test]
+    fn megatron_gqa_expansion_is_rediscovered() {
+        let targets = builtin_targets(7);
+        let report = lint_suite(&targets, &DeviceSpec::h200_sim(), 1);
+        let mg = report.targets.iter().find(|t| t.name == "mini-megatron").unwrap();
+        assert!(
+            mg.findings
+                .iter()
+                .any(|f| f.rule == "repeat-broadcast" && f.label.contains("repeat_interleave")),
+            "megatron findings: {:?}",
+            mg.findings.iter().map(|f| (f.rule, &f.label)).collect::<Vec<_>>()
+        );
+    }
+}

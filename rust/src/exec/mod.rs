@@ -317,6 +317,11 @@ impl Executor {
         mut observer: impl FnMut(&KernelRecord, Segment),
     ) -> RunArtifacts {
         let g = &prog.graph;
+        // reject malformed graphs (cycles, dangling inputs) with a
+        // message naming the node instead of an index panic mid-run
+        if let Err(e) = g.validate() {
+            panic!("invalid graph: {e}");
+        }
         let mut tensors: Vec<Option<Tensor>> = vec![None; g.len()];
         let mut records: Vec<KernelRecord> = Vec::new();
         let mut trace = TraceBuffer::new(if self.opts.tracing { self.opts.trace_overhead_us } else { 0.0 });

@@ -312,6 +312,59 @@ impl Graph {
     pub fn op_count(&self) -> usize {
         self.nodes.iter().filter(|n| !n.op.is_virtual()).count()
     }
+
+    /// Structural validation for graphs that did not come through
+    /// [`Graph::add`] (struct literals, deserialised artifacts):
+    /// ids must match indices, inputs must be in range, and the edge
+    /// relation must be acyclic. [`Graph::topo_order`] *panics* on a
+    /// cycle; this returns a typed error instead, so entry points
+    /// (lint, exec) can reject malformed graphs with a message naming
+    /// the offending node rather than dying mid-analysis.
+    pub fn validate(&self) -> crate::Result<()> {
+        let n = self.nodes.len();
+        for (idx, node) in self.nodes.iter().enumerate() {
+            if node.id != idx {
+                return Err(crate::Error::msg(format!(
+                    "node `{}` has id {} but sits at index {idx}",
+                    node.label, node.id
+                )));
+            }
+            for &i in &node.inputs {
+                if i >= n {
+                    return Err(crate::Error::msg(format!(
+                        "node {} (`{}`) reads out-of-range input {i} (graph has {n} nodes)",
+                        node.id, node.label
+                    )));
+                }
+            }
+        }
+        // Kahn's algorithm, minus the panic: nodes never drained sit on
+        // a cycle.
+        let mut indeg = vec![0usize; n];
+        for node in &self.nodes {
+            indeg[node.id] = node.inputs.len();
+        }
+        let cons = self.consumers();
+        let mut queue: Vec<NodeId> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut drained = 0usize;
+        while let Some(v) = queue.pop() {
+            drained += 1;
+            for &c in &cons[v] {
+                indeg[c] -= 1;
+                if indeg[c] == 0 {
+                    queue.push(c);
+                }
+            }
+        }
+        if drained != n {
+            let stuck = (0..n).find(|&i| indeg[i] > 0).expect("undrained node");
+            return Err(crate::Error::msg(format!(
+                "graph `{}` has a cycle through node {stuck} (`{}`)",
+                self.name, self.nodes[stuck].label
+            )));
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -389,5 +442,51 @@ mod tests {
         let dot = g.to_dot();
         assert!(dot.contains("matmul"));
         assert!(dot.contains("n1 -> n2"));
+    }
+
+    fn raw_node(id: NodeId, op: OpKind, inputs: &[NodeId], label: &str) -> Node {
+        Node { id, op, inputs: inputs.to_vec(), attrs: Attrs::new(), label: label.into() }
+    }
+
+    #[test]
+    fn validate_accepts_well_formed_graph() {
+        diamond().validate().unwrap();
+    }
+
+    /// Regression: `topo_order` panics on a cyclic graph, so a
+    /// hand-built (or deserialised) cycle used to take the process
+    /// down. `validate` must reject it with a typed error naming a
+    /// node on the cycle.
+    #[test]
+    fn validate_rejects_cycle() {
+        let g = Graph {
+            name: "cyclic".into(),
+            nodes: vec![
+                raw_node(0, OpKind::Input, &[], "x"),
+                raw_node(1, OpKind::Tanh, &[0, 2], "a"),
+                raw_node(2, OpKind::Gelu, &[1], "b"),
+            ],
+        };
+        let err = g.validate().unwrap_err();
+        assert!(err.to_string().contains("cycle"), "got: {err}");
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_input() {
+        let g = Graph {
+            name: "dangling".into(),
+            nodes: vec![raw_node(0, OpKind::Add, &[7], "reader")],
+        };
+        let err = g.validate().unwrap_err();
+        assert!(err.to_string().contains("out-of-range"), "got: {err}");
+    }
+
+    #[test]
+    fn validate_rejects_id_index_mismatch() {
+        let g = Graph {
+            name: "shifted".into(),
+            nodes: vec![raw_node(3, OpKind::Input, &[], "x")],
+        };
+        assert!(g.validate().is_err());
     }
 }

@@ -97,6 +97,7 @@ pub mod runtime;
 pub mod coordinator;
 pub mod stream;
 pub mod telemetry;
+pub mod analysis;
 pub mod report;
 
 /// Crate-wide error type (the offline registry has no `anyhow`): a plain

@@ -31,7 +31,7 @@ use magneton::util::Prng;
 /// swallows one as its value (`magneton --verbose cases`).
 const SUBCOMMANDS: &[&str] = &[
     "cases", "fleet", "ddp", "breakdown", "accuracy", "artifacts", "stream", "replay", "diff",
-    "help",
+    "lint", "help",
 ];
 
 fn main() -> ExitCode {
@@ -62,6 +62,7 @@ fn main() -> ExitCode {
         "stream" => cmd_stream(&args),
         "replay" => cmd_replay(&args),
         "diff" => cmd_diff(&args),
+        "lint" => cmd_lint(&args),
         "help" => {
             print_help();
             Ok(())
@@ -104,7 +105,14 @@ fn print_help() {
          \x20            sessions (--dir-a/--dir-b) by workload fingerprint, align\n\
          \x20            their windows, and rank per-label energy regressions;\n\
          \x20            exits non-zero above --regress-threshold, refuses\n\
-         \x20            non-matching workloads with a diagnostic\n\n\
+         \x20            non-matching workloads with a diagnostic\n\
+         \x20 lint       static energy lint: run the graph-IR analysis passes over\n\
+         \x20            every built-in system program (plus a config-lint layer)\n\
+         \x20            without spending a joule; ranked findings with cost-model\n\
+         \x20            waste estimates; --verify applies each suggested rewrite\n\
+         \x20            and A/Bs it through the differential pipeline; --expect\n\
+         \x20            <manifest> gates on declared findings; exits non-zero at\n\
+         \x20            or above --deny <severity>\n\n\
          OPTIONS: --id <case> --eps <f64> --threshold <f64> --seed <u64> --device <h200|rtx4090>\n\
          STREAM:  --requests <n=500> --arrival <poisson|bursty|steady> --rate <hz=200>\n\
          \x20        --burst <n=16> --window <pairs=250> --hop <pairs> --ring <segs=512>\n\
@@ -113,7 +121,10 @@ fn print_help() {
          \x20        --session-id <id=stream> --deploy-tag <tag>\n\
          REPLAY:  --dir <dir=snapshots> --windows <n=12> --no-ranking-ok\n\
          DIFF:    --dir-a <dir> --dir-b <dir> --regress-threshold <frac=0.05>\n\
-         \x20        --threshold <frac=0.10> --tolerant --min-overlap <frac=0.8>"
+         \x20        --threshold <frac=0.10> --tolerant --min-overlap <frac=0.8>\n\
+         LINT:    --target <name substr> --only <rule> --deny <info|warn|error=error>\n\
+         \x20        --expect <manifest> --verify --threads <n> --seed <u64=7>\n\
+         \x20        --window/--hop/--lookahead/--content-eps (stream-config lint overrides)"
     );
 }
 
@@ -553,6 +564,140 @@ fn cmd_diff(args: &Args) -> magneton::Result<()> {
         diff.total_delta_frac() * 100.0,
         diff.max_regression_frac() * 100.0
     );
+    Ok(())
+}
+
+/// Static energy lint: run the analysis passes over every built-in
+/// system program (and the known-case graphs the rules are expected to
+/// rediscover) without executing anything, then optionally `--verify`
+/// each suggested rewrite by A/B-ing original vs fixed program through
+/// the differential pipeline, `--expect <manifest>` to gate on declared
+/// findings, and `--deny <severity>` to make findings fail the build.
+fn cmd_lint(args: &Args) -> magneton::Result<()> {
+    use magneton::analysis::{
+        builtin_targets, check_manifest, lint_detect_config, lint_stream_config, lint_suite,
+        parse_manifest, sort_findings, verify_finding, Severity, TargetReport,
+    };
+    use magneton::detect::DetectConfig;
+    use magneton::stream::StreamConfig;
+
+    let dev = device(args);
+    let seed: u64 = args.get_parse("seed", 7u64);
+    let threads: usize = args.get_parse("threads", magneton::util::pool::default_threads());
+    let deny_name = args.get("deny", "error");
+    let Some(deny) = Severity::parse(deny_name) else {
+        return Err(magneton::Error::msg(format!(
+            "unknown severity `{deny_name}` (expected info|warn|error)"
+        )));
+    };
+    let mut targets = builtin_targets(seed);
+    if let Some(filter) = args.options.get("target") {
+        targets.retain(|t| t.name.contains(filter.as_str()));
+        if targets.is_empty() {
+            return Err(magneton::Error::msg(format!("no lint target matches `{filter}`")));
+        }
+    }
+    let mut rep = lint_suite(&targets, &dev, threads);
+    if let Some(rule) = args.options.get("only") {
+        for t in &mut rep.targets {
+            t.findings.retain(|f| f.rule == rule.as_str());
+        }
+    }
+    // config-lint layer: the stream/detect configs the CLI would run
+    // with (overridable, so foot-guns are demonstrable: `--window 100
+    // --hop 200` must fail the deny gate)
+    let window = args.get_parse("window", StreamConfig::default().window_ops);
+    let scfg = StreamConfig {
+        window_ops: window,
+        hop_ops: args.get_parse("hop", window),
+        resync_lookahead: args
+            .get_parse("lookahead", StreamConfig::default().resync_lookahead),
+        content_eps: args.get_parse("content-eps", StreamConfig::default().content_eps),
+        ..StreamConfig::default()
+    };
+    let dcfg = DetectConfig {
+        energy_threshold: args.get_parse("threshold", DetectConfig::default().energy_threshold),
+        ..DetectConfig::default()
+    };
+    let mut cfg_findings = lint_stream_config(&scfg);
+    cfg_findings.extend(lint_detect_config(&dcfg));
+    sort_findings(&mut cfg_findings);
+    if !cfg_findings.is_empty() {
+        rep.targets.insert(
+            0,
+            TargetReport {
+                name: "config".into(),
+                nodes: 0,
+                static_j: 0.0,
+                findings: cfg_findings,
+                error: None,
+            },
+        );
+    }
+    rep.total_findings = rep.targets.iter().map(|t| t.findings.len()).sum();
+    rep.total_est_wasted_j =
+        rep.targets.iter().flat_map(|t| &t.findings).map(|f| f.est_wasted_j).sum();
+    print!("{}", report::render_lint(&rep));
+
+    if let Some(path) = args.options.get("expect") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| magneton::Error::msg(format!("reading manifest {path}: {e}")))?;
+        let expected = parse_manifest(&text)?;
+        let unmet = check_manifest(&rep, &expected);
+        if !unmet.is_empty() {
+            let missing: Vec<String> = unmet
+                .iter()
+                .map(|e| format!("{} {} ~{}", e.target, e.rule, e.label_substr))
+                .collect();
+            return Err(magneton::Error::msg(format!(
+                "manifest {path}: {}/{} expected findings missing: {}",
+                unmet.len(),
+                expected.len(),
+                missing.join("; ")
+            )));
+        }
+        println!("\nmanifest: all {} expected findings present", expected.len());
+    }
+
+    if args.flag("verify") {
+        // measure-after-fix: for each target, apply the top rewritable
+        // finding and A/B it against the original program
+        println!();
+        let mut checked = 0usize;
+        let mut disagreed = 0usize;
+        for t in &targets {
+            let Some(tr) = rep.targets.iter().find(|r| r.name == t.name) else { continue };
+            let Some(f) = tr.findings.iter().find(|f| !f.steps.is_empty()) else { continue };
+            let v = verify_finding(&t.run, f, &dev)?;
+            checked += 1;
+            if !v.same_sign {
+                disagreed += 1;
+            }
+            print!("{}", report::render_verify(&v));
+        }
+        if checked == 0 {
+            return Err(magneton::Error::msg(
+                "--verify: no finding carries a mechanical rewrite to apply",
+            ));
+        }
+        if disagreed > 0 {
+            return Err(magneton::Error::msg(format!(
+                "{disagreed}/{checked} verified findings contradict their static estimate"
+            )));
+        }
+        println!("verify: {checked}/{checked} measured deltas agree in sign with the static estimates");
+    }
+
+    let worst = rep.targets.iter().flat_map(|t| &t.findings).map(|f| f.severity).max();
+    if let Some(w) = worst {
+        if w >= deny {
+            return Err(magneton::Error::msg(format!(
+                "findings at severity `{}` meet --deny {}",
+                w.name(),
+                deny.name()
+            )));
+        }
+    }
     Ok(())
 }
 

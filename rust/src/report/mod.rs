@@ -3,6 +3,7 @@
 //! report, and rolling summaries for streaming audits, with CSV
 //! persistence under `results/`.
 
+use crate::analysis::{LintReport, VerifyOutcome};
 use crate::coordinator::fleet::{FleetDivergence, FleetReport, StreamFleetReport};
 use crate::coordinator::AuditOutcome;
 use crate::exec::RunArtifacts;
@@ -382,6 +383,64 @@ pub fn render_stream_fleet(report: &StreamFleetReport) -> String {
     s
 }
 
+/// Ranked static-lint report: per-target finding tables (severity
+/// desc, then estimated waste desc — the order the lint passes already
+/// produce) under an aggregate header.
+pub fn render_lint(report: &LintReport) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "=== Magneton lint: {} targets, {} findings, est. {} wasted ===\n",
+        report.targets.len(),
+        report.total_findings,
+        fmt_joules(report.total_est_wasted_j)
+    ));
+    for t in &report.targets {
+        if let Some(err) = &t.error {
+            s.push_str(&format!("\n--- {}: INVALID ({err}) ---\n", t.name));
+            continue;
+        }
+        s.push_str(&format!(
+            "\n--- {}: {} nodes, static cost {}, {} finding{} ---\n",
+            t.name,
+            t.nodes,
+            fmt_joules(t.static_j),
+            t.findings.len(),
+            if t.findings.len() == 1 { "" } else { "s" }
+        ));
+        if t.findings.is_empty() {
+            continue;
+        }
+        let mut tab = Table::new(vec!["sev", "rule", "site", "est. wasted", "suggestion"]);
+        for f in &t.findings {
+            tab.row(vec![
+                f.severity.name().to_string(),
+                f.rule.to_string(),
+                f.label.clone(),
+                fmt_joules(f.est_wasted_j),
+                f.suggestion.clone(),
+            ]);
+        }
+        s.push_str(&tab.render());
+    }
+    s
+}
+
+/// One-line verdict of a measure-after-fix verification.
+pub fn render_verify(v: &VerifyOutcome) -> String {
+    format!(
+        "verify [{}] `{}` on {}: predicted {} saved, measured {} ({} -> {})  sign {}  detector {}\n",
+        v.rule,
+        v.label,
+        v.target,
+        fmt_joules(v.est_wasted_j),
+        fmt_joules_signed(v.measured_delta_j),
+        fmt_joules(v.energy_before_j),
+        fmt_joules(v.energy_after_j),
+        if v.same_sign { "CONFIRMED" } else { "MISMATCH" },
+        if v.detected { "flagged the pair" } else { "below threshold" },
+    )
+}
+
 /// Fig 2-style top-k energy breakdown of a run.
 pub fn energy_breakdown(arts: &RunArtifacts, top: usize) -> Table {
     let mut t = Table::new(vec!["op", "energy", "share"]);
@@ -578,6 +637,65 @@ mod tests {
         let proj_pos = s.find("serve.proj").unwrap();
         let act_pos = s.find("serve.act").unwrap();
         assert!(proj_pos < act_pos, "regression must rank first");
+    }
+
+    #[test]
+    fn lint_report_renders_findings_and_errors() {
+        use crate::analysis::{LintFinding, LintReport, Severity, TargetReport};
+        let r = LintReport {
+            targets: vec![
+                TargetReport {
+                    name: "mini-x".into(),
+                    nodes: 12,
+                    static_j: 0.5,
+                    findings: vec![LintFinding {
+                        rule: "redundant-sync",
+                        severity: Severity::Warn,
+                        nodes: vec![3],
+                        label: "dist.Join.barrier".into(),
+                        est_wasted_j: 0.099,
+                        suggestion: "drop the barrier".into(),
+                        steps: vec![],
+                    }],
+                    error: None,
+                },
+                TargetReport {
+                    name: "mini-broken".into(),
+                    nodes: 2,
+                    static_j: 0.0,
+                    findings: vec![],
+                    error: Some("graph `g` has a cycle through node 1 (`a`)".into()),
+                },
+            ],
+            total_findings: 1,
+            total_est_wasted_j: 0.099,
+        };
+        let s = render_lint(&r);
+        assert!(s.contains("Magneton lint: 2 targets, 1 findings"), "{s}");
+        assert!(s.contains("redundant-sync"), "{s}");
+        assert!(s.contains("dist.Join.barrier"), "{s}");
+        assert!(s.contains("mini-broken: INVALID"), "{s}");
+        assert!(s.contains("has a cycle"), "{s}");
+    }
+
+    #[test]
+    fn verify_line_reports_sign_agreement() {
+        use crate::analysis::VerifyOutcome;
+        let v = VerifyOutcome {
+            target: "case-c9".into(),
+            label: "dist.Join.barrier".into(),
+            rule: "redundant-sync",
+            est_wasted_j: 0.099,
+            measured_delta_j: 0.097,
+            energy_before_j: 1.0,
+            energy_after_j: 0.903,
+            same_sign: true,
+            detected: true,
+        };
+        let s = render_verify(&v);
+        assert!(s.contains("CONFIRMED"), "{s}");
+        assert!(s.contains("case-c9"), "{s}");
+        assert!(s.contains("flagged the pair"), "{s}");
     }
 
     #[test]

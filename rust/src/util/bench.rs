@@ -5,6 +5,7 @@
 
 use std::time::{Duration, Instant};
 
+use super::json::Json;
 use super::stats::Summary;
 
 /// Result of timing a closure.
@@ -25,6 +26,19 @@ impl BenchResult {
             super::table::fmt_us(self.us.p50),
             self.iters
         )
+    }
+
+    /// Machine-readable form for the `BENCH_*.json` trajectory files.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .field("name", self.name.as_str())
+            .field("mean_us", self.us.mean)
+            .field("p50_us", self.us.p50)
+            .field("p95_us", self.us.p95)
+            .field("min_us", self.us.min)
+            .field("max_us", self.us.max)
+            .field("iters", self.iters)
+            .build()
     }
 }
 
@@ -70,16 +84,45 @@ pub fn with_timeout<R: Send + 'static, F: FnOnce() -> R + Send + 'static>(
 /// binaries run with the package (`rust/`) as cwd, so walk up to the
 /// outermost directory that still contains a `Cargo.toml`.
 pub fn persist(name: &str, text: &str, csv: Option<&str>) {
+    let dir = results_dir();
+    let _ = std::fs::write(dir.join(format!("{name}.txt")), text);
+    if let Some(csv) = csv {
+        let _ = std::fs::write(dir.join(format!("{name}.csv")), csv);
+    }
+}
+
+/// Write a machine-readable bench record to `<workspace>/results/<name>.json`
+/// (e.g. `BENCH_lint` → `results/BENCH_lint.json`). Every bench binary
+/// funnels through this one emitter so the JSON files share a schema and
+/// can be diffed commit-over-commit as an in-tree perf trajectory.
+pub fn persist_json(name: &str, json: &Json) {
+    let dir = results_dir();
+    let mut text = json.render();
+    text.push('\n');
+    let _ = std::fs::write(dir.join(format!("{name}.json")), text);
+}
+
+/// Convenience: wrap a bench-binary's results in the shared trajectory
+/// schema `{bench, results: [...], extra...}` and persist it as
+/// `results/BENCH_<bench>.json`.
+pub fn persist_bench_json(bench: &str, results: &[BenchResult], extra: &[(&str, Json)]) {
+    let mut obj = Json::obj()
+        .field("bench", bench)
+        .field("results", results.iter().map(BenchResult::to_json).collect::<Vec<_>>());
+    for (k, v) in extra {
+        obj = obj.field(k, v.clone());
+    }
+    persist_json(&format!("BENCH_{bench}"), &obj.build());
+}
+
+fn results_dir() -> std::path::PathBuf {
     let mut root = std::env::current_dir().unwrap_or_else(|_| ".".into());
     while root.parent().map(|p| p.join("Cargo.toml").exists()).unwrap_or(false) {
         root = root.parent().unwrap().to_path_buf();
     }
     let dir = root.join("results");
     let _ = std::fs::create_dir_all(&dir);
-    let _ = std::fs::write(dir.join(format!("{name}.txt")), text);
-    if let Some(csv) = csv {
-        let _ = std::fs::write(dir.join(format!("{name}.csv")), csv);
-    }
+    dir
 }
 
 /// Standard header printed by every bench binary.
@@ -122,5 +165,18 @@ mod tests {
         let (v, us) = time_once(|| 7);
         assert_eq!(v, 7);
         assert!(us >= 0.0);
+    }
+
+    #[test]
+    fn bench_result_serialises_to_json() {
+        let r = BenchResult {
+            name: "lint suite".into(),
+            us: Summary::of(&[10.0, 20.0, 30.0]),
+            iters: 3,
+        };
+        let j = r.to_json().render();
+        assert!(j.contains("\"name\":\"lint suite\""), "got: {j}");
+        assert!(j.contains("\"mean_us\":20"), "got: {j}");
+        assert!(j.contains("\"iters\":3"), "got: {j}");
     }
 }

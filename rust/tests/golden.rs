@@ -7,13 +7,14 @@
 use std::fs;
 use std::path::PathBuf;
 
+use magneton::analysis::{LintFinding, LintReport, Severity, TargetReport};
 use magneton::coordinator::fleet::{
     DivergentPair, FleetDivergence, FleetReport, StreamFleetEntry, StreamFleetReport,
 };
 use magneton::detect::Side;
 use magneton::report::{
-    render_divergence, render_fleet, render_ranking, render_session_diff, render_stream,
-    render_stream_fleet, render_window,
+    render_divergence, render_fleet, render_lint, render_ranking, render_session_diff,
+    render_stream, render_stream_fleet, render_window,
 };
 use magneton::stream::{StreamFinding, StreamSummary, WindowReport};
 use magneton::telemetry::session::{LabelDelta, MatchVerdict, SessionDiff, WindowAlignment};
@@ -184,6 +185,57 @@ fn golden_render_stream_fleet() {
         workers: 4,
     };
     check_golden("stream_fleet.txt", &render_stream_fleet(&r));
+}
+
+#[test]
+fn golden_render_lint() {
+    let r = LintReport {
+        targets: vec![
+            TargetReport {
+                name: "mini-x".into(),
+                nodes: 42,
+                static_j: 1.25,
+                findings: vec![
+                    LintFinding {
+                        rule: "redundant-sync",
+                        severity: Severity::Warn,
+                        nodes: vec![7],
+                        label: "dist.Join.barrier".into(),
+                        est_wasted_j: 0.126,
+                        suggestion: "drop the barrier or use an event wait".into(),
+                        steps: vec![],
+                    },
+                    LintFinding {
+                        rule: "unfused-matmul-add",
+                        severity: Severity::Info,
+                        nodes: vec![3, 4],
+                        label: "attn.qkv_proj.matmul".into(),
+                        est_wasted_j: 0.0005,
+                        suggestion: "fuse into addmm".into(),
+                        steps: vec![],
+                    },
+                ],
+                error: None,
+            },
+            TargetReport {
+                name: "mini-clean".into(),
+                nodes: 10,
+                static_j: 0.5,
+                findings: vec![],
+                error: None,
+            },
+            TargetReport {
+                name: "mini-broken".into(),
+                nodes: 3,
+                static_j: 0.0,
+                findings: vec![],
+                error: Some("graph `g` has a cycle through node 1 (`a`)".into()),
+            },
+        ],
+        total_findings: 2,
+        total_est_wasted_j: 0.1265,
+    };
+    check_golden("lint.txt", &render_lint(&r));
 }
 
 #[test]
