@@ -8,7 +8,8 @@ use magneton::coordinator::Magneton;
 use magneton::energy::DeviceSpec;
 use magneton::systems::llm;
 use magneton::systems::SystemId;
-use magneton::util::bench::{banner, persist};
+use magneton::util::bench::{banner, persist, persist_json};
+use magneton::util::json::Json;
 use magneton::util::table::Table;
 use magneton::util::Prng;
 
@@ -21,6 +22,7 @@ fn main() {
 
     let mut t = Table::new(vec!["system", "untraced wall", "traced wall", "overhead"]);
     let mut csv = String::from("system,overhead_pct\n");
+    let mut rows: Vec<Json> = Vec::new();
     for (name, opts, disp, env) in [
         ("mini-hf-transformers", llm::LlmBuildOpts::hf(), llm::hf_dispatcher(), llm::default_env(SystemId::MiniHf)),
         ("mini-vllm", llm::LlmBuildOpts::vllm(), llm::vllm_dispatcher(), llm::default_env(SystemId::MiniVllm)),
@@ -39,10 +41,15 @@ fn main() {
             format!("{overhead:.1}%"),
         ]);
         csv.push_str(&format!("{name},{overhead:.2}\n"));
+        rows.push(Json::obj().field("system", name).field("overhead_pct", overhead).build());
         assert!(overhead > 0.5 && overhead < 12.0, "{name} overhead out of band: {overhead:.1}%");
     }
     let rendered = t.render();
     println!("{rendered}");
     println!("(paper: 4.4% HF, 5.9% vLLM; offline diagnosis completes within minutes)");
     persist("fig10_overhead", &rendered, Some(&csv));
+    persist_json(
+        "BENCH_fig10_overhead",
+        &Json::obj().field("bench", "fig10_overhead").field("systems", rows).build(),
+    );
 }

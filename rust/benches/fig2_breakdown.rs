@@ -9,7 +9,8 @@ use magneton::cases::by_id;
 use magneton::coordinator::Magneton;
 use magneton::energy::DeviceSpec;
 use magneton::report::energy_breakdown;
-use magneton::util::bench::{banner, persist};
+use magneton::util::bench::{banner, persist, persist_json};
+use magneton::util::json::Json;
 use magneton::util::table::fmt_joules;
 use magneton::util::Prng;
 
@@ -38,6 +39,16 @@ fn main() {
     ));
     println!("{out}");
     persist("fig2_breakdown", &out, Some(&energy_breakdown(&ra, 5).to_csv()));
+    persist_json(
+        "BENCH_fig2_breakdown",
+        &Json::obj()
+            .field("bench", "fig2_breakdown")
+            .field("energy_a_j", ra.total_energy_j)
+            .field("energy_b_j", rb.total_energy_j)
+            .field("energy_diff_pct", ediff)
+            .field("time_diff_pct", tdiff)
+            .build(),
+    );
     assert!(ediff > 3.0, "addmm waste not visible: {ediff:.1}%");
     // our simulated kernels are launch-light, so the extra `add` launch
     // shows up more than on the paper's H200; the shape (energy diff >>

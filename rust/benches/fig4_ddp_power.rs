@@ -7,7 +7,8 @@
 //! plotting and prints a coarse ASCII timeline.
 
 use magneton::energy::DeviceSpec;
-use magneton::util::bench::{banner, persist};
+use magneton::util::bench::{banner, persist, persist_json};
+use magneton::util::json::Json;
 use magneton::workload::{run_ddp, DdpWorkload, SyncStrategy};
 
 fn ascii_series(points: &[(f64, f64)], max_w: f64, width: usize) -> String {
@@ -51,6 +52,16 @@ fn main() {
     ));
     println!("{out}");
     persist("fig4_ddp_power", &out, Some(&csv));
+    persist_json(
+        "BENCH_fig4_ddp_power",
+        &Json::obj()
+            .field("bench", "fig4_ddp_power")
+            .field("total_saving_pct", saving)
+            .field("light_rank_saving_pct", light_saving)
+            .field("join_wall_us", join.wall_us)
+            .field("early_exit_wall_us", exit.wall_us)
+            .build(),
+    );
     assert!(saving > 1.0, "early exit must save energy ({saving:.2}%)");
     assert!((join.wall_us - exit.wall_us).abs() / join.wall_us < 0.05);
 }

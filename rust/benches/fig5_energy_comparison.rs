@@ -12,7 +12,8 @@ use magneton::systems::frameworks as fw;
 use magneton::systems::imagegen as ig;
 use magneton::systems::llm;
 use magneton::systems::SystemId;
-use magneton::util::bench::{banner, persist};
+use magneton::util::bench::{banner, persist, persist_json};
+use magneton::util::json::Json;
 use magneton::util::table::Table;
 use magneton::util::Prng;
 use magneton::workload::{fig5b_mixes, serve_mix};
@@ -86,12 +87,22 @@ fn main() {
     }
     println!("(d) image-generation energy per patch\n{}", td.render());
 
+    let ratio_d =
+        img_e.iter().cloned().fold(0.0, f64::max) / img_e.iter().cloned().fold(f64::MAX, f64::min);
     let summary = format!(
-        "5b HF/SGLang ratio {ratio_b:.2}x (paper <=2.97x) | 5c conv spread {ratio_c:.2}x (paper <=3.35x) | 5d spread {:.2}x",
-        img_e.iter().cloned().fold(0.0, f64::max) / img_e.iter().cloned().fold(f64::MAX, f64::min)
+        "5b HF/SGLang ratio {ratio_b:.2}x (paper <=2.97x) | 5c conv spread {ratio_c:.2}x (paper <=3.35x) | 5d spread {ratio_d:.2}x"
     );
     println!("{summary}");
     persist("fig5_energy_comparison", &format!("{summary}\n"), Some(&csv));
+    persist_json(
+        "BENCH_fig5_energy_comparison",
+        &Json::obj()
+            .field("bench", "fig5_energy_comparison")
+            .field("hf_sglang_ratio", ratio_b)
+            .field("conv_spread", ratio_c)
+            .field("unet_spread", ratio_d)
+            .build(),
+    );
     assert!(ratio_b > 1.3, "HF must be markedly less efficient than SGLang");
     assert!(ratio_c > 1.5, "conv energy spread must be large");
 }

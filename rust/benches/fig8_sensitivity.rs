@@ -14,7 +14,8 @@ use magneton::fingerprint::RustMomentEngine;
 use magneton::matching::find_equivalent_tensors;
 use magneton::systems::llm;
 use magneton::systems::SystemId;
-use magneton::util::bench::{banner, persist};
+use magneton::util::bench::{banner, persist, persist_json};
+use magneton::util::json::Json;
 use magneton::util::stats::f1_score;
 use magneton::util::table::Table;
 use magneton::util::Prng;
@@ -117,6 +118,14 @@ fn main() {
     );
     println!("{summary}");
     persist("fig8_sensitivity", &format!("{rendered}\n{summary}\n"), Some(&csv));
+    persist_json(
+        "BENCH_fig8_sensitivity",
+        &Json::obj()
+            .field("bench", "fig8_sensitivity")
+            .field("best_f1", best_f1)
+            .field("band_ok", band_ok)
+            .build(),
+    );
     assert!(best_f1 > 0.85, "matching never reaches high F1");
     assert!(band_ok, "F1 dips below 0.8 inside the optimal band");
 }

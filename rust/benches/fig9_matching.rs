@@ -14,7 +14,8 @@ use magneton::fingerprint::RustMomentEngine;
 use magneton::matching::{brute_force_match, find_equivalent_tensors, recursive_match};
 use magneton::systems::llm;
 use magneton::systems::SystemId;
-use magneton::util::bench::{banner, persist, time_once};
+use magneton::util::bench::{banner, persist, persist_json, time_once};
+use magneton::util::json::Json;
 use magneton::util::table::{fmt_us, Table};
 use magneton::util::Prng;
 
@@ -25,6 +26,7 @@ fn main() {
         "workload", "|G1|", "|G2|", "eq pairs", "regions", "match (Alg.1)", "brute force",
     ]);
     let mut csv = String::from("workload,n1,n2,alg1_us,brute_us\n");
+    let mut rows: Vec<Json> = Vec::new();
     let mut rng = Prng::new(2026);
 
     // (graph-size scale, label): layers chosen so node counts bracket
@@ -69,6 +71,14 @@ fn main() {
             ra.graph.len(),
             rb.graph.len()
         ));
+        rows.push(
+            Json::obj()
+                .field("workload", label)
+                .field("alg1_us", alg1_us)
+                .field("brute_force_us", bf_us)
+                .field("brute_force_timed_out", bf.is_none())
+                .build(),
+        );
         if label == "llama8b-scale" {
             assert!(bf.is_none(), "brute force should exhaust its budget at Llama scale");
             assert!(
@@ -81,4 +91,8 @@ fn main() {
     let rendered = t.render();
     println!("{rendered}");
     persist("fig9_matching", &rendered, Some(&csv));
+    persist_json(
+        "BENCH_fig9_matching",
+        &Json::obj().field("bench", "fig9_matching").field("workloads", rows).build(),
+    );
 }

@@ -17,7 +17,8 @@ use magneton::matching::{fingerprint_run, pairs_from_fingerprints, MatchOptions}
 use magneton::report;
 use magneton::systems::llm;
 use magneton::systems::SystemId;
-use magneton::util::bench::{banner, persist, time_once};
+use magneton::util::bench::{banner, persist, persist_json, time_once};
+use magneton::util::json::Json;
 use magneton::util::pool;
 use magneton::util::table::{fmt_us, Table};
 use magneton::util::Prng;
@@ -52,6 +53,7 @@ fn main() {
         "workload", "|G1|", "|G2|", "eq pairs", "all-pairs", "indexed", "speedup",
     ]);
     let mut csv = String::from("workload,n1,n2,exhaustive_us,indexed_us\n");
+    let mut rows: Vec<Json> = Vec::new();
     for (label, layers) in [("small", 2usize), ("gpt2-scale", 6), ("llama8b-scale", 14)] {
         let params = llm::TransformerParams::new(&mut rng, llm::LlmSpec::llama_sim(layers));
         let a = magneton::coordinator::SysRun::new(
@@ -100,6 +102,15 @@ fn main() {
             format!("{:.1}x", slow_us / fast_us.max(1e-9)),
         ]);
         csv.push_str(&format!("{label},{n1},{n2},{slow_us:.0},{fast_us:.0}\n"));
+        rows.push(
+            Json::obj()
+                .field("workload", label)
+                .field("n1", n1)
+                .field("n2", n2)
+                .field("exhaustive_us", slow_us)
+                .field("indexed_us", fast_us)
+                .build(),
+        );
     }
     let part1 = t.render();
     println!("{part1}");
@@ -129,4 +140,15 @@ fn main() {
     println!("fleet wall time: {} over {} workers", fmt_us(fleet_us), fleet_report.workers);
 
     persist("fleet_scaling", &format!("{part1}\n{part2}"), Some(&csv));
+    persist_json(
+        "BENCH_fleet_scaling",
+        &Json::obj()
+            .field("bench", "fleet_scaling")
+            .field("matching", rows)
+            .field("fleet_us", fleet_us)
+            .field("workers", fleet_report.workers)
+            .field("total_wasted_j", fleet_report.total_wasted_j)
+            .field("total_findings", fleet_report.total_findings)
+            .build(),
+    );
 }

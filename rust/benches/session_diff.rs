@@ -16,7 +16,10 @@ use magneton::stream::{StreamAuditor, StreamConfig};
 use magneton::telemetry::session::{align_windows, diff_sessions, DiffConfig, SessionInfo};
 use magneton::telemetry::{SessionHeader, SinkConfig, SnapshotSink};
 use magneton::trace::Frame;
-use magneton::util::bench::{banner, time_once};
+// `self` import: the helper below shadows `bench::persist`, so the
+// result emitters are called qualified
+use magneton::util::bench::{self as bench, banner, time_once};
+use magneton::util::json::Json;
 use magneton::util::table::{fmt_us, Table};
 use magneton::util::Prng;
 
@@ -124,7 +127,21 @@ fn main() {
     ] {
         t.row(vec![stage.to_string(), items.to_string(), fmt_us(us)]);
     }
-    print!("{}", t.render());
+    let rendered = t.render();
+    print!("{rendered}");
+    bench::persist("session_diff", &rendered, None);
+    bench::persist_json(
+        "BENCH_session_diff",
+        &Json::obj()
+            .field("bench", "session_diff")
+            .field("n", n)
+            .field("persist_us", build_us)
+            .field("load_us", load_us)
+            .field("diff_us", diff_us)
+            .field("render_us", render_us)
+            .field("align_us", align_us)
+            .build(),
+    );
 
     let _ = std::fs::remove_dir_all(&base);
 }

@@ -13,7 +13,8 @@ use magneton::coordinator::Magneton;
 use magneton::detect::Side;
 use magneton::energy::DeviceSpec;
 use magneton::profiler::{pytorch_profiler, rank_of, zeus, zeus_replay};
-use magneton::util::bench::{banner, persist, time_once};
+use magneton::util::bench::{banner, persist, persist_json, time_once};
+use magneton::util::json::Json;
 use magneton::util::table::Table;
 use magneton::util::Prng;
 
@@ -95,5 +96,15 @@ fn main() {
     );
     println!("{summary}");
     persist("table2_known_cases", &format!("{rendered}\n{summary}\n"), Some(&table.to_csv()));
+    persist_json(
+        "BENCH_table2_known_cases",
+        &Json::obj()
+            .field("bench", "table2_known_cases")
+            .field("diagnosed", diagnosed as usize)
+            .field("detectable", detectable as usize)
+            .field("avg_diff_pct", avg)
+            .field("total_us", total_us)
+            .build(),
+    );
     assert!(diagnosed >= detectable - 1, "regression: too many missed cases");
 }

@@ -4,7 +4,8 @@
 use magneton::cases::new_cases;
 use magneton::coordinator::Magneton;
 use magneton::energy::DeviceSpec;
-use magneton::util::bench::{banner, persist};
+use magneton::util::bench::{banner, persist, persist_json};
+use magneton::util::json::Json;
 use magneton::util::table::Table;
 use magneton::util::Prng;
 
@@ -38,5 +39,9 @@ fn main() {
     let summary = format!("exposed {found}/8 new issues (paper: 8 found, 7 confirmed by developers)");
     println!("{summary}");
     persist("table3_new_issues", &format!("{rendered}\n{summary}\n"), Some(&t.to_csv()));
+    persist_json(
+        "BENCH_table3_new_issues",
+        &Json::obj().field("bench", "table3_new_issues").field("found", found as usize).build(),
+    );
     assert!(found >= 7);
 }

@@ -13,7 +13,8 @@ use magneton::exec::{Dispatcher, Executor, Program};
 use magneton::graph::{Attrs, Graph, OpKind};
 use magneton::profiler::{replay_energy, replay_energy_ex};
 use magneton::tensor::Tensor;
-use magneton::util::bench::{banner, persist};
+use magneton::util::bench::{banner, persist, persist_json};
+use magneton::util::json::Json;
 use magneton::util::table::Table;
 use magneton::util::Prng;
 
@@ -80,5 +81,12 @@ fn main() {
     );
     println!("{summary}");
     persist("table4_accuracy", &format!("{rendered}\n{summary}\n"), Some(&t.to_csv()));
+    persist_json(
+        "BENCH_table4_accuracy",
+        &Json::obj()
+            .field("bench", "table4_accuracy")
+            .field("max_magneton_err_pct", max_magneton_err)
+            .build(),
+    );
     assert!(max_magneton_err < 8.0, "Magneton replay error too large");
 }

@@ -1,0 +1,601 @@
+//! Fully static differential audit between two system targets.
+//!
+//! The dynamic pipeline proves waste by *running* two systems and
+//! diffing measured joules; this module is its measure-free analogue.
+//! Both targets are analysed with the same [`LintContext`] the lint
+//! rules use, their billed (non-virtual) nodes are matched region-by-
+//! region, and the per-region static [`KernelCost`](crate::energy::KernelCost)
+//! bills are diffed into a ranked [`StaticDiffReport`] — per-region ΔJ,
+//! WASTEFUL/cheaper verdicts, and unmatched-region attribution — before
+//! a single joule is spent.
+//!
+//! Matching is tiered so one structural divergence cannot poison every
+//! downstream region (subtree hashes cascade):
+//!
+//! 1. **Hash** — cross-graph structural subtree hashes collide; the
+//!    regions compute the same function of the same-shaped sources.
+//! 2. **Label** — same op under the same system-stripped label suffix
+//!    (`torch.conv2d` ↔ `tf.conv2d` both own `conv2d`).
+//! 3. **Bucket** — [`matching::CandidateIndex`](crate::matching)-style
+//!    coarse buckets on (op, element count): last-resort pairing for
+//!    renamed regions of identical geometry.
+//!
+//! Whatever survives all three tiers is reported as an unmatched
+//! region: energy one implementation spends that the other simply does
+//! not have — the concat/split skip handling only one UNet build
+//! performs, the layout staging copies only one conv stack needs.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::energy::DeviceSpec;
+use crate::fingerprint::{mix64, op_signature};
+use crate::graph::NodeId;
+use crate::util::pool::par_map;
+
+use super::suite::{LintTarget, TargetReport};
+use super::{sort_findings, LintContext, LintFinding, Severity};
+
+// ---------------------------------------------------------------------
+// Cross-graph hashes
+// ---------------------------------------------------------------------
+
+/// Structural subtree hash comparable *across* graphs. Differs from
+/// [`super::structural_hashes`] in exactly the two places that are
+/// graph-private identity: leaves hash their op + inferred shape
+/// instead of their node id/label (two systems feed the same activation
+/// under different names), and the `dispatch` attribute is ignored
+/// (it names a system-specific routine for the same mathematical op).
+pub fn cross_graph_hashes(cx: &LintContext) -> Vec<u64> {
+    let g = cx.graph;
+    let mut hashes = vec![0u64; g.len()];
+    for node in &g.nodes {
+        let mut h = mix64(op_signature("", node.op.name()));
+        for (k, v) in &node.attrs {
+            if k == "dispatch" {
+                continue;
+            }
+            h = mix64(h ^ op_signature(k, v));
+        }
+        if node.inputs.is_empty() {
+            h = mix64(h ^ op_signature(&shape_sig(cx.shapes[node.id].as_deref()), "leaf"));
+        }
+        for &i in &node.inputs {
+            h = mix64(h.rotate_left(7) ^ hashes[i]);
+        }
+        hashes[node.id] = h;
+    }
+    hashes
+}
+
+fn shape_sig(shape: Option<&[usize]>) -> String {
+    match shape {
+        Some(s) => s.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("x"),
+        None => "?".to_string(),
+    }
+}
+
+/// Strip the leading system prefix from a label (`torch.conv2d` →
+/// `conv2d`); labels without a dot are their own suffix.
+fn label_suffix(label: &str) -> &str {
+    match label.split_once('.') {
+        Some((_, rest)) => rest,
+        None => label,
+    }
+}
+
+fn numel(cx: &LintContext, id: NodeId) -> usize {
+    cx.shapes[id].as_ref().map(|s| s.iter().product()).unwrap_or(0)
+}
+
+/// Kernel the target's dispatcher selects for a node under its env —
+/// the name that explains *why* the two sides bill differently.
+fn kernel_for(cx: &LintContext, id: NodeId) -> String {
+    let node = cx.node(id);
+    let key =
+        node.attrs.get("dispatch").cloned().unwrap_or_else(|| node.op.name().to_string());
+    let env = cx.env.merged(&node.attrs);
+    cx.dispatcher.dispatch(node.op, &key, &env).choice.kernel
+}
+
+// ---------------------------------------------------------------------
+// Report types
+// ---------------------------------------------------------------------
+
+/// Which matching tier paired a region.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum MatchTier {
+    Hash,
+    Label,
+    Bucket,
+}
+
+impl MatchTier {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MatchTier::Hash => "hash",
+            MatchTier::Label => "label",
+            MatchTier::Bucket => "bucket",
+        }
+    }
+}
+
+/// Verdict on one matched region pair.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RegionVerdict {
+    /// Target A bills significantly more than B for the same region.
+    AWasteful,
+    /// Target B bills significantly more than A.
+    BWasteful,
+    /// Within threshold: the implementations price the region alike.
+    Close,
+}
+
+impl RegionVerdict {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RegionVerdict::AWasteful => "A WASTEFUL",
+            RegionVerdict::BWasteful => "B WASTEFUL",
+            RegionVerdict::Close => "close",
+        }
+    }
+}
+
+/// One matched region pair with its static energy delta.
+#[derive(Clone, Debug)]
+pub struct RegionDelta {
+    pub node_a: NodeId,
+    pub node_b: NodeId,
+    pub label_a: String,
+    pub label_b: String,
+    pub op: &'static str,
+    pub kernel_a: String,
+    pub kernel_b: String,
+    pub a_j: f64,
+    pub b_j: f64,
+    /// `b_j - a_j`: positive means B burns more.
+    pub delta_j: f64,
+    pub tier: MatchTier,
+    pub verdict: RegionVerdict,
+}
+
+/// A billed region with no counterpart on the other side.
+#[derive(Clone, Debug)]
+pub struct UnmatchedRegion {
+    pub node: NodeId,
+    pub label: String,
+    pub op: &'static str,
+    pub cost_j: f64,
+}
+
+/// Thresholds deciding when a matched delta is worth reporting.
+#[derive(Clone, Copy, Debug)]
+pub struct StaticDiffConfig {
+    /// Relative gap (fraction of the larger side) below which a
+    /// matched pair is `close`.
+    pub rel_threshold: f64,
+    /// Absolute joule floor below which deltas and unmatched regions
+    /// are noise.
+    pub abs_floor_j: f64,
+}
+
+impl Default for StaticDiffConfig {
+    fn default() -> StaticDiffConfig {
+        StaticDiffConfig { rel_threshold: 0.05, abs_floor_j: 1e-6 }
+    }
+}
+
+/// The static analogue of a measured differential audit: every billed
+/// region of A paired (or not) with a region of B, ranked by |ΔJ|.
+#[derive(Clone, Debug)]
+pub struct StaticDiffReport {
+    pub target_a: String,
+    pub target_b: String,
+    pub nodes_a: usize,
+    pub nodes_b: usize,
+    pub total_a_j: f64,
+    pub total_b_j: f64,
+    /// Matched region pairs, largest |ΔJ| first.
+    pub regions: Vec<RegionDelta>,
+    /// Billed regions of A with no counterpart in B, ascending id.
+    pub unmatched_a: Vec<UnmatchedRegion>,
+    /// Billed regions of B with no counterpart in A, ascending id.
+    pub unmatched_b: Vec<UnmatchedRegion>,
+    /// Set when a side failed validation/analysis; content is empty.
+    pub error: Option<String>,
+}
+
+/// Pseudo-target name a pair diff reports under (manifest/`--target`).
+pub fn diff_name(a: &str, b: &str) -> String {
+    format!("diff~{a}~{b}")
+}
+
+impl StaticDiffReport {
+    /// Wasteful verdicts and significant unmatched regions as ordinary
+    /// lint findings, so the manifest gate and renderers apply
+    /// unchanged. Cross-graph node ids are ambiguous in a pseudo-target
+    /// so `nodes` stays empty; the ids are spelled in the suggestion.
+    pub fn findings(&self, cfg: &StaticDiffConfig) -> Vec<LintFinding> {
+        let mut out = Vec::new();
+        for r in &self.regions {
+            if r.verdict == RegionVerdict::Close {
+                continue;
+            }
+            let (loser, winner, cheap_j) = match r.verdict {
+                RegionVerdict::AWasteful => (&self.target_a, &self.target_b, r.b_j),
+                _ => (&self.target_b, &self.target_a, r.a_j),
+            };
+            let pct = if cheap_j > 0.0 { r.delta_j.abs() / cheap_j * 100.0 } else { 0.0 };
+            out.push(LintFinding {
+                rule: "static-diff",
+                severity: Severity::Warn,
+                nodes: vec![],
+                label: format!("{} <-> {}", r.label_a, r.label_b),
+                est_wasted_j: r.delta_j.abs(),
+                suggestion: format!(
+                    "{op} region `{la}` (node {na}, {ka}) vs `{lb}` (node {nb}, {kb}), \
+                     matched by {tier}: {loser} bills {pct:.0}% more than {winner} for \
+                     the same region ({aj:.3e} J vs {bj:.3e} J)",
+                    op = r.op,
+                    la = r.label_a,
+                    na = r.node_a,
+                    ka = r.kernel_a,
+                    lb = r.label_b,
+                    nb = r.node_b,
+                    kb = r.kernel_b,
+                    tier = r.tier.name(),
+                    loser = loser,
+                    winner = winner,
+                    pct = pct,
+                    aj = r.a_j,
+                    bj = r.b_j,
+                ),
+                steps: vec![],
+            });
+        }
+        let unmatched = [
+            (&self.unmatched_a, &self.target_a, &self.target_b),
+            (&self.unmatched_b, &self.target_b, &self.target_a),
+        ];
+        for (regions, owner, other) in unmatched {
+            for u in regions.iter().filter(|u| u.cost_j > cfg.abs_floor_j) {
+                out.push(LintFinding {
+                    rule: "static-diff-unmatched",
+                    severity: Severity::Info,
+                    nodes: vec![],
+                    label: format!("{owner}:{}", u.label),
+                    est_wasted_j: u.cost_j,
+                    suggestion: format!(
+                        "{op} region `{label}` (node {node}) on {owner} has no \
+                         structural counterpart on {other}: {cost:.3e} J of \
+                         implementation divergence",
+                        op = u.op,
+                        label = u.label,
+                        node = u.node,
+                        owner = owner,
+                        other = other,
+                        cost = u.cost_j,
+                    ),
+                    steps: vec![],
+                });
+            }
+        }
+        sort_findings(&mut out);
+        out
+    }
+
+    /// Repackage as a [`TargetReport`] under the `diff~a~b` pseudo-
+    /// target, so `lint --expect` gates static diffs with the same
+    /// manifest machinery as single-target findings.
+    pub fn to_target_report(&self, cfg: &StaticDiffConfig) -> TargetReport {
+        TargetReport {
+            name: diff_name(&self.target_a, &self.target_b),
+            nodes: self.nodes_a + self.nodes_b,
+            static_j: self.total_a_j + self.total_b_j,
+            findings: self.findings(cfg),
+            error: self.error.clone(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Matching
+// ---------------------------------------------------------------------
+
+/// Pair remaining candidates whose keys collide, zipping each bucket in
+/// ascending node-id order (deterministic; surplus stays unmatched for
+/// the next tier). `BTreeMap` keeps bucket iteration ordered.
+fn pair_by_key<K: Ord>(
+    rem_a: &mut Vec<NodeId>,
+    rem_b: &mut Vec<NodeId>,
+    matched: &mut Vec<(NodeId, NodeId, MatchTier)>,
+    tier: MatchTier,
+    key_a: impl Fn(NodeId) -> K,
+    key_b: impl Fn(NodeId) -> K,
+) {
+    let mut buckets: BTreeMap<K, (Vec<NodeId>, Vec<NodeId>)> = BTreeMap::new();
+    for &id in rem_a.iter() {
+        buckets.entry(key_a(id)).or_default().0.push(id);
+    }
+    for &id in rem_b.iter() {
+        buckets.entry(key_b(id)).or_default().1.push(id);
+    }
+    let mut used_a = BTreeSet::new();
+    let mut used_b = BTreeSet::new();
+    for (_, (va, vb)) in buckets {
+        for (&x, &y) in va.iter().zip(vb.iter()) {
+            matched.push((x, y, tier));
+            used_a.insert(x);
+            used_b.insert(y);
+        }
+    }
+    rem_a.retain(|id| !used_a.contains(id));
+    rem_b.retain(|id| !used_b.contains(id));
+}
+
+/// Diff two analysed targets. Pure function of the two contexts; the
+/// caller owns naming.
+pub fn diff_contexts(
+    name_a: &str,
+    cxa: &LintContext,
+    name_b: &str,
+    cxb: &LintContext,
+    cfg: &StaticDiffConfig,
+) -> StaticDiffReport {
+    let ha = cross_graph_hashes(cxa);
+    let hb = cross_graph_hashes(cxb);
+    let billed = |cx: &LintContext| -> Vec<NodeId> {
+        cx.graph.nodes.iter().filter(|n| !n.op.is_virtual()).map(|n| n.id).collect()
+    };
+    let mut rem_a = billed(cxa);
+    let mut rem_b = billed(cxb);
+    let mut matched: Vec<(NodeId, NodeId, MatchTier)> = Vec::new();
+    pair_by_key(&mut rem_a, &mut rem_b, &mut matched, MatchTier::Hash, |id| ha[id], |id| hb[id]);
+    let label_key = |cx: &LintContext, id: NodeId| -> (String, String) {
+        let n = cx.node(id);
+        (n.op.name().to_string(), label_suffix(&n.label).to_string())
+    };
+    pair_by_key(
+        &mut rem_a,
+        &mut rem_b,
+        &mut matched,
+        MatchTier::Label,
+        |id| label_key(cxa, id),
+        |id| label_key(cxb, id),
+    );
+    pair_by_key(
+        &mut rem_a,
+        &mut rem_b,
+        &mut matched,
+        MatchTier::Bucket,
+        |id| (cxa.node(id).op.name(), numel(cxa, id)),
+        |id| (cxb.node(id).op.name(), numel(cxb, id)),
+    );
+    matched.sort_unstable_by_key(|&(a, b, _)| (a, b));
+    let mut regions: Vec<RegionDelta> = matched
+        .into_iter()
+        .map(|(a, b, tier)| {
+            let (a_j, b_j) = (cxa.cost_j(a), cxb.cost_j(b));
+            let delta_j = b_j - a_j;
+            let gap = delta_j.abs();
+            let verdict = if gap > cfg.abs_floor_j && gap >= cfg.rel_threshold * a_j.max(b_j) {
+                if delta_j > 0.0 {
+                    RegionVerdict::BWasteful
+                } else {
+                    RegionVerdict::AWasteful
+                }
+            } else {
+                RegionVerdict::Close
+            };
+            RegionDelta {
+                node_a: a,
+                node_b: b,
+                label_a: cxa.node(a).label.clone(),
+                label_b: cxb.node(b).label.clone(),
+                op: cxa.node(a).op.name(),
+                kernel_a: kernel_for(cxa, a),
+                kernel_b: kernel_for(cxb, b),
+                a_j,
+                b_j,
+                delta_j,
+                tier,
+                verdict,
+            }
+        })
+        .collect();
+    regions.sort_by(|x, y| {
+        y.delta_j
+            .abs()
+            .total_cmp(&x.delta_j.abs())
+            .then(x.label_a.cmp(&y.label_a))
+            .then(x.node_a.cmp(&y.node_a))
+    });
+    let unmatched = |cx: &LintContext, rem: &[NodeId]| -> Vec<UnmatchedRegion> {
+        rem.iter()
+            .map(|&id| UnmatchedRegion {
+                node: id,
+                label: cx.node(id).label.clone(),
+                op: cx.node(id).op.name(),
+                cost_j: cx.cost_j(id),
+            })
+            .collect()
+    };
+    StaticDiffReport {
+        target_a: name_a.to_string(),
+        target_b: name_b.to_string(),
+        nodes_a: cxa.graph.len(),
+        nodes_b: cxb.graph.len(),
+        total_a_j: cxa.total_static_j(),
+        total_b_j: cxb.total_static_j(),
+        regions,
+        unmatched_a: unmatched(cxa, &rem_a),
+        unmatched_b: unmatched(cxb, &rem_b),
+        error: None,
+    }
+}
+
+/// Diff two suite targets (analysing each under its own dispatcher/env
+/// on the shared device). Fails typed when either graph is malformed.
+pub fn diff_targets(
+    a: &LintTarget,
+    b: &LintTarget,
+    device: &DeviceSpec,
+    cfg: &StaticDiffConfig,
+) -> crate::Result<StaticDiffReport> {
+    let cxa = LintContext::new(&a.run.prog, &a.run.dispatcher, &a.run.env, device)
+        .map_err(|e| e.context(format!("static diff target `{}`", a.name)))?;
+    let cxb = LintContext::new(&b.run.prog, &b.run.dispatcher, &b.run.env, device)
+        .map_err(|e| e.context(format!("static diff target `{}`", b.name)))?;
+    Ok(diff_contexts(&a.name, &cxa, &b.name, &cxb, cfg))
+}
+
+/// All comparable suite pairs: targets sharing a declared workload
+/// family, in (i, j) order with i < j.
+pub fn family_pairs(targets: &[LintTarget]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    for i in 0..targets.len() {
+        for j in (i + 1)..targets.len() {
+            if let (Some(fa), Some(fb)) = (targets[i].family, targets[j].family) {
+                if fa == fb {
+                    out.push((i, j));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Run the static diff over every same-family pair, fanning out across
+/// `threads` workers. Pair order and per-pair content are fully
+/// deterministic, so the result is bit-identical for any worker count.
+pub fn diff_suite(
+    targets: &[LintTarget],
+    device: &DeviceSpec,
+    threads: usize,
+    cfg: &StaticDiffConfig,
+) -> Vec<StaticDiffReport> {
+    let pairs = family_pairs(targets);
+    par_map(&pairs, threads, |&(i, j)| {
+        let (a, b) = (&targets[i], &targets[j]);
+        diff_targets(a, b, device, cfg).unwrap_or_else(|e| StaticDiffReport {
+            target_a: a.name.clone(),
+            target_b: b.name.clone(),
+            nodes_a: a.run.prog.graph.len(),
+            nodes_b: b.run.prog.graph.len(),
+            total_a_j: 0.0,
+            total_b_j: 0.0,
+            regions: vec![],
+            unmatched_a: vec![],
+            unmatched_b: vec![],
+            error: Some(e.to_string()),
+        })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dispatch::Env;
+    use crate::exec::{Dispatcher, Program};
+    use crate::graph::{Graph, OpKind};
+    use crate::tensor::Tensor;
+
+    fn ctx_parts() -> (Dispatcher, Env, DeviceSpec) {
+        (Dispatcher::new(), Env::new(), DeviceSpec::h200_sim())
+    }
+
+    fn mlp(sys: &str, extra_copy: bool) -> Program {
+        let mut g = Graph::new(sys);
+        let x = g.add(OpKind::Input, &[], "x");
+        let w = g.add(OpKind::Weight, &[], "w");
+        let m = g.add(OpKind::MatMul, &[x, w], &format!("{sys}.proj"));
+        let act = g.add(OpKind::Gelu, &[m], &format!("{sys}.act"));
+        let tip = if extra_copy {
+            g.add(OpKind::Copy, &[act], &format!("{sys}.staging_copy"))
+        } else {
+            act
+        };
+        g.add(OpKind::Output, &[tip], "out");
+        let mut p = Program::new(g);
+        p.feed(0, Tensor::zeros(&[16, 32]));
+        p.feed(1, Tensor::zeros(&[32, 8]));
+        p
+    }
+
+    #[test]
+    fn identical_programs_diff_empty() {
+        let (d, e, dev) = ctx_parts();
+        let p = mlp("a", false);
+        let q = mlp("a", false);
+        let cxa = LintContext::new(&p, &d, &e, &dev).unwrap();
+        let cxb = LintContext::new(&q, &d, &e, &dev).unwrap();
+        let rep = diff_contexts("a", &cxa, "b", &cxb, &StaticDiffConfig::default());
+        assert!(rep.unmatched_a.is_empty() && rep.unmatched_b.is_empty());
+        assert!(rep.regions.iter().all(|r| r.tier == MatchTier::Hash));
+        assert!(rep.regions.iter().all(|r| r.verdict == RegionVerdict::Close));
+        assert!(rep.findings(&StaticDiffConfig::default()).is_empty());
+    }
+
+    #[test]
+    fn renamed_same_structure_matches_by_hash() {
+        let (d, e, dev) = ctx_parts();
+        let p = mlp("torch", false);
+        let q = mlp("tf", false);
+        let cxa = LintContext::new(&p, &d, &e, &dev).unwrap();
+        let cxb = LintContext::new(&q, &d, &e, &dev).unwrap();
+        let rep = diff_contexts("torch", &cxa, "tf", &cxb, &StaticDiffConfig::default());
+        // labels differ in their system prefix but structure is equal:
+        // every billed region pairs at the hash tier with zero delta
+        assert_eq!(rep.regions.len(), 2);
+        assert!(rep.regions.iter().all(|r| r.tier == MatchTier::Hash && r.delta_j == 0.0));
+    }
+
+    #[test]
+    fn extra_region_is_attributed_unmatched() {
+        let (d, e, dev) = ctx_parts();
+        let p = mlp("a", false);
+        let q = mlp("b", true);
+        let cxa = LintContext::new(&p, &d, &e, &dev).unwrap();
+        let cxb = LintContext::new(&q, &d, &e, &dev).unwrap();
+        let rep = diff_contexts("a", &cxa, "b", &cxb, &StaticDiffConfig::default());
+        assert!(rep.unmatched_a.is_empty());
+        assert_eq!(rep.unmatched_b.len(), 1);
+        assert_eq!(rep.unmatched_b[0].label, "b.staging_copy");
+        let f = rep.findings(&StaticDiffConfig::default());
+        assert!(
+            f.iter().any(|f| f.rule == "static-diff-unmatched"
+                && f.label == "b:b.staging_copy"
+                && f.est_wasted_j > 0.0),
+            "findings: {f:?}"
+        );
+    }
+
+    #[test]
+    fn label_tier_pairs_when_attrs_differ() {
+        let (d, e, dev) = ctx_parts();
+        let build = |sys: &str, pad: &str| {
+            let mut g = Graph::new(sys);
+            let x = g.add(OpKind::Input, &[], "x");
+            let w = g.add(OpKind::Weight, &[], "w");
+            g.add_attr1(OpKind::Conv2d, &[x, w], &format!("{sys}.conv2d"), "pad", pad);
+            let mut p = Program::new(g);
+            p.feed(0, Tensor::zeros(&[2, 8, 16, 16]));
+            p.feed(1, Tensor::zeros(&[8, 8, 3, 3]));
+            p
+        };
+        let p = build("torch", "1");
+        let q = build("tf", "0");
+        let cxa = LintContext::new(&p, &d, &e, &dev).unwrap();
+        let cxb = LintContext::new(&q, &d, &e, &dev).unwrap();
+        let rep = diff_contexts("torch", &cxa, "tf", &cxb, &StaticDiffConfig::default());
+        // differing pad attr breaks the hash tier; the shared label
+        // suffix `conv2d` still pairs the regions
+        assert_eq!(rep.regions.len(), 1);
+        assert_eq!(rep.regions[0].tier, MatchTier::Label);
+        assert!(rep.unmatched_a.is_empty() && rep.unmatched_b.is_empty());
+    }
+
+    #[test]
+    fn diff_name_is_stable() {
+        assert_eq!(diff_name("x", "y"), "diff~x~y");
+    }
+}

@@ -20,6 +20,7 @@
 //! misconfiguration class for the streaming/detect knobs that cannot be
 //! seen in any graph.
 
+pub mod diff;
 pub mod rewrite;
 pub mod rules;
 pub mod suite;
@@ -37,8 +38,11 @@ use crate::stream::StreamConfig;
 use crate::tensor::Tensor;
 use crate::Error;
 
+pub use diff::{
+    diff_name, diff_suite, diff_targets, StaticDiffConfig, StaticDiffReport,
+};
 pub use rewrite::{apply_rewrite, verify_finding, VerifyOutcome};
-pub use rules::default_passes;
+pub use rules::{default_passes, rule_names};
 pub use suite::{builtin_targets, lint_suite, LintReport, LintTarget, TargetReport};
 
 // ---------------------------------------------------------------------

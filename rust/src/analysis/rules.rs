@@ -7,8 +7,9 @@
 //! executor would bill for them, and — where the fix is mechanical — a
 //! rewrite that [`super::rewrite::apply_rewrite`] can perform.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
+use crate::dispatch::VarSource;
 use crate::graph::{NodeId, OpKind};
 
 use super::{attr_csv, attr_f64, attr_usize, LintContext, LintFinding, LintPass, RewriteStep, Severity};
@@ -25,7 +26,20 @@ pub fn default_passes() -> Vec<Box<dyn LintPass>> {
         Box::new(RepeatBroadcast),
         Box::new(UnfusedMatmulAdd),
         Box::new(RedundantSync),
+        Box::new(IdempotentOp),
+        Box::new(DeadWeight),
+        Box::new(DtypeDowncast),
+        Box::new(DispatchAttr),
     ]
+}
+
+/// Every rule name `lint --only` accepts: the graph passes plus the
+/// rules emitted outside the pass framework (config lints and the
+/// static differential audit).
+pub fn rule_names() -> Vec<&'static str> {
+    let mut names: Vec<&'static str> = default_passes().iter().map(|p| p.name()).collect();
+    names.extend(["stream-config", "detect-config", "static-diff", "static-diff-unmatched"]);
+    names
 }
 
 // ---------------------------------------------------------------------
@@ -120,9 +134,50 @@ impl LintPass for CseDuplicate {
             if dups.is_empty() {
                 continue;
             }
-            let est: f64 = dups.iter().map(|&d| cx.cost_j(d)).sum();
+            // bypassing a duplicate also kills its exclusive input cone:
+            // any producer whose every consumer is being removed is
+            // billed for nothing once the duplicate reads the canonical
+            // output. Grow the removed set to that fixpoint (sources and
+            // the canonical node itself are always kept).
+            let mut removed: BTreeSet<NodeId> = dups.iter().copied().collect();
+            let mut changed = true;
+            while changed {
+                changed = false;
+                for &id in cx.topo.iter().rev() {
+                    if removed.contains(&id)
+                        || id == canon
+                        || matches!(
+                            g.nodes[id].op,
+                            OpKind::Input | OpKind::Weight | OpKind::Output
+                        )
+                        || cx.consumers[id].is_empty()
+                    {
+                        continue;
+                    }
+                    if cx.consumers[id].iter().all(|c| removed.contains(c)) {
+                        removed.insert(id);
+                        changed = true;
+                    }
+                }
+            }
+            // cone in reverse topo order, so Removes delete consumers
+            // before their producers
+            let cone: Vec<NodeId> = cx
+                .topo
+                .iter()
+                .rev()
+                .copied()
+                .filter(|id| removed.contains(id) && !dups.contains(id))
+                .collect();
+            let est: f64 = removed.iter().map(|&d| cx.cost_j(d)).sum();
             let mut nodes = vec![canon];
-            nodes.extend(&dups);
+            nodes.extend(removed.iter().copied());
+            nodes.sort_unstable();
+            let mut steps: Vec<RewriteStep> = dups
+                .iter()
+                .map(|&d| RewriteStep::Bypass { node: d, replacement: canon })
+                .collect();
+            steps.extend(cone.iter().map(|&node| RewriteStep::Remove { node }));
             out.push(LintFinding {
                 rule: "cse-duplicate",
                 severity: Severity::Warn,
@@ -131,14 +186,19 @@ impl LintPass for CseDuplicate {
                 est_wasted_j: est,
                 suggestion: format!(
                     "{} duplicate(s) of `{}` recompute an identical subtree; reuse its \
-                     output",
+                     output{}",
                     dups.len(),
-                    g.nodes[canon].label
+                    g.nodes[canon].label,
+                    if cone.is_empty() {
+                        String::new()
+                    } else {
+                        format!(
+                            " (and drop {} upstream node(s) only the duplicate consumed)",
+                            cone.len()
+                        )
+                    }
                 ),
-                steps: dups
-                    .iter()
-                    .map(|&d| RewriteStep::Bypass { node: d, replacement: canon })
-                    .collect(),
+                steps,
             });
         }
         out
@@ -607,6 +667,333 @@ impl LintPass for RedundantSync {
     }
 }
 
+// ---------------------------------------------------------------------
+// idempotent-op
+// ---------------------------------------------------------------------
+
+/// An idempotent op applied straight to its own output: `Relu∘Relu`
+/// and `Sort∘Sort` are exact identities, and `Softmax∘Softmax` — while
+/// not an identity — is the classic double-normalisation bug (a
+/// pre-softmaxed input handed to a path that softmaxes again). Either
+/// way the second kernel is wasted work.
+pub struct IdempotentOp;
+
+impl LintPass for IdempotentOp {
+    fn name(&self) -> &'static str {
+        "idempotent-op"
+    }
+
+    fn run(&self, cx: &LintContext) -> Vec<LintFinding> {
+        let g = cx.graph;
+        let mut out = Vec::new();
+        for node in &g.nodes {
+            if !matches!(node.op, OpKind::Softmax | OpKind::Relu | OpKind::Sort) {
+                continue;
+            }
+            let inner = match node.inputs.first() {
+                Some(&i) => &g.nodes[i],
+                None => continue,
+            };
+            if inner.op != node.op || inner.attrs != node.attrs {
+                continue;
+            }
+            out.push(LintFinding {
+                rule: "idempotent-op",
+                severity: Severity::Warn,
+                nodes: vec![inner.id, node.id],
+                label: node.label.clone(),
+                est_wasted_j: cx.cost_j(node.id),
+                suggestion: format!(
+                    "`{}` reapplies {} to `{}`'s output; the second application is \
+                     wasted work (and for softmax almost always a normalisation bug)",
+                    node.label,
+                    node.op.name(),
+                    inner.label
+                ),
+                steps: vec![RewriteStep::Bypass { node: node.id, replacement: inner.id }],
+            });
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// dead-weight
+// ---------------------------------------------------------------------
+
+/// A `Weight` feed that never reaches any `Output`: the parameter is
+/// declared, fed, and kept resident in HBM without contributing to the
+/// result. Costs no kernel energy in the static model (sources are
+/// virtual), so the finding is about residency and intent — a per-feed
+/// sharper companion to the blanket `dead-subgraph` rule.
+pub struct DeadWeight;
+
+impl LintPass for DeadWeight {
+    fn name(&self) -> &'static str {
+        "dead-weight"
+    }
+
+    fn run(&self, cx: &LintContext) -> Vec<LintFinding> {
+        let g = cx.graph;
+        let outputs: Vec<NodeId> =
+            g.nodes.iter().filter(|n| n.op == OpKind::Output).map(|n| n.id).collect();
+        if outputs.is_empty() {
+            return vec![];
+        }
+        let mut live = vec![false; g.len()];
+        for &o in &outputs {
+            for (id, reach) in g.reaching(o).into_iter().enumerate() {
+                live[id] = live[id] || reach;
+            }
+        }
+        let mut out = Vec::new();
+        for node in &g.nodes {
+            if node.op != OpKind::Weight || live[node.id] {
+                continue;
+            }
+            let elems = cx.shapes[node.id].as_ref().map(|s| s.iter().product::<usize>());
+            let steps = if cx.consumers[node.id].is_empty() {
+                vec![RewriteStep::Remove { node: node.id }]
+            } else {
+                vec![] // its consumers are dead too; dead-subgraph owns that cone
+            };
+            out.push(LintFinding {
+                rule: "dead-weight",
+                severity: Severity::Warn,
+                nodes: vec![node.id],
+                label: node.label.clone(),
+                est_wasted_j: 0.0,
+                suggestion: format!(
+                    "weight `{}`{} never reaches an Output; it is declared, fed, and \
+                     kept resident for nothing — drop the feed",
+                    node.label,
+                    elems.map_or(String::new(), |n| format!(" ({n} elements)"))
+                ),
+                steps,
+            });
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// dtype-downcast
+// ---------------------------------------------------------------------
+
+/// One flagged dispatch site: what it runs now and what a single flag
+/// flip would select instead.
+struct DowncastSite {
+    node: NodeId,
+    saved_j: f64,
+    kernel_now: String,
+    kernel_then: String,
+    current_val: String,
+    source: String,
+}
+
+/// Symbolic dispatch coverage (misconfiguration class): enumerate each
+/// routine's finite config-flag space and flag nodes whose selected
+/// kernel is strictly energy-dominated by a reachable alternative that
+/// one `ConfigFlag`-sourced variable away — the paper's fp32-SGEMM-on-
+/// a-TensorCore-capable-routine case (`allow_tf32` unset). Only flags
+/// assignments that cost strictly less energy at no time cost, and only
+/// variables a developer can actually set (config flags — not API
+/// arguments or input properties, which the call site determines).
+pub struct DtypeDowncast;
+
+impl LintPass for DtypeDowncast {
+    fn name(&self) -> &'static str {
+        "dtype-downcast"
+    }
+
+    fn run(&self, cx: &LintContext) -> Vec<LintFinding> {
+        let g = cx.graph;
+        // one finding per (flag, cheaper value), covering every node it fixes
+        let mut groups: BTreeMap<(String, String), Vec<DowncastSite>> = BTreeMap::new();
+        for node in &g.nodes {
+            if node.op.is_virtual() {
+                continue;
+            }
+            let cur = &cx.cost[node.id];
+            let (cur_e, cur_t) = (cur.energy_j, cur.time_us);
+            if cur_e <= 0.0 {
+                continue;
+            }
+            let out_shape = match &cx.shapes[node.id] {
+                Some(s) => s.clone(),
+                None => continue,
+            };
+            let in_shapes: Option<Vec<Vec<usize>>> =
+                node.inputs.iter().map(|&i| cx.shapes[i].clone()).collect();
+            let in_shapes = match in_shapes {
+                Some(s) => s,
+                None => continue,
+            };
+            let key = node
+                .attrs
+                .get("dispatch")
+                .cloned()
+                .unwrap_or_else(|| node.op.name().to_string());
+            let routine = cx.dispatcher.routine_for(node.op, &key);
+            if routine.provenance.is_empty() {
+                continue; // direct routine: no config space to explore
+            }
+            let merged = cx.env.merged(&node.attrs);
+            let kernel_now = routine.run(&merged).choice.kernel;
+            let mut best: Option<(String, String, f64, String)> = None;
+            for outcome in routine.enumerate_outcomes() {
+                // a useful fix differs from the live env in exactly one
+                // variable, and that variable must be a config flag
+                let diffs: Vec<(&String, &String)> = outcome
+                    .assignment
+                    .iter()
+                    .filter(|(k, v)| merged.get(k) != v.as_str())
+                    .collect();
+                if diffs.len() != 1 {
+                    continue;
+                }
+                let (var, val) = diffs[0];
+                if !matches!(routine.source_of(var), Some(VarSource::ConfigFlag(_))) {
+                    continue;
+                }
+                let mut attrs = node.attrs.clone();
+                attrs.insert(var.clone(), val.clone());
+                let cand = cx.op_cost(node.op, &attrs, &in_shapes, &out_shape);
+                if cand.energy_j < cur_e && cand.time_us <= cur_t {
+                    let saved = cur_e - cand.energy_j;
+                    if best.as_ref().map_or(true, |b| saved > b.2) {
+                        best = Some((
+                            var.clone(),
+                            val.clone(),
+                            saved,
+                            outcome.choice.kernel.clone(),
+                        ));
+                    }
+                }
+            }
+            if let Some((var, val, saved_j, kernel_then)) = best {
+                let source = routine
+                    .source_of(&var)
+                    .map(|s| s.describe())
+                    .unwrap_or_else(|| format!("variable `{var}`"));
+                groups.entry((var, val)).or_default().push(DowncastSite {
+                    node: node.id,
+                    saved_j,
+                    kernel_now: kernel_now.clone(),
+                    kernel_then,
+                    current_val: merged.get(&var).to_string(),
+                    source,
+                });
+            }
+        }
+        let mut out = Vec::new();
+        for ((var, val), sites) in groups {
+            let est: f64 = sites.iter().map(|s| s.saved_j).sum();
+            let top = sites
+                .iter()
+                .max_by(|a, b| a.saved_j.total_cmp(&b.saved_j).then(b.node.cmp(&a.node)))
+                .expect("non-empty");
+            let mut nodes: Vec<NodeId> = sites.iter().map(|s| s.node).collect();
+            nodes.sort_unstable();
+            let steps = nodes
+                .iter()
+                .map(|&node| RewriteStep::SetAttr {
+                    node,
+                    key: var.clone(),
+                    value: val.clone(),
+                })
+                .collect();
+            let cur_disp = if top.current_val.is_empty() {
+                "unset".to_string()
+            } else {
+                format!("`{}`", top.current_val)
+            };
+            out.push(LintFinding {
+                rule: "dtype-downcast",
+                severity: Severity::Warn,
+                nodes,
+                label: g.nodes[top.node].label.clone(),
+                est_wasted_j: est,
+                suggestion: format!(
+                    "{} kernel(s) run {} because {} is {}; setting `{}={}` selects {} — \
+                     strictly less energy at no time cost",
+                    sites.len(),
+                    top.kernel_now,
+                    top.source,
+                    cur_disp,
+                    var,
+                    val,
+                    top.kernel_then
+                ),
+                steps,
+            });
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// dispatch-attr
+// ---------------------------------------------------------------------
+
+/// Fused kernels a dispatcher registers that no graph node ever
+/// requests (API-misuse class): the system ships a cheaper
+/// implementation but the model never opts in via its `dispatch`
+/// attribute. Only keys plausibly relevant to the graph are reported —
+/// some present op's name must appear in the key or the routine's API —
+/// so a framework dispatcher registering kernels for absent op families
+/// stays quiet.
+pub struct DispatchAttr;
+
+impl LintPass for DispatchAttr {
+    fn name(&self) -> &'static str {
+        "dispatch-attr"
+    }
+
+    fn run(&self, cx: &LintContext) -> Vec<LintFinding> {
+        let g = cx.graph;
+        let mut requested: BTreeSet<String> = BTreeSet::new();
+        let mut present: BTreeSet<&'static str> = BTreeSet::new();
+        for node in &g.nodes {
+            if node.op.is_virtual() {
+                continue;
+            }
+            requested.insert(
+                node.attrs
+                    .get("dispatch")
+                    .cloned()
+                    .unwrap_or_else(|| node.op.name().to_string()),
+            );
+            present.insert(node.op.name());
+        }
+        let mut out = Vec::new();
+        for (key, routine) in &cx.dispatcher.routines {
+            if requested.contains(key) {
+                continue;
+            }
+            let relevant =
+                present.iter().any(|op| key.contains(op) || routine.api.contains(op));
+            if !relevant {
+                continue;
+            }
+            out.push(LintFinding {
+                rule: "dispatch-attr",
+                severity: Severity::Info,
+                nodes: vec![],
+                label: key.clone(),
+                est_wasted_j: 0.0,
+                suggestion: format!(
+                    "dispatcher registers `{key}` (api `{}`) but no node requests it; \
+                     eligible nodes could opt in via a `dispatch=\"{key}\"` attribute",
+                    routine.api
+                ),
+                steps: vec![],
+            });
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -815,5 +1202,139 @@ mod tests {
         assert!(rb[0]
             .steps
             .contains(&RewriteStep::SetAttr { node: attn, key: "gqa_reps".into(), value: "2".into() }));
+    }
+
+    #[test]
+    fn cse_cone_includes_exclusive_upstream() {
+        // x → trunk → t1 → r1 ─┐
+        //          ↘ t2 → r2 ──┴→ combine
+        let mut g = Graph::new("cone");
+        let x = g.add(OpKind::Input, &[], "x");
+        let m = g.add(OpKind::Gelu, &[x], "trunk");
+        let t1 = g.add(OpKind::Tanh, &[m], "branch1.tanh");
+        let r1 = g.add(OpKind::Relu, &[t1], "branch1.relu");
+        let t2 = g.add(OpKind::Tanh, &[m], "branch2.tanh");
+        let r2 = g.add(OpKind::Relu, &[t2], "branch2.relu");
+        let s = g.add(OpKind::Add, &[r1, r2], "combine");
+        g.add(OpKind::Output, &[s], "out");
+        let mut p = Program::new(g);
+        feed_x(&mut p, &[32, 32]);
+        let f = Harness::new(p).lint();
+        let cse: Vec<_> = f.iter().filter(|f| f.rule == "cse-duplicate").collect();
+        // the relu bucket's bypass also drops t2, whose only consumer
+        // was the bypassed duplicate; the shared trunk stays
+        let relu = cse.iter().find(|f| f.nodes.contains(&r1)).expect("relu bucket");
+        assert_eq!(relu.nodes, vec![r1, t2, r2]);
+        assert_eq!(
+            relu.steps,
+            vec![
+                RewriteStep::Bypass { node: r2, replacement: r1 },
+                RewriteStep::Remove { node: t2 },
+            ]
+        );
+        let tanh = cse.iter().find(|f| f.nodes.contains(&t1)).expect("tanh bucket");
+        assert_eq!(tanh.steps, vec![RewriteStep::Bypass { node: t2, replacement: t1 }]);
+        assert!(relu.est_wasted_j > tanh.est_wasted_j, "cone cost must be included");
+    }
+
+    #[test]
+    fn double_softmax_is_flagged_and_bypassed() {
+        let mut g = Graph::new("resm");
+        let x = g.add(OpKind::Input, &[], "x");
+        let s1 = g.add(OpKind::Softmax, &[x], "probs");
+        let s2 = g.add(OpKind::Softmax, &[s1], "probs.again");
+        let r = g.add(OpKind::Relu, &[s2], "clamp"); // relu of softmax: fine
+        g.add(OpKind::Output, &[r], "out");
+        let mut p = Program::new(g);
+        feed_x(&mut p, &[16, 64]);
+        let f = Harness::new(p).lint();
+        let idem: Vec<_> = f.iter().filter(|f| f.rule == "idempotent-op").collect();
+        assert_eq!(idem.len(), 1);
+        assert_eq!(idem[0].nodes, vec![s1, s2]);
+        assert_eq!(idem[0].steps, vec![RewriteStep::Bypass { node: s2, replacement: s1 }]);
+        assert!(idem[0].est_wasted_j > 0.0);
+    }
+
+    #[test]
+    fn dead_weight_feed_is_flagged() {
+        let mut g = Graph::new("dw");
+        let x = g.add(OpKind::Input, &[], "x");
+        let w = g.add(OpKind::Weight, &[], "proj_w");
+        let unused = g.add(OpKind::Weight, &[], "unused_bias");
+        let m = g.add(OpKind::MatMul, &[x, w], "proj");
+        g.add(OpKind::Output, &[m], "out");
+        let mut p = Program::new(g);
+        p.feed(0, Tensor::zeros(&[8, 16]));
+        p.feed(1, Tensor::zeros(&[16, 4]));
+        p.feed(2, Tensor::zeros(&[4]));
+        let f = Harness::new(p).lint();
+        let dw: Vec<_> = f.iter().filter(|f| f.rule == "dead-weight").collect();
+        assert_eq!(dw.len(), 1);
+        assert_eq!(dw[0].label, "unused_bias");
+        assert_eq!(dw[0].steps, vec![RewriteStep::Remove { node: unused }]);
+        assert!(dw[0].suggestion.contains("4 elements"));
+    }
+
+    #[test]
+    fn tf32_unset_matmul_is_downcast_flagged() {
+        let mut g = Graph::new("tf32");
+        let x = g.add(OpKind::Input, &[], "x");
+        let w = g.add(OpKind::Weight, &[], "w");
+        let m = g.add(OpKind::MatMul, &[x, w], "proj");
+        g.add(OpKind::Output, &[m], "out");
+        let mut p = Program::new(g);
+        p.feed(0, Tensor::zeros(&[64, 128]));
+        p.feed(1, Tensor::zeros(&[128, 64]));
+        let mut h = Harness::new(p);
+        h.dispatcher =
+            Dispatcher::new().register("matmul", crate::systems::torch_matmul_routine());
+        let f = h.lint();
+        let dc: Vec<_> = f.iter().filter(|f| f.rule == "dtype-downcast").collect();
+        assert_eq!(dc.len(), 1, "findings: {f:?}");
+        assert_eq!(dc[0].nodes, vec![m]);
+        assert!(dc[0].est_wasted_j > 0.0);
+        // the finding names the responsible flag and the cheaper assignment
+        assert!(dc[0].suggestion.contains("torch.backends.cuda.matmul.allow_tf32"));
+        assert!(dc[0].suggestion.contains("allow_tf32=true"));
+        assert_eq!(
+            dc[0].steps,
+            vec![RewriteStep::SetAttr {
+                node: m,
+                key: "allow_tf32".into(),
+                value: "true".into()
+            }]
+        );
+        // with the flag already set the routine picks tensor cores: quiet
+        h.env = Env::new().with("allow_tf32", "true");
+        assert!(h.lint().iter().all(|f| f.rule != "dtype-downcast"));
+    }
+
+    #[test]
+    fn unrequested_fused_kernel_is_advised() {
+        let mut g = Graph::new("da");
+        let x = g.add(OpKind::Input, &[], "x");
+        let w = g.add(OpKind::Weight, &[], "w");
+        let m = g.add(OpKind::MatMul, &[x, w], "proj");
+        g.add(OpKind::Output, &[m], "out");
+        let mut p = Program::new(g);
+        p.feed(0, Tensor::zeros(&[8, 8]));
+        p.feed(1, Tensor::zeros(&[8, 8]));
+        let mut h = Harness::new(p);
+        h.env = Env::new().with("allow_tf32", "true");
+        h.dispatcher = Dispatcher::new()
+            // requested via the op-name fallback: not reported
+            .register("matmul", crate::systems::torch_matmul_routine())
+            // registered, never requested, relevant to a present op
+            .register("sys.fused_matmul", crate::systems::torch_matmul_routine())
+            // registered, never requested, but no related op present
+            .register(
+                "sys.fused_count",
+                crate::systems::frameworks::tf_count_nonzero_routine(),
+            );
+        let f = h.lint();
+        let da: Vec<_> = f.iter().filter(|f| f.rule == "dispatch-attr").collect();
+        assert_eq!(da.len(), 1, "findings: {f:?}");
+        assert_eq!(da[0].label, "sys.fused_matmul");
+        assert!(da[0].suggestion.contains("dispatch=\"sys.fused_matmul\""));
     }
 }

@@ -6,7 +6,11 @@
 
 use crate::cases;
 use crate::coordinator::SysRun;
+use crate::dispatch::Env;
 use crate::energy::DeviceSpec;
+use crate::exec::{Dispatcher, Program};
+use crate::graph::{Graph, OpKind};
+use crate::tensor::Tensor;
 use crate::systems::frameworks::{
     build_conv, conv_params, tf_dispatcher, torch_dispatcher, ConvLayout, ConvSpec,
 };
@@ -28,20 +32,28 @@ use super::{lint_graph, LintContext, LintFinding};
 pub struct LintTarget {
     /// Stable name used by the CLI `--target` filter and the manifest.
     pub name: String,
+    /// Workload family for the static differential audit: only targets
+    /// sharing a family implement the same workload and are comparable
+    /// pairwise (`None` = single-system scenario, not diffable).
+    pub family: Option<&'static str>,
     pub run: SysRun,
 }
 
 impl LintTarget {
-    fn new(name: &str, run: SysRun) -> LintTarget {
-        LintTarget { name: name.to_string(), run }
+    fn new(name: &str, family: Option<&'static str>, run: SysRun) -> LintTarget {
+        LintTarget { name: name.to_string(), family, run }
     }
 }
 
 /// Every built-in program the lint suite covers: the four LLM serving
 /// stacks (shared weights), both UNet builds, the torch/tf conv
-/// routines, and the wasteful sides of the two known cases the static
-/// rules are expected to rediscover (c2 redundant copy, c9 redundant
-/// barrier).
+/// routines, the wasteful sides of three known cases the static rules
+/// are expected to rediscover (c2 redundant copy, c8 tf32 left off,
+/// c9 redundant barrier), and a synthetic fixture exercising the
+/// duplicate/idempotent/dead-feed rules with exact rewrites.
+///
+/// Targets sharing a `family` implement the same workload; the static
+/// differential audit (`lint --diff`) compares exactly those pairs.
 pub fn builtin_targets(seed: u64) -> Vec<LintTarget> {
     let mut out = Vec::new();
     let mut rng = Prng::new(seed);
@@ -56,12 +68,14 @@ pub fn builtin_targets(seed: u64) -> Vec<LintTarget> {
         let prog = build_llm(&params, &opts);
         out.push(LintTarget::new(
             sys.name(),
+            Some("llm"),
             SysRun::new(sys.name(), dispatcher, default_env(sys), prog),
         ));
     }
     let unet = UnetParams::new(&mut rng, UnetSpec::sd3_sim());
     out.push(LintTarget::new(
         SystemId::MiniSd.name(),
+        Some("unet"),
         SysRun::new(
             SystemId::MiniSd.name(),
             sd_dispatcher(),
@@ -71,6 +85,7 @@ pub fn builtin_targets(seed: u64) -> Vec<LintTarget> {
     ));
     out.push(LintTarget::new(
         SystemId::MiniDiffusers.name(),
+        Some("unet"),
         SysRun::new(
             SystemId::MiniDiffusers.name(),
             diffusers_dispatcher(),
@@ -82,6 +97,7 @@ pub fn builtin_targets(seed: u64) -> Vec<LintTarget> {
     let (x, w) = conv_params(&mut rng, spec);
     out.push(LintTarget::new(
         SystemId::MiniTorch.name(),
+        Some("conv"),
         SysRun::new(
             SystemId::MiniTorch.name(),
             torch_dispatcher(),
@@ -91,6 +107,7 @@ pub fn builtin_targets(seed: u64) -> Vec<LintTarget> {
     ));
     out.push(LintTarget::new(
         SystemId::MiniTf.name(),
+        Some("conv"),
         SysRun::new(
             SystemId::MiniTf.name(),
             tf_dispatcher(),
@@ -98,12 +115,46 @@ pub fn builtin_targets(seed: u64) -> Vec<LintTarget> {
             build_conv("tf", spec, ConvLayout::Nhwc, &x, &w, "tf.conv2d"),
         ),
     ));
-    for id in ["c2", "c9"] {
+    // c8's wasteful side is the same sd3_sim UNet with tf32 left off:
+    // diffing it against mini-stable-diffusion rediscovers the case
+    // statically, and the symbolic dispatch pass names the flag
+    for (id, family) in [("c2", None), ("c8", Some("unet")), ("c9", None)] {
         let scenario = cases::by_id(id).expect("known case");
         let (wasteful, _clean) = (scenario.build)(&mut Prng::new(seed));
-        out.push(LintTarget::new(&format!("case-{id}"), wasteful));
+        out.push(LintTarget::new(&format!("case-{id}"), family, wasteful));
     }
+    out.push(lint_fixture(&mut rng));
     out
+}
+
+/// Synthetic target exercising the rules the fleet models are too
+/// well-behaved to trigger: a duplicated branch whose bypass also kills
+/// its exclusive input cone (`cse-duplicate` with a verifiable
+/// rewrite), a double softmax (`idempotent-op`), and a weight feed
+/// nothing consumes (`dead-weight`).
+fn lint_fixture(rng: &mut Prng) -> LintTarget {
+    let mut g = Graph::new("lint-fixture");
+    let x = g.add(OpKind::Input, &[], "x");
+    let w = g.add(OpKind::Weight, &[], "proj_w");
+    let dead_w = g.add(OpKind::Weight, &[], "unused_bias");
+    let m = g.add(OpKind::MatMul, &[x, w], "head.proj");
+    let t1 = g.add(OpKind::Tanh, &[m], "head.branch1.tanh");
+    let r1 = g.add(OpKind::Relu, &[t1], "head.branch1.relu");
+    let t2 = g.add(OpKind::Tanh, &[m], "head.branch2.tanh");
+    let r2 = g.add(OpKind::Relu, &[t2], "head.branch2.relu");
+    let add = g.add(OpKind::Add, &[r1, r2], "head.combine");
+    let s1 = g.add(OpKind::Softmax, &[add], "head.softmax");
+    let s2 = g.add(OpKind::Softmax, &[s1], "head.resoftmax");
+    g.add(OpKind::Output, &[s2], "out");
+    let mut prog = Program::new(g);
+    prog.feed(x, Tensor::randn(rng, &[64, 256]));
+    prog.feed(w, Tensor::randn(rng, &[256, 128]));
+    prog.feed(dead_w, Tensor::randn(rng, &[128]));
+    LintTarget::new(
+        "lint-fixture",
+        None,
+        SysRun::new("lint-fixture", Dispatcher::new(), Env::new(), prog),
+    )
 }
 
 /// Lint result for one target.
@@ -181,9 +232,39 @@ mod tests {
                 "mini-pytorch",
                 "mini-tensorflow",
                 "case-c2",
+                "case-c8",
                 "case-c9",
+                "lint-fixture",
             ]
         );
+    }
+
+    #[test]
+    fn families_group_comparable_workloads() {
+        let t = builtin_targets(7);
+        let family_of = |name: &str| {
+            t.iter().find(|t| t.name == name).map(|t| t.family).expect("known target")
+        };
+        assert_eq!(family_of("mini-vllm"), Some("llm"));
+        assert_eq!(family_of("mini-stable-diffusion"), Some("unet"));
+        assert_eq!(family_of("case-c8"), Some("unet"));
+        assert_eq!(family_of("mini-pytorch"), Some("conv"));
+        assert_eq!(family_of("case-c9"), None);
+        assert_eq!(family_of("lint-fixture"), None);
+    }
+
+    #[test]
+    fn lint_fixture_triggers_the_new_rules() {
+        let t = builtin_targets(7);
+        let report = lint_suite(&t, &DeviceSpec::h200_sim(), 1);
+        let fx = report.targets.iter().find(|t| t.name == "lint-fixture").unwrap();
+        for rule in ["cse-duplicate", "idempotent-op", "dead-weight"] {
+            assert!(
+                fx.findings.iter().any(|f| f.rule == rule),
+                "missing {rule}: {:?}",
+                fx.findings.iter().map(|f| (f.rule, &f.label)).collect::<Vec<_>>()
+            );
+        }
     }
 
     #[test]

@@ -254,6 +254,100 @@ impl Routine {
     pub fn source_of(&self, var: &str) -> Option<&VarSource> {
         self.provenance.get(var)
     }
+
+    /// Finite value space of every branch variable in the CFG: each
+    /// literal some terminator tests the variable against, plus `""`
+    /// (unset — what [`Env::get`] reads for an absent flag). Because
+    /// terminators only ever compare against literals, this space is
+    /// exhaustive: any other value behaves exactly like one of these.
+    pub fn branch_space(&self) -> BTreeMap<String, Vec<String>> {
+        let mut space: BTreeMap<String, std::collections::BTreeSet<String>> = BTreeMap::new();
+        for block in &self.blocks {
+            match &block.term {
+                Term::CondBranch { var, eq, .. } => {
+                    let vals = space.entry(var.clone()).or_default();
+                    vals.insert(String::new());
+                    vals.insert(eq.clone());
+                }
+                Term::Switch { var, arms, .. } => {
+                    let vals = space.entry(var.clone()).or_default();
+                    vals.insert(String::new());
+                    for (v, _) in arms {
+                        vals.insert(v.clone());
+                    }
+                }
+                Term::Jump { .. } | Term::Launch { .. } => {}
+            }
+        }
+        space.into_iter().map(|(k, v)| (k, v.into_iter().collect())).collect()
+    }
+
+    /// Symbolically execute the CFG over its whole (finite) config
+    /// space: every assignment of branch variables to tested-literal-
+    /// or-unset values, in deterministic (BTreeMap) order. Each point
+    /// records the assignment tried and the [`KernelChoice`] it
+    /// reaches, so callers can spot assignments whose kernel is
+    /// strictly energy-dominated by a reachable alternative.
+    pub fn enumerate_outcomes(&self) -> Vec<ConfigOutcome> {
+        let space: Vec<(String, Vec<String>)> = self.branch_space().into_iter().collect();
+        let points: usize = space.iter().map(|(_, vs)| vs.len()).product();
+        let mut out = Vec::with_capacity(points);
+        for mut point in 0..points {
+            let mut assignment = BTreeMap::new();
+            let mut env = Env::new();
+            for (var, vals) in &space {
+                let v = &vals[point % vals.len()];
+                point /= vals.len();
+                assignment.insert(var.clone(), v.clone());
+                if !v.is_empty() {
+                    env.set(var, v);
+                }
+            }
+            let choice_idx = self.launch_idx(&env);
+            out.push(ConfigOutcome {
+                assignment,
+                choice_idx,
+                choice: self.choices[choice_idx].clone(),
+            });
+        }
+        out
+    }
+
+    /// Walk the CFG under `env` to the launched choice index.
+    fn launch_idx(&self, env: &Env) -> usize {
+        let mut bb = 0usize;
+        let mut guard = 0usize;
+        loop {
+            guard += 1;
+            assert!(guard <= 10_000, "dispatch routine `{}` does not terminate", self.api);
+            match &self.blocks[bb].term {
+                Term::CondBranch { var, eq, then_bb, else_bb } => {
+                    bb = if env.get(var) == eq { *then_bb } else { *else_bb };
+                }
+                Term::Switch { var, arms, default_bb } => {
+                    let v = env.get(var);
+                    bb = arms
+                        .iter()
+                        .find(|(val, _)| val == v)
+                        .map(|(_, b)| *b)
+                        .unwrap_or(*default_bb);
+                }
+                Term::Jump { bb: nxt } => bb = *nxt,
+                Term::Launch { idx } => return *idx,
+            }
+        }
+    }
+}
+
+/// One point of a routine's symbolically enumerated config space: the
+/// branch-variable assignment tried and the kernel it selects.
+#[derive(Clone, Debug)]
+pub struct ConfigOutcome {
+    /// Branch-variable assignment, var → tested value (`""` = unset).
+    pub assignment: BTreeMap<String, String>,
+    /// Index into [`Routine::choices`] of the launched kernel.
+    pub choice_idx: usize,
+    pub choice: KernelChoice,
 }
 
 #[cfg(test)]
@@ -347,6 +441,88 @@ mod tests {
         let m = base.merged(&attrs);
         assert_eq!(m.get("a"), "1");
         assert_eq!(m.get("b"), "9");
+    }
+
+    #[test]
+    fn branch_space_collects_tested_literals_plus_unset() {
+        let r = tf32_routine();
+        let space = r.branch_space();
+        assert_eq!(space.len(), 1);
+        assert_eq!(space["allow_tf32"], vec!["".to_string(), "true".to_string()]);
+    }
+
+    #[test]
+    fn enumeration_covers_the_full_config_space() {
+        let r = tf32_routine();
+        let outcomes = r.enumerate_outcomes();
+        assert_eq!(outcomes.len(), 2);
+        let on = outcomes.iter().find(|o| o.assignment["allow_tf32"] == "true").unwrap();
+        let off = outcomes.iter().find(|o| o.assignment["allow_tf32"].is_empty()).unwrap();
+        assert_eq!(on.choice.unit, ComputeUnit::TensorCore);
+        assert_eq!(off.choice.unit, ComputeUnit::CudaCore);
+        assert_ne!(on.choice_idx, off.choice_idx);
+        // symbolic enumeration agrees with concrete execution point-wise
+        for o in &outcomes {
+            let mut env = Env::new();
+            for (k, v) in &o.assignment {
+                if !v.is_empty() {
+                    env.set(k, v);
+                }
+            }
+            assert_eq!(r.run(&env).choice.kernel, o.choice.kernel);
+        }
+    }
+
+    #[test]
+    fn enumeration_handles_switch_and_direct_routines() {
+        let mut prov = BTreeMap::new();
+        prov.insert("layout".to_string(), VarSource::InputProperty("memory_format".into()));
+        let r = Routine {
+            api: "conv2d".into(),
+            frames: vec![],
+            blocks: vec![
+                Block {
+                    func: "cudnn_dispatch".into(),
+                    term: Term::Switch {
+                        var: "layout".into(),
+                        arms: vec![("nchw".into(), 1), ("nhwc".into(), 2)],
+                        default_bb: 1,
+                    },
+                },
+                Block { func: "cudnn_dispatch".into(), term: Term::Launch { idx: 0 } },
+                Block { func: "cudnn_dispatch".into(), term: Term::Launch { idx: 1 } },
+            ],
+            choices: vec![
+                KernelChoice::new("implicit_gemm_nchw", ComputeUnit::TensorCore),
+                KernelChoice::new("implicit_gemm_nhwc", ComputeUnit::TensorCore),
+            ],
+            provenance: prov,
+        };
+        // "", "nchw", "nhwc" — unset falls through to the default arm
+        let outcomes = r.enumerate_outcomes();
+        assert_eq!(outcomes.len(), 3);
+        let reachable: std::collections::BTreeSet<usize> =
+            outcomes.iter().map(|o| o.choice_idx).collect();
+        assert_eq!(reachable.len(), 2);
+
+        let d = Routine::direct(
+            "jax.lax.add",
+            vec![],
+            KernelChoice::new("fusion_add", ComputeUnit::CudaCore),
+        );
+        let outcomes = d.enumerate_outcomes();
+        assert_eq!(outcomes.len(), 1);
+        assert!(outcomes[0].assignment.is_empty());
+    }
+
+    #[test]
+    fn enumeration_is_deterministic() {
+        let r = tf32_routine();
+        let a: Vec<(BTreeMap<String, String>, usize)> =
+            r.enumerate_outcomes().into_iter().map(|o| (o.assignment, o.choice_idx)).collect();
+        let b: Vec<(BTreeMap<String, String>, usize)> =
+            r.enumerate_outcomes().into_iter().map(|o| (o.assignment, o.choice_idx)).collect();
+        assert_eq!(a, b);
     }
 
     #[test]

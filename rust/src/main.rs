@@ -112,7 +112,10 @@ fn print_help() {
          \x20            waste estimates; --verify applies each suggested rewrite\n\
          \x20            and A/Bs it through the differential pipeline; --expect\n\
          \x20            <manifest> gates on declared findings; exits non-zero at\n\
-         \x20            or above --deny <severity>\n\n\
+         \x20            or above --deny <severity>; --diff adds the static\n\
+         \x20            differential audit: match regions between same-family\n\
+         \x20            targets (every pair, or --target-a A --target-b B) and\n\
+         \x20            rank per-region cost-model deltas without running either\n\n\
          OPTIONS: --id <case> --eps <f64> --threshold <f64> --seed <u64> --device <h200|rtx4090>\n\
          STREAM:  --requests <n=500> --arrival <poisson|bursty|steady> --rate <hz=200>\n\
          \x20        --burst <n=16> --window <pairs=250> --hop <pairs> --ring <segs=512>\n\
@@ -124,6 +127,7 @@ fn print_help() {
          \x20        --threshold <frac=0.10> --tolerant --min-overlap <frac=0.8>\n\
          LINT:    --target <name substr> --only <rule> --deny <info|warn|error=error>\n\
          \x20        --expect <manifest> --verify --threads <n> --seed <u64=7>\n\
+         \x20        --diff --target-a <name> --target-b <name>\n\
          \x20        --window/--hop/--lookahead/--content-eps (stream-config lint overrides)"
     );
 }
@@ -573,10 +577,15 @@ fn cmd_diff(args: &Args) -> magneton::Result<()> {
 /// each suggested rewrite by A/B-ing original vs fixed program through
 /// the differential pipeline, `--expect <manifest>` to gate on declared
 /// findings, and `--deny <severity>` to make findings fail the build.
+/// `--diff` adds the static differential audit: regions of same-family
+/// targets are matched (hash, then label, then coarse-bucket tier) and
+/// their cost-model bills diffed into ranked `diff~a~b` pseudo-targets
+/// the same manifest/deny machinery gates.
 fn cmd_lint(args: &Args) -> magneton::Result<()> {
     use magneton::analysis::{
-        builtin_targets, check_manifest, lint_detect_config, lint_stream_config, lint_suite,
-        parse_manifest, sort_findings, verify_finding, Severity, TargetReport,
+        builtin_targets, check_manifest, diff_suite, diff_targets, lint_detect_config,
+        lint_stream_config, lint_suite, parse_manifest, rule_names, sort_findings,
+        verify_finding, Severity, StaticDiffConfig, TargetReport,
     };
     use magneton::detect::DetectConfig;
     use magneton::stream::StreamConfig;
@@ -590,6 +599,17 @@ fn cmd_lint(args: &Args) -> magneton::Result<()> {
             "unknown severity `{deny_name}` (expected info|warn|error)"
         )));
     };
+    // reject typo'd rule names up front: `--only redundnat-sync` used
+    // to silently lint nothing and exit 0
+    if let Some(rule) = args.options.get("only") {
+        let valid = rule_names();
+        if !valid.contains(&rule.as_str()) {
+            return Err(magneton::Error::msg(format!(
+                "unknown rule `{rule}` for --only (valid rules: {})",
+                valid.join(", ")
+            )));
+        }
+    }
     let mut targets = builtin_targets(seed);
     if let Some(filter) = args.options.get("target") {
         targets.retain(|t| t.name.contains(filter.as_str()));
@@ -639,10 +659,64 @@ fn cmd_lint(args: &Args) -> magneton::Result<()> {
         rep.targets.iter().flat_map(|t| &t.findings).map(|f| f.est_wasted_j).sum();
     print!("{}", report::render_lint(&rep));
 
+    // static differential audit: match regions between same-family
+    // targets and rank the cost-model deltas; each pair's findings join
+    // the report as a `diff~a~b` pseudo-target so `--expect`/`--deny`
+    // gate them with the same machinery
+    let diff_cfg = StaticDiffConfig::default();
+    if args.flag("diff") {
+        let diffs = match (args.options.get("target-a"), args.options.get("target-b")) {
+            (Some(a), Some(b)) => {
+                let pick = |name: &String| {
+                    targets.iter().find(|t| t.name == name.as_str()).ok_or_else(|| {
+                        magneton::Error::msg(format!("no lint target named `{name}`"))
+                    })
+                };
+                vec![diff_targets(pick(a)?, pick(b)?, &dev, &diff_cfg)?]
+            }
+            (None, None) => diff_suite(&targets, &dev, threads, &diff_cfg),
+            _ => {
+                return Err(magneton::Error::msg(
+                    "--target-a and --target-b must be passed together \
+                     (or neither, to diff every same-family pair)",
+                ))
+            }
+        };
+        for d in &diffs {
+            println!();
+            print!("{}", report::render_static_diff(d));
+        }
+        if let Some(d) = diffs.iter().find(|d| d.error.is_some()) {
+            return Err(magneton::Error::msg(format!(
+                "static diff {} vs {}: {}",
+                d.target_a,
+                d.target_b,
+                d.error.clone().unwrap_or_default()
+            )));
+        }
+        for d in &diffs {
+            let mut tr = d.to_target_report(&diff_cfg);
+            if let Some(rule) = args.options.get("only") {
+                tr.findings.retain(|f| f.rule == rule.as_str());
+            }
+            rep.targets.push(tr);
+        }
+        rep.total_findings = rep.targets.iter().map(|t| t.findings.len()).sum();
+        rep.total_est_wasted_j =
+            rep.targets.iter().flat_map(|t| &t.findings).map(|f| f.est_wasted_j).sum();
+    }
+
     if let Some(path) = args.options.get("expect") {
         let text = std::fs::read_to_string(path)
             .map_err(|e| magneton::Error::msg(format!("reading manifest {path}: {e}")))?;
         let expected = parse_manifest(&text)?;
+        // `diff~a~b` pseudo-targets only exist under --diff; a plain
+        // lint run must not fail on (or vacuously require) them
+        let expected: Vec<_> = if args.flag("diff") {
+            expected
+        } else {
+            expected.into_iter().filter(|e| !e.target.starts_with("diff~")).collect()
+        };
         let unmet = check_manifest(&rep, &expected);
         if !unmet.is_empty() {
             let missing: Vec<String> = unmet

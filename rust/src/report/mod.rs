@@ -3,7 +3,8 @@
 //! report, and rolling summaries for streaming audits, with CSV
 //! persistence under `results/`.
 
-use crate::analysis::{LintReport, VerifyOutcome};
+use crate::analysis::diff::{MatchTier, RegionVerdict};
+use crate::analysis::{LintReport, StaticDiffReport, VerifyOutcome};
 use crate::coordinator::fleet::{FleetDivergence, FleetReport, StreamFleetReport};
 use crate::coordinator::AuditOutcome;
 use crate::exec::RunArtifacts;
@@ -425,6 +426,81 @@ pub fn render_lint(report: &LintReport) -> String {
     s
 }
 
+/// Ranked static differential report: the `magneton lint --diff`
+/// output. Flagged region pairs lead the table (largest |ΔJ| first, the
+/// order [`StaticDiffReport`] already holds); within-threshold pairs
+/// are summarised, and unmatched regions are attributed per side.
+pub fn render_static_diff(d: &StaticDiffReport) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "=== Magneton static diff: {} vs {} ===\n",
+        d.target_a, d.target_b
+    ));
+    if let Some(err) = &d.error {
+        s.push_str(&format!("INVALID: {err}\n"));
+        return s;
+    }
+    s.push_str(&format!(
+        "graphs: {} vs {} nodes  static cost {} vs {}  (delta {})\n",
+        d.nodes_a,
+        d.nodes_b,
+        fmt_joules(d.total_a_j),
+        fmt_joules(d.total_b_j),
+        fmt_joules_signed(d.total_b_j - d.total_a_j)
+    ));
+    let tier_count = |t: MatchTier| d.regions.iter().filter(|r| r.tier == t).count();
+    s.push_str(&format!(
+        "regions: {} matched ({} hash / {} label / {} bucket), {} + {} unmatched\n",
+        d.regions.len(),
+        tier_count(MatchTier::Hash),
+        tier_count(MatchTier::Label),
+        tier_count(MatchTier::Bucket),
+        d.unmatched_a.len(),
+        d.unmatched_b.len()
+    ));
+    let flagged: Vec<_> = d.regions.iter().filter(|r| r.verdict != RegionVerdict::Close).collect();
+    let close = d.regions.len() - flagged.len();
+    if !flagged.is_empty() {
+        let mut t = Table::new(vec![
+            "rank", "region", "op", "kernel A", "kernel B", "energy A", "energy B", "delta",
+            "tier", "verdict",
+        ]);
+        for (i, r) in flagged.iter().enumerate() {
+            t.row(vec![
+                (i + 1).to_string(),
+                if r.label_a == r.label_b {
+                    r.label_a.clone()
+                } else {
+                    format!("{} <-> {}", r.label_a, r.label_b)
+                },
+                r.op.to_string(),
+                r.kernel_a.clone(),
+                r.kernel_b.clone(),
+                fmt_joules(r.a_j),
+                fmt_joules(r.b_j),
+                fmt_joules_signed(r.delta_j),
+                r.tier.name().to_string(),
+                r.verdict.name().to_string(),
+            ]);
+        }
+        s.push_str(&t.render());
+    }
+    if close > 0 {
+        s.push_str(&format!("{close} matched region(s) within threshold\n"));
+    }
+    for (owner, regions) in [(&d.target_a, &d.unmatched_a), (&d.target_b, &d.unmatched_b)] {
+        for u in regions.iter() {
+            s.push_str(&format!(
+                "unmatched on {owner}: {} ({}, {})\n",
+                u.label,
+                u.op,
+                fmt_joules(u.cost_j)
+            ));
+        }
+    }
+    s
+}
+
 /// One-line verdict of a measure-after-fix verification.
 pub fn render_verify(v: &VerifyOutcome) -> String {
     format!(
@@ -637,6 +713,75 @@ mod tests {
         let proj_pos = s.find("serve.proj").unwrap();
         let act_pos = s.find("serve.act").unwrap();
         assert!(proj_pos < act_pos, "regression must rank first");
+    }
+
+    #[test]
+    fn static_diff_renders_flagged_regions_and_unmatched() {
+        use crate::analysis::diff::{RegionDelta, UnmatchedRegion};
+        let region = |la: &str, lb: &str, aj: f64, bj: f64, tier, verdict| RegionDelta {
+            node_a: 3,
+            node_b: 5,
+            label_a: la.to_string(),
+            label_b: lb.to_string(),
+            op: "conv2d",
+            kernel_a: "implicit_gemm_tf32".into(),
+            kernel_b: "implicit_gemm_fp32".into(),
+            a_j: aj,
+            b_j: bj,
+            delta_j: bj - aj,
+            tier,
+            verdict,
+        };
+        let d = StaticDiffReport {
+            target_a: "mini-stable-diffusion".into(),
+            target_b: "case-c8".into(),
+            nodes_a: 30,
+            nodes_b: 30,
+            total_a_j: 1.0,
+            total_b_j: 1.4,
+            regions: vec![
+                region(
+                    "sd.resnet.conv1",
+                    "sd.resnet.conv1",
+                    0.4,
+                    0.7,
+                    MatchTier::Hash,
+                    RegionVerdict::BWasteful,
+                ),
+                region(
+                    "torch.conv2d",
+                    "tf.conv2d",
+                    0.3,
+                    0.3,
+                    MatchTier::Label,
+                    RegionVerdict::Close,
+                ),
+            ],
+            unmatched_a: vec![],
+            unmatched_b: vec![UnmatchedRegion {
+                node: 9,
+                label: "sd.skip.concat".into(),
+                op: "concat",
+                cost_j: 0.05,
+            }],
+            error: None,
+        };
+        let s = render_static_diff(&d);
+        assert!(s.contains("static diff: mini-stable-diffusion vs case-c8"), "{s}");
+        assert!(s.contains("30 vs 30 nodes"), "{s}");
+        assert!(s.contains("2 matched (1 hash / 1 label / 0 bucket), 0 + 1 unmatched"), "{s}");
+        assert!(s.contains("sd.resnet.conv1"), "{s}");
+        assert!(s.contains("B WASTEFUL"), "{s}");
+        assert!(s.contains("+300.00 mJ"), "{s}");
+        // within-threshold pair stays out of the table
+        assert!(!s.contains("torch.conv2d"), "{s}");
+        assert!(s.contains("1 matched region(s) within threshold"), "{s}");
+        assert!(s.contains("unmatched on case-c8: sd.skip.concat (concat, 50.00 mJ)"), "{s}");
+
+        let broken = StaticDiffReport { error: Some("graph has a cycle".into()), ..d };
+        let s = render_static_diff(&broken);
+        assert!(s.contains("INVALID: graph has a cycle"), "{s}");
+        assert!(!s.contains("regions:"), "{s}");
     }
 
     #[test]

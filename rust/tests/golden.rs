@@ -12,9 +12,11 @@ use magneton::coordinator::fleet::{
     DivergentPair, FleetDivergence, FleetReport, StreamFleetEntry, StreamFleetReport,
 };
 use magneton::detect::Side;
+use magneton::analysis::diff::{MatchTier, RegionDelta, RegionVerdict, UnmatchedRegion};
+use magneton::analysis::StaticDiffReport;
 use magneton::report::{
     render_divergence, render_fleet, render_lint, render_ranking, render_session_diff,
-    render_stream, render_stream_fleet, render_window,
+    render_static_diff, render_stream, render_stream_fleet, render_window,
 };
 use magneton::stream::{StreamFinding, StreamSummary, WindowReport};
 use magneton::telemetry::session::{LabelDelta, MatchVerdict, SessionDiff, WindowAlignment};
@@ -236,6 +238,57 @@ fn golden_render_lint() {
         total_est_wasted_j: 0.1265,
     };
     check_golden("lint.txt", &render_lint(&r));
+}
+
+#[test]
+fn golden_render_static_diff() {
+    let d = StaticDiffReport {
+        target_a: "mini-stable-diffusion".into(),
+        target_b: "case-c8".into(),
+        nodes_a: 30,
+        nodes_b: 30,
+        total_a_j: 1.0,
+        total_b_j: 1.5,
+        regions: vec![
+            RegionDelta {
+                node_a: 6,
+                node_b: 6,
+                label_a: "sd.resnet.conv1".into(),
+                label_b: "sd.resnet.conv1".into(),
+                op: "conv2d",
+                kernel_a: "ampere_tf32_s1688gemm_128x128".into(),
+                kernel_b: "ampere_sgemm_fp32_128x128".into(),
+                a_j: 0.4,
+                b_j: 0.8,
+                delta_j: 0.4,
+                tier: MatchTier::Hash,
+                verdict: RegionVerdict::BWasteful,
+            },
+            RegionDelta {
+                node_a: 12,
+                node_b: 14,
+                label_a: "sd.attn.qkv".into(),
+                label_b: "sd.attn.qkv".into(),
+                op: "matmul",
+                kernel_a: "ampere_tf32_s1688gemm_128x128".into(),
+                kernel_b: "ampere_tf32_s1688gemm_128x128".into(),
+                a_j: 0.25,
+                b_j: 0.25,
+                delta_j: 0.0,
+                tier: MatchTier::Label,
+                verdict: RegionVerdict::Close,
+            },
+        ],
+        unmatched_a: vec![],
+        unmatched_b: vec![UnmatchedRegion {
+            node: 20,
+            label: "sd.skip.concat".into(),
+            op: "concat",
+            cost_j: 0.05,
+        }],
+        error: None,
+    };
+    check_golden("static_diff.txt", &render_static_diff(&d));
 }
 
 #[test]

@@ -4,7 +4,8 @@
 //! energy delta through the differential pipeline.
 
 use magneton::analysis::{
-    builtin_targets, check_manifest, lint_suite, parse_manifest, verify_finding, LintReport,
+    builtin_targets, check_manifest, diff_suite, diff_targets, lint_suite, parse_manifest,
+    verify_finding, LintReport, StaticDiffConfig,
 };
 use magneton::energy::DeviceSpec;
 
@@ -14,14 +15,26 @@ fn suite(threads: usize) -> LintReport {
 
 /// The committed manifest must be fully rediscovered: every declared
 /// (target, rule, label) triple appears among the static findings —
-/// including the entries that re-find dynamic cases c2/c4/c5/c7/c9
-/// without executing anything.
+/// including the entries that re-find dynamic cases c2/c4/c5/c7/c8/c9
+/// without executing anything, and the `diff~a~b` pseudo-target entries
+/// the static differential audit produces under `lint --diff`.
 #[test]
 fn manifest_findings_are_rediscovered() {
     let text = include_str!("lint_manifest.txt");
     let expected = parse_manifest(text).unwrap();
     assert!(expected.len() >= 6, "manifest lost entries");
-    let report = suite(2);
+    assert!(
+        expected.iter().any(|e| e.target.starts_with("diff~")),
+        "manifest lost its static-diff entries"
+    );
+    let mut report = suite(2);
+    // the CLI's --diff mode: every same-family pair diff joins the
+    // report as a `diff~a~b` pseudo-target
+    let cfg = StaticDiffConfig::default();
+    for d in diff_suite(&builtin_targets(7), &DeviceSpec::h200_sim(), 2, &cfg) {
+        assert!(d.error.is_none(), "{} vs {}: {:?}", d.target_a, d.target_b, d.error);
+        report.targets.push(d.to_target_report(&cfg));
+    }
     let unmet = check_manifest(&report, &expected);
     assert!(
         unmet.is_empty(),
@@ -126,4 +139,126 @@ fn verify_confirms_c2_redundant_copy() {
     assert_eq!(copies.len(), 2, "both kv copies should be flagged");
     let v = verify_finding(&targets[idx].run, copies[0], &device).unwrap();
     assert!(v.same_sign && v.measured_delta_j > 0.0);
+}
+
+/// The static differential audit must also be bit-identical across
+/// worker counts: same pair order, same matched regions, same delta bit
+/// patterns, same unmatched attribution.
+#[test]
+fn static_diff_is_bit_deterministic_across_worker_counts() {
+    let device = DeviceSpec::h200_sim();
+    let targets = builtin_targets(7);
+    let cfg = StaticDiffConfig::default();
+    type Fp = Vec<(String, String, Vec<(usize, usize, u64)>, usize, usize)>;
+    let fp = |threads: usize| -> Fp {
+        diff_suite(&targets, &device, threads, &cfg)
+            .iter()
+            .map(|d| {
+                (
+                    d.target_a.clone(),
+                    d.target_b.clone(),
+                    d.regions
+                        .iter()
+                        .map(|r| (r.node_a, r.node_b, r.delta_j.to_bits()))
+                        .collect(),
+                    d.unmatched_a.len(),
+                    d.unmatched_b.len(),
+                )
+            })
+            .collect()
+    };
+    let base = fp(1);
+    assert!(!base.is_empty(), "no same-family pairs to diff");
+    for threads in [2, 4, 8] {
+        assert_eq!(base, fp(threads), "{threads} workers diverged");
+    }
+}
+
+/// Symbolic dispatch enumeration is deterministic and covers both sides
+/// of the tf32 branch — the substrate of the `dtype-downcast` rule.
+#[test]
+fn dispatch_enumeration_is_deterministic_and_total() {
+    let fp = || -> Vec<(Vec<(String, String)>, usize, String)> {
+        magneton::systems::torch_matmul_routine()
+            .enumerate_outcomes()
+            .into_iter()
+            .map(|o| (o.assignment.into_iter().collect(), o.choice_idx, o.choice.kernel))
+            .collect()
+    };
+    let base = fp();
+    assert!(base.len() >= 2, "expected both branch assignments: {base:?}");
+    assert_eq!(base, fp());
+    let kernels: Vec<&str> = base.iter().map(|(_, _, k)| k.as_str()).collect();
+    assert!(kernels.iter().any(|k| k.contains("tf32")), "{kernels:?}");
+    assert!(kernels.iter().any(|k| !k.contains("tf32")), "{kernels:?}");
+}
+
+/// Negative control: diffing a target against itself matches every
+/// billed region at the hash tier with a bitwise-zero delta and yields
+/// no findings.
+#[test]
+fn identical_targets_produce_an_empty_static_diff() {
+    let device = DeviceSpec::h200_sim();
+    let cfg = StaticDiffConfig::default();
+    let targets = builtin_targets(7);
+    let sd = targets.iter().find(|t| t.name == "mini-stable-diffusion").unwrap();
+    let rep = diff_targets(sd, sd, &device, &cfg).unwrap();
+    assert!(!rep.regions.is_empty());
+    assert!(rep.unmatched_a.is_empty() && rep.unmatched_b.is_empty());
+    assert!(rep.regions.iter().all(|r| r.delta_j == 0.0), "self-diff must be flat");
+    assert_eq!(rep.total_a_j.to_bits(), rep.total_b_j.to_bits());
+    let findings = rep.findings(&cfg);
+    assert!(findings.is_empty(), "self-diff produced findings: {findings:?}");
+}
+
+/// The c8 known case is rediscovered fully statically: the symbolic
+/// dispatch pass names the responsible config flag and its cheaper
+/// assignment, and `--verify` confirms the SetAttr rewrite with a
+/// positive measured delta.
+#[test]
+fn verify_confirms_c8_dtype_downcast_names_the_flag() {
+    let device = DeviceSpec::h200_sim();
+    let targets = builtin_targets(7);
+    let report = lint_suite(&targets, &device, 1);
+    let idx = report.targets.iter().position(|t| t.name == "case-c8").unwrap();
+    let f = report.targets[idx]
+        .findings
+        .iter()
+        .find(|f| f.rule == "dtype-downcast")
+        .expect("c8 dtype-downcast finding");
+    assert!(
+        f.suggestion.contains("torch.backends.cuda.matmul.allow_tf32"),
+        "must name the responsible flag: {}",
+        f.suggestion
+    );
+    assert!(
+        f.suggestion.contains("allow_tf32=true"),
+        "must name the cheaper assignment: {}",
+        f.suggestion
+    );
+    assert!(!f.steps.is_empty(), "dtype-downcast must carry SetAttr rewrites");
+    let v = verify_finding(&targets[idx].run, f, &device).unwrap();
+    assert!(v.same_sign, "static {} vs measured {}", v.est_wasted_j, v.measured_delta_j);
+    assert!(v.measured_delta_j > 0.0, "fix must save energy, got {}", v.measured_delta_j);
+}
+
+/// The fixture's duplicated branch carries a full mechanical rewrite
+/// (bypass + exclusive-cone removal) that sign-confirms under the
+/// measured A/B.
+#[test]
+fn verify_confirms_lint_fixture_cse_bypass() {
+    let device = DeviceSpec::h200_sim();
+    let targets = builtin_targets(7);
+    let report = lint_suite(&targets, &device, 1);
+    let idx = report.targets.iter().position(|t| t.name == "lint-fixture").unwrap();
+    let f = report.targets[idx]
+        .findings
+        .iter()
+        .filter(|f| f.rule == "cse-duplicate")
+        .max_by(|a, b| a.est_wasted_j.total_cmp(&b.est_wasted_j))
+        .expect("cse-duplicate finding");
+    let v = verify_finding(&targets[idx].run, f, &device).unwrap();
+    assert!(v.same_sign, "static {} vs measured {}", v.est_wasted_j, v.measured_delta_j);
+    assert!(v.measured_delta_j > 0.0, "bypass must save energy, got {}", v.measured_delta_j);
+    assert!(v.energy_after_j < v.energy_before_j);
 }
