@@ -4,13 +4,65 @@
 //! emits the shared `BENCH_lint.json` trajectory record so lint cost is
 //! tracked commit-over-commit alongside the findings it produces.
 
+use std::collections::BTreeMap;
 use std::time::Duration;
 
-use magneton::analysis::{builtin_targets, lint_suite};
-use magneton::energy::DeviceSpec;
+use magneton::analysis::interact::search_node;
+use magneton::analysis::{builtin_targets, interact_suite, lint_suite, InteractConfig, LintContext};
+use magneton::dispatch::{Block, Env, KernelChoice, Routine, Term, VarSource};
+use magneton::energy::{ComputeUnit, DeviceSpec};
+use magneton::exec::{Dispatcher, Program};
+use magneton::graph::{Graph, OpKind};
+use magneton::tensor::Tensor;
 use magneton::util::bench::{banner, bench, persist, persist_bench_json, BenchResult};
 use magneton::util::json::Json;
 use magneton::util::pool::default_threads;
+
+/// Binary-tree routine over `k` config flags, every leaf its own
+/// kernel choice — the worst case for the joint search, sized so the
+/// branch-and-bound pruning has room to show (2^k joint outcomes).
+fn tree_target(k: usize) -> (Program, Dispatcher) {
+    let mut blocks = Vec::new();
+    let mut choices = Vec::new();
+    let mut provenance = BTreeMap::new();
+    for i in 0..k {
+        provenance.insert(format!("f{i:02}"), VarSource::ConfigFlag(format!("cfg.f{i:02}")));
+    }
+    for j in 0..(1usize << k) - 1 {
+        let d = (usize::BITS - 1 - (j + 1).leading_zeros()) as usize;
+        blocks.push(Block {
+            func: "joint_dispatch".into(),
+            term: Term::CondBranch {
+                var: format!("f{d:02}"),
+                eq: "true".into(),
+                then_bb: 2 * j + 1,
+                else_bb: 2 * j + 2,
+            },
+        });
+    }
+    for leaf in 0..(1usize << k) {
+        let idx = choices.len();
+        let frac = ((leaf as f64) * 0.618_033_988_749_895).fract();
+        choices.push(
+            KernelChoice::new(&format!("leaf_{leaf}"), ComputeUnit::TensorCore)
+                .quality(0.4 + 0.6 * frac, 1.0, 1.0),
+        );
+        blocks.push(Block { func: "joint_dispatch".into(), term: Term::Launch { idx } });
+    }
+    let routine =
+        Routine { api: "joint.tree".into(), frames: vec![], blocks, choices, provenance };
+    let mut g = Graph::new("tree");
+    let x = g.add(OpKind::Input, &[], "x");
+    let w = g.add(OpKind::Weight, &[], "w");
+    let m = g.add_attr1(OpKind::MatMul, &[x, w], "tree.proj", "dispatch", "joint.tree");
+    g.add(OpKind::Output, &[m], "out");
+    let mut p = Program::new(g);
+    p.feed(0, Tensor::zeros(&[16, 32]));
+    p.feed(1, Tensor::zeros(&[32, 16]));
+    let mut d = Dispatcher::new();
+    d.register("joint.tree", routine);
+    (p, d)
+}
 
 fn main() {
     banner("Lint perf", "static energy lint over the built-in system programs");
@@ -33,6 +85,43 @@ fn main() {
         }));
     }
 
+    // interaction-search scaling: the whole suite (shallow routines,
+    // flag slicing does the heavy lifting) and the worst-case deep
+    // binary-tree routine where branch-and-bound pruning must carry
+    let icfg = InteractConfig::default();
+    let ireports = interact_suite(&targets, &device, 1, &icfg);
+    assert!(ireports.iter().all(|r| r.error.is_none()), "builtin target failed interact");
+    let diagnoses: usize = ireports.iter().map(|r| r.diagnoses.len()).sum();
+    assert!(diagnoses >= 1, "joint target should yield an interaction diagnosis");
+    for (label, n) in [("interact suite (1 worker)", 1usize), ("interact suite (pool)", threads)] {
+        results.push(bench(label, budget, || {
+            std::hint::black_box(interact_suite(&targets, &device, n, &icfg));
+        }));
+    }
+
+    let mut tree_counts: Vec<(usize, usize, usize, usize)> = Vec::new();
+    for k in [8usize, 10, 12] {
+        let (p, d) = tree_target(k);
+        let env = Env::new();
+        let cx = LintContext::new(&p, &d, &env, &device).unwrap();
+        let cfg = InteractConfig { max_joint_flags: k };
+        let s = search_node(&cx, 2, &cfg).expect("tree routine is searchable");
+        // the point of the pruning: strictly fewer joint outcomes priced
+        // than the exhaustive sweep would have priced
+        assert_eq!(s.stats.exhaustive, 1 << k);
+        assert!(
+            s.stats.evaluated < s.stats.exhaustive && s.stats.pruned > 0,
+            "k={k}: evaluated {} !< exhaustive {} (pruned {})",
+            s.stats.evaluated,
+            s.stats.exhaustive,
+            s.stats.pruned
+        );
+        tree_counts.push((k, s.stats.evaluated, s.stats.exhaustive, s.stats.pruned));
+        results.push(bench(&format!("joint search (tree k={k})"), budget, || {
+            std::hint::black_box(search_node(&cx, 2, &cfg));
+        }));
+    }
+
     let mut text = String::new();
     for r in &results {
         let line = r.report();
@@ -46,7 +135,17 @@ fn main() {
         report.total_findings,
         report.total_est_wasted_j
     );
+    for (k, evaluated, exhaustive, pruned) in &tree_counts {
+        let line = format!(
+            "joint search k={k}: evaluated {evaluated} of {exhaustive} joint outcomes \
+             ({pruned} subtrees pruned)"
+        );
+        println!("{line}");
+        text.push_str(&line);
+        text.push('\n');
+    }
 
+    let deepest = *tree_counts.last().unwrap();
     persist("lint_perf", &text, None);
     persist_bench_json(
         "lint",
@@ -56,6 +155,11 @@ fn main() {
             ("findings", Json::Num(report.total_findings as f64)),
             ("est_wasted_j", Json::Num(report.total_est_wasted_j)),
             ("workers", Json::Num(threads as f64)),
+            ("interact_diagnoses", Json::Num(diagnoses as f64)),
+            ("interact_tree_flags", Json::Num(deepest.0 as f64)),
+            ("interact_tree_evaluated", Json::Num(deepest.1 as f64)),
+            ("interact_tree_exhaustive", Json::Num(deepest.2 as f64)),
+            ("interact_tree_pruned", Json::Num(deepest.3 as f64)),
         ],
     );
 }

@@ -19,8 +19,13 @@
 //! 3. **Bucket** — [`matching::CandidateIndex`](crate::matching)-style
 //!    coarse buckets on (op, element count): last-resort pairing for
 //!    renamed regions of identical geometry.
+//! 4. **Fuzzy** — bounded edit-distance over system-stripped call-site
+//!    labels, same op only, unique mutual best: recovers renamed sites
+//!    (`attn.q_proj` ↔ `attn.query_proj`) whose geometry also drifted
+//!    past the bucket tier. Ambiguous candidates (ties) stay unmatched
+//!    rather than guessing.
 //!
-//! Whatever survives all three tiers is reported as an unmatched
+//! Whatever survives all four tiers is reported as an unmatched
 //! region: energy one implementation spends that the other simply does
 //! not have — the concat/split skip handling only one UNet build
 //! performs, the layout staging copies only one conv stack needs.
@@ -107,6 +112,7 @@ pub enum MatchTier {
     Hash,
     Label,
     Bucket,
+    Fuzzy,
 }
 
 impl MatchTier {
@@ -115,6 +121,7 @@ impl MatchTier {
             MatchTier::Hash => "hash",
             MatchTier::Label => "label",
             MatchTier::Bucket => "bucket",
+            MatchTier::Fuzzy => "fuzzy",
         }
     }
 }
@@ -293,6 +300,7 @@ impl StaticDiffReport {
             static_j: self.total_a_j + self.total_b_j,
             findings: self.findings(cfg),
             error: self.error.clone(),
+            interactions: vec![],
         }
     }
 }
@@ -324,6 +332,97 @@ fn pair_by_key<K: Ord>(
     for (_, (va, vb)) in buckets {
         for (&x, &y) in va.iter().zip(vb.iter()) {
             matched.push((x, y, tier));
+            used_a.insert(x);
+            used_b.insert(y);
+        }
+    }
+    rem_a.retain(|id| !used_a.contains(id));
+    rem_b.retain(|id| !used_b.contains(id));
+}
+
+/// Levenshtein distance (chars), the classic two-row DP.
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    for (i, &ca) in a.iter().enumerate() {
+        let mut cur = Vec::with_capacity(b.len() + 1);
+        cur.push(i + 1);
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur.push(sub.min(prev[j + 1] + 1).min(cur[j] + 1));
+        }
+        prev = cur;
+    }
+    prev[b.len()]
+}
+
+/// A fuzzy candidate is admissible when the labels differ by at most a
+/// third of the longer suffix — tight enough that `q_proj` ↔
+/// `query_proj` recovers while structurally unrelated short labels
+/// (whose bound rounds down to ≤ 1 edit) cannot drift together.
+fn fuzzy_bound(a: &str, b: &str) -> usize {
+    a.chars().count().max(b.chars().count()) / 3
+}
+
+/// For each node in `from`, its unique nearest admissible same-op
+/// candidate in `to` by label-suffix edit distance. Nodes whose best
+/// distance is tied between two candidates get no entry: a fuzzy match
+/// must be unambiguous or it is no match at all.
+fn fuzzy_best(
+    from: &[NodeId],
+    to: &[NodeId],
+    cx_f: &LintContext,
+    cx_t: &LintContext,
+) -> BTreeMap<NodeId, NodeId> {
+    let mut out = BTreeMap::new();
+    for &x in from {
+        let sx = label_suffix(&cx_f.node(x).label);
+        let mut best: Option<(usize, NodeId)> = None;
+        let mut tied = false;
+        for &y in to {
+            // distinct ops never fuzzy-match, whatever their labels
+            if cx_f.node(x).op.name() != cx_t.node(y).op.name() {
+                continue;
+            }
+            let sy = label_suffix(&cx_t.node(y).label);
+            let d = edit_distance(sx, sy);
+            if d > fuzzy_bound(sx, sy) {
+                continue;
+            }
+            match best {
+                Some((bd, _)) if d > bd => {}
+                Some((bd, _)) if d == bd => tied = true,
+                _ => {
+                    best = Some((d, y));
+                    tied = false;
+                }
+            }
+        }
+        if let (Some((_, y)), false) = (best, tied) {
+            out.insert(x, y);
+        }
+    }
+    out
+}
+
+/// Fourth tier: pair remaining regions whose label suffixes are each
+/// other's unique nearest admissible edit-distance neighbour (same op
+/// required on both ends; ties stay unmatched).
+fn pair_fuzzy(
+    rem_a: &mut Vec<NodeId>,
+    rem_b: &mut Vec<NodeId>,
+    matched: &mut Vec<(NodeId, NodeId, MatchTier)>,
+    cxa: &LintContext,
+    cxb: &LintContext,
+) {
+    let fwd = fuzzy_best(rem_a, rem_b, cxa, cxb);
+    let back = fuzzy_best(rem_b, rem_a, cxb, cxa);
+    let mut used_a = BTreeSet::new();
+    let mut used_b = BTreeSet::new();
+    for (&x, &y) in &fwd {
+        if back.get(&y) == Some(&x) {
+            matched.push((x, y, MatchTier::Fuzzy));
             used_a.insert(x);
             used_b.insert(y);
         }
@@ -370,6 +469,7 @@ pub fn diff_contexts(
         |id| (cxa.node(id).op.name(), numel(cxa, id)),
         |id| (cxb.node(id).op.name(), numel(cxb, id)),
     );
+    pair_fuzzy(&mut rem_a, &mut rem_b, &mut matched, cxa, cxb);
     matched.sort_unstable_by_key(|&(a, b, _)| (a, b));
     let mut regions: Vec<RegionDelta> = matched
         .into_iter()
@@ -597,5 +697,80 @@ mod tests {
     #[test]
     fn diff_name_is_stable() {
         assert_eq!(diff_name("x", "y"), "diff~x~y");
+    }
+
+    fn attn(sys: &str, proj_label: &str, width: usize, act: OpKind) -> Program {
+        let mut g = Graph::new(sys);
+        let x = g.add(OpKind::Input, &[], "x");
+        let w = g.add(OpKind::Weight, &[], "w");
+        let m = g.add(OpKind::MatMul, &[x, w], &format!("{sys}.{proj_label}"));
+        let a = g.add(act, &[m], &format!("{sys}.attn.act"));
+        g.add(OpKind::Output, &[a], "out");
+        let mut p = Program::new(g);
+        p.feed(0, Tensor::zeros(&[16, 32]));
+        p.feed(1, Tensor::zeros(&[32, width]));
+        p
+    }
+
+    #[test]
+    fn fuzzy_tier_recovers_renamed_region_but_never_across_ops() {
+        let (d, e, dev) = ctx_parts();
+        // projection widened 128 → 96, so hash (leaf shapes), label
+        // (suffix), and bucket (numel) all fail; only the bounded edit
+        // distance can still pair the renamed site
+        let p = attn("a", "attn.q_proj", 128, OpKind::Gelu);
+        let q = attn("b", "attn.query_proj", 96, OpKind::Relu);
+        let cxa = LintContext::new(&p, &d, &e, &dev).unwrap();
+        let cxb = LintContext::new(&q, &d, &e, &dev).unwrap();
+        let rep = diff_contexts("a", &cxa, "b", &cxb, &StaticDiffConfig::default());
+        assert_eq!(rep.regions.len(), 1, "regions: {:?}", rep.regions);
+        assert_eq!(rep.regions[0].tier, MatchTier::Fuzzy);
+        assert_eq!(rep.regions[0].label_a, "a.attn.q_proj");
+        assert_eq!(rep.regions[0].label_b, "b.attn.query_proj");
+        // negative control: the activations share the exact suffix
+        // `attn.act` (edit distance 0) but differ in op — distinct ops
+        // must never fuzzy-match, so both stay unmatched
+        assert_eq!(rep.unmatched_a.len(), 1);
+        assert_eq!(rep.unmatched_b.len(), 1);
+        assert_eq!(rep.unmatched_a[0].label, "a.attn.act");
+        assert_eq!(rep.unmatched_b[0].label, "b.attn.act");
+    }
+
+    #[test]
+    fn fuzzy_ties_stay_unmatched() {
+        let (d, e, dev) = ctx_parts();
+        let p = attn("a", "attn.q_proj", 128, OpKind::Gelu);
+        // two equidistant candidates for `q_proj`: the tie must leave
+        // all three projections unmatched rather than guess
+        let mut g = Graph::new("b");
+        let x = g.add(OpKind::Input, &[], "x");
+        let w1 = g.add(OpKind::Weight, &[], "w1");
+        let w2 = g.add(OpKind::Weight, &[], "w2");
+        let m1 = g.add(OpKind::MatMul, &[x, w1], "b.attn.qk_proj");
+        let m2 = g.add(OpKind::MatMul, &[x, w2], "b.attn.qv_proj");
+        let s = g.add(OpKind::Add, &[m1, m2], "b.attn.act");
+        g.add(OpKind::Output, &[s], "out");
+        let mut q = Program::new(g);
+        q.feed(0, Tensor::zeros(&[16, 32]));
+        q.feed(1, Tensor::zeros(&[32, 96]));
+        q.feed(2, Tensor::zeros(&[32, 96]));
+        let cxa = LintContext::new(&p, &d, &e, &dev).unwrap();
+        let cxb = LintContext::new(&q, &d, &e, &dev).unwrap();
+        let rep = diff_contexts("a", &cxa, "b", &cxb, &StaticDiffConfig::default());
+        assert!(
+            rep.regions.iter().all(|r| r.tier != MatchTier::Fuzzy),
+            "tied fuzzy candidates must stay unmatched: {:?}",
+            rep.regions
+        );
+        assert!(rep.unmatched_a.iter().any(|u| u.label == "a.attn.q_proj"));
+    }
+
+    #[test]
+    fn edit_distance_is_the_levenshtein_metric() {
+        assert_eq!(edit_distance("", ""), 0);
+        assert_eq!(edit_distance("q_proj", "q_proj"), 0);
+        assert_eq!(edit_distance("q_proj", "query_proj"), 4);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
+        assert_eq!(edit_distance("abc", ""), 3);
     }
 }

@@ -1,0 +1,898 @@
+//! Joint config-space interaction search: minimal flag-set diagnosis
+//! with dominance pruning.
+//!
+//! The symbolic dispatch pass (`dtype-downcast`) enumerates each config
+//! flag independently, so it can never expose a flag *combination*
+//! whose joint assignment dominates every single flip — exactly the
+//! interaction class where `allow_tf32` only pays off together with a
+//! layout flag. This module lifts [`Routine::enumerate_outcomes`] to
+//! joint assignments over all config-sourced branch variables, kept
+//! tractable by:
+//!
+//! 1. **Flag slicing** — only flags that reach a branch guarding a
+//!    cost-divergent region enter the search. The reachability walk
+//!    goes from each `source_of` config flag to the branches testing
+//!    it and on to the launch sites they guard; a flag whose guarded
+//!    launches are cost-uniform cannot change the bill and is pinned
+//!    to its live value.
+//! 2. **Branch-and-bound dominance pruning** — partial assignments are
+//!    bounded optimistically by the cheapest kernel still reachable
+//!    under [`Routine::reachable_choices`] (the monotone `KernelCost`
+//!    lattice: freeing a flag can only grow the reachable set, so the
+//!    bound is a true lower bound). A partial assignment whose bound
+//!    already meets the incumbent is cut; visit/prune counters are
+//!    exposed for benching.
+//!
+//! From the cheapest feasible joint outcome a **minimal diagnosis** is
+//! extracted ddmin-style: flags whose removal does not lose the savings
+//! are dropped until the set is 1-minimal (removing *any* remaining
+//! flag loses the savings). Each diagnosis is emitted as an
+//! `interaction` lint finding carrying one [`RewriteStep::SetAttr`] per
+//! (node, flag), so `lint --verify` A/B-measures the joint flip through
+//! the real executor end-to-end.
+//!
+//! The search is driven by the static cost model (the same
+//! [`LintContext::op_cost`] path the other rules use), *not* by
+//! measurement — `--verify` exists precisely to confirm a diagnosis
+//! against a measured delta.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::dispatch::{Env, Routine, Term, VarSource};
+use crate::energy::{DeviceSpec, KernelCost, KernelDesc};
+use crate::exec::counts;
+use crate::graph::{NodeId, OpKind};
+use crate::tensor::Tensor;
+use crate::util::pool::par_map;
+
+use super::suite::{LintTarget, TargetReport};
+use super::{sort_findings, LintContext, LintFinding, RewriteStep, Severity};
+
+/// Budget knobs for the joint search.
+#[derive(Clone, Copy, Debug)]
+pub struct InteractConfig {
+    /// Maximum number of sliced flags that enter one routine's joint
+    /// search (the space is exponential in this). Surplus flags are
+    /// pinned to their live values, in deterministic name order.
+    pub max_joint_flags: usize,
+}
+
+impl Default for InteractConfig {
+    fn default() -> InteractConfig {
+        InteractConfig { max_joint_flags: 8 }
+    }
+}
+
+/// Search-effort counters, exposed so the bench can assert that
+/// dominance pruning visits measurably fewer outcomes than exhaustive
+/// enumeration.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SearchStats {
+    /// Search-tree nodes expanded (partial assignments + leaves).
+    pub visited: usize,
+    /// Subtrees cut because their optimistic bound met the incumbent.
+    pub pruned: usize,
+    /// Full joint assignments actually evaluated.
+    pub evaluated: usize,
+    /// Leaves an exhaustive enumeration would evaluate.
+    pub exhaustive: usize,
+}
+
+impl SearchStats {
+    pub fn add(&mut self, other: &SearchStats) {
+        self.visited += other.visited;
+        self.pruned += other.pruned;
+        self.evaluated += other.evaluated;
+        self.exhaustive += other.exhaustive;
+    }
+}
+
+/// One flag of a joint diagnosis, with the saving (or cost) the flag
+/// flipped *alone* would produce — the marginal the renderer contrasts
+/// against the joint saving.
+#[derive(Clone, Debug)]
+pub struct FlagMarginal {
+    pub flag: String,
+    pub value: String,
+    /// Provenance description (`configuration flag \`...\``).
+    pub source: String,
+    /// Energy the lone flip saves; negative means it costs energy.
+    pub saved_j: f64,
+    /// Whether the lone flip stays within the current time budget.
+    pub time_ok: bool,
+}
+
+/// A 1-minimal joint flag set that strictly saves energy at no time
+/// cost, with the per-flag marginal breakdown.
+#[derive(Clone, Debug)]
+pub struct InteractionDiagnosis {
+    /// Nodes the joint flip fixes, ascending.
+    pub nodes: Vec<NodeId>,
+    /// Representative site label (the biggest saver).
+    pub label: String,
+    /// The 1-minimal changed flags, sorted by name: flag → new value.
+    pub assignment: Vec<(String, String)>,
+    /// Joint saving summed over `nodes` (J).
+    pub joint_saved_j: f64,
+    pub kernel_now: String,
+    pub kernel_then: String,
+    /// One marginal per flag in `assignment`, summed over `nodes`.
+    pub marginals: Vec<FlagMarginal>,
+}
+
+impl InteractionDiagnosis {
+    /// The flag set as `flag=value, ...` — shared by the finding text
+    /// and the report renderer.
+    pub fn flag_set(&self) -> String {
+        let parts: Vec<String> =
+            self.assignment.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        parts.join(", ")
+    }
+}
+
+/// Joint-search outcome for one node: the effort counters, plus the
+/// accepted diagnosis when one exists.
+#[derive(Clone, Debug)]
+pub struct NodeSearch {
+    pub node: NodeId,
+    pub stats: SearchStats,
+    pub hit: Option<NodeHit>,
+}
+
+/// One node's accepted joint flip (pre-grouping).
+#[derive(Clone, Debug)]
+pub struct NodeHit {
+    /// 1-minimal changed flags, sorted by name.
+    pub assignment: Vec<(String, String)>,
+    pub saved_j: f64,
+    pub kernel_now: String,
+    pub kernel_then: String,
+    /// Per-flag lone-flip marginals for this node.
+    pub marginals: Vec<FlagMarginal>,
+}
+
+// ---------------------------------------------------------------------
+// Per-choice cost table
+// ---------------------------------------------------------------------
+
+/// Cost of running `node`'s workload on one concrete [`KernelChoice`]
+/// (mirrors [`LintContext::op_cost`] with the dispatch walk factored
+/// out, so the branch-and-bound can price thousands of assignments
+/// from a per-choice table instead of re-dispatching).
+///
+/// [`KernelChoice`]: crate::dispatch::KernelChoice
+fn choice_costs(
+    cx: &LintContext,
+    routine: &Routine,
+    flops: f64,
+    bytes: f64,
+    n_launches: usize,
+) -> Vec<KernelCost> {
+    routine
+        .choices
+        .iter()
+        .map(|choice| {
+            let desc = KernelDesc {
+                name: choice.kernel.clone(),
+                unit: choice.unit,
+                flops,
+                bytes: bytes * choice.bytes_mult,
+                efficiency: choice.efficiency,
+                time_mult: choice.time_mult,
+                fixed_time_us: 0.0,
+                fixed_power_w: 0.0,
+            };
+            let mut cost = desc.cost(cx.device);
+            if n_launches > 1 {
+                let extra = (n_launches - 1) as f64 * cx.device.launch_overhead_us;
+                cost.time_us += extra;
+                cost.energy_j += extra * 1e-6 * cx.device.base_w;
+                cost.avg_power_w = (cost.energy_j / (cost.time_us * 1e-6)).min(cx.device.max_w);
+                cost.energy_j = cost.energy_j.min(cost.avg_power_w * cost.time_us * 1e-6);
+            }
+            cost
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Flag slicing
+// ---------------------------------------------------------------------
+
+/// Launch indices reachable from `start` with every branch free.
+fn reachable_from(routine: &Routine, start: usize) -> BTreeSet<usize> {
+    let mut reachable = BTreeSet::new();
+    let mut seen = vec![false; routine.blocks.len()];
+    let mut work = vec![start];
+    while let Some(bb) = work.pop() {
+        if seen[bb] {
+            continue;
+        }
+        seen[bb] = true;
+        match &routine.blocks[bb].term {
+            Term::CondBranch { then_bb, else_bb, .. } => {
+                work.push(*then_bb);
+                work.push(*else_bb);
+            }
+            Term::Switch { arms, default_bb, .. } => {
+                work.push(*default_bb);
+                for &(_, b) in arms {
+                    work.push(b);
+                }
+            }
+            Term::Jump { bb: nxt } => work.push(*nxt),
+            Term::Launch { idx } => {
+                reachable.insert(*idx);
+            }
+        }
+    }
+    reachable
+}
+
+fn cost_bits(c: &KernelCost) -> (u64, u64) {
+    (c.energy_j.to_bits(), c.time_us.to_bits())
+}
+
+/// Does any branch testing `var` guard a cost-divergent region? A flag
+/// only influences execution through the branches that test it; if
+/// every launch reachable from such a branch prices identically, the
+/// flag cannot change the bill and is sliced out of the search.
+fn guards_divergence(routine: &Routine, var: &str, costs: &[KernelCost]) -> bool {
+    for block in &routine.blocks {
+        let succs: Vec<usize> = match &block.term {
+            Term::CondBranch { var: v, then_bb, else_bb, .. } if v == var => {
+                vec![*then_bb, *else_bb]
+            }
+            Term::Switch { var: v, arms, default_bb } if v == var => {
+                let mut s: Vec<usize> = arms.iter().map(|&(_, b)| b).collect();
+                s.push(*default_bb);
+                s
+            }
+            _ => continue,
+        };
+        let mut union = BTreeSet::new();
+        for s in succs {
+            union.extend(reachable_from(routine, s));
+        }
+        let mut it = union.iter();
+        if let Some(&first) = it.next() {
+            if it.any(|&i| cost_bits(&costs[i]) != cost_bits(&costs[first])) {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// The sliced search space: config-sourced flags guarding cost
+/// divergence, each with its finite tested-literal-or-unset value
+/// space, in deterministic name order.
+fn sliced_flags(routine: &Routine, costs: &[KernelCost]) -> Vec<(String, Vec<String>)> {
+    routine
+        .branch_space()
+        .into_iter()
+        .filter(|(var, _)| {
+            matches!(routine.source_of(var), Some(VarSource::ConfigFlag(_)))
+                && guards_divergence(routine, var, costs)
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Branch-and-bound
+// ---------------------------------------------------------------------
+
+struct Bnb<'r> {
+    routine: &'r Routine,
+    costs: &'r [KernelCost],
+    space: &'r [(String, Vec<String>)],
+    /// Feasibility budget: the joint flip must not be slower than the
+    /// kernel the node runs today.
+    time_budget_us: f64,
+    best_e: f64,
+    best: Option<BTreeMap<String, String>>,
+    stats: SearchStats,
+}
+
+impl Bnb<'_> {
+    /// DFS over the sliced flags in order; `assigned` holds the pinned
+    /// non-sliced variables plus every flag fixed so far.
+    fn dfs(&mut self, depth: usize, assigned: &mut BTreeMap<String, String>) {
+        self.stats.visited += 1;
+        if depth == self.space.len() {
+            self.stats.evaluated += 1;
+            let idx = self.routine.launch_for(&Env { values: assigned.clone() });
+            let c = &self.costs[idx];
+            if c.time_us <= self.time_budget_us && c.energy_j < self.best_e {
+                self.best_e = c.energy_j;
+                let mut a = BTreeMap::new();
+                for (var, _) in self.space {
+                    a.insert(var.clone(), assigned[var].clone());
+                }
+                self.best = Some(a);
+            }
+            return;
+        }
+        // dominance bound: the cheapest kernel any completion of this
+        // partial assignment could still launch
+        let reach = self.routine.reachable_choices(assigned);
+        let bound =
+            reach.iter().map(|&i| self.costs[i].energy_j).fold(f64::INFINITY, f64::min);
+        if bound >= self.best_e {
+            self.stats.pruned += 1;
+            return;
+        }
+        let (var, vals) = &self.space[depth];
+        for v in vals {
+            assigned.insert(var.clone(), v.clone());
+            self.dfs(depth + 1, assigned);
+        }
+        assigned.remove(var);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-node search + ddmin minimisation
+// ---------------------------------------------------------------------
+
+/// Joint config-space search over one node's dispatch routine. Returns
+/// `None` when the node has no searchable config space (virtual,
+/// costless, shape-unknown, or a routine without sliced flags);
+/// otherwise the effort counters plus the accepted 1-minimal diagnosis
+/// when the search found a strictly cheaper, no-slower joint flip.
+pub fn search_node(cx: &LintContext, id: NodeId, cfg: &InteractConfig) -> Option<NodeSearch> {
+    let node = cx.node(id);
+    if node.op.is_virtual() || node.op == OpKind::Barrier || node.op == OpKind::Idle {
+        return None;
+    }
+    let cur = &cx.cost[id];
+    let (cur_e, cur_t) = (cur.energy_j, cur.time_us);
+    if cur_e <= 0.0 {
+        return None;
+    }
+    let out_shape = cx.shapes[id].as_ref()?.clone();
+    let in_shapes: Option<Vec<Vec<usize>>> =
+        node.inputs.iter().map(|&i| cx.shapes[i].clone()).collect();
+    let in_shapes = in_shapes?;
+    let key = node.attrs.get("dispatch").cloned().unwrap_or_else(|| node.op.name().to_string());
+    let routine = cx.dispatcher.routine_for(node.op, &key);
+    if routine.provenance.is_empty() {
+        return None;
+    }
+    let merged = cx.env.merged(&node.attrs);
+
+    // per-choice cost table (counts are flag-independent here; the
+    // honest re-evaluation below goes through the full op_cost path)
+    let ins: Vec<Tensor> = in_shapes.iter().map(|s| Tensor::zeros(s)).collect();
+    let ins_ref: Vec<&Tensor> = ins.iter().collect();
+    let out = Tensor::zeros(&out_shape);
+    let (flops, bytes, n_launches) = counts::op_counts(node.op, &node.attrs, &ins_ref, &out);
+    let costs = choice_costs(cx, &routine, flops, bytes, n_launches);
+
+    let mut space = sliced_flags(&routine, &costs);
+    if space.is_empty() {
+        return None;
+    }
+    space.truncate(cfg.max_joint_flags);
+
+    // pin every non-sliced branch variable to its live value
+    let mut pinned = BTreeMap::new();
+    for (var, _) in routine.branch_space() {
+        if !space.iter().any(|(v, _)| *v == var) {
+            pinned.insert(var.clone(), merged.get(&var).to_string());
+        }
+    }
+    let exhaustive = space.iter().map(|(_, vs)| vs.len()).product();
+    let mut bnb = Bnb {
+        routine: &routine,
+        costs: &costs,
+        space: &space,
+        time_budget_us: cur_t,
+        best_e: f64::INFINITY,
+        best: None,
+        stats: SearchStats { exhaustive, ..SearchStats::default() },
+    };
+    let mut assigned = pinned;
+    bnb.dfs(0, &mut assigned);
+    let stats = bnb.stats;
+    let mut result = NodeSearch { node: id, stats, hit: None };
+
+    let best = match bnb.best {
+        Some(b) => b,
+        None => return Some(result),
+    };
+    // changed flags only: values already matching the live env are not
+    // part of the diagnosis
+    let mut diffs: Vec<(String, String)> =
+        best.into_iter().filter(|(k, v)| merged.get(k) != v.as_str()).collect();
+    if diffs.is_empty() {
+        return Some(result);
+    }
+    // honest re-evaluation through the full dispatch path, exactly as
+    // `--verify` will apply it (attrs override the env)
+    let eval = |flags: &[(String, String)]| -> KernelCost {
+        let mut attrs = node.attrs.clone();
+        for (k, v) in flags {
+            attrs.insert(k.clone(), v.clone());
+        }
+        cx.op_cost(node.op, &attrs, &in_shapes, &out_shape)
+    };
+    let mut cand = eval(&diffs);
+    if !(cand.energy_j < cur_e && cand.time_us <= cur_t) {
+        return Some(result);
+    }
+    // ddmin to a 1-minimal set: drop any flag whose removal keeps the
+    // full savings; loop until no single removal survives
+    loop {
+        let mut dropped = false;
+        for i in 0..diffs.len() {
+            let mut sub = diffs.clone();
+            sub.remove(i);
+            let c = eval(&sub);
+            if c.energy_j < cur_e && c.time_us <= cur_t && c.energy_j <= cand.energy_j {
+                diffs = sub;
+                cand = c;
+                dropped = true;
+                break;
+            }
+        }
+        if !dropped {
+            break;
+        }
+    }
+    let marginals = diffs
+        .iter()
+        .map(|(k, v)| {
+            let m = eval(std::slice::from_ref(&(k.clone(), v.clone())));
+            FlagMarginal {
+                flag: k.clone(),
+                value: v.clone(),
+                source: routine
+                    .source_of(k)
+                    .map(|s| s.describe())
+                    .unwrap_or_else(|| format!("variable `{k}`")),
+                saved_j: cur_e - m.energy_j,
+                time_ok: m.time_us <= cur_t,
+            }
+        })
+        .collect();
+    let kernel_now = routine.run(&merged).choice.kernel;
+    let kernel_then = {
+        let mut env = merged.clone();
+        for (k, v) in &diffs {
+            env.set(k, v);
+        }
+        routine.run(&env).choice.kernel
+    };
+    result.hit = Some(NodeHit {
+        assignment: diffs,
+        saved_j: cur_e - cand.energy_j,
+        kernel_now,
+        kernel_then,
+        marginals,
+    });
+    Some(result)
+}
+
+// ---------------------------------------------------------------------
+// Graph + suite drivers
+// ---------------------------------------------------------------------
+
+/// Run the joint search over every node of one analysed graph, grouping
+/// per-node hits that share the same 1-minimal flag set into one
+/// diagnosis. Only genuine interactions (≥ 2 flags) become diagnoses —
+/// single-flag flips are `dtype-downcast`'s territory.
+pub fn joint_search(
+    cx: &LintContext,
+    cfg: &InteractConfig,
+) -> (Vec<InteractionDiagnosis>, SearchStats) {
+    let mut stats = SearchStats::default();
+    let mut groups: BTreeMap<Vec<(String, String)>, Vec<(NodeId, NodeHit)>> = BTreeMap::new();
+    for node in &cx.graph.nodes {
+        if let Some(s) = search_node(cx, node.id, cfg) {
+            stats.add(&s.stats);
+            if let Some(hit) = s.hit {
+                if hit.assignment.len() >= 2 {
+                    groups.entry(hit.assignment.clone()).or_default().push((node.id, hit));
+                }
+            }
+        }
+    }
+    let mut out = Vec::new();
+    for (assignment, hits) in groups {
+        let mut nodes: Vec<NodeId> = hits.iter().map(|(id, _)| *id).collect();
+        nodes.sort_unstable();
+        let joint_saved_j: f64 = hits.iter().map(|(_, h)| h.saved_j).sum();
+        // representative site: biggest saver, lowest node id on ties
+        let (top_id, top) = hits
+            .iter()
+            .max_by(|(na, a), (nb, b)| a.saved_j.total_cmp(&b.saved_j).then(nb.cmp(na)))
+            .expect("non-empty group");
+        let label = cx.node(*top_id).label.clone();
+        // sum marginals flag-wise across the group's nodes
+        let marginals = assignment
+            .iter()
+            .map(|(k, v)| {
+                let per_node: Vec<&FlagMarginal> = hits
+                    .iter()
+                    .flat_map(|(_, h)| h.marginals.iter())
+                    .filter(|m| m.flag == *k)
+                    .collect();
+                FlagMarginal {
+                    flag: k.clone(),
+                    value: v.clone(),
+                    source: per_node
+                        .first()
+                        .map(|m| m.source.clone())
+                        .unwrap_or_else(|| format!("variable `{k}`")),
+                    saved_j: per_node.iter().map(|m| m.saved_j).sum(),
+                    time_ok: per_node.iter().all(|m| m.time_ok),
+                }
+            })
+            .collect();
+        out.push(InteractionDiagnosis {
+            nodes,
+            label,
+            assignment,
+            joint_saved_j,
+            kernel_now: top.kernel_now.clone(),
+            kernel_then: top.kernel_then.clone(),
+            marginals,
+        });
+    }
+    out.sort_by(|a, b| b.joint_saved_j.total_cmp(&a.joint_saved_j).then(a.label.cmp(&b.label)));
+    (out, stats)
+}
+
+/// One target's joint-search result.
+#[derive(Clone, Debug)]
+pub struct InteractReport {
+    pub target: String,
+    pub nodes: usize,
+    pub static_j: f64,
+    pub diagnoses: Vec<InteractionDiagnosis>,
+    pub stats: SearchStats,
+    /// Set when the target's graph failed validation/analysis.
+    pub error: Option<String>,
+}
+
+/// Pseudo-target name an interaction report gates under
+/// (manifest/`--target`), mirroring [`super::diff_name`].
+pub fn interact_name(target: &str) -> String {
+    format!("interact~{target}")
+}
+
+/// One `interaction` lint finding per diagnosis: the flag set, the
+/// cheaper joint assignment, and one `SetAttr` per (node, flag) so the
+/// A/B verifier measures the joint flip end-to-end.
+pub fn interaction_finding(d: &InteractionDiagnosis) -> LintFinding {
+    let set = d.flag_set();
+    let steps = d
+        .nodes
+        .iter()
+        .flat_map(|&node| {
+            d.assignment.iter().map(move |(k, v)| RewriteStep::SetAttr {
+                node,
+                key: k.clone(),
+                value: v.clone(),
+            })
+        })
+        .collect();
+    LintFinding {
+        rule: "interaction",
+        severity: Severity::Warn,
+        nodes: d.nodes.clone(),
+        label: d.label.clone(),
+        est_wasted_j: d.joint_saved_j,
+        suggestion: format!(
+            "{} kernel(s) run {}; no single flag flip survives the energy+time gate, but \
+             jointly setting {{{set}}} selects {} — a 1-minimal set of {} flags: strictly \
+             less energy at no time cost, and removing any one flag loses the saving",
+            d.nodes.len(),
+            d.kernel_now,
+            d.kernel_then,
+            d.assignment.len(),
+        ),
+        steps,
+    }
+}
+
+impl InteractReport {
+    /// Diagnoses as ranked lint findings.
+    pub fn findings(&self) -> Vec<LintFinding> {
+        let mut out: Vec<LintFinding> = self.diagnoses.iter().map(interaction_finding).collect();
+        sort_findings(&mut out);
+        out
+    }
+
+    /// Repackage under the `interact~target` pseudo-target so
+    /// `lint --expect` gates interactions with the same manifest
+    /// machinery, and `render_lint` shows the marginal-vs-joint
+    /// breakdown carried in `interactions`.
+    pub fn to_target_report(&self) -> TargetReport {
+        TargetReport {
+            name: interact_name(&self.target),
+            nodes: self.nodes,
+            static_j: self.static_j,
+            findings: self.findings(),
+            error: self.error.clone(),
+            interactions: self.diagnoses.clone(),
+        }
+    }
+}
+
+/// Joint search over one suite target.
+pub fn interact_target(
+    t: &LintTarget,
+    device: &DeviceSpec,
+    cfg: &InteractConfig,
+) -> crate::Result<InteractReport> {
+    let cx = LintContext::new(&t.run.prog, &t.run.dispatcher, &t.run.env, device)
+        .map_err(|e| e.context(format!("interaction search target `{}`", t.name)))?;
+    let (diagnoses, stats) = joint_search(&cx, cfg);
+    Ok(InteractReport {
+        target: t.name.clone(),
+        nodes: t.run.prog.graph.len(),
+        static_j: cx.total_static_j(),
+        diagnoses,
+        stats,
+        error: None,
+    })
+}
+
+/// Joint search over every suite target, fanning out across `threads`
+/// workers. Per-target results are independent and fully ordered, so
+/// the output is bit-identical for any worker count.
+pub fn interact_suite(
+    targets: &[LintTarget],
+    device: &DeviceSpec,
+    threads: usize,
+    cfg: &InteractConfig,
+) -> Vec<InteractReport> {
+    par_map(targets, threads, |t| {
+        interact_target(t, device, cfg).unwrap_or_else(|e| InteractReport {
+            target: t.name.clone(),
+            nodes: t.run.prog.graph.len(),
+            static_j: 0.0,
+            diagnoses: vec![],
+            stats: SearchStats::default(),
+            error: Some(e.to_string()),
+        })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dispatch::{Block, KernelChoice};
+    use crate::energy::ComputeUnit;
+    use crate::exec::{Dispatcher, Program};
+    use crate::graph::{Graph, OpKind};
+
+    /// Binary-tree routine over `k` config flags `f00..f{k-1}`: every
+    /// leaf is its own choice whose efficiency mixes the leaf index, so
+    /// the optimum sits at an interior point of the joint space.
+    fn tree_routine(k: usize) -> Routine {
+        let mut blocks = Vec::new();
+        let mut choices = Vec::new();
+        let mut provenance = BTreeMap::new();
+        for i in 0..k {
+            provenance.insert(format!("f{i:02}"), VarSource::ConfigFlag(format!("cfg.f{i:02}")));
+        }
+        // level-order complete binary tree: internal node j at depth d
+        // tests flag d; leaves launch their path index
+        let internal = (1 << k) - 1;
+        for j in 0..internal {
+            let d = (usize::BITS - 1 - (j + 1).leading_zeros()) as usize;
+            blocks.push(Block {
+                func: "joint_dispatch".into(),
+                term: Term::CondBranch {
+                    var: format!("f{d:02}"),
+                    eq: "true".into(),
+                    then_bb: 2 * j + 1,
+                    else_bb: 2 * j + 2,
+                },
+            });
+        }
+        for leaf in 0..(1 << k) {
+            let idx = choices.len();
+            // deterministic irrational mix → optimum at an interior leaf
+            let frac = ((leaf as f64) * 0.618_033_988_749_895).fract();
+            choices.push(
+                KernelChoice::new(&format!("leaf_{leaf}"), ComputeUnit::TensorCore)
+                    .quality(0.4 + 0.6 * frac, 1.0, 1.0),
+            );
+            blocks.push(Block { func: "joint_dispatch".into(), term: Term::Launch { idx } });
+        }
+        Routine {
+            api: "joint.tree".into(),
+            frames: vec![],
+            blocks,
+            choices,
+            provenance,
+        }
+    }
+
+    fn tree_target(k: usize) -> (Program, Dispatcher) {
+        let mut g = Graph::new("tree");
+        let x = g.add(OpKind::Input, &[], "x");
+        let w = g.add(OpKind::Weight, &[], "w");
+        let m = g.add_attr1(OpKind::MatMul, &[x, w], "tree.proj", "dispatch", "joint.tree");
+        g.add(OpKind::Output, &[m], "out");
+        let mut p = Program::new(g);
+        p.feed(0, Tensor::zeros(&[16, 32]));
+        p.feed(1, Tensor::zeros(&[32, 16]));
+        let mut d = Dispatcher::new();
+        d.register("joint.tree", tree_routine(k));
+        (p, d)
+    }
+
+    #[test]
+    fn pruned_search_matches_exhaustive_optimum() {
+        // soundness on routines up to 12 flags: the pruned search finds
+        // the same optimum exhaustive enumeration does, while visiting
+        // strictly fewer leaves
+        for k in [4usize, 8, 10] {
+            let (p, d) = tree_target(k);
+            let env = Env::new();
+            let dev = DeviceSpec::h200_sim();
+            let cx = LintContext::new(&p, &d, &env, &dev).unwrap();
+            let cfg = InteractConfig { max_joint_flags: 12 };
+            let s = search_node(&cx, 2, &cfg).expect("searchable");
+            assert_eq!(s.stats.exhaustive, 1 << k);
+            assert!(
+                s.stats.evaluated < s.stats.exhaustive,
+                "k={k}: evaluated {} !< exhaustive {}",
+                s.stats.evaluated,
+                s.stats.exhaustive
+            );
+            assert!(s.stats.pruned > 0, "k={k}: nothing pruned");
+            // exhaustive reference: price every joint outcome honestly
+            let routine = tree_routine(k);
+            let node = cx.node(2);
+            let cur = &cx.cost[2];
+            let mut best = f64::INFINITY;
+            for o in routine.enumerate_outcomes() {
+                let mut attrs = node.attrs.clone();
+                for (k2, v) in &o.assignment {
+                    attrs.insert(k2.clone(), v.clone());
+                }
+                let c = cx.op_cost(node.op, &attrs, &[vec![16, 32], vec![32, 16]], &[16, 16]);
+                if c.time_us <= cur.time_us && c.energy_j < best {
+                    best = c.energy_j;
+                }
+            }
+            let hit = s.hit.expect("tree optimum beats the all-unset default");
+            assert_eq!(
+                (cur.energy_j - hit.saved_j).to_bits(),
+                best.to_bits(),
+                "k={k}: pruned optimum diverged from exhaustive"
+            );
+        }
+    }
+
+    #[test]
+    fn single_flag_routine_yields_no_interaction() {
+        // a lone tf32 branch is dtype-downcast's territory: the joint
+        // search still finds the flip but joint_search filters < 2 flags
+        let mut g = Graph::new("single");
+        let x = g.add(OpKind::Input, &[], "x");
+        let w = g.add(OpKind::Weight, &[], "w");
+        g.add_attr1(OpKind::MatMul, &[x, w], "proj", "dispatch", "matmul");
+        let mut p = Program::new(g);
+        p.feed(0, Tensor::zeros(&[16, 32]));
+        p.feed(1, Tensor::zeros(&[32, 16]));
+        let mut d = Dispatcher::new();
+        d.register("matmul", crate::systems::torch_matmul_routine());
+        let env = Env::new();
+        let dev = DeviceSpec::h200_sim();
+        let cx = LintContext::new(&p, &d, &env, &dev).unwrap();
+        let s = search_node(&cx, 2, &InteractConfig::default()).expect("searchable");
+        let hit = s.hit.expect("tf32 flip saves");
+        assert_eq!(hit.assignment.len(), 1, "{:?}", hit.assignment);
+        let (diagnoses, _) = joint_search(&cx, &InteractConfig::default());
+        assert!(diagnoses.is_empty(), "{diagnoses:?}");
+    }
+
+    #[test]
+    fn flag_slicing_drops_cost_uniform_flags() {
+        // a branch whose two launches price identically must not enter
+        // the search space
+        let mut provenance = BTreeMap::new();
+        provenance.insert("dead".to_string(), VarSource::ConfigFlag("cfg.dead".into()));
+        provenance.insert("live".to_string(), VarSource::ConfigFlag("cfg.live".into()));
+        let r = Routine {
+            api: "sliced".into(),
+            frames: vec![],
+            blocks: vec![
+                Block {
+                    func: "d".into(),
+                    term: Term::CondBranch {
+                        var: "dead".into(),
+                        eq: "true".into(),
+                        then_bb: 1,
+                        else_bb: 2,
+                    },
+                },
+                Block {
+                    func: "d".into(),
+                    term: Term::CondBranch {
+                        var: "live".into(),
+                        eq: "true".into(),
+                        then_bb: 3,
+                        else_bb: 4,
+                    },
+                },
+                Block {
+                    func: "d".into(),
+                    term: Term::CondBranch {
+                        var: "live".into(),
+                        eq: "true".into(),
+                        then_bb: 3,
+                        else_bb: 4,
+                    },
+                },
+                Block { func: "d".into(), term: Term::Launch { idx: 0 } },
+                Block { func: "d".into(), term: Term::Launch { idx: 1 } },
+            ],
+            choices: vec![
+                KernelChoice::new("fast", ComputeUnit::TensorCore),
+                KernelChoice::new("slow", ComputeUnit::CudaCore),
+            ],
+            provenance,
+        };
+        let dev = DeviceSpec::h200_sim();
+        let desc_costs: Vec<KernelCost> = r
+            .choices
+            .iter()
+            .map(|c| {
+                KernelDesc {
+                    name: c.kernel.clone(),
+                    unit: c.unit,
+                    flops: 1e9,
+                    bytes: 1e6,
+                    efficiency: c.efficiency,
+                    time_mult: c.time_mult,
+                    fixed_time_us: 0.0,
+                    fixed_power_w: 0.0,
+                }
+                .cost(&dev)
+            })
+            .collect();
+        let flags = sliced_flags(&r, &desc_costs);
+        let names: Vec<&str> = flags.iter().map(|(v, _)| v.as_str()).collect();
+        // `dead` chooses between two identically-priced subtrees only
+        // when `live` decides the kernel downstream — both its guarded
+        // regions reach {fast, slow}, which *is* divergent, so `dead`
+        // stays; `live` obviously stays. A flag is only dropped when
+        // its guarded launches are cost-uniform:
+        assert_eq!(names, vec!["dead", "live"]);
+        let r2 = Routine::branch_on(
+            "uniform",
+            vec![],
+            "d",
+            "flip",
+            "true",
+            VarSource::ConfigFlag("cfg.flip".into()),
+            KernelChoice::new("a", ComputeUnit::TensorCore),
+            KernelChoice::new("a2", ComputeUnit::TensorCore),
+        );
+        let costs2: Vec<KernelCost> = vec![desc_costs[0]; 2];
+        assert!(sliced_flags(&r2, &costs2).is_empty(), "cost-uniform flag must be sliced out");
+    }
+
+    #[test]
+    fn interact_name_is_stable() {
+        assert_eq!(interact_name("case-c8-joint"), "interact~case-c8-joint");
+    }
+
+    #[test]
+    fn max_joint_flags_caps_the_space() {
+        let (p, d) = tree_target(8);
+        let env = Env::new();
+        let dev = DeviceSpec::h200_sim();
+        let cx = LintContext::new(&p, &d, &env, &dev).unwrap();
+        let s = search_node(&cx, 2, &InteractConfig { max_joint_flags: 3 }).expect("searchable");
+        assert_eq!(s.stats.exhaustive, 8, "2^3 leaves with 5 flags pinned");
+    }
+}

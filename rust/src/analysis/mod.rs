@@ -21,6 +21,7 @@
 //! seen in any graph.
 
 pub mod diff;
+pub mod interact;
 pub mod rewrite;
 pub mod rules;
 pub mod suite;
@@ -40,6 +41,10 @@ use crate::Error;
 
 pub use diff::{
     diff_name, diff_suite, diff_targets, StaticDiffConfig, StaticDiffReport,
+};
+pub use interact::{
+    interact_name, interact_suite, interact_target, InteractConfig, InteractReport,
+    InteractionDiagnosis, SearchStats,
 };
 pub use rewrite::{apply_rewrite, verify_finding, VerifyOutcome};
 pub use rules::{default_passes, rule_names};
@@ -688,6 +693,23 @@ pub fn parse_manifest(text: &str) -> crate::Result<Vec<ExpectedFinding>> {
         }
     }
     Ok(out)
+}
+
+/// Partition a parsed manifest by pseudo-target tag: an entry whose
+/// target carries a tagged prefix (`diff~`, `interact~`, ...) is kept
+/// only while its producing layer is enabled, so a plain `lint --expect`
+/// run neither fails on nor vacuously requires findings that only exist
+/// behind `--diff`/`--interact`. Untagged entries always survive.
+/// (Generalises the old `diff~`-only special case, under which new
+/// tagged families silently failed plain-run gating.)
+pub fn gate_manifest(
+    entries: Vec<ExpectedFinding>,
+    gates: &[(&str, bool)],
+) -> Vec<ExpectedFinding> {
+    entries
+        .into_iter()
+        .filter(|e| gates.iter().all(|(prefix, on)| *on || !e.target.starts_with(prefix)))
+        .collect()
 }
 
 /// Check a lint report against a manifest; returns the unmet entries.

@@ -38,7 +38,13 @@ pub fn default_passes() -> Vec<Box<dyn LintPass>> {
 /// static differential audit).
 pub fn rule_names() -> Vec<&'static str> {
     let mut names: Vec<&'static str> = default_passes().iter().map(|p| p.name()).collect();
-    names.extend(["stream-config", "detect-config", "static-diff", "static-diff-unmatched"]);
+    names.extend([
+        "stream-config",
+        "detect-config",
+        "static-diff",
+        "static-diff-unmatched",
+        "interaction",
+    ]);
     names
 }
 

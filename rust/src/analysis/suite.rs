@@ -15,8 +15,8 @@ use crate::systems::frameworks::{
     build_conv, conv_params, tf_dispatcher, torch_dispatcher, ConvLayout, ConvSpec,
 };
 use crate::systems::imagegen::{
-    build_unet_block, diffusers_dispatcher, sd_dispatcher, sd_env, UnetBuildOpts, UnetParams,
-    UnetSpec,
+    build_unet_block, diffusers_dispatcher, sd_dispatcher, sd_env, sd_joint_dispatcher,
+    UnetBuildOpts, UnetParams, UnetSpec,
 };
 use crate::systems::llm::{
     build_llm, default_env, hf_dispatcher, megatron_dispatcher, sglang_dispatcher,
@@ -123,6 +123,21 @@ pub fn builtin_targets(seed: u64) -> Vec<LintTarget> {
         let (wasteful, _clean) = (scenario.build)(&mut Prng::new(seed));
         out.push(LintTarget::new(&format!("case-{id}"), family, wasteful));
     }
+    // c8's joint variant: the same UNet on a gemm routine where
+    // `allow_tf32` only pays off together with `channels_last` — no
+    // single-flag enumeration can reach the saving, the interaction
+    // search (`lint --interact`) must. Not diffable against the `unet`
+    // family (different kernel substrate), hence no family.
+    out.push(LintTarget::new(
+        "case-c8-joint",
+        None,
+        SysRun::new(
+            "case-c8-joint",
+            sd_joint_dispatcher(),
+            Env::new(),
+            build_unet_block(&unet, &UnetBuildOpts::sd()),
+        ),
+    ));
     out.push(lint_fixture(&mut rng));
     out
 }
@@ -168,6 +183,10 @@ pub struct TargetReport {
     pub findings: Vec<LintFinding>,
     /// Set when the target's graph failed validation or shape inference.
     pub error: Option<String>,
+    /// Joint-search diagnoses backing the `interaction` findings
+    /// (populated only by `lint --interact` pseudo-targets; carries the
+    /// per-flag marginal-vs-joint breakdown the renderer shows).
+    pub interactions: Vec<super::interact::InteractionDiagnosis>,
 }
 
 /// Lint results across the whole suite.
@@ -192,6 +211,7 @@ pub fn lint_suite(targets: &[LintTarget], device: &DeviceSpec, threads: usize) -
                     static_j: 0.0,
                     findings: vec![],
                     error: Some(e.to_string()),
+                    interactions: vec![],
                 }
             }
         };
@@ -201,6 +221,7 @@ pub fn lint_suite(targets: &[LintTarget], device: &DeviceSpec, threads: usize) -
             static_j: cx.total_static_j(),
             findings: lint_graph(&cx),
             error: None,
+            interactions: vec![],
         }
     });
     let total_findings = reports.iter().map(|r| r.findings.len()).sum();
@@ -234,6 +255,7 @@ mod tests {
                 "case-c2",
                 "case-c8",
                 "case-c9",
+                "case-c8-joint",
                 "lint-fixture",
             ]
         );
@@ -250,6 +272,7 @@ mod tests {
         assert_eq!(family_of("case-c8"), Some("unet"));
         assert_eq!(family_of("mini-pytorch"), Some("conv"));
         assert_eq!(family_of("case-c9"), None);
+        assert_eq!(family_of("case-c8-joint"), None);
         assert_eq!(family_of("lint-fixture"), None);
     }
 

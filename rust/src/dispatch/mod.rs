@@ -17,7 +17,7 @@
 //! source (the configuration parameter or API argument a developer can
 //! change) — the paper's backward data-flow step.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::energy::ComputeUnit;
 use crate::trace::Frame;
@@ -313,6 +313,58 @@ impl Routine {
         out
     }
 
+    /// Walk the CFG under a fully concrete `env` to the launched choice
+    /// index — the public face of [`Routine::run`] for callers that only
+    /// need the index (the joint interaction search replays thousands of
+    /// assignments and must not pay for trace allocation).
+    pub fn launch_for(&self, env: &Env) -> usize {
+        self.launch_idx(env)
+    }
+
+    /// Choice indices reachable under a *partial* assignment: variables
+    /// present in `assigned` are pinned (`""` means explicitly unset),
+    /// absent variables are free and explore every successor. This is
+    /// the optimistic-bound substrate of branch-and-bound dominance
+    /// pruning: any kernel the remaining free flags could still select
+    /// is in the returned set. Deterministic (worklist in block order,
+    /// `BTreeSet` result) and cycle-safe via a visited set.
+    pub fn reachable_choices(&self, assigned: &BTreeMap<String, String>) -> BTreeSet<usize> {
+        let mut reachable = BTreeSet::new();
+        let mut seen = vec![false; self.blocks.len()];
+        let mut work = vec![0usize];
+        while let Some(bb) = work.pop() {
+            if seen[bb] {
+                continue;
+            }
+            seen[bb] = true;
+            match &self.blocks[bb].term {
+                Term::CondBranch { var, eq, then_bb, else_bb } => match assigned.get(var) {
+                    Some(v) => work.push(if v == eq { *then_bb } else { *else_bb }),
+                    None => {
+                        work.push(*then_bb);
+                        work.push(*else_bb);
+                    }
+                },
+                Term::Switch { var, arms, default_bb } => match assigned.get(var) {
+                    Some(v) => work.push(
+                        arms.iter().find(|(val, _)| val == v).map(|(_, b)| *b).unwrap_or(*default_bb),
+                    ),
+                    None => {
+                        work.push(*default_bb);
+                        for (_, b) in arms {
+                            work.push(*b);
+                        }
+                    }
+                },
+                Term::Jump { bb: nxt } => work.push(*nxt),
+                Term::Launch { idx } => {
+                    reachable.insert(*idx);
+                }
+            }
+        }
+        reachable
+    }
+
     /// Walk the CFG under `env` to the launched choice index.
     fn launch_idx(&self, env: &Env) -> usize {
         let mut bb = 0usize;
@@ -523,6 +575,60 @@ mod tests {
         let b: Vec<(BTreeMap<String, String>, usize)> =
             r.enumerate_outcomes().into_iter().map(|o| (o.assignment, o.choice_idx)).collect();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn launch_for_agrees_with_run() {
+        let r = tf32_routine();
+        for env in [Env::new(), Env::new().with("allow_tf32", "true")] {
+            assert_eq!(r.choices[r.launch_for(&env)].kernel, r.run(&env).choice.kernel);
+        }
+    }
+
+    #[test]
+    fn reachable_choices_narrow_as_flags_pin() {
+        let r = tf32_routine();
+        let free: Vec<usize> = r.reachable_choices(&BTreeMap::new()).into_iter().collect();
+        assert_eq!(free, vec![0, 1], "free flags reach both kernels");
+        let mut on = BTreeMap::new();
+        on.insert("allow_tf32".to_string(), "true".to_string());
+        assert_eq!(r.reachable_choices(&on).into_iter().collect::<Vec<_>>(), vec![0]);
+        // "" pins the flag to *unset* — not the same as leaving it free
+        let mut off = BTreeMap::new();
+        off.insert("allow_tf32".to_string(), String::new());
+        assert_eq!(r.reachable_choices(&off).into_iter().collect::<Vec<_>>(), vec![1]);
+    }
+
+    #[test]
+    fn reachable_choices_explore_switch_arms_and_default() {
+        let mut prov = BTreeMap::new();
+        prov.insert("layout".to_string(), VarSource::InputProperty("memory_format".into()));
+        let r = Routine {
+            api: "conv2d".into(),
+            frames: vec![],
+            blocks: vec![
+                Block {
+                    func: "cudnn_dispatch".into(),
+                    term: Term::Switch {
+                        var: "layout".into(),
+                        arms: vec![("nchw".into(), 1), ("nhwc".into(), 2)],
+                        default_bb: 1,
+                    },
+                },
+                Block { func: "cudnn_dispatch".into(), term: Term::Launch { idx: 0 } },
+                Block { func: "cudnn_dispatch".into(), term: Term::Launch { idx: 1 } },
+            ],
+            choices: vec![
+                KernelChoice::new("implicit_gemm_nchw", ComputeUnit::TensorCore),
+                KernelChoice::new("implicit_gemm_nhwc", ComputeUnit::TensorCore),
+            ],
+            provenance: prov,
+        };
+        let free: Vec<usize> = r.reachable_choices(&BTreeMap::new()).into_iter().collect();
+        assert_eq!(free, vec![0, 1]);
+        let mut pinned = BTreeMap::new();
+        pinned.insert("layout".to_string(), "nhwc".to_string());
+        assert_eq!(r.reachable_choices(&pinned).into_iter().collect::<Vec<_>>(), vec![1]);
     }
 
     #[test]

@@ -115,7 +115,13 @@ fn print_help() {
          \x20            or above --deny <severity>; --diff adds the static\n\
          \x20            differential audit: match regions between same-family\n\
          \x20            targets (every pair, or --target-a A --target-b B) and\n\
-         \x20            rank per-region cost-model deltas without running either\n\n\
+         \x20            rank per-region cost-model deltas without running either;\n\
+         \x20            --interact adds the joint config-space interaction search:\n\
+         \x20            per dispatch routine, flag-sliced branch-and-bound over all\n\
+         \x20            config flags finds 1-minimal flag sets whose joint flip\n\
+         \x20            saves energy where no single flip survives the gate,\n\
+         \x20            reported as `interact~<target>` pseudo-targets;\n\
+         \x20            --json <path> writes the full report machine-readably\n\n\
          OPTIONS: --id <case> --eps <f64> --threshold <f64> --seed <u64> --device <h200|rtx4090>\n\
          STREAM:  --requests <n=500> --arrival <poisson|bursty|steady> --rate <hz=200>\n\
          \x20        --burst <n=16> --window <pairs=250> --hop <pairs> --ring <segs=512>\n\
@@ -128,6 +134,7 @@ fn print_help() {
          LINT:    --target <name substr> --only <rule> --deny <info|warn|error=error>\n\
          \x20        --expect <manifest> --verify --threads <n> --seed <u64=7>\n\
          \x20        --diff --target-a <name> --target-b <name>\n\
+         \x20        --interact --max-joint-flags <n=8> --json <path>\n\
          \x20        --window/--hop/--lookahead/--content-eps (stream-config lint overrides)"
     );
 }
@@ -578,14 +585,18 @@ fn cmd_diff(args: &Args) -> magneton::Result<()> {
 /// the differential pipeline, `--expect <manifest>` to gate on declared
 /// findings, and `--deny <severity>` to make findings fail the build.
 /// `--diff` adds the static differential audit: regions of same-family
-/// targets are matched (hash, then label, then coarse-bucket tier) and
-/// their cost-model bills diffed into ranked `diff~a~b` pseudo-targets
-/// the same manifest/deny machinery gates.
+/// targets are matched (hash, then label, then coarse-bucket, then
+/// fuzzy tier) and their cost-model bills diffed into ranked `diff~a~b`
+/// pseudo-targets the same manifest/deny machinery gates. `--interact`
+/// adds the joint config-space interaction search (`interact~<target>`
+/// pseudo-targets with 1-minimal flag-set diagnoses), and `--json
+/// <path>` writes the whole report machine-readably.
 fn cmd_lint(args: &Args) -> magneton::Result<()> {
     use magneton::analysis::{
-        builtin_targets, check_manifest, diff_suite, diff_targets, lint_detect_config,
-        lint_stream_config, lint_suite, parse_manifest, rule_names, sort_findings,
-        verify_finding, Severity, StaticDiffConfig, TargetReport,
+        builtin_targets, check_manifest, diff_suite, diff_targets, gate_manifest, interact_name,
+        interact_suite, lint_detect_config, lint_stream_config, lint_suite, parse_manifest,
+        rule_names, sort_findings, verify_finding, InteractConfig, Severity, StaticDiffConfig,
+        TargetReport,
     };
     use magneton::detect::DetectConfig;
     use magneton::stream::StreamConfig;
@@ -651,8 +662,23 @@ fn cmd_lint(args: &Args) -> magneton::Result<()> {
                 static_j: 0.0,
                 findings: cfg_findings,
                 error: None,
+                interactions: vec![],
             },
         );
+    }
+    // joint config-space interaction search: each target's
+    // `interact~<name>` pseudo-target carries the 1-minimal flag-set
+    // diagnoses, so render_lint shows the marginal-vs-joint breakdown
+    // and --expect/--deny/--verify gate them with the same machinery
+    if args.flag("interact") {
+        let icfg = InteractConfig { max_joint_flags: args.get_parse("max-joint-flags", 8usize) };
+        for ir in interact_suite(&targets, &dev, threads, &icfg) {
+            let mut tr = ir.to_target_report();
+            if let Some(rule) = args.options.get("only") {
+                tr.findings.retain(|f| f.rule == rule.as_str());
+            }
+            rep.targets.push(tr);
+        }
     }
     rep.total_findings = rep.targets.iter().map(|t| t.findings.len()).sum();
     rep.total_est_wasted_j =
@@ -706,17 +732,25 @@ fn cmd_lint(args: &Args) -> magneton::Result<()> {
             rep.targets.iter().flat_map(|t| &t.findings).map(|f| f.est_wasted_j).sum();
     }
 
+    // machine-readable escape hatch: the full report (findings, rewrite
+    // steps, interaction diagnoses) as lossless JSON, written after all
+    // pseudo-targets joined so nothing rendered above is missing
+    if let Some(path) = args.options.get("json") {
+        std::fs::write(path, report::lint_report_json(&rep).render())
+            .map_err(|e| magneton::Error::msg(format!("writing --json {path}: {e}")))?;
+        eprintln!("lint report written to {path}");
+    }
+
     if let Some(path) = args.options.get("expect") {
         let text = std::fs::read_to_string(path)
             .map_err(|e| magneton::Error::msg(format!("reading manifest {path}: {e}")))?;
         let expected = parse_manifest(&text)?;
-        // `diff~a~b` pseudo-targets only exist under --diff; a plain
+        // pseudo-target families only exist behind their flag; a plain
         // lint run must not fail on (or vacuously require) them
-        let expected: Vec<_> = if args.flag("diff") {
-            expected
-        } else {
-            expected.into_iter().filter(|e| !e.target.starts_with("diff~")).collect()
-        };
+        let expected = gate_manifest(
+            expected,
+            &[("diff~", args.flag("diff")), ("interact~", args.flag("interact"))],
+        );
         let unmet = check_manifest(&rep, &expected);
         if !unmet.is_empty() {
             let missing: Vec<String> = unmet
@@ -740,8 +774,17 @@ fn cmd_lint(args: &Args) -> magneton::Result<()> {
         let mut checked = 0usize;
         let mut disagreed = 0usize;
         for t in &targets {
-            let Some(tr) = rep.targets.iter().find(|r| r.name == t.name) else { continue };
-            let Some(f) = tr.findings.iter().find(|f| !f.steps.is_empty()) else { continue };
+            // a target's rewritable findings may live on its plain
+            // report or (under --interact) its interact~ pseudo-target
+            let Some(f) = rep
+                .targets
+                .iter()
+                .filter(|r| r.name == t.name || r.name == interact_name(&t.name))
+                .flat_map(|r| r.findings.iter())
+                .find(|f| !f.steps.is_empty())
+            else {
+                continue;
+            };
             let v = verify_finding(&t.run, f, &dev)?;
             checked += 1;
             if !v.same_sign {

@@ -4,7 +4,8 @@
 //! persistence under `results/`.
 
 use crate::analysis::diff::{MatchTier, RegionVerdict};
-use crate::analysis::{LintReport, StaticDiffReport, VerifyOutcome};
+use crate::analysis::{LintReport, RewriteStep, StaticDiffReport, VerifyOutcome};
+use crate::telemetry::json::Json;
 use crate::coordinator::fleet::{FleetDivergence, FleetReport, StreamFleetReport};
 use crate::coordinator::AuditOutcome;
 use crate::exec::RunArtifacts;
@@ -422,8 +423,144 @@ pub fn render_lint(report: &LintReport) -> String {
             ]);
         }
         s.push_str(&tab.render());
+        // joint-search diagnoses: the marginal-vs-joint breakdown that
+        // explains *why* the flag set is 1-minimal — each flag alone
+        // either costs energy or blows the time budget
+        for d in &t.interactions {
+            let set = d.flag_set();
+            s.push_str(&format!(
+                "interaction `{}`: {{{set}}} jointly saves {} across {} node(s) \
+                 ({} -> {}, 1-minimal)\n",
+                d.label,
+                fmt_joules(d.joint_saved_j),
+                d.nodes.len(),
+                d.kernel_now,
+                d.kernel_then,
+            ));
+            for m in &d.marginals {
+                let verb = if m.saved_j > 0.0 {
+                    format!("saves {}", fmt_joules(m.saved_j))
+                } else {
+                    format!("costs {}", fmt_joules(-m.saved_j))
+                };
+                let gate = if m.time_ok { "" } else { " but breaks the time budget" };
+                s.push_str(&format!(
+                    "    flag `{}={}` alone {verb}{gate} — {}\n",
+                    m.flag, m.value, m.source
+                ));
+            }
+        }
     }
     s
+}
+
+/// Machine-readable `magneton lint --json` payload: the full lint
+/// report — findings, rewrite steps, and joint-search interaction
+/// diagnoses — through the telemetry JSON writer (floats render
+/// shortest-round-trip, so estimates survive bit-for-bit).
+pub fn lint_report_json(report: &LintReport) -> Json {
+    let step_json = |st: &RewriteStep| -> Json {
+        match st {
+            RewriteStep::Bypass { node, replacement } => Json::obj()
+                .field("kind", "bypass")
+                .field("node", *node)
+                .field("replacement", *replacement)
+                .build(),
+            RewriteStep::Remove { node } => {
+                Json::obj().field("kind", "remove").field("node", *node).build()
+            }
+            RewriteStep::SetAttr { node, key, value } => Json::obj()
+                .field("kind", "set_attr")
+                .field("node", *node)
+                .field("key", key.as_str())
+                .field("value", value.as_str())
+                .build(),
+            RewriteStep::FuseAddMm { mm, add } => Json::obj()
+                .field("kind", "fuse_addmm")
+                .field("mm", *mm)
+                .field("add", *add)
+                .build(),
+        }
+    };
+    let ids = |nodes: &[usize]| Json::Arr(nodes.iter().map(|&n| Json::from(n)).collect());
+    let targets: Vec<Json> = report
+        .targets
+        .iter()
+        .map(|t| {
+            let findings: Vec<Json> = t
+                .findings
+                .iter()
+                .map(|f| {
+                    Json::obj()
+                        .field("rule", f.rule)
+                        .field("severity", f.severity.name())
+                        .field("nodes", ids(&f.nodes))
+                        .field("label", f.label.as_str())
+                        .field("est_wasted_j", f.est_wasted_j)
+                        .field("suggestion", f.suggestion.as_str())
+                        .field(
+                            "steps",
+                            Json::Arr(f.steps.iter().map(step_json).collect()),
+                        )
+                        .build()
+                })
+                .collect();
+            let interactions: Vec<Json> = t
+                .interactions
+                .iter()
+                .map(|d| {
+                    let marginals: Vec<Json> = d
+                        .marginals
+                        .iter()
+                        .map(|m| {
+                            Json::obj()
+                                .field("flag", m.flag.as_str())
+                                .field("value", m.value.as_str())
+                                .field("source", m.source.as_str())
+                                .field("saved_j", m.saved_j)
+                                .field("time_ok", m.time_ok)
+                                .build()
+                        })
+                        .collect();
+                    let assignment: Vec<Json> = d
+                        .assignment
+                        .iter()
+                        .map(|(k, v)| {
+                            Json::obj()
+                                .field("flag", k.as_str())
+                                .field("value", v.as_str())
+                                .build()
+                        })
+                        .collect();
+                    Json::obj()
+                        .field("nodes", ids(&d.nodes))
+                        .field("label", d.label.as_str())
+                        .field("assignment", Json::Arr(assignment))
+                        .field("joint_saved_j", d.joint_saved_j)
+                        .field("kernel_now", d.kernel_now.as_str())
+                        .field("kernel_then", d.kernel_then.as_str())
+                        .field("marginals", Json::Arr(marginals))
+                        .build()
+                })
+                .collect();
+            Json::obj()
+                .field("name", t.name.as_str())
+                .field("nodes", t.nodes)
+                .field("static_j", t.static_j)
+                .field(
+                    "error",
+                    t.error.as_ref().map(|e| Json::from(e.as_str())).unwrap_or(Json::Null),
+                )
+                .field("findings", Json::Arr(findings))
+                .field("interactions", Json::Arr(interactions))
+                .build()
+        })
+        .collect();
+    Json::obj()
+        .field("targets", Json::Arr(targets))
+        .field("total_findings", report.total_findings)
+        .field("total_est_wasted_j", report.total_est_wasted_j)
+        .build()
 }
 
 /// Ranked static differential report: the `magneton lint --diff`
@@ -450,11 +587,12 @@ pub fn render_static_diff(d: &StaticDiffReport) -> String {
     ));
     let tier_count = |t: MatchTier| d.regions.iter().filter(|r| r.tier == t).count();
     s.push_str(&format!(
-        "regions: {} matched ({} hash / {} label / {} bucket), {} + {} unmatched\n",
+        "regions: {} matched ({} hash / {} label / {} bucket / {} fuzzy), {} + {} unmatched\n",
         d.regions.len(),
         tier_count(MatchTier::Hash),
         tier_count(MatchTier::Label),
         tier_count(MatchTier::Bucket),
+        tier_count(MatchTier::Fuzzy),
         d.unmatched_a.len(),
         d.unmatched_b.len()
     ));
@@ -769,7 +907,10 @@ mod tests {
         let s = render_static_diff(&d);
         assert!(s.contains("static diff: mini-stable-diffusion vs case-c8"), "{s}");
         assert!(s.contains("30 vs 30 nodes"), "{s}");
-        assert!(s.contains("2 matched (1 hash / 1 label / 0 bucket), 0 + 1 unmatched"), "{s}");
+        assert!(
+            s.contains("2 matched (1 hash / 1 label / 0 bucket / 0 fuzzy), 0 + 1 unmatched"),
+            "{s}"
+        );
         assert!(s.contains("sd.resnet.conv1"), "{s}");
         assert!(s.contains("B WASTEFUL"), "{s}");
         assert!(s.contains("+300.00 mJ"), "{s}");
@@ -803,6 +944,7 @@ mod tests {
                         steps: vec![],
                     }],
                     error: None,
+                    interactions: vec![],
                 },
                 TargetReport {
                     name: "mini-broken".into(),
@@ -810,6 +952,7 @@ mod tests {
                     static_j: 0.0,
                     findings: vec![],
                     error: Some("graph `g` has a cycle through node 1 (`a`)".into()),
+                    interactions: vec![],
                 },
             ],
             total_findings: 1,
@@ -821,6 +964,95 @@ mod tests {
         assert!(s.contains("dist.Join.barrier"), "{s}");
         assert!(s.contains("mini-broken: INVALID"), "{s}");
         assert!(s.contains("has a cycle"), "{s}");
+    }
+
+    #[test]
+    fn lint_interactions_render_marginal_breakdown_and_json_round_trips() {
+        use crate::analysis::interact::FlagMarginal;
+        use crate::analysis::{
+            InteractionDiagnosis, LintFinding, LintReport, RewriteStep, Severity, TargetReport,
+        };
+        let diag = InteractionDiagnosis {
+            nodes: vec![4, 9],
+            label: "sd.resnet.conv1".into(),
+            assignment: vec![
+                ("torch.backends.cuda.matmul.allow_tf32".into(), "1".into()),
+                ("torch.channels_last memory_format".into(), "1".into()),
+            ],
+            joint_saved_j: 6.25e-4,
+            kernel_now: "ampere_sgemm_fp32_128x128".into(),
+            kernel_then: "ampere_tf32_s1688gemm_128x128_nhwc".into(),
+            marginals: vec![
+                FlagMarginal {
+                    flag: "torch.backends.cuda.matmul.allow_tf32".into(),
+                    value: "1".into(),
+                    source: "configuration flag `allow_tf32`".into(),
+                    saved_j: 1.5e-4,
+                    time_ok: false,
+                },
+                FlagMarginal {
+                    flag: "torch.channels_last memory_format".into(),
+                    value: "1".into(),
+                    source: "configuration flag `channels_last`".into(),
+                    saved_j: -6.0e-5,
+                    time_ok: true,
+                },
+            ],
+        };
+        let r = LintReport {
+            targets: vec![TargetReport {
+                name: "interact~case-c8-joint".into(),
+                nodes: 30,
+                static_j: 0.125,
+                findings: vec![LintFinding {
+                    rule: "interaction",
+                    severity: Severity::Warn,
+                    nodes: vec![4, 9],
+                    label: "sd.resnet.conv1".into(),
+                    est_wasted_j: 6.25e-4,
+                    suggestion: "set both flags jointly".into(),
+                    steps: vec![RewriteStep::SetAttr {
+                        node: 4,
+                        key: "torch.backends.cuda.matmul.allow_tf32".into(),
+                        value: "1".into(),
+                    }],
+                }],
+                error: None,
+                interactions: vec![diag],
+            }],
+            total_findings: 1,
+            total_est_wasted_j: 6.25e-4,
+        };
+        let s = render_lint(&r);
+        assert!(s.contains("interaction `sd.resnet.conv1`"), "{s}");
+        assert!(s.contains("across 2 node(s)"), "{s}");
+        assert!(s.contains("1-minimal"), "{s}");
+        // per-flag marginal lines: the tf32 flip alone blows the time
+        // budget, the layout flip alone costs energy
+        assert!(s.contains("alone saves") && s.contains("but breaks the time budget"), "{s}");
+        assert!(s.contains("alone costs"), "{s}");
+
+        let rendered = lint_report_json(&r).render();
+        let back = Json::parse(&rendered).expect("lint json parses back");
+        let tgt = &back.get("targets").unwrap().as_arr().unwrap()[0];
+        assert_eq!(tgt.get("name").unwrap().as_str(), Some("interact~case-c8-joint"));
+        assert_eq!(tgt.get("error"), Some(&Json::Null));
+        let f = &tgt.get("findings").unwrap().as_arr().unwrap()[0];
+        assert_eq!(f.get("rule").unwrap().as_str(), Some("interaction"));
+        // lossless floats: estimates survive the round trip bit-for-bit
+        let est = f.get("est_wasted_j").unwrap().as_f64().unwrap();
+        assert_eq!(est.to_bits(), (6.25e-4f64).to_bits());
+        let st = &f.get("steps").unwrap().as_arr().unwrap()[0];
+        assert_eq!(st.get("kind").unwrap().as_str(), Some("set_attr"));
+        assert_eq!(st.get("node").unwrap().as_usize(), Some(4));
+        let d = &tgt.get("interactions").unwrap().as_arr().unwrap()[0];
+        assert_eq!(d.get("assignment").unwrap().as_arr().unwrap().len(), 2);
+        let joint = d.get("joint_saved_j").unwrap().as_f64().unwrap();
+        assert_eq!(joint.to_bits(), (6.25e-4f64).to_bits());
+        let m = &d.get("marginals").unwrap().as_arr().unwrap()[0];
+        assert_eq!(m.get("time_ok").unwrap().as_bool(), Some(false));
+        let marg = m.get("saved_j").unwrap().as_f64().unwrap();
+        assert_eq!(marg.to_bits(), (1.5e-4f64).to_bits());
     }
 
     #[test]

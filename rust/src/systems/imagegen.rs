@@ -8,7 +8,8 @@
 //! unset so its convolutions/matmuls run on CUDA cores (case c8,
 //! sd-279 — fixed in release 1.10.1 for a 12.5 % end-to-end saving).
 
-use crate::dispatch::Env;
+use crate::dispatch::{Block, Env, Frame, KernelChoice, Routine, Term, VarSource};
+use crate::energy::ComputeUnit;
 use crate::exec::{Dispatcher, Program};
 use crate::graph::{Attrs, Graph, NodeId, OpKind};
 use crate::tensor::Tensor;
@@ -181,6 +182,76 @@ pub fn build_unet_block(params: &UnetParams, opts: &UnetBuildOpts) -> Program {
     p
 }
 
+/// Gemm routine with a genuine flag *interaction* (the joint-search
+/// case, `case-c8-joint`): the TF32 tensor-core path only pays off
+/// together with a channels-last layout. Alone, `allow_tf32` routes a
+/// strided TF32 kernel whose gather cost makes it *slower* than the
+/// fp32 SGEMM baseline (cheaper joules, blown time budget), and
+/// `channels_last` alone just re-tiles the same CUDA-core SGEMM for
+/// *more* energy at equal time — so every single-flag flip fails the
+/// energy+time gate and only the joint assignment dominates.
+pub fn joint_matmul_routine() -> Routine {
+    let mut provenance = std::collections::BTreeMap::new();
+    provenance.insert(
+        "allow_tf32".to_string(),
+        VarSource::ConfigFlag("torch.backends.cuda.matmul.allow_tf32".into()),
+    );
+    provenance.insert(
+        "channels_last".to_string(),
+        VarSource::ConfigFlag("torch.channels_last memory_format".into()),
+    );
+    let func = "at::cuda::blas::gemm";
+    let cond = |var: &str, then_bb: usize, else_bb: usize| Block {
+        func: func.to_string(),
+        term: Term::CondBranch {
+            var: var.to_string(),
+            eq: "true".to_string(),
+            then_bb,
+            else_bb,
+        },
+    };
+    let launch = |idx: usize| Block { func: func.to_string(), term: Term::Launch { idx } };
+    Routine {
+        api: "torch.matmul".to_string(),
+        frames: vec![Frame::cpp("at::native::matmul"), Frame::cpp(func)],
+        blocks: vec![
+            cond("channels_last", 1, 2),
+            cond("allow_tf32", 3, 4),
+            cond("allow_tf32", 5, 6),
+            launch(0),
+            launch(1),
+            launch(2),
+            launch(3),
+        ],
+        choices: vec![
+            // both flags: contiguous TF32 tensor-core gemm — strictly
+            // less energy, strictly less time
+            KernelChoice::new("ampere_tf32_s1688gemm_128x128_nhwc", ComputeUnit::TensorCore),
+            // channels_last only: re-tiled fp32 SGEMM — same time,
+            // more bytes moved, worse efficiency (rejected on energy)
+            KernelChoice::new("ampere_sgemm_fp32_128x128_nhwc", ComputeUnit::CudaCore)
+                .quality(0.95, 1.0, 1.1),
+            // allow_tf32 only: strided TF32 gemm — the gather makes it
+            // slower end-to-end than the fp32 baseline even though the
+            // math is cheaper (rejected on time; 2.6 > cc/tc ratio)
+            KernelChoice::new("ampere_tf32_s1688gemm_128x128_strided", ComputeUnit::TensorCore)
+                .quality(0.85, 2.6, 1.4),
+            // neither: the fp32 SGEMM baseline (the c8 bug)
+            KernelChoice::new("ampere_sgemm_fp32_128x128", ComputeUnit::CudaCore),
+        ],
+        provenance,
+    }
+}
+
+/// SD-reference dispatcher with the interaction-prone gemm: the
+/// `case-c8-joint` builtin target where only the *joint* flip of
+/// `allow_tf32` + `channels_last` saves energy.
+pub fn sd_joint_dispatcher() -> Dispatcher {
+    let mut d = sd_dispatcher();
+    d.register("matmul", joint_matmul_routine());
+    d
+}
+
 /// SD-reference dispatcher: torch kernels, `allow_tf32` comes from env.
 pub fn sd_dispatcher() -> Dispatcher {
     let mut d = Dispatcher::new();
@@ -243,6 +314,34 @@ mod tests {
         );
         assert!(waste.total_energy_j > clean.total_energy_j);
         assert!(waste.records.iter().any(|r| r.label.contains("skip.concat")));
+    }
+
+    #[test]
+    fn joint_routine_only_pays_off_with_both_flags() {
+        let mut rng = Prng::new(4);
+        let params = UnetParams::new(&mut rng, UnetSpec::sd3_sim());
+        let prog = build_unet_block(&params, &UnetBuildOpts::sd());
+        let base = run(&prog, sd_joint_dispatcher(), Env::new());
+        let tf32 = run(&prog, sd_joint_dispatcher(), Env::new().with("allow_tf32", "true"));
+        let layout = run(&prog, sd_joint_dispatcher(), Env::new().with("channels_last", "true"));
+        let joint = run(
+            &prog,
+            sd_joint_dispatcher(),
+            Env::new().with("allow_tf32", "true").with("channels_last", "true"),
+        );
+        // tf32 alone: cheaper joules but strictly slower (strided gather)
+        assert!(tf32.gpu_time_us > base.gpu_time_us, "{} !> {}", tf32.gpu_time_us, base.gpu_time_us);
+        // channels_last alone: same speed, strictly more energy
+        assert!(
+            layout.total_energy_j > base.total_energy_j,
+            "{} !> {}",
+            layout.total_energy_j,
+            base.total_energy_j
+        );
+        // only the joint flip dominates the baseline on both axes
+        assert!(joint.total_energy_j < base.total_energy_j);
+        assert!(joint.gpu_time_us < base.gpu_time_us);
+        assert!(joint.total_energy_j < tf32.total_energy_j.min(layout.total_energy_j));
     }
 
     #[test]

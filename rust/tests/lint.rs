@@ -4,8 +4,9 @@
 //! energy delta through the differential pipeline.
 
 use magneton::analysis::{
-    builtin_targets, check_manifest, diff_suite, diff_targets, lint_suite, parse_manifest,
-    verify_finding, LintReport, StaticDiffConfig,
+    builtin_targets, check_manifest, diff_suite, diff_targets, gate_manifest, interact_suite,
+    interact_target, lint_suite, parse_manifest, verify_finding, InteractConfig, LintReport,
+    StaticDiffConfig,
 };
 use magneton::energy::DeviceSpec;
 
@@ -27,6 +28,10 @@ fn manifest_findings_are_rediscovered() {
         expected.iter().any(|e| e.target.starts_with("diff~")),
         "manifest lost its static-diff entries"
     );
+    assert!(
+        expected.iter().any(|e| e.target.starts_with("interact~")),
+        "manifest lost its interaction entries"
+    );
     let mut report = suite(2);
     // the CLI's --diff mode: every same-family pair diff joins the
     // report as a `diff~a~b` pseudo-target
@@ -34,6 +39,13 @@ fn manifest_findings_are_rediscovered() {
     for d in diff_suite(&builtin_targets(7), &DeviceSpec::h200_sim(), 2, &cfg) {
         assert!(d.error.is_none(), "{} vs {}: {:?}", d.target_a, d.target_b, d.error);
         report.targets.push(d.to_target_report(&cfg));
+    }
+    // the CLI's --interact mode: joint-search diagnoses join as
+    // `interact~<target>` pseudo-targets
+    let icfg = InteractConfig::default();
+    for ir in interact_suite(&builtin_targets(7), &DeviceSpec::h200_sim(), 2, &icfg) {
+        assert!(ir.error.is_none(), "{}: {:?}", ir.target, ir.error);
+        report.targets.push(ir.to_target_report());
     }
     let unmet = check_manifest(&report, &expected);
     assert!(
@@ -240,6 +252,248 @@ fn verify_confirms_c8_dtype_downcast_names_the_flag() {
     let v = verify_finding(&targets[idx].run, f, &device).unwrap();
     assert!(v.same_sign, "static {} vs measured {}", v.est_wasted_j, v.measured_delta_j);
     assert!(v.measured_delta_j > 0.0, "fix must save energy, got {}", v.measured_delta_j);
+}
+
+/// The joint interaction search must be bit-identical across worker
+/// counts: same diagnoses, same flag sets, same saving bit patterns,
+/// same search-effort counters.
+#[test]
+fn interaction_search_is_bit_deterministic_across_worker_counts() {
+    let device = DeviceSpec::h200_sim();
+    let targets = builtin_targets(7);
+    let cfg = InteractConfig::default();
+    let fp = |threads: usize| -> Vec<String> {
+        interact_suite(&targets, &device, threads, &cfg)
+            .iter()
+            .map(|r| {
+                let ds: Vec<String> = r
+                    .diagnoses
+                    .iter()
+                    .map(|d| {
+                        format!(
+                            "{:?}@{:?}={:016x}:{}",
+                            d.assignment,
+                            d.nodes,
+                            d.joint_saved_j.to_bits(),
+                            d.label
+                        )
+                    })
+                    .collect();
+                format!(
+                    "{} v{} p{} e{} x{} {ds:?}",
+                    r.target,
+                    r.stats.visited,
+                    r.stats.pruned,
+                    r.stats.evaluated,
+                    r.stats.exhaustive
+                )
+            })
+            .collect()
+    };
+    let base = fp(1);
+    assert!(
+        base.iter().any(|s| s.contains("allow_tf32")),
+        "no interaction diagnoses on any builtin target: {base:?}"
+    );
+    for threads in [2, 4, 8] {
+        assert_eq!(base, fp(threads), "{threads} workers diverged");
+    }
+}
+
+/// Totality: every joint outcome the symbolic enumeration produces maps
+/// to a concrete dispatch path — `launch_for` under the outcome's env
+/// agrees with the enumerated choice index, and together the outcomes
+/// cover the routine's whole kernel-choice table.
+#[test]
+fn every_joint_outcome_maps_to_a_concrete_dispatch_path() {
+    use magneton::dispatch::Env;
+    let r = magneton::systems::imagegen::joint_matmul_routine();
+    let outcomes = r.enumerate_outcomes();
+    // 2 flags x {unset, tested literal} = 4 joint outcomes, one per path
+    assert_eq!(outcomes.len(), 4, "{outcomes:?}");
+    let mut hit = vec![false; r.choices.len()];
+    for o in &outcomes {
+        let mut env = Env::new();
+        for (k, v) in &o.assignment {
+            env.set(k, v);
+        }
+        let idx = r.launch_for(&env);
+        assert_eq!(idx, o.choice_idx, "assignment {:?}", o.assignment);
+        assert!(idx < r.choices.len(), "outcome escaped the choice table");
+        hit[idx] = true;
+    }
+    assert!(hit.iter().all(|&h| h), "some kernel choice is unreachable: {hit:?}");
+}
+
+/// Property: joint search dominates single-flag enumeration. On every
+/// builtin target the per-node joint optimum saves at least as much as
+/// all `dtype-downcast` findings combined — the joint space contains
+/// every single flip under the same energy+time gate — and on the
+/// engineered joint target it saves strictly more.
+#[test]
+fn joint_search_savings_dominate_single_flag_findings_on_every_target() {
+    use magneton::analysis::interact::search_node;
+    use magneton::analysis::LintContext;
+    let device = DeviceSpec::h200_sim();
+    let targets = builtin_targets(7);
+    let report = lint_suite(&targets, &device, 2);
+    let cfg = InteractConfig::default();
+    let mut joint_beat_single_somewhere = false;
+    for t in &targets {
+        let cx = LintContext::new(&t.run.prog, &t.run.dispatcher, &t.run.env, &device).unwrap();
+        let joint_total: f64 = cx
+            .graph
+            .nodes
+            .iter()
+            .filter_map(|n| search_node(&cx, n.id, &cfg))
+            .filter_map(|s| s.hit.map(|h| h.saved_j))
+            .sum();
+        let single_total: f64 = report
+            .targets
+            .iter()
+            .find(|r| r.name == t.name)
+            .unwrap()
+            .findings
+            .iter()
+            .filter(|f| f.rule == "dtype-downcast")
+            .map(|f| f.est_wasted_j)
+            .sum();
+        assert!(
+            joint_total >= single_total - 1e-12,
+            "{}: joint {joint_total} < single {single_total}",
+            t.name
+        );
+        if joint_total > single_total + 1e-12 {
+            joint_beat_single_somewhere = true;
+        }
+    }
+    assert!(joint_beat_single_somewhere, "joint search never beat single-flag enumeration");
+}
+
+/// Acceptance: on `case-c8-joint` the search reports a 1-minimal flag
+/// set of two flags whose joint saving no single-flag flip can reach —
+/// tf32 alone blows the time budget, the layout flag alone costs energy
+/// — and the joint SetAttr rewrite sign-confirms under the measured
+/// A/B.
+#[test]
+fn verify_confirms_joint_c8_interaction_end_to_end() {
+    let device = DeviceSpec::h200_sim();
+    let targets = builtin_targets(7);
+    let report = lint_suite(&targets, &device, 1);
+    let plain = report.targets.iter().find(|r| r.name == "case-c8-joint").unwrap();
+    assert!(
+        plain.findings.iter().all(|f| f.rule != "dtype-downcast"),
+        "single-flag enumeration must not reach the joint saving: {:?}",
+        plain.findings
+    );
+    let t = targets.iter().find(|t| t.name == "case-c8-joint").unwrap();
+    let ir = interact_target(t, &device, &InteractConfig::default()).unwrap();
+    assert_eq!(ir.diagnoses.len(), 1, "{:?}", ir.diagnoses);
+    let d = &ir.diagnoses[0];
+    assert_eq!(d.assignment.len(), 2, "1-minimal set must keep both flags: {:?}", d.assignment);
+    assert!(d.assignment.iter().any(|(k, _)| k == "allow_tf32"), "{:?}", d.assignment);
+    assert!(d.assignment.iter().any(|(k, _)| k == "channels_last"), "{:?}", d.assignment);
+    assert!(d.label.contains("resnet.conv1"), "biggest saver should lead: {}", d.label);
+    assert!(d.joint_saved_j > 0.0);
+    let best_single = plain
+        .findings
+        .iter()
+        .filter(|f| f.rule == "dtype-downcast")
+        .map(|f| f.est_wasted_j)
+        .fold(0.0f64, f64::max);
+    assert!(
+        d.joint_saved_j > best_single,
+        "joint {} must strictly beat best single-flag finding {best_single}",
+        d.joint_saved_j
+    );
+    // the marginal breakdown explains *why* the set is minimal
+    let tf = d.marginals.iter().find(|m| m.flag == "allow_tf32").unwrap();
+    assert!(!tf.time_ok, "tf32 alone must blow the time budget");
+    let cl = d.marginals.iter().find(|m| m.flag == "channels_last").unwrap();
+    assert!(cl.time_ok && cl.saved_j < 0.0, "layout alone must cost energy: {}", cl.saved_j);
+    // end to end: the finding's joint SetAttr steps A/B-measure with the
+    // same sign as the static estimate
+    let f = ir.findings().into_iter().find(|f| !f.steps.is_empty()).unwrap();
+    assert_eq!(f.rule, "interaction");
+    let v = verify_finding(&t.run, &f, &device).unwrap();
+    assert!(v.same_sign, "static {} vs measured {}", v.est_wasted_j, v.measured_delta_j);
+    assert!(v.measured_delta_j > 0.0, "joint flip must save energy, got {}", v.measured_delta_j);
+    assert!(v.energy_after_j < v.energy_before_j);
+}
+
+/// Regression (manifest partitioning): tagged pseudo-target entries are
+/// gated strictly per enabled layer — `interact~` entries used to slip
+/// through the old `diff~`-only filter and fail plain-run gating.
+#[test]
+fn manifest_gating_partitions_tagged_pseudo_targets() {
+    let text = "case-c2 redundant-copy kv_k_copy\n\
+                diff~a~b static-diff conv\n\
+                interact~case-c8-joint interaction resnet.conv1\n";
+    let all = parse_manifest(text).unwrap();
+    assert_eq!(all.len(), 3);
+    let plain = gate_manifest(all.clone(), &[("diff~", false), ("interact~", false)]);
+    assert_eq!(plain.len(), 1, "{plain:?}");
+    assert_eq!(plain[0].target, "case-c2");
+    let diff_only = gate_manifest(all.clone(), &[("diff~", true), ("interact~", false)]);
+    assert_eq!(diff_only.len(), 2, "{diff_only:?}");
+    assert!(diff_only.iter().all(|e| !e.target.starts_with("interact~")));
+    let both = gate_manifest(all, &[("diff~", true), ("interact~", true)]);
+    assert_eq!(both.len(), 3);
+    // the committed manifest, gated for a plain run, must pass against a
+    // plain report — interact~/diff~ entries must not leak into it
+    let committed = parse_manifest(include_str!("lint_manifest.txt")).unwrap();
+    let gated = gate_manifest(committed, &[("diff~", false), ("interact~", false)]);
+    assert!(gated.iter().all(|e| !e.target.contains('~')), "{gated:?}");
+    let unmet = check_manifest(&suite(2), &gated);
+    assert!(unmet.is_empty(), "plain-gated manifest unmet: {unmet:?}");
+}
+
+/// `lint --json` output round-trips through the telemetry JSON parser
+/// with lossless floats — every energy figure comes back bit-identical
+/// — and carries the interaction diagnoses alongside the findings.
+#[test]
+fn lint_json_report_round_trips_losslessly() {
+    use magneton::report::lint_report_json;
+    use magneton::telemetry::json::Json;
+    let device = DeviceSpec::h200_sim();
+    let targets = builtin_targets(7);
+    let mut rep = lint_suite(&targets, &device, 2);
+    for ir in interact_suite(&targets, &device, 2, &InteractConfig::default()) {
+        rep.targets.push(ir.to_target_report());
+    }
+    rep.total_findings = rep.targets.iter().map(|t| t.findings.len()).sum();
+    rep.total_est_wasted_j =
+        rep.targets.iter().flat_map(|t| &t.findings).map(|f| f.est_wasted_j).sum();
+    let text = lint_report_json(&rep).render();
+    let back = Json::parse(&text).unwrap();
+    let tjs = back.get("targets").unwrap().as_arr().unwrap();
+    assert_eq!(tjs.len(), rep.targets.len());
+    for (t, tj) in rep.targets.iter().zip(tjs) {
+        assert_eq!(tj.get("name").unwrap().as_str(), Some(t.name.as_str()));
+        assert_eq!(
+            tj.get("static_j").unwrap().as_f64().unwrap().to_bits(),
+            t.static_j.to_bits(),
+            "{}: static_j drifted through JSON",
+            t.name
+        );
+        let fjs = tj.get("findings").unwrap().as_arr().unwrap();
+        assert_eq!(fjs.len(), t.findings.len());
+        for (f, fj) in t.findings.iter().zip(fjs) {
+            let est = fj.get("est_wasted_j").unwrap().as_f64().unwrap();
+            assert_eq!(est.to_bits(), f.est_wasted_j.to_bits(), "{}", f.label);
+        }
+        let ijs = tj.get("interactions").unwrap().as_arr().unwrap();
+        assert_eq!(ijs.len(), t.interactions.len());
+        for (d, dj) in t.interactions.iter().zip(ijs) {
+            let j = dj.get("joint_saved_j").unwrap().as_f64().unwrap();
+            assert_eq!(j.to_bits(), d.joint_saved_j.to_bits(), "{}", d.label);
+        }
+    }
+    let total = back.get("total_est_wasted_j").unwrap().as_f64().unwrap();
+    assert_eq!(total.to_bits(), rep.total_est_wasted_j.to_bits());
+    // the interact pseudo-target made it through with its flag set
+    assert!(text.contains("interact~case-c8-joint"), "json missing interact pseudo-target");
+    assert!(text.contains("allow_tf32"), "json missing the joint flag set");
 }
 
 /// The fixture's duplicated branch carries a full mechanical rewrite
