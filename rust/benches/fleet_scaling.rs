@@ -1,6 +1,9 @@
 //! Fleet-scaling bench: (1) candidate-index equivalent-tensor matching
-//! vs the all-pairs scan on growing graph sizes, and (2) a concurrent
-//! `FleetAudit` of many system pairs over the bounded worker pool.
+//! vs the all-pairs scan on growing graph sizes, (2) a concurrent
+//! `FleetAudit` of many system pairs over the bounded worker pool, and
+//! (3) sharded multi-process ingest — `merge_shards` wall time vs
+//! shard count, gated on the merged ranking being bit-identical to the
+//! single-process run.
 //!
 //! The indexed path buckets fingerprints on `(numel, quantized
 //! Frobenius band)` so each query touches a small candidate set; both
@@ -8,20 +11,26 @@
 //! test in `matching::tests`), and on graphs ≥ 200 nodes the index
 //! must beat the all-pairs wall time.
 
+use std::path::{Path, PathBuf};
+
 use magneton::cases;
-use magneton::coordinator::fleet::FleetAudit;
-use magneton::coordinator::Magneton;
+use magneton::coordinator::fleet::{FleetAudit, StreamFleet};
+use magneton::coordinator::{Magneton, SysRun};
+use magneton::dispatch::Env;
 use magneton::energy::DeviceSpec;
 use magneton::fingerprint::RustMomentEngine;
 use magneton::matching::{fingerprint_run, pairs_from_fingerprints, MatchOptions};
 use magneton::report;
 use magneton::systems::llm;
 use magneton::systems::SystemId;
+use magneton::telemetry::merge::{merge_shards, MergeConfig};
+use magneton::telemetry::{Replay, SinkConfig};
 use magneton::util::bench::{banner, persist, persist_json, time_once};
 use magneton::util::json::Json;
 use magneton::util::pool;
 use magneton::util::table::{fmt_us, Table};
 use magneton::util::Prng;
+use magneton::workload::{serving_dispatcher, serving_stream_program, ServingStream};
 
 /// Best-of-3 wall time of one pair-discovery strategy, µs.
 fn best_of_3(
@@ -139,7 +148,74 @@ fn main() {
     println!("{part2}");
     println!("fleet wall time: {} over {} workers", fmt_us(fleet_us), fleet_report.workers);
 
-    persist("fleet_scaling", &format!("{part1}\n{part2}"), Some(&csv));
+    // --- part 3: sharded ingest merge vs shard count ---------------------
+    // One 8-pair streaming fleet persisted unsharded (the reference),
+    // then re-produced as 1/2/4/8 producer shards and merged. The merge
+    // is only worth timing if it is *correct*: every row asserts the
+    // merged ranking reproduces the single-process ranking bit-for-bit.
+    let base =
+        std::env::temp_dir().join(format!("magneton-bench-merge-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    let total_pairs = 8usize;
+    let requests = 20usize;
+    let unsharded = base.join("unsharded");
+    shard_slice(&unsharded, 0, total_pairs, None, requests);
+    let reference = Replay::load(&unsharded).expect("unsharded replay");
+    let ref_ranking = reference.rankings.last().expect("persisted ranking");
+
+    let mut t3 = Table::new(vec!["shards", "snapshots", "merge", "bit-identical"]);
+    let mut merge_rows: Vec<Json> = Vec::new();
+    for count in [1usize, 2, 4, 8] {
+        let per_shard = total_pairs.div_ceil(count);
+        let dirs: Vec<PathBuf> = (0..count)
+            .map(|idx| {
+                let dir = base.join(format!("m{count}-s{idx}"));
+                let (lo, hi) =
+                    ((idx * per_shard).min(total_pairs), ((idx + 1) * per_shard).min(total_pairs));
+                shard_slice(&dir, lo, hi, Some((idx, count)), requests);
+                dir
+            })
+            .collect();
+        let cfg = MergeConfig { correlate_window_ops: 40, correlate_min: 2, allow_partial: false };
+        let mut best = f64::INFINITY;
+        let mut merged = None;
+        for _ in 0..3 {
+            let (m, us) = time_once(|| merge_shards(&dirs, &cfg).expect("merge"));
+            best = best.min(us);
+            merged = Some(m);
+        }
+        let merged = merged.unwrap();
+        assert_eq!(merged.ranking.len(), ref_ranking.len(), "{count} shards");
+        for (got, want) in merged.ranking.iter().zip(ref_ranking.iter()) {
+            assert_eq!(got.name, want.name, "{count} shards");
+            assert_eq!(
+                got.wasted_j.to_bits(),
+                want.wasted_j.to_bits(),
+                "{count} shards: {} not bit-identical to the single-process run",
+                got.name
+            );
+        }
+        let snapshots: usize = merged.shards.iter().map(|s| s.snapshots).sum();
+        t3.row(vec![
+            count.to_string(),
+            snapshots.to_string(),
+            fmt_us(best),
+            "yes".to_string(),
+        ]);
+        merge_rows.push(
+            Json::obj()
+                .field("shards", count)
+                .field("snapshots", snapshots)
+                .field("merge_us", best)
+                .field("pairs", total_pairs)
+                .build(),
+        );
+    }
+    let part3 = t3.render();
+    println!("{part3}");
+    let _ = std::fs::remove_dir_all(&base);
+
+    persist("fleet_scaling", &format!("{part1}\n{part2}\n{part3}"), Some(&csv));
     persist_json(
         "BENCH_fleet_scaling",
         &Json::obj()
@@ -149,6 +225,43 @@ fn main() {
             .field("workers", fleet_report.workers)
             .field("total_wasted_j", fleet_report.total_wasted_j)
             .field("total_findings", fleet_report.total_findings)
+            .field("merge", merge_rows)
             .build(),
     );
+}
+
+/// Persist the fleet slice `[lo, hi)` of an 8-pair serving fleet into
+/// `dir` — unsharded reference (`shard: None`) or one producer shard,
+/// mirroring `magneton stream --shard` (fleet-global pair indices and
+/// seeds, never-rotating sinks).
+fn shard_slice(dir: &Path, lo: usize, hi: usize, shard: Option<(usize, usize)>, requests: usize) {
+    let seed = 0xbe2c;
+    let mut fleet = StreamFleet::new(DeviceSpec::h200_sim());
+    fleet.workers = 2;
+    fleet.cfg.window_ops = 40;
+    fleet.cfg.hop_ops = 40;
+    fleet.cfg.ring_cap = 64;
+    fleet.snapshot_dir = Some(dir.to_path_buf());
+    fleet.session_id = Some("bench-merge".to_string());
+    fleet.deploy_tag = "bench".into();
+    fleet.sink_cfg = SinkConfig { max_snapshot_bytes: 0, rotate_bytes: 0 };
+    if let Some((idx, count)) = shard {
+        fleet.pair_index_base = lo;
+        fleet.shard_id = format!("host-{idx}");
+        fleet.shard_index = idx;
+        fleet.shard_count = count;
+    }
+    let spec = ServingStream { requests, batch: 64, d_model: 128 };
+    for i in lo..hi {
+        let eff = if i % 2 == 0 { 0.6 } else { 1.0 };
+        let mut ra = Prng::new(seed + 1 + i as u64);
+        let mut rb = Prng::new(seed + 1 + i as u64);
+        fleet.add_pair(
+            &format!("serving-{i}"),
+            SysRun::new("sys-a", serving_dispatcher(eff), Env::new(), serving_stream_program(&mut ra, &spec)),
+            SysRun::new("sys-b", serving_dispatcher(1.0), Env::new(), serving_stream_program(&mut rb, &spec)),
+        );
+    }
+    let r = fleet.run();
+    assert_eq!(r.snapshot_errors, 0, "bench shard snapshot writes must succeed");
 }

@@ -373,6 +373,20 @@ pub struct StreamFleet {
     pub session_id: Option<String>,
     /// Free-form deploy tag carried alongside `session_id`.
     pub deploy_tag: String,
+    /// Fleet-global index of this process's first pair. A producer
+    /// shard auditing pairs `[base, base+n)` of a larger fleet sets
+    /// this so its snapshot file prefixes (`pair-<global idx>-<name>`)
+    /// interleave with the other shards' under the same total order an
+    /// unsharded run would have written — the property that makes
+    /// `magneton merge` output bit-identical to a single-process run.
+    pub pair_index_base: usize,
+    /// Shard identity stamped into every session header (with
+    /// `session_id` set): operator-chosen shard name, zero-based shard
+    /// index, and total shard count. The defaults (`""`, 0, 1) mean
+    /// "unsharded".
+    pub shard_id: String,
+    pub shard_index: usize,
+    pub shard_count: usize,
     pairs: Vec<FleetPair>,
 }
 
@@ -394,6 +408,10 @@ impl StreamFleet {
             sink_cfg: SinkConfig::default(),
             session_id: None,
             deploy_tag: String::new(),
+            pair_index_base: 0,
+            shard_id: String::new(),
+            shard_index: 0,
+            shard_count: 1,
             pairs: Vec::new(),
         }
     }
@@ -437,8 +455,11 @@ impl StreamFleet {
                 // when two (unique) pair names sanitize to the same
                 // filename stem ("svc.a" vs "svc a") — otherwise their
                 // concurrent sinks would interleave appends and delete
-                // each other's files during rotation
-                let prefix = format!("pair-{idx:03}-{}", p.name);
+                // each other's files during rotation. The index is
+                // fleet-*global* (base + local) so sharded producers'
+                // series interleave into the unsharded file order at
+                // merge time.
+                let prefix = format!("pair-{:03}-{}", self.pair_index_base + idx, p.name);
                 match SnapshotSink::new(dir.clone(), &prefix, self.sink_cfg.clone()) {
                     Ok(sink) => {
                         // the session header (workload fingerprint of
@@ -447,14 +468,17 @@ impl StreamFleet {
                         // deploys of the same workload (magneton diff)
                         if let Some(id) = &self.session_id {
                             let sig = workload_sig_of_program(&p.a.prog);
-                            aud.set_session_header(SessionHeader::new(
-                                id,
-                                &self.deploy_tag,
-                                &p.name,
-                                &sig,
-                                &self.arrival.describe(),
-                                self.cfg.digest(),
-                            ));
+                            aud.set_session_header(
+                                SessionHeader::new(
+                                    id,
+                                    &self.deploy_tag,
+                                    &p.name,
+                                    &sig,
+                                    &self.arrival.describe(),
+                                    self.cfg.digest(),
+                                )
+                                .with_shard(&self.shard_id, self.shard_index, self.shard_count),
+                            );
                         }
                         aud.set_sink(&p.name, sink)
                     }

@@ -9,7 +9,9 @@
 //! magneton artifacts [--dir artifacts]# list loadable PJRT artifacts
 //! magneton stream [--requests 500 --arrival poisson|bursty|steady]
 //!                 [--snapshot-dir d]  # online serving-stream audit
+//!                 [--shard k/M --shard-id host] # one producer shard
 //! magneton replay --dir <d>           # re-render persisted snapshots
+//! magneton merge <shard dirs...> [--out d] # combine producer shards
 //! ```
 //!
 //! Commands exit non-zero on failure (a missing snapshot/artifact
@@ -30,8 +32,8 @@ use magneton::util::Prng;
 /// Subcommand names, reserved at parse time so a bare flag never
 /// swallows one as its value (`magneton --verbose cases`).
 const SUBCOMMANDS: &[&str] = &[
-    "cases", "fleet", "ddp", "breakdown", "accuracy", "artifacts", "stream", "replay", "diff",
-    "lint", "help",
+    "cases", "fleet", "ddp", "breakdown", "accuracy", "artifacts", "stream", "replay", "merge",
+    "diff", "lint", "help",
 ];
 
 fn main() -> ExitCode {
@@ -61,6 +63,7 @@ fn main() -> ExitCode {
         "artifacts" => cmd_artifacts(&args),
         "stream" => cmd_stream(&args),
         "replay" => cmd_replay(&args),
+        "merge" => cmd_merge(&args),
         "diff" => cmd_diff(&args),
         "lint" => cmd_lint(&args),
         "help" => {
@@ -101,6 +104,12 @@ fn print_help() {
          \x20 replay     reload a snapshot directory (--dir <d>) offline:\n\
          \x20            re-render windows, per-pair summaries, fleet ranking and\n\
          \x20            divergence events, and verify the ranking bit-for-bit\n\
+         \x20 merge      combine producer-shard snapshot directories (written by\n\
+         \x20            `stream --shard k/M`) into one logical session: refuses\n\
+         \x20            mixed sessions/configs and duplicate shards, re-ranks the\n\
+         \x20            fleet and re-correlates divergences fleet-wide, renders\n\
+         \x20            the merged report (bit-identical to an unsharded run),\n\
+         \x20            and --out <d> persists it as an ordinary snapshot dir\n\
          \x20 diff       cross-session differential replay: match two persisted\n\
          \x20            sessions (--dir-a/--dir-b) by workload fingerprint, align\n\
          \x20            their windows, and rank per-label energy regressions;\n\
@@ -128,7 +137,11 @@ fn print_help() {
          \x20        --chunk <events=64> --queue <chunks=4> --max-emitted <n=64>\n\
          \x20        --eff <0..1=0.62> --pairs <fleet pairs=3> --snapshot-dir <dir>\n\
          \x20        --session-id <id=stream> --deploy-tag <tag>\n\
+         \x20        --shard <k/M> --shard-id <name=shard-k>  (audit only this\n\
+         \x20        shard's slice of the fleet; requires --snapshot-dir)\n\
          REPLAY:  --dir <dir=snapshots> --windows <n=12> --no-ranking-ok\n\
+         MERGE:   <shard dirs...> or --dir <a,b,c> --out <dir> --windows <n=12>\n\
+         \x20        --window <correlate ops=256> --min-pairs <n=2> --partial-ok\n\
          DIFF:    --dir-a <dir> --dir-b <dir> --regress-threshold <frac=0.05>\n\
          \x20        --threshold <frac=0.10> --tolerant --min-overlap <frac=0.8>\n\
          LINT:    --target <name substr> --only <rule> --deny <info|warn|error=error>\n\
@@ -311,6 +324,33 @@ fn cmd_stream(args: &Args) -> magneton::Result<()> {
     // free-form, stamped into every sink's SessionHeader
     let session_id = args.get("session-id", "stream").to_string();
     let deploy_tag = args.get("deploy-tag", "").to_string();
+    // producer-shard mode: `--shard k/M` audits only this process's
+    // slice of the fleet pairs; `magneton merge` recombines the shard
+    // directories into the unsharded session bit-for-bit
+    let shard = match args.options.get("shard") {
+        Some(spec) => {
+            let parsed = spec.split_once('/').and_then(|(k, m)| {
+                let k: usize = k.trim().parse().ok()?;
+                let m: usize = m.trim().parse().ok()?;
+                (k >= 1 && k <= m).then_some((k - 1, m))
+            });
+            match parsed {
+                Some(p) => Some(p),
+                None => {
+                    return Err(magneton::Error::msg(format!(
+                        "bad --shard `{spec}`: expected k/M with 1 <= k <= M (e.g. --shard 2/4)"
+                    )))
+                }
+            }
+        }
+        None => None,
+    };
+    if shard.is_some() && snapshot_dir.is_none() {
+        return Err(magneton::Error::msg(
+            "--shard requires --snapshot-dir: a producer shard exists to persist its slice \
+             for `magneton merge`",
+        ));
+    }
 
     println!(
         "magneton stream: {} requests ({} kernel ops/side), {:?} arrivals,\n\
@@ -324,83 +364,114 @@ fn cmd_stream(args: &Args) -> magneton::Result<()> {
         queue
     );
 
-    let spawn_side = |side_eff: f64| -> (mpsc::Receiver<Vec<(KernelRecord, Segment)>>, thread::JoinHandle<()>) {
-        let (tx, rx) = mpsc::sync_channel::<Vec<(KernelRecord, Segment)>>(queue);
-        let dev = device.clone();
-        let handle = thread::spawn(move || {
-            let mut rng = Prng::new(seed);
-            let prog = serving_stream_program(&mut rng, &spec);
-            let mut exec = Executor::new(dev, serving_dispatcher(side_eff), Env::new());
-            exec.opts.content_sketch = true;
-            let stream = exec.stream(&prog);
-            let mut chunk = Vec::with_capacity(chunk_len);
-            for ev in stream {
-                chunk.push(ev);
-                if chunk.len() == chunk_len {
-                    if tx.send(std::mem::take(&mut chunk)).is_err() {
-                        return; // consumer hung up
-                    }
-                    chunk.reserve(chunk_len);
-                }
-            }
-            if !chunk.is_empty() {
-                let _ = tx.send(chunk);
-            }
-        });
-        (rx, handle)
-    };
-    let (rx_a, handle_a) = spawn_side(eff);
-    let (rx_b, handle_b) = spawn_side(1.0);
-
-    // the consumer: the one shared pairing protocol, fed by iterators
-    // that drain the chunked channels (recv blocks = backpressure)
-    let mut aud = StreamAuditor::new(cfg.clone(), device.idle_w);
-    let pair_name = "inefficient-vs-optimal";
-    if let Some(dir) = &snapshot_dir {
-        let sink = SnapshotSink::new(dir.clone(), "pair-inefficient-vs-optimal", SinkConfig::default())
-            .map_err(|e| e.context("snapshot sink"))?;
-        // the session header is computed statically from the program
-        // the producers will execute, so it lands first in the series
-        let mut sig_rng = Prng::new(seed);
-        let sig = workload_sig_of_program(&serving_stream_program(&mut sig_rng, &spec));
-        aud.set_session_header(SessionHeader::new(
-            &session_id,
-            &deploy_tag,
-            pair_name,
-            &sig,
-            &arrival.describe(),
-            cfg.digest(),
-        ));
-        aud.set_sink(pair_name, sink);
-    }
-    let mut arrival_rng = Prng::new(seed ^ 0xa441_b815);
     let ops_per_request = spec.ops_per_request();
-    let summary = drive_pair_with_arrivals(
-        &mut aud,
-        rx_a.into_iter().flatten(),
-        rx_b.into_iter().flatten(),
-        arrival,
-        ops_per_request,
-        &mut arrival_rng,
-        |w| println!("{}", report::render_window(&w)),
-    );
-    handle_a.join().expect("producer A panicked");
-    handle_b.join().expect("producer B panicked");
-    // remembered and failed at the end (after the reports render), so a
-    // full disk cannot silently produce a truncated snapshot directory
-    let pair_sink_errors = aud.sink_errors();
-    if pair_sink_errors > 0 {
-        eprintln!("warning: {pair_sink_errors} snapshot writes failed");
-    }
-    if let (Some(wa), Some(wb)) = (aud.nvml_reading_a(), aud.nvml_reading_b()) {
-        println!("\nlive NVML counters: A {wa:.0} W, B {wb:.0} W (arrival lulls read through the rings)");
-    }
-    println!();
-    print!("{}", report::render_stream(pair_name, &summary));
+    // The single-pair channel stage runs only unsharded: it audits one
+    // process-local pair, so M shard invocations would persist M copies
+    // of it and the merged directory could never match an unsharded
+    // run. Sharded producers write exactly their fleet slice — an
+    // unsharded reference for merge comparisons is `--shard 1/1`.
+    let pair_sink_errors = if shard.is_some() {
+        0
+    } else {
+        let spawn_side = |side_eff: f64| -> (mpsc::Receiver<Vec<(KernelRecord, Segment)>>, thread::JoinHandle<()>) {
+            let (tx, rx) = mpsc::sync_channel::<Vec<(KernelRecord, Segment)>>(queue);
+            let dev = device.clone();
+            let handle = thread::spawn(move || {
+                let mut rng = Prng::new(seed);
+                let prog = serving_stream_program(&mut rng, &spec);
+                let mut exec = Executor::new(dev, serving_dispatcher(side_eff), Env::new());
+                exec.opts.content_sketch = true;
+                let stream = exec.stream(&prog);
+                let mut chunk = Vec::with_capacity(chunk_len);
+                for ev in stream {
+                    chunk.push(ev);
+                    if chunk.len() == chunk_len {
+                        if tx.send(std::mem::take(&mut chunk)).is_err() {
+                            return; // consumer hung up
+                        }
+                        chunk.reserve(chunk_len);
+                    }
+                }
+                if !chunk.is_empty() {
+                    let _ = tx.send(chunk);
+                }
+            });
+            (rx, handle)
+        };
+        let (rx_a, handle_a) = spawn_side(eff);
+        let (rx_b, handle_b) = spawn_side(1.0);
+
+        // the consumer: the one shared pairing protocol, fed by iterators
+        // that drain the chunked channels (recv blocks = backpressure)
+        let mut aud = StreamAuditor::new(cfg.clone(), device.idle_w);
+        let pair_name = "inefficient-vs-optimal";
+        if let Some(dir) = &snapshot_dir {
+            let sink = SnapshotSink::new(dir.clone(), "pair-inefficient-vs-optimal", SinkConfig::default())
+                .map_err(|e| e.context("snapshot sink"))?;
+            // the session header is computed statically from the program
+            // the producers will execute, so it lands first in the series
+            let mut sig_rng = Prng::new(seed);
+            let sig = workload_sig_of_program(&serving_stream_program(&mut sig_rng, &spec));
+            aud.set_session_header(SessionHeader::new(
+                &session_id,
+                &deploy_tag,
+                pair_name,
+                &sig,
+                &arrival.describe(),
+                cfg.digest(),
+            ));
+            aud.set_sink(pair_name, sink);
+        }
+        let mut arrival_rng = Prng::new(seed ^ 0xa441_b815);
+        let summary = drive_pair_with_arrivals(
+            &mut aud,
+            rx_a.into_iter().flatten(),
+            rx_b.into_iter().flatten(),
+            arrival,
+            ops_per_request,
+            &mut arrival_rng,
+            |w| println!("{}", report::render_window(&w)),
+        );
+        handle_a.join().expect("producer A panicked");
+        handle_b.join().expect("producer B panicked");
+        // remembered and failed at the end (after the reports render), so a
+        // full disk cannot silently produce a truncated snapshot directory
+        let pair_sink_errors = aud.sink_errors();
+        if pair_sink_errors > 0 {
+            eprintln!("warning: {pair_sink_errors} snapshot writes failed");
+        }
+        if let (Some(wa), Some(wb)) = (aud.nvml_reading_a(), aud.nvml_reading_b()) {
+            println!("\nlive NVML counters: A {wa:.0} W, B {wb:.0} W (arrival lulls read through the rings)");
+        }
+        println!();
+        print!("{}", report::render_stream(pair_name, &summary));
+        pair_sink_errors
+    };
 
     // final stage: a streaming fleet over N concurrent serving pairs
-    // under the same arrival process
+    // under the same arrival process (sharded: this shard's slice of
+    // the same fleet, under fleet-global pair indices and seeds)
     let fleet_pairs: usize = args.get_parse("pairs", 3usize);
+    let (pair_lo, pair_hi) = match shard {
+        Some((idx, count)) => {
+            let per_shard = fleet_pairs.div_ceil(count);
+            ((idx * per_shard).min(fleet_pairs), ((idx + 1) * per_shard).min(fleet_pairs))
+        }
+        None => (0, fleet_pairs),
+    };
+    if let Some((idx, count)) = shard {
+        // an empty slice would persist a directory with no session
+        // header, which `magneton merge` rightly refuses — fail the
+        // producer up front instead
+        if pair_lo >= pair_hi {
+            return Err(magneton::Error::msg(format!(
+                "--shard {}/{} has no pairs to audit: the fleet has only {fleet_pairs} pairs \
+                 (raise --pairs or lower the shard count)",
+                idx + 1,
+                count
+            )));
+        }
+    }
     let mut fleet = StreamFleet::new(device);
     fleet.cfg = cfg;
     fleet.arrival = arrival;
@@ -409,8 +480,17 @@ fn cmd_stream(args: &Args) -> magneton::Result<()> {
     fleet.snapshot_dir = snapshot_dir.clone();
     fleet.session_id = snapshot_dir.as_ref().map(|_| session_id.clone());
     fleet.deploy_tag = deploy_tag.clone();
+    if let Some((idx, count)) = shard {
+        fleet.pair_index_base = pair_lo;
+        fleet.shard_index = idx;
+        fleet.shard_count = count;
+        fleet.shard_id = match args.options.get("shard-id") {
+            Some(id) => id.clone(),
+            None => format!("shard-{}", idx + 1),
+        };
+    }
     let fleet_spec = ServingStream { requests: (requests / 5).max(20), ..spec };
-    for i in 0..fleet_pairs {
+    for i in pair_lo..pair_hi {
         let pair_eff = if i % 2 == 0 { eff } else { 1.0 };
         let mut ra = Prng::new(seed + 1 + i as u64);
         let mut rb = Prng::new(seed + 1 + i as u64);
@@ -420,13 +500,28 @@ fn cmd_stream(args: &Args) -> magneton::Result<()> {
             SysRun::new("sys-b", serving_dispatcher(1.0), Env::new(), serving_stream_program(&mut rb, &fleet_spec)),
         );
     }
-    println!(
-        "\nstreaming fleet: {} pairs x {} ops under {:?} arrivals over {} workers...",
-        fleet.len(),
-        fleet_spec.kernel_ops(),
-        arrival,
-        fleet.workers
-    );
+    match shard {
+        Some((idx, count)) => println!(
+            "\nstreaming fleet shard {}/{} (`{}`): pairs {}..{} of {} x {} ops under {:?} \
+             arrivals over {} workers...",
+            idx + 1,
+            count,
+            fleet.shard_id,
+            pair_lo,
+            pair_hi,
+            fleet_pairs,
+            fleet_spec.kernel_ops(),
+            arrival,
+            fleet.workers
+        ),
+        None => println!(
+            "\nstreaming fleet: {} pairs x {} ops under {:?} arrivals over {} workers...",
+            fleet.len(),
+            fleet_spec.kernel_ops(),
+            arrival,
+            fleet.workers
+        ),
+    }
     let r = fleet.run();
     print!("{}", report::render_stream_fleet(&r));
     if pair_sink_errors + r.snapshot_errors > 0 {
@@ -465,6 +560,21 @@ fn cmd_replay(args: &Args) -> magneton::Result<()> {
         replay.rankings.len(),
         replay.divergences.len()
     );
+    if replay.windows.is_empty() && replay.summaries.is_empty() {
+        return Err(magneton::Error::msg(format!("no snapshots found under {}", dir.display())));
+    }
+    print_replay_body(&replay, args)
+}
+
+/// Shared rendering of a loaded [`Replay`](magneton::telemetry::Replay):
+/// session lines, persisted windows (elided to `--windows`), resyncs,
+/// per-pair summaries, divergence events, fleet rankings, the
+/// no-ranking gate, and the bit-for-bit verification gate. Both
+/// `magneton replay` and `magneton merge` print exactly one headline
+/// line (with a trailing blank line) before this body, so their
+/// outputs are byte-comparable from the second line on — the CI merge
+/// smoke relies on that to prove sharded == unsharded.
+fn print_replay_body(replay: &magneton::telemetry::Replay, args: &Args) -> magneton::Result<()> {
     for h in &replay.sessions {
         println!(
             "session {} [{}] scope {}: workload {:016x} ({} ops, {} arrivals)",
@@ -473,9 +583,6 @@ fn cmd_replay(args: &Args) -> magneton::Result<()> {
     }
     if !replay.sessions.is_empty() {
         println!();
-    }
-    if replay.windows.is_empty() && replay.summaries.is_empty() {
-        return Err(magneton::Error::msg(format!("no snapshots found under {}", dir.display())));
     }
     let max_windows: usize = args.get_parse("windows", 12usize);
     let skip = replay.windows.len().saturating_sub(max_windows);
@@ -526,6 +633,87 @@ fn cmd_replay(args: &Args) -> magneton::Result<()> {
             "persisted ranking does not reproduce the summaries: {e}"
         ))),
     }
+}
+
+/// Merge coordinator: load producer-shard snapshot directories by
+/// their session headers, refuse mixed sessions / config digests /
+/// overlapping pair scopes with reasoned diagnostics, recombine the
+/// shards into the unsharded session (bit-for-bit — see
+/// `telemetry::merge`), re-run fleet divergence correlation across all
+/// shards, render the merged report through the same body as
+/// `magneton replay`, and optionally persist the merged directory with
+/// `--out`.
+fn cmd_merge(args: &Args) -> magneton::Result<()> {
+    use magneton::telemetry::merge::{merge_shards, MergeConfig};
+    let mut dirs: Vec<PathBuf> = args.positional.iter().skip(1).map(PathBuf::from).collect();
+    if let Some(list) = args.options.get("dir") {
+        dirs.extend(list.split(',').map(str::trim).filter(|d| !d.is_empty()).map(PathBuf::from));
+    }
+    if dirs.is_empty() {
+        return Err(magneton::Error::msg(
+            "no shard directories given: pass them positionally (`magneton merge a/ b/`) or \
+             comma-separated via --dir a,b",
+        ));
+    }
+    let cfg = MergeConfig {
+        correlate_window_ops: args.get_parse("window", 256usize),
+        correlate_min: args.get_parse("min-pairs", 2usize),
+        allow_partial: args.flag("partial-ok"),
+    };
+    let merged = merge_shards(&dirs, &cfg)?;
+    // the shard inventory and damage accounting go to stderr so stdout
+    // stays byte-comparable with `magneton replay` of an unsharded run
+    for s in &merged.shards {
+        eprintln!(
+            "shard {}/{} `{}` ({}): {} pairs, {} snapshots in {} files{}{}",
+            s.shard_index + 1,
+            s.shard_count,
+            s.shard_id,
+            s.dir.display(),
+            s.pairs,
+            s.snapshots,
+            s.files,
+            if s.torn_fragments > 0 {
+                format!(", {} torn fragment(s) skipped", s.torn_fragments)
+            } else {
+                String::new()
+            },
+            if s.missing_rotations > 0 {
+                format!(", {} missing rotation file(s)", s.missing_rotations)
+            } else {
+                String::new()
+            },
+        );
+    }
+    if merged.torn_fragments + merged.missing_rotations > 0 {
+        eprintln!(
+            "warning: merged with damage: {} torn fragment(s), {} missing rotation file(s) — \
+             attribution for undamaged pairs is unaffected",
+            merged.torn_fragments, merged.missing_rotations
+        );
+    }
+    println!(
+        "merged {} shards of session {}: {} windows, {} resyncs, {} summaries, {} rankings, {} divergences\n",
+        merged.shards.len(),
+        merged.session_id,
+        merged.replay.windows.len(),
+        merged.replay.resyncs.len(),
+        merged.replay.summaries.len(),
+        merged.replay.rankings.len(),
+        merged.replay.divergences.len()
+    );
+    print_replay_body(&merged.replay, args)?;
+    if let Some(out) = args.options.get("out") {
+        let out = PathBuf::from(out);
+        let written = merged.persist(&out)?;
+        eprintln!(
+            "merged session persisted under {} ({written} snapshots) — replay with \
+             `magneton replay --dir {}`",
+            out.display(),
+            out.display()
+        );
+    }
+    Ok(())
 }
 
 /// Cross-session differential replay: load two persisted sessions,

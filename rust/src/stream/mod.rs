@@ -279,6 +279,24 @@ pub struct LabelLedger {
     pub time_b_us: f64,
 }
 
+impl LabelLedger {
+    /// Fold another ledger cell for the same label into this one —
+    /// the additive combine behind [`crate::telemetry::merge`]. Every
+    /// field is a plain sum, so the operation is commutative over
+    /// counts; callers wanting *bit-for-bit* reproducible float totals
+    /// must apply it in one canonical order (float addition is not
+    /// bitwise-associative), which is exactly what the merge's
+    /// pair-name-ordered fold does.
+    pub fn combine(&mut self, other: &LabelLedger) {
+        debug_assert_eq!(self.label, other.label, "combine is per-label");
+        self.ops += other.ops;
+        self.energy_a_j += other.energy_a_j;
+        self.energy_b_j += other.energy_b_j;
+        self.time_a_us += other.time_a_us;
+        self.time_b_us += other.time_b_us;
+    }
+}
+
 /// One matched op pair in the sliding window.
 #[derive(Clone, Debug)]
 struct PairCost {

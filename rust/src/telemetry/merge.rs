@@ -1,0 +1,667 @@
+//! Shard merging — the coordinator half of multi-process ingest.
+//!
+//! A production fleet is M hosts × N pairs, not one process holding
+//! one giant ring. Each producer runs `magneton stream --shard k/M
+//! --shard-id <name>` over its slice of the pair fleet and persists an
+//! ordinary snapshot series whose [`SessionHeader`] carries the shard
+//! identity (`shard_index`/`shard_count` plus the fleet-level
+//! `session_id`). This module is the merge coordinator: it loads the
+//! shard directories back by header, refuses mixed sessions with
+//! reasoned diagnostics (the [`crate::telemetry::session`] discipline),
+//! and combines the shards into one logical session that is
+//! **bit-for-bit identical** to what a single unsharded process would
+//! have persisted.
+//!
+//! The bit-identity contract rests on three properties:
+//!
+//! * **Partitioning** — every pair lives wholly inside one shard, and
+//!   each pair's snapshots are already deterministic in isolation
+//!   (name-hashed arrival RNGs make per-pair results independent of
+//!   worker count and submission order). Merging therefore never adds
+//!   floats: per-pair windows, summaries, and ledgers are copied
+//!   verbatim.
+//! * **Canonical interleave** — the combined file series is ordered by
+//!   [`file_order_key`], the same total order `magneton replay` applies
+//!   to a single directory. Producers stamp *fleet-global* pair indices
+//!   into their sink prefixes (`pair-<global idx>-<name>`), so the
+//!   interleaved order reproduces the unsharded directory's file order
+//!   exactly, for any shard count and any merge order.
+//! * **Canonical folds** — every aggregate that sums floats across
+//!   pairs (fleet ranking totals, the combined per-label ledger) is
+//!   folded in one fixed order (rank order, pair-name order). Float
+//!   addition is not bitwise-associative, so associativity is obtained
+//!   by *keeping per-pair granularity until a single canonical fold*,
+//!   never by folding shard-partials in arrival order.
+//!
+//! Per-shard fleet artifacts (`Fleet` rankings, `Divergence` events)
+//! are views over a partial fleet; the merge discards them and
+//! recomputes both fleet-wide — re-running
+//! [`correlate_divergences`] over the union of resync logs, which can
+//! coalesce simultaneous divergences that no single shard had enough
+//! pairs to see (the re-correlation caveat in DESIGN.md).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::fleet::{correlate_divergences, FleetDivergence, StreamFleetEntry};
+use crate::stream::LabelLedger;
+use crate::telemetry::{
+    file_order_key, scan_dir, RankEntry, Replay, SessionHeader, SinkConfig, Snapshot,
+    SnapshotSink,
+};
+use crate::{Error, Result};
+
+/// Knobs of a merge run.
+#[derive(Clone, Debug)]
+pub struct MergeConfig {
+    /// Correlation window (matched-op positions) for the fleet-wide
+    /// [`correlate_divergences`] re-run. To reproduce a stream run's
+    /// own correlation bit-for-bit, pass the run's effective window
+    /// (its `--window` unless it set `correlate_window_ops`).
+    pub correlate_window_ops: usize,
+    /// Minimum distinct pairs per coalesced divergence.
+    pub correlate_min: usize,
+    /// Accept an incomplete shard set (holes in `0..shard_count`).
+    /// Attribution for the present shards stays exact; fleet totals
+    /// are lower bounds.
+    pub allow_partial: bool,
+}
+
+impl Default for MergeConfig {
+    fn default() -> MergeConfig {
+        MergeConfig { correlate_window_ops: 256, correlate_min: 2, allow_partial: false }
+    }
+}
+
+/// One shard directory as the merge saw it — identity plus damage
+/// counters, for the operator-facing inventory.
+#[derive(Clone, Debug)]
+pub struct ShardInfo {
+    pub dir: PathBuf,
+    pub shard_id: String,
+    pub shard_index: usize,
+    pub shard_count: usize,
+    /// Snapshot files scanned.
+    pub files: usize,
+    /// Snapshots loaded (complete lines only).
+    pub snapshots: usize,
+    /// Pair scopes (session headers) the shard persisted.
+    pub pairs: usize,
+    /// Files ending in a torn trailing fragment (producer killed
+    /// mid-append; the fragment is skipped, never fatal).
+    pub torn_fragments: usize,
+    /// Interior holes in rotation-index series (a file lost from the
+    /// *middle* of a sink's series — rotation only drops oldest files,
+    /// so interior holes are damage).
+    pub missing_rotations: usize,
+}
+
+/// The merged logical session: a [`Replay`] equivalent to loading the
+/// unsharded directory, plus the recomputed fleet-wide artifacts and
+/// the shard inventory.
+pub struct MergedSession {
+    pub session_id: String,
+    pub deploy_tag: String,
+    /// Shards in `shard_index` order, whatever order they were given.
+    pub shards: Vec<ShardInfo>,
+    /// The merged replay: interleaved windows/resyncs/summaries/ledgers,
+    /// normalized (unsharded) session headers, and the recomputed
+    /// ranking + divergences — shaped exactly like `Replay::load` of a
+    /// single-process directory.
+    pub replay: Replay,
+    /// Fleet entries (latest summary per pair), ranked most-wasteful
+    /// first under the exact `StreamFleet::run` comparator.
+    pub entries: Vec<StreamFleetEntry>,
+    /// The recomputed fleet ranking (mirrors `entries`).
+    pub ranking: Vec<RankEntry>,
+    /// Fleet-wide divergences re-correlated over the union of the
+    /// shards' resync logs.
+    pub divergences: Vec<FleetDivergence>,
+    /// Combined per-label ledger across all pairs, folded in canonical
+    /// (pair-name, then label) order — merge-order invariant.
+    pub fleet_ledger: Vec<LabelLedger>,
+    /// Waste and op totals summed in rank order (the same fold
+    /// `StreamFleet::run` performs).
+    pub total_wasted_j: f64,
+    pub total_ops: usize,
+    /// Damage totals across shards.
+    pub torn_fragments: usize,
+    pub missing_rotations: usize,
+    /// Per-sink-prefix series (normalized header + data snapshots) in
+    /// canonical file order, for [`MergedSession::persist`].
+    series: Vec<(String, Option<SessionHeader>, Vec<Snapshot>)>,
+}
+
+/// One scanned shard awaiting the cross-shard checks.
+struct ScannedShard {
+    dir: PathBuf,
+    scan: crate::telemetry::DirScan,
+    headers: Vec<SessionHeader>,
+}
+
+fn shard_label(h: &SessionHeader) -> String {
+    if h.shard_id.is_empty() {
+        format!("shard {}/{}", h.shard_index + 1, h.shard_count)
+    } else {
+        format!("shard `{}` ({}/{})", h.shard_id, h.shard_index + 1, h.shard_count)
+    }
+}
+
+/// Scan one shard directory and validate it in isolation: it must carry
+/// session headers, agree with itself on the session identity, and
+/// claim exactly one shard identity.
+fn scan_shard(dir: &Path) -> Result<ScannedShard> {
+    let scan = scan_dir(dir)?;
+    let mut headers: Vec<SessionHeader> = Vec::new();
+    for f in &scan.files {
+        for s in &f.snapshots {
+            if let Snapshot::Session { header } = s {
+                if !headers.contains(header) {
+                    headers.push(header.clone());
+                }
+            }
+        }
+    }
+    if headers.is_empty() {
+        return Err(Error::msg(format!(
+            "{}: no session header found — merge loads shards by header; re-run the producer \
+             with `--snapshot-dir` and `--session-id`",
+            dir.display()
+        )));
+    }
+    let first = headers[0].clone();
+    let mut scopes: BTreeMap<&str, &SessionHeader> = BTreeMap::new();
+    for h in &headers {
+        if let Some(prev) = scopes.insert(h.scope.as_str(), h) {
+            if *prev != *h {
+                return Err(Error::msg(format!(
+                    "{}: conflicting session headers for scope `{}` — the directory mixes more \
+                     than one session (use a fresh directory per shard run)",
+                    dir.display(),
+                    h.scope
+                )));
+            }
+        }
+        if h.session_id != first.session_id || h.deploy_tag != first.deploy_tag {
+            return Err(Error::msg(format!(
+                "{}: headers disagree on the session identity (`{}` vs `{}`)",
+                dir.display(),
+                first.session_id,
+                h.session_id
+            )));
+        }
+        if h.shard_id != first.shard_id
+            || h.shard_index != first.shard_index
+            || h.shard_count != first.shard_count
+        {
+            return Err(Error::msg(format!(
+                "{}: headers disagree on the shard identity ({} vs {}) — the directory mixes \
+                 the output of more than one producer shard",
+                dir.display(),
+                shard_label(&first),
+                shard_label(h)
+            )));
+        }
+    }
+    Ok(ScannedShard { dir: dir.to_path_buf(), scan, headers })
+}
+
+/// Load the shard directories, refuse anything that is not one
+/// consistent partition of one logical session, and merge.
+///
+/// Refusals (each a reasoned diagnostic naming the offending
+/// directories): missing headers, mixed `session_id`/`deploy_tag`,
+/// mixed `config_digest` or arrival processes (windows persisted under
+/// different configs are not position-comparable), mixed
+/// `shard_count`, duplicate shard indices or non-empty shard ids (the
+/// same shard given twice), pair scopes appearing in more than one
+/// shard (not a partition), and — unless
+/// [`MergeConfig::allow_partial`] — holes in the `0..shard_count`
+/// index set.
+pub fn merge_shards(dirs: &[PathBuf], cfg: &MergeConfig) -> Result<MergedSession> {
+    if dirs.is_empty() {
+        return Err(Error::msg("merge needs at least one shard directory"));
+    }
+    let mut shards: Vec<ScannedShard> = dirs
+        .iter()
+        .map(|d| scan_shard(d))
+        .collect::<Result<_>>()?;
+    // merge-order invariance starts here: whatever order the operator
+    // listed the directories, everything below sees shard-index order
+    shards.sort_by_key(|s| s.headers[0].shard_index);
+
+    // ---- cross-shard refusals ------------------------------------------
+    let anchor = shards[0].headers[0].clone();
+    let mut scope_owner: BTreeMap<String, usize> = BTreeMap::new();
+    for (i, s) in shards.iter().enumerate() {
+        let h = &s.headers[0];
+        if h.session_id != anchor.session_id || h.deploy_tag != anchor.deploy_tag {
+            return Err(Error::msg(format!(
+                "{} and {} are different sessions (`{}` [{}] vs `{}` [{}]) — merge combines \
+                 shards of one logical session; use `magneton diff` to compare sessions",
+                shards[0].dir.display(),
+                s.dir.display(),
+                anchor.session_id,
+                anchor.deploy_tag,
+                h.session_id,
+                h.deploy_tag
+            )));
+        }
+        if h.shard_count != anchor.shard_count {
+            return Err(Error::msg(format!(
+                "{} and {} disagree on the shard count ({} vs {}) — they come from different \
+                 fleet partitions",
+                shards[0].dir.display(),
+                s.dir.display(),
+                anchor.shard_count,
+                h.shard_count
+            )));
+        }
+        for hh in &s.headers {
+            if hh.config_digest != anchor.config_digest {
+                return Err(Error::msg(format!(
+                    "{} was persisted under config digest {:016x} but {} under {:016x} — \
+                     windows persisted under different stream/detect configs are not \
+                     position-comparable, refusing to merge",
+                    shards[0].dir.display(),
+                    anchor.config_digest,
+                    s.dir.display(),
+                    hh.config_digest
+                )));
+            }
+            if hh.arrival != anchor.arrival {
+                return Err(Error::msg(format!(
+                    "{} drove arrivals `{}` but {} drove `{}` — shards of one session share \
+                     one arrival process",
+                    shards[0].dir.display(),
+                    anchor.arrival,
+                    s.dir.display(),
+                    hh.arrival
+                )));
+            }
+            if let Some(&prev) = scope_owner.get(&hh.scope) {
+                if prev != i {
+                    return Err(Error::msg(format!(
+                        "pair scope `{}` appears in both {} and {} — shards must partition \
+                         the pair fleet (was a shard directory passed twice?)",
+                        hh.scope,
+                        shards[prev].dir.display(),
+                        s.dir.display()
+                    )));
+                }
+            }
+            scope_owner.insert(hh.scope.clone(), i);
+        }
+    }
+    for w in shards.windows(2) {
+        let (a, b) = (&w[0].headers[0], &w[1].headers[0]);
+        if a.shard_index == b.shard_index {
+            return Err(Error::msg(format!(
+                "{} and {} both claim shard index {} — the same shard was given twice",
+                w[0].dir.display(),
+                w[1].dir.display(),
+                a.shard_index
+            )));
+        }
+    }
+    let mut ids: BTreeMap<&str, &Path> = BTreeMap::new();
+    for s in &shards {
+        let h = &s.headers[0];
+        if h.shard_id.is_empty() {
+            continue;
+        }
+        if let Some(prev) = ids.insert(h.shard_id.as_str(), &s.dir) {
+            return Err(Error::msg(format!(
+                "{} and {} both claim shard id `{}` — shard ids name producers uniquely",
+                prev.display(),
+                s.dir.display(),
+                h.shard_id
+            )));
+        }
+    }
+    let present: Vec<usize> = shards.iter().map(|s| s.headers[0].shard_index).collect();
+    let missing: Vec<usize> =
+        (0..anchor.shard_count).filter(|i| !present.contains(i)).collect();
+    if !missing.is_empty() && !cfg.allow_partial {
+        return Err(Error::msg(format!(
+            "incomplete shard set: {} of {} shards present, missing index(es) {:?} — pass \
+             --partial-ok to merge anyway (totals become lower bounds)",
+            present.len(),
+            anchor.shard_count,
+            missing
+        )));
+    }
+
+    // ---- canonical interleave ------------------------------------------
+    // All shards' files under one total order — the order a single
+    // unsharded directory replays in. Pair-sink prefixes carry
+    // fleet-global indices, so per-prefix keys are already distinct
+    // across shards; the shard index only tiebreaks identical stems
+    // (e.g. every shard's `fleet-000000`, whose snapshots are dropped
+    // below anyway).
+    let mut inventory = Vec::new();
+    let mut files: Vec<((String, u64, String), usize, &crate::telemetry::FileScan)> = Vec::new();
+    for (i, s) in shards.iter().enumerate() {
+        let h = &s.headers[0];
+        inventory.push(ShardInfo {
+            dir: s.dir.clone(),
+            shard_id: h.shard_id.clone(),
+            shard_index: h.shard_index,
+            shard_count: h.shard_count,
+            files: s.scan.files.len(),
+            snapshots: s.scan.files.iter().map(|f| f.snapshots.len()).sum(),
+            pairs: s.headers.len(),
+            torn_fragments: s.scan.torn_fragments,
+            missing_rotations: s.scan.missing_rotations,
+        });
+        for f in &s.scan.files {
+            files.push((file_order_key(&f.path), i, f));
+        }
+    }
+    files.sort_by(|a, b| a.0.cmp(&b.0).then_with(|| a.1.cmp(&b.1)));
+
+    // Per-shard fleet artifacts are views over a partial fleet —
+    // dropped here, recomputed fleet-wide below. Session headers are
+    // normalized back to the unsharded form: merged, the series once
+    // again describes the whole logical session.
+    let mut merged: Vec<Snapshot> = Vec::new();
+    let mut series: Vec<(String, Option<SessionHeader>, Vec<Snapshot>)> = Vec::new();
+    for (key, _, f) in &files {
+        let prefix = key.0.clone();
+        if !series.iter().any(|(p, _, _)| p == &prefix) {
+            series.push((prefix.clone(), None, Vec::new()));
+        }
+        let slot = series.iter_mut().find(|(p, _, _)| p == &prefix).expect("pushed above");
+        for snap in &f.snapshots {
+            match snap {
+                Snapshot::Fleet { .. } | Snapshot::Divergence { .. } => {}
+                Snapshot::Session { header } => {
+                    let norm = header.unsharded();
+                    if slot.1.is_none() {
+                        slot.1 = Some(norm.clone());
+                    }
+                    merged.push(Snapshot::Session { header: norm });
+                }
+                other => {
+                    slot.2.push(other.clone());
+                    merged.push(other.clone());
+                }
+            }
+        }
+    }
+    let mut replay = Replay::from_snapshots(merged);
+
+    // ---- fleet-wide recomputation --------------------------------------
+    // Latest summary per pair, first-seen order, then the exact
+    // `StreamFleet::run` ranking fold — so a replay of the merged
+    // output verifies bit-for-bit against the per-pair summaries.
+    let mut pair_names: Vec<String> = Vec::new();
+    for (pair, _) in &replay.summaries {
+        if !pair_names.iter().any(|p| p == pair) {
+            pair_names.push(pair.clone());
+        }
+    }
+    let mut entries: Vec<StreamFleetEntry> = pair_names
+        .iter()
+        .map(|name| StreamFleetEntry {
+            name: name.clone(),
+            summary: replay.summary_of(name).expect("name from summaries").clone(),
+            snapshot_errors: 0,
+        })
+        .collect();
+    entries.sort_by(|x, y| {
+        y.summary.wasted_j.total_cmp(&x.summary.wasted_j).then_with(|| x.name.cmp(&y.name))
+    });
+    let total_wasted_j: f64 = entries.iter().map(|e| e.summary.wasted_j).sum();
+    let total_ops: usize = entries.iter().map(|e| e.summary.ops).sum();
+    let ranking: Vec<RankEntry> = entries
+        .iter()
+        .map(|e| RankEntry {
+            name: e.name.clone(),
+            wasted_j: e.summary.wasted_j,
+            ops: e.summary.ops,
+            windows: e.summary.windows,
+            windows_flagged: e.summary.windows_flagged,
+            resyncs: e.summary.resyncs,
+            aligned: e.summary.aligned,
+        })
+        .collect();
+    let divergences =
+        correlate_divergences(&entries, cfg.correlate_window_ops, cfg.correlate_min);
+    replay.rankings = vec![ranking.clone()];
+    replay.divergences = divergences.clone();
+
+    // combined per-label ledger: one canonical fold (pair-name order
+    // outer, label order inner) — permutation-invariant by construction
+    let mut ledger_pairs: Vec<String> = Vec::new();
+    for (pair, _) in &replay.ledgers {
+        if !ledger_pairs.iter().any(|p| p == pair) {
+            ledger_pairs.push(pair.clone());
+        }
+    }
+    ledger_pairs.sort();
+    let mut fleet_ledger: BTreeMap<String, LabelLedger> = BTreeMap::new();
+    for pair in &ledger_pairs {
+        for e in replay.ledger_of(pair).unwrap_or(&[]) {
+            fleet_ledger
+                .entry(e.label.clone())
+                .and_modify(|cell| cell.combine(e))
+                .or_insert_with(|| e.clone());
+        }
+    }
+
+    Ok(MergedSession {
+        session_id: anchor.session_id,
+        deploy_tag: anchor.deploy_tag,
+        torn_fragments: inventory.iter().map(|s| s.torn_fragments).sum(),
+        missing_rotations: inventory.iter().map(|s| s.missing_rotations).sum(),
+        shards: inventory,
+        replay,
+        entries,
+        ranking,
+        divergences,
+        fleet_ledger: fleet_ledger.into_values().collect(),
+        total_wasted_j,
+        total_ops,
+        series,
+    })
+}
+
+impl MergedSession {
+    /// Persist the merged session into `out` as an ordinary snapshot
+    /// directory: one sink per original pair prefix (normalized header
+    /// first, then that pair's data snapshots in merged order) plus a
+    /// `fleet` sink holding the recomputed divergences and ranking —
+    /// the same layout an unsharded `StreamFleet` run writes, so
+    /// `magneton replay` and `magneton diff` consume it unchanged.
+    /// Returns the number of snapshots written.
+    pub fn persist(&self, out: &Path) -> Result<usize> {
+        // the merged directory is an archive, not a live ring: never
+        // rotate, never drop
+        let sink_cfg = SinkConfig { max_snapshot_bytes: 0, rotate_bytes: 0 };
+        let mut written = 0usize;
+        for (prefix, header, snaps) in &self.series {
+            if header.is_none() && snaps.is_empty() {
+                continue; // e.g. a shard's fleet series, fully dropped
+            }
+            let mut sink = SnapshotSink::new(out, prefix, sink_cfg.clone())?;
+            if let Some(h) = header {
+                sink.set_header(&Snapshot::Session { header: h.clone() })?;
+                written += 1;
+            }
+            for s in snaps {
+                sink.append(s)?;
+            }
+            written += snaps.len();
+        }
+        let mut fleet = SnapshotSink::new(out, "fleet", sink_cfg)?;
+        for d in &self.divergences {
+            fleet.append(&Snapshot::Divergence { event: d.clone() })?;
+            written += 1;
+        }
+        fleet.append(&Snapshot::Fleet { ranking: self.ranking.clone() })?;
+        Ok(written + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fingerprint::WorkloadSig;
+    use crate::stream::{ResyncEvent, StreamSummary};
+    use std::fs;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("magneton-telemetry-merge-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn sig() -> WorkloadSig {
+        let mut s = WorkloadSig::new();
+        s.add("serve.proj", "matmul");
+        s
+    }
+
+    fn summary(wasted: f64, resync_at: &[usize]) -> StreamSummary {
+        StreamSummary {
+            ops: 100,
+            windows: 5,
+            energy_a_j: 2.0,
+            energy_b_j: 1.0,
+            time_a_us: 1e5,
+            time_b_us: 1e5,
+            wasted_j: wasted,
+            windows_flagged: 2,
+            windows_quarantined: 0,
+            top_labels: vec![("serve.proj".into(), wasted, 2)],
+            aligned: resync_at.is_empty(),
+            fingerprint_a: 7,
+            fingerprint_b: 7,
+            unpaired: 0,
+            resyncs: resync_at.len(),
+            resync_skipped: resync_at.len(),
+            resync_log: resync_at
+                .iter()
+                .map(|&at| ResyncEvent { at_ops: at, skipped_a: 1, skipped_b: 0 })
+                .collect(),
+            content_mismatches: 0,
+            reports_dropped: 0,
+            peak_retained_segments: 8,
+            peak_window_pairs: 5,
+            peak_pending: 1,
+        }
+    }
+
+    /// Write one shard dir holding `pairs`, each with a header, a
+    /// summary, and a ledger line.
+    fn write_shard(
+        dir: &Path,
+        session: &str,
+        shard: (&str, usize, usize),
+        pairs: &[(usize, &str, f64, &[usize])],
+    ) {
+        for &(global_idx, name, wasted, resyncs) in pairs {
+            let prefix = format!("pair-{global_idx:03}-{name}");
+            let mut sink = SnapshotSink::new(dir, &prefix, SinkConfig::default()).unwrap();
+            let header = SessionHeader::new(session, "tag", name, &sig(), "steady", 0xc0ffee)
+                .with_shard(shard.0, shard.1, shard.2);
+            sink.set_header(&Snapshot::Session { header }).unwrap();
+            sink.append(&Snapshot::Summary {
+                pair: name.to_string(),
+                summary: summary(wasted, resyncs),
+            })
+            .unwrap();
+            sink.append(&Snapshot::Ledger {
+                pair: name.to_string(),
+                entries: vec![LabelLedger {
+                    label: "serve.proj".into(),
+                    ops: 100,
+                    energy_a_j: 2.0,
+                    energy_b_j: 1.0,
+                    time_a_us: 1e5,
+                    time_b_us: 1e5,
+                }],
+            })
+            .unwrap();
+        }
+    }
+
+    #[test]
+    fn merge_refuses_mixed_sessions_and_duplicate_shards() {
+        let base = tmp_dir("refuse");
+        let s0 = base.join("s0");
+        let s1 = base.join("s1");
+        write_shard(&s0, "fleet-run", ("east", 0, 2), &[(0, "serving-0", 1.0, &[])]);
+        write_shard(&s1, "OTHER-run", ("west", 1, 2), &[(1, "serving-1", 2.0, &[])]);
+        let cfg = MergeConfig::default();
+        let err = merge_shards(&[s0.clone(), s1.clone()], &cfg).unwrap_err();
+        assert!(err.to_string().contains("different sessions"), "{err}");
+
+        // duplicate shard id (a dir copied under a new name)
+        let s1b = base.join("s1b");
+        write_shard(&s1b, "fleet-run", ("east", 1, 2), &[(1, "serving-1", 2.0, &[])]);
+        let err = merge_shards(&[s0.clone(), s1b], &cfg).unwrap_err();
+        assert!(err.to_string().contains("shard id `east`"), "{err}");
+
+        // the very same dir twice: duplicate index
+        let err = merge_shards(&[s0.clone(), s0.clone()], &cfg).unwrap_err();
+        assert!(err.to_string().contains("shard index 0"), "{err}");
+
+        // missing shard refused without --partial-ok, accepted with it
+        let err = merge_shards(&[s0.clone()], &cfg).unwrap_err();
+        assert!(err.to_string().contains("incomplete shard set"), "{err}");
+        let partial = MergeConfig { allow_partial: true, ..MergeConfig::default() };
+        let m = merge_shards(&[s0], &partial).unwrap();
+        assert_eq!(m.ranking.len(), 1);
+        let _ = fs::remove_dir_all(&base);
+    }
+
+    /// The re-correlation caveat, made testable: two pairs on
+    /// *different* shards resync at nearly the same op. Neither shard
+    /// alone has `correlate_min` pairs, so no shard persisted a
+    /// divergence — but the merged re-run coalesces them into one
+    /// fleet-wide event.
+    #[test]
+    fn merge_recorrelates_cross_shard_divergences() {
+        let base = tmp_dir("recorrelate");
+        let s0 = base.join("s0");
+        let s1 = base.join("s1");
+        write_shard(&s0, "run", ("a", 0, 2), &[(0, "serving-0", 1.0, &[40])]);
+        write_shard(&s1, "run", ("b", 1, 2), &[(1, "serving-1", 2.0, &[43])]);
+        let cfg = MergeConfig { correlate_window_ops: 10, ..MergeConfig::default() };
+        let m = merge_shards(&[s0, s1], &cfg).unwrap();
+        assert_eq!(m.divergences.len(), 1, "cross-shard resyncs must coalesce");
+        let d = &m.divergences[0];
+        assert_eq!((d.at_ops_min, d.at_ops_max), (40, 43));
+        assert_eq!(d.pairs.len(), 2);
+        // ranking under the fleet comparator: serving-1 wastes more
+        assert_eq!(m.ranking[0].name, "serving-1");
+        assert_eq!(m.total_ops, 200);
+        let _ = fs::remove_dir_all(&base);
+    }
+
+    /// Persisted merged output is an ordinary directory: replay loads
+    /// it, the ranking verifies bit-for-bit, headers are normalized
+    /// back to unsharded.
+    #[test]
+    fn persisted_merge_replays_and_verifies() {
+        let base = tmp_dir("persist");
+        let s0 = base.join("s0");
+        let s1 = base.join("s1");
+        write_shard(&s0, "run", ("a", 0, 2), &[(0, "serving-0", 1.0, &[])]);
+        write_shard(&s1, "run", ("b", 1, 2), &[(1, "serving-1", 2.0, &[])]);
+        let m = merge_shards(&[s0, s1], &MergeConfig::default()).unwrap();
+        let out = base.join("merged");
+        let written = m.persist(&out).unwrap();
+        assert!(written >= 7, "headers + summaries + ledgers + fleet ranking");
+        let r = Replay::load(&out).unwrap();
+        assert_eq!(r.verify_ranking(), Ok(2));
+        assert_eq!(r.sessions.len(), 2);
+        assert!(r.sessions.iter().all(|h| !h.is_sharded()), "headers must be normalized");
+        assert_eq!(r.rankings.len(), 1);
+        assert_eq!(r.rankings[0][0].name, "serving-1");
+        let _ = fs::remove_dir_all(&base);
+    }
+}

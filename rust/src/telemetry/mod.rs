@@ -49,7 +49,7 @@
 //! assert_eq!(back.to_line(), line);
 //! ```
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::fs::{self, File, OpenOptions};
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
@@ -61,6 +61,7 @@ use crate::stream::{LabelLedger, ResyncEvent, StreamFinding, StreamSummary, Wind
 use crate::{Error, Result};
 
 pub mod json;
+pub mod merge;
 pub mod session;
 
 use json::Json;
@@ -102,6 +103,18 @@ pub struct SessionHeader {
     /// ([`crate::stream::StreamConfig::digest`]): windows persisted
     /// under different digests are not position-comparable.
     pub config_digest: u64,
+    /// Operator-chosen name of the producer shard that wrote this
+    /// series (`magneton stream --shard k/M --shard-id <name>`). Empty
+    /// for an unsharded producer. `magneton merge` refuses two shard
+    /// directories claiming the same non-empty id.
+    pub shard_id: String,
+    /// Zero-based index of the producer shard within the fleet
+    /// partition. `0` for an unsharded producer.
+    pub shard_index: usize,
+    /// Total producer shards the fleet was partitioned over. `1` for an
+    /// unsharded producer; the `session_id` is the fleet-level identity
+    /// that groups the `shard_count` series of one logical session.
+    pub shard_count: usize,
 }
 
 impl SessionHeader {
@@ -122,6 +135,36 @@ impl SessionHeader {
             labels: sig.label_counts(),
             arrival: arrival.to_string(),
             config_digest,
+            shard_id: String::new(),
+            shard_index: 0,
+            shard_count: 1,
+        }
+    }
+
+    /// Stamp shard identity onto the header (builder-style): `index`
+    /// is zero-based, `count` is the fleet-wide shard total.
+    pub fn with_shard(mut self, id: &str, index: usize, count: usize) -> SessionHeader {
+        self.shard_id = id.to_string();
+        self.shard_index = index;
+        self.shard_count = count.max(1);
+        self
+    }
+
+    /// True when this series was produced by one shard of a
+    /// multi-process fleet partition.
+    pub fn is_sharded(&self) -> bool {
+        self.shard_count > 1 || !self.shard_id.is_empty()
+    }
+
+    /// A copy with the shard identity cleared — the canonical form
+    /// `magneton merge` writes into the merged directory, where the
+    /// series once again describes the whole logical session.
+    pub fn unsharded(&self) -> SessionHeader {
+        SessionHeader {
+            shard_id: String::new(),
+            shard_index: 0,
+            shard_count: 1,
+            ..self.clone()
         }
     }
 }
@@ -396,6 +439,9 @@ fn session_json(h: &SessionHeader) -> Json {
         .field("labels", labels)
         .field("arrival", h.arrival.as_str())
         .field("config_digest", hex_u64(h.config_digest))
+        .field("shard_id", h.shard_id.as_str())
+        .field("shard_index", h.shard_index)
+        .field("shard_count", h.shard_count)
         .build()
 }
 
@@ -420,6 +466,28 @@ fn session_from(j: &Json) -> Result<SessionHeader> {
         labels,
         arrival: req_str(j, "arrival")?.to_string(),
         config_digest: req_hex_u64(j, "config_digest")?,
+        // shard identity was introduced after the first persisted
+        // sessions; absent fields decode as the unsharded defaults so
+        // pre-shard directories stay loadable
+        shard_id: match j.get("shard_id") {
+            Some(v) => v
+                .as_str()
+                .ok_or_else(|| Error::msg("snapshot field `shard_id` is not a string"))?
+                .to_string(),
+            None => String::new(),
+        },
+        shard_index: match j.get("shard_index") {
+            Some(v) => v
+                .as_usize()
+                .ok_or_else(|| Error::msg("snapshot field `shard_index` is not an index"))?,
+            None => 0,
+        },
+        shard_count: match j.get("shard_count") {
+            Some(v) => v
+                .as_usize()
+                .ok_or_else(|| Error::msg("snapshot field `shard_count` is not an index"))?,
+            None => 1,
+        },
     })
 }
 
@@ -811,7 +879,11 @@ impl SnapshotSink {
 /// the parsed index keeps per-sink chronology at any width. Files
 /// without a `-<digits>` suffix (not written by a [`SnapshotSink`])
 /// sort by name with index 0.
-fn file_order_key(path: &Path) -> (String, u64, String) {
+///
+/// Public because [`merge`] interleaves the file series of several
+/// shard directories under the same total order, which is what makes a
+/// merged replay reproduce the single-process file order.
+pub fn file_order_key(path: &Path) -> (String, u64, String) {
     let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("").to_string();
     if let Some((prefix, idx)) = stem.rsplit_once('-') {
         if let Ok(i) = idx.parse::<u64>() {
@@ -819,6 +891,99 @@ fn file_order_key(path: &Path) -> (String, u64, String) {
         }
     }
     (stem.clone(), 0, stem)
+}
+
+/// The `*.ndjson` files under `dir`, sorted by [`file_order_key`] —
+/// the listing step shared by [`load_dir`], the lazy header-only
+/// session scan ([`session::SessionIndex::scan`]), and [`merge`].
+pub fn snapshot_files(dir: &Path) -> Result<Vec<PathBuf>> {
+    let rd = fs::read_dir(dir)
+        .map_err(|e| Error::msg(format!("read snapshot dir {}: {e}", dir.display())))?;
+    let mut paths = Vec::new();
+    for entry in rd {
+        let entry =
+            entry.map_err(|e| Error::msg(format!("read snapshot dir {}: {e}", dir.display())))?;
+        let path = entry.path();
+        if path.extension().and_then(|e| e.to_str()) == Some("ndjson") {
+            paths.push(path);
+        }
+    }
+    paths.sort_by_key(|p| file_order_key(p));
+    Ok(paths)
+}
+
+/// One parsed snapshot file of a directory scan.
+pub struct FileScan {
+    pub path: PathBuf,
+    /// Complete (newline-terminated) snapshots of the file, in line
+    /// order.
+    pub snapshots: Vec<Snapshot>,
+    /// True when the file ended in an unterminated fragment (a torn
+    /// final line — the producer was killed mid-append).
+    pub torn_fragment: bool,
+}
+
+/// A snapshot directory scanned file-by-file, with the damage counters
+/// [`merge`] reports: torn trailing fragments and rotation-index gaps
+/// (a file deleted from the *middle* of a sink's series — the byte
+/// budget only ever drops the oldest files, so a contiguous range that
+/// merely starts above zero is normal while an interior hole is not).
+pub struct DirScan {
+    pub files: Vec<FileScan>,
+    /// Files whose final line was torn (skipped, not failed).
+    pub torn_fragments: usize,
+    /// Interior gaps across all per-prefix rotation series.
+    pub missing_rotations: usize,
+}
+
+/// Scan every snapshot file under `dir` (rotation order via
+/// [`file_order_key`], line order within a file), keeping per-file
+/// grouping and damage counters. [`load_dir`] is the flattened view.
+pub fn scan_dir(dir: &Path) -> Result<DirScan> {
+    let paths = snapshot_files(dir)?;
+    let mut files = Vec::new();
+    let mut torn_fragments = 0usize;
+    for path in paths {
+        // bytes + lossy conversion: a torn multi-byte UTF-8 char in the
+        // trailing fragment must not fail the read either (the fragment
+        // is dropped below; intact lines are unaffected)
+        let bytes =
+            fs::read(&path).map_err(|e| Error::msg(format!("read {}: {e}", path.display())))?;
+        let text = String::from_utf8_lossy(&bytes);
+        let complete = match text.rfind('\n') {
+            Some(pos) => &text[..pos + 1],
+            None => "",
+        };
+        let torn_fragment = complete.len() < text.len();
+        torn_fragments += usize::from(torn_fragment);
+        let mut snapshots = Vec::new();
+        for (i, line) in complete.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let snap = Snapshot::parse_line(line)
+                .map_err(|e| e.context(format!("{} line {}", path.display(), i + 1)))?;
+            snapshots.push(snap);
+        }
+        files.push(FileScan { path, snapshots, torn_fragment });
+    }
+    // interior rotation gaps per sink prefix: indices are assigned
+    // consecutively at write time, and the budget drops oldest-first,
+    // so any hole strictly inside the surviving range is a lost file
+    let mut by_prefix: BTreeMap<String, Vec<u64>> = BTreeMap::new();
+    for f in &files {
+        let (prefix, idx, _) = file_order_key(&f.path);
+        by_prefix.entry(prefix).or_default().push(idx);
+    }
+    let mut missing_rotations = 0usize;
+    for indices in by_prefix.values() {
+        // `files` is sorted by file_order_key, so per-prefix indices
+        // arrive ascending
+        for w in indices.windows(2) {
+            missing_rotations += (w[1] - w[0]).saturating_sub(1) as usize;
+        }
+    }
+    Ok(DirScan { files, torn_fragments, missing_rotations })
 }
 
 /// Load every snapshot under `dir` (all `*.ndjson` files, per-sink
@@ -833,40 +998,7 @@ fn file_order_key(path: &Path) -> (String, u64, String) {
 /// guarantee hold at read time. Newline-*terminated* lines that fail
 /// to parse are genuine corruption and still error out.
 pub fn load_dir(dir: &Path) -> Result<Vec<Snapshot>> {
-    let rd = fs::read_dir(dir)
-        .map_err(|e| Error::msg(format!("read snapshot dir {}: {e}", dir.display())))?;
-    let mut paths = Vec::new();
-    for entry in rd {
-        let entry =
-            entry.map_err(|e| Error::msg(format!("read snapshot dir {}: {e}", dir.display())))?;
-        let path = entry.path();
-        if path.extension().and_then(|e| e.to_str()) == Some("ndjson") {
-            paths.push(path);
-        }
-    }
-    paths.sort_by_key(|p| file_order_key(p));
-    let mut out = Vec::new();
-    for path in &paths {
-        // bytes + lossy conversion: a torn multi-byte UTF-8 char in the
-        // trailing fragment must not fail the read either (the fragment
-        // is dropped below; intact lines are unaffected)
-        let bytes =
-            fs::read(path).map_err(|e| Error::msg(format!("read {}: {e}", path.display())))?;
-        let text = String::from_utf8_lossy(&bytes);
-        let complete = match text.rfind('\n') {
-            Some(pos) => &text[..pos + 1],
-            None => "",
-        };
-        for (i, line) in complete.lines().enumerate() {
-            if line.trim().is_empty() {
-                continue;
-            }
-            let snap = Snapshot::parse_line(line)
-                .map_err(|e| e.context(format!("{} line {}", path.display(), i + 1)))?;
-            out.push(snap);
-        }
-    }
-    Ok(out)
+    Ok(scan_dir(dir)?.files.into_iter().flat_map(|f| f.snapshots).collect())
 }
 
 /// A snapshot directory loaded back into typed reports, grouped by
@@ -889,8 +1021,16 @@ pub struct Replay {
 
 impl Replay {
     pub fn load(dir: &Path) -> Result<Replay> {
+        Ok(Replay::from_snapshots(load_dir(dir)?))
+    }
+
+    /// Group an already-loaded snapshot sequence by artifact kind —
+    /// the in-memory half of [`Replay::load`], reused by [`merge`] to
+    /// build a replay over the interleaved files of several shard
+    /// directories.
+    pub fn from_snapshots(snapshots: impl IntoIterator<Item = Snapshot>) -> Replay {
         let mut r = Replay::default();
-        for snap in load_dir(dir)? {
+        for snap in snapshots {
             match snap {
                 Snapshot::Window { pair, report } => r.windows.push((pair, report)),
                 Snapshot::Resync { pair, event } => r.resyncs.push((pair, event)),
@@ -905,7 +1045,7 @@ impl Replay {
                 Snapshot::Ledger { pair, entries } => r.ledgers.push((pair, entries)),
             }
         }
-        Ok(r)
+        r
     }
 
     /// The most recent persisted summary for `pair`, if any.
@@ -1018,6 +1158,9 @@ mod tests {
             labels: vec![("serve.proj".into(), 2000), ("serve.act".into(), 3000)],
             arrival: "poisson@200Hz".into(),
             config_digest: 0xdead_beef_0123_4567,
+            shard_id: "host-07 \"east\"".into(),
+            shard_index: 3,
+            shard_count: 8,
         }
     }
 
@@ -1123,6 +1266,9 @@ mod tests {
             h.labels = (0..rng.below(6))
                 .map(|k| (format!("{name}.l{k}"), rng.below(10_000)))
                 .collect();
+            h.shard_count = 1 + rng.below(8);
+            h.shard_index = rng.below(h.shard_count);
+            h.shard_id = names[rng.below(names.len())].to_string();
             let snap = Snapshot::Session { header: h.clone() };
             let line = snap.to_line();
             let Snapshot::Session { header: back } = Snapshot::parse_line(&line).unwrap() else {
@@ -1130,6 +1276,29 @@ mod tests {
             };
             assert_eq!(back, h, "case {i}: `{line}`");
         }
+    }
+
+    /// Directories persisted before shard identity existed decode as
+    /// unsharded: absent `shard_*` fields default to `("", 0, 1)`.
+    #[test]
+    fn pre_shard_session_lines_decode_as_unsharded() {
+        let mut h = header("legacy");
+        h.shard_id = String::new();
+        h.shard_index = 0;
+        h.shard_count = 1;
+        let line = Snapshot::Session { header: h.clone() }.to_line();
+        // strip the shard fields the writer now emits, simulating an
+        // old producer
+        let legacy = line
+            .replace(",\"shard_id\":\"\"", "")
+            .replace(",\"shard_index\":0", "")
+            .replace(",\"shard_count\":1", "");
+        assert_ne!(legacy, line, "the writer must emit shard fields");
+        let Snapshot::Session { header: back } = Snapshot::parse_line(&legacy).unwrap() else {
+            panic!("legacy session line changed variant");
+        };
+        assert_eq!(back, h);
+        assert!(!back.is_sharded());
     }
 
     /// The tentpole durability property: the pinned header is written

@@ -11,8 +11,10 @@
 //! * [`SessionInfo`] loads one snapshot directory as a *session*: its
 //!   [`SessionHeader`]s (one per sink scope, deduped across rotation
 //!   re-writes), replayed reports, and per-label ledgers;
-//! * [`SessionIndex::scan`] loads many directories and
-//!   [`SessionIndex::groups`] clusters the sessions whose workload
+//! * [`SessionIndex::scan`] indexes many directories lazily — only
+//!   each file's first NDJSON line (the pinned session header) is
+//!   read, so thousands of shard directories index in O(files) bytes —
+//!   and [`SessionIndex::groups`] clusters the sessions whose workload
 //!   fingerprints match — exactly, or tolerantly on label-multiset
 //!   overlap for partially-overlapping runs;
 //! * [`diff_sessions`] pairs two sessions of the same workload: it
@@ -30,9 +32,10 @@
 //! reports each session's own waste verdicts alongside).
 
 use std::collections::BTreeMap;
+use std::io::Read;
 use std::path::{Path, PathBuf};
 
-use crate::telemetry::{Replay, SessionHeader};
+use crate::telemetry::{snapshot_files, Replay, SessionHeader, Snapshot};
 use crate::{Error, Result};
 
 /// One snapshot directory loaded as a session.
@@ -53,6 +56,14 @@ impl SessionInfo {
     pub fn load(dir: &Path) -> Result<SessionInfo> {
         let replay = Replay::load(dir)?;
         let headers = replay.sessions.clone();
+        SessionInfo::validate_headers(dir, &headers)?;
+        Ok(SessionInfo { dir: dir.to_path_buf(), headers, replay })
+    }
+
+    /// The header invariants shared by the full [`SessionInfo::load`]
+    /// and the lazy [`SessionIndex::scan`]: headers must exist, agree
+    /// per scope, and agree on the session identity.
+    fn validate_headers(dir: &Path, headers: &[SessionHeader]) -> Result<()> {
         if headers.is_empty() {
             return Err(Error::msg(format!(
                 "{}: no session header found — the directory was persisted without a session \
@@ -62,7 +73,7 @@ impl SessionInfo {
             )));
         }
         let mut scopes: BTreeMap<&str, &SessionHeader> = BTreeMap::new();
-        for h in &headers {
+        for h in headers {
             if let Some(prev) = scopes.insert(h.scope.as_str(), h) {
                 if *prev != *h {
                     return Err(Error::msg(format!(
@@ -82,7 +93,51 @@ impl SessionInfo {
                 )));
             }
         }
-        Ok(SessionInfo { dir: dir.to_path_buf(), headers, replay })
+        Ok(())
+    }
+
+    /// Load only the session headers of a directory — the lazy scan
+    /// behind [`SessionIndex::scan`]. Reads the **first NDJSON line**
+    /// of each snapshot file (the sink pins the session header there
+    /// and re-writes it at the top of every rotated file), in bounded
+    /// chunks, so indexing a directory costs O(files) bytes instead of
+    /// O(snapshot bytes). The returned session's `replay` is empty;
+    /// use [`SessionInfo::load`] when the reports themselves are
+    /// needed (e.g. `magneton diff`).
+    ///
+    /// `open` abstracts the reader so tests can count bytes actually
+    /// read; production passes `File::open`.
+    pub fn load_headers_with<R, F>(dir: &Path, open: &mut F) -> Result<SessionInfo>
+    where
+        R: Read,
+        F: FnMut(&Path) -> std::io::Result<R>,
+    {
+        let mut headers: Vec<SessionHeader> = Vec::new();
+        for path in snapshot_files(dir)? {
+            let reader = open(&path)
+                .map_err(|e| Error::msg(format!("open {}: {e}", path.display())))?;
+            let line = first_line(reader)
+                .map_err(|e| Error::msg(format!("read {}: {e}", path.display())))?;
+            // a file with no newline at all is empty or one torn
+            // fragment — skipped, exactly like the full replay skips
+            // torn trailing fragments
+            let Some(line) = line else { continue };
+            if line.trim().is_empty() {
+                continue;
+            }
+            let snap = Snapshot::parse_line(&line)
+                .map_err(|e| e.context(format!("{} line 1", path.display())))?;
+            // files whose first line is not a header (e.g. the fleet
+            // ranking sink, or a sink without a session identity)
+            // contribute no header but stay valid snapshot files
+            if let Snapshot::Session { header } = snap {
+                if !headers.contains(&header) {
+                    headers.push(header);
+                }
+            }
+        }
+        SessionInfo::validate_headers(dir, &headers)?;
+        Ok(SessionInfo { dir: dir.to_path_buf(), headers, replay: Replay::default() })
     }
 
     pub fn session_id(&self) -> &str {
@@ -308,17 +363,57 @@ pub fn match_sessions(a: &SessionInfo, b: &SessionInfo, mode: MatchMode) -> Matc
     }
 }
 
+/// Read a reader's first newline-terminated line in fixed-size chunks,
+/// stopping at the first `\n` — the primitive that keeps the session
+/// index's per-file cost bounded by the header line, not the file.
+/// `None` when the reader holds no newline (empty file or a single
+/// torn fragment).
+fn first_line<R: Read>(mut r: R) -> std::io::Result<Option<String>> {
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 512];
+    loop {
+        let n = r.read(&mut chunk)?;
+        if n == 0 {
+            return Ok(None);
+        }
+        if let Some(pos) = chunk[..n].iter().position(|&b| b == b'\n') {
+            buf.extend_from_slice(&chunk[..pos]);
+            return Ok(Some(String::from_utf8_lossy(&buf).into_owned()));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    }
+}
+
 /// An index over persisted sessions (one per scanned directory).
 pub struct SessionIndex {
     pub sessions: Vec<SessionInfo>,
 }
 
 impl SessionIndex {
-    /// Load every directory as one session.
+    /// Index every directory as one session — a **lazy header-only
+    /// scan**: only the first NDJSON line of each snapshot file is
+    /// read (in bounded chunks), so indexing thousands of shard
+    /// directories costs O(files) bytes rather than re-parsing every
+    /// persisted window. The indexed sessions carry headers only
+    /// (`replay` is empty); [`SessionIndex::groups`] needs nothing
+    /// more, and callers that go on to diff a session load it fully
+    /// with [`SessionInfo::load`]. Directories without any session
+    /// header are still refused with the same diagnostic as the full
+    /// load.
     pub fn scan(dirs: &[PathBuf]) -> Result<SessionIndex> {
+        SessionIndex::scan_with(dirs, &mut |p: &Path| std::fs::File::open(p))
+    }
+
+    /// [`SessionIndex::scan`] with an injectable reader factory, so
+    /// tests can meter exactly how many bytes the lazy scan touches.
+    pub fn scan_with<R, F>(dirs: &[PathBuf], open: &mut F) -> Result<SessionIndex>
+    where
+        R: Read,
+        F: FnMut(&Path) -> std::io::Result<R>,
+    {
         let mut sessions = Vec::new();
         for dir in dirs {
-            sessions.push(SessionInfo::load(dir)?);
+            sessions.push(SessionInfo::load_headers_with(dir, open)?);
         }
         Ok(SessionIndex { sessions })
     }

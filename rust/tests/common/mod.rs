@@ -153,6 +153,30 @@ pub fn mk_stream_run(label: &str, seed: u64, eff: f64, requests: usize) -> SysRu
     SysRun::new(label, serving_dispatcher(eff), Env::new(), serving_stream_program(&mut rng, &spec))
 }
 
+/// A reader that meters every byte pulled through it — the probe the
+/// session-index scalability test uses to prove the lazy header scan
+/// reads O(files) bytes, not O(snapshot bytes). Share the counter cell
+/// across readers and pass a factory closure to
+/// `SessionIndex::scan_with`.
+pub struct CountingReader<R> {
+    inner: R,
+    bytes: std::rc::Rc<std::cell::Cell<u64>>,
+}
+
+impl<R> CountingReader<R> {
+    pub fn new(inner: R, bytes: std::rc::Rc<std::cell::Cell<u64>>) -> CountingReader<R> {
+        CountingReader { inner, bytes }
+    }
+}
+
+impl<R: std::io::Read> std::io::Read for CountingReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.bytes.set(self.bytes.get() + n as u64);
+        Ok(n)
+    }
+}
+
 /// Run a 1000-op cycle pair through a real auditor (optionally dropping
 /// side A's event at `skip_at`) and wrap the summary as a fleet entry —
 /// the input shape the divergence-correlation layer consumes.

@@ -1,0 +1,311 @@
+//! Shard-equivalence acceptance for multi-process ingest: producer
+//! shards persisting slices of one pair fleet must merge back into a
+//! session **bit-for-bit identical** to the unsharded single-process
+//! run — for any shard count, any merge order, and any permutation of
+//! the shard directories — and the merge must survive (and account
+//! for) damaged shards: torn trailing fragments, dropped rotation
+//! files, and operator mistakes like passing the same shard twice.
+
+mod common;
+
+use std::path::{Path, PathBuf};
+
+use common::{mk_stream_run, tmp_dir};
+use magneton::coordinator::fleet::StreamFleet;
+use magneton::energy::DeviceSpec;
+use magneton::telemetry::merge::{merge_shards, MergeConfig};
+use magneton::telemetry::{Replay, SinkConfig};
+
+const SESSION: &str = "shard-equivalence";
+const SEED: u64 = 0x90;
+const WINDOW_OPS: usize = 40;
+
+/// Run the fleet slice `[lo, hi)` of a `total`-pair fleet into `dir`.
+/// `shard: None` is the unsharded reference (which must cover the whole
+/// fleet); `Some((idx, count))` stamps shard identity and fleet-global
+/// pair indices. Per-pair seeds and specs depend only on the global
+/// pair index, exactly like `magneton stream --shard`.
+fn run_slice(
+    dir: &Path,
+    lo: usize,
+    hi: usize,
+    shard: Option<(usize, usize)>,
+    requests: usize,
+    sink_cfg: SinkConfig,
+) {
+    let mut fleet = StreamFleet::new(DeviceSpec::h200_sim());
+    fleet.workers = 2;
+    fleet.cfg.window_ops = WINDOW_OPS;
+    fleet.cfg.hop_ops = WINDOW_OPS;
+    fleet.cfg.ring_cap = 64;
+    fleet.snapshot_dir = Some(dir.to_path_buf());
+    fleet.session_id = Some(SESSION.to_string());
+    fleet.deploy_tag = "v1".into();
+    fleet.sink_cfg = sink_cfg;
+    if let Some((idx, count)) = shard {
+        fleet.pair_index_base = lo;
+        fleet.shard_id = format!("host-{idx}");
+        fleet.shard_index = idx;
+        fleet.shard_count = count;
+    }
+    for i in lo..hi {
+        let eff = if i % 2 == 0 { 0.6 } else { 1.0 };
+        fleet.add_pair(
+            &format!("serving-{i}"),
+            mk_stream_run("sys-a", SEED + 1 + i as u64, eff, requests),
+            mk_stream_run("sys-b", SEED + 1 + i as u64, 1.0, requests),
+        );
+    }
+    let r = fleet.run();
+    assert_eq!(r.snapshot_errors, 0, "snapshot writes must succeed");
+}
+
+/// Split `total` pairs into `count` shard directories under `base`,
+/// mirroring the `--shard k/M` slice arithmetic (ceil division).
+fn run_shards(base: &Path, total: usize, count: usize, requests: usize) -> Vec<PathBuf> {
+    let per_shard = total.div_ceil(count);
+    let mut dirs = Vec::new();
+    for idx in 0..count {
+        let (lo, hi) = ((idx * per_shard).min(total), ((idx + 1) * per_shard).min(total));
+        assert!(lo < hi, "test fleet must populate every shard");
+        let dir = base.join(format!("m{count}-s{idx}"));
+        run_slice(&dir, lo, hi, Some((idx, count)), requests, never_rotate());
+        dirs.push(dir);
+    }
+    dirs
+}
+
+fn never_rotate() -> SinkConfig {
+    SinkConfig { max_snapshot_bytes: 0, rotate_bytes: 0 }
+}
+
+fn merge_cfg() -> MergeConfig {
+    // reproduce the run's own correlation: its effective window is
+    // cfg.window_ops (correlate_window_ops was left 0)
+    MergeConfig { correlate_window_ops: WINDOW_OPS, correlate_min: 2, allow_partial: false }
+}
+
+/// Every `.ndjson` file of `dir` as `(file name, bytes)`, sorted.
+fn dir_bytes(dir: &Path) -> Vec<(String, Vec<u8>)> {
+    let mut files: Vec<(String, Vec<u8>)> = std::fs::read_dir(dir)
+        .unwrap()
+        .map(|e| {
+            let p = e.unwrap().path();
+            (p.file_name().unwrap().to_string_lossy().into_owned(), std::fs::read(&p).unwrap())
+        })
+        .collect();
+    files.sort();
+    files
+}
+
+fn assert_same_files(got: &Path, want: &Path, what: &str) {
+    let (got, want) = (dir_bytes(got), dir_bytes(want));
+    assert_eq!(
+        got.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>(),
+        want.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>(),
+        "{what}: file sets differ"
+    );
+    for ((name, g), (_, w)) in got.iter().zip(want.iter()) {
+        assert!(g == w, "{what}: {name} is not byte-identical to the unsharded run's file");
+    }
+}
+
+/// The tentpole property: merging M producer shards reproduces the
+/// unsharded run bit-for-bit — same ranking (names and `to_bits`
+/// ledgers), same totals, and a persisted merged directory whose every
+/// file is byte-identical to the single-process directory — for shard
+/// counts 1, 2, 4, and 8, and regardless of the order the shard
+/// directories are passed in.
+#[test]
+fn merged_shards_reproduce_the_unsharded_run_bit_for_bit() {
+    let base = tmp_dir("merge-bitident");
+    let total = 8;
+    let unsharded = base.join("unsharded");
+    run_slice(&unsharded, 0, total, None, 10, never_rotate());
+    let reference = Replay::load(&unsharded).unwrap();
+    assert_eq!(reference.rankings.len(), 1);
+    let ref_ranking = &reference.rankings[0];
+    assert_eq!(ref_ranking.len(), total);
+
+    let mut ledger_snapshots: Vec<Vec<u64>> = Vec::new();
+    for count in [1usize, 2, 4, 8] {
+        let dirs = run_shards(&base, total, count, 10);
+        let m = merge_shards(&dirs, &merge_cfg()).unwrap();
+        assert_eq!(m.session_id, SESSION);
+        assert_eq!(m.shards.len(), count);
+        assert_eq!(m.torn_fragments + m.missing_rotations, 0);
+
+        // ranking: names, order, and waste ledgers all bit-equal
+        assert_eq!(m.ranking.len(), ref_ranking.len(), "{count} shards");
+        for (got, want) in m.ranking.iter().zip(ref_ranking.iter()) {
+            assert_eq!(got.name, want.name, "{count} shards");
+            assert_eq!(
+                got.wasted_j.to_bits(),
+                want.wasted_j.to_bits(),
+                "{count} shards: {} wasted_j",
+                got.name
+            );
+            assert_eq!(got.ops, want.ops, "{count} shards: {}", got.name);
+            assert_eq!(got.windows, want.windows, "{count} shards: {}", got.name);
+            assert_eq!(got.windows_flagged, want.windows_flagged, "{count} shards: {}", got.name);
+        }
+        let ref_total: f64 = ref_ranking.iter().map(|e| e.wasted_j).sum();
+        assert_eq!(m.total_wasted_j.to_bits(), ref_total.to_bits(), "{count} shards: total fold");
+
+        // the persisted merged directory is file-for-file, byte-for-byte
+        // the unsharded directory
+        let out = base.join(format!("merged-{count}"));
+        m.persist(&out).unwrap();
+        assert_same_files(&out, &unsharded, &format!("{count}-shard merge"));
+        let replayed = Replay::load(&out).unwrap();
+        assert_eq!(replayed.verify_ranking(), Ok(total));
+
+        // shard-order invariance: reversed directory list, same bits
+        let mut reversed = dirs.clone();
+        reversed.reverse();
+        let m2 = merge_shards(&reversed, &merge_cfg()).unwrap();
+        let out2 = base.join(format!("merged-{count}-rev"));
+        m2.persist(&out2).unwrap();
+        assert_same_files(&out2, &unsharded, &format!("{count}-shard reversed merge"));
+
+        // the combined per-label ledger is permutation-invariant too
+        let bits = |m: &magneton::telemetry::merge::MergedSession| -> Vec<u64> {
+            m.fleet_ledger
+                .iter()
+                .flat_map(|l| {
+                    [
+                        l.ops as u64,
+                        l.energy_a_j.to_bits(),
+                        l.energy_b_j.to_bits(),
+                        l.time_a_us.to_bits(),
+                        l.time_b_us.to_bits(),
+                    ]
+                })
+                .collect()
+        };
+        assert_eq!(bits(&m), bits(&m2), "{count} shards: fleet ledger fold order leaked");
+        ledger_snapshots.push(bits(&m));
+    }
+    // ... and invariant across shard *counts*: 1 == 2 == 4 == 8
+    for w in ledger_snapshots.windows(2) {
+        assert_eq!(w[0], w[1], "fleet ledger differs across shard counts");
+    }
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+/// A producer killed mid-append leaves a torn trailing fragment. The
+/// merge skips the fragment, counts it in the damage inventory, and
+/// keeps every undamaged pair's attribution bit-identical.
+#[test]
+fn torn_trailing_fragment_is_counted_and_contained() {
+    let base = tmp_dir("merge-torn");
+    let total = 4;
+    let dirs = run_shards(&base, total, 2, 10);
+    let clean = merge_shards(&dirs, &merge_cfg()).unwrap();
+
+    // tear the last line of shard 0's first pair file (drop the final
+    // newline plus a few bytes, leaving an incomplete JSON fragment)
+    let victim = dirs[0].join("pair-000-serving-0-000000.ndjson");
+    let bytes = std::fs::read(&victim).unwrap();
+    assert!(bytes.ends_with(b"\n"));
+    std::fs::write(&victim, &bytes[..bytes.len() - 4]).unwrap();
+
+    let m = merge_shards(&dirs, &merge_cfg()).unwrap();
+    assert_eq!(m.torn_fragments, 1, "the torn fragment must be counted, not fatal");
+    assert_eq!(m.shards[0].torn_fragments, 1);
+    assert_eq!(m.shards[1].torn_fragments, 0);
+    // every pair except the damaged one keeps bit-identical attribution
+    for want in clean.ranking.iter().filter(|e| e.name != "serving-0") {
+        let got = m
+            .ranking
+            .iter()
+            .find(|e| e.name == want.name)
+            .unwrap_or_else(|| panic!("{} lost by an unrelated torn fragment", want.name));
+        assert_eq!(got.wasted_j.to_bits(), want.wasted_j.to_bits(), "{}", want.name);
+        assert_eq!(got.ops, want.ops, "{}", want.name);
+    }
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+/// A rotation file lost from the *middle* of a pair's series is damage
+/// (rotation only ever drops oldest files): the merge counts it and
+/// the other pairs' attribution is unaffected.
+#[test]
+fn missing_middle_rotation_file_is_counted_as_damage() {
+    let base = tmp_dir("merge-hole");
+    let total = 4;
+    let per_shard = 2;
+    // small rotate budget so every pair's series spans several files
+    let mut dirs = Vec::new();
+    for idx in 0..2 {
+        let (lo, hi) = (idx * per_shard, (idx + 1) * per_shard);
+        let dir = base.join(format!("s{idx}"));
+        run_slice(
+            &dir,
+            lo,
+            hi,
+            Some((idx, 2)),
+            40,
+            SinkConfig { max_snapshot_bytes: 0, rotate_bytes: 512 },
+        );
+        dirs.push(dir);
+    }
+    let clean = merge_shards(&dirs, &merge_cfg()).unwrap();
+    assert_eq!(clean.missing_rotations, 0);
+
+    // drop a middle rotation file of shard 1's first pair
+    let series: Vec<PathBuf> = std::fs::read_dir(&dirs[1])
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| {
+            p.file_name().unwrap().to_string_lossy().starts_with("pair-002-serving-2-")
+        })
+        .collect();
+    assert!(series.len() >= 3, "need a rotated series to drop from, got {}", series.len());
+    let mut sorted = series.clone();
+    sorted.sort();
+    std::fs::remove_file(&sorted[1]).unwrap();
+
+    let m = merge_shards(&dirs, &merge_cfg()).unwrap();
+    assert_eq!(m.missing_rotations, 1, "the interior hole must be counted");
+    assert_eq!(m.shards[1].missing_rotations, 1);
+    assert_eq!(m.shards[0].missing_rotations, 0);
+    for want in clean.ranking.iter().filter(|e| e.name != "serving-2") {
+        let got = m
+            .ranking
+            .iter()
+            .find(|e| e.name == want.name)
+            .unwrap_or_else(|| panic!("{} lost by an unrelated missing file", want.name));
+        assert_eq!(got.wasted_j.to_bits(), want.wasted_j.to_bits(), "{}", want.name);
+    }
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+/// Operator mistakes are refused with reasoned diagnostics: the same
+/// shard directory twice, and an incomplete shard set without
+/// `--partial-ok` — while a deliberate partial merge keeps the present
+/// shards' attribution exact.
+#[test]
+fn duplicate_and_incomplete_shard_sets_are_refused() {
+    let base = tmp_dir("merge-dup");
+    let total = 4;
+    let dirs = run_shards(&base, total, 2, 10);
+    let clean = merge_shards(&dirs, &merge_cfg()).unwrap();
+
+    let err = merge_shards(&[dirs[0].clone(), dirs[0].clone(), dirs[1].clone()], &merge_cfg())
+        .unwrap_err();
+    assert!(err.to_string().contains("given twice"), "{err}");
+
+    let err = merge_shards(&dirs[..1], &merge_cfg()).unwrap_err();
+    assert!(err.to_string().contains("incomplete shard set"), "{err}");
+    assert!(err.to_string().contains("--partial-ok"), "{err}");
+
+    let partial = MergeConfig { allow_partial: true, ..merge_cfg() };
+    let m = merge_shards(&dirs[..1], &partial).unwrap();
+    assert_eq!(m.ranking.len(), 2, "shard 0 holds pairs 0..2");
+    for got in &m.ranking {
+        let want = clean.ranking.iter().find(|e| e.name == got.name).unwrap();
+        assert_eq!(got.wasted_j.to_bits(), want.wasted_j.to_bits(), "{}", got.name);
+    }
+    let _ = std::fs::remove_dir_all(&base);
+}

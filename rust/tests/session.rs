@@ -10,7 +10,7 @@ mod common;
 
 use std::path::PathBuf;
 
-use common::{mk_stream_run, tmp_dir};
+use common::{mk_stream_run, tmp_dir, CountingReader};
 use magneton::coordinator::fleet::StreamFleet;
 use magneton::energy::DeviceSpec;
 use magneton::report::render_session_diff;
@@ -160,6 +160,86 @@ fn mismatched_workloads_are_refused_with_a_diagnostic() {
 
     let _ = std::fs::remove_dir_all(&dir_a);
     let _ = std::fs::remove_dir_all(&dir_c);
+}
+
+/// Indexing a fleet of shard directories must scale with the number of
+/// *files*, not the number of persisted snapshot bytes: the lazy scan
+/// reads only each file's header line, in bounded chunks. Proven by
+/// metering every byte pulled through the injected readers over a
+/// 1000-session-directory tree whose files are dominated by
+/// non-header payload — and a directory without any session header is
+/// still refused, header-only scan or not.
+#[test]
+fn session_index_scan_reads_o_files_bytes_over_a_thousand_dirs() {
+    use magneton::fingerprint::WorkloadSig;
+    use magneton::telemetry::{SessionHeader, Snapshot};
+    use std::cell::Cell;
+    use std::rc::Rc;
+
+    let base = tmp_dir("session-index-scale");
+    let mut sig = WorkloadSig::new();
+    sig.add("serve.proj", "matmul");
+    let header_line = Snapshot::Session {
+        header: SessionHeader::new("scale", "tag", "pair", &sig, "steady", 0xfeed),
+    }
+    .to_line();
+    // payload the scan must NOT read: opaque wide lines after line 1
+    let pad = format!("{{\"type\":\"pad\",\"fill\":\"{}\"}}", "x".repeat(480));
+    let mut dirs: Vec<PathBuf> = Vec::new();
+    let mut total_bytes = 0u64;
+    for i in 0..1000 {
+        let dir = base.join(format!("d{i:04}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut body = String::with_capacity(9 * 1024);
+        body.push_str(&header_line);
+        body.push('\n');
+        for _ in 0..16 {
+            body.push_str(&pad);
+            body.push('\n');
+        }
+        std::fs::write(dir.join("pair-000-shard-000000.ndjson"), &body).unwrap();
+        total_bytes += body.len() as u64;
+        dirs.push(dir);
+    }
+    // a producer killed before its first newline leaves a file with a
+    // single torn fragment: skipped by the scan, never fatal
+    std::fs::write(dirs[0].join("pair-001-torn-000000.ndjson"), "{\"type\":\"sess").unwrap();
+
+    let counted = Rc::new(Cell::new(0u64));
+    let meter = Rc::clone(&counted);
+    let idx = SessionIndex::scan_with(&dirs, &mut |p: &std::path::Path| {
+        std::fs::File::open(p).map(|f| CountingReader::new(f, Rc::clone(&meter)))
+    })
+    .expect("header-only scan over 1000 session dirs");
+    assert_eq!(idx.sessions.len(), 1000);
+    for s in &idx.sessions {
+        assert_eq!(s.session_id(), "scale");
+        assert_eq!(s.headers.len(), 1);
+    }
+    // O(files) bytes: at most two 512-byte chunks per file (the header
+    // line fits in the first), nowhere near the persisted payload
+    let files = 1001u64;
+    assert!(
+        counted.get() <= files * 1024,
+        "lazy scan read {} bytes for {files} files — more than the header chunks",
+        counted.get()
+    );
+    assert!(
+        counted.get() * 5 <= total_bytes,
+        "lazy scan read {} of {total_bytes} payload bytes — it is not lazy",
+        counted.get()
+    );
+
+    // a directory whose files carry no session header (e.g. only a
+    // fleet ranking sink) is refused by the index, same as a full load
+    let headerless = base.join("headerless");
+    std::fs::create_dir_all(&headerless).unwrap();
+    let fleet_line = Snapshot::Fleet { ranking: vec![] }.to_line();
+    std::fs::write(headerless.join("fleet-000000.ndjson"), format!("{fleet_line}\n")).unwrap();
+    let err = SessionIndex::scan(&[dirs[0].clone(), headerless]).unwrap_err();
+    assert!(format!("{err}").contains("no session header"), "{err}");
+
+    let _ = std::fs::remove_dir_all(&base);
 }
 
 /// A directory persisted without session headers is rejected with a
