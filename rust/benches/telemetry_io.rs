@@ -1,10 +1,13 @@
 //! Telemetry IO bench: NDJSON snapshot append and replay throughput,
 //! plus the rotation invariant — on-disk usage must stay under the
 //! byte budget no matter how many snapshots stream through the sink
-//! (the disk-side analogue of the power-ring memory bound).
+//! (the disk-side analogue of the power-ring memory bound) — and the
+//! follow lag: how fast a `Follower` catches up cold on a retained
+//! directory and how cheap an incremental tail poll is.
 
 use magneton::detect::Side;
 use magneton::stream::{StreamFinding, WindowReport};
+use magneton::telemetry::follow::Follower;
 use magneton::telemetry::{load_dir, SinkConfig, Snapshot, SnapshotSink};
 use magneton::util::bench::{banner, persist, persist_json, time_once};
 use magneton::util::json::Json;
@@ -81,6 +84,21 @@ fn main() {
     });
     assert_eq!(parsed, lines.len());
 
+    // --- follow lag: cold catch-up, then an incremental tail poll ---------
+    let mut follower = Follower::new(&dir);
+    let (caught, follow_cold_us) = time_once(|| follower.poll().expect("cold poll"));
+    assert_eq!(
+        caught.len(),
+        loaded.len(),
+        "cold catch-up must surface the whole retained suffix"
+    );
+    let extra = 500usize;
+    for s in snaps.iter().take(extra) {
+        sink.append(s).expect("append tail");
+    }
+    let (fresh, follow_incr_us) = time_once(|| follower.poll().expect("incremental poll"));
+    assert_eq!(fresh.len(), extra, "an up-to-date follower sees exactly the new appends");
+
     let mut t = Table::new(vec!["stage", "items", "total", "per item"]);
     let mut csv = String::from("stage,items,total_us,per_item_us\n");
     let mut stages: Vec<Json> = Vec::new();
@@ -88,6 +106,8 @@ fn main() {
         ("append (rotating sink)", n, write_us),
         ("replay (read+parse dir)", loaded.len(), read_us),
         ("parse (in-memory)", parsed, parse_us),
+        ("follow (cold catch-up)", caught.len(), follow_cold_us),
+        ("follow (incremental poll)", fresh.len(), follow_incr_us),
     ] {
         t.row(vec![
             stage.to_string(),
@@ -123,6 +143,7 @@ fn main() {
             .field("snapshots", n)
             .field("retained_bytes", sink.total_bytes() as f64)
             .field("dropped_files", sink.dropped_files as f64)
+            .field("follow_reanchors", follower.reanchors as f64)
             .build(),
     );
     let _ = std::fs::remove_dir_all(&dir);

@@ -1,0 +1,599 @@
+//! Live fleet dashboard state and online energy invariants.
+//!
+//! The batch pipeline finds waste after the fact; this module watches
+//! it happen. A [`Monitor`] holds operator-declared [`Invariant`]s
+//! (`--max-op-j`, `--max-window-waste-pct`, `--max-resyncs-per-min`)
+//! and evaluates every snapshot a [`crate::telemetry::follow::Follower`]
+//! decodes, raising a typed [`Alarm`] — persisted and published as an
+//! ordinary [`Snapshot::Alarm`] NDJSON line — the moment a pair
+//! regresses past a limit. A [`DashState`] folds the same snapshot
+//! stream into the rolling per-pair/fleet aggregates that
+//! [`crate::report::render_dash`] draws, and an [`AlarmPublisher`]
+//! fans alarm lines out to subscribers over bounded drop-and-count
+//! channels (optionally over TCP), so one stalled collector can never
+//! backpressure the stream being measured.
+//!
+//! Every check is deterministic over the snapshot stream: replaying a
+//! directory through a fresh [`Monitor`] raises exactly the alarms the
+//! live tail raised (deduped per offending window, so an operator sees
+//! one line per violation, not one per poll).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::Write as _;
+use std::net::TcpListener;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+use crate::coordinator::fleet::FleetDivergence;
+use crate::stream::WindowReport;
+use crate::telemetry::{Alarm, RankEntry, Snapshot};
+use crate::{Error, Result};
+
+// ---- invariants ---------------------------------------------------------
+
+/// One operator-declared online invariant over a snapshot stream.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Invariant {
+    /// No operator (label) in any emitted window may cost more than
+    /// this many Joules per op, on the more expensive side. Windows
+    /// without per-label findings are checked on their mean pair cost.
+    MaxOpJ(f64),
+    /// No emitted window may waste more than this percentage of its
+    /// more expensive side's energy.
+    MaxWindowWastePct(f64),
+    /// No pair may recover resyncs faster than this rate per minute of
+    /// stream time (a rolling 60-second window over the pair's own
+    /// cumulative op time — snapshots carry no wall clock).
+    MaxResyncsPerMin(f64),
+}
+
+impl Invariant {
+    /// The invariant's stable name — the CLI flag without the leading
+    /// dashes, carried verbatim in [`Alarm::invariant`].
+    pub fn name(&self) -> &'static str {
+        match self {
+            Invariant::MaxOpJ(_) => "max-op-j",
+            Invariant::MaxWindowWastePct(_) => "max-window-waste-pct",
+            Invariant::MaxResyncsPerMin(_) => "max-resyncs-per-min",
+        }
+    }
+
+    pub fn limit(&self) -> f64 {
+        match self {
+            Invariant::MaxOpJ(l)
+            | Invariant::MaxWindowWastePct(l)
+            | Invariant::MaxResyncsPerMin(l) => *l,
+        }
+    }
+}
+
+/// Stream-time microseconds per rolling resync-rate window.
+const MINUTE_US: f64 = 60.0 * 1_000_000.0;
+
+/// Evaluates [`Invariant`]s over a decoded snapshot stream.
+///
+/// Feed every snapshot (live from a follower, or post-hoc from
+/// [`crate::telemetry::load_dir`]) through [`Monitor::observe`]; each
+/// violation is returned once — re-observing the same window (a replay
+/// after a live tail, an overlapping poll) cannot re-raise its alarm.
+pub struct Monitor {
+    invariants: Vec<Invariant>,
+    /// Per-pair cumulative stream time (µs), advanced per window by the
+    /// slower side — the denominator for per-minute rates.
+    cum_time_us: BTreeMap<String, f64>,
+    /// Per-pair resync positions in cumulative stream time (µs),
+    /// pruned to the rolling minute.
+    resync_times: BTreeMap<String, Vec<f64>>,
+    /// `(pair, invariant name, window seq or resync at_ops)` already
+    /// alarmed — the exactly-once guard.
+    seen: BTreeSet<(String, &'static str, usize)>,
+    /// Every alarm raised, in observation order.
+    pub alarms: Vec<Alarm>,
+}
+
+impl Monitor {
+    pub fn new(invariants: Vec<Invariant>) -> Monitor {
+        Monitor {
+            invariants,
+            cum_time_us: BTreeMap::new(),
+            resync_times: BTreeMap::new(),
+            seen: BTreeSet::new(),
+            alarms: Vec::new(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.invariants.is_empty()
+    }
+
+    /// Check one snapshot against every invariant; returns the alarms
+    /// it newly raised (also appended to [`Monitor::alarms`]).
+    pub fn observe(&mut self, snap: &Snapshot) -> Vec<Alarm> {
+        let mut raised = Vec::new();
+        match snap {
+            Snapshot::Window { pair, report } => {
+                if report.seq == WindowReport::PEEK_SEQ {
+                    return raised;
+                }
+                *self.cum_time_us.entry(pair.clone()).or_insert(0.0) +=
+                    report.time_a_us.max(report.time_b_us);
+                for inv in self.invariants.clone() {
+                    let alarm = match inv {
+                        Invariant::MaxOpJ(limit) => check_op_j(pair, report, limit),
+                        Invariant::MaxWindowWastePct(limit) => {
+                            check_waste_pct(pair, report, limit)
+                        }
+                        Invariant::MaxResyncsPerMin(_) => None,
+                    };
+                    if let Some(a) = alarm {
+                        self.raise(&mut raised, inv.name(), report.seq, a);
+                    }
+                }
+            }
+            Snapshot::Resync { pair, event } => {
+                let now = self.cum_time_us.get(pair).copied().unwrap_or(0.0);
+                let times = self.resync_times.entry(pair.clone()).or_default();
+                times.push(now);
+                times.retain(|&t| t >= now - MINUTE_US);
+                let in_window = times.len();
+                for inv in self.invariants.clone() {
+                    let Invariant::MaxResyncsPerMin(limit) = inv else { continue };
+                    // a stream younger than a minute is rated over the
+                    // time it has actually run (floor: one window hop),
+                    // so a burst at startup still alarms
+                    let minutes = if now <= 0.0 { 1.0 } else { now.min(MINUTE_US) / MINUTE_US };
+                    let rate = in_window as f64 / minutes;
+                    if rate > limit {
+                        let a = Alarm {
+                            pair: pair.clone(),
+                            invariant: inv.name().to_string(),
+                            seq: None,
+                            value: rate,
+                            limit,
+                            detail: format!(
+                                "{in_window} resyncs in the rolling minute at op {} \
+                                 (last skipped {}+{})",
+                                event.at_ops, event.skipped_a, event.skipped_b
+                            ),
+                        };
+                        self.raise(&mut raised, inv.name(), event.at_ops, a);
+                    }
+                }
+            }
+            _ => {}
+        }
+        raised
+    }
+
+    fn raise(&mut self, out: &mut Vec<Alarm>, name: &'static str, at: usize, alarm: Alarm) {
+        if self.seen.insert((alarm.pair.clone(), name, at)) {
+            self.alarms.push(alarm.clone());
+            out.push(alarm);
+        }
+    }
+}
+
+fn check_op_j(pair: &str, report: &WindowReport, limit: f64) -> Option<Alarm> {
+    // worst per-op cost on the more expensive side: per label where the
+    // window carries findings, else the window mean over its pairs
+    let mut worst: Option<(f64, String)> = None;
+    for f in &report.findings {
+        if f.ops == 0 {
+            continue;
+        }
+        let per_op = f.energy_a_j.max(f.energy_b_j) / f.ops as f64;
+        if worst.as_ref().is_none_or(|(w, _)| per_op > *w) {
+            worst = Some((per_op, format!("label {}", f.label)));
+        }
+    }
+    if worst.is_none() && report.pairs > 0 {
+        let per_op = report.energy_a_j.max(report.energy_b_j) / report.pairs as f64;
+        worst = Some((per_op, format!("window mean over {} pairs", report.pairs)));
+    }
+    let (value, which) = worst?;
+    (value > limit).then(|| Alarm {
+        pair: pair.to_string(),
+        invariant: "max-op-j".to_string(),
+        seq: Some(report.seq),
+        value,
+        limit,
+        detail: format!("{which} in window #{}", report.seq),
+    })
+}
+
+fn check_waste_pct(pair: &str, report: &WindowReport, limit: f64) -> Option<Alarm> {
+    let denom = report.energy_a_j.max(report.energy_b_j);
+    if denom <= 0.0 {
+        return None;
+    }
+    let pct = 100.0 * report.wasted_j / denom;
+    (pct > limit).then(|| Alarm {
+        pair: pair.to_string(),
+        invariant: "max-window-waste-pct".to_string(),
+        seq: Some(report.seq),
+        value: pct,
+        limit,
+        detail: format!(
+            "window #{} wasted {:.6} J of {:.6} J",
+            report.seq, report.wasted_j, denom
+        ),
+    })
+}
+
+// ---- dashboard state ----------------------------------------------------
+
+/// Rolling per-pair aggregates drawn by the dashboard.
+#[derive(Clone, Debug, Default)]
+pub struct PairStat {
+    /// Windows observed (live counts; a `Summary` snapshot overwrites
+    /// the cumulative fields below with the auditor's exact totals).
+    pub windows: usize,
+    pub windows_flagged: usize,
+    pub quarantined: usize,
+    pub wasted_j: f64,
+    pub energy_a_j: f64,
+    pub energy_b_j: f64,
+    pub ops: usize,
+    pub resyncs: usize,
+    pub aligned: bool,
+    pub last_seq: Option<usize>,
+    /// True once the pair's `finish`-time summary has been observed.
+    pub summarized: bool,
+}
+
+/// The dashboard's fold over a snapshot stream: rolling per-pair
+/// stats, the divergence feed, and the alarm log. Rendering lives in
+/// [`crate::report::render_dash`].
+#[derive(Default)]
+pub struct DashState {
+    pub pairs: BTreeMap<String, PairStat>,
+    pub divergences: Vec<FleetDivergence>,
+    pub alarms: Vec<Alarm>,
+    /// Latest persisted fleet ranking, if any.
+    pub ranking: Vec<RankEntry>,
+    pub windows: usize,
+    pub resyncs: usize,
+    pub session: String,
+}
+
+impl DashState {
+    pub fn new() -> DashState {
+        DashState::default()
+    }
+
+    /// Fold one snapshot into the dashboard.
+    pub fn observe(&mut self, snap: &Snapshot) {
+        match snap {
+            Snapshot::Window { pair, report } => {
+                if report.seq == WindowReport::PEEK_SEQ {
+                    return;
+                }
+                let s = self.pairs.entry(pair.clone()).or_default();
+                s.windows += 1;
+                s.last_seq = Some(report.seq);
+                s.aligned = report.aligned;
+                if report.quarantined {
+                    s.quarantined += 1;
+                } else {
+                    if report.findings.iter().any(|f| !f.is_tradeoff) {
+                        s.windows_flagged += 1;
+                    }
+                    s.wasted_j += report.wasted_j;
+                }
+                s.ops += report.pairs;
+                s.energy_a_j += report.energy_a_j;
+                s.energy_b_j += report.energy_b_j;
+                self.windows += 1;
+            }
+            Snapshot::Resync { pair, .. } => {
+                self.pairs.entry(pair.clone()).or_default().resyncs += 1;
+                self.resyncs += 1;
+            }
+            Snapshot::Summary { pair, summary } => {
+                // the auditor's own cumulative accounting is exact
+                // (windows double-count overlapping hops; the summary
+                // ledgers each pair once) — overwrite the rolling view
+                let s = self.pairs.entry(pair.clone()).or_default();
+                s.wasted_j = summary.wasted_j;
+                s.energy_a_j = summary.energy_a_j;
+                s.energy_b_j = summary.energy_b_j;
+                s.ops = summary.ops;
+                s.windows = summary.windows;
+                s.windows_flagged = summary.windows_flagged;
+                s.quarantined = summary.windows_quarantined;
+                s.resyncs = summary.resyncs;
+                s.aligned = summary.aligned;
+                s.summarized = true;
+            }
+            Snapshot::Divergence { event } => self.divergences.push(event.clone()),
+            Snapshot::Fleet { ranking } => self.ranking = ranking.clone(),
+            Snapshot::Session { header } => {
+                if self.session.is_empty() {
+                    self.session = header.session_id.clone();
+                }
+            }
+            Snapshot::Alarm { alarm } => self.alarms.push(alarm.clone()),
+            Snapshot::Ledger { .. } => {}
+        }
+    }
+
+    /// Pairs ranked most-wasteful first (name tiebreak) — the same
+    /// comparator as the persisted fleet ranking.
+    pub fn ranked(&self) -> Vec<(&String, &PairStat)> {
+        let mut v: Vec<(&String, &PairStat)> = self.pairs.iter().collect();
+        v.sort_by(|a, b| {
+            b.1.wasted_j.total_cmp(&a.1.wasted_j).then_with(|| a.0.cmp(b.0))
+        });
+        v
+    }
+}
+
+// ---- alarm publishing ---------------------------------------------------
+
+/// Fan-out of alarm NDJSON lines to subscribers over *bounded*
+/// channels: a subscriber that stalls loses lines (counted in
+/// [`AlarmPublisher::dropped`]) instead of backpressuring the stream
+/// being measured. A disconnected subscriber is dropped from the list.
+pub struct AlarmPublisher {
+    subs: Arc<Mutex<Vec<SyncSender<String>>>>,
+    depth: usize,
+    /// Lines offered to subscribers (per [`AlarmPublisher::publish`]
+    /// call, not per subscriber).
+    pub published: usize,
+    /// Sends refused because a subscriber's bounded queue was full.
+    pub dropped: usize,
+}
+
+impl AlarmPublisher {
+    /// `depth` is each subscriber's bounded queue length (the most a
+    /// stalled collector can lag before losing lines). Must be > 0.
+    pub fn new(depth: usize) -> AlarmPublisher {
+        assert!(depth > 0, "a zero-depth queue would drop every line");
+        AlarmPublisher {
+            subs: Arc::new(Mutex::new(Vec::new())),
+            depth,
+            published: 0,
+            dropped: 0,
+        }
+    }
+
+    /// Attach an in-process subscriber; returns its receiving end.
+    pub fn subscribe(&self) -> Receiver<String> {
+        let (tx, rx) = sync_channel(self.depth);
+        self.subs.lock().expect("publisher lock").push(tx);
+        rx
+    }
+
+    pub fn subscriber_count(&self) -> usize {
+        self.subs.lock().expect("publisher lock").len()
+    }
+
+    /// Offer one line to every live subscriber: full queues drop and
+    /// count, disconnected subscribers are removed.
+    pub fn publish(&mut self, line: &str) {
+        self.published += 1;
+        let mut dropped = 0usize;
+        self.subs.lock().expect("publisher lock").retain(|tx| {
+            match tx.try_send(line.to_string()) {
+                Ok(()) => true,
+                Err(TrySendError::Full(_)) => {
+                    dropped += 1;
+                    true
+                }
+                Err(TrySendError::Disconnected(_)) => false,
+            }
+        });
+        self.dropped += dropped;
+    }
+
+    /// Serve alarm lines over TCP: every connection to the returned
+    /// port becomes a subscriber (newline-delimited NDJSON, the same
+    /// lines [`Snapshot::to_line`] persists). Bind to port 0 for an
+    /// ephemeral port. The accept loop runs on a detached thread for
+    /// the life of the process; a connection that stalls past the
+    /// queue depth loses lines, a closed one unsubscribes itself.
+    pub fn serve(&self, addr: &str) -> Result<u16> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Error::msg(format!("bind alarm listener {addr}: {e}")))?;
+        let port = listener
+            .local_addr()
+            .map_err(|e| Error::msg(format!("alarm listener addr: {e}")))?
+            .port();
+        let subs = Arc::clone(&self.subs);
+        let depth = self.depth;
+        thread::spawn(move || {
+            for conn in listener.incoming() {
+                let Ok(mut conn) = conn else { continue };
+                let (tx, rx) = sync_channel::<String>(depth);
+                subs.lock().expect("publisher lock").push(tx);
+                thread::spawn(move || {
+                    // rx disconnects when the publisher retires the
+                    // sender; a write error retires the connection the
+                    // other way round (publish sees Disconnected)
+                    for line in rx {
+                        if conn.write_all(line.as_bytes()).is_err()
+                            || conn.write_all(b"\n").is_err()
+                        {
+                            break;
+                        }
+                    }
+                });
+            }
+        });
+        Ok(port)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::{ResyncEvent, StreamFinding};
+    use crate::detect::Side;
+
+    fn window(pair: &str, seq: usize, ea: f64, eb: f64, wasted: f64) -> Snapshot {
+        Snapshot::Window {
+            pair: pair.to_string(),
+            report: WindowReport {
+                seq,
+                pairs: 10,
+                energy_a_j: ea,
+                energy_b_j: eb,
+                time_a_us: 1000.0,
+                time_b_us: 900.0,
+                findings: Vec::new(),
+                wasted_j: wasted,
+                aligned: true,
+                resyncs: 0,
+                quarantined: false,
+                content_mismatches: 0,
+                window_fp: 7,
+            },
+        }
+    }
+
+    #[test]
+    fn waste_pct_breach_alarms_exactly_once_per_window() {
+        let mut m = Monitor::new(vec![Invariant::MaxWindowWastePct(10.0)]);
+        let bad = window("p0", 3, 10.0, 6.0, 4.0); // 40% of 10 J
+        let ok = window("p0", 4, 10.0, 9.6, 0.4); // 4%
+        assert_eq!(m.observe(&bad).len(), 1);
+        assert_eq!(m.observe(&bad).len(), 0, "re-observation must not re-alarm");
+        assert_eq!(m.observe(&ok).len(), 0);
+        assert_eq!(m.alarms.len(), 1);
+        let a = &m.alarms[0];
+        assert_eq!(a.invariant, "max-window-waste-pct");
+        assert_eq!(a.seq, Some(3));
+        assert_eq!(a.limit, 10.0);
+        assert!((a.value - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn op_j_checks_findings_first_and_window_mean_otherwise() {
+        let mut m = Monitor::new(vec![Invariant::MaxOpJ(0.5)]);
+        // no findings: mean = 10 J / 10 pairs = 1 J/op > 0.5
+        let mean_bad = window("p0", 0, 10.0, 8.0, 0.0);
+        let raised = m.observe(&mean_bad);
+        assert_eq!(raised.len(), 1);
+        assert!(raised[0].detail.contains("window mean"));
+        // with findings the worst label wins and is named
+        let mut w = window("p1", 0, 1.0, 1.0, 0.0);
+        if let Snapshot::Window { report, .. } = &mut w {
+            report.findings.push(StreamFinding {
+                label: "serve.proj".to_string(),
+                ops: 2,
+                energy_a_j: 2.0,
+                energy_b_j: 1.0,
+                time_a_us: 10.0,
+                time_b_us: 10.0,
+                diff_frac: 0.5,
+                wasteful: Side::A,
+                is_tradeoff: false,
+            });
+        }
+        let raised = m.observe(&w);
+        assert_eq!(raised.len(), 1);
+        assert!(raised[0].detail.contains("serve.proj"));
+        assert!((raised[0].value - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn resync_rate_is_per_rolling_minute_of_stream_time() {
+        let mut m = Monitor::new(vec![Invariant::MaxResyncsPerMin(2.0)]);
+        let ev = |at| Snapshot::Resync {
+            pair: "p0".to_string(),
+            event: ResyncEvent { at_ops: at, skipped_a: 1, skipped_b: 0 },
+        };
+        // stream has run 1000 µs; even one resync in the window rates
+        // far above 2/min once normalized — but the floor keeps a
+        // zero-time stream from dividing by zero
+        m.observe(&window("p0", 0, 1.0, 1.0, 0.0));
+        let raised = m.observe(&ev(10));
+        assert_eq!(raised.len(), 1);
+        assert_eq!(raised[0].seq, None);
+        assert!(raised[0].value > 2.0);
+        // the same resync position never re-alarms
+        assert_eq!(m.observe(&ev(10)).len(), 0);
+    }
+
+    #[test]
+    fn dash_state_prefers_the_summary_totals_once_seen() {
+        let mut d = DashState::new();
+        d.observe(&window("p0", 0, 5.0, 4.0, 1.0));
+        d.observe(&window("p0", 1, 5.0, 4.0, 1.0));
+        assert_eq!(d.pairs["p0"].windows, 2);
+        assert!((d.pairs["p0"].wasted_j - 2.0).abs() < 1e-12);
+        let summary = crate::stream::StreamSummary {
+            ops: 20,
+            windows: 2,
+            energy_a_j: 10.0,
+            energy_b_j: 8.0,
+            time_a_us: 2000.0,
+            time_b_us: 1800.0,
+            wasted_j: 1.5,
+            windows_flagged: 1,
+            windows_quarantined: 0,
+            top_labels: Vec::new(),
+            aligned: true,
+            fingerprint_a: 1,
+            fingerprint_b: 1,
+            unpaired: 0,
+            resyncs: 0,
+            resync_skipped: 0,
+            resync_log: Vec::new(),
+            content_mismatches: 0,
+            reports_dropped: 0,
+            peak_retained_segments: 0,
+            peak_window_pairs: 0,
+            peak_pending: 0,
+        };
+        d.observe(&Snapshot::Summary { pair: "p0".to_string(), summary });
+        assert!(d.pairs["p0"].summarized);
+        assert!((d.pairs["p0"].wasted_j - 1.5).abs() < 1e-12, "summary is authoritative");
+        // ranking: most wasteful first
+        d.observe(&window("p1", 0, 9.0, 1.0, 8.0));
+        let ranked = d.ranked();
+        assert_eq!(ranked[0].0, "p1");
+    }
+
+    #[test]
+    fn stalled_subscriber_drops_and_counts_instead_of_blocking() {
+        let mut p = AlarmPublisher::new(2);
+        let rx = p.subscribe();
+        for i in 0..10 {
+            p.publish(&format!("line {i}"));
+        }
+        assert_eq!(p.published, 10);
+        assert_eq!(p.dropped, 8, "queue depth 2: the rest must drop");
+        let got: Vec<String> = rx.try_iter().collect();
+        assert_eq!(got, vec!["line 0".to_string(), "line 1".to_string()]);
+        // a dropped receiver unsubscribes on the next publish
+        drop(rx);
+        p.publish("after");
+        assert_eq!(p.subscriber_count(), 0);
+    }
+
+    #[test]
+    fn tcp_subscriber_receives_published_lines() {
+        use std::io::{BufRead as _, BufReader};
+        use std::net::TcpStream;
+        use std::time::Duration;
+
+        let mut p = AlarmPublisher::new(16);
+        let port = p.serve("127.0.0.1:0").unwrap();
+        let conn = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        // wait for the accept loop to register the subscription
+        for _ in 0..200 {
+            if p.subscriber_count() > 0 {
+                break;
+            }
+            thread::sleep(Duration::from_millis(5));
+        }
+        assert!(p.subscriber_count() > 0, "accept loop never registered");
+        p.publish("{\"type\":\"alarm\"}");
+        let mut line = String::new();
+        BufReader::new(conn).read_line(&mut line).unwrap();
+        assert_eq!(line, "{\"type\":\"alarm\"}\n");
+    }
+}

@@ -97,6 +97,7 @@ pub mod runtime;
 pub mod coordinator;
 pub mod stream;
 pub mod telemetry;
+pub mod dash;
 pub mod analysis;
 pub mod report;
 

@@ -10,8 +10,9 @@
 //! magneton stream [--requests 500 --arrival poisson|bursty|steady]
 //!                 [--snapshot-dir d]  # online serving-stream audit
 //!                 [--shard k/M --shard-id host] # one producer shard
-//! magneton replay --dir <d>           # re-render persisted snapshots
+//! magneton replay --dir <d> [--follow] # re-render persisted snapshots
 //! magneton merge <shard dirs...> [--out d] # combine producer shards
+//! magneton dash --dir <d> [--follow]  # live terminal fleet dashboard
 //! ```
 //!
 //! Commands exit non-zero on failure (a missing snapshot/artifact
@@ -33,7 +34,7 @@ use magneton::util::Prng;
 /// swallows one as its value (`magneton --verbose cases`).
 const SUBCOMMANDS: &[&str] = &[
     "cases", "fleet", "ddp", "breakdown", "accuracy", "artifacts", "stream", "replay", "merge",
-    "diff", "lint", "help",
+    "diff", "lint", "dash", "help",
 ];
 
 fn main() -> ExitCode {
@@ -66,6 +67,7 @@ fn main() -> ExitCode {
         "merge" => cmd_merge(&args),
         "diff" => cmd_diff(&args),
         "lint" => cmd_lint(&args),
+        "dash" => cmd_dash(&args),
         "help" => {
             print_help();
             Ok(())
@@ -103,7 +105,13 @@ fn print_help() {
          \x20            --snapshot-dir <d> persists replayable NDJSON snapshots\n\
          \x20 replay     reload a snapshot directory (--dir <d>) offline:\n\
          \x20            re-render windows, per-pair summaries, fleet ranking and\n\
-         \x20            divergence events, and verify the ranking bit-for-bit\n\
+         \x20            divergence events, and verify the ranking bit-for-bit;\n\
+         \x20            --follow tails a live directory instead (rotation-aware,\n\
+         \x20            live feed on stderr), quiesces after --idle-ms, then\n\
+         \x20            prints the identical post-hoc replay; online invariants\n\
+         \x20            (--max-op-j --max-window-waste-pct --max-resyncs-per-min)\n\
+         \x20            raise typed alarms, published on --alarm-port; exits\n\
+         \x20            non-zero under --deny-alarms if any alarm was raised\n\
          \x20 merge      combine producer-shard snapshot directories (written by\n\
          \x20            `stream --shard k/M`) into one logical session: refuses\n\
          \x20            mixed sessions/configs and duplicate shards, re-ranks the\n\
@@ -130,7 +138,12 @@ fn print_help() {
          \x20            config flags finds 1-minimal flag sets whose joint flip\n\
          \x20            saves energy where no single flip survives the gate,\n\
          \x20            reported as `interact~<target>` pseudo-targets;\n\
-         \x20            --json <path> writes the full report machine-readably\n\n\
+         \x20            --json <path> writes the full report machine-readably\n\
+         \x20 dash       terminal fleet dashboard over a snapshot directory\n\
+         \x20            (--dir <d>): rolling per-pair waste, fleet ranking,\n\
+         \x20            divergence feed, and alarm log; --follow re-renders as\n\
+         \x20            the stream writes, with the same invariant flags and\n\
+         \x20            --deny-alarms gate as `replay --follow`\n\n\
          OPTIONS: --id <case> --eps <f64> --threshold <f64> --seed <u64> --device <h200|rtx4090>\n\
          STREAM:  --requests <n=500> --arrival <poisson|bursty|steady> --rate <hz=200>\n\
          \x20        --burst <n=16> --window <pairs=250> --hop <pairs> --ring <segs=512>\n\
@@ -140,6 +153,10 @@ fn print_help() {
          \x20        --shard <k/M> --shard-id <name=shard-k>  (audit only this\n\
          \x20        shard's slice of the fleet; requires --snapshot-dir)\n\
          REPLAY:  --dir <dir=snapshots> --windows <n=12> --no-ranking-ok\n\
+         \x20        --follow --poll-ms <n=100> --idle-ms <n=2000> --deny-alarms\n\
+         \x20        --max-op-j <J> --max-window-waste-pct <pct>\n\
+         \x20        --max-resyncs-per-min <rate> --alarm-port <p> --alarm-queue <n=64>\n\
+         DASH:    --dir <dir=snapshots> --follow + the REPLAY invariant flags\n\
          MERGE:   <shard dirs...> or --dir <a,b,c> --out <dir> --windows <n=12>\n\
          \x20        --window <correlate ops=256> --min-pairs <n=2> --partial-ok\n\
          DIFF:    --dir-a <dir> --dir-b <dir> --regress-threshold <frac=0.05>\n\
@@ -549,6 +566,9 @@ fn cmd_stream(args: &Args) -> magneton::Result<()> {
 /// it).
 fn cmd_replay(args: &Args) -> magneton::Result<()> {
     use magneton::telemetry::Replay;
+    if args.flag("follow") {
+        return cmd_replay_follow(args);
+    }
     let dir = dir_arg(args, "dir", "snapshots");
     let replay = Replay::load(&dir)?;
     println!(
@@ -563,7 +583,135 @@ fn cmd_replay(args: &Args) -> magneton::Result<()> {
     if replay.windows.is_empty() && replay.summaries.is_empty() {
         return Err(magneton::Error::msg(format!("no snapshots found under {}", dir.display())));
     }
-    print_replay_body(&replay, args)
+    print_replay_body(&replay, args)?;
+    deny_alarms_gate(args, replay.alarms.len())
+}
+
+/// The operator-declared online invariants, parsed from the shared
+/// `--max-op-j` / `--max-window-waste-pct` / `--max-resyncs-per-min`
+/// flags (`replay --follow` and `dash`).
+fn invariants_from(args: &Args) -> magneton::Result<Vec<magneton::dash::Invariant>> {
+    use magneton::dash::Invariant;
+    let mut v = Vec::new();
+    for (key, mk) in [
+        ("max-op-j", Invariant::MaxOpJ as fn(f64) -> Invariant),
+        ("max-window-waste-pct", Invariant::MaxWindowWastePct as fn(f64) -> Invariant),
+        ("max-resyncs-per-min", Invariant::MaxResyncsPerMin as fn(f64) -> Invariant),
+    ] {
+        if let Some(raw) = args.options.get(key) {
+            let limit: f64 = raw.parse().map_err(|_| {
+                magneton::Error::msg(format!("--{key} expects a number, got `{raw}`"))
+            })?;
+            v.push(mk(limit));
+        }
+    }
+    Ok(v)
+}
+
+/// Optional TCP alarm feed (`--alarm-port <p>`, 0 for ephemeral), with
+/// a bounded per-subscriber queue (`--alarm-queue <n>`).
+fn alarm_publisher(args: &Args) -> magneton::Result<Option<magneton::dash::AlarmPublisher>> {
+    let Some(port) = args.options.get("alarm-port") else { return Ok(None) };
+    let publisher = magneton::dash::AlarmPublisher::new(args.get_parse("alarm-queue", 64usize));
+    let bound = publisher.serve(&format!("127.0.0.1:{port}"))?;
+    eprintln!("alarm feed listening on 127.0.0.1:{bound}");
+    Ok(Some(publisher))
+}
+
+/// The `--deny-alarms` CI gate, shared by `replay` and `dash`.
+fn deny_alarms_gate(args: &Args, alarms: usize) -> magneton::Result<()> {
+    if args.flag("deny-alarms") && alarms > 0 {
+        return Err(magneton::Error::msg(format!(
+            "{alarms} invariant alarm(s) raised (--deny-alarms)"
+        )));
+    }
+    Ok(())
+}
+
+/// `magneton replay --follow`: tail a live snapshot directory through
+/// the rotation-aware follower, stream windows/resyncs/divergences and
+/// invariant alarms to *stderr* as they land, and — once the directory
+/// has been quiet for `--idle-ms` — print the canonical replay to
+/// stdout, byte-identical to what `magneton replay --dir <d>` prints
+/// for the completed directory (asserted in `tests/follow.rs` and the
+/// CI dash smoke).
+fn cmd_replay_follow(args: &Args) -> magneton::Result<()> {
+    use magneton::dash::Monitor;
+    use magneton::telemetry::follow::Follower;
+    use magneton::telemetry::Snapshot;
+    let dir = dir_arg(args, "dir", "snapshots");
+    let poll_ms: u64 = args.get_parse("poll-ms", 100u64);
+    let idle_ms: u64 = args.get_parse("idle-ms", 2000u64);
+    let mut monitor = Monitor::new(invariants_from(args)?);
+    let mut publisher = alarm_publisher(args)?;
+    let mut follower = Follower::new(&dir);
+    let mut idle = 0u64;
+    loop {
+        let fresh = follower.poll()?;
+        if fresh.is_empty() {
+            if idle >= idle_ms {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(poll_ms));
+            idle += poll_ms;
+            continue;
+        }
+        idle = 0;
+        for snap in &fresh {
+            // the live feed goes to stderr so stdout stays the
+            // canonical (byte-comparable) replay
+            match snap {
+                Snapshot::Window { pair, report } => {
+                    eprintln!("[{pair}] {}", report::render_window(report));
+                }
+                Snapshot::Resync { pair, event } => {
+                    eprintln!(
+                        "[{pair}] resync at op {}: skipped {} (A) + {} (B)",
+                        event.at_ops, event.skipped_a, event.skipped_b
+                    );
+                }
+                Snapshot::Divergence { event } => {
+                    eprintln!("{}", report::render_divergence(event));
+                }
+                Snapshot::Alarm { alarm } => eprintln!("{}", report::render_alarm(alarm)),
+                _ => {}
+            }
+            for alarm in monitor.observe(snap) {
+                eprintln!("{}", report::render_alarm(&alarm));
+                if let Some(p) = publisher.as_mut() {
+                    p.publish(&Snapshot::Alarm { alarm }.to_line());
+                }
+            }
+        }
+    }
+    if let Some(p) = &publisher {
+        if p.dropped > 0 {
+            eprintln!("alarm feed: {} line(s) dropped on stalled subscribers", p.dropped);
+        }
+    }
+    if follower.reanchors + follower.vanished > 0 {
+        eprintln!(
+            "follow: re-anchored {} time(s), {} file(s) vanished before open (rotation races \
+             survived; snapshots consumed before a drop are retained)",
+            follower.reanchors, follower.vanished
+        );
+    }
+    let live_alarms = monitor.alarms.len();
+    let replay = follower.into_replay();
+    println!(
+        "replaying {}: {} windows, {} resyncs, {} summaries, {} rankings, {} divergences\n",
+        dir.display(),
+        replay.windows.len(),
+        replay.resyncs.len(),
+        replay.summaries.len(),
+        replay.rankings.len(),
+        replay.divergences.len()
+    );
+    if replay.windows.is_empty() && replay.summaries.is_empty() {
+        return Err(magneton::Error::msg(format!("no snapshots found under {}", dir.display())));
+    }
+    print_replay_body(&replay, args)?;
+    deny_alarms_gate(args, live_alarms + replay.alarms.len())
 }
 
 /// Shared rendering of a loaded [`Replay`](magneton::telemetry::Replay):
@@ -606,6 +754,12 @@ fn print_replay_body(replay: &magneton::telemetry::Replay, args: &Args) -> magne
         println!();
         for d in &replay.divergences {
             println!("{}", report::render_divergence(d));
+        }
+    }
+    if !replay.alarms.is_empty() {
+        println!();
+        for a in &replay.alarms {
+            println!("{}", report::render_alarm(a));
         }
     }
     for ranking in &replay.rankings {
@@ -665,7 +819,7 @@ fn cmd_merge(args: &Args) -> magneton::Result<()> {
     // stays byte-comparable with `magneton replay` of an unsharded run
     for s in &merged.shards {
         eprintln!(
-            "shard {}/{} `{}` ({}): {} pairs, {} snapshots in {} files{}{}",
+            "shard {}/{} `{}` ({}): {} pairs, {} snapshots in {} files{}{}{}",
             s.shard_index + 1,
             s.shard_count,
             s.shard_id,
@@ -683,13 +837,18 @@ fn cmd_merge(args: &Args) -> magneton::Result<()> {
             } else {
                 String::new()
             },
+            if s.vanished > 0 {
+                format!(", {} file(s) vanished mid-scan", s.vanished)
+            } else {
+                String::new()
+            },
         );
     }
-    if merged.torn_fragments + merged.missing_rotations > 0 {
+    if merged.torn_fragments + merged.missing_rotations + merged.vanished > 0 {
         eprintln!(
-            "warning: merged with damage: {} torn fragment(s), {} missing rotation file(s) — \
-             attribution for undamaged pairs is unaffected",
-            merged.torn_fragments, merged.missing_rotations
+            "warning: merged with damage: {} torn fragment(s), {} missing rotation file(s), \
+             {} vanished mid-scan — attribution for undamaged pairs is unaffected",
+            merged.torn_fragments, merged.missing_rotations, merged.vanished
         );
     }
     println!(
@@ -714,6 +873,68 @@ fn cmd_merge(args: &Args) -> magneton::Result<()> {
         );
     }
     Ok(())
+}
+
+/// Terminal fleet dashboard over a snapshot directory: rolling
+/// per-pair waste, fleet ranking, divergence feed, and alarm log —
+/// one frame over the directory as it stands, or (with `--follow`) a
+/// frame per batch of fresh snapshots until the stream quiesces. The
+/// same invariant flags as `replay --follow` run online; `--deny-alarms`
+/// turns any violation into a non-zero exit.
+fn cmd_dash(args: &Args) -> magneton::Result<()> {
+    use magneton::dash::{DashState, Monitor};
+    use magneton::telemetry::follow::Follower;
+    use magneton::telemetry::Snapshot;
+    let dir = dir_arg(args, "dir", "snapshots");
+    let follow = args.flag("follow");
+    let poll_ms: u64 = args.get_parse("poll-ms", 200u64);
+    let idle_ms: u64 = args.get_parse("idle-ms", 2000u64);
+    let mut monitor = Monitor::new(invariants_from(args)?);
+    let mut publisher = alarm_publisher(args)?;
+    let mut state = DashState::new();
+    let mut follower = Follower::new(&dir);
+    let mut idle = 0u64;
+    loop {
+        let fresh = follower.poll()?;
+        if fresh.is_empty() {
+            if !follow || idle >= idle_ms {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(poll_ms));
+            idle += poll_ms;
+            continue;
+        }
+        idle = 0;
+        for snap in &fresh {
+            state.observe(snap);
+            for alarm in monitor.observe(snap) {
+                eprintln!("{}", report::render_alarm(&alarm));
+                let snap = Snapshot::Alarm { alarm };
+                if let Some(p) = publisher.as_mut() {
+                    p.publish(&snap.to_line());
+                }
+                state.observe(&snap);
+            }
+        }
+        if follow {
+            println!("{}", report::render_dash(&state));
+        }
+    }
+    if state.pairs.is_empty() {
+        return Err(magneton::Error::msg(format!(
+            "no snapshots found under {} (is the stream writing there yet?)",
+            dir.display()
+        )));
+    }
+    if !follow {
+        print!("{}", report::render_dash(&state));
+    }
+    if let Some(p) = &publisher {
+        if p.dropped > 0 {
+            eprintln!("alarm feed: {} line(s) dropped on stalled subscribers", p.dropped);
+        }
+    }
+    deny_alarms_gate(args, state.alarms.len())
 }
 
 /// Cross-session differential replay: load two persisted sessions,

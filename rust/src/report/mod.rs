@@ -11,7 +11,8 @@ use crate::coordinator::AuditOutcome;
 use crate::exec::RunArtifacts;
 use crate::stream::{StreamSummary, WindowReport};
 use crate::telemetry::session::{MatchVerdict, SessionDiff};
-use crate::telemetry::RankEntry;
+use crate::dash::DashState;
+use crate::telemetry::{Alarm, RankEntry};
 use crate::util::table::{fmt_joules, fmt_us, Table};
 
 /// Joules with an explicit sign (for delta columns).
@@ -239,6 +240,80 @@ pub fn render_divergence(d: &FleetDivergence) -> String {
         d.pairs.len(),
         attribution.join("; ")
     )
+}
+
+/// One online-invariant violation, as the live feed and the replay
+/// body print it.
+pub fn render_alarm(a: &Alarm) -> String {
+    let at = match a.seq {
+        Some(seq) => format!(" window #{seq}"),
+        None => String::new(),
+    };
+    format!(
+        "ALARM [{}] {}{}: {} over limit {} — {}",
+        a.invariant, a.pair, at, a.value, a.limit, a.detail
+    )
+}
+
+/// One terminal dashboard frame for `magneton dash`: fleet ranking
+/// (most wasteful pair first), rolling totals, the divergence feed,
+/// and the alarm log.
+pub fn render_dash(d: &DashState) -> String {
+    let mut s = String::new();
+    let session =
+        if d.session.is_empty() { "(no header yet)".to_string() } else { d.session.clone() };
+    s.push_str(&format!(
+        "=== Magneton live fleet dash: session {} — {} pairs, {} windows, {} resyncs ===\n",
+        session,
+        d.pairs.len(),
+        d.windows,
+        d.resyncs,
+    ));
+    if d.pairs.is_empty() {
+        s.push_str("waiting for snapshots...\n");
+        return s;
+    }
+    let mut t = Table::new(vec![
+        "rank", "pair", "ops", "energy A", "energy B", "wasted", "flagged", "resyncs", "aligned",
+        "state",
+    ]);
+    for (i, (name, p)) in d.ranked().iter().enumerate() {
+        t.row(vec![
+            (i + 1).to_string(),
+            (*name).clone(),
+            p.ops.to_string(),
+            fmt_joules(p.energy_a_j),
+            fmt_joules(p.energy_b_j),
+            fmt_joules(p.wasted_j),
+            format!("{}/{}", p.windows_flagged, p.windows),
+            p.resyncs.to_string(),
+            if p.aligned { "yes" } else { "NO" }.to_string(),
+            if p.summarized { "final" } else { "live" }.to_string(),
+        ]);
+    }
+    s.push_str(&t.render());
+    let wasted: f64 = d.pairs.values().map(|p| p.wasted_j).sum();
+    s.push_str(&format!("fleet waste: {}\n", fmt_joules(wasted)));
+    let skip = d.divergences.len().saturating_sub(4);
+    if skip > 0 {
+        s.push_str(&format!("... {skip} earlier divergences\n"));
+    }
+    for dv in d.divergences.iter().skip(skip) {
+        s.push_str(&render_divergence(dv));
+        s.push('\n');
+    }
+    if !d.alarms.is_empty() {
+        s.push_str(&format!("alarms ({} total):\n", d.alarms.len()));
+        let skip = d.alarms.len().saturating_sub(8);
+        if skip > 0 {
+            s.push_str(&format!("... {skip} earlier alarms\n"));
+        }
+        for a in d.alarms.iter().skip(skip) {
+            s.push_str(&render_alarm(a));
+            s.push('\n');
+        }
+    }
+    s
 }
 
 /// Ranked cross-session regression report: the `magneton diff` output.

@@ -1,0 +1,342 @@
+//! Rotation-aware tailing of a live snapshot directory.
+//!
+//! [`Follower`] polls a directory a [`super::SnapshotSink`] (or a whole
+//! fleet of them) is still writing, decoding snapshots as they land:
+//!
+//! - **Resume by byte offset.** Each file is re-read from the byte
+//!   after the last complete line consumed, so a poll costs O(new
+//!   data), not O(file).
+//! - **Torn tails are "retry", not damage.** A trailing fragment with
+//!   no newline is a writer mid-`write_all`: the fragment is left in
+//!   place and re-examined next poll ([`Follower::torn_retries`]
+//!   counts the waits). Post-hoc consumers keep their stricter
+//!   [`super::DirScan`] torn accounting.
+//! - **Re-anchor, never error, on rotation races.** A file present in
+//!   the listing but `NotFound` at open — or dropped from the listing
+//!   entirely — was rotated away by the writer's byte budget. The
+//!   follower forgets its cursor and keeps going
+//!   ([`Follower::reanchors`]); snapshots already consumed from the
+//!   dropped file are retained, so a long-lived follower can know
+//!   *more* than a post-hoc replay of the pruned directory.
+//! - **Canonical replay order on demand.** Snapshots are collected
+//!   tagged with `(file_order_key, line index)`; [`Follower::into_replay`]
+//!   reorders them into exactly the order [`super::load_dir`] produces,
+//!   which is what makes `magneton replay --follow` of a completed run
+//!   bit-identical to a post-hoc `magneton replay` (asserted in
+//!   `tests/follow.rs`).
+//!
+//! The poll loop itself (sleep cadence, idle cutoff) belongs to the
+//! caller — `magneton replay --follow` and `magneton dash --follow`
+//! drive one [`Follower`] each; tests drive it in a tight loop with an
+//! injected reader factory to reproduce the races deterministically.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::Read as _;
+use std::path::{Path, PathBuf};
+
+use super::{file_order_key, snapshot_files, Replay, Snapshot};
+use crate::Result;
+
+/// Consumption state of one tailed file.
+#[derive(Clone, Copy, Debug, Default)]
+struct FileCursor {
+    /// Bytes consumed: the offset just past the last complete line.
+    offset: u64,
+    /// Complete lines consumed (the absolute line index of the next
+    /// line, which tags collected snapshots for canonical reordering).
+    lines: usize,
+}
+
+/// One collected snapshot, tagged for canonical replay order.
+type Tagged = ((String, u64, String), usize, Snapshot);
+
+/// Incremental, rotation-aware reader of a live snapshot directory.
+///
+/// Create with [`Follower::new`], call [`Follower::poll`] on whatever
+/// cadence suits (each call returns the snapshots that became complete
+/// since the last), and finish with [`Follower::into_replay`] for the
+/// canonical post-hoc view.
+pub struct Follower {
+    dir: PathBuf,
+    cursors: BTreeMap<PathBuf, FileCursor>,
+    collected: Vec<Tagged>,
+    /// Times the follower forgot a cursor because its file rotated out
+    /// from under it (dropped from the listing, `NotFound` at open, or
+    /// recreated shorter than the consumed offset).
+    pub reanchors: usize,
+    /// Files listed but gone before they were ever opened (no cursor
+    /// yet — nothing was lost, the race just counted).
+    pub vanished: usize,
+    /// Polls that found a trailing fragment still missing its newline
+    /// and left it for the next poll.
+    pub torn_retries: usize,
+    /// Complete lines that failed to decode as snapshots and were
+    /// skipped. A live tailer is lenient where [`super::load_dir`] is
+    /// strict: one corrupt line must not blind the dashboard to every
+    /// line after it.
+    pub decode_errors: usize,
+}
+
+impl Follower {
+    /// Tail `dir`. The directory does not have to exist yet — polls
+    /// before the writer's first rotation simply return nothing.
+    pub fn new(dir: impl Into<PathBuf>) -> Follower {
+        Follower {
+            dir: dir.into(),
+            cursors: BTreeMap::new(),
+            collected: Vec::new(),
+            reanchors: 0,
+            vanished: 0,
+            torn_retries: 0,
+            decode_errors: 0,
+        }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Snapshots collected so far.
+    pub fn collected(&self) -> usize {
+        self.collected.len()
+    }
+
+    /// One incremental pass over the directory: returns the snapshots
+    /// whose lines became complete since the last poll, in arrival
+    /// (file listing, then line) order.
+    pub fn poll(&mut self) -> Result<Vec<Snapshot>> {
+        self.poll_with(File::open)
+    }
+
+    /// [`Follower::poll`] with an injectable reader factory (the same
+    /// pattern as [`super::scan_dir_with`]), so tests can inject the
+    /// listing/open rotation race deterministically.
+    pub fn poll_with<R, F>(&mut self, mut open: F) -> Result<Vec<Snapshot>>
+    where
+        R: std::io::Read,
+        F: FnMut(&Path) -> std::io::Result<R>,
+    {
+        if !self.dir.exists() {
+            return Ok(Vec::new());
+        }
+        let paths = match snapshot_files(&self.dir) {
+            Ok(p) => p,
+            // the directory itself can vanish between the check and
+            // the listing (a whole session pruned); treat as empty
+            Err(_) if !self.dir.exists() => return Ok(Vec::new()),
+            Err(e) => return Err(e),
+        };
+
+        // files the budget rotated away since the last poll: forget
+        // their cursors (their collected snapshots are retained)
+        let gone: Vec<PathBuf> =
+            self.cursors.keys().filter(|p| !paths.contains(*p)).cloned().collect();
+        for p in gone {
+            self.cursors.remove(&p);
+            self.reanchors += 1;
+        }
+
+        let mut fresh = Vec::new();
+        for path in &paths {
+            let bytes = {
+                let mut read_all = || -> std::io::Result<Vec<u8>> {
+                    let mut r = open(path)?;
+                    let mut bytes = Vec::new();
+                    r.read_to_end(&mut bytes)?;
+                    Ok(bytes)
+                };
+                match read_all() {
+                    Ok(b) => b,
+                    Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                        // listed, then rotated away before the open
+                        if self.cursors.remove(path).is_some() {
+                            self.reanchors += 1;
+                        } else {
+                            self.vanished += 1;
+                        }
+                        continue;
+                    }
+                    Err(e) => {
+                        return Err(crate::Error::msg(format!(
+                            "follow {}: {e}",
+                            path.display()
+                        )))
+                    }
+                }
+            };
+            let key = file_order_key(path);
+            let cur = self.cursors.entry(path.clone()).or_default();
+            if (bytes.len() as u64) < cur.offset {
+                // shorter than what we consumed: the file was replaced
+                // under the same name — restart it, discarding what the
+                // vanished incarnation contributed
+                *cur = FileCursor::default();
+                self.reanchors += 1;
+                self.collected.retain(|(k, _, _)| *k != key);
+            }
+            let tail = &bytes[cur.offset as usize..];
+            let Some(nl) = tail.iter().rposition(|&b| b == b'\n') else {
+                if !tail.is_empty() {
+                    // writer mid-append: leave the fragment for later
+                    self.torn_retries += 1;
+                }
+                continue;
+            };
+            let complete = &tail[..=nl];
+            // lossy conversion: a torn multi-byte char can only sit in
+            // the fragment we already excluded
+            let text = String::from_utf8_lossy(complete);
+            for line in text.lines() {
+                let idx = cur.lines;
+                cur.lines += 1;
+                if line.trim().is_empty() {
+                    continue;
+                }
+                match Snapshot::parse_line(line) {
+                    Ok(snap) => {
+                        self.collected.push((key.clone(), idx, snap.clone()));
+                        fresh.push(snap);
+                    }
+                    Err(_) => self.decode_errors += 1,
+                }
+            }
+            cur.offset += complete.len() as u64;
+        }
+        Ok(fresh)
+    }
+
+    /// Everything collected so far, reordered into canonical replay
+    /// order — per-sink rotation series via [`file_order_key`], line
+    /// order within each file; exactly the order [`super::load_dir`]
+    /// yields for the same directory.
+    pub fn ordered_snapshots(&self) -> Vec<Snapshot> {
+        let mut tagged: Vec<&Tagged> = self.collected.iter().collect();
+        tagged.sort_by(|a, b| a.0.cmp(&b.0).then_with(|| a.1.cmp(&b.1)));
+        tagged.into_iter().map(|(_, _, s)| s.clone()).collect()
+    }
+
+    /// Consume the follower into the same [`Replay`] a post-hoc
+    /// [`Replay::load`] of the (completed) directory would build.
+    pub fn into_replay(self) -> Replay {
+        let mut tagged = self.collected;
+        tagged.sort_by(|a, b| a.0.cmp(&b.0).then_with(|| a.1.cmp(&b.1)));
+        Replay::from_snapshots(tagged.into_iter().map(|(_, _, s)| s).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{
+        load_dir, ResyncEvent, SinkConfig, Snapshot, SnapshotSink,
+    };
+    use super::*;
+    use std::fs;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("magneton-follow-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn resync(i: usize) -> Snapshot {
+        Snapshot::Resync {
+            pair: "p".into(),
+            event: ResyncEvent { at_ops: i, skipped_a: 0, skipped_b: 1 },
+        }
+    }
+
+    #[test]
+    fn polling_a_nonexistent_directory_is_empty_not_an_error() {
+        let mut f = Follower::new(tmp_dir("nodir"));
+        assert!(f.poll().unwrap().is_empty());
+        assert_eq!((f.reanchors, f.vanished, f.torn_retries), (0, 0, 0));
+    }
+
+    #[test]
+    fn incremental_polls_resume_by_offset_and_match_a_posthoc_load() {
+        let dir = tmp_dir("resume");
+        let cfg = SinkConfig { max_snapshot_bytes: 0, rotate_bytes: 200 };
+        let mut sink = SnapshotSink::new(&dir, "p", cfg).unwrap();
+        let mut follower = Follower::new(&dir);
+        let mut live = Vec::new();
+        for i in 0..12 {
+            sink.append(&resync(i)).unwrap();
+            if i % 3 == 0 {
+                live.extend(follower.poll().unwrap());
+            }
+        }
+        live.extend(follower.poll().unwrap());
+        assert!(sink.retained_files() >= 3, "the test must cross rotations");
+        let posthoc: Vec<String> =
+            load_dir(&dir).unwrap().iter().map(Snapshot::to_line).collect();
+        let followed: Vec<String> =
+            follower.ordered_snapshots().iter().map(Snapshot::to_line).collect();
+        assert_eq!(followed, posthoc, "follow must be bit-identical to load_dir");
+        assert_eq!(live.len(), posthoc.len(), "every line surfaced exactly once");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_fragment_is_retried_then_consumed_when_completed() {
+        use std::io::Write as _;
+        let dir = tmp_dir("torn");
+        let mut sink = SnapshotSink::new(&dir, "p", SinkConfig::default()).unwrap();
+        sink.append(&resync(0)).unwrap();
+        let mut follower = Follower::new(&dir);
+        assert_eq!(follower.poll().unwrap().len(), 1);
+        // fault injection: half a line, as an interrupted write_all
+        let line = resync(1).to_line();
+        let (half, rest) = line.split_at(line.len() / 2);
+        let path = dir.join("p-000000.ndjson");
+        let mut f =
+            fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(half.as_bytes()).unwrap();
+        assert!(follower.poll().unwrap().is_empty(), "fragment must not decode");
+        assert_eq!(follower.torn_retries, 1);
+        assert_eq!(follower.decode_errors, 0, "a retry is not an error");
+        f.write_all(rest.as_bytes()).unwrap();
+        f.write_all(b"\n").unwrap();
+        let got = follower.poll().unwrap();
+        assert_eq!(got.len(), 1, "the completed line decodes on the next poll");
+        assert_eq!(got[0].to_line(), line);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn file_dropped_between_listing_and_open_reanchors_without_loss() {
+        let dir = tmp_dir("race");
+        let cfg = SinkConfig { max_snapshot_bytes: 0, rotate_bytes: 150 };
+        let mut sink = SnapshotSink::new(&dir, "p", cfg).unwrap();
+        for i in 0..8 {
+            sink.append(&resync(i)).unwrap();
+        }
+        let mut follower = Follower::new(&dir);
+        follower.poll().unwrap();
+        let before = follower.collected();
+        assert!(before > 0);
+        // the injected race: the oldest file is deleted between the
+        // listing (which saw it) and the open
+        let victim = dir.join("p-000000.ndjson");
+        let fresh = follower
+            .poll_with(|p: &Path| {
+                if p == victim && p.exists() {
+                    fs::remove_file(p)?;
+                }
+                fs::File::open(p)
+            })
+            .unwrap();
+        assert!(fresh.is_empty(), "no new data in this poll");
+        assert_eq!(follower.reanchors, 1, "the raced file re-anchored");
+        assert_eq!(
+            follower.collected(),
+            before,
+            "snapshots consumed before the drop are retained"
+        );
+        // the next plain poll no longer sees the file and stays clean
+        follower.poll().unwrap();
+        assert_eq!(follower.reanchors, 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

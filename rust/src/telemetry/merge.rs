@@ -88,12 +88,18 @@ pub struct ShardInfo {
     /// Pair scopes (session headers) the shard persisted.
     pub pairs: usize,
     /// Files ending in a torn trailing fragment (producer killed
-    /// mid-append; the fragment is skipped, never fatal).
+    /// mid-append; the fragment is skipped, never fatal). Merge runs
+    /// post-hoc — the producers are presumed dead — so final and
+    /// interior tears ([`crate::telemetry::DirScan`]) both count.
     pub torn_fragments: usize,
     /// Interior holes in rotation-index series (a file lost from the
     /// *middle* of a sink's series — rotation only drops oldest files,
     /// so interior holes are damage).
     pub missing_rotations: usize,
+    /// Files listed but gone by the time they were opened (a live
+    /// writer's budget rotated them away mid-scan) — skipped and
+    /// counted, never fatal.
+    pub vanished: usize,
 }
 
 /// The merged logical session: a [`Replay`] equivalent to loading the
@@ -127,6 +133,7 @@ pub struct MergedSession {
     /// Damage totals across shards.
     pub torn_fragments: usize,
     pub missing_rotations: usize,
+    pub vanished: usize,
     /// Per-sink-prefix series (normalized header + data snapshots) in
     /// canonical file order, for [`MergedSession::persist`].
     series: Vec<(String, Option<SessionHeader>, Vec<Snapshot>)>,
@@ -351,8 +358,9 @@ pub fn merge_shards(dirs: &[PathBuf], cfg: &MergeConfig) -> Result<MergedSession
             files: s.scan.files.len(),
             snapshots: s.scan.files.iter().map(|f| f.snapshots.len()).sum(),
             pairs: s.headers.len(),
-            torn_fragments: s.scan.torn_fragments,
+            torn_fragments: s.scan.torn_fragments(),
             missing_rotations: s.scan.missing_rotations,
+            vanished: s.scan.vanished,
         });
         for f in &s.scan.files {
             files.push((file_order_key(&f.path), i, f));
@@ -455,6 +463,7 @@ pub fn merge_shards(dirs: &[PathBuf], cfg: &MergeConfig) -> Result<MergedSession
         deploy_tag: anchor.deploy_tag,
         torn_fragments: inventory.iter().map(|s| s.torn_fragments).sum(),
         missing_rotations: inventory.iter().map(|s| s.missing_rotations).sum(),
+        vanished: inventory.iter().map(|s| s.vanished).sum(),
         shards: inventory,
         replay,
         entries,

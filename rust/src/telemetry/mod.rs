@@ -28,7 +28,14 @@
 //! * [`Replay`] — loads a snapshot directory back into typed reports
 //!   so `magneton replay` can re-render window/fleet/divergence views
 //!   offline and [`Replay::verify_ranking`] can prove the persisted
-//!   fleet ranking reproduces the per-pair waste ledgers bit-for-bit.
+//!   fleet ranking reproduces the per-pair waste ledgers bit-for-bit;
+//! * [`follow`] — the live counterpart of [`Replay`]: a
+//!   rotation-aware tailer that polls a snapshot directory while the
+//!   writer is still appending, resumes mid-file by byte offset, and
+//!   re-anchors when a rotated file drops out from under it
+//!   (`magneton replay --follow`, `magneton dash`); [`Alarm`] is the
+//!   typed artifact the online invariant monitor
+//!   ([`crate::dash::Monitor`]) emits into the same schema.
 //!
 //! Producers: [`crate::stream::StreamAuditor::set_sink`] hooks one pair
 //! to a sink; [`crate::coordinator::fleet::StreamFleet`] (via its
@@ -51,7 +58,7 @@
 
 use std::collections::{BTreeMap, VecDeque};
 use std::fs::{self, File, OpenOptions};
-use std::io::Write as _;
+use std::io::{Read as _, Write as _};
 use std::path::{Path, PathBuf};
 
 use crate::coordinator::fleet::{DivergentPair, FleetDivergence};
@@ -60,6 +67,7 @@ use crate::fingerprint::WorkloadSig;
 use crate::stream::{LabelLedger, ResyncEvent, StreamFinding, StreamSummary, WindowReport};
 use crate::{Error, Result};
 
+pub mod follow;
 pub mod json;
 pub mod merge;
 pub mod session;
@@ -183,6 +191,32 @@ pub struct RankEntry {
     pub aligned: bool,
 }
 
+/// One online-invariant violation raised while tailing a snapshot
+/// stream — the typed artifact behind `--max-op-j`,
+/// `--max-window-waste-pct`, and `--max-resyncs-per-min`
+/// ([`crate::dash::Monitor`]). It lives in the telemetry schema (not in
+/// `dash`) because it is persisted and published as an ordinary
+/// [`Snapshot::Alarm`] NDJSON line: external collectors subscribe to
+/// exactly what replay reads.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Alarm {
+    /// Stream pair the violation was observed on.
+    pub pair: String,
+    /// Invariant name (`max-op-j`, `max-window-waste-pct`,
+    /// `max-resyncs-per-min`).
+    pub invariant: String,
+    /// Sequence number of the offending window; `None` (JSON `null`,
+    /// like a peek window's seq) for alarms not tied to one window —
+    /// the resync-rate invariant fires on resync events.
+    pub seq: Option<usize>,
+    /// Observed value that broke the invariant.
+    pub value: f64,
+    /// The operator-declared limit it broke.
+    pub limit: f64,
+    /// Human-readable context: the offending label, the rate window.
+    pub detail: String,
+}
+
 /// One durable telemetry artifact — a single NDJSON line in a snapshot
 /// file. The conversion to/from [`Json`] is lossless: floats keep their
 /// bits (shortest round-trip formatting, non-finite forbidden by the
@@ -206,6 +240,9 @@ pub enum Snapshot {
     /// The cumulative per-label cost ledger of one pair, written at
     /// `finish` — the input `magneton diff` pairs across sessions.
     Ledger { pair: String, entries: Vec<LabelLedger> },
+    /// An online-invariant violation ([`Alarm`]) raised by the live
+    /// monitor while the stream ran.
+    Alarm { alarm: Alarm },
 }
 
 impl Snapshot {
@@ -243,6 +280,10 @@ impl Snapshot {
                 .field("pair", pair.as_str())
                 .field("entries", Json::Arr(entries.iter().map(ledger_json).collect()))
                 .build(),
+            Snapshot::Alarm { alarm } => Json::obj()
+                .field("type", "alarm")
+                .field("alarm", alarm_json(alarm))
+                .build(),
         }
     }
 
@@ -272,6 +313,7 @@ impl Snapshot {
                 pair: req_str(j, "pair")?.to_string(),
                 entries: req_arr(j, "entries")?.iter().map(ledger_from).collect::<Result<_>>()?,
             }),
+            "alarm" => Ok(Snapshot::Alarm { alarm: alarm_from(req(j, "alarm")?)? }),
             other => Err(Error::msg(format!("unknown snapshot type `{other}`"))),
         }
     }
@@ -510,6 +552,40 @@ fn ledger_from(j: &Json) -> Result<LabelLedger> {
         energy_b_j: req_f64(j, "energy_b_j")?,
         time_a_us: req_f64(j, "time_a_us")?,
         time_b_us: req_f64(j, "time_b_us")?,
+    })
+}
+
+fn alarm_json(a: &Alarm) -> Json {
+    // like a peek window's seq, the "no single window" case travels as
+    // JSON null so it never collides with a real sequence number
+    let seq = match a.seq {
+        Some(s) => Json::Num(s as f64),
+        None => Json::Null,
+    };
+    Json::obj()
+        .field("pair", a.pair.as_str())
+        .field("invariant", a.invariant.as_str())
+        .field("seq", seq)
+        .field("value", a.value)
+        .field("limit", a.limit)
+        .field("detail", a.detail.as_str())
+        .build()
+}
+
+fn alarm_from(j: &Json) -> Result<Alarm> {
+    let seq = match req(j, "seq")? {
+        Json::Null => None,
+        v => Some(
+            v.as_usize().ok_or_else(|| Error::msg("snapshot field `seq` is not an index"))?,
+        ),
+    };
+    Ok(Alarm {
+        pair: req_str(j, "pair")?.to_string(),
+        invariant: req_str(j, "invariant")?.to_string(),
+        seq,
+        value: req_f64(j, "value")?,
+        limit: req_f64(j, "limit")?,
+        detail: req_str(j, "detail")?.to_string(),
     })
 }
 
@@ -811,12 +887,22 @@ impl SnapshotSink {
 
     /// Append one newline-terminated line to the current file, keeping
     /// the byte accounting exact.
+    ///
+    /// Every failure is a typed [`Error`], never a panic: sinks run
+    /// inside fleet worker threads whose callers count IO errors
+    /// ([`crate::stream::StreamAuditor::sink_errors`]) and keep
+    /// auditing — an unwind here would take the worker down with the
+    /// snapshot it failed to write.
     fn raw_write(&mut self, line: &str) -> Result<()> {
         let bytes = line.len() as u64;
-        let f = self.file.as_mut().expect("file opened before raw_write");
+        let (Some(f), Some(cur)) = (self.file.as_mut(), self.files.back_mut()) else {
+            return Err(Error::msg(
+                "snapshot sink has no open file (a rotation open failed earlier)",
+            ));
+        };
         f.write_all(line.as_bytes())
             .map_err(|e| Error::msg(format!("append snapshot: {e}")))?;
-        self.files.back_mut().expect("file opened before raw_write").1 += bytes;
+        cur.1 += bytes;
         self.written_bytes += bytes;
         Ok(())
     }
@@ -826,7 +912,7 @@ impl SnapshotSink {
     fn enforce_budget(&mut self) {
         if self.cfg.max_snapshot_bytes > 0 {
             while self.files.len() > 1 && self.total_bytes() > self.cfg.max_snapshot_bytes {
-                let (old, sz) = self.files.pop_front().expect("len > 1");
+                let Some((old, sz)) = self.files.pop_front() else { break };
                 let _ = fs::remove_file(&old);
                 self.dropped_files += 1;
                 self.dropped_bytes += sz;
@@ -924,38 +1010,86 @@ pub struct FileScan {
 }
 
 /// A snapshot directory scanned file-by-file, with the damage counters
-/// [`merge`] reports: torn trailing fragments and rotation-index gaps
-/// (a file deleted from the *middle* of a sink's series — the byte
-/// budget only ever drops the oldest files, so a contiguous range that
-/// merely starts above zero is normal while an interior hole is not).
+/// [`merge`] reports: torn trailing fragments (split by where they sit
+/// in the series), rotation-index gaps (a file deleted from the
+/// *middle* of a sink's series — the byte budget only ever drops the
+/// oldest files, so a contiguous range that merely starts above zero is
+/// normal while an interior hole is not), and files that vanished
+/// between the listing and the read.
 pub struct DirScan {
     pub files: Vec<FileScan>,
-    /// Files whose final line was torn (skipped, not failed).
-    pub torn_fragments: usize,
+    /// Unterminated tails on the *newest* file of a sink's series.
+    /// Against a live directory this is a writer mid-append, not
+    /// damage; post-hoc it is the familiar killed-mid-append artifact
+    /// (a crash loses at most the line being written).
+    pub torn_final: usize,
+    /// Unterminated tails on files the same sink *already rotated
+    /// past* — the writer had moved on, so the tear can never be a
+    /// live append: it is real corruption.
+    pub torn_interior: usize,
     /// Interior gaps across all per-prefix rotation series.
     pub missing_rotations: usize,
+    /// Files present in the listing but gone by the time they were
+    /// opened — a live writer's byte budget rotated them away between
+    /// the two steps. Skipped and counted, never fatal.
+    pub vanished: usize,
+}
+
+impl DirScan {
+    /// All torn fragments wherever they sit — what a post-hoc consumer
+    /// ([`merge`], whose writer is presumed dead) reports as damage.
+    pub fn torn_fragments(&self) -> usize {
+        self.torn_final + self.torn_interior
+    }
 }
 
 /// Scan every snapshot file under `dir` (rotation order via
 /// [`file_order_key`], line order within a file), keeping per-file
 /// grouping and damage counters. [`load_dir`] is the flattened view.
 pub fn scan_dir(dir: &Path) -> Result<DirScan> {
+    scan_dir_with(dir, File::open)
+}
+
+/// [`scan_dir`] with an injectable reader factory (the same pattern as
+/// [`session::SessionIndex::scan_with`]), so tests can meter reads or
+/// inject the listing/open race a live rotating writer produces.
+///
+/// A factory error of kind [`std::io::ErrorKind::NotFound`] means the
+/// file rotated away between the directory listing and the open: that
+/// file is skipped and counted in [`DirScan::vanished`] instead of
+/// failing the surviving files. Any other IO error is still fatal.
+pub fn scan_dir_with<R, F>(dir: &Path, mut open: F) -> Result<DirScan>
+where
+    R: std::io::Read,
+    F: FnMut(&Path) -> std::io::Result<R>,
+{
     let paths = snapshot_files(dir)?;
     let mut files = Vec::new();
-    let mut torn_fragments = 0usize;
+    let mut vanished = 0usize;
     for path in paths {
+        let read_all = |open: &mut F| -> std::io::Result<Vec<u8>> {
+            let mut r = open(&path)?;
+            let mut bytes = Vec::new();
+            r.read_to_end(&mut bytes)?;
+            Ok(bytes)
+        };
         // bytes + lossy conversion: a torn multi-byte UTF-8 char in the
         // trailing fragment must not fail the read either (the fragment
         // is dropped below; intact lines are unaffected)
-        let bytes =
-            fs::read(&path).map_err(|e| Error::msg(format!("read {}: {e}", path.display())))?;
+        let bytes = match read_all(&mut open) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                vanished += 1;
+                continue;
+            }
+            Err(e) => return Err(Error::msg(format!("read {}: {e}", path.display()))),
+        };
         let text = String::from_utf8_lossy(&bytes);
         let complete = match text.rfind('\n') {
             Some(pos) => &text[..pos + 1],
             None => "",
         };
         let torn_fragment = complete.len() < text.len();
-        torn_fragments += usize::from(torn_fragment);
         let mut snapshots = Vec::new();
         for (i, line) in complete.lines().enumerate() {
             if line.trim().is_empty() {
@@ -966,6 +1100,27 @@ pub fn scan_dir(dir: &Path) -> Result<DirScan> {
             snapshots.push(snap);
         }
         files.push(FileScan { path, snapshots, torn_fragment });
+    }
+    // classify torn tails: only the newest surviving file of a prefix
+    // series may legitimately end mid-line (the writer could still be
+    // appending to it); a torn file with a later rotation is damage
+    let mut last_idx: BTreeMap<String, u64> = BTreeMap::new();
+    for f in &files {
+        let (prefix, idx, _) = file_order_key(&f.path);
+        let e = last_idx.entry(prefix).or_insert(idx);
+        *e = (*e).max(idx);
+    }
+    let (mut torn_final, mut torn_interior) = (0usize, 0usize);
+    for f in &files {
+        if !f.torn_fragment {
+            continue;
+        }
+        let (prefix, idx, _) = file_order_key(&f.path);
+        if last_idx.get(&prefix) == Some(&idx) {
+            torn_final += 1;
+        } else {
+            torn_interior += 1;
+        }
     }
     // interior rotation gaps per sink prefix: indices are assigned
     // consecutively at write time, and the budget drops oldest-first,
@@ -983,7 +1138,7 @@ pub fn scan_dir(dir: &Path) -> Result<DirScan> {
             missing_rotations += (w[1] - w[0]).saturating_sub(1) as usize;
         }
     }
-    Ok(DirScan { files, torn_fragments, missing_rotations })
+    Ok(DirScan { files, torn_final, torn_interior, missing_rotations, vanished })
 }
 
 /// Load every snapshot under `dir` (all `*.ndjson` files, per-sink
@@ -1017,6 +1172,8 @@ pub struct Replay {
     pub sessions: Vec<SessionHeader>,
     /// Per-pair label ledgers, in persisted order.
     pub ledgers: Vec<(String, Vec<LabelLedger>)>,
+    /// Persisted invariant alarms, in persisted order.
+    pub alarms: Vec<Alarm>,
 }
 
 impl Replay {
@@ -1043,6 +1200,7 @@ impl Replay {
                     }
                 }
                 Snapshot::Ledger { pair, entries } => r.ledgers.push((pair, entries)),
+                Snapshot::Alarm { alarm } => r.alarms.push(alarm),
             }
         }
         r
@@ -1247,6 +1405,34 @@ mod tests {
             pair: "p0".into(),
             entries: vec![ledger_entry("serve.proj"), ledger_entry("serve.act")],
         });
+        roundtrip(&Snapshot::Alarm {
+            alarm: Alarm {
+                pair: "p0 \"canary\"".into(),
+                invariant: "max-window-waste-pct".into(),
+                seq: Some(42),
+                value: 0.1 + 0.2, // deliberately ugly float
+                limit: 0.25,
+                detail: "label serve.proj 東京".into(),
+            },
+        });
+        // the windowless form travels as JSON null, like a peek seq
+        let line = Snapshot::Alarm {
+            alarm: Alarm {
+                pair: "p1".into(),
+                invariant: "max-resyncs-per-min".into(),
+                seq: None,
+                value: 7.0,
+                limit: 2.0,
+                detail: "3 resyncs in 25.0s".into(),
+            },
+        }
+        .to_line();
+        assert!(line.contains("\"seq\":null"), "{line}");
+        let Snapshot::Alarm { alarm } = Snapshot::parse_line(&line).unwrap() else {
+            panic!("round trip changed the variant");
+        };
+        assert_eq!(alarm.seq, None);
+        assert_eq!(alarm.value.to_bits(), 7.0f64.to_bits());
     }
 
     /// The session-header acceptance property: random headers with
@@ -1502,6 +1688,115 @@ mod tests {
         // a newline-terminated garbage line is real corruption: error
         f.write_all(b"ADE\"}\nnot json\n").unwrap();
         assert!(load_dir(&dir).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    /// A sink whose directory is removed out from under it must fail
+    /// with a typed error on the next rotation, never panic: fleet
+    /// workers count sink errors and keep auditing.
+    #[test]
+    fn sink_io_failure_after_directory_removal_is_a_typed_error() {
+        let dir = tmp_dir("sink-dir-removed");
+        let cfg = SinkConfig { max_snapshot_bytes: 0, rotate_bytes: 256 };
+        let mut sink = SnapshotSink::new(&dir, "p", cfg).unwrap();
+        let ev = ResyncEvent { at_ops: 1, skipped_a: 0, skipped_b: 1 };
+        sink.append(&Snapshot::Resync { pair: "p".into(), event: ev }).unwrap();
+        fs::remove_dir_all(&dir).unwrap();
+        // appends into the unlinked current file may still succeed (the
+        // inode lives on); the next rotation must open a file in the
+        // missing directory and error — typed, not unwinding
+        let mut failed = 0usize;
+        for _ in 0..64 {
+            if sink.append(&Snapshot::Resync { pair: "p".into(), event: ev }).is_err() {
+                failed += 1;
+            }
+        }
+        assert!(failed > 0, "a removed directory must surface as append errors");
+        // the sink stays usable as an object: accounting intact, no panic
+        assert_eq!(sink.written_bytes, sink.total_bytes() + sink.dropped_bytes);
+    }
+
+    /// The torn-tail split: a fragment on the newest file of a series
+    /// is a writer mid-append (`torn_final`); completing the line later
+    /// clears it. A fragment on a file the sink already rotated past is
+    /// real damage (`torn_interior`).
+    #[test]
+    fn torn_tail_on_newest_file_completes_on_a_later_scan() {
+        use std::io::Write as _;
+        let dir = tmp_dir("torn-split");
+        let mut sink = SnapshotSink::new(&dir, "p", SinkConfig::default()).unwrap();
+        for i in 0..3 {
+            sink.append(&Snapshot::Resync {
+                pair: "p".into(),
+                event: ResyncEvent { at_ops: i, skipped_a: 0, skipped_b: 1 },
+            })
+            .unwrap();
+        }
+        // fault injection: append the first half of a line, as a live
+        // writer's interrupted write_all would
+        let line = Snapshot::Resync {
+            pair: "p".into(),
+            event: ResyncEvent { at_ops: 99, skipped_a: 0, skipped_b: 1 },
+        }
+        .to_line();
+        let (half, rest) = line.split_at(line.len() / 2);
+        let path = dir.join("p-000000.ndjson");
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(half.as_bytes()).unwrap();
+        let scan = scan_dir(&dir).unwrap();
+        assert_eq!(scan.torn_final, 1, "mid-append tail is final, not interior");
+        assert_eq!(scan.torn_interior, 0);
+        assert_eq!(scan.torn_fragments(), 1);
+        assert_eq!(scan.files[0].snapshots.len(), 3, "intact lines unaffected");
+        // the writer completes the line: the tear disappears
+        f.write_all(rest.as_bytes()).unwrap();
+        f.write_all(b"\n").unwrap();
+        let scan = scan_dir(&dir).unwrap();
+        assert_eq!((scan.torn_final, scan.torn_interior), (0, 0));
+        assert_eq!(scan.files[0].snapshots.len(), 4, "the completed line now parses");
+        // the same tear on a non-newest file is interior damage
+        fs::write(dir.join("p-000001.ndjson"), b"").unwrap();
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(half.as_bytes()).unwrap();
+        let scan = scan_dir(&dir).unwrap();
+        assert_eq!((scan.torn_final, scan.torn_interior), (0, 1));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    /// The listing/open rotation race: a file listed but deleted before
+    /// its open is skipped and counted, not a whole-load failure. Any
+    /// other IO error stays fatal.
+    #[test]
+    fn file_rotated_away_between_listing_and_open_is_skipped_and_counted() {
+        let dir = tmp_dir("vanish-race");
+        let cfg = SinkConfig { max_snapshot_bytes: 0, rotate_bytes: 128 };
+        let mut sink = SnapshotSink::new(&dir, "p", cfg).unwrap();
+        for i in 0..20 {
+            sink.append(&Snapshot::Resync {
+                pair: "p".into(),
+                event: ResyncEvent { at_ops: i, skipped_a: 0, skipped_b: 1 },
+            })
+            .unwrap();
+        }
+        assert!(sink.retained_files() >= 3, "need a rotated series");
+        // the injected race: the second file is deleted between the
+        // listing (which saw it) and the open
+        let victim = dir.join("p-000001.ndjson");
+        let scan = scan_dir_with(&dir, |p: &Path| {
+            if p == victim {
+                fs::remove_file(p)?;
+            }
+            File::open(p)
+        })
+        .unwrap();
+        assert_eq!(scan.vanished, 1, "the raced file is counted, not fatal");
+        assert!(scan.files.iter().all(|f| f.path != victim));
+        assert!(!scan.files.is_empty(), "surviving files still load");
+        // a non-NotFound IO error is real and still fails the scan
+        let denied = scan_dir_with(&dir, |_p: &Path| -> std::io::Result<File> {
+            Err(std::io::Error::new(std::io::ErrorKind::PermissionDenied, "injected"))
+        });
+        assert!(denied.is_err());
         let _ = fs::remove_dir_all(&dir);
     }
 

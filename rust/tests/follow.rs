@@ -1,0 +1,239 @@
+//! End-to-end tests of the live tail: a writer thread streaming
+//! snapshots through a real `StreamAuditor` + rotating `SnapshotSink`
+//! while a `Follower` tails the directory; online invariants raising
+//! exactly one alarm per offending window; the bounded alarm publisher
+//! under a stalled subscriber; and the sink surviving its directory
+//! being removed mid-stream.
+
+mod common;
+
+use std::thread;
+use std::time::Duration;
+
+use common::{cycle_op, rec, seg_after, stream_cfg, tmp_dir};
+use magneton::dash::{Invariant, Monitor};
+use magneton::fingerprint::WorkloadSig;
+use magneton::stream::{ResyncEvent, StreamAuditor};
+use magneton::telemetry::follow::Follower;
+use magneton::telemetry::{
+    load_dir, snapshot_files, SessionHeader, SinkConfig, Snapshot, SnapshotSink,
+};
+
+fn resync(i: usize) -> Snapshot {
+    Snapshot::Resync {
+        pair: "p".into(),
+        event: ResyncEvent { at_ops: i, skipped_a: 0, skipped_b: 1 },
+    }
+}
+
+/// Drive `n` cycle ops through an auditor whose side A burns `infl`×
+/// the energy at equal time (pure waste, no trade-off), with a sink
+/// attached — the writer half of the live-tail tests.
+fn run_wasteful_writer(dir: &std::path::Path, n: usize, rotate_bytes: u64) -> usize {
+    let mut aud = StreamAuditor::new(stream_cfg(10), 90.0);
+    let mut sig = WorkloadSig::new();
+    for i in 0..5 {
+        let (label, op, _) = cycle_op(i);
+        sig.add(label, op.name());
+    }
+    aud.set_session_header(SessionHeader::new("follow-e2e", "test", "p", &sig, "steady", 7));
+    let cfg = SinkConfig { max_snapshot_bytes: 0, rotate_bytes };
+    aud.set_sink("p", SnapshotSink::new(dir, "p", cfg).unwrap());
+    let (mut ta, mut tb) = (0.0, 0.0);
+    for i in 0..n {
+        let (label, op, e) = cycle_op(i);
+        let ea = e * 1.3;
+        aud.ingest_a(&rec(label, op, ea, 100.0), seg_after(ta, 100.0, ea / 100e-6));
+        aud.ingest_b(&rec(label, op, e, 100.0), seg_after(tb, 100.0, e / 100e-6));
+        ta += 100.0;
+        tb += 100.0;
+    }
+    let _ = aud.finish();
+    let errors = aud.sink_errors();
+    assert_eq!(errors, 0, "the writer must persist cleanly");
+    errors
+}
+
+/// The acceptance criterion: a follower tailing a live run (writer on
+/// another thread) ends up bit-identical to a post-hoc replay of the
+/// completed directory, across ≥2 file rotations.
+#[test]
+fn live_tail_is_bit_identical_to_posthoc_replay_across_rotations() {
+    let dir = tmp_dir("follow-e2e");
+    let wdir = dir.clone();
+    let writer = thread::spawn(move || {
+        run_wasteful_writer(&wdir, 300, 1500);
+    });
+    let mut follower = Follower::new(&dir);
+    let mut live = 0usize;
+    let mut quiet = 0u32;
+    loop {
+        let fresh = follower.poll().unwrap();
+        live += fresh.len();
+        if writer.is_finished() {
+            if fresh.is_empty() {
+                quiet += 1;
+                if quiet >= 2 {
+                    break;
+                }
+            } else {
+                quiet = 0;
+            }
+        }
+        thread::sleep(Duration::from_millis(1));
+    }
+    writer.join().unwrap();
+    assert!(
+        snapshot_files(&dir).unwrap().len() >= 3,
+        "the run must have rotated at least twice"
+    );
+    let posthoc: Vec<String> = load_dir(&dir).unwrap().iter().map(Snapshot::to_line).collect();
+    let followed: Vec<String> =
+        follower.ordered_snapshots().iter().map(Snapshot::to_line).collect();
+    assert!(!posthoc.is_empty());
+    assert_eq!(followed, posthoc, "live tail must replay bit-identical to load_dir");
+    assert_eq!(live, posthoc.len(), "every snapshot surfaced exactly once while live");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A follower that keeps up with the writer survives the byte budget
+/// dropping the oldest file: it re-anchors (counted) and retains the
+/// snapshots it already consumed — strictly more than a post-hoc
+/// replay of the pruned directory can recover.
+#[test]
+fn follower_survives_a_dropped_file_and_retains_its_snapshots() {
+    let dir = tmp_dir("follow-drop");
+    let cfg = SinkConfig { max_snapshot_bytes: 500, rotate_bytes: 150 };
+    let mut sink = SnapshotSink::new(&dir, "p", cfg).unwrap();
+    let mut follower = Follower::new(&dir);
+    for i in 0..30 {
+        sink.append(&resync(i)).unwrap();
+        // polling after every append means every line is consumed
+        // before the budget can drop its file
+        follower.poll().unwrap();
+    }
+    assert!(sink.dropped_files >= 1, "the budget must have dropped a file");
+    assert_eq!(follower.collected(), 30, "nothing the follower saw is lost");
+    assert!(follower.reanchors >= 1, "dropped files must re-anchor, not error");
+    let surviving: Vec<String> = load_dir(&dir).unwrap().iter().map(Snapshot::to_line).collect();
+    assert!(surviving.len() < 30, "the directory itself did lose snapshots");
+    let followed: Vec<String> =
+        follower.ordered_snapshots().iter().map(Snapshot::to_line).collect();
+    for line in &surviving {
+        assert!(followed.contains(line), "follower must be a superset of the directory");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Online invariants over the live tail raise exactly one alarm per
+/// offending window, and a post-hoc pass over the completed directory
+/// raises the identical alarms — the checks are deterministic over the
+/// snapshot stream, not over polling cadence.
+#[test]
+fn invariant_breach_alarms_exactly_once_per_offending_window() {
+    let dir = tmp_dir("follow-alarms");
+    run_wasteful_writer(&dir, 100, 2000);
+    // side A wastes ~23% of every window — a 10% limit flags them all
+    let invariants = vec![Invariant::MaxWindowWastePct(10.0)];
+    let mut live = Monitor::new(invariants.clone());
+    let mut follower = Follower::new(&dir);
+    loop {
+        let fresh = follower.poll().unwrap();
+        if fresh.is_empty() {
+            break;
+        }
+        for snap in &fresh {
+            live.observe(snap);
+        }
+    }
+    let snaps = load_dir(&dir).unwrap();
+    let windows = snaps
+        .iter()
+        .filter(|s| matches!(s, Snapshot::Window { .. }))
+        .count();
+    assert!(windows >= 5);
+    assert_eq!(live.alarms.len(), windows, "one alarm per offending window");
+    // re-observing the whole stream raises nothing new
+    for snap in &snaps {
+        assert!(live.observe(snap).is_empty(), "re-observation must not re-alarm");
+    }
+    // a fresh post-hoc monitor reproduces the live alarms exactly
+    let mut posthoc = Monitor::new(invariants);
+    for snap in &snaps {
+        posthoc.observe(snap);
+    }
+    assert_eq!(posthoc.alarms, live.alarms, "alarms are a function of the stream");
+    // and they round-trip losslessly as snapshot lines
+    for alarm in &live.alarms {
+        let line = Snapshot::Alarm { alarm: alarm.clone() }.to_line();
+        let Snapshot::Alarm { alarm: back } = Snapshot::parse_line(&line).unwrap() else {
+            panic!("alarm line decoded as a different snapshot kind");
+        };
+        assert_eq!(&back, alarm);
+        assert_eq!(Snapshot::Alarm { alarm: back }.to_line(), line, "lossless round-trip");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The bounded publisher under a stalled subscriber: drop-and-count,
+/// never block the monitored stream.
+#[test]
+fn bounded_publisher_drops_and_counts_under_a_stalled_subscriber() {
+    let mut p = magneton::dash::AlarmPublisher::new(3);
+    let stalled = p.subscribe();
+    let lines: Vec<String> = (0..12)
+        .map(|i| {
+            Snapshot::Alarm {
+                alarm: magneton::telemetry::Alarm {
+                    pair: "p".into(),
+                    invariant: "max-window-waste-pct".into(),
+                    seq: Some(i),
+                    value: 40.0,
+                    limit: 10.0,
+                    detail: format!("window #{i}"),
+                },
+            }
+            .to_line()
+        })
+        .collect();
+    for line in &lines {
+        p.publish(line);
+    }
+    assert_eq!(p.published, 12);
+    assert_eq!(p.dropped, 9, "depth 3: nine lines must drop, counted");
+    let got: Vec<String> = stalled.try_iter().collect();
+    assert_eq!(got, lines[..3].to_vec(), "the subscriber keeps the oldest three");
+}
+
+/// The foregrounded `raw_write` bugfix, end to end: removing the sink
+/// directory under a live auditor turns into counted sink errors —
+/// never a panic unwinding the worker — and the audit itself finishes.
+#[test]
+fn sink_directory_removed_mid_stream_counts_errors_without_panicking() {
+    let dir = tmp_dir("follow-rmdir");
+    let mut aud = StreamAuditor::new(stream_cfg(5), 90.0);
+    let cfg = SinkConfig { max_snapshot_bytes: 0, rotate_bytes: 300 };
+    aud.set_sink("p", SnapshotSink::new(&dir, "p", cfg).unwrap());
+    let (mut ta, mut tb) = (0.0, 0.0);
+    for i in 0..20 {
+        let (label, op, e) = cycle_op(i);
+        aud.ingest_a(&rec(label, op, e, 100.0), seg_after(ta, 100.0, e / 100e-6));
+        aud.ingest_b(&rec(label, op, e, 100.0), seg_after(tb, 100.0, e / 100e-6));
+        ta += 100.0;
+        tb += 100.0;
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+    for i in 20..120 {
+        let (label, op, e) = cycle_op(i);
+        aud.ingest_a(&rec(label, op, e, 100.0), seg_after(ta, 100.0, e / 100e-6));
+        aud.ingest_b(&rec(label, op, e, 100.0), seg_after(tb, 100.0, e / 100e-6));
+        ta += 100.0;
+        tb += 100.0;
+    }
+    let summary = aud.finish();
+    assert_eq!(summary.ops, 120, "the audit itself must be unaffected");
+    assert!(
+        aud.sink_errors() > 0,
+        "writes into the removed directory must surface as counted errors"
+    );
+}
